@@ -1,0 +1,61 @@
+//! Shared skeleton for the figure benches. Each bench binary reproduces one
+//! figure of the paper's evaluation as a text table: per-matrix times for
+//! HYLU and the PARDISO-like baseline, per-matrix speedup, geometric-mean
+//! footer (the number the paper headlines).
+//!
+//! Env knobs:
+//! - `HYLU_BENCH_FAST=1` — run the 6-matrix smoke subset instead of all 37.
+//! - `HYLU_BENCH_THREADS=N` — thread count (default: all cores).
+
+use hylu::bench_suite::{suite37, suite_small, BenchMatrix};
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::sparse::csr::Csr;
+
+/// Suite selected by env.
+pub fn suite() -> Vec<BenchMatrix> {
+    if std::env::var("HYLU_BENCH_FAST").as_deref() == Ok("1") {
+        suite_small()
+    } else {
+        suite37()
+    }
+}
+
+/// Threads selected by env (0 = all cores).
+pub fn threads() -> usize {
+    std::env::var("HYLU_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// HYLU solver under benchmark configuration.
+pub fn hylu_solver(repeated: bool) -> Solver {
+    Solver::new(SolverConfig {
+        threads: threads(),
+        repeated,
+        ..SolverConfig::default()
+    })
+}
+
+/// The PARDISO-like comparator.
+pub fn baseline_solver() -> Solver {
+    Solver::new(hylu::baseline::pardiso_like(threads()))
+}
+
+/// The KLU-like comparator (used by the ablation bench).
+pub fn klu_solver() -> Solver {
+    Solver::new(hylu::baseline::klu_like(threads()))
+}
+
+/// Right-hand side with known solution 1.
+pub fn rhs(a: &Csr) -> Vec<f64> {
+    hylu::sparse::gen::rhs_for_ones(a)
+}
+
+/// Best-of-`reps` seconds.
+pub fn best<F: FnMut()>(reps: usize, f: F) -> f64 {
+    hylu::bench_harness::time_best(reps, f)
+}
+
+#[allow(dead_code)]
+fn main() {} // allows `cargo bench` to treat common.rs as a bench target too

@@ -1,0 +1,57 @@
+//! Fig. 10 — total time of refactorization + substitution, repeated
+//! solving.
+//!
+//! Paper result: 2.53x geometric-mean speedup, and HYLU is faster than MKL
+//! PARDISO on **ALL** tested benchmarks for this metric — the bench prints
+//! a win/loss count to check that claim's shape.
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, Table};
+
+fn main() {
+    println!("{}", environment());
+    let mut table = Table::new(
+        "Fig 10: refactorization + substitution total, repeated solve",
+        &["matrix", "class", "n", "hylu", "baseline", "speedup"],
+    );
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for bm in &common::suite() {
+        let a = (bm.build)();
+        let b = common::rhs(&a);
+        let hylu = common::hylu_solver(true);
+        let base = common::baseline_solver();
+        let an_h = hylu.analyze(&a).expect("analyze");
+        let an_b = base.analyze(&a).expect("analyze");
+        let mut f_h = hylu.factor(&a, &an_h).expect("factor");
+        let mut f_b = base.factor(&a, &an_b).expect("factor");
+        let t_h = common::best(3, || {
+            hylu.refactor(&a, &an_h, &mut f_h).expect("refactor");
+            let _ = hylu.solve(&a, &an_h, &f_h, &b).expect("solve");
+        });
+        let t_b = common::best(3, || {
+            base.refactor(&a, &an_b, &mut f_b).expect("refactor");
+            let _ = base.solve(&a, &an_b, &f_b, &b).expect("solve");
+        });
+        total += 1;
+        if t_h < t_b {
+            wins += 1;
+        }
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    println!("HYLU wins {wins}/{total} matrices (paper: ALL)");
+    println!("paper reference: repeated refactor+solve speedup 2.53x geomean");
+}

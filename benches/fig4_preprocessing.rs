@@ -1,0 +1,53 @@
+//! Fig. 4 — preprocessing time and speedup, one-time solving.
+//!
+//! Paper result: HYLU preprocessing is 1.48x faster than MKL PARDISO on
+//! geometric mean; additionally (§3.2) repeated-mode preprocessing is
+//! ~1.75x slower than one-time preprocessing (it buys relaxed supernodes).
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, geomean, Table};
+
+fn main() {
+    println!("{}", environment());
+    let mut table = Table::new(
+        "Fig 4: preprocessing time, one-time solve",
+        &["matrix", "class", "n", "hylu", "baseline", "speedup"],
+    );
+    let mut repeated_ratio = Vec::new();
+    for bm in &common::suite() {
+        let a = (bm.build)();
+        let hylu = common::hylu_solver(false);
+        let base = common::baseline_solver();
+        let t_h = common::best(2, || {
+            let _ = hylu.analyze(&a).expect("hylu analyze");
+        });
+        let t_b = common::best(2, || {
+            let _ = base.analyze(&a).expect("baseline analyze");
+        });
+        // repeated-mode preprocessing cost ratio (paper §3.2: 1.75x slower)
+        let hylu_r = common::hylu_solver(true);
+        let t_r = common::best(1, || {
+            let _ = hylu_r.analyze(&a).expect("repeated analyze");
+        });
+        repeated_ratio.push(t_r / t_h);
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    println!(
+        "repeated-mode preprocessing / one-time preprocessing: {:.2}x (paper: 1.75x)",
+        geomean(&repeated_ratio)
+    );
+    println!("paper reference: preprocessing speedup 1.48x geomean vs MKL PARDISO");
+}

@@ -1,0 +1,45 @@
+//! Fig. 5 — numerical factorization time and speedup, one-time solving.
+//!
+//! Paper result: 2.36x geometric-mean speedup over MKL PARDISO, with the
+//! largest wins on circuit-class matrices (ASIC_680k, circuit5M) where the
+//! always-BLAS baseline drowns in padded fill.
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, Table};
+
+fn main() {
+    println!("{}", environment());
+    let mut table = Table::new(
+        "Fig 5: numerical factorization time, one-time solve",
+        &["matrix", "class", "n", "kernel", "hylu", "baseline", "speedup"],
+    );
+    for bm in &common::suite() {
+        let a = (bm.build)();
+        let hylu = common::hylu_solver(false);
+        let base = common::baseline_solver();
+        let an_h = hylu.analyze(&a).expect("hylu analyze");
+        let an_b = base.analyze(&a).expect("baseline analyze");
+        let t_h = common::best(2, || {
+            let _ = hylu.factor(&a, &an_h).expect("hylu factor");
+        });
+        let t_b = common::best(2, || {
+            let _ = base.factor(&a, &an_b).expect("baseline factor");
+        });
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                format!("{}", an_h.mode),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    println!("paper reference: factorization speedup 2.36x geomean vs MKL PARDISO");
+}

@@ -1,0 +1,51 @@
+//! Fig. 6 — forward-backward substitution time and speedup, one-time
+//! solving.
+//!
+//! Paper result: HYLU's substitution is slightly *slower* than MKL PARDISO
+//! (18% on geometric mean) — the cost of automatic iterative refinement.
+//! Expect the speedup column to hover below 1x.
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, Table};
+
+fn main() {
+    println!("{}", environment());
+    let mut table = Table::new(
+        "Fig 6: forward-backward substitution time, one-time solve",
+        &["matrix", "class", "n", "hylu", "baseline", "speedup", "refine"],
+    );
+    for bm in &common::suite() {
+        let a = (bm.build)();
+        let b = common::rhs(&a);
+        let hylu = common::hylu_solver(false);
+        let base = common::baseline_solver();
+        let an_h = hylu.analyze(&a).expect("analyze");
+        let an_b = base.analyze(&a).expect("analyze");
+        let f_h = hylu.factor(&a, &an_h).expect("factor");
+        let f_b = base.factor(&a, &an_b).expect("factor");
+        let mut iters = 0;
+        let t_h = common::best(3, || {
+            let (_, st) = hylu.solve_with_stats(&a, &an_h, &f_h, &b).expect("solve");
+            iters = st.refine_iters;
+        });
+        let t_b = common::best(3, || {
+            let _ = base.solve(&a, &an_b, &f_b, &b).expect("solve");
+        });
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+                iters.to_string(),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    println!("paper reference: HYLU substitution ~18% SLOWER than PARDISO (refinement cost)");
+}

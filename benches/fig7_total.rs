@@ -1,0 +1,48 @@
+//! Fig. 7 — total one-time solve time (preprocessing + factorization +
+//! substitution) and speedup.
+//!
+//! Paper result: 1.70x geometric-mean speedup over MKL PARDISO.
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, Table};
+use hylu::coordinator::Solver;
+use hylu::sparse::csr::Csr;
+
+fn total_once(s: &Solver, a: &Csr, b: &[f64]) -> f64 {
+    let t = std::time::Instant::now();
+    let an = s.analyze(a).expect("analyze");
+    let f = s.factor(a, &an).expect("factor");
+    let _ = s.solve(a, &an, &f, b).expect("solve");
+    t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("{}", environment());
+    let mut table = Table::new(
+        "Fig 7: total one-time solve time",
+        &["matrix", "class", "n", "hylu", "baseline", "speedup"],
+    );
+    for bm in &common::suite() {
+        let a = (bm.build)();
+        let b = common::rhs(&a);
+        let hylu = common::hylu_solver(false);
+        let base = common::baseline_solver();
+        let t_h = total_once(&hylu, &a, &b).min(total_once(&hylu, &a, &b));
+        let t_b = total_once(&base, &a, &b).min(total_once(&base, &a, &b));
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    println!("paper reference: total one-time speedup 1.70x geomean vs MKL PARDISO");
+}

@@ -1,0 +1,49 @@
+//! Fig. 9 — forward-backward substitution time and speedup, repeated
+//! solving.
+//!
+//! Paper result: HYLU substitution is ~20% slower than MKL PARDISO on
+//! geometric mean in the repeated scenario (refinement overhead again).
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, Table};
+
+fn main() {
+    println!("{}", environment());
+    let mut table = Table::new(
+        "Fig 9: substitution time, repeated solve",
+        &["matrix", "class", "n", "hylu", "baseline", "speedup"],
+    );
+    for bm in &common::suite() {
+        let a = (bm.build)();
+        let b = common::rhs(&a);
+        let hylu = common::hylu_solver(true);
+        let base = common::baseline_solver();
+        let an_h = hylu.analyze(&a).expect("analyze");
+        let an_b = base.analyze(&a).expect("analyze");
+        let mut f_h = hylu.factor(&a, &an_h).expect("factor");
+        let mut f_b = base.factor(&a, &an_b).expect("factor");
+        hylu.refactor(&a, &an_h, &mut f_h).expect("refactor");
+        base.refactor(&a, &an_b, &mut f_b).expect("refactor");
+        let t_h = common::best(3, || {
+            let _ = hylu.solve(&a, &an_h, &f_h, &b).expect("solve");
+        });
+        let t_b = common::best(3, || {
+            let _ = base.solve(&a, &an_b, &f_b, &b).expect("solve");
+        });
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    println!("paper reference: HYLU repeated substitution ~20% SLOWER than PARDISO");
+}

@@ -1,0 +1,202 @@
+//! Ablation micro-benches for the design choices DESIGN.md calls out:
+//!
+//! 1. hybrid auto-selection vs each forced kernel, per sparsity class;
+//! 2. native Rust microkernel GEMM vs the XLA/PJRT AOT-Pallas artifact
+//!    (per-call overhead on this CPU testbed; a TPU amortizes differently);
+//! 3. dual-mode (bulk+pipeline) vs bulk-only vs pipeline-only scheduling;
+//! 4. supernode relaxation budget sweep (one-time vs repeated tradeoff).
+
+#[path = "common.rs"]
+mod common;
+
+use hylu::bench_harness::{environment, fmt_time, Table};
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::numeric::select::KernelMode;
+use hylu::sparse::gen;
+use hylu::symbolic::MergePolicy;
+
+fn factor_time(cfg: SolverConfig, a: &hylu::sparse::csr::Csr) -> f64 {
+    let s = Solver::new(cfg);
+    let an = s.analyze(a).expect("analyze");
+    common::best(2, || {
+        let _ = s.factor(a, &an).expect("factor");
+    })
+}
+
+fn main() {
+    println!("{}", environment());
+
+    // --- 1. hybrid vs forced kernels ---
+    let mut t1 = Table::new(
+        "ablation 1: auto kernel selection vs forced kernels (factor time)",
+        &["class", "auto", "row-row", "sup-row", "sup-sup", "auto/best"],
+    );
+    let cases: Vec<(&str, hylu::sparse::csr::Csr)> = vec![
+        ("circuit", gen::circuit(10000, 3)),
+        ("power", gen::power_network(8000, 4)),
+        ("mesh2d", gen::grid2d(70, 70)),
+        ("mesh3d", gen::grid3d(13, 13, 13)),
+        ("kkt", gen::kkt(2500, 800, 5)),
+        ("banded", gen::banded(3000, 16, 6)),
+    ];
+    for (name, a) in &cases {
+        let forced = |k| SolverConfig {
+            kernel: Some(k),
+            threads: common::threads(),
+            ..SolverConfig::default()
+        };
+        let t_auto = factor_time(
+            SolverConfig {
+                threads: common::threads(),
+                ..SolverConfig::default()
+            },
+            a,
+        );
+        let t_rr = factor_time(forced(KernelMode::RowRow), a);
+        let t_sr = factor_time(forced(KernelMode::SupRow), a);
+        let t_ss = factor_time(forced(KernelMode::SupSup), a);
+        let best = t_rr.min(t_sr).min(t_ss);
+        t1.row(
+            vec![
+                name.to_string(),
+                fmt_time(t_auto),
+                fmt_time(t_rr),
+                fmt_time(t_sr),
+                fmt_time(t_ss),
+                format!("{:.2}", t_auto / best),
+            ],
+            best.max(1e-9) / t_auto.max(1e-9),
+        );
+    }
+    t1.print();
+
+    // --- 2. native vs XLA GEMM backend ---
+    match hylu::runtime::XlaGemm::load(std::path::Path::new("artifacts"), 1) {
+        Ok(xla) => {
+            let mut t2 = Table::new(
+                "ablation 2: GEMM backend, per-call time (C(m,2m) -= A(m,m) B(m,2m))",
+                &["m", "native", "xla/pjrt", "xla/native"],
+            );
+            for m in [16usize, 32, 64, 128] {
+                let a: Vec<f64> = (0..m * m).map(|i| (i % 7) as f64 - 3.0).collect();
+                let b: Vec<f64> = (0..m * 2 * m).map(|i| (i % 5) as f64 - 2.0).collect();
+                let c: Vec<f64> = vec![1.0; m * 2 * m];
+                let t_native = common::best(20, || {
+                    let mut cc = c.clone();
+                    hylu::numeric::dense::gemm_sub(&mut cc, 2 * m, &a, m, &b, 2 * m, m, m, 2 * m);
+                    std::hint::black_box(cc);
+                });
+                let t_xla = common::best(20, || {
+                    let out = xla.gemm_update(&c, &a, &b, m, m, 2 * m).expect("xla gemm");
+                    std::hint::black_box(out);
+                });
+                t2.row(
+                    vec![
+                        m.to_string(),
+                        fmt_time(t_native),
+                        fmt_time(t_xla),
+                        format!("{:.1}x", t_xla / t_native),
+                    ],
+                    t_xla / t_native,
+                );
+            }
+            t2.print();
+            println!("(XLA per-call overhead dominates at these sizes on CPU-PJRT; DESIGN.md §Hardware-Adaptation)");
+        }
+        Err(e) => println!("ablation 2 skipped: {e} (run `make artifacts`)"),
+    }
+
+    // --- 3. scheduling modes ---
+    let mut t3 = Table::new(
+        "ablation 3: dual-mode scheduling (factor time, 4 threads)",
+        &["matrix", "dual-mode", "bulk-only", "pipeline-only"],
+    );
+    for (name, a) in [
+        ("mesh2d 80x80", gen::grid2d(80, 80)),
+        ("banded 4000", gen::banded(4000, 12, 7)),
+    ] {
+        let cfg = |bulk_threshold: usize| SolverConfig {
+            threads: 4,
+            bulk_threshold,
+            ..SolverConfig::default()
+        };
+        // dual-mode: default threshold; bulk-only: threshold 1 (every level
+        // stays bulk); pipeline-only: huge threshold (no level qualifies)
+        let t_dual = factor_time(cfg(8), &a);
+        let t_bulk = factor_time(cfg(1), &a);
+        let t_pipe = factor_time(cfg(usize::MAX), &a);
+        t3.row(
+            vec![
+                name.to_string(),
+                fmt_time(t_dual),
+                fmt_time(t_bulk),
+                fmt_time(t_pipe),
+            ],
+            t_bulk / t_dual,
+        );
+    }
+    t3.print();
+
+    // --- 4. relaxation budget sweep ---
+    let mut t4 = Table::new(
+        "ablation 4: supernode relaxation budget (mesh2d 80x80)",
+        &["budget", "analyze", "factor", "refactor", "lu entries"],
+    );
+    let a = gen::grid2d(80, 80);
+    for (label, policy) in [
+        ("exact", MergePolicy::Exact { max_width: 128 }),
+        (
+            "relax 0.1",
+            MergePolicy::Relaxed {
+                max_width: 128,
+                budget_frac: 0.1,
+                budget_abs: 8,
+            },
+        ),
+        (
+            "relax 0.2",
+            MergePolicy::Relaxed {
+                max_width: 128,
+                budget_frac: 0.2,
+                budget_abs: 24,
+            },
+        ),
+        (
+            "relax 0.4",
+            MergePolicy::Relaxed {
+                max_width: 128,
+                budget_frac: 0.4,
+                budget_abs: 64,
+            },
+        ),
+    ] {
+        let s = Solver::new(SolverConfig {
+            merge_policy: Some(policy),
+            kernel: Some(KernelMode::SupSup),
+            threads: common::threads(),
+            ..SolverConfig::default()
+        });
+        let t_an = common::best(2, || {
+            let _ = s.analyze(&a).expect("analyze");
+        });
+        let an = s.analyze(&a).expect("analyze");
+        let t_f = common::best(2, || {
+            let _ = s.factor(&a, &an).expect("factor");
+        });
+        let mut f = s.factor(&a, &an).expect("factor");
+        let t_r = common::best(3, || {
+            s.refactor(&a, &an, &mut f).expect("refactor");
+        });
+        t4.row(
+            vec![
+                label.to_string(),
+                fmt_time(t_an),
+                fmt_time(t_f),
+                fmt_time(t_r),
+                an.stats.lu_entries.to_string(),
+            ],
+            1.0,
+        );
+    }
+    t4.print();
+}

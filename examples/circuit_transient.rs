@@ -1,0 +1,87 @@
+//! Repeated-solve scenario: transient simulation of a nonlinear circuit.
+//!
+//! This is the workload HYLU's repeated-solve mode is designed for (paper
+//! §3.2): a Newton iteration inside a timestep loop refactors the same
+//! sparsity pattern hundreds of times with changing values. The example
+//! simulates a circuit-class system where each Newton step perturbs device
+//! conductances, and compares the refactorization fast path against full
+//! factorization.
+//!
+//! ```bash
+//! cargo run --release --example circuit_transient
+//! ```
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+use std::time::Instant;
+
+fn main() {
+    let n = 20_000;
+    let a0 = gen::circuit(n, 42);
+    println!("circuit: n = {}, nnz = {}", a0.n, a0.nnz());
+
+    // repeated-mode solver: pays for relaxed supernode analysis once
+    let solver = Solver::new(SolverConfig {
+        repeated: true,
+        ..SolverConfig::default()
+    });
+    let t = Instant::now();
+    let an = solver.analyze(&a0).expect("analyze");
+    println!(
+        "analyze: {:.1} ms (kernel {}, fill {:.2}x)",
+        t.elapsed().as_secs_f64() * 1e3,
+        an.mode,
+        an.stats.fill_ratio
+    );
+
+    let mut fac = solver.factor(&a0, &an).expect("factor");
+    println!("first factor: {:.2} ms", fac.stats.t_factor * 1e3);
+
+    // transient loop: timesteps x newton iterations
+    let timesteps = 10;
+    let newton_iters = 3;
+    let mut rng = Prng::new(7);
+    let mut a = a0.clone();
+    let mut t_refactor = 0.0;
+    let mut t_solve = 0.0;
+    let mut worst_residual = 0.0f64;
+    for _step in 0..timesteps {
+        for _ni in 0..newton_iters {
+            // device linearization changes values, never the pattern
+            for v in &mut a.vals {
+                *v *= 1.0 + 0.02 * rng.normal();
+            }
+            solver.refactor(&a, &an, &mut fac).expect("refactor");
+            t_refactor += fac.stats.t_factor;
+            let b = gen::rhs_for_ones(&a);
+            let (x, st) = solver.solve_with_stats(&a, &an, &fac, &b).expect("solve");
+            t_solve += st.t_solve;
+            worst_residual = worst_residual.max(st.residual);
+            let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
+            assert!(err < 1e-6, "newton solve drifted: {err}");
+        }
+    }
+    let solves = (timesteps * newton_iters) as f64;
+    println!(
+        "transient: {} solves, refactor avg {:.2} ms, solve avg {:.2} ms, worst residual {:.2e}",
+        solves as usize,
+        t_refactor / solves * 1e3,
+        t_solve / solves * 1e3,
+        worst_residual
+    );
+
+    // compare against full factorization each step (what a non-repeated
+    // solver would do)
+    let t = Instant::now();
+    for _ in 0..5 {
+        let _ = solver.factor(&a, &an).expect("factor");
+    }
+    let t_full = t.elapsed().as_secs_f64() / 5.0;
+    println!(
+        "full factor avg {:.2} ms => refactor speedup {:.2}x",
+        t_full * 1e3,
+        t_full / (t_refactor / solves)
+    );
+    println!("circuit_transient OK");
+}

@@ -1,0 +1,47 @@
+//! Quickstart: build a sparse system, solve it, check the residual.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+
+fn main() {
+    // A 2-D Poisson problem (the "hello world" of sparse direct solvers).
+    let a = gen::grid2d(64, 64);
+    println!("matrix: n = {}, nnz = {}", a.n, a.nnz());
+
+    // Known solution x* = 1, right-hand side b = A·1.
+    let b = gen::rhs_for_ones(&a);
+
+    // analyze -> factor -> solve
+    let solver = Solver::new(SolverConfig::default());
+    let analysis = solver.analyze(&a).expect("analyze");
+    println!(
+        "analysis: kernel = {}, fill = {:.2}x, supernode coverage = {:.0}%",
+        analysis.mode,
+        analysis.stats.fill_ratio,
+        100.0 * analysis.stats.supernode_coverage
+    );
+
+    let factors = solver.factor(&a, &analysis).expect("factor");
+    println!(
+        "factor: {:.3} ms, {} perturbed pivots",
+        factors.stats.t_factor * 1e3,
+        factors.stats.perturbed
+    );
+
+    let (x, st) = solver
+        .solve_with_stats(&a, &analysis, &factors, &b)
+        .expect("solve");
+    let max_err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
+    println!(
+        "solve: {:.3} ms, residual = {:.3e}, max |x - 1| = {:.3e}",
+        st.t_solve * 1e3,
+        st.residual,
+        max_err
+    );
+    assert!(max_err < 1e-8, "solution check failed");
+    println!("quickstart OK");
+}

@@ -1,0 +1,74 @@
+"""AOT lowering: JAX/Pallas supernode kernels -> HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and NOT
+a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the rust `xla` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO *text* parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/): ``python -m compile.aot --out-dir ../artifacts``
+Produces one ``<name>.hlo.txt`` per tile class listed by
+``model.jit_variants()`` plus a ``manifest.txt`` the Rust runtime reads.
+
+Python runs ONCE at build time; the artifacts are self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 artifact variants
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, fn, shapes in model.jit_variants():
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arg_sig = ";".join(
+            f"{'x'.join(str(d) for d in s.shape)}:{s.dtype}" for s in shapes
+        )
+        entries.append((name, f"{name}.hlo.txt", arg_sig))
+        print(f"  {name}: {len(text)} chars, args [{arg_sig}]")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, fname, sig in entries:
+            f.write(f"{name}\t{fname}\t{sig}\n")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    entries = lower_all(out_dir or ".")
+    # Legacy alias: Makefile's sentinel file.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("".join(f"{n}\n" for n, _, _ in entries))
+    print(f"wrote {len(entries)} HLO artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

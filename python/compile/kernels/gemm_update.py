@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: tiled supernode GEMM update ``C - A @ B``.
+
+This is HYLU's sup-sup numeric kernel hot spot. On a real TPU the BlockSpec
+below expresses the HBM->VMEM schedule: (bm, bk) x (bk, bn) tiles stream
+through VMEM while the (bm, bn) f32 output tile doubles as the accumulator,
+and the (m//bm, n//bn, k//bk) grid walks k innermost so the accumulator is
+reused across the whole contraction — the MXU-shaped analogue of MKL's cache
+blocking in the paper (see DESIGN.md §Hardware-Adaptation).
+
+CPU note: lowered with interpret=True (Mosaic custom-calls cannot run on the
+CPU PJRT plugin); numerics are identical, performance is validated
+analytically in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, a_ref, b_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; grid axis 2 runs the k contraction."""
+    ki = pl.program_id(2)
+    dt = o_ref.dtype
+
+    @pl.when(ki == 0)
+    def _init():
+        # Seed the accumulator with the incoming panel tile so the subtract
+        # fuses into the accumulation (no separate epilogue pass over C).
+        o_ref[...] = c_ref[...].astype(dt)
+
+    o_ref[...] -= (a_ref[...].astype(dt) @ b_ref[...].astype(dt)).astype(dt)
+
+
+def _pick_block(dim: int, cap: int = 128) -> int:
+    """Largest power-of-two tile <= cap that divides ``dim``."""
+    b = min(dim, cap)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemm_update(c, a, b, *, interpret: bool = True):
+    """Pallas tiled ``C - A @ B`` (f32), HYLU's sup-sup update.
+
+    Shapes: c (m, n), a (m, k), b (k, n). Dims need a power-of-two tile
+    divisor; the AOT tile classes are powers of two, so this always holds on
+    the artifact path.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n), (c.shape, a.shape, b.shape)
+    dt = jnp.result_type(c)
+    if dt not in (jnp.float32, jnp.float64):
+        dt = jnp.float32
+    bm, bk, bn = _pick_block(m), _pick_block(k), _pick_block(n)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),  # C tile
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),  # A tile
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),  # B tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), dt),
+        interpret=interpret,
+    )(c, a, b)

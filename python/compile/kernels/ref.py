@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+These are the ground-truth semantics the Pallas kernels in gemm_update.py and
+trsm.py must match (f32, compared with tight tolerances by pytest/hypothesis).
+
+The dense hot spot of HYLU's sup-sup kernel is:
+
+    panel <- panel - L_block @ U_block          (supernode x supernode update)
+    X solves  L_diag @ X = panel_rows           (internal panel solve, TRSM)
+
+with L_diag unit-lower-triangular (HYLU stores an implicit unit diagonal).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def gemm_update(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference supernode update: ``C - A @ B`` in f32.
+
+    Shapes: c (m, n), a (m, k), b (k, n).
+    """
+    return (c - a @ b).astype(jnp.float32)
+
+
+def trsm_unit_lower(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference unit-lower triangular solve ``L X = B``.
+
+    Only the strictly-lower part of ``l`` is read; the diagonal is implicitly
+    one (HYLU convention: L carries an implicit unit diagonal).
+    Shapes: l (w, w), b (w, n).
+    """
+    lw = jnp.tril(l, k=-1) + jnp.eye(l.shape[0], dtype=l.dtype)
+    return jsl.solve_triangular(lw, b, lower=True, unit_diagonal=True).astype(
+        jnp.float32
+    )
+
+
+def fused_update_trsm(
+    l_diag: jnp.ndarray, c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference fused supernode step: ``trsm(L_diag, C - A @ B)``."""
+    return trsm_unit_lower(l_diag, gemm_update(c, a, b))

@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: unit-lower triangular panel solve ``L X = B``.
+
+HYLU's supernode *internal factorization* applies this to the panel rows
+below the diagonal block: once the diagonal block's L factor is known, the
+remaining panel columns solve ``L_diag @ X = B``. The kernel keeps the whole
+(w, w) triangle and a (w, bn) panel tile resident in VMEM (w <= 128, so the
+triangle is at most 64 KiB — trivially VMEM-resident) and substitutes row by
+row with a sequential fori_loop; the grid parallelizes over panel column
+tiles, which are independent.
+
+Only the strictly-lower part of ``l`` is read; the diagonal is implicitly 1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(l_ref, b_ref, o_ref, *, w: int):
+    dt = o_ref.dtype
+    l = l_ref[...].astype(dt)
+    b = b_ref[...].astype(dt)
+    # Mask to strictly-lower: rows >= i of x are still zero when row i is
+    # computed, but masking makes the kernel robust to junk in the upper
+    # triangle (the rust side passes the packed panel unmasked).
+    tri = jnp.tril(jnp.ones((w, w), dt), k=-1)
+    lm = l * tri
+
+    def body(i, x):
+        row = b[i, :] - lm[i, :] @ x
+        return x.at[i, :].set(row)
+
+    o_ref[...] = jax.lax.fori_loop(0, w, body, jnp.zeros_like(b))
+
+
+def _pick_block(dim: int, cap: int = 256) -> int:
+    b = min(dim, cap)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trsm_unit_lower(l, b, *, interpret: bool = True):
+    """Pallas unit-lower TRSM ``X = L^{-1} B``.
+
+    Shapes: l (w, w) with w <= 128, b (w, n).
+    """
+    w, w2 = l.shape
+    wb, n = b.shape
+    assert w == w2 == wb, (l.shape, b.shape)
+    dt = jnp.result_type(b)
+    if dt not in (jnp.float32, jnp.float64):
+        dt = jnp.float32
+    bn = _pick_block(n)
+    return pl.pallas_call(
+        functools.partial(_kernel, w=w),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((w, w), lambda j: (0, 0)),
+            pl.BlockSpec((w, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((w, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((w, n), dt),
+        interpret=interpret,
+    )(l, b)

@@ -1,0 +1,92 @@
+"""Layer-2 JAX model: HYLU's dense supernode-step compute graph.
+
+The paper's numeric hot spot is the sup-sup kernel: a target supernode panel
+is updated by every source supernode (GEMM) and then internally factorized
+(TRSM against the diagonal block's unit-lower factor). This module expresses
+those steps as jitted JAX functions *calling the Layer-1 Pallas kernels*, so
+that one `jax.jit(...).lower()` in aot.py bakes kernel + glue into a single
+HLO module per tile class.
+
+Exported graphs (all f32):
+
+- ``supernode_update(c, a, b)``      -> ``C - A @ B``            (Pallas GEMM)
+- ``panel_trsm(l, b)``               -> ``L^{-1} B``             (Pallas TRSM)
+- ``fused_update_trsm(l, c, a, b)``  -> ``L^{-1} (C - A @ B)``   (both; lets
+  XLA fuse the update epilogue into the solve prologue — no HBM round-trip
+  for the intermediate panel)
+
+Python runs only at build time; the Rust runtime executes the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels import gemm_update as _gemm
+from .kernels import trsm as _trsm
+
+
+def supernode_update(c, a, b):
+    """Sup-sup update of a target panel: ``C - A @ B``.
+
+    c: (m, n) target panel rows (columns = target supernode's U pattern)
+    a: (m, k) dense L block (target rows x source supernode columns)
+    b: (k, n) dense U block (source supernode rows x target pattern)
+    """
+    return _gemm.gemm_update(c, a, b)
+
+
+def panel_trsm(l, b):
+    """Internal panel solve ``X = L^{-1} B`` with implicit unit diagonal."""
+    return _trsm.trsm_unit_lower(l, b)
+
+
+def fused_update_trsm(l, c, a, b):
+    """One full supernode step: update then internal solve, fused by XLA."""
+    return _trsm.trsm_unit_lower(l, _gemm.gemm_update(c, a, b))
+
+
+def jit_variants():
+    """The (name, fn, example-shape tuple) table aot.py lowers.
+
+    Tile classes are powers of two; the Rust side pads supernode blocks to
+    the nearest class (DESIGN.md §Hardware-Adaptation). Two dtype families:
+    ``f32`` variants are the TPU/MXU-shaped story; ``f64`` variants are what
+    the Rust runtime executes on its hot path (the solver is double
+    precision, like the paper's).
+    """
+
+    def gemm_shapes(s, dt):
+        m = k = s
+        n = 2 * s  # panels are wider than they are tall in practice
+        return (
+            jax.ShapeDtypeStruct((m, n), dt),
+            jax.ShapeDtypeStruct((m, k), dt),
+            jax.ShapeDtypeStruct((k, n), dt),
+        )
+
+    def trsm_shapes(s, dt):
+        return (
+            jax.ShapeDtypeStruct((s, s), dt),
+            jax.ShapeDtypeStruct((s, 2 * s), dt),
+        )
+
+    def fused_shapes(s, dt):
+        return (
+            jax.ShapeDtypeStruct((s, s), dt),
+            jax.ShapeDtypeStruct((s, 2 * s), dt),
+            jax.ShapeDtypeStruct((s, s), dt),
+            jax.ShapeDtypeStruct((s, 2 * s), dt),
+        )
+
+    sizes = (16, 32, 64, 128)
+    table = []
+    for s in sizes:
+        f32 = jax.numpy.float32
+        table.append((f"gemm_update_{s}", supernode_update, gemm_shapes(s, f32)))
+        table.append((f"trsm_{s}", panel_trsm, trsm_shapes(s, f32)))
+        table.append((f"fused_{s}", fused_update_trsm, fused_shapes(s, f32)))
+        f64 = jax.numpy.float64
+        table.append((f"gemm_update_f64_{s}", supernode_update, gemm_shapes(s, f64)))
+        table.append((f"trsm_f64_{s}", panel_trsm, trsm_shapes(s, f64)))
+    return table

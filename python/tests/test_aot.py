@@ -1,0 +1,34 @@
+"""AOT artifact generation: manifest coverage + HLO text sanity."""
+
+import os
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_all_writes_manifest(tmp_path):
+    entries = aot.lower_all(str(tmp_path))
+    assert len(entries) == len(model.jit_variants())
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    assert len(manifest) == len(entries)
+    for line in manifest:
+        name, fname, sig = line.split("\t")
+        text = (tmp_path / fname).read_text()
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+        # one shape entry per argument
+        assert all(":" in part for part in sig.split(";"))
+
+
+def test_existing_artifacts_are_hlo_text():
+    if not os.path.exists(os.path.join(ART, "manifest.txt")):
+        import pytest
+
+        pytest.skip("make artifacts not run yet")
+    with open(os.path.join(ART, "manifest.txt")) as f:
+        for line in f:
+            _, fname, _ = line.strip().split("\t")
+            with open(os.path.join(ART, fname)) as g:
+                head = g.read(64)
+            assert head.startswith("HloModule")

@@ -1,0 +1,44 @@
+"""f64 artifact variants: dtype coverage and numerical agreement with the
+f64 numpy reference (these are the artifacts the Rust hot path executes)."""
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import gemm_update as gk  # noqa: E402
+from compile.kernels import trsm as tk  # noqa: E402
+
+
+def test_jit_variants_include_f64():
+    names = [n for n, _, _ in model.jit_variants()]
+    for s in (16, 32, 64, 128):
+        assert f"gemm_update_f64_{s}" in names
+        assert f"trsm_f64_{s}" in names
+    # f64 shapes really are f64
+    for name, _, shapes in model.jit_variants():
+        if "_f64_" in name:
+            assert all(str(s.dtype) == "float64" for s in shapes), name
+
+
+def test_gemm_f64_matches_numpy_to_double_precision():
+    rng = np.random.default_rng(1)
+    m, k, n = 32, 32, 64
+    c = rng.standard_normal((m, n))
+    a = rng.standard_normal((m, k))
+    b = rng.standard_normal((k, n))
+    out = np.asarray(gk.gemm_update(c, a, b))
+    assert out.dtype == np.float64
+    np.testing.assert_allclose(out, c - a @ b, rtol=1e-13, atol=1e-13)
+
+
+def test_trsm_f64_roundtrip_double_precision():
+    rng = np.random.default_rng(2)
+    w, n = 64, 96
+    l = np.tril(rng.standard_normal((w, w)), -1) / w
+    lw = l + np.eye(w)
+    b = rng.standard_normal((w, n))
+    x = np.asarray(tk.trsm_unit_lower(l, b))
+    assert x.dtype == np.float64
+    np.testing.assert_allclose(lw @ x, b, rtol=1e-12, atol=1e-12)

@@ -1,0 +1,50 @@
+"""L2 model graphs vs the oracle + the fused-step algebraic identity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SIZES = st.sampled_from([4, 8, 16, 32, 64])
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=SIZES, seed=st.integers(0, 2**31 - 1))
+def test_fused_equals_composed(s, seed):
+    rng = np.random.default_rng(seed)
+    # Scale L like a pivoted factor (bounded multipliers); unscaled random
+    # triangles make the solve exponentially ill-conditioned in s.
+    l, c = rand(rng, s, s) / s, rand(rng, s, 2 * s)
+    a, b = rand(rng, s, s), rand(rng, s, 2 * s)
+    fused = np.asarray(model.fused_update_trsm(l, c, a, b))
+    composed = np.asarray(model.panel_trsm(l, model.supernode_update(c, a, b)))
+    np.testing.assert_allclose(fused, composed, rtol=1e-4, atol=1e-4)
+    oracle = np.asarray(ref.fused_update_trsm(l, c, a, b))
+    np.testing.assert_allclose(fused, oracle, rtol=1e-3, atol=1e-3)
+
+
+def test_supernode_step_reconstructs_panel():
+    """After the step, L_diag @ X + A @ B == C: the LU invariant the rust
+    numeric kernel relies on."""
+    rng = np.random.default_rng(3)
+    s = 32
+    l = np.tril(rand(rng, s, s), -1) / s  # bounded multipliers, see test_kernel
+    lw = l + np.eye(s, dtype=np.float32)
+    c, a, b = rand(rng, s, 2 * s), rand(rng, s, s), rand(rng, s, 2 * s)
+    x = np.asarray(model.fused_update_trsm(l, c, a, b))
+    np.testing.assert_allclose(lw @ x + a @ b, c, rtol=1e-3, atol=1e-3)
+
+
+def test_jit_variants_table_is_consistent():
+    table = model.jit_variants()
+    names = [n for n, _, _ in table]
+    assert len(names) == len(set(names))
+    assert {n.rsplit("_", 1)[-1] for n in names} == {"16", "32", "64", "128"}
+    for _, fn, shapes in table:
+        out = fn(*[np.zeros(s.shape, np.float32) for s in shapes])
+        assert out.shape == shapes[-1].shape if fn is not model.panel_trsm else True

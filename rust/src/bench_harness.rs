@@ -1,0 +1,181 @@
+//! Benchmark harness: timing, geometric means, and the table printer that
+//! regenerates the paper's figures as text series. (criterion is not in the
+//! offline registry; a purpose-built harness prints exactly the rows the
+//! paper plots anyway.)
+
+use std::time::Instant;
+
+/// Best-of-`reps` wall time of `f` in seconds.
+pub fn time_best<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = v.iter().map(|&x| x.max(1e-300).ln()).sum();
+    (s / v.len() as f64).exp()
+}
+
+/// Table I: testbed environment (the paper's hardware/software table).
+pub fn environment() -> String {
+    let cores = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let os = std::fs::read_to_string("/proc/sys/kernel/osrelease")
+        .unwrap_or_else(|_| "unknown".into());
+    let model = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .map(|l| l.split(':').nth(1).unwrap_or("?").trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown".into());
+    format!(
+        "Table I (this testbed): CPU = {model}; cores = {cores}; \
+         kernel = {}; HYLU repro = {}; comparators = in-repo PARDISO-like / KLU-like \
+         (MKL PARDISO unavailable offline, DESIGN.md §2)",
+        os.trim(),
+        env!("CARGO_PKG_VERSION"),
+    )
+}
+
+/// A figure-style results table: per-matrix rows plus geomean footer.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+    speedups: Vec<f64>,
+}
+
+impl Table {
+    /// New table with column headers (first column is the matrix name).
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            speedups: Vec::new(),
+        }
+    }
+
+    /// Add a row; `speedup` feeds the geomean footer.
+    pub fn row(&mut self, cells: Vec<String>, speedup: f64) {
+        self.rows.push(cells);
+        if speedup.is_finite() && speedup > 0.0 {
+            self.speedups.push(speedup);
+        }
+    }
+
+    /// Geomean of the speedup column so far.
+    pub fn geomean_speedup(&self) -> f64 {
+        geomean(&self.speedups)
+    }
+
+    /// Render the full table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(hdr.join("  ").len()));
+        out.push('\n');
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "geomean speedup: {:.2}x over {} matrices\n",
+            self.geomean_speedup(),
+            self.speedups.len()
+        ));
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds with sensible units.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_of_constants() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn time_best_monotone() {
+        let t = time_best(3, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(t >= 0.0 && t < 1.0);
+    }
+
+    #[test]
+    fn table_renders_rows_and_footer() {
+        let mut t = Table::new("Fig X", &["matrix", "a", "speedup"]);
+        t.row(vec!["m1".into(), "1.0".into(), "2.0".into()], 2.0);
+        t.row(vec!["m2".into(), "1.0".into(), "8.0".into()], 8.0);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("m1"));
+        assert!(s.contains("geomean speedup: 4.00x"));
+    }
+
+    #[test]
+    fn environment_mentions_cores() {
+        assert!(environment().contains("cores"));
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(0.002).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+    }
+}

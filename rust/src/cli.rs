@@ -1,0 +1,319 @@
+//! Hand-rolled CLI (clap is not in the offline registry).
+//!
+//! ```text
+//! hylu solve  --matrix FILE.mtx | --gen CLASS:N [--threads T] [--kernel K]
+//!             [--repeated] [--xla]
+//! hylu inspect --matrix FILE.mtx | --gen CLASS:N
+//! hylu gen    --gen CLASS:N --out FILE.mtx
+//! hylu bench  [--suite small|full] [--threads T]
+//! ```
+
+use std::path::Path;
+
+use crate::baseline;
+use crate::bench_harness::{environment, fmt_time, Table};
+use crate::bench_suite;
+use crate::coordinator::{Solver, SolverConfig};
+use crate::numeric::select::KernelMode;
+use crate::sparse::csr::Csr;
+use crate::sparse::{gen, io};
+use crate::{Error, Result};
+
+/// Parsed command line.
+pub struct Args {
+    flags: Vec<(String, Option<String>)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value` / `--switch` style arguments.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let has_val = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if has_val {
+                    flags.push((name.to_string(), Some(argv[i + 1].clone())));
+                    i += 2;
+                } else {
+                    flags.push((name.to_string(), None));
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    /// Value of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    /// Presence of `--switch`.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    /// Subcommand (first positional).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+/// Build a matrix from `--matrix FILE` or `--gen CLASS:N[:SEED]`.
+pub fn load_matrix(args: &Args) -> Result<(String, Csr)> {
+    if let Some(path) = args.get("matrix") {
+        let a = io::read_matrix_market(Path::new(path))?;
+        return Ok((path.to_string(), a));
+    }
+    if let Some(spec) = args.get("gen") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let class = parts[0];
+        let n: usize = parts
+            .get(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10_000);
+        let seed: u64 = parts.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+        let side = (n as f64).sqrt().ceil() as usize;
+        let cube = (n as f64).cbrt().ceil() as usize;
+        let a = match class {
+            "circuit" => gen::circuit(n, seed),
+            "power" => gen::power_network(n, seed),
+            "mesh2d" | "grid2d" => gen::grid2d(side, side),
+            "mesh3d" | "grid3d" => gen::grid3d(cube, cube, cube),
+            "banded" => gen::banded(n, 8, seed),
+            "random" => gen::random_sparse(n, 4, seed),
+            "kkt" => gen::kkt(n * 3 / 4, n / 4, seed),
+            "illcond" => gen::ill_conditioned(n, seed),
+            other => return Err(Error::Invalid(format!("unknown class {other}"))),
+        };
+        return Ok((format!("{class}:n={}", a.n), a));
+    }
+    Err(Error::Invalid(
+        "need --matrix FILE.mtx or --gen CLASS:N".into(),
+    ))
+}
+
+/// Build a [`SolverConfig`] from common flags.
+pub fn config_from(args: &Args) -> Result<SolverConfig> {
+    let mut cfg = SolverConfig::default();
+    if let Some(t) = args.get("threads") {
+        cfg.threads = t
+            .parse()
+            .map_err(|_| Error::Invalid("bad --threads".into()))?;
+    }
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = Some(match k {
+            "row-row" | "rowrow" => KernelMode::RowRow,
+            "sup-row" | "suprow" => KernelMode::SupRow,
+            "sup-sup" | "supsup" => KernelMode::SupSup,
+            "auto" => return Ok(cfg),
+            other => return Err(Error::Invalid(format!("unknown kernel {other}"))),
+        });
+    }
+    if args.has("repeated") {
+        cfg.repeated = true;
+    }
+    if args.has("xla") {
+        cfg.use_xla = true;
+    }
+    Ok(cfg)
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = Args::parse(argv);
+    let result = match args.command() {
+        Some("solve") => cmd_solve(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("bench") => cmd_bench(&args),
+        _ => {
+            eprintln!(
+                "usage: hylu <solve|inspect|gen|bench> [--matrix F | --gen CLASS:N] \
+                 [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
+                 [--suite small|full] [--out F]"
+            );
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let (name, a) = load_matrix(args)?;
+    let cfg = config_from(args)?;
+    let solver = Solver::try_new(cfg)?;
+    let an = solver.analyze(&a)?;
+    let f = solver.factor(&a, &an)?;
+    let b = gen::rhs_for_ones(&a);
+    let (x, st) = solver.solve_with_stats(&a, &an, &f, &b)?;
+    let err = x
+        .iter()
+        .map(|v| (v - 1.0).abs())
+        .fold(0.0f64, f64::max);
+    println!("matrix       : {name} (n={}, nnz={})", a.n, a.nnz());
+    println!(
+        "preprocess   : {} (match {}, order {}, symbolic {})",
+        fmt_time(an.stats.t_total),
+        fmt_time(an.stats.t_match),
+        fmt_time(an.stats.t_order),
+        fmt_time(an.stats.t_symbolic)
+    );
+    println!(
+        "kernel       : {} (coverage {:.2}, avg width {:.1}, fill {:.2}x)",
+        an.mode, an.stats.supernode_coverage, an.stats.avg_super_width, an.stats.fill_ratio
+    );
+    println!(
+        "factor       : {} ({:.2} GFLOP/s, {} perturbed pivots, {} threads)",
+        fmt_time(f.stats.t_factor),
+        f.stats.gflops,
+        f.stats.perturbed,
+        f.stats.threads
+    );
+    println!(
+        "solve        : {} (residual {:.3e}, {} refinement iters)",
+        fmt_time(st.t_solve),
+        st.residual,
+        st.refine_iters
+    );
+    println!("x==1 max err : {err:.3e}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let (name, a) = load_matrix(args)?;
+    let cfg = config_from(args)?;
+    let solver = Solver::try_new(cfg)?;
+    let an = solver.analyze(&a)?;
+    let s = an.stats;
+    println!("matrix   : {name}");
+    println!("n        : {}", s.n);
+    println!("nnz      : {}", s.nnz);
+    println!("kernel   : {}", s.mode);
+    println!("lu nnz   : {} (fill {:.2}x)", s.lu_entries, s.fill_ratio);
+    println!("flops    : {:.3e}", s.flops);
+    println!("coverage : {:.3}", s.supernode_coverage);
+    println!("avg width: {:.2}", s.avg_super_width);
+    println!("nodes    : {} over {} levels ({} bulk)", s.nodes, s.levels, s.bulk_levels);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let (name, a) = load_matrix(args)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| Error::Invalid("need --out FILE.mtx".into()))?;
+    io::write_matrix_market(Path::new(out), &a)?;
+    println!("wrote {name} to {out}");
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let threads = cfg.threads;
+    let suite = match args.get("suite").unwrap_or("small") {
+        "full" => bench_suite::suite37(),
+        _ => bench_suite::suite_small(),
+    };
+    println!("{}", environment());
+    let mut table = Table::new(
+        "one-time solve: HYLU vs PARDISO-like baseline",
+        &["matrix", "class", "n", "hylu", "baseline", "speedup"],
+    );
+    for bm in &suite {
+        let a = (bm.build)();
+        let hylu = Solver::try_new(SolverConfig {
+            threads,
+            ..SolverConfig::default()
+        })?;
+        let base = Solver::try_new(baseline::pardiso_like(threads))?;
+        let b = gen::rhs_for_ones(&a);
+        let t_h = run_once(&hylu, &a, &b)?;
+        let t_b = run_once(&base, &a, &b)?;
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_h),
+                fmt_time(t_b),
+                format!("{:.2}x", t_b / t_h),
+            ],
+            t_b / t_h,
+        );
+    }
+    table.print();
+    Ok(())
+}
+
+fn run_once(s: &Solver, a: &Csr, b: &[f64]) -> Result<f64> {
+    let t = std::time::Instant::now();
+    let an = s.analyze(a)?;
+    let f = s.factor(a, &an)?;
+    let _ = s.solve(a, &an, &f, b)?;
+    Ok(t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let a = Args::parse(&sv(&["solve", "--gen", "circuit:100", "--repeated", "--threads", "2"]));
+        assert_eq!(a.command(), Some("solve"));
+        assert_eq!(a.get("gen"), Some("circuit:100"));
+        assert_eq!(a.get("threads"), Some("2"));
+        assert!(a.has("repeated"));
+        assert!(!a.has("xla"));
+    }
+
+    #[test]
+    fn load_matrix_gen_specs() {
+        for spec in ["circuit:500", "mesh2d:400", "kkt:400:7", "banded:300"] {
+            let a = Args::parse(&sv(&["solve", "--gen", spec]));
+            let (_, m) = load_matrix(&a).unwrap();
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn config_kernel_parse() {
+        let a = Args::parse(&sv(&["solve", "--kernel", "sup-sup"]));
+        assert_eq!(config_from(&a).unwrap().kernel, Some(KernelMode::SupSup));
+        let bad = Args::parse(&sv(&["solve", "--kernel", "bogus"]));
+        assert!(config_from(&bad).is_err());
+    }
+
+    #[test]
+    fn solve_command_end_to_end() {
+        let code = run(&sv(&["solve", "--gen", "mesh2d:900", "--threads", "1"]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn unknown_command_usage() {
+        assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+}

@@ -1,0 +1,96 @@
+//! Solver configuration.
+
+use crate::numeric::select::KernelMode;
+use crate::numeric::PivotConfig;
+use crate::ordering::OrderingChoice;
+use crate::symbolic::MergePolicy;
+
+/// Configuration for [`crate::coordinator::Solver`].
+///
+/// The defaults reproduce the paper's one-time-solve setup; set
+/// [`SolverConfig::repeated`] for the repeated-solve optimization
+/// (relaxed supernodes: slower preprocessing, faster refactorization).
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// Fill-reducing ordering (default: auto-select AMD vs ND from graph
+    /// statistics).
+    pub ordering: OrderingChoice,
+    /// Numeric kernel override (default: select from symbolic statistics).
+    pub kernel: Option<KernelMode>,
+    /// Supernode merge-policy override (default: derived from kernel +
+    /// `repeated`). Used by the baselines.
+    pub merge_policy: Option<MergePolicy>,
+    /// Worker threads; 0 = all available cores.
+    pub threads: usize,
+    /// Pivoting / perturbation.
+    pub pivot: PivotConfig,
+    /// MC64 static pivoting + scaling (disable only for pre-scaled
+    /// diagonally-dominant inputs).
+    pub static_pivoting: bool,
+    /// Optimize preprocessing for repeated solves with a fixed pattern.
+    pub repeated: bool,
+    /// Maximum supernode width (tile-class cap).
+    pub max_supernode: usize,
+    /// Relaxed-merge padding budget, fraction of panel cells (repeated
+    /// mode).
+    pub relax_frac: f64,
+    /// Relaxed-merge flat padding allowance per merge (repeated mode).
+    pub relax_abs: usize,
+    /// Minimum nodes per level to stay in bulk mode.
+    pub bulk_threshold: usize,
+    /// Iterative-refinement iteration cap.
+    pub refine_max_iter: usize,
+    /// Residual above which refinement starts even without perturbation.
+    pub refine_tol: f64,
+    /// Refinement stops once the residual is below this.
+    pub refine_target: f64,
+    /// Skip parallel substitution below this dimension.
+    pub parallel_solve_min_n: usize,
+    /// Route large sup-sup GEMMs through the XLA/PJRT AOT artifacts
+    /// (Pallas kernels). Ablation path; the native microkernel is default.
+    pub use_xla: bool,
+    /// Minimum GEMM dimension to hand to XLA (smaller blocks stay native).
+    pub xla_min_dim: usize,
+    /// Artifact directory for `use_xla`.
+    pub artifacts_dir: String,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            ordering: OrderingChoice::Auto,
+            kernel: None,
+            merge_policy: None,
+            threads: 0,
+            pivot: PivotConfig::default(),
+            static_pivoting: true,
+            repeated: false,
+            max_supernode: 128,
+            relax_frac: 0.2,
+            relax_abs: 24,
+            bulk_threshold: 8,
+            refine_max_iter: 3,
+            refine_tol: 1e-10,
+            refine_target: 1e-14,
+            parallel_solve_min_n: 2048,
+            use_xla: false,
+            xla_min_dim: 16,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_one_time_mode() {
+        let c = SolverConfig::default();
+        assert!(!c.repeated);
+        assert!(c.static_pivoting);
+        assert!(c.kernel.is_none());
+        assert!(!c.use_xla);
+        assert!(c.max_supernode <= 256);
+    }
+}

@@ -1,0 +1,547 @@
+//! The coordinator: HYLU's public solver API (`analyze` → `factor` /
+//! `refactor` → `solve`), configuration, phase statistics, and the
+//! composition of static pivoting, ordering, supernode pivoting and
+//! scalings into one consistent permutation story.
+
+pub mod config;
+pub mod stats;
+
+pub use config::SolverConfig;
+pub use stats::{FactorStats, SolveStats, SymbolicStats};
+
+use std::time::Instant;
+
+use crate::numeric::factor::{GemmBackend, NativeGemm};
+use crate::numeric::parallel::factor_parallel;
+use crate::numeric::select::{select_kernel, selection_stats, KernelMode};
+use crate::numeric::LuFactors;
+use crate::ordering::{self, mwm};
+use crate::par::effective_threads;
+use crate::solve::{backward, backward_parallel, forward, forward_parallel};
+use crate::sparse::csr::Csr;
+use crate::sparse::perm::Perm;
+use crate::symbolic::{analyze_pattern, MergePolicy, Symbolic};
+use crate::{Error, Result};
+
+/// The product of [`Solver::analyze`]: permutations, scalings, the symbolic
+/// factorization, the selected kernel, and the permuted pattern with value
+/// remapping tables for fast (re)factorization.
+pub struct Analysis {
+    /// Symbolic factorization of the permuted pattern.
+    pub sym: Symbolic,
+    /// Row permutation of the original matrix (`map[new] = old`),
+    /// static-pivoting matching composed with the fill ordering.
+    pub row_perm: Perm,
+    /// Column permutation (the fill ordering).
+    pub col_perm: Perm,
+    /// Row scaling of the original matrix.
+    pub dr: Vec<f64>,
+    /// Column scaling of the original matrix.
+    pub dc: Vec<f64>,
+    /// Selected numeric kernel.
+    pub mode: KernelMode,
+    /// Permuted + scaled pattern (values from the analyzed matrix).
+    pub pa: Csr,
+    /// `pa.vals[k] = a.vals[src_idx[k]] * scale[k]` — the refactor remap.
+    src_idx: Vec<usize>,
+    scale: Vec<f64>,
+    /// FNV hash of the analyzed pattern (guards value remapping).
+    pattern_hash: u64,
+    /// Phase statistics.
+    pub stats: SymbolicStats,
+}
+
+/// FNV-1a over the structural pattern.
+fn pattern_hash(a: &Csr) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |v: usize| {
+        h ^= v as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(a.n);
+    for &p in &a.indptr {
+        mix(p);
+    }
+    for &j in &a.indices {
+        mix(j);
+    }
+    h
+}
+
+impl Analysis {
+    /// Rebuild `pa` values from a same-pattern matrix (repeated solve).
+    fn remap_values(&self, a: &Csr) -> Result<Csr> {
+        if a.n != self.pa.n || a.nnz() != self.pa.nnz() || pattern_hash(a) != self.pattern_hash
+        {
+            return Err(Error::Invalid(
+                "matrix pattern differs from the analyzed one".into(),
+            ));
+        }
+        let mut pa = self.pa.clone();
+        for (k, v) in pa.vals.iter_mut().enumerate() {
+            *v = a.vals[self.src_idx[k]] * self.scale[k];
+        }
+        Ok(pa)
+    }
+}
+
+/// The product of [`Solver::factor`]: numeric factors plus statistics.
+pub struct Factorization {
+    /// The numeric LU factors.
+    pub fac: LuFactors,
+    /// Statistics of the last (re)factorization.
+    pub stats: FactorStats,
+}
+
+/// The HYLU solver handle. Holds configuration and the GEMM backend
+/// (native microkernel by default; XLA/PJRT AOT artifacts when
+/// [`SolverConfig::use_xla`] is set).
+pub struct Solver {
+    /// Active configuration.
+    pub cfg: SolverConfig,
+    gemm: Box<dyn GemmBackend + Sync + Send>,
+}
+
+impl Solver {
+    /// Create a solver. If `cfg.use_xla` is set, loads the AOT artifacts
+    /// from `cfg.artifacts_dir` (panics on failure — the artifacts are a
+    /// build product; use [`Solver::try_new`] to handle errors).
+    pub fn new(cfg: SolverConfig) -> Self {
+        Self::try_new(cfg).expect("solver construction failed")
+    }
+
+    /// Fallible constructor.
+    pub fn try_new(cfg: SolverConfig) -> Result<Self> {
+        let gemm: Box<dyn GemmBackend + Sync + Send> = if cfg.use_xla {
+            Box::new(crate::runtime::XlaGemm::load(
+                std::path::Path::new(&cfg.artifacts_dir),
+                cfg.xla_min_dim,
+            )?)
+        } else {
+            Box::new(NativeGemm)
+        };
+        Ok(Solver { cfg, gemm })
+    }
+
+    /// Preprocessing phase: static pivoting (MC64), fill-reducing ordering,
+    /// symbolic factorization with supernode detection, kernel selection,
+    /// and schedule construction.
+    pub fn analyze(&self, a: &Csr) -> Result<Analysis> {
+        if a.n == 0 {
+            return Err(Error::Invalid("empty matrix".into()));
+        }
+        a.validate()?;
+        let t0 = Instant::now();
+
+        // --- static pivoting + scaling ---
+        let (match_perm, dr, dc) = if self.cfg.static_pivoting {
+            let m = mwm::max_weight_matching(a)?;
+            (Perm::from_map(m.row_for_col)?, m.dr, m.dc)
+        } else {
+            (Perm::identity(a.n), vec![1.0; a.n], vec![1.0; a.n])
+        };
+        let t_match = t0.elapsed().as_secs_f64();
+
+        // --- fill-reducing ordering on the matched pattern ---
+        let t1 = Instant::now();
+        let matched = a.permute_scale(&match_perm, &Perm::identity(a.n), &dr, &dc);
+        let fill_order = ordering::order(self.cfg.ordering, &matched);
+        let col_perm = Perm::from_map(fill_order)?;
+        // row_perm = match ∘ fill (rows follow the matching, then both
+        // sides get the symmetric fill permutation)
+        let row_perm = match_perm.then(&col_perm);
+        let t_order = t1.elapsed().as_secs_f64();
+
+        // --- permuted matrix + value remap tables ---
+        let t2 = Instant::now();
+        let (pa, src_idx, scale) = build_permuted(a, &row_perm, &col_perm, &dr, &dc);
+
+        // --- symbolic + kernel selection ---
+        let policy = self.one_time_policy();
+        let mut sym = analyze_pattern(&pa, policy, self.cfg.bulk_threshold);
+        let mut mode = self.cfg.kernel.unwrap_or_else(|| select_kernel(&sym));
+        if self.cfg.kernel.is_none() || self.cfg.merge_policy.is_none() {
+            // re-analyze when the selected kernel wants different supernodes
+            if mode == KernelMode::RowRow && policy != MergePolicy::None {
+                sym = analyze_pattern(&pa, MergePolicy::None, self.cfg.bulk_threshold);
+            } else if self.cfg.repeated
+                && mode != KernelMode::RowRow
+                && self.cfg.merge_policy.is_none()
+            {
+                // repeated-solve mode: pay for relaxed supernodes once,
+                // refactor faster forever (paper §3.2)
+                sym = analyze_pattern(
+                    &pa,
+                    MergePolicy::Relaxed {
+                        max_width: self.cfg.max_supernode,
+                        budget_frac: self.cfg.relax_frac,
+                        budget_abs: self.cfg.relax_abs,
+                    },
+                    self.cfg.bulk_threshold,
+                );
+                mode = self.cfg.kernel.unwrap_or_else(|| select_kernel(&sym));
+            }
+        }
+        let t_symbolic = t2.elapsed().as_secs_f64();
+
+        let sel = selection_stats(&sym);
+        let stats = SymbolicStats {
+            n: a.n,
+            nnz: a.nnz(),
+            t_match,
+            t_order,
+            t_symbolic,
+            t_total: t0.elapsed().as_secs_f64(),
+            lu_entries: sym.lu_entries,
+            fill_ratio: sym.lu_entries as f64 / a.nnz().max(1) as f64,
+            flops: sym.flops,
+            supernode_coverage: sel.coverage,
+            avg_super_width: sel.avg_super_width,
+            nodes: sym.nodes.len(),
+            levels: sym.schedule.nlevels(),
+            bulk_levels: sym.schedule.bulk_levels,
+            mode,
+        };
+        Ok(Analysis {
+            sym,
+            row_perm,
+            col_perm,
+            dr,
+            dc,
+            mode,
+            pa,
+            src_idx,
+            scale,
+            pattern_hash: pattern_hash(a),
+            stats,
+        })
+    }
+
+    fn one_time_policy(&self) -> MergePolicy {
+        if let Some(p) = self.cfg.merge_policy {
+            return p;
+        }
+        if self.cfg.kernel == Some(KernelMode::RowRow) {
+            return MergePolicy::None;
+        }
+        MergePolicy::Exact {
+            max_width: self.cfg.max_supernode,
+        }
+    }
+
+    /// Numeric factorization (with supernode diagonal pivoting).
+    pub fn factor(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
+        let t0 = Instant::now();
+        let pa = an.remap_values(a)?;
+        let mut fac = LuFactors::alloc(&an.sym);
+        let threads = effective_threads(self.cfg.threads);
+        let perturbed = factor_parallel(
+            &pa,
+            &an.sym,
+            an.mode,
+            &self.cfg.pivot,
+            &mut fac,
+            false,
+            self.gemm.as_ref(),
+            threads,
+        );
+        let t = t0.elapsed().as_secs_f64();
+        Ok(Factorization {
+            fac,
+            stats: FactorStats {
+                t_factor: t,
+                perturbed,
+                gflops: an.sym.flops / t.max(1e-12) / 1e9,
+                mode: an.mode,
+                threads,
+                refactor: false,
+            },
+        })
+    }
+
+    /// Refactorization: same pattern, new values, stored pivot order, no
+    /// pivot search — the repeated-solve fast path.
+    pub fn refactor(&self, a: &Csr, an: &Analysis, f: &mut Factorization) -> Result<()> {
+        let t0 = Instant::now();
+        let pa = an.remap_values(a)?;
+        let threads = effective_threads(self.cfg.threads);
+        let perturbed = factor_parallel(
+            &pa,
+            &an.sym,
+            an.mode,
+            &self.cfg.pivot,
+            &mut f.fac,
+            true,
+            self.gemm.as_ref(),
+            threads,
+        );
+        let t = t0.elapsed().as_secs_f64();
+        f.stats = FactorStats {
+            t_factor: t,
+            perturbed,
+            gflops: an.sym.flops / t.max(1e-12) / 1e9,
+            mode: an.mode,
+            threads,
+            refactor: true,
+        };
+        Ok(())
+    }
+
+    /// Solve `A x = b` with the factorization; iterative refinement runs
+    /// automatically when pivots were perturbed (or the residual exceeds
+    /// the configured tolerance).
+    pub fn solve(&self, a: &Csr, an: &Analysis, f: &Factorization, b: &[f64]) -> Result<Vec<f64>> {
+        Ok(self.solve_with_stats(a, an, f, b)?.0)
+    }
+
+    /// [`Solver::solve`] with phase statistics.
+    pub fn solve_with_stats(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        b: &[f64],
+    ) -> Result<(Vec<f64>, SolveStats)> {
+        if b.len() != a.n {
+            return Err(Error::Invalid("rhs length mismatch".into()));
+        }
+        let t0 = Instant::now();
+        let threads = effective_threads(self.cfg.threads);
+        let mut x = self.substitute(an, f, b, threads);
+        let mut residual = a.relative_residual(&x, b);
+        let mut iters = 0usize;
+
+        // iterative refinement (paper: automatic after pivot perturbation)
+        if f.fac.perturbed > 0 || residual > self.cfg.refine_tol {
+            let mut r = vec![0.0; a.n];
+            while iters < self.cfg.refine_max_iter && residual > self.cfg.refine_target {
+                a.matvec(&x, &mut r);
+                for (ri, bi) in r.iter_mut().zip(b) {
+                    *ri = bi - *ri;
+                }
+                let d = self.substitute(an, f, &r, threads);
+                let mut x2 = x.clone();
+                for (xi, di) in x2.iter_mut().zip(&d) {
+                    *xi += di;
+                }
+                let res2 = a.relative_residual(&x2, b);
+                iters += 1;
+                if res2 < residual {
+                    x = x2;
+                    residual = res2;
+                } else {
+                    break;
+                }
+            }
+        }
+        let t = t0.elapsed().as_secs_f64();
+        Ok((
+            x,
+            SolveStats {
+                t_solve: t,
+                residual,
+                refine_iters: iters,
+                threads,
+            },
+        ))
+    }
+
+    /// One triangular solve round: scale/permute b, forward, backward,
+    /// unpermute/unscale x.
+    fn substitute(&self, an: &Analysis, f: &Factorization, b: &[f64], threads: usize) -> Vec<f64> {
+        let n = b.len();
+        // y[i] = dr[row] * b[row], row = row_perm(map ∘ pivot)
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let pre = f.fac.pivot_perm[i] as usize; // analyzed-row
+            let orig = an.row_perm.map[pre];
+            y[i] = an.dr[orig] * b[orig];
+        }
+        if threads > 1 && n > self.cfg.parallel_solve_min_n {
+            forward_parallel(&an.sym, &f.fac, &mut y, threads);
+            backward_parallel(&an.sym, &f.fac, &mut y, threads);
+        } else {
+            forward(&an.sym, &f.fac, &mut y);
+            backward(&an.sym, &f.fac, &mut y);
+        }
+        // x[orig col] = dc[orig col] * y[new col]
+        let mut x = vec![0.0; n];
+        for j in 0..n {
+            let orig = an.col_perm.map[j];
+            x[orig] = an.dc[orig] * y[j];
+        }
+        x
+    }
+}
+
+/// Build the permuted+scaled matrix and the value remap tables.
+fn build_permuted(
+    a: &Csr,
+    row_perm: &Perm,
+    col_perm: &Perm,
+    dr: &[f64],
+    dc: &[f64],
+) -> (Csr, Vec<usize>, Vec<f64>) {
+    let n = a.n;
+    let mut indptr = vec![0usize; n + 1];
+    for i in 0..n {
+        let src = row_perm.map[i];
+        indptr[i + 1] = indptr[i] + (a.indptr[src + 1] - a.indptr[src]);
+    }
+    let nnz = a.nnz();
+    let mut indices = vec![0usize; nnz];
+    let mut vals = vec![0.0; nnz];
+    let mut src_idx = vec![0usize; nnz];
+    let mut scale = vec![0.0; nnz];
+    let mut buf: Vec<(usize, usize)> = Vec::new();
+    for i in 0..n {
+        let src = row_perm.map[i];
+        buf.clear();
+        for k in a.indptr[src]..a.indptr[src + 1] {
+            buf.push((col_perm.inv[a.indices[k]], k));
+        }
+        buf.sort_unstable_by_key(|&(c, _)| c);
+        let base = indptr[i];
+        for (off, &(c, k)) in buf.iter().enumerate() {
+            indices[base + off] = c;
+            let s = dr[src] * dc[a.indices[k]];
+            scale[base + off] = s;
+            src_idx[base + off] = k;
+            vals[base + off] = a.vals[k] * s;
+        }
+    }
+    (
+        Csr {
+            n,
+            indptr,
+            indices,
+            vals,
+        },
+        src_idx,
+        scale,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::testutil::{max_abs_diff, Prng};
+
+    fn solve_roundtrip(a: &Csr, cfg: SolverConfig, tol: f64) {
+        let solver = Solver::new(cfg);
+        let an = solver.analyze(a).unwrap();
+        let f = solver.factor(a, &an).unwrap();
+        let xt: Vec<f64> = (0..a.n).map(|i| ((i * 13) % 11) as f64 - 5.0).collect();
+        let mut b = vec![0.0; a.n];
+        a.matvec(&xt, &mut b);
+        let (x, st) = solver.solve_with_stats(a, &an, &f, &b).unwrap();
+        assert!(
+            max_abs_diff(&x, &xt) < tol,
+            "err {} residual {}",
+            max_abs_diff(&x, &xt),
+            st.residual
+        );
+    }
+
+    #[test]
+    fn end_to_end_grid() {
+        solve_roundtrip(&gen::grid2d(15, 15), SolverConfig::default(), 1e-8);
+    }
+
+    #[test]
+    fn end_to_end_circuit() {
+        solve_roundtrip(&gen::circuit(500, 3), SolverConfig::default(), 1e-7);
+    }
+
+    #[test]
+    fn end_to_end_kkt_requires_static_pivoting() {
+        // saddle-point: tiny (2,2) block — fails without MC64, passes with
+        solve_roundtrip(&gen::kkt(300, 100, 5), SolverConfig::default(), 1e-6);
+    }
+
+    #[test]
+    fn end_to_end_all_kernel_overrides() {
+        let a = gen::power_network(300, 7);
+        for mode in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
+            let cfg = SolverConfig {
+                kernel: Some(mode),
+                ..SolverConfig::default()
+            };
+            solve_roundtrip(&a, cfg, 1e-7);
+        }
+    }
+
+    #[test]
+    fn repeated_mode_refactor_loop() {
+        let mut rng = Prng::new(4);
+        let a = gen::grid2d(12, 12);
+        let cfg = SolverConfig {
+            repeated: true,
+            ..SolverConfig::default()
+        };
+        let solver = Solver::new(cfg);
+        let an = solver.analyze(&a).unwrap();
+        let mut f = solver.factor(&a, &an).unwrap();
+        for _ in 0..3 {
+            let mut b2 = a.clone();
+            for v in &mut b2.vals {
+                *v *= rng.range_f64(0.8, 1.2);
+            }
+            solver.refactor(&b2, &an, &mut f).unwrap();
+            let xt: Vec<f64> = (0..a.n).map(|i| (i % 5) as f64).collect();
+            let mut b = vec![0.0; a.n];
+            b2.matvec(&xt, &mut b);
+            let x = solver.solve(&b2, &an, &f, &b).unwrap();
+            assert!(max_abs_diff(&x, &xt) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn rejects_pattern_change_on_refactor() {
+        let a = gen::grid2d(5, 5);
+        let solver = Solver::new(SolverConfig::default());
+        let an = solver.analyze(&a).unwrap();
+        let b = gen::grid2d(5, 6); // different pattern
+        assert!(solver.factor(&b, &an).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_rhs_and_empty() {
+        let a = gen::grid2d(4, 4);
+        let solver = Solver::new(SolverConfig::default());
+        let an = solver.analyze(&a).unwrap();
+        let f = solver.factor(&a, &an).unwrap();
+        assert!(solver.solve(&a, &an, &f, &[1.0]).is_err());
+        let empty = Csr {
+            n: 0,
+            indptr: vec![0],
+            indices: vec![],
+            vals: vec![],
+        };
+        assert!(solver.analyze(&empty).is_err());
+    }
+
+    #[test]
+    fn multithreaded_config_agrees_with_sequential() {
+        let a = gen::grid2d(14, 14);
+        let xt: Vec<f64> = (0..a.n).map(|i| (i % 3) as f64 + 0.5).collect();
+        let mut b = vec![0.0; a.n];
+        a.matvec(&xt, &mut b);
+        let s1 = Solver::new(SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        });
+        let s4 = Solver::new(SolverConfig {
+            threads: 4,
+            ..SolverConfig::default()
+        });
+        let an1 = s1.analyze(&a).unwrap();
+        let an4 = s4.analyze(&a).unwrap();
+        let f1 = s1.factor(&a, &an1).unwrap();
+        let f4 = s4.factor(&a, &an4).unwrap();
+        let x1 = s1.solve(&a, &an1, &f1, &b).unwrap();
+        let x4 = s4.solve(&a, &an4, &f4, &b).unwrap();
+        assert_eq!(x1, x4, "threaded result must be bit-identical");
+    }
+}

@@ -1,0 +1,68 @@
+//! Per-phase statistics — what the paper's Figs. 4–11 plot.
+
+use crate::numeric::select::KernelMode;
+
+/// Preprocessing-phase statistics ([`crate::coordinator::Solver::analyze`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SymbolicStats {
+    /// Dimension.
+    pub n: usize,
+    /// Input nonzeros.
+    pub nnz: usize,
+    /// Static pivoting (MC64) seconds.
+    pub t_match: f64,
+    /// Fill-reducing ordering seconds.
+    pub t_order: f64,
+    /// Symbolic factorization + supernode detection + selection seconds.
+    pub t_symbolic: f64,
+    /// Whole preprocessing seconds.
+    pub t_total: f64,
+    /// Stored L+U entries (including supernode panel padding).
+    pub lu_entries: usize,
+    /// `lu_entries / nnz(A)`.
+    pub fill_ratio: f64,
+    /// Estimated factorization flops.
+    pub flops: f64,
+    /// Fraction of rows in supernodes.
+    pub supernode_coverage: f64,
+    /// Mean supernode width.
+    pub avg_super_width: f64,
+    /// Node count (rows + supernodes).
+    pub nodes: usize,
+    /// DAG levels.
+    pub levels: usize,
+    /// Levels run in bulk mode.
+    pub bulk_levels: usize,
+    /// Selected kernel.
+    pub mode: KernelMode,
+}
+
+/// Numeric-factorization statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct FactorStats {
+    /// Wall seconds.
+    pub t_factor: f64,
+    /// Perturbed pivots.
+    pub perturbed: usize,
+    /// Achieved GFLOP/s against the symbolic flop estimate.
+    pub gflops: f64,
+    /// Kernel used.
+    pub mode: KernelMode,
+    /// Threads used.
+    pub threads: usize,
+    /// Whether this was the refactorization fast path.
+    pub refactor: bool,
+}
+
+/// Solve-phase statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveStats {
+    /// Wall seconds (substitution + refinement).
+    pub t_solve: f64,
+    /// Final relative residual `‖Ax−b‖₁ / ‖b‖₁`.
+    pub residual: f64,
+    /// Iterative-refinement rounds executed.
+    pub refine_iters: usize,
+    /// Threads used.
+    pub threads: usize,
+}

@@ -1,0 +1,6 @@
+//! `hylu` CLI — leader entrypoint. See [`hylu::cli`] for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(hylu::cli::run(&argv));
+}

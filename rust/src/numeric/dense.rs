@@ -1,0 +1,349 @@
+//! Dense microkernels for the supernode panels — the CPU-native analogue of
+//! the MKL BLAS calls in the paper (the Pallas/XLA path in
+//! [`crate::runtime`] is the TPU-shaped alternative; see DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! All matrices are row-major with explicit leading dimensions (panels are
+//! strided). Kernels are written so the hot loops vectorize: fixed 4-wide
+//! row blocking on GEMM with contiguous inner axpy loops.
+
+/// `C[m×n] -= A[m×k] · B[k×n]`, row-major with leading dimensions
+/// `lda/ldb/ldc`. The sup-sup update's level-3 core.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_sub(
+    c: &mut [f64],
+    ldc: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(c.len() >= (m - 1) * ldc + n);
+    debug_assert!(a.len() >= (m - 1) * lda + k);
+    debug_assert!(b.len() >= (k - 1) * ldb + n);
+    // Safety: bounds established by the debug_asserts above (callers pass
+    // panel-backed slices with exact leading dimensions).
+    unsafe { gemm_sub_raw(c.as_mut_ptr(), ldc, a.as_ptr(), lda, b.as_ptr(), ldb, m, k, n) }
+}
+
+/// Raw-pointer core of [`gemm_sub`]: register-tiled 4x16 microkernel. A
+/// 4-row x 16-col C tile lives in registers (8 zmm accumulators on AVX-512)
+/// across the whole k loop; the j chunk is OUTER so each (k x 16) B sliver
+/// stays in L1 across row blocks. Also used by the sup-sup kernel's
+/// contiguous fast path, where A and C are disjoint column ranges of the
+/// same panel (element-disjoint, so raw pointers, not slices).
+///
+/// Safety: `cp/ap/bp` must be valid for the strided `m x n`, `m x k`,
+/// `k x n` accesses, and the C range must not overlap A or B element-wise.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_sub_raw(
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    {
+        // j-chunk OUTER so each (k x 16) B sliver stays in L1 across all
+        // row blocks; C tiles are touched exactly once.
+        let mut j = 0;
+        while j + 16 <= n {
+            let mut i = 0;
+            while i + 4 <= m {
+                let a0 = ap.add(i * lda);
+                let a1 = ap.add((i + 1) * lda);
+                let a2 = ap.add((i + 2) * lda);
+                let a3 = ap.add((i + 3) * lda);
+                let c0 = cp.add(i * ldc + j);
+                let c1 = cp.add((i + 1) * ldc + j);
+                let c2 = cp.add((i + 2) * ldc + j);
+                let c3 = cp.add((i + 3) * ldc + j);
+                let mut t0 = [0.0f64; 16];
+                let mut t1 = [0.0f64; 16];
+                let mut t2 = [0.0f64; 16];
+                let mut t3 = [0.0f64; 16];
+                for q in 0..16 {
+                    t0[q] = *c0.add(q);
+                    t1[q] = *c1.add(q);
+                    t2[q] = *c2.add(q);
+                    t3[q] = *c3.add(q);
+                }
+                for p in 0..k {
+                    let f0 = *a0.add(p);
+                    let f1 = *a1.add(p);
+                    let f2 = *a2.add(p);
+                    let f3 = *a3.add(p);
+                    let brow = bp.add(p * ldb + j);
+                    for q in 0..16 {
+                        let bv = *brow.add(q);
+                        t0[q] -= f0 * bv;
+                        t1[q] -= f1 * bv;
+                        t2[q] -= f2 * bv;
+                        t3[q] -= f3 * bv;
+                    }
+                }
+                for q in 0..16 {
+                    *c0.add(q) = t0[q];
+                    *c1.add(q) = t1[q];
+                    *c2.add(q) = t2[q];
+                    *c3.add(q) = t3[q];
+                }
+                i += 4;
+            }
+            // row remainder (m % 4) for this j chunk
+            while i < m {
+                let arow = ap.add(i * lda);
+                let crow = cp.add(i * ldc + j);
+                let mut t = [0.0f64; 16];
+                for q in 0..16 {
+                    t[q] = *crow.add(q);
+                }
+                for p in 0..k {
+                    let f = *arow.add(p);
+                    let brow = bp.add(p * ldb + j);
+                    for q in 0..16 {
+                        t[q] -= f * *brow.add(q);
+                    }
+                }
+                for q in 0..16 {
+                    *crow.add(q) = t[q];
+                }
+                i += 1;
+            }
+            j += 16;
+        }
+        if j < n {
+            // column remainder: simple row loop with zero-skip
+            for i in 0..m {
+                let arow = ap.add(i * lda);
+                let crow = cp.add(i * ldc);
+                for p in 0..k {
+                    let f = *arow.add(p);
+                    if f == 0.0 {
+                        continue; // padded L columns are exactly zero
+                    }
+                    let brow = bp.add(p * ldb);
+                    for jj in j..n {
+                        *crow.add(jj) -= f * *brow.add(jj);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// In-place right triangular solve `X · U = B` where `U` is the `len×len`
+/// upper-triangular (non-unit) diagonal sub-block of a source supernode
+/// panel, and `B`/`X` occupy `len` *columns* of the target panel starting at
+/// `x_off`. Column-forward substitution; this is the TRSM half of the
+/// sup-sup kernel.
+///
+/// `u` points at the source panel; row `r` of the sub-block lives at
+/// `u[(u_row0 + r) * ldu + u_col0 + r .. ]` (upper triangle only read).
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_right_upper(
+    x: &mut [f64],
+    ldx: usize,
+    x_off: usize,
+    m: usize,
+    u: &[f64],
+    ldu: usize,
+    u_row0: usize,
+    u_col0: usize,
+    len: usize,
+    scratch: &mut Vec<f64>,
+) {
+    if len >= 48 && m >= 8 {
+        // Large triangles: gather columns into a contiguous column-major
+        // scratch so the reduction streams linearly instead of striding by
+        // ldu per element. (Small triangles stay in L1 either way and the
+        // gather costs more than it saves — measured, EXPERIMENTS.md §Perf.)
+        scratch.clear();
+        scratch.resize(len * len, 0.0);
+        let ucols: &mut [f64] = scratch;
+        for cc in 0..len {
+            for pp in 0..=cc {
+                ucols[cc * len + pp] = u[(u_row0 + pp) * ldu + u_col0 + cc];
+            }
+        }
+        for cc in 0..len {
+            let col = &ucols[cc * len..cc * len + cc];
+            let inv = 1.0 / ucols[cc * len + cc];
+            for r in 0..m {
+                let row = &mut x[r * ldx + x_off..r * ldx + x_off + len];
+                let s = row[cc] - dot(&row[..cc], col);
+                row[cc] = s * inv;
+            }
+        }
+        return;
+    }
+    for cc in 0..len {
+        let ucc = u[(u_row0 + cc) * ldu + u_col0 + cc];
+        let inv = 1.0 / ucc;
+        // X[:, cc] = (B[:, cc] - X[:, 0..cc] * U[0..cc, cc]) / U[cc, cc]
+        for r in 0..m {
+            let row = &mut x[r * ldx + x_off..r * ldx + x_off + len];
+            let mut s = row[cc];
+            for pp in 0..cc {
+                s -= row[pp] * u[(u_row0 + pp) * ldu + u_col0 + cc];
+            }
+            row[cc] = s * inv;
+        }
+    }
+}
+
+/// `y[0..n] -= f * x[0..n]` (axpy with negative sign).
+#[inline]
+pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+    debug_assert!(y.len() >= x.len());
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy -= f * xx;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let mut i = 0;
+    let n = a.len().min(b.len());
+    while i + 4 <= n {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    while i < n {
+        s0 += a[i] * b[i];
+        i += 1;
+    }
+    s0 + s1 + s2 + s3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prng;
+
+    fn naive_gemm_sub(c: &mut [f64], a: &[f64], b: &[f64], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] -= s;
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Prng::new(3);
+        for (m, k, n) in [(1, 1, 1), (3, 2, 5), (4, 4, 4), (7, 5, 9), (12, 8, 16)] {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let mut c1: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut c2 = c1.clone();
+            gemm_sub(&mut c1, n, &a, k, &b, n, m, k, n);
+            naive_gemm_sub(&mut c2, &a, &b, m, k, n);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_respects_leading_dimensions() {
+        let mut rng = Prng::new(4);
+        let (m, k, n) = (3usize, 2usize, 4usize);
+        let (lda, ldb, ldc) = (5usize, 7usize, 6usize);
+        let a: Vec<f64> = (0..m * lda).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * ldb).map(|_| rng.normal()).collect();
+        let mut c: Vec<f64> = (0..m * ldc).map(|_| rng.normal()).collect();
+        let c0 = c.clone();
+        gemm_sub(&mut c, ldc, &a, lda, &b, ldb, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[i * lda + p] * b[p * ldb + j];
+                }
+                assert!((c[i * ldc + j] - (c0[i * ldc + j] - s)).abs() < 1e-12);
+            }
+            // untouched beyond n
+            for j in n..ldc {
+                assert_eq!(c[i * ldc + j], c0[i * ldc + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_solves_upper_system() {
+        let mut rng = Prng::new(5);
+        let len = 5usize;
+        let m = 3usize;
+        let ldu = 8usize;
+        // source "panel": upper triangle at (row0=1, col0=2)
+        let mut u = vec![0.0; (len + 1) * ldu];
+        for r in 0..len {
+            for c in r..len {
+                u[(1 + r) * ldu + 2 + c] = if r == c {
+                    2.0 + rng.uniform()
+                } else {
+                    rng.normal() * 0.3
+                };
+            }
+        }
+        // target panel: X region at offset 1, width len, ldx = len + 3
+        let ldx = len + 3;
+        let mut x = vec![0.0; m * ldx];
+        let xs: Vec<f64> = (0..m * len).map(|_| rng.normal()).collect(); // true solution
+        // B = Xs * U
+        for r in 0..m {
+            for c in 0..len {
+                let mut s = 0.0;
+                for p in 0..=c {
+                    s += xs[r * len + p] * u[(1 + p) * ldu + 2 + c];
+                }
+                x[r * ldx + 1 + c] = s;
+            }
+        }
+        trsm_right_upper(&mut x, ldx, 1, m, &u, ldu, 1, 2, len, &mut Vec::new());
+        for r in 0..m {
+            for c in 0..len {
+                assert!(
+                    (x[r * ldx + 1 + c] - xs[r * len + c]).abs() < 1e-10,
+                    "({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 2.0, 2.0, 2.0];
+        assert_eq!(dot(&a, &b), 30.0);
+        let mut y = [10.0, 10.0, 10.0];
+        axpy_sub(&mut y, &[1.0, 2.0, 3.0], 2.0);
+        assert_eq!(y, [8.0, 6.0, 4.0]);
+    }
+}

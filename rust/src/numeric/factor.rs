@@ -1,0 +1,760 @@
+//! The hybrid numeric kernels and the sequential factorization driver.
+//!
+//! One engine, three kernels (paper Fig. 1):
+//! - **row-row**: scalar up-looking Gilbert–Peierls; sources and target are
+//!   sparse rows. No BLAS-like calls at all.
+//! - **sup-row**: target is a row (possibly of a supernode panel being
+//!   filled row-wise); supernode sources are applied with dense panel rows
+//!   (TRSV + GEMV shape, level-2).
+//! - **sup-sup**: target is a whole supernode panel; supernode sources are
+//!   applied with TRSM + GEMM (level-3), and the panel finishes with a
+//!   partially-pivoted dense internal factorization (supernode diagonal
+//!   pivoting + perturbation).
+//!
+//! Refactorization (`refactor = true`) replays the stored pivot order with
+//! no search — the paper's repeated-solve fast path.
+
+use crate::numeric::dense;
+use crate::numeric::select::KernelMode;
+use crate::numeric::{LuFactors, PivotConfig, SharedFactors, Workspace};
+use crate::sparse::csr::Csr;
+use crate::symbolic::Symbolic;
+
+/// Pluggable dense-GEMM backend: the sup-sup kernel calls this for its
+/// level-3 update; [`NativeGemm`] uses the in-crate microkernel, and the
+/// XLA/PJRT runtime provides an AOT-Pallas-artifact implementation
+/// ([`crate::runtime`]).
+pub trait GemmBackend: Sync {
+    /// `c[m×n] (ldc=n, zeroed) -= a[m×k] (lda) · b[k×n] (ldb)`. Return
+    /// `false` to fall back to the native microkernel.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_sub(
+        &self,
+        c: &mut [f64],
+        a: &[f64],
+        lda: usize,
+        b: &[f64],
+        ldb: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> bool;
+}
+
+/// Default backend: the in-crate register-blocked microkernel.
+pub struct NativeGemm;
+
+impl GemmBackend for NativeGemm {
+    fn gemm_sub(
+        &self,
+        _c: &mut [f64],
+        _a: &[f64],
+        _lda: usize,
+        _b: &[f64],
+        _ldb: usize,
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> bool {
+        false // always use the native path inline (no copy indirection)
+    }
+}
+
+/// Factor (or refactor) `a` (already permuted + scaled) into `fac`.
+/// Returns the number of perturbed pivots.
+pub fn factor(
+    a: &Csr,
+    sym: &Symbolic,
+    mode: KernelMode,
+    cfg: &PivotConfig,
+    fac: &mut LuFactors,
+    refactor: bool,
+    gemm: &dyn GemmBackend,
+) -> usize {
+    assert_eq!(a.n, sym.n);
+    if !refactor {
+        for (i, p) in fac.pivot_perm.iter_mut().enumerate() {
+            *p = i as u32;
+        }
+    }
+    let eps_abs = if cfg.perturb {
+        cfg.perturb_eps * a.max_abs().max(1e-300)
+    } else {
+        0.0
+    };
+    let sf = SharedFactors::new(fac);
+    let mut ws = Workspace::new(sym.n);
+    for id in 0..sym.nodes.len() {
+        // Safety: sequential — every source node is complete in program
+        // order; each node writes only its own storage.
+        unsafe { factor_node(id, a, sym, &sf, &mut ws, mode, cfg, eps_abs, refactor, gemm) };
+    }
+    let perturbed = sf.perturbed.load(std::sync::atomic::Ordering::Relaxed);
+    fac.perturbed = perturbed;
+    perturbed
+}
+
+/// Factor one node. Safety: caller guarantees all source nodes (this node's
+/// groups) are complete and no other thread touches this node's storage.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn factor_node(
+    id: usize,
+    a: &Csr,
+    sym: &Symbolic,
+    sf: &SharedFactors,
+    ws: &mut Workspace,
+    mode: KernelMode,
+    cfg: &PivotConfig,
+    eps_abs: f64,
+    refactor: bool,
+    gemm: &dyn GemmBackend,
+) {
+    let nd = &sym.nodes[id];
+    if nd.is_super && mode == KernelMode::SupSup {
+        factor_panel(id, a, sym, sf, ws, cfg, eps_abs, refactor, gemm);
+    } else {
+        factor_rows(id, a, sym, sf, ws, eps_abs);
+    }
+}
+
+/// Perturb a tiny pivot; returns (pivot, perturbed?).
+#[inline]
+fn perturb_pivot(p: f64, eps_abs: f64) -> (f64, bool) {
+    if eps_abs > 0.0 && p.abs() < eps_abs {
+        let s = if p < 0.0 { -1.0 } else { 1.0 };
+        (s * eps_abs, true)
+    } else {
+        (p, false)
+    }
+}
+
+/// The sup-sup kernel: whole-panel target.
+#[allow(clippy::too_many_arguments)]
+unsafe fn factor_panel(
+    id: usize,
+    a: &Csr,
+    sym: &Symbolic,
+    sf: &SharedFactors,
+    ws: &mut Workspace,
+    cfg: &PivotConfig,
+    eps_abs: f64,
+    refactor: bool,
+    gemm: &dyn GemmBackend,
+) {
+    let nd = &sym.nodes[id];
+    let first = nd.first as usize;
+    let w = nd.width as usize;
+    let nl = nd.nl();
+    let nu = nd.nu();
+    let stride = nl + w + nu;
+    let lcols = &sym.lcols[nd.l_start..nd.l_end];
+    let ucols = &sym.ucols[nd.u_start..nd.u_end];
+    let panel = sf.panel_mut(id);
+    panel.fill(0.0);
+
+    // column map
+    for (c, &j) in lcols.iter().enumerate() {
+        ws.colmap[j as usize] = c as i32;
+    }
+    for kk in 0..w {
+        ws.colmap[first + kk] = (nl + kk) as i32;
+    }
+    for (c, &j) in ucols.iter().enumerate() {
+        ws.colmap[j as usize] = (nl + w + c) as i32;
+    }
+
+    // scatter A rows (refactor replays the recorded pivot order)
+    for r in 0..w {
+        let src_row = if refactor {
+            *sf.pivot_perm.add(first + r) as usize
+        } else {
+            first + r
+        };
+        let base = r * stride;
+        for (k, &j) in a.row_indices(src_row).iter().enumerate() {
+            let pc = ws.colmap[j];
+            debug_assert!(pc >= 0, "A entry ({src_row},{j}) outside pattern");
+            panel[base + pc as usize] = a.row_vals(src_row)[k];
+        }
+    }
+
+    // updates from previous nodes, ascending column order
+    for g in &sym.groups[nd.g_start..nd.g_end] {
+        let src = &sym.nodes[g.src as usize];
+        let len = g.len as usize;
+        let goff = g.offset as usize;
+        if src.is_super {
+            let s_nl = src.nl();
+            let s_w = src.width as usize;
+            let s_nu = src.nu();
+            let sstride = s_nl + s_w + s_nu;
+            let k0 = lcols[goff] as usize - src.first as usize;
+            debug_assert_eq!(k0 + len, s_w, "group must be a tail segment");
+            let spanel = sf.panel_ref(g.src as usize);
+            // TRSM: finalize L block (panel cols goff..goff+len)
+            dense::trsm_right_upper(
+                panel, stride, goff, w, spanel, sstride, k0, s_nl + k0, len, &mut ws.tbuf,
+            );
+            // GEMM: C = X · U_tail, then scatter-subtract
+            if s_nu > 0 {
+                let sucols = &sym.ucols[src.u_start..src.u_end];
+                // Fast path: both column lists are sorted, so the map is
+                // monotone; if it is also *contiguous* the GEMM can run
+                // directly into the target panel — no cbuf, no scatter.
+                let pc0 = ws.colmap[sucols[0] as usize];
+                let pc_last = ws.colmap[sucols[s_nu - 1] as usize];
+                if pc0 >= 0 && (pc_last - pc0) as usize == s_nu - 1 {
+                    // Safety: C columns [pc0, pc0+s_nu) and A columns
+                    // [goff, goff+len) are disjoint ranges of the same
+                    // panel rows (goff+len <= nl <= pc0), so the raw-core
+                    // accesses never alias element-wise.
+                    dense::gemm_sub_raw(
+                        panel.as_mut_ptr().add(pc0 as usize),
+                        stride,
+                        panel.as_ptr().add(goff),
+                        stride,
+                        spanel.as_ptr().add(k0 * sstride + s_nl + s_w),
+                        sstride,
+                        w,
+                        len,
+                        s_nu,
+                    );
+                    continue;
+                }
+                ws.cbuf.clear();
+                ws.cbuf.resize(w * s_nu, 0.0);
+                // X lives in panel cols [goff, goff+len) (strided)
+                let did = gemm.gemm_sub(
+                    &mut ws.cbuf,
+                    &panel[goff..],
+                    stride,
+                    &spanel[k0 * sstride + s_nl + s_w..],
+                    sstride,
+                    w,
+                    len,
+                    s_nu,
+                );
+                if !did {
+                    dense::gemm_sub(
+                        &mut ws.cbuf,
+                        s_nu,
+                        &panel[goff..],
+                        stride,
+                        &spanel[k0 * sstride + s_nl + s_w..],
+                        sstride,
+                        w,
+                        len,
+                        s_nu,
+                    );
+                }
+                // cbuf now holds -X·U; add into panel through the map
+                let sucols = &sym.ucols[src.u_start..src.u_end];
+                ws.map_idx.clear();
+                ws.map_idx
+                    .extend(sucols.iter().map(|&j| ws.colmap[j as usize]));
+                for r in 0..w {
+                    let base = r * stride;
+                    let crow = &ws.cbuf[r * s_nu..(r + 1) * s_nu];
+                    for (idx, &pc) in ws.map_idx.iter().enumerate() {
+                        if pc >= 0 {
+                            panel[base + pc as usize] += crow[idx];
+                        } else {
+                            debug_assert!(
+                                crow[idx].abs() < 1e-30,
+                                "nonzero update outside pattern"
+                            );
+                        }
+                    }
+                }
+            }
+        } else {
+            // standalone-row source: scale column then rank-1 update
+            let k = lcols[goff] as usize;
+            debug_assert_eq!(len, 1);
+            let d = *sf.diag.add(k);
+            let sucols = &sym.ucols[src.u_start..src.u_end];
+            let suvals =
+                std::slice::from_raw_parts(sf.uvals.add(src.u_start), src.u_end - src.u_start);
+            for r in 0..w {
+                let base = r * stride;
+                let m = panel[base + goff] / d;
+                panel[base + goff] = m;
+                if m != 0.0 {
+                    for (idx, &j) in sucols.iter().enumerate() {
+                        let pc = ws.colmap[j as usize];
+                        debug_assert!(pc >= 0);
+                        panel[base + pc as usize] -= m * suvals[idx];
+                    }
+                }
+            }
+        }
+    }
+
+    // internal factorization of the diagonal block + trailing U tail
+    let mut perturbed = 0usize;
+    for c in 0..w {
+        let pcol = nl + c;
+        if !refactor && cfg.supernode_pivoting {
+            // supernode diagonal pivoting: max |.| in column c, rows c..w
+            let mut best = c;
+            let mut bestv = panel[c * stride + pcol].abs();
+            for r in c + 1..w {
+                let v = panel[r * stride + pcol].abs();
+                if v > bestv {
+                    bestv = v;
+                    best = r;
+                }
+            }
+            if best != c {
+                // swap full panel rows + record in pivot_perm
+                for jj in 0..stride {
+                    panel.swap(c * stride + jj, best * stride + jj);
+                }
+                let pa = sf.pivot_perm.add(first + c);
+                let pb = sf.pivot_perm.add(first + best);
+                std::ptr::swap(pa, pb);
+            }
+        }
+        let (piv, pert) = perturb_pivot(panel[c * stride + pcol], eps_abs);
+        panel[c * stride + pcol] = piv;
+        perturbed += pert as usize;
+        let inv = 1.0 / piv;
+        let (head, tail) = panel.split_at_mut((c + 1) * stride);
+        let crow = &head[c * stride + pcol + 1..c * stride + stride];
+        for r in c + 1..w {
+            let base = (r - c - 1) * stride;
+            let f = tail[base + pcol] * inv;
+            tail[base + pcol] = f;
+            if f != 0.0 {
+                dense::axpy_sub(&mut tail[base + pcol + 1..base + stride], crow, f);
+            }
+        }
+        // keep diag[] mirror for row-kernel sources reading supernode rows
+        *sf.diag.add(first + c) = piv;
+    }
+    sf.add_perturbed(perturbed);
+
+    // reset colmap
+    for &j in lcols {
+        ws.colmap[j as usize] = -1;
+    }
+    for kk in 0..w {
+        ws.colmap[first + kk] = -1;
+    }
+    for &j in ucols {
+        ws.colmap[j as usize] = -1;
+    }
+}
+
+/// The row-row / sup-row kernels: row-at-a-time target with a dense
+/// accumulator. Handles standalone rows (sparse storage) and supernode
+/// panels filled row-wise (sup-row mode).
+unsafe fn factor_rows(
+    id: usize,
+    a: &Csr,
+    sym: &Symbolic,
+    sf: &SharedFactors,
+    ws: &mut Workspace,
+    eps_abs: f64,
+) {
+    let nd = &sym.nodes[id];
+    let first = nd.first as usize;
+    let w = nd.width as usize;
+    let nl = nd.nl();
+    let nu = nd.nu();
+    let stride = nl + w + nu;
+    let lcols = &sym.lcols[nd.l_start..nd.l_end];
+    let ucols = &sym.ucols[nd.u_start..nd.u_end];
+    if nd.is_super {
+        sf.panel_mut(id).fill(0.0);
+    }
+    let x = &mut ws.x;
+    let mut perturbed = 0usize;
+
+    for r in 0..w {
+        let i = first + r;
+        // scatter
+        for (k, &j) in a.row_indices(i).iter().enumerate() {
+            x[j] = a.row_vals(i)[k];
+        }
+        // updates from earlier nodes (ascending column order)
+        for g in &sym.groups[nd.g_start..nd.g_end] {
+            let src = &sym.nodes[g.src as usize];
+            let goff = g.offset as usize;
+            let len = g.len as usize;
+            if src.is_super {
+                let s_first = src.first as usize;
+                let s_nl = src.nl();
+                let s_w = src.width as usize;
+                let sstride = s_nl + s_w + src.nu();
+                let spanel = sf.panel_ref(g.src as usize);
+                let sucols = &sym.ucols[src.u_start..src.u_end];
+                for cc in 0..len {
+                    let k = lcols[goff + cc] as usize;
+                    let klocal = k - s_first;
+                    let srow = &spanel[klocal * sstride..(klocal + 1) * sstride];
+                    let m = x[k] / srow[s_nl + klocal];
+                    x[k] = m;
+                    if m != 0.0 {
+                        // sup-row: dense panel row drives the update
+                        for jj in klocal + 1..s_w {
+                            x[s_first + jj] -= m * srow[s_nl + jj];
+                        }
+                        let utail = &srow[s_nl + s_w..];
+                        for (idx, &j) in sucols.iter().enumerate() {
+                            x[j as usize] -= m * utail[idx];
+                        }
+                    }
+                }
+            } else {
+                debug_assert_eq!(len, 1);
+                let k = lcols[goff] as usize;
+                let m = x[k] / *sf.diag.add(k);
+                x[k] = m;
+                if m != 0.0 {
+                    let sucols = &sym.ucols[src.u_start..src.u_end];
+                    let suvals = std::slice::from_raw_parts(
+                        sf.uvals.add(src.u_start),
+                        src.u_end - src.u_start,
+                    );
+                    for (idx, &j) in sucols.iter().enumerate() {
+                        x[j as usize] -= m * suvals[idx];
+                    }
+                }
+            }
+        }
+        // within-block updates from this panel's previous rows (sup-row
+        // filling a supernode row-wise)
+        if nd.is_super {
+            let p = sf.panel_ref(id);
+            for kk in 0..r {
+                let k = first + kk;
+                let krow = &p[kk * stride..(kk + 1) * stride];
+                let m = x[k] / krow[nl + kk];
+                x[k] = m;
+                if m != 0.0 {
+                    for jj in kk + 1..w {
+                        x[first + jj] -= m * krow[nl + jj];
+                    }
+                    let utail = &krow[nl + w..];
+                    for (idx, &j) in ucols.iter().enumerate() {
+                        x[j as usize] -= m * utail[idx];
+                    }
+                }
+            }
+        }
+
+        // pivot + gather + reset
+        let (piv, pert) = perturb_pivot(x[i], eps_abs);
+        perturbed += pert as usize;
+        if nd.is_super {
+            // write the whole row into the panel
+            let p = sf.panel_mut(id); // re-borrow (same thread)
+            let base = r * stride;
+            for (c, &j) in lcols.iter().enumerate() {
+                p[base + c] = x[j as usize];
+                x[j as usize] = 0.0;
+            }
+            for kk in 0..w {
+                p[base + nl + kk] = x[first + kk];
+                x[first + kk] = 0.0;
+            }
+            p[base + nl + r] = piv;
+            for (c, &j) in ucols.iter().enumerate() {
+                p[base + nl + w + c] = x[j as usize];
+                x[j as usize] = 0.0;
+            }
+            *sf.diag.add(i) = piv;
+        } else {
+            let lv = std::slice::from_raw_parts_mut(sf.lvals.add(nd.l_start), nl);
+            for (c, &j) in lcols.iter().enumerate() {
+                lv[c] = x[j as usize];
+                x[j as usize] = 0.0;
+            }
+            *sf.diag.add(i) = piv;
+            x[i] = 0.0;
+            let uv = std::slice::from_raw_parts_mut(sf.uvals.add(nd.u_start), nu);
+            for (c, &j) in ucols.iter().enumerate() {
+                uv[c] = x[j as usize];
+                x[j as usize] = 0.0;
+            }
+        }
+    }
+    sf.add_perturbed(perturbed);
+}
+
+/// Reconstruct the dense `L·U` product for tests (small n).
+pub fn reconstruct_dense(sym: &Symbolic, fac: &LuFactors) -> crate::testutil::Dense {
+    let n = sym.n;
+    assert!(n <= 2048);
+    // expand L and U rows densely
+    let mut l = crate::testutil::Dense::zeros(n);
+    let mut u = crate::testutil::Dense::zeros(n);
+    for (id, nd) in sym.nodes.iter().enumerate() {
+        let first = nd.first as usize;
+        let w = nd.width as usize;
+        let nl = nd.nl();
+        let nu = nd.nu();
+        let stride = nl + w + nu;
+        let lcols = &sym.lcols[nd.l_start..nd.l_end];
+        let ucols = &sym.ucols[nd.u_start..nd.u_end];
+        for r in 0..w {
+            let i = first + r;
+            l.set(i, i, 1.0);
+            if nd.is_super {
+                let p = fac.panel(id);
+                let base = r * stride;
+                for (c, &j) in lcols.iter().enumerate() {
+                    l.set(i, j as usize, p[base + c]);
+                }
+                for kk in 0..w {
+                    let v = p[base + nl + kk];
+                    if kk < r {
+                        l.set(i, first + kk, v);
+                    } else {
+                        u.set(i, first + kk, v);
+                    }
+                }
+                for (c, &j) in ucols.iter().enumerate() {
+                    u.set(i, j as usize, p[base + nl + w + c]);
+                }
+            } else {
+                for (c, &j) in lcols.iter().enumerate() {
+                    l.set(i, j as usize, fac.lvals[nd.l_start + c]);
+                }
+                u.set(i, i, fac.diag[i]);
+                for (c, &j) in ucols.iter().enumerate() {
+                    u.set(i, j as usize, fac.uvals[nd.u_start + c]);
+                }
+            }
+        }
+    }
+    // product
+    let mut prod = crate::testutil::Dense::zeros(n);
+    for i in 0..n {
+        for k in 0..=i {
+            let lik = l.get(i, k);
+            if lik != 0.0 {
+                for j in 0..n {
+                    let u_kj = u.get(k, j);
+                    if u_kj != 0.0 {
+                        prod.set(i, j, prod.get(i, j) + lik * u_kj);
+                    }
+                }
+            }
+        }
+    }
+    prod
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::select::KernelMode;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen;
+    use crate::symbolic::{analyze_pattern, MergePolicy};
+    use crate::testutil::{for_each_seed, Prng};
+
+    fn diag_dominant(a: &Csr, boost: f64) -> Csr {
+        let mut c = Coo::new(a.n);
+        for i in 0..a.n {
+            for (k, &j) in a.row_indices(i).iter().enumerate() {
+                c.push(i, j, a.row_vals(i)[k]);
+            }
+            c.push(i, i, boost);
+        }
+        c.to_csr()
+    }
+
+    /// Check P_pivot·A == L·U to tolerance, where P_pivot is fac.pivot_perm.
+    fn check_reconstruction(a: &Csr, sym: &Symbolic, fac: &LuFactors, tol: f64) {
+        let n = a.n;
+        let prod = reconstruct_dense(sym, fac);
+        let ad = a.to_dense();
+        let mut maxerr = 0.0f64;
+        for i in 0..n {
+            let src = fac.pivot_perm[i] as usize;
+            for j in 0..n {
+                let want = ad.get(src, j);
+                let got = prod.get(i, j);
+                maxerr = maxerr.max((want - got).abs());
+            }
+        }
+        assert!(maxerr < tol, "reconstruction error {maxerr}");
+    }
+
+    fn run_all_modes(a: &Csr, tol: f64) {
+        let cfg = PivotConfig::default();
+        for (mode, policy) in [
+            (KernelMode::RowRow, MergePolicy::None),
+            (KernelMode::SupRow, MergePolicy::Exact { max_width: 16 }),
+            (KernelMode::SupSup, MergePolicy::Exact { max_width: 16 }),
+            (
+                KernelMode::SupSup,
+                MergePolicy::Relaxed {
+                    max_width: 16,
+                    budget_frac: 0.25,
+                    budget_abs: 8,
+                },
+            ),
+            (
+                KernelMode::SupSup,
+                MergePolicy::Forced {
+                    min_width: 4,
+                    max_width: 16,
+                },
+            ),
+        ] {
+            let sym = analyze_pattern(a, policy, 4);
+            let mut fac = LuFactors::alloc(&sym);
+            factor(a, &sym, mode, &cfg, &mut fac, false, &NativeGemm);
+            check_reconstruction(a, &sym, &fac, tol);
+        }
+    }
+
+    #[test]
+    fn identity_factors_trivially() {
+        let a = Csr::identity(10);
+        run_all_modes(&a, 1e-14);
+    }
+
+    #[test]
+    fn dense_block_supsup() {
+        let mut rng = Prng::new(1);
+        let n = 12;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            for j in 0..n {
+                c.push(i, j, rng.normal() + if i == j { 10.0 } else { 0.0 });
+            }
+        }
+        run_all_modes(&c.to_csr(), 1e-9);
+    }
+
+    #[test]
+    fn grid_factors_correctly_all_modes() {
+        let a = gen::grid2d(7, 8);
+        run_all_modes(&a, 1e-9);
+    }
+
+    #[test]
+    fn circuit_factors_correctly_all_modes() {
+        let a = diag_dominant(&gen::circuit(80, 3), 8.0);
+        run_all_modes(&a, 1e-8);
+    }
+
+    #[test]
+    fn banded_factors_correctly() {
+        let a = gen::banded(40, 3, 5);
+        run_all_modes(&a, 1e-8);
+    }
+
+    #[test]
+    fn pivoting_handles_small_leading_diagonal() {
+        // diagonal block where pivoting matters: first diagonal tiny inside
+        // a dense 4x4 supernode
+        let n = 4;
+        let mut c = Coo::new(n);
+        let vals = [
+            [1e-13, 2.0, 3.0, 1.0],
+            [2.0, 1.0, 1.0, 4.0],
+            [3.0, 1.0, 5.0, 1.0],
+            [1.0, 4.0, 1.0, 2.0],
+        ];
+        for i in 0..n {
+            for j in 0..n {
+                c.push(i, j, vals[i][j]);
+            }
+        }
+        let a = c.to_csr();
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 8 }, 4);
+        assert!(sym.nodes[0].is_super);
+        let cfg = PivotConfig::default();
+        let mut fac = LuFactors::alloc(&sym);
+        let perturbed = factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
+        assert_eq!(perturbed, 0, "pivoting should avoid perturbation");
+        // pivot moved a big row first
+        assert_ne!(fac.pivot_perm[0], 0);
+        check_reconstruction(&a, &sym, &fac, 1e-9);
+    }
+
+    #[test]
+    fn perturbation_kicks_in_without_pivoting() {
+        let n = 3;
+        let mut c = Coo::new(n);
+        c.push(0, 0, 0.0);
+        c.push(0, 1, 1.0);
+        c.push(1, 0, 1.0);
+        c.push(1, 1, 1.0);
+        c.push(2, 2, 1.0);
+        let a = c.to_csr();
+        let sym = analyze_pattern(&a, MergePolicy::None, 4);
+        let cfg = PivotConfig {
+            supernode_pivoting: false,
+            perturb: true,
+            perturb_eps: 1e-8,
+        };
+        let mut fac = LuFactors::alloc(&sym);
+        let perturbed = factor(&a, &sym, KernelMode::RowRow, &cfg, &mut fac, false, &NativeGemm);
+        assert!(perturbed >= 1);
+        assert!(fac.diag[0].abs() > 0.0);
+    }
+
+    #[test]
+    fn refactor_reproduces_factor_exactly() {
+        let a = gen::grid2d(6, 6);
+        let cfg = PivotConfig::default();
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let mut fac = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
+        let panels1 = fac.panels.clone();
+        let lv1 = fac.lvals.clone();
+        let pp1 = fac.pivot_perm.clone();
+        // refactor with the same values must reproduce identical factors
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, true, &NativeGemm);
+        assert_eq!(fac.pivot_perm, pp1);
+        assert_eq!(fac.panels, panels1);
+        assert_eq!(fac.lvals, lv1);
+    }
+
+    #[test]
+    fn refactor_with_new_values_is_correct() {
+        let mut rng = Prng::new(9);
+        let a = gen::power_network(60, 4);
+        let cfg = PivotConfig::default();
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let mut fac = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
+        // new values, same pattern
+        let mut b = a.clone();
+        for v in &mut b.vals {
+            *v *= rng.range_f64(0.5, 1.5);
+        }
+        factor(&b, &sym, KernelMode::SupSup, &cfg, &mut fac, true, &NativeGemm);
+        check_reconstruction(&b, &sym, &fac, 1e-8);
+    }
+
+    #[test]
+    fn modes_agree_with_each_other() {
+        // same matrix, all three kernels: reconstructions must agree with A
+        let a = diag_dominant(&gen::random_sparse(50, 4, 8), 6.0);
+        run_all_modes(&a, 1e-8);
+    }
+
+    #[test]
+    fn property_factor_reconstructs_random_matrices() {
+        for_each_seed(10, |rng| {
+            let n = rng.range(5, 40);
+            let mut c = Coo::new(n);
+            for i in 0..n {
+                c.push(i, i, 4.0 + rng.uniform());
+                for _ in 0..rng.range(0, 4) {
+                    c.push(i, rng.below(n), rng.nonzero());
+                }
+            }
+            let a = c.to_csr();
+            run_all_modes(&a, 1e-7);
+        });
+    }
+}

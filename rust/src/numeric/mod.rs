@@ -1,0 +1,178 @@
+//! Numeric factorization: the paper's hybrid kernels (row-row, sup-row,
+//! sup-sup), supernode diagonal pivoting with perturbation, the sequential
+//! and dual-mode parallel drivers, and the refactorization fast path.
+
+pub mod dense;
+pub mod factor;
+pub mod parallel;
+pub mod select;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::symbolic::Symbolic;
+
+/// Pivoting / perturbation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PivotConfig {
+    /// Row swaps inside supernode diagonal blocks (pattern-preserving).
+    pub supernode_pivoting: bool,
+    /// Replace tiny pivots by `±perturb_eps · max|A|` (SuperLU_DIST-style,
+    /// paper ref [13]); triggers iterative refinement in the solve phase.
+    pub perturb: bool,
+    /// Relative perturbation threshold (default `1e-8 ≈ sqrt(eps)`).
+    pub perturb_eps: f64,
+}
+
+impl Default for PivotConfig {
+    fn default() -> Self {
+        PivotConfig {
+            supernode_pivoting: true,
+            perturb: true,
+            perturb_eps: 1e-8,
+        }
+    }
+}
+
+/// Numeric LU factors, laid out against a [`Symbolic`]'s patterns.
+///
+/// Standalone rows store sparse `lvals`/`uvals` aligned with
+/// `sym.lcols`/`sym.ucols` plus `diag`; supernodes store a dense row-major
+/// panel `[L-part | diagonal block | U-tail]` per node (L unit diagonal
+/// implicit, multipliers in the strictly-lower block triangle).
+#[derive(Clone, Debug)]
+pub struct LuFactors {
+    /// Dimension.
+    pub n: usize,
+    /// Row-node L values (aligned with `sym.lcols`; unused for supernodes).
+    pub lvals: Vec<f64>,
+    /// Row-node U values (aligned with `sym.ucols`; unused for supernodes).
+    pub uvals: Vec<f64>,
+    /// Row-node pivots, indexed by row.
+    pub diag: Vec<f64>,
+    /// Concatenated supernode panels.
+    pub panels: Vec<f64>,
+    /// Panel offset per node (row nodes get a zero-length slot).
+    pub panel_ptr: Vec<usize>,
+    /// Factor-row -> analyzed-row mapping from supernode diagonal pivoting
+    /// (identity outside supernodes). `pivot_perm[i] = r` means factor row
+    /// `i` holds row `r` of the permuted input.
+    pub pivot_perm: Vec<u32>,
+    /// Number of perturbed pivots in the last factorization.
+    pub perturbed: usize,
+}
+
+impl LuFactors {
+    /// Allocate zeroed factors shaped for `sym`.
+    pub fn alloc(sym: &Symbolic) -> Self {
+        let mut panel_ptr = Vec::with_capacity(sym.nodes.len() + 1);
+        let mut off = 0usize;
+        for nd in &sym.nodes {
+            panel_ptr.push(off);
+            if nd.is_super {
+                off += nd.width as usize * nd.panel_width();
+            }
+        }
+        panel_ptr.push(off);
+        LuFactors {
+            n: sym.n,
+            lvals: vec![0.0; sym.lcols.len()],
+            uvals: vec![0.0; sym.ucols.len()],
+            diag: vec![0.0; sym.n],
+            panels: vec![0.0; off],
+            panel_ptr,
+            pivot_perm: (0..sym.n as u32).collect(),
+            perturbed: 0,
+        }
+    }
+
+    /// Panel slice of node `id`.
+    pub fn panel(&self, id: usize) -> &[f64] {
+        &self.panels[self.panel_ptr[id]..self.panel_ptr[id + 1]]
+    }
+
+    /// nnz actually stored (panel cells + sparse rows).
+    pub fn stored_entries(&self) -> usize {
+        self.lvals.len() + self.uvals.len() + self.diag.len() + self.panels.len()
+    }
+}
+
+/// Per-thread scratch for numeric factorization.
+pub struct Workspace {
+    /// Dense accumulator (row kernels), maintained all-zero between rows.
+    pub x: Vec<f64>,
+    /// Global column -> panel column map (panel kernel), -1 default.
+    pub colmap: Vec<i32>,
+    /// GEMM output scratch.
+    pub cbuf: Vec<f64>,
+    /// TRSM triangle scratch (column-major gather).
+    pub tbuf: Vec<f64>,
+    /// Scatter map scratch (per-group U-tail -> panel column).
+    pub map_idx: Vec<i32>,
+}
+
+impl Workspace {
+    /// Fresh workspace for dimension `n`.
+    pub fn new(n: usize) -> Self {
+        Workspace {
+            x: vec![0.0; n],
+            colmap: vec![-1; n],
+            cbuf: Vec::new(),
+            tbuf: Vec::new(),
+            map_idx: Vec::new(),
+        }
+    }
+}
+
+/// Shared mutable view over [`LuFactors`] used by the parallel driver.
+///
+/// Safety contract: each node's storage (its panel range / lvals / uvals /
+/// diag / pivot_perm rows) is written by exactly one thread, and reads of a
+/// *source* node's storage happen only after its done-flag is observed with
+/// Acquire ordering (or, in the sequential driver, after program order).
+pub(crate) struct SharedFactors {
+    pub lvals: *mut f64,
+    pub uvals: *mut f64,
+    pub diag: *mut f64,
+    pub panels: *mut f64,
+    pub pivot_perm: *mut u32,
+    pub perturbed: AtomicUsize,
+    pub panel_ptr: *const usize,
+}
+
+unsafe impl Send for SharedFactors {}
+unsafe impl Sync for SharedFactors {}
+
+impl SharedFactors {
+    pub fn new(fac: &mut LuFactors) -> Self {
+        SharedFactors {
+            lvals: fac.lvals.as_mut_ptr(),
+            uvals: fac.uvals.as_mut_ptr(),
+            diag: fac.diag.as_mut_ptr(),
+            panels: fac.panels.as_mut_ptr(),
+            pivot_perm: fac.pivot_perm.as_mut_ptr(),
+            perturbed: AtomicUsize::new(0),
+            panel_ptr: fac.panel_ptr.as_ptr(),
+        }
+    }
+
+    /// Mutable panel slice for node `id` (must be the owning thread).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn panel_mut(&self, id: usize) -> &mut [f64] {
+        let s = *self.panel_ptr.add(id);
+        let e = *self.panel_ptr.add(id + 1);
+        std::slice::from_raw_parts_mut(self.panels.add(s), e - s)
+    }
+
+    /// Read-only panel slice for a completed source node.
+    pub unsafe fn panel_ref(&self, id: usize) -> &[f64] {
+        let s = *self.panel_ptr.add(id);
+        let e = *self.panel_ptr.add(id + 1);
+        std::slice::from_raw_parts(self.panels.add(s), e - s)
+    }
+
+    pub fn add_perturbed(&self, k: usize) {
+        if k > 0 {
+            self.perturbed.fetch_add(k, Ordering::Relaxed);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Dual-mode parallel numeric factorization (paper §2.2.1, Fig. 2).
+//!
+//! Front (wide) levels run in **bulk mode**: each level's nodes are split
+//! among threads balanced by flop estimates, with a barrier between levels.
+//! The tail of the DAG — typically a long dependent chain — runs in
+//! **pipeline mode**: workers claim nodes from a shared topological cursor
+//! and spin on the done-flags of each claimed node's dependencies, so
+//! dependent nodes overlap at sub-node granularity instead of serializing
+//! on level barriers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use crate::numeric::factor::{factor_node, GemmBackend};
+use crate::numeric::select::KernelMode;
+use crate::numeric::{LuFactors, PivotConfig, SharedFactors, Workspace};
+use crate::par::{balanced_chunks, DoneFlags};
+use crate::sparse::csr::Csr;
+use crate::symbolic::Symbolic;
+
+/// Parallel factor/refactor. Falls back to the sequential driver for
+/// `nthreads <= 1`. Returns the number of perturbed pivots.
+#[allow(clippy::too_many_arguments)]
+pub fn factor_parallel(
+    a: &Csr,
+    sym: &Symbolic,
+    mode: KernelMode,
+    cfg: &PivotConfig,
+    fac: &mut LuFactors,
+    refactor: bool,
+    gemm: &(dyn GemmBackend + Sync),
+    nthreads: usize,
+) -> usize {
+    if nthreads <= 1 || sym.nodes.len() < 2 {
+        return crate::numeric::factor::factor(a, sym, mode, cfg, fac, refactor, gemm);
+    }
+    if !refactor {
+        for (i, p) in fac.pivot_perm.iter_mut().enumerate() {
+            *p = i as u32;
+        }
+    }
+    let eps_abs = if cfg.perturb {
+        cfg.perturb_eps * a.max_abs().max(1e-300)
+    } else {
+        0.0
+    };
+    let sf = SharedFactors::new(fac);
+    let sched = &sym.schedule;
+    let done = DoneFlags::new(sym.nodes.len());
+    let barrier = Barrier::new(nthreads);
+
+    // pre-compute per-level thread chunks balanced by flops
+    let mut chunks: Vec<Vec<(usize, usize)>> = Vec::with_capacity(sched.bulk_levels);
+    for lv in 0..sched.bulk_levels {
+        let ids = sched.nodes_at(lv);
+        let weights: Vec<f64> = ids.iter().map(|&id| sym.nodes[id as usize].flops).collect();
+        chunks.push(balanced_chunks(&weights, nthreads));
+    }
+    // pipeline segment: nodes at levels >= bulk_levels, topological order
+    let pipe_start = sched.level_ptr[sched.bulk_levels];
+    let pipe_nodes = &sched.level_nodes[pipe_start..];
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let sfr = &sf;
+            let doner = &done;
+            let barrierr = &barrier;
+            let chunksr = &chunks;
+            let cursorr = &cursor;
+            scope.spawn(move || {
+                let mut ws = Workspace::new(sym.n);
+                // bulk mode
+                for (lv, lv_chunks) in chunksr.iter().enumerate() {
+                    let ids = sched.nodes_at(lv);
+                    let (s, e) = lv_chunks[t];
+                    for &id in &ids[s..e] {
+                        // Safety: deps are in earlier levels (complete
+                        // before the previous barrier); this node's storage
+                        // is written only by this thread.
+                        unsafe {
+                            factor_node(
+                                id as usize,
+                                a,
+                                sym,
+                                sfr,
+                                &mut ws,
+                                mode,
+                                cfg,
+                                eps_abs,
+                                refactor,
+                                gemm,
+                            )
+                        };
+                        doner.set(id as usize);
+                    }
+                    barrierr.wait();
+                }
+                // pipeline mode
+                loop {
+                    let k = cursorr.fetch_add(1, Ordering::Relaxed);
+                    if k >= pipe_nodes.len() {
+                        break;
+                    }
+                    let id = pipe_nodes[k] as usize;
+                    let nd = &sym.nodes[id];
+                    for g in &sym.groups[nd.g_start..nd.g_end] {
+                        doner.wait(g.src as usize);
+                    }
+                    // Safety: all deps observed complete (Acquire above).
+                    unsafe {
+                        factor_node(id, a, sym, sfr, &mut ws, mode, cfg, eps_abs, refactor, gemm)
+                    };
+                    doner.set(id);
+                }
+            });
+        }
+    });
+
+    let perturbed = sf.perturbed.load(Ordering::Relaxed);
+    fac.perturbed = perturbed;
+    perturbed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::factor::{factor, NativeGemm};
+    use crate::sparse::gen;
+    use crate::symbolic::{analyze_pattern, MergePolicy};
+
+    /// Parallel factorization must produce bit-identical factors to the
+    /// sequential driver (same operations, same order per node).
+    fn check_parallel_matches_sequential(a: &crate::sparse::csr::Csr, mode: KernelMode) {
+        let policy = match mode {
+            KernelMode::RowRow => MergePolicy::None,
+            _ => MergePolicy::Exact { max_width: 16 },
+        };
+        let sym = analyze_pattern(a, policy, 4);
+        let cfg = PivotConfig::default();
+        let mut f1 = LuFactors::alloc(&sym);
+        factor(a, &sym, mode, &cfg, &mut f1, false, &NativeGemm);
+        for threads in [2usize, 4] {
+            let mut f2 = LuFactors::alloc(&sym);
+            factor_parallel(a, &sym, mode, &cfg, &mut f2, false, &NativeGemm, threads);
+            assert_eq!(f1.pivot_perm, f2.pivot_perm, "pivot mismatch t={threads}");
+            assert_eq!(f1.panels, f2.panels, "panel mismatch t={threads}");
+            assert_eq!(f1.lvals, f2.lvals, "lvals mismatch t={threads}");
+            assert_eq!(f1.uvals, f2.uvals, "uvals mismatch t={threads}");
+            assert_eq!(f1.diag, f2.diag, "diag mismatch t={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_grid_supsup() {
+        check_parallel_matches_sequential(&gen::grid2d(12, 12), KernelMode::SupSup);
+    }
+
+    #[test]
+    fn parallel_circuit_rowrow() {
+        check_parallel_matches_sequential(&gen::circuit(400, 2), KernelMode::RowRow);
+    }
+
+    #[test]
+    fn parallel_power_suprow() {
+        check_parallel_matches_sequential(&gen::power_network(300, 5), KernelMode::SupRow);
+    }
+
+    #[test]
+    fn parallel_banded_pipeline_heavy() {
+        // long chain: exercises pipeline mode spin-waits
+        check_parallel_matches_sequential(&gen::banded(200, 4, 7), KernelMode::SupSup);
+    }
+
+    #[test]
+    fn parallel_refactor_matches() {
+        let a = gen::grid2d(10, 10);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let cfg = PivotConfig::default();
+        let mut f1 = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, false, &NativeGemm);
+        let mut f2 = f1.clone();
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, true, &NativeGemm);
+        factor_parallel(
+            &a,
+            &sym,
+            KernelMode::SupSup,
+            &cfg,
+            &mut f2,
+            true,
+            &NativeGemm,
+            3,
+        );
+        assert_eq!(f1.panels, f2.panels);
+        assert_eq!(f1.diag, f2.diag);
+    }
+}

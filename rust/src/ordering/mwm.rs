@@ -1,0 +1,356 @@
+//! Static pivoting: maximum weighted (product) bipartite matching with
+//! dual-variable scaling — the Duff–Koster algorithm the paper cites as [8]
+//! (HSL MC64, job 5).
+//!
+//! Finds a row permutation σ and diagonal scalings `Dr`, `Dc` such that the
+//! scaled, permuted matrix has |diagonal| = 1 and all entries bounded in
+//! [-1, 1]. This makes static (pattern-preserving) pivoting safe during
+//! numeric factorization, which is what lets HYLU fix the fill pattern at
+//! symbolic time.
+//!
+//! Method: successive shortest augmenting paths (sparse Jonker–Volgenant)
+//! on the assignment problem with costs `c_ij = log(max_i |a_ij|) −
+//! log |a_ij| ≥ 0`, maintaining LP duals `u` (rows), `v` (cols) with
+//! `u_i + v_j ≤ c_ij` and equality on matched edges. The duals *are* the
+//! log-scalings: `Dr[i] = exp(u_i)`, `Dc[j] = exp(v_j) / colmax_j`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::sparse::csr::Csr;
+use crate::{Error, Result};
+
+/// Result of the matching: permutation plus scalings.
+#[derive(Clone, Debug)]
+pub struct Matching {
+    /// `row_for_col[j]` = the row matched to (placed on the diagonal of)
+    /// column `j`.
+    pub row_for_col: Vec<usize>,
+    /// Row scaling `Dr` (multiply row `i` by `dr[i]`).
+    pub dr: Vec<f64>,
+    /// Column scaling `Dc` (multiply column `j` by `dc[j]`).
+    pub dc: Vec<f64>,
+}
+
+#[derive(PartialEq)]
+struct HeapEntry {
+    dist: f64,
+    row: usize,
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on dist
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.row.cmp(&self.row))
+    }
+}
+
+/// Run maximum-product matching + scaling on `a`.
+///
+/// Errors with [`Error::StructurallySingular`] if no perfect matching
+/// exists. Zero-valued stored entries are treated as absent.
+pub fn max_weight_matching(a: &Csr) -> Result<Matching> {
+    let n = a.n;
+    let at = a.transpose(); // column access: at.row(j) = column j of a
+
+    // costs: c_ij = log(cmax_j) - log|a_ij|
+    let mut logcmax = vec![f64::NEG_INFINITY; n];
+    for j in 0..n {
+        for &v in at.row_vals(j) {
+            let av = v.abs();
+            if av > 0.0 {
+                logcmax[j] = logcmax[j].max(av.ln());
+            }
+        }
+    }
+    for (j, &m) in logcmax.iter().enumerate() {
+        if m == f64::NEG_INFINITY {
+            return Err(Error::Invalid(format!("column {j} has no nonzeros")));
+        }
+    }
+
+    let cost = |j: usize, k: usize| -> Option<f64> {
+        let v = at.row_vals(j)[k].abs();
+        if v > 0.0 {
+            Some(logcmax[j] - v.ln())
+        } else {
+            None
+        }
+    };
+
+    let mut u = vec![0.0f64; n]; // row duals
+    let mut v = vec![0.0f64; n]; // col duals
+    let mut match_col_of_row = vec![usize::MAX; n];
+    let mut match_row_of_col = vec![usize::MAX; n];
+
+    // Cheap initialization (MC64 does the same): for each column, try to
+    // match its max-magnitude (zero-cost) entry if the row is free.
+    for j in 0..n {
+        for (k, &i) in at.row_indices(j).iter().enumerate() {
+            if match_col_of_row[i] == usize::MAX {
+                if let Some(c) = cost(j, k) {
+                    if c <= 1e-15 {
+                        match_col_of_row[i] = j;
+                        match_row_of_col[j] = i;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // Per-search scratch
+    let mut dist = vec![f64::INFINITY; n];
+    let mut prev_col = vec![usize::MAX; n]; // for rows on the search tree
+    let mut finalized = vec![false; n];
+    let mut touched_rows: Vec<usize> = Vec::new();
+    let mut tree_cols: Vec<(usize, f64)> = Vec::new(); // (col, dist at col)
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+
+    for j0 in 0..n {
+        if match_row_of_col[j0] != usize::MAX {
+            continue;
+        }
+        heap.clear();
+        tree_cols.clear();
+        // Dijkstra from j0 over alternating paths.
+        let mut cur_j = j0;
+        let mut path_dist = 0.0f64;
+        let (endpoint, delta) = loop {
+            tree_cols.push((cur_j, path_dist));
+            for (k, &i) in at.row_indices(cur_j).iter().enumerate() {
+                if finalized[i] {
+                    continue;
+                }
+                if let Some(c) = cost(cur_j, k) {
+                    let nd = path_dist + c - u[i] - v[cur_j];
+                    if nd < dist[i] - 1e-15 {
+                        if dist[i] == f64::INFINITY {
+                            touched_rows.push(i);
+                        }
+                        dist[i] = nd;
+                        prev_col[i] = cur_j;
+                        heap.push(HeapEntry { dist: nd, row: i });
+                    }
+                }
+            }
+            // pop nearest unfinalized row
+            let (d, i) = loop {
+                match heap.pop() {
+                    None => {
+                        // reset scratch before erroring
+                        for &r in &touched_rows {
+                            dist[r] = f64::INFINITY;
+                            finalized[r] = false;
+                            prev_col[r] = usize::MAX;
+                        }
+                        touched_rows.clear();
+                        let matched = match_row_of_col
+                            .iter()
+                            .filter(|&&r| r != usize::MAX)
+                            .count();
+                        return Err(Error::StructurallySingular { matched, n });
+                    }
+                    Some(e) => {
+                        if !finalized[e.row] {
+                            break (e.dist, e.row);
+                        }
+                    }
+                }
+            };
+            finalized[i] = true;
+            if match_col_of_row[i] == usize::MAX {
+                break (i, d);
+            }
+            cur_j = match_col_of_row[i];
+            path_dist = d;
+        };
+
+        // Dual updates keep feasibility and make the augmenting path tight.
+        for &(j, dj) in &tree_cols {
+            v[j] += delta - dj;
+        }
+        for &i in &touched_rows {
+            if finalized[i] {
+                u[i] -= delta - dist[i];
+            }
+        }
+
+        // Augment along prev_col chain.
+        let mut i = endpoint;
+        loop {
+            let j = prev_col[i];
+            let next_i = match_row_of_col[j];
+            match_row_of_col[j] = i;
+            match_col_of_row[i] = j;
+            if j == j0 {
+                break;
+            }
+            i = next_i;
+        }
+
+        // Reset scratch.
+        for &r in &touched_rows {
+            dist[r] = f64::INFINITY;
+            finalized[r] = false;
+            prev_col[r] = usize::MAX;
+        }
+        touched_rows.clear();
+    }
+
+    // scalings from duals
+    let dr: Vec<f64> = u.iter().map(|&ui| ui.exp()).collect();
+    let dc: Vec<f64> = (0..n).map(|j| (v[j] - logcmax[j]).exp()).collect();
+    Ok(Matching {
+        row_for_col: match_row_of_col,
+        dr,
+        dc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen;
+    use crate::sparse::perm::Perm;
+    use crate::testutil::{for_each_seed, Prng};
+
+    /// Check the MC64 contract: after permute+scale, |diag| == 1 and all
+    /// entries in [-1, 1] (up to roundoff).
+    fn check_contract(a: &Csr, m: &Matching) {
+        let n = a.n;
+        // matching is a permutation
+        Perm::from_map(m.row_for_col.clone()).unwrap();
+        let p = Perm::from_map(m.row_for_col.clone()).unwrap();
+        let q = Perm::identity(n);
+        let b = a.permute_scale(&p, &q, &m.dr, &m.dc);
+        for i in 0..n {
+            let mut diag = None;
+            for (k, &j) in b.row_indices(i).iter().enumerate() {
+                let v = b.row_vals(i)[k].abs();
+                assert!(v <= 1.0 + 1e-9, "entry ({i},{j}) = {v} > 1");
+                if j == i {
+                    diag = Some(v);
+                }
+            }
+            let d = diag.expect("diagonal entry missing after matching");
+            assert!((d - 1.0).abs() < 1e-9, "diag {i} = {d} != 1");
+        }
+    }
+
+    #[test]
+    fn identity_matrix_matches_trivially() {
+        let a = Csr::identity(6);
+        let m = max_weight_matching(&a).unwrap();
+        assert_eq!(m.row_for_col, vec![0, 1, 2, 3, 4, 5]);
+        check_contract(&a, &m);
+    }
+
+    #[test]
+    fn permuted_diagonal_is_recovered() {
+        let mut rng = Prng::new(17);
+        let n = 30;
+        let perm = rng.permutation(n);
+        let mut c = Coo::new(n);
+        for j in 0..n {
+            c.push(perm[j], j, 5.0); // huge entries off-diagonal positions
+            c.push(j, j, 1e-6); // tiny diagonal decoys (skip where same)
+        }
+        let a = c.to_csr();
+        let m = max_weight_matching(&a).unwrap();
+        for j in 0..n {
+            assert_eq!(m.row_for_col[j], perm[j], "col {j}");
+        }
+        check_contract(&a, &m);
+    }
+
+    #[test]
+    fn structurally_singular_is_detected() {
+        // column 2 empty except duplicated dependence: make rows 0 and 1
+        // both only reach column 0 => no perfect matching.
+        let mut c = Coo::new(3);
+        c.push(0, 0, 1.0);
+        c.push(1, 0, 1.0);
+        c.push(0, 1, 1.0);
+        c.push(1, 1, 1.0);
+        c.push(2, 1, 1.0);
+        // column 2 has a single zero-value entry -> treated absent
+        c.push(2, 2, 0.0);
+        let a = c.to_csr();
+        match max_weight_matching(&a) {
+            Err(Error::Invalid(_)) | Err(Error::StructurallySingular { .. }) => {}
+            other => panic!("expected singular, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn contract_holds_on_generated_classes() {
+        for a in [
+            gen::circuit(400, 2),
+            gen::power_network(300, 3),
+            gen::grid2d(15, 15),
+            gen::kkt(150, 40, 4),
+            gen::ill_conditioned(120, 5),
+            gen::random_sparse(200, 4, 6),
+        ] {
+            let m = max_weight_matching(&a).unwrap();
+            check_contract(&a, &m);
+        }
+    }
+
+    #[test]
+    fn property_random_matrices_satisfy_contract() {
+        for_each_seed(15, |rng| {
+            let n = rng.range(5, 60);
+            let mut c = Coo::new(n);
+            // random entries + guaranteed transversal on a random perm
+            let perm = rng.permutation(n);
+            for j in 0..n {
+                c.push(perm[j], j, rng.nonzero() * 10f64.powf(rng.range_f64(-3.0, 3.0)));
+            }
+            for _ in 0..3 * n {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                c.push(i, j, rng.nonzero() * 10f64.powf(rng.range_f64(-3.0, 3.0)));
+            }
+            let a = c.to_csr();
+            let m = max_weight_matching(&a).unwrap();
+            check_contract(&a, &m);
+        });
+    }
+
+    #[test]
+    fn matching_maximizes_diagonal_product_vs_natural() {
+        // the matched diagonal product must beat (or equal) the natural one
+        let mut rng = Prng::new(99);
+        let n = 25;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, rng.range_f64(1e-6, 1e-3));
+            for _ in 0..4 {
+                c.push(i, rng.below(n), rng.range_f64(0.1, 10.0));
+            }
+        }
+        let a = c.to_csr();
+        let m = max_weight_matching(&a).unwrap();
+        let d = a.to_dense();
+        let nat: f64 = (0..n).map(|i| d.get(i, i).abs().max(1e-300).ln()).sum();
+        let mat: f64 = (0..n)
+            .map(|j| d.get(m.row_for_col[j], j).abs().max(1e-300).ln())
+            .sum();
+        assert!(mat >= nat - 1e-9);
+    }
+}

@@ -1,0 +1,270 @@
+//! Nested-dissection ordering (paper ref [11], METIS-lite).
+//!
+//! Recursive level-set bisection: BFS from a pseudo-peripheral vertex,
+//! split at the median level, shrink the separator to the vertices actually
+//! adjacent to the near side, recurse on both halves, order the separator
+//! last. Leaves are ordered with AMD. This is the "modified nested
+//! dissection based on METIS" role in HYLU's preprocessing — same
+//! asymptotics on mesh-class graphs, no external dependency (DESIGN.md §2).
+
+use crate::ordering::amd;
+
+const LEAF: usize = 96;
+
+/// Compute a nested-dissection elimination order (`map[new] = old`) of a
+/// symmetric graph in CSR-ish `(ptr, idx)` form without diagonal entries.
+pub fn nested_dissection(n: usize, ptr: &[usize], idx: &[usize]) -> Vec<usize> {
+    let mut order = Vec::with_capacity(n);
+    let all: Vec<u32> = (0..n as u32).collect();
+    let mut local = vec![u32::MAX; n]; // global -> local map scratch
+    let mut levels = vec![u32::MAX; n];
+    dissect(
+        ptr,
+        idx,
+        all,
+        &mut order,
+        &mut local,
+        &mut levels,
+        0,
+    );
+    debug_assert_eq!(order.len(), n);
+    order
+}
+
+/// BFS from `start` within `verts` (membership via `levels` stamped to
+/// `u32::MAX-1`); returns (visited vertices in BFS order, their levels).
+fn bfs(
+    ptr: &[usize],
+    idx: &[usize],
+    verts: &[u32],
+    start: u32,
+    in_set: &[u32],
+    stamp: u32,
+    levels: &mut [u32],
+) -> Vec<u32> {
+    let _ = verts;
+    let mut queue = vec![start];
+    levels[start as usize] = 0;
+    let mut qi = 0;
+    while qi < queue.len() {
+        let v = queue[qi] as usize;
+        qi += 1;
+        let lv = levels[v];
+        for &w in &idx[ptr[v]..ptr[v + 1]] {
+            if in_set[w] == stamp && levels[w] == u32::MAX {
+                levels[w] = lv + 1;
+                queue.push(w as u32);
+            }
+        }
+    }
+    queue
+}
+
+fn dissect(
+    ptr: &[usize],
+    idx: &[usize],
+    verts: Vec<u32>,
+    order: &mut Vec<usize>,
+    local: &mut Vec<u32>,
+    levels: &mut Vec<u32>,
+    depth: u32,
+) {
+    let sz = verts.len();
+    if sz == 0 {
+        return;
+    }
+    if sz <= LEAF || depth > 48 {
+        order_leaf(ptr, idx, &verts, order, local);
+        return;
+    }
+    // membership stamp: local[] doubles as the in-set marker using a unique
+    // stamp value per call: we use local[v] = stamp while levels[] holds BFS
+    // levels. Reset on exit paths below.
+    let stamp = depth.wrapping_add(0xBEEF0000);
+    for &v in &verts {
+        local[v as usize] = stamp;
+        levels[v as usize] = u32::MAX;
+    }
+
+    // pseudo-peripheral: BFS from first vertex, then from the farthest.
+    let bfs1 = bfs(ptr, idx, &verts, verts[0], local, stamp, levels);
+    let far = *bfs1.last().unwrap();
+    for &v in &bfs1 {
+        levels[v as usize] = u32::MAX;
+    }
+    let bfs2 = bfs(ptr, idx, &verts, far, local, stamp, levels);
+
+    if bfs2.len() < sz {
+        // disconnected: component vs rest, no separator needed
+        let comp: Vec<u32> = bfs2.clone();
+        let rest: Vec<u32> = verts
+            .iter()
+            .copied()
+            .filter(|&v| levels[v as usize] == u32::MAX)
+            .collect();
+        for &v in &verts {
+            local[v as usize] = u32::MAX;
+            levels[v as usize] = u32::MAX;
+        }
+        dissect(ptr, idx, comp, order, local, levels, depth + 1);
+        dissect(ptr, idx, rest, order, local, levels, depth + 1);
+        return;
+    }
+
+    // split level: median vertex's level (ensures both sides non-empty)
+    let maxlev = levels[*bfs2.last().unwrap() as usize];
+    if maxlev < 2 {
+        // graph too tightly connected to bisect by levels; fall back to AMD
+        for &v in &verts {
+            local[v as usize] = u32::MAX;
+            levels[v as usize] = u32::MAX;
+        }
+        order_leaf(ptr, idx, &verts, order, local);
+        return;
+    }
+    let split = {
+        let med = bfs2[sz / 2];
+        levels[med as usize].clamp(1, maxlev - 1).max(1)
+    };
+
+    // A: level < split, candidate separator: level == split, B: > split.
+    // Shrink separator: only split-level vertices adjacent to A stay; the
+    // rest join B.
+    let mut a_side: Vec<u32> = Vec::new();
+    let mut b_side: Vec<u32> = Vec::new();
+    let mut sep: Vec<u32> = Vec::new();
+    for &v in &bfs2 {
+        let lv = levels[v as usize];
+        if lv < split {
+            a_side.push(v);
+        } else if lv > split {
+            b_side.push(v);
+        } else {
+            let touches_a = idx[ptr[v as usize]..ptr[v as usize + 1]]
+                .iter()
+                .any(|&w| local[w] == stamp && levels[w] != u32::MAX && levels[w] < split);
+            if touches_a {
+                sep.push(v);
+            } else {
+                b_side.push(v);
+            }
+        }
+    }
+    // reset scratch before recursing
+    for &v in &verts {
+        local[v as usize] = u32::MAX;
+        levels[v as usize] = u32::MAX;
+    }
+
+    dissect(ptr, idx, a_side, order, local, levels, depth + 1);
+    dissect(ptr, idx, b_side, order, local, levels, depth + 1);
+    order_leaf(ptr, idx, &sep, order, local);
+}
+
+/// Order a vertex subset with AMD on the induced subgraph and append to
+/// `order`.
+fn order_leaf(
+    ptr: &[usize],
+    idx: &[usize],
+    verts: &[u32],
+    order: &mut Vec<usize>,
+    local: &mut Vec<u32>,
+) {
+    let m = verts.len();
+    if m == 0 {
+        return;
+    }
+    if m == 1 {
+        order.push(verts[0] as usize);
+        return;
+    }
+    for (k, &v) in verts.iter().enumerate() {
+        local[v as usize] = k as u32;
+    }
+    let mut lptr = Vec::with_capacity(m + 1);
+    let mut lidx = Vec::new();
+    lptr.push(0usize);
+    for &v in verts {
+        for &w in &idx[ptr[v as usize]..ptr[v as usize + 1]] {
+            if local[w] != u32::MAX && w != v as usize {
+                lidx.push(local[w] as usize);
+            }
+        }
+        lptr.push(lidx.len());
+    }
+    let sub_order = amd::amd(m, &lptr, &lidx);
+    for &k in &sub_order {
+        order.push(verts[k] as usize);
+    }
+    for &v in verts {
+        local[v as usize] = u32::MAX;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::sparse::perm::Perm;
+
+    #[test]
+    fn nd_returns_valid_permutation() {
+        for a in [
+            gen::grid2d(20, 20),
+            gen::grid3d(7, 7, 7),
+            gen::circuit(500, 1),
+            gen::power_network(300, 2),
+        ] {
+            let (ptr, idx) = a.symmetrized_pattern();
+            let order = nested_dissection(a.n, &ptr, &idx);
+            Perm::from_map(order).unwrap();
+        }
+    }
+
+    #[test]
+    fn nd_handles_disconnected_graph() {
+        // two disjoint paths
+        let n = 10;
+        let mut ptr = vec![0usize];
+        let mut idx = Vec::new();
+        for i in 0..n {
+            if i % 5 > 0 {
+                idx.push(i - 1);
+            }
+            if i % 5 < 4 {
+                idx.push(i + 1);
+            }
+            ptr.push(idx.len());
+        }
+        let order = nested_dissection(n, &ptr, &idx);
+        Perm::from_map(order).unwrap();
+    }
+
+    #[test]
+    fn nd_separator_goes_last_on_grid() {
+        // On a path graph 0-1-2-...-99, ND should not order an interior
+        // separator vertex first.
+        let n = 100;
+        let mut ptr = vec![0usize];
+        let mut idx = Vec::new();
+        for i in 0..n {
+            if i > 0 {
+                idx.push(i - 1);
+            }
+            if i + 1 < n {
+                idx.push(i + 1);
+            }
+            ptr.push(idx.len());
+        }
+        let order = nested_dissection(n, &ptr, &idx);
+        Perm::from_map(order.clone()).unwrap();
+        // last-ordered vertex should be an interior (separator) vertex
+        let last = order[n - 1];
+        assert!(last > 5 && last < n - 5, "last={last} not interior");
+    }
+
+    #[test]
+    fn nd_empty_graph() {
+        assert_eq!(nested_dissection(0, &[0], &[]), Vec::<usize>::new());
+    }
+}

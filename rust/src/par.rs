@@ -1,0 +1,150 @@
+//! Minimal threading substrate: done-flags with acquire/release publication
+//! and flop-balanced chunk partitioning. (tokio/rayon are unavailable in the
+//! offline registry; the paper's scheduler is custom anyway — std::thread +
+//! atomics express it directly.)
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Resolve a requested thread count (0 = use all available cores).
+pub fn effective_threads(requested: usize) -> usize {
+    let avail = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    if requested == 0 {
+        avail
+    } else {
+        requested
+    }
+}
+
+/// One done-flag per node; set with Release after a node's storage is
+/// final, awaited with Acquire before reading it.
+pub struct DoneFlags {
+    flags: Vec<AtomicU32>,
+}
+
+impl DoneFlags {
+    /// All-clear flags for `n` nodes.
+    pub fn new(n: usize) -> Self {
+        DoneFlags {
+            flags: (0..n).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+
+    /// Publish node `i` as complete.
+    #[inline]
+    pub fn set(&self, i: usize) {
+        self.flags[i].store(1, Ordering::Release);
+    }
+
+    /// True if node `i` is complete (Acquire).
+    #[inline]
+    pub fn is_set(&self, i: usize) -> bool {
+        self.flags[i].load(Ordering::Acquire) == 1
+    }
+
+    /// Spin (with backoff) until node `i` completes — the pipeline-mode
+    /// wait. Safe against missed wakeups because producers always store 1.
+    #[inline]
+    pub fn wait(&self, i: usize) {
+        let mut spins = 0u32;
+        while !self.is_set(i) {
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// Split `items` (with weights) into `parts` contiguous chunks with roughly
+/// equal weight; returns (start, end) index pairs. Used to balance bulk
+/// levels across threads by flops.
+pub fn balanced_chunks(weights: &[f64], parts: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    let parts = parts.max(1);
+    let total: f64 = weights.iter().sum();
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut consumed = 0.0;
+    for p in 0..parts {
+        let remaining_parts = (parts - p) as f64;
+        let target = (total - consumed) / remaining_parts;
+        let mut end = start;
+        let mut acc = 0.0;
+        while end < n && (acc < target || end == start) {
+            // leave enough items for remaining parts? contiguous greedy is
+            // fine for our level sizes
+            acc += weights[end];
+            end += 1;
+        }
+        if p == parts - 1 {
+            end = n;
+        }
+        out.push((start, end.min(n)));
+        consumed += acc;
+        start = end.min(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let w: Vec<f64> = (0..37).map(|i| (i % 5 + 1) as f64).collect();
+        for parts in [1usize, 2, 3, 7, 40] {
+            let ch = balanced_chunks(&w, parts);
+            assert_eq!(ch.len(), parts);
+            let mut pos = 0;
+            for &(s, e) in &ch {
+                assert_eq!(s, pos);
+                assert!(e >= s);
+                pos = e;
+            }
+            assert_eq!(pos, w.len());
+        }
+    }
+
+    #[test]
+    fn chunks_are_roughly_balanced() {
+        let w = vec![1.0; 100];
+        let ch = balanced_chunks(&w, 4);
+        for &(s, e) in &ch {
+            let sum = (e - s) as f64;
+            assert!((sum - 25.0).abs() <= 2.0, "{sum}");
+        }
+    }
+
+    #[test]
+    fn done_flags_roundtrip() {
+        let f = DoneFlags::new(3);
+        assert!(!f.is_set(1));
+        f.set(1);
+        assert!(f.is_set(1));
+        f.wait(1); // returns immediately
+    }
+
+    #[test]
+    fn done_flags_cross_thread() {
+        let f = std::sync::Arc::new(DoneFlags::new(1));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            f2.set(0);
+        });
+        f.wait(0);
+        assert!(f.is_set(0));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn effective_threads_resolves_zero() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

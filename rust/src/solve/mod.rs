@@ -1,0 +1,6 @@
+//! Forward/backward substitution (sequential and partition-based parallel)
+//! and iterative refinement.
+
+pub mod substitution;
+
+pub use substitution::{backward, backward_parallel, forward, forward_parallel};

@@ -1,0 +1,251 @@
+//! Parallel forward-backward substitution (paper §2.3, Fig. 3).
+//!
+//! The triangular solves reuse the factorization DAG: HYLU's "bulk-
+//! sequential" dual mode processes wide levels in parallel with a barrier
+//! per level (nonzeros balanced across threads by node weights) and the
+//! remaining long dependent chain sequentially on one thread — per-node
+//! spin-waiting is not worth it for the tiny per-node solve work. Backward
+//! substitution uses the *reverse* levelization.
+//!
+//! All routines operate in factor-row space: the caller (coordinator) has
+//! already applied the static + supernode pivot permutations and scalings.
+
+use std::sync::Barrier;
+
+use crate::numeric::LuFactors;
+use crate::par::balanced_chunks;
+use crate::symbolic::{NodeSym, Symbolic};
+
+/// Forward solve `y <- L^{-1} y` for one node.
+#[inline]
+fn forward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &mut [f64]) {
+    let first = nd.first as usize;
+    let w = nd.width as usize;
+    let nl = nd.nl();
+    let lcols = &sym.lcols[nd.l_start..nd.l_end];
+    if nd.is_super {
+        let stride = nd.panel_width();
+        let p = fac.panel(id);
+        for r in 0..w {
+            let base = r * stride;
+            let mut s = y[first + r];
+            for (c, &j) in lcols.iter().enumerate() {
+                s -= p[base + c] * y[j as usize];
+            }
+            for kk in 0..r {
+                s -= p[base + nl + kk] * y[first + kk];
+            }
+            y[first + r] = s;
+        }
+    } else {
+        let mut s = y[first];
+        for (c, &j) in lcols.iter().enumerate() {
+            s -= fac.lvals[nd.l_start + c] * y[j as usize];
+        }
+        y[first] = s;
+    }
+}
+
+/// Backward solve `y <- U^{-1} y` for one node.
+#[inline]
+fn backward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &mut [f64]) {
+    let first = nd.first as usize;
+    let w = nd.width as usize;
+    let nl = nd.nl();
+    let ucols = &sym.ucols[nd.u_start..nd.u_end];
+    if nd.is_super {
+        let stride = nd.panel_width();
+        let p = fac.panel(id);
+        for r in (0..w).rev() {
+            let base = r * stride;
+            let mut s = y[first + r];
+            let utail = &p[base + nl + w..base + stride];
+            for (c, &j) in ucols.iter().enumerate() {
+                s -= utail[c] * y[j as usize];
+            }
+            for kk in r + 1..w {
+                s -= p[base + nl + kk] * y[first + kk];
+            }
+            y[first + r] = s / p[base + nl + r];
+        }
+    } else {
+        let mut s = y[first];
+        for (c, &j) in ucols.iter().enumerate() {
+            s -= fac.uvals[nd.u_start + c] * y[j as usize];
+        }
+        y[first] = s / fac.diag[first];
+    }
+}
+
+/// Sequential forward substitution: `y <- L^{-1} y`.
+pub fn forward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
+    for (id, nd) in sym.nodes.iter().enumerate() {
+        forward_node(nd, sym, fac, id, y);
+    }
+}
+
+/// Sequential backward substitution: `y <- U^{-1} y`.
+pub fn backward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
+    for (id, nd) in sym.nodes.iter().enumerate().rev() {
+        backward_node(nd, sym, fac, id, y);
+    }
+}
+
+/// Shared-mutable solution vector for the level-parallel solves.
+/// Safety: nodes in one level write disjoint `y` rows and only read rows
+/// finished in earlier levels (barrier-separated).
+struct YPtr(*mut f64);
+unsafe impl Send for YPtr {}
+unsafe impl Sync for YPtr {}
+
+/// Parallel forward substitution (bulk-sequential dual mode).
+pub fn forward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads: usize) {
+    let sched = &sym.schedule;
+    if nthreads <= 1 || sched.bulk_levels == 0 {
+        return forward(sym, fac, y);
+    }
+    let yp = YPtr(y.as_mut_ptr());
+    let ylen = y.len();
+    let barrier = Barrier::new(nthreads);
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let ypr = &yp;
+            let barrierr = &barrier;
+            scope.spawn(move || {
+                let y = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
+                for lv in 0..sched.bulk_levels {
+                    let ids = sched.nodes_at(lv);
+                    let weights: Vec<f64> = ids
+                        .iter()
+                        .map(|&id| (sym.nodes[id as usize].nl() + 1) as f64)
+                        .collect();
+                    let (s, e) = balanced_chunks(&weights, nthreads)[t];
+                    for &id in &ids[s..e] {
+                        forward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                    }
+                    barrierr.wait();
+                }
+                // sequential tail on thread 0
+                if t == 0 {
+                    for lv in sched.bulk_levels..sched.nlevels() {
+                        for &id in sched.nodes_at(lv) {
+                            forward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Parallel backward substitution (bulk-sequential dual mode on the
+/// reverse levelization).
+pub fn backward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads: usize) {
+    let sched = &sym.schedule;
+    if nthreads <= 1 || sched.rbulk_levels == 0 {
+        return backward(sym, fac, y);
+    }
+    let yp = YPtr(y.as_mut_ptr());
+    let ylen = y.len();
+    let barrier = Barrier::new(nthreads);
+    let nrlev = sched.rlevel_ptr.len() - 1;
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let ypr = &yp;
+            let barrierr = &barrier;
+            scope.spawn(move || {
+                let y = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
+                for lv in 0..sched.rbulk_levels {
+                    let ids =
+                        &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]];
+                    let weights: Vec<f64> = ids
+                        .iter()
+                        .map(|&id| (sym.nodes[id as usize].nu() + 1) as f64)
+                        .collect();
+                    let (s, e) = balanced_chunks(&weights, nthreads)[t];
+                    for &id in &ids[s..e] {
+                        backward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                    }
+                    barrierr.wait();
+                }
+                if t == 0 {
+                    for lv in sched.rbulk_levels..nrlev {
+                        for &id in
+                            &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]]
+                        {
+                            backward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::factor::{factor, NativeGemm};
+    use crate::numeric::select::KernelMode;
+    use crate::numeric::PivotConfig;
+    use crate::sparse::gen;
+    use crate::symbolic::{analyze_pattern, MergePolicy};
+    use crate::testutil::max_abs_diff;
+
+    /// Factor + substitute must invert P·A for a matrix that needs no
+    /// global pivoting (diagonally dominant).
+    fn check_solve(a: &crate::sparse::csr::Csr, mode: KernelMode, tol: f64) {
+        let policy = match mode {
+            KernelMode::RowRow => MergePolicy::None,
+            _ => MergePolicy::Exact { max_width: 16 },
+        };
+        let sym = analyze_pattern(a, policy, 4);
+        let cfg = PivotConfig::default();
+        let mut fac = LuFactors::alloc(&sym);
+        factor(a, &sym, mode, &cfg, &mut fac, false, &NativeGemm);
+        // true solution of A x = b with x* = ramp
+        let xt: Vec<f64> = (0..a.n).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut b = vec![0.0; a.n];
+        a.matvec(&xt, &mut b);
+        // apply pivot perm: y[i] = b[pivot_perm[i]]
+        let mut y: Vec<f64> = (0..a.n).map(|i| b[fac.pivot_perm[i] as usize]).collect();
+        forward(&sym, &fac, &mut y);
+        backward(&sym, &fac, &mut y);
+        assert!(
+            max_abs_diff(&y, &xt) < tol,
+            "solve error {} (mode {mode})",
+            max_abs_diff(&y, &xt)
+        );
+        // parallel variants must agree with sequential exactly
+        for threads in [2usize, 4] {
+            let mut y2: Vec<f64> = (0..a.n).map(|i| b[fac.pivot_perm[i] as usize]).collect();
+            forward_parallel(&sym, &fac, &mut y2, threads);
+            backward_parallel(&sym, &fac, &mut y2, threads);
+            assert_eq!(y, y2, "parallel solve mismatch t={threads}");
+        }
+    }
+
+    #[test]
+    fn solves_identity() {
+        check_solve(&crate::sparse::csr::Csr::identity(20), KernelMode::RowRow, 1e-14);
+    }
+
+    #[test]
+    fn solves_grid_all_modes() {
+        let a = gen::grid2d(9, 9);
+        for mode in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
+            check_solve(&a, mode, 1e-8);
+        }
+    }
+
+    #[test]
+    fn solves_banded_and_power() {
+        check_solve(&gen::banded(80, 3, 2), KernelMode::SupSup, 1e-7);
+        check_solve(&gen::power_network(150, 3), KernelMode::SupRow, 1e-7);
+    }
+
+    #[test]
+    fn solves_circuit() {
+        check_solve(&gen::circuit(300, 4), KernelMode::RowRow, 1e-7);
+    }
+}

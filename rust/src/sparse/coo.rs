@@ -1,0 +1,134 @@
+//! Coordinate-format builder. Duplicate entries are summed on conversion,
+//! matching MatrixMarket semantics.
+
+use crate::sparse::csr::Csr;
+
+/// Coordinate-format sparse matrix builder (square, f64).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    /// Dimension (rows == cols).
+    pub n: usize,
+    /// Row indices of entries.
+    pub rows: Vec<usize>,
+    /// Column indices of entries.
+    pub cols: Vec<usize>,
+    /// Values of entries.
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty builder for an `n x n` matrix.
+    pub fn new(n: usize) -> Self {
+        Coo {
+            n,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// With preallocated capacity.
+    pub fn with_capacity(n: usize, cap: usize) -> Self {
+        Coo {
+            n,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Append one entry. Duplicates are allowed and summed by `to_csr`.
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n, "({i},{j}) out of {0}", self.n);
+        self.rows.push(i);
+        self.cols.push(j);
+        self.vals.push(v);
+    }
+
+    /// Number of raw (pre-dedup) entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR, summing duplicates and dropping explicit zeros that
+    /// result from cancellation is NOT done (solvers want the full pattern).
+    pub fn to_csr(&self) -> Csr {
+        let n = self.n;
+        let nnz = self.vals.len();
+        // counting sort by row
+        let mut count = vec![0usize; n + 1];
+        for &r in &self.rows {
+            count[r + 1] += 1;
+        }
+        for i in 0..n {
+            count[i + 1] += count[i];
+        }
+        let mut order = vec![0usize; nnz];
+        {
+            let mut next = count.clone();
+            for (e, &r) in self.rows.iter().enumerate() {
+                order[next[r]] = e;
+                next[r] += 1;
+            }
+        }
+        // per-row: sort by column, merge duplicates
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        indptr.push(0usize);
+        let mut rowbuf: Vec<(usize, f64)> = Vec::new();
+        for r in 0..n {
+            rowbuf.clear();
+            for &e in &order[count[r]..count[r + 1]] {
+                rowbuf.push((self.cols[e], self.vals[e]));
+            }
+            rowbuf.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < rowbuf.len() {
+                let c = rowbuf[k].0;
+                let mut v = rowbuf[k].1;
+                let mut m = k + 1;
+                while m < rowbuf.len() && rowbuf[m].0 == c {
+                    v += rowbuf[m].1;
+                    m += 1;
+                }
+                indices.push(c);
+                vals.push(v);
+                k = m;
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            n,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_sums_duplicates() {
+        let mut c = Coo::new(3);
+        c.push(0, 2, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(0, 2, 3.0); // duplicate with first
+        c.push(2, 1, -1.0);
+        let m = c.to_csr();
+        assert_eq!(m.indptr, vec![0, 2, 2, 3]);
+        assert_eq!(m.indices, vec![0, 2, 1]);
+        assert_eq!(m.vals, vec![2.0, 4.0, -1.0]);
+    }
+
+    #[test]
+    fn empty_rows_are_represented() {
+        let c = Coo::new(4);
+        let m = c.to_csr();
+        assert_eq!(m.indptr, vec![0, 0, 0, 0, 0]);
+        assert_eq!(m.nnz(), 0);
+    }
+}

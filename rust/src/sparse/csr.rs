@@ -1,0 +1,341 @@
+//! Compressed-sparse-row matrix — HYLU's primary format (the paper's
+//! factorization is row-major up-looking).
+
+use crate::sparse::perm::Perm;
+use crate::testutil::Dense;
+use crate::{Error, Result};
+
+/// Square CSR matrix with sorted column indices per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Dimension.
+    pub n: usize,
+    /// Row pointer array, length `n + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted ascending within each row.
+    pub indices: Vec<usize>,
+    /// Values aligned with `indices`.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            n,
+            indptr: (0..=n).collect(),
+            indices: (0..n).collect(),
+            vals: vec![1.0; n],
+        }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `i`.
+    pub fn row_indices(&self, i: usize) -> &[usize] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Values of row `i`.
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.vals[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Validate structural invariants (sorted, in-bounds, monotone indptr).
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.n + 1 {
+            return Err(Error::Invalid("indptr length".into()));
+        }
+        if *self.indptr.last().unwrap() != self.indices.len()
+            || self.indices.len() != self.vals.len()
+        {
+            return Err(Error::Invalid("nnz mismatch".into()));
+        }
+        for i in 0..self.n {
+            if self.indptr[i] > self.indptr[i + 1] {
+                return Err(Error::Invalid(format!("indptr not monotone at {i}")));
+            }
+            let row = self.row_indices(i);
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::Invalid(format!("row {i} not strictly sorted")));
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last >= self.n {
+                    return Err(Error::Invalid(format!("row {i} column out of bounds")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for i in 0..self.n {
+            let mut s = 0.0;
+            for (k, &j) in self.row_indices(i).iter().enumerate() {
+                s += self.row_vals(i)[k] * x[j];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// `‖Ax − b‖₁ / ‖b‖₁` — the paper's Fig. 11 residual metric.
+    pub fn relative_residual(&self, x: &[f64], b: &[f64]) -> f64 {
+        let mut ax = vec![0.0; self.n];
+        self.matvec(x, &mut ax);
+        let num: f64 = ax.iter().zip(b).map(|(p, q)| (p - q).abs()).sum();
+        let den: f64 = b.iter().map(|v| v.abs()).sum();
+        num / den.max(1e-300)
+    }
+
+    /// Transpose (also CSR; equals CSC view of self).
+    pub fn transpose(&self) -> Csr {
+        let n = self.n;
+        let mut indptr = vec![0usize; n + 1];
+        for &j in &self.indices {
+            indptr[j + 1] += 1;
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0usize; self.nnz()];
+        let mut vals = vec![0.0; self.nnz()];
+        let mut next = indptr.clone();
+        for i in 0..n {
+            for (k, &j) in self.row_indices(i).iter().enumerate() {
+                let p = next[j];
+                indices[p] = i;
+                vals[p] = self.row_vals(i)[k];
+                next[j] += 1;
+            }
+        }
+        Csr {
+            n,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+
+    /// Pattern of `A + Aᵀ` (no diagonal added), as index-only CSR.
+    /// Used by the fill-reducing orderings, which need a symmetric graph.
+    pub fn symmetrized_pattern(&self) -> (Vec<usize>, Vec<usize>) {
+        let n = self.n;
+        let at = self.transpose();
+        let mut indptr = vec![0usize; n + 1];
+        let mut indices = Vec::with_capacity(self.nnz() * 2);
+        let mut mark = vec![usize::MAX; n];
+        for i in 0..n {
+            for &j in self.row_indices(i).iter().chain(at.row_indices(i)) {
+                if j != i && mark[j] != i {
+                    mark[j] = i;
+                    indices.push(j);
+                }
+            }
+            indptr[i + 1] = indices.len();
+            indices[indptr[i]..].sort_unstable();
+        }
+        (indptr, indices)
+    }
+
+    /// Apply row permutation, column permutation and row/column scalings:
+    /// returns `B = Dr · P · A · Q · Dc` where `B[i][j] = dr[p[i]] *
+    /// A[p[i]][q[j]] * dc[q[j]]`, with `p[i]` = source row placed at `i`.
+    pub fn permute_scale(&self, p: &Perm, q: &Perm, dr: &[f64], dc: &[f64]) -> Csr {
+        let n = self.n;
+        let mut indptr = vec![0usize; n + 1];
+        for i in 0..n {
+            let src = p.map[i];
+            indptr[i + 1] = indptr[i] + (self.indptr[src + 1] - self.indptr[src]);
+        }
+        let mut indices = vec![0usize; self.nnz()];
+        let mut vals = vec![0.0; self.nnz()];
+        let mut buf: Vec<(usize, f64)> = Vec::new();
+        for i in 0..n {
+            let src = p.map[i];
+            buf.clear();
+            for (k, &j) in self.row_indices(src).iter().enumerate() {
+                let newj = q.inv[j];
+                buf.push((newj, dr[src] * self.row_vals(src)[k] * dc[j]));
+            }
+            buf.sort_unstable_by_key(|&(c, _)| c);
+            let base = indptr[i];
+            for (k, &(c, v)) in buf.iter().enumerate() {
+                indices[base + k] = c;
+                vals[base + k] = v;
+            }
+        }
+        Csr {
+            n,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+
+    /// Dense copy (test oracle only; panics if `n` is large).
+    pub fn to_dense(&self) -> Dense {
+        assert!(self.n <= 4096, "to_dense is a test oracle for small n");
+        let mut d = Dense::zeros(self.n);
+        for i in 0..self.n {
+            for (k, &j) in self.row_indices(i).iter().enumerate() {
+                d.set(i, j, d.get(i, j) + self.row_vals(i)[k]);
+            }
+        }
+        d
+    }
+
+    /// Max absolute value, per column. Used by MC64 scaling.
+    pub fn col_max_abs(&self) -> Vec<f64> {
+        let mut m = vec![0.0f64; self.n];
+        for i in 0..self.n {
+            for (k, &j) in self.row_indices(i).iter().enumerate() {
+                m[j] = m[j].max(self.row_vals(i)[k].abs());
+            }
+        }
+        m
+    }
+
+    /// Largest absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.vals.iter().fold(0.0, |a, &v| a.max(v.abs()))
+    }
+
+    /// 1-norm (max column sum of absolute values).
+    pub fn norm1(&self) -> f64 {
+        let mut s = vec![0.0f64; self.n];
+        for i in 0..self.n {
+            for (k, &j) in self.row_indices(i).iter().enumerate() {
+                s[j] += self.row_vals(i)[k].abs();
+            }
+        }
+        s.into_iter().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::testutil::Prng;
+
+    fn sample() -> Csr {
+        let mut c = Coo::new(4);
+        for (i, j, v) in [
+            (0, 0, 4.0),
+            (0, 2, 1.0),
+            (1, 1, 3.0),
+            (2, 0, -1.0),
+            (2, 2, 5.0),
+            (2, 3, 2.0),
+            (3, 3, 1.0),
+        ] {
+            c.push(i, j, v);
+        }
+        c.to_csr()
+    }
+
+    #[test]
+    fn validate_accepts_good_matrix() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let mut m = sample();
+        m.indices.swap(4, 5); // makes row 2 unsorted
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Csr::identity(5);
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut y = [0.0; 5];
+        m.matvec(&x, &mut y);
+        assert_eq!(y.to_vec(), x.to_vec());
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let mut rng = Prng::new(5);
+        let mut c = Coo::new(8);
+        for _ in 0..30 {
+            c.push(rng.below(8), rng.below(8), rng.normal());
+        }
+        let m = c.to_csr();
+        let t = m.transpose();
+        let dm = m.to_dense();
+        let dt = t.to_dense();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(dm.get(i, j), dt.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn permute_scale_matches_dense() {
+        let mut rng = Prng::new(9);
+        let n = 7;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            c.push(i, i, 2.0 + rng.uniform());
+            for _ in 0..3 {
+                c.push(i, rng.below(n), rng.normal());
+            }
+        }
+        let m = c.to_csr();
+        let p = Perm::from_map(rng.permutation(n)).unwrap();
+        let q = Perm::from_map(rng.permutation(n)).unwrap();
+        let dr: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let dc: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let b = m.permute_scale(&p, &q, &dr, &dc);
+        b.validate().unwrap();
+        let dm = m.to_dense();
+        let db = b.to_dense();
+        for i in 0..n {
+            for j in 0..n {
+                let want = dr[p.map[i]] * dm.get(p.map[i], q.map[j]) * dc[q.map[j]];
+                assert!((db.get(i, j) - want).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetrized_pattern_is_symmetric_and_sorted() {
+        let m = sample();
+        let (ptr, idx) = m.symmetrized_pattern();
+        let n = m.n;
+        let has = |i: usize, j: usize| idx[ptr[i]..ptr[i + 1]].contains(&j);
+        for i in 0..n {
+            let row = &idx[ptr[i]..ptr[i + 1]];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &j in row {
+                assert_ne!(j, i);
+                assert!(has(j, i), "asymmetric at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_zero_for_exact_solution() {
+        let m = Csr::identity(3);
+        let b = [1.0, -2.0, 3.0];
+        assert_eq!(m.relative_residual(&b, &b), 0.0);
+    }
+}

@@ -1,0 +1,390 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! The paper evaluates on 37 SuiteSparse matrices spanning circuit
+//! simulation, power networks, PDE meshes, and optimization (KKT) problems.
+//! This environment has no network access, so these generators produce the
+//! same *sparsity classes* at laptop scale (DESIGN.md §2); the hybrid-kernel
+//! claim varies exactly over this class axis, which is what matters for
+//! reproducing the paper's comparisons. [`crate::bench_suite`] instantiates
+//! the 37-matrix suite from these.
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::testutil::Prng;
+
+/// 5-point Laplacian on an `nx` × `ny` grid (G3_circuit / thermal-class:
+/// symmetric pattern, large supernodes after ND ordering).
+pub fn grid2d(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut c = Coo::with_capacity(n, 5 * n);
+    let id = |x: usize, y: usize| y * nx + x;
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = id(x, y);
+            c.push(i, i, 4.0);
+            if x > 0 {
+                c.push(i, id(x - 1, y), -1.0);
+            }
+            if x + 1 < nx {
+                c.push(i, id(x + 1, y), -1.0);
+            }
+            if y > 0 {
+                c.push(i, id(x, y - 1), -1.0);
+            }
+            if y + 1 < ny {
+                c.push(i, id(x, y + 1), -1.0);
+            }
+        }
+    }
+    c.to_csr()
+}
+
+/// 7-point Laplacian on an `nx` × `ny` × `nz` grid (3-D mesh class: the
+/// heaviest fill, where level-3 BLAS kernels dominate).
+pub fn grid3d(nx: usize, ny: usize, nz: usize) -> Csr {
+    let n = nx * ny * nz;
+    let mut c = Coo::with_capacity(n, 7 * n);
+    let id = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = id(x, y, z);
+                c.push(i, i, 6.0);
+                if x > 0 {
+                    c.push(i, id(x - 1, y, z), -1.0);
+                }
+                if x + 1 < nx {
+                    c.push(i, id(x + 1, y, z), -1.0);
+                }
+                if y > 0 {
+                    c.push(i, id(x, y - 1, z), -1.0);
+                }
+                if y + 1 < ny {
+                    c.push(i, id(x, y + 1, z), -1.0);
+                }
+                if z > 0 {
+                    c.push(i, id(x, y, z - 1), -1.0);
+                }
+                if z + 1 < nz {
+                    c.push(i, id(x, y, z + 1), -1.0);
+                }
+            }
+        }
+    }
+    c.to_csr()
+}
+
+/// Convection-diffusion on a 2-D grid: like [`grid2d`] but with an
+/// unsymmetric advection term (upwind), so values (not pattern) are
+/// unsymmetric — exercises static pivoting.
+pub fn convdiff2d(nx: usize, ny: usize, peclet: f64, seed: u64) -> Csr {
+    let n = nx * ny;
+    let mut rng = Prng::new(seed);
+    let mut c = Coo::with_capacity(n, 5 * n);
+    let id = |x: usize, y: usize| y * nx + x;
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = id(x, y);
+            let wx = peclet * rng.range_f64(0.0, 1.0);
+            let wy = peclet * rng.range_f64(0.0, 1.0);
+            c.push(i, i, 4.0 + wx + wy);
+            if x > 0 {
+                c.push(i, id(x - 1, y), -1.0 - wx);
+            }
+            if x + 1 < nx {
+                c.push(i, id(x + 1, y), -1.0);
+            }
+            if y > 0 {
+                c.push(i, id(x, y - 1), -1.0 - wy);
+            }
+            if y + 1 < ny {
+                c.push(i, id(x, y + 1), -1.0);
+            }
+        }
+    }
+    c.to_csr()
+}
+
+/// Circuit-simulation class (ASIC_680k / circuit5M / rajat-like): very
+/// sparse bounded-degree rows plus a few nearly-dense rows/columns (power
+/// and ground rails). Unsymmetric pattern; strong diagonal after MNA
+/// stamping. This is the class where supernodal/BLAS solvers drown in fill.
+pub fn circuit(n: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut c = Coo::with_capacity(n, 6 * n);
+    let rails = (n / 2000).clamp(1, 8); // a few global nets
+    for i in 0..n {
+        // conductance stamp to a handful of "neighbouring" nets: locality
+        // like a placed netlist — most connections are short-range.
+        let deg = 1 + rng.below(4);
+        let mut diag = 1e-3;
+        for _ in 0..deg {
+            let span = 1 + rng.below(50);
+            let j = if rng.next_u64() & 1 == 0 {
+                i.saturating_sub(span)
+            } else {
+                (i + span).min(n - 1)
+            };
+            if j != i {
+                let g = rng.range_f64(0.1, 2.0);
+                c.push(i, j, -g);
+                diag += g;
+                // MNA stamps are structurally symmetric but value-unsymmetric
+                // (devices): add the mirror entry with a different value,
+                // sometimes missing (controlled sources).
+                if rng.uniform() < 0.85 {
+                    c.push(j, i, -g * rng.range_f64(0.5, 1.5));
+                }
+            }
+        }
+        // rail connections
+        if rng.uniform() < 0.3 {
+            let r = rng.below(rails);
+            let g = rng.range_f64(0.5, 3.0);
+            c.push(i, r, -g);
+            c.push(r, i, -g);
+            diag += g;
+        }
+        c.push(i, i, diag + rng.range_f64(0.5, 2.0));
+    }
+    // beef up rail diagonals (they collected many stamps)
+    for r in 0..rails {
+        c.push(r, r, 50.0);
+    }
+    c.to_csr()
+}
+
+/// Power-network class: tree-like transmission grid (degree ≈ 2–3) with a
+/// few loop-closing branches. Symmetric pattern, unsymmetric values.
+pub fn power_network(n: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut c = Coo::with_capacity(n, 4 * n);
+    let mut diag = vec![0.01f64; n];
+    // spanning tree: each node i>0 attaches to a previous node biased local
+    for i in 1..n {
+        let span = 1 + rng.below(20.min(i));
+        let j = i - span.min(i);
+        let g = rng.range_f64(0.2, 2.0);
+        c.push(i, j, -g);
+        c.push(j, i, -g * rng.range_f64(0.9, 1.1));
+        diag[i] += g;
+        diag[j] += g;
+    }
+    // loop closures (~15% extra branches)
+    for _ in 0..n / 7 {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i != j {
+            let g = rng.range_f64(0.1, 1.0);
+            c.push(i, j, -g);
+            c.push(j, i, -g);
+            diag[i] += g;
+            diag[j] += g;
+        }
+    }
+    for i in 0..n {
+        c.push(i, i, diag[i] + 0.05);
+    }
+    c.to_csr()
+}
+
+/// Banded matrix with bandwidth `bw` (structured dense band: long
+/// supernode chains, the pipeline-mode stress case).
+pub fn banded(n: usize, bw: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut c = Coo::with_capacity(n, (2 * bw + 1) * n);
+    for i in 0..n {
+        let lo = i.saturating_sub(bw);
+        let hi = (i + bw + 1).min(n);
+        for j in lo..hi {
+            if j == i {
+                c.push(i, j, (2 * bw) as f64 + 1.0 + rng.uniform());
+            } else {
+                c.push(i, j, rng.nonzero());
+            }
+        }
+    }
+    c.to_csr()
+}
+
+/// Uniform random pattern with `per_row` off-diagonals per row and a
+/// dominant diagonal. The "no structure at all" control case.
+pub fn random_sparse(n: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut c = Coo::with_capacity(n, (per_row + 1) * n);
+    for i in 0..n {
+        let mut rowsum = 0.0;
+        for _ in 0..per_row {
+            let j = rng.below(n);
+            if j != i {
+                let v = rng.nonzero();
+                c.push(i, j, v);
+                rowsum += v.abs();
+            }
+        }
+        c.push(i, i, rowsum + 1.0 + rng.uniform());
+    }
+    c.to_csr()
+}
+
+/// KKT / saddle-point class (nlpkkt80-like): `[[H, Aᵀ], [A, -δI]]` with SPD
+/// stencil `H` (size `nh`) and random sparse constraints `A` (`m` rows).
+/// Small-magnitude (2,2) block: static pivoting (MC64) is essential — the
+/// class where PARDISO's default ordering explodes in the paper.
+pub fn kkt(nh: usize, m: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let n = nh + m;
+    let mut c = Coo::with_capacity(n, 8 * n);
+    // H: 1-D 3-point stencil (SPD)
+    for i in 0..nh {
+        c.push(i, i, 4.0 + rng.uniform());
+        if i > 0 {
+            c.push(i, i - 1, -1.0);
+            c.push(i - 1, i, -1.0);
+        }
+    }
+    // A: each constraint row touches ~4 H-variables
+    for r in 0..m {
+        let row = nh + r;
+        for _ in 0..4 {
+            let j = rng.below(nh);
+            let v = rng.nonzero();
+            c.push(row, j, v);
+            c.push(j, row, v);
+        }
+        // small regularization keeps it factorizable yet hard
+        c.push(row, row, -1e-4 * (1.0 + rng.uniform()));
+    }
+    c.to_csr()
+}
+
+/// Ill-conditioned Hamrle3-like case: circulant-ish unsymmetric pattern with
+/// geometrically-graded values (condition number ~1e14). Both solvers are
+/// expected to "fail" accuracy here, as in the paper's Fig. 11.
+pub fn ill_conditioned(n: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut c = Coo::with_capacity(n, 4 * n);
+    for i in 0..n {
+        // grade diag from 1 down to ~1e-14 across rows
+        let scale = 10f64.powf(-14.0 * (i as f64) / (n as f64 - 1.0).max(1.0));
+        c.push(i, i, scale * (1.0 + rng.uniform()));
+        let j1 = (i + 1) % n;
+        let j2 = (i + n / 3) % n;
+        if j1 != i {
+            c.push(i, j1, scale * rng.nonzero());
+        }
+        if j2 != i && j2 != j1 {
+            c.push(i, j2, scale * 0.5 * rng.nonzero());
+        }
+    }
+    c.to_csr()
+}
+
+/// A right-hand side with known solution `x* = (1, …)ᵀ` for accuracy tests:
+/// returns `b = A · 1`.
+pub fn rhs_for_ones(a: &Csr) -> Vec<f64> {
+    let x = vec![1.0; a.n];
+    let mut b = vec![0.0; a.n];
+    a.matvec(&x, &mut b);
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_shape_and_symmetry() {
+        let a = grid2d(5, 7);
+        assert_eq!(a.n, 35);
+        a.validate().unwrap();
+        assert_eq!(a, a.transpose());
+        assert_eq!(a.nnz(), 35 + 2 * (4 * 7 + 5 * 6));
+    }
+
+    #[test]
+    fn grid3d_has_seven_point_interior() {
+        let a = grid3d(4, 4, 4);
+        a.validate().unwrap();
+        // interior node (1,1,1)..(2,2,2) has 7 entries
+        let interior = (1 * 4 + 1) * 4 + 1;
+        assert_eq!(a.row_indices(interior).len(), 7);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        for (a, b) in [
+            (circuit(500, 3), circuit(500, 3)),
+            (power_network(300, 4), power_network(300, 4)),
+            (random_sparse(200, 5, 5), random_sparse(200, 5, 5)),
+        ] {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn circuit_is_very_sparse() {
+        let a = circuit(2000, 1);
+        a.validate().unwrap();
+        let avg = a.nnz() as f64 / a.n as f64;
+        assert!(avg < 10.0, "avg row nnz {avg} should be tiny");
+        // diagonal fully present
+        for i in 0..a.n {
+            assert!(a.row_indices(i).contains(&i), "row {i} lost diagonal");
+        }
+    }
+
+    #[test]
+    fn power_network_pattern_symmetric() {
+        let a = power_network(400, 9);
+        let at = a.transpose();
+        for i in 0..a.n {
+            assert_eq!(a.row_indices(i), at.row_indices(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn banded_bandwidth_respected() {
+        let a = banded(50, 3, 2);
+        for i in 0..a.n {
+            for &j in a.row_indices(i) {
+                assert!(i.abs_diff(j) <= 3);
+            }
+        }
+    }
+
+    #[test]
+    fn kkt_has_negative_bottom_block() {
+        let a = kkt(100, 30, 6);
+        assert_eq!(a.n, 130);
+        for r in 100..130 {
+            let d = a
+                .row_indices(r)
+                .iter()
+                .position(|&j| j == r)
+                .map(|k| a.row_vals(r)[k])
+                .unwrap();
+            assert!(d < 0.0 && d.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn ill_conditioned_grades_diagonal() {
+        let a = ill_conditioned(100, 7);
+        let d0 = a.row_vals(0)[a.row_indices(0).iter().position(|&j| j == 0).unwrap()];
+        let dn = a
+            .row_vals(99)
+            [a.row_indices(99).iter().position(|&j| j == 99).unwrap()];
+        assert!(d0.abs() / dn.abs() > 1e10);
+    }
+
+    #[test]
+    fn rhs_for_ones_matches_rowsums() {
+        let a = grid2d(4, 4);
+        let b = rhs_for_ones(&a);
+        for i in 0..a.n {
+            let s: f64 = a.row_vals(i).iter().sum();
+            assert!((b[i] - s).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! MatrixMarket I/O.
+//!
+//! The paper benchmarks 37 matrices from the SuiteSparse Matrix Collection,
+//! distributed in MatrixMarket format. This reader lets real SuiteSparse
+//! downloads run through the solver unchanged; the synthetic suite in
+//! [`crate::sparse::gen`] is the offline stand-in (DESIGN.md §2).
+//!
+//! Supported: `matrix coordinate real|integer|pattern general|symmetric|
+//! skew-symmetric`. `pattern` entries get value 1.0.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::{Error, Result};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a square MatrixMarket coordinate file into CSR.
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let file = std::fs::File::open(path)?;
+    let mut reader = BufReader::new(file);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") || h[1] != "matrix" {
+        return Err(Error::Io("not a MatrixMarket file".into()));
+    }
+    if h[2] != "coordinate" {
+        return Err(Error::Io(format!("unsupported format {}", h[2])));
+    }
+    let field = match h[3] {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => return Err(Error::Io(format!("unsupported field {other}"))),
+    };
+    let symmetry = match h[4] {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => return Err(Error::Io(format!("unsupported symmetry {other}"))),
+    };
+
+    let mut line = String::new();
+    // skip comments
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(Error::Io("missing size line".into()));
+        }
+        let t = line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break;
+        }
+    }
+    let dims: Vec<usize> = line
+        .split_whitespace()
+        .map(|s| s.parse().map_err(|_| Error::Io("bad size line".into())))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::Io("size line needs rows cols nnz".into()));
+    }
+    let (nr, nc, nnz) = (dims[0], dims[1], dims[2]);
+    if nr != nc {
+        return Err(Error::Io(format!("matrix not square: {nr}x{nc}")));
+    }
+    let mut coo = Coo::with_capacity(
+        nr,
+        if symmetry == Symmetry::General {
+            nnz
+        } else {
+            nnz * 2
+        },
+    );
+    let mut seen = 0usize;
+    while seen < nnz {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(Error::Io(format!("expected {nnz} entries, got {seen}")));
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Io("bad entry row".into()))?;
+        let j: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Io("bad entry col".into()))?;
+        let v: f64 = match field {
+            Field::Pattern => 1.0,
+            _ => it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| Error::Io("bad entry value".into()))?,
+        };
+        if i == 0 || j == 0 || i > nr || j > nc {
+            return Err(Error::Io(format!("entry ({i},{j}) out of bounds")));
+        }
+        let (i, j) = (i - 1, j - 1);
+        coo.push(i, j, v);
+        if i != j {
+            match symmetry {
+                Symmetry::Symmetric => coo.push(j, i, v),
+                Symmetry::SkewSymmetric => coo.push(j, i, -v),
+                Symmetry::General => {}
+            }
+        }
+        seen += 1;
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write CSR as `matrix coordinate real general`.
+pub fn write_matrix_market(path: &Path, a: &Csr) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by hylu")?;
+    writeln!(f, "{} {} {}", a.n, a.n, a.nnz())?;
+    for i in 0..a.n {
+        for (k, &j) in a.row_indices(i).iter().enumerate() {
+            writeln!(f, "{} {} {:.17e}", i + 1, j + 1, a.row_vals(i)[k])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn roundtrip_general() {
+        let a = gen::random_sparse(50, 4, 77);
+        let dir = std::env::temp_dir().join("hylu_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        let b = read_matrix_market(&p).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parses_symmetric_and_pattern() {
+        let dir = std::env::temp_dir().join("hylu_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n% c\n3 3 4\n1 1 2.0\n2 2 2.0\n3 3 2.0\n3 1 -1.0\n",
+        )
+        .unwrap();
+        let a = read_matrix_market(&p).unwrap();
+        assert_eq!(a.nnz(), 5);
+        let d = a.to_dense();
+        assert_eq!(d.get(0, 2), -1.0);
+        assert_eq!(d.get(2, 0), -1.0);
+
+        let q = dir.join("pat.mtx");
+        std::fs::write(
+            &q,
+            "%%MatrixMarket matrix coordinate pattern general\n2 2 3\n1 1\n2 2\n1 2\n",
+        )
+        .unwrap();
+        let b = read_matrix_market(&q).unwrap();
+        assert_eq!(b.nnz(), 3);
+        assert!(b.vals.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn rejects_rectangular() {
+        let dir = std::env::temp_dir().join("hylu_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rect.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n",
+        )
+        .unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+}

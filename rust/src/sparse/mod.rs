@@ -1,0 +1,13 @@
+//! Sparse-matrix substrate: storage formats, permutations/scalings,
+//! MatrixMarket I/O, and the synthetic workload generators that stand in
+//! for the paper's SuiteSparse benchmark set (see DESIGN.md §2).
+
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod perm;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use perm::Perm;

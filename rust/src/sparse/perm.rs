@@ -1,0 +1,127 @@
+//! Permutation vectors with their inverses, in the "map" convention:
+//! `map[new] = old` (the source index placed at position `new`), and
+//! `inv[old] = new`.
+
+use crate::{Error, Result};
+
+/// A validated permutation of `0..n` with cached inverse.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Perm {
+    /// `map[new] = old`.
+    pub map: Vec<usize>,
+    /// `inv[old] = new`.
+    pub inv: Vec<usize>,
+}
+
+impl Perm {
+    /// Identity permutation.
+    pub fn identity(n: usize) -> Self {
+        Perm {
+            map: (0..n).collect(),
+            inv: (0..n).collect(),
+        }
+    }
+
+    /// Build from a `map[new] = old` vector, validating bijectivity.
+    pub fn from_map(map: Vec<usize>) -> Result<Self> {
+        let n = map.len();
+        let mut inv = vec![usize::MAX; n];
+        for (newi, &old) in map.iter().enumerate() {
+            if old >= n || inv[old] != usize::MAX {
+                return Err(Error::Invalid(format!("not a permutation at {newi}")));
+            }
+            inv[old] = newi;
+        }
+        Ok(Perm { map, inv })
+    }
+
+    /// Build from an `inv[old] = new` vector.
+    pub fn from_inv(inv: Vec<usize>) -> Result<Self> {
+        let p = Perm::from_map(inv)?; // validates bijectivity
+        Ok(Perm {
+            map: p.inv,
+            inv: p.map,
+        })
+    }
+
+    /// Dimension.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Compose: apply `self` first, then `other` — the combined permutation
+    /// `r` with `r.map[k] = self.map[other.map[k]]`.
+    pub fn then(&self, other: &Perm) -> Perm {
+        let map: Vec<usize> = other.map.iter().map(|&k| self.map[k]).collect();
+        Perm::from_map(map).expect("composition of permutations is a permutation")
+    }
+
+    /// Apply to a vector: `out[new] = x[map[new]]`.
+    pub fn gather(&self, x: &[f64]) -> Vec<f64> {
+        self.map.iter().map(|&old| x[old]).collect()
+    }
+
+    /// Inverse-apply: `out[map[new]] = x[new]`.
+    pub fn scatter(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        for (newi, &old) in self.map.iter().enumerate() {
+            out[old] = x[newi];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prng;
+
+    #[test]
+    fn identity_roundtrip() {
+        let p = Perm::identity(5);
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(p.gather(&x), x.to_vec());
+        assert_eq!(p.scatter(&x), x.to_vec());
+    }
+
+    #[test]
+    fn from_map_rejects_duplicates() {
+        assert!(Perm::from_map(vec![0, 0, 2]).is_err());
+        assert!(Perm::from_map(vec![0, 3]).is_err());
+    }
+
+    #[test]
+    fn gather_scatter_are_inverse() {
+        let mut rng = Prng::new(2);
+        for n in [1usize, 2, 9, 40] {
+            let p = Perm::from_map(rng.permutation(n)).unwrap();
+            let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            assert_eq!(p.scatter(&p.gather(&x)), x);
+            assert_eq!(p.gather(&p.scatter(&x)), x);
+        }
+    }
+
+    #[test]
+    fn inv_is_inverse_map() {
+        let mut rng = Prng::new(8);
+        let p = Perm::from_map(rng.permutation(12)).unwrap();
+        for newi in 0..12 {
+            assert_eq!(p.inv[p.map[newi]], newi);
+        }
+    }
+
+    #[test]
+    fn then_composes() {
+        let mut rng = Prng::new(4);
+        let a = Perm::from_map(rng.permutation(9)).unwrap();
+        let b = Perm::from_map(rng.permutation(9)).unwrap();
+        let c = a.then(&b);
+        let x: Vec<f64> = (0..9).map(|i| (i * i) as f64).collect();
+        assert_eq!(c.gather(&x), b.gather(&a.gather(&x)));
+    }
+}

@@ -1,0 +1,632 @@
+//! Up-looking symbolic LU factorization with on-the-fly supernode
+//! detection.
+//!
+//! For each row `i` of the permuted matrix, the fill pattern is the reach of
+//! the row's column set in the DAG whose edges are `k -> j` for `u_kj != 0`,
+//! `k < i` (Gilbert–Peierls, transposed to rows). Supernodes are grown
+//! greedily while rows match the current shared pattern under the active
+//! [`MergePolicy`]; relaxation *pads* patterns (explicit zeros) which keeps
+//! all later reaches consistent because rows are processed in order and
+//! padded patterns only ever grow (see DESIGN.md §5).
+
+use crate::sparse::csr::Csr;
+use crate::symbolic::{dag, Group, NodeSym, Symbolic};
+
+/// Supernode merge policy — the knob that turns one engine into HYLU's
+/// three kernels and both baselines.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MergePolicy {
+    /// No supernodes at all (row-row / KLU-like mode).
+    None,
+    /// Merge only rows with exactly identical structure (paper default for
+    /// one-time solving).
+    Exact {
+        /// Maximum supernode width (tile-class cap).
+        max_width: usize,
+    },
+    /// Allow padding up to a budget (paper's repeated-solve preprocessing:
+    /// costlier analysis, bigger supernodes, faster refactorization).
+    Relaxed {
+        /// Maximum supernode width.
+        max_width: usize,
+        /// Padded cells allowed, as a fraction of the merged panel size.
+        budget_frac: f64,
+        /// Flat padded-cell allowance per merge.
+        budget_abs: usize,
+    },
+    /// Force-amalgamate consecutive rows to at least `min_width` regardless
+    /// of pattern match (the PARDISO-like always-BLAS baseline; generates
+    /// the fill that supernodal codes suffer on circuit-class matrices).
+    Forced {
+        /// Merge unconditionally below this width.
+        min_width: usize,
+        /// Hard cap.
+        max_width: usize,
+    },
+}
+
+/// In-progress supernode state.
+struct Current {
+    first: usize,
+    width: usize,
+    /// shared L pattern, cols < first, sorted
+    shared_l: Vec<u32>,
+    /// shared U pattern, cols >= first (block diagonals + tail), sorted
+    shared_u: Vec<u32>,
+}
+
+/// Builder that owns the finalized state.
+struct Builder {
+    nodes: Vec<NodeSym>,
+    row_node: Vec<u32>,
+    lcols: Vec<u32>,
+    ucols: Vec<u32>,
+    groups: Vec<Group>,
+    lu_entries: usize,
+    flops: f64,
+    rows_in_supers: usize,
+}
+
+impl Builder {
+    /// U-structure of a *finalized* row `k`, for reach queries and flop
+    /// counts: implicit in-block columns then the shared tail.
+    fn row_u_len(&self, k: usize) -> usize {
+        let nd = &self.nodes[self.row_node[k] as usize];
+        (nd.first as usize + nd.width as usize - 1 - k) + (nd.u_end - nd.u_start)
+    }
+
+    fn finalize(&mut self, cur: Current) {
+        let Current {
+            first,
+            width,
+            shared_l,
+            shared_u,
+        } = cur;
+        let block_end = first + width;
+        let l_start = self.lcols.len();
+        self.lcols.extend_from_slice(&shared_l);
+        let l_end = self.lcols.len();
+        let u_start = self.ucols.len();
+        // tail = shared U beyond the block; width-1 rows store diag
+        // separately so exclude it the same way
+        for &c in &shared_u {
+            if (c as usize) >= block_end {
+                self.ucols.push(c);
+            }
+        }
+        let u_end = self.ucols.len();
+        let nl = l_end - l_start;
+        let nu = u_end - u_start;
+        let is_super = width >= 2;
+
+        // update groups: runs of lcols by source node
+        let g_start = self.groups.len();
+        let node_id = self.nodes.len() as u32;
+        {
+            let lc = &self.lcols[l_start..l_end];
+            let mut k = 0;
+            while k < nl {
+                let src = self.row_node[lc[k] as usize];
+                let mut m = k + 1;
+                while m < nl && self.row_node[lc[m] as usize] == src {
+                    m += 1;
+                }
+                // tail-segment invariant: the run is contiguous columns
+                // ending at the source node's last row
+                #[cfg(debug_assertions)]
+                {
+                    let snd = &self.nodes[src as usize];
+                    debug_assert_eq!(
+                        lc[m - 1] as usize,
+                        snd.first as usize + snd.width as usize - 1,
+                        "group does not end at source node end"
+                    );
+                    for t in k..m - 1 {
+                        debug_assert_eq!(lc[t] + 1, lc[t + 1], "group not contiguous");
+                    }
+                }
+                self.groups.push(Group {
+                    src,
+                    offset: k as u32,
+                    len: (m - k) as u32,
+                });
+                k = m;
+            }
+        }
+        let g_end = self.groups.len();
+
+        // flop estimate: each L column k contributes a division + 2*|U_k|
+        // multiply-adds per target row; internal block factorization adds
+        // ~2/3 w^3 + w^2 * nu.
+        let w = width as f64;
+        let mut fl = 0.0;
+        for &k in &self.lcols[l_start..l_end] {
+            fl += w * (1.0 + 2.0 * self.row_u_len(k as usize) as f64);
+        }
+        fl += (2.0 / 3.0) * w * w * w + w * w * nu as f64;
+        self.flops += fl;
+
+        self.lu_entries += if is_super {
+            width * (nl + width + nu)
+        } else {
+            nl + 1 + nu
+        };
+        if is_super {
+            self.rows_in_supers += width;
+        }
+        for r in first..block_end {
+            self.row_node[r] = node_id;
+        }
+        self.nodes.push(NodeSym {
+            first: first as u32,
+            width: width as u32,
+            is_super,
+            l_start,
+            l_end,
+            u_start,
+            u_end,
+            g_start,
+            g_end,
+            flops: fl,
+        });
+    }
+}
+
+/// Sorted-set union size helpers for the merge budget.
+fn count_not_in(a: &[u32], b: &[u32]) -> usize {
+    // |a \ b| for sorted slices
+    let mut i = 0;
+    let mut j = 0;
+    let mut cnt = 0;
+    while i < a.len() {
+        if j >= b.len() || a[i] < b[j] {
+            cnt += 1;
+            i += 1;
+        } else if a[i] == b[j] {
+            i += 1;
+            j += 1;
+        } else {
+            j += 1;
+        }
+    }
+    cnt
+}
+
+fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        if j >= b.len() || (i < a.len() && a[i] < b[j]) {
+            out.push(a[i]);
+            i += 1;
+        } else if i >= a.len() || b[j] < a[i] {
+            out.push(b[j]);
+            j += 1;
+        } else {
+            out.push(a[i]);
+            i += 1;
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Run symbolic analysis on the (already permuted & scaled) pattern.
+///
+/// `bulk_threshold` controls the dual-mode schedule split (nodes per level
+/// required to stay in bulk mode).
+pub fn analyze_pattern(a: &Csr, policy: MergePolicy, bulk_threshold: usize) -> Symbolic {
+    let n = a.n;
+    let mut b = Builder {
+        nodes: Vec::new(),
+        row_node: vec![u32::MAX; n],
+        lcols: Vec::new(),
+        ucols: Vec::new(),
+        groups: Vec::new(),
+        lu_entries: 0,
+        flops: 0.0,
+        rows_in_supers: 0,
+    };
+
+    // DFS scratch
+    let mut mark = vec![u32::MAX; n];
+    let mut work: Vec<u32> = Vec::new();
+    let mut reach: Vec<u32> = Vec::new();
+
+    let mut cur: Option<Current> = None;
+
+    for i in 0..n {
+        // ---- reach of row i ----
+        let stamp = i as u32;
+        reach.clear();
+        work.clear();
+        for &j in a.row_indices(i) {
+            if mark[j] != stamp {
+                mark[j] = stamp;
+                work.push(j as u32);
+                reach.push(j as u32);
+            }
+        }
+        if mark[i] != stamp {
+            // always include the diagonal (pivot slot)
+            mark[i] = stamp;
+            work.push(i as u32);
+            reach.push(i as u32);
+        }
+        while let Some(jq) = work.pop() {
+            let j = jq as usize;
+            if j >= i {
+                continue; // sink: not yet factored
+            }
+            // expand through U-structure of row j
+            if let Some(c) = &cur {
+                if j >= c.first {
+                    // row inside the in-progress supernode: shared pattern
+                    for &jj in &c.shared_u {
+                        if (jj as usize) > j && mark[jj as usize] != stamp {
+                            mark[jj as usize] = stamp;
+                            work.push(jj);
+                            reach.push(jj);
+                        }
+                    }
+                    continue;
+                }
+            }
+            let nd = &b.nodes[b.row_node[j] as usize];
+            let block_end = nd.first as usize + nd.width as usize;
+            for jj in (j + 1)..block_end {
+                if mark[jj] != stamp {
+                    mark[jj] = stamp as u32;
+                    work.push(jj as u32);
+                    reach.push(jj as u32);
+                }
+            }
+            for &jj in &b.ucols[nd.u_start..nd.u_end] {
+                if mark[jj as usize] != stamp {
+                    mark[jj as usize] = stamp;
+                    work.push(jj);
+                    reach.push(jj);
+                }
+            }
+        }
+        // split + sort
+        let mut li: Vec<u32> = Vec::new();
+        let mut ui: Vec<u32> = Vec::new();
+        for &j in &reach {
+            if (j as usize) < i {
+                li.push(j);
+            } else {
+                ui.push(j);
+            }
+        }
+        li.sort_unstable();
+        ui.sort_unstable();
+
+        // ---- merge decision ----
+        let mut merged = false;
+        if let Some(c) = &mut cur {
+            let li_out_end = li.partition_point(|&j| (j as usize) < c.first);
+            let li_out = &li[..li_out_end];
+            let proposed_width = c.width + 1;
+            // padding cost of a merge, in cells, relative to this ROW's
+            // pattern size (a per-merge budget; panel-relative budgets
+            // cascade into unbounded amalgamation)
+            let su_tail_start = c.shared_u.partition_point(|&j| (j as usize) < i);
+            let su_tail = &c.shared_u[su_tail_start..];
+            let new_u = count_not_in(&ui, su_tail); // pads all prev rows
+            let miss_u = count_not_in(su_tail, &ui); // pads new row
+            let new_l = count_not_in(li_out, &c.shared_l);
+            let miss_l = count_not_in(&c.shared_l, li_out);
+            let l_pad = new_l * c.width + miss_l;
+            let u_pad = new_u * c.width + miss_u;
+            let row_cells = li.len() + ui.len() + proposed_width;
+            let decision = match policy {
+                MergePolicy::None => false,
+                // Paper definition: supernode = consecutive rows with
+                // identical structure in U. The L side is union-padded into
+                // the dense panel (bounded: padding implies only in-panel
+                // fill — DESIGN.md §5), with a modest budget so wildly
+                // different rows don't amalgamate.
+                MergePolicy::Exact { max_width } => {
+                    proposed_width <= max_width
+                        && new_u == 0
+                        && miss_u == 0
+                        && l_pad <= 16 + row_cells / 4
+                }
+                MergePolicy::Relaxed {
+                    max_width,
+                    budget_frac,
+                    budget_abs,
+                } => {
+                    proposed_width <= max_width
+                        && l_pad + u_pad
+                            <= budget_abs + (budget_frac * row_cells as f64) as usize
+                }
+                MergePolicy::Forced {
+                    min_width,
+                    max_width,
+                } => proposed_width <= max_width && c.width < min_width.max(1),
+            };
+            if decision {
+                c.shared_l = union_sorted(&c.shared_l, li_out);
+                c.shared_u = union_sorted(&c.shared_u, &ui);
+                c.width += 1;
+                merged = true;
+            }
+        }
+        if !merged {
+            if let Some(c) = cur.take() {
+                b.finalize(c);
+            }
+            cur = Some(Current {
+                first: i,
+                width: 1,
+                shared_l: li,
+                shared_u: ui,
+            });
+        }
+    }
+    if let Some(c) = cur.take() {
+        b.finalize(c);
+    }
+
+    let schedule = dag::build_schedule(&b.nodes, &b.groups, &b.ucols, &b.row_node, bulk_threshold);
+    Symbolic {
+        n,
+        supernode_coverage: if n == 0 {
+            0.0
+        } else {
+            b.rows_in_supers as f64 / n as f64
+        },
+        nodes: b.nodes,
+        row_node: b.row_node,
+        lcols: b.lcols,
+        ucols: b.ucols,
+        groups: b.groups,
+        flops: b.flops,
+        lu_entries: b.lu_entries,
+        schedule,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen;
+    use crate::testutil::for_each_seed;
+
+    fn diag_dominant(a: &Csr) -> Csr {
+        // ensure structural diagonal for Natural-order analysis
+        let mut c = Coo::new(a.n);
+        for i in 0..a.n {
+            for (k, &j) in a.row_indices(i).iter().enumerate() {
+                c.push(i, j, a.row_vals(i)[k]);
+            }
+            c.push(i, i, 10.0);
+        }
+        c.to_csr()
+    }
+
+    /// Oracle: dense symbolic LU (no pivoting) fill pattern.
+    fn dense_fill(a: &Csr) -> Vec<Vec<bool>> {
+        let n = a.n;
+        let mut f = vec![vec![false; n]; n];
+        for i in 0..n {
+            for &j in a.row_indices(i) {
+                f[i][j] = true;
+            }
+            f[i][i] = true;
+        }
+        for k in 0..n {
+            for i in k + 1..n {
+                if f[i][k] {
+                    for j in k + 1..n {
+                        if f[k][j] {
+                            f[i][j] = true;
+                        }
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// Collect the symbolic's full per-row pattern (L + diag + U).
+    fn sym_pattern(s: &Symbolic) -> Vec<Vec<bool>> {
+        let n = s.n;
+        let mut f = vec![vec![false; n]; n];
+        for (_id, nd) in s.nodes.iter().enumerate() {
+            for r in nd.first as usize..(nd.first + nd.width) as usize {
+                for &c in &s.lcols[nd.l_start..nd.l_end] {
+                    f[r][c as usize] = true;
+                }
+                for c in nd.first as usize..(nd.first + nd.width) as usize {
+                    f[r][c] = true; // dense block (padding allowed)
+                }
+                for &c in &s.ucols[nd.u_start..nd.u_end] {
+                    f[r][c as usize] = true;
+                }
+            }
+        }
+        f
+    }
+
+    fn check_covers(a: &Csr, s: &Symbolic) {
+        // Symbolic pattern must be a superset of the true (no-pivot) fill.
+        let want = dense_fill(a);
+        let got = sym_pattern(s);
+        for i in 0..a.n {
+            for j in 0..a.n {
+                // L side: only below-diagonal and upper (j>=i) both checked
+                if want[i][j] {
+                    assert!(got[i][j], "missing fill at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    fn check_invariants(s: &Symbolic) {
+        let n = s.n;
+        // node partition covers rows exactly once, ascending
+        let mut row = 0usize;
+        for (id, nd) in s.nodes.iter().enumerate() {
+            assert_eq!(nd.first as usize, row, "node {id} first");
+            assert!(nd.width >= 1);
+            row += nd.width as usize;
+            for r in nd.first as usize..row {
+                assert_eq!(s.row_node[r] as usize, id);
+            }
+            // patterns sorted, in range
+            let lc = &s.lcols[nd.l_start..nd.l_end];
+            for w in lc.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            if let Some(&last) = lc.last() {
+                assert!((last as usize) < nd.first as usize);
+            }
+            let uc = &s.ucols[nd.u_start..nd.u_end];
+            for w in uc.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            if let Some(&first_u) = uc.first() {
+                assert!(first_u as usize >= nd.first as usize + nd.width as usize);
+            }
+            // groups tile the L pattern
+            let mut off = 0u32;
+            for g in &s.groups[nd.g_start..nd.g_end] {
+                assert_eq!(g.offset, off);
+                off += g.len;
+                assert!((g.src as usize) < id);
+            }
+            assert_eq!(off as usize, nd.nl());
+        }
+        assert_eq!(row, n);
+    }
+
+    #[test]
+    fn tridiagonal_has_no_fill_and_full_supernode_chain() {
+        let a = gen::banded(50, 1, 1);
+        let s = analyze_pattern(&a, MergePolicy::Exact { max_width: 64 }, 4);
+        check_invariants(&s);
+        check_covers(&a, &s);
+        // tridiagonal with exact merging: every row's tail is {i+1}, row
+        // i's L is {i-1}: L-outside differs between consecutive rows, so
+        // supernodes stay width <= 2; pattern must still be exact
+        assert!(s.lu_entries <= 4 * 50);
+    }
+
+    #[test]
+    fn dense_block_becomes_single_supernode() {
+        // 8x8 fully dense matrix: one supernode of width 8
+        let n = 8;
+        let mut c = Coo::new(n);
+        for i in 0..n {
+            for j in 0..n {
+                c.push(i, j, 1.0 + (i == j) as i32 as f64 * 8.0);
+            }
+        }
+        let a = c.to_csr();
+        let s = analyze_pattern(&a, MergePolicy::Exact { max_width: 64 }, 4);
+        check_invariants(&s);
+        assert_eq!(s.nodes.len(), 1);
+        assert!(s.nodes[0].is_super);
+        assert_eq!(s.nodes[0].width, 8);
+        assert_eq!(s.supernode_coverage, 1.0);
+    }
+
+    #[test]
+    fn policy_none_yields_all_row_nodes() {
+        let a = gen::grid2d(8, 8);
+        let s = analyze_pattern(&a, MergePolicy::None, 4);
+        check_invariants(&s);
+        assert!(s.nodes.iter().all(|nd| !nd.is_super && nd.width == 1));
+        check_covers(&a, &s);
+    }
+
+    #[test]
+    fn exact_pattern_covers_true_fill_on_classes() {
+        for a in [
+            gen::grid2d(7, 9),
+            gen::circuit(60, 3),
+            gen::random_sparse(40, 3, 5),
+        ] {
+            let a = diag_dominant(&a);
+            let s = analyze_pattern(&a, MergePolicy::Exact { max_width: 32 }, 4);
+            check_invariants(&s);
+            check_covers(&a, &s);
+        }
+    }
+
+    #[test]
+    fn relaxed_supersedes_exact_coverage() {
+        let a = diag_dominant(&gen::grid2d(10, 10));
+        let se = analyze_pattern(&a, MergePolicy::Exact { max_width: 64 }, 4);
+        let sr = analyze_pattern(
+            &a,
+            MergePolicy::Relaxed {
+                max_width: 64,
+                budget_frac: 0.2,
+                budget_abs: 16,
+            },
+            4,
+        );
+        check_invariants(&sr);
+        check_covers(&a, &sr);
+        // relaxation must not reduce supernode coverage
+        assert!(sr.supernode_coverage >= se.supernode_coverage - 1e-12);
+        assert!(sr.nodes.len() <= se.nodes.len());
+    }
+
+    #[test]
+    fn forced_amalgamation_builds_wide_supernodes() {
+        let a = diag_dominant(&gen::circuit(200, 7));
+        let s = analyze_pattern(
+            &a,
+            MergePolicy::Forced {
+                min_width: 8,
+                max_width: 32,
+            },
+            4,
+        );
+        check_invariants(&s);
+        check_covers(&a, &s);
+        assert!(s.supernode_coverage > 0.9, "coverage {}", s.supernode_coverage);
+        // forced padding inflates storage vs exact
+        let se = analyze_pattern(&a, MergePolicy::Exact { max_width: 32 }, 4);
+        assert!(s.lu_entries > se.lu_entries);
+    }
+
+    #[test]
+    fn property_partition_and_coverage_hold() {
+        for_each_seed(8, |rng| {
+            let n = rng.range(10, 60);
+            let mut c = Coo::new(n);
+            for i in 0..n {
+                c.push(i, i, 4.0);
+                for _ in 0..rng.range(1, 4) {
+                    let j = rng.below(n);
+                    c.push(i, j, rng.nonzero());
+                }
+            }
+            let a = c.to_csr();
+            for policy in [
+                MergePolicy::None,
+                MergePolicy::Exact { max_width: 16 },
+                MergePolicy::Relaxed {
+                    max_width: 16,
+                    budget_frac: 0.25,
+                    budget_abs: 8,
+                },
+                MergePolicy::Forced {
+                    min_width: 4,
+                    max_width: 16,
+                },
+            ] {
+                let s = analyze_pattern(&a, policy, 4);
+                check_invariants(&s);
+                check_covers(&a, &s);
+            }
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Dependency-DAG levelization for the dual-mode parallel schedule
+//! (paper ref [14], Fig. 2).
+//!
+//! Each node (standalone row or supernode) depends on the source nodes its
+//! L pattern pulls from. Levelizing the DAG gives independent level sets:
+//! front levels are wide (many nodes) and run in **bulk mode** — all nodes
+//! of a level in parallel, barrier between levels; the tail of the DAG is a
+//! long dependent chain and runs in **pipeline mode** — workers claim nodes
+//! in topological order and spin on per-dependency done-flags, overlapping
+//! dependent nodes at sub-node granularity.
+
+use crate::symbolic::{Group, NodeSym};
+
+/// Levelized dual-mode schedule.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Level of each node (0 = no dependencies).
+    pub level: Vec<u32>,
+    /// CSR pointer into `level_nodes` per level.
+    pub level_ptr: Vec<usize>,
+    /// Node ids grouped by level, ascending id within a level.
+    pub level_nodes: Vec<u32>,
+    /// Levels `[0, bulk_levels)` run in bulk mode; the rest in pipeline
+    /// mode.
+    pub bulk_levels: usize,
+    /// Total flops in bulk levels (load-balancing statistics).
+    pub bulk_flops: f64,
+    /// Reverse levels (backward-substitution DAG: a node depends on the
+    /// owners of its U-tail columns).
+    pub rlevel: Vec<u32>,
+    /// CSR pointer into `rlevel_nodes` per reverse level.
+    pub rlevel_ptr: Vec<usize>,
+    /// Node ids grouped by reverse level.
+    pub rlevel_nodes: Vec<u32>,
+    /// Reverse levels `[0, rbulk_levels)` run in bulk mode during backward
+    /// substitution ("bulk-sequential" dual mode, paper §2.3).
+    pub rbulk_levels: usize,
+}
+
+impl Schedule {
+    /// Number of levels.
+    pub fn nlevels(&self) -> usize {
+        self.level_ptr.len().saturating_sub(1)
+    }
+
+    /// Node ids at `level`.
+    pub fn nodes_at(&self, level: usize) -> &[u32] {
+        &self.level_nodes[self.level_ptr[level]..self.level_ptr[level + 1]]
+    }
+}
+
+/// Levelize: group node ids by `level`, CSR-style.
+fn levelize(level: &[u32], bulk_threshold: usize) -> (Vec<usize>, Vec<u32>, usize) {
+    let nn = level.len();
+    let maxlev = level.iter().copied().max().unwrap_or(0);
+    let nlev = if nn == 0 { 0 } else { maxlev as usize + 1 };
+    let mut level_ptr = vec![0usize; nlev + 1];
+    for &lv in level {
+        level_ptr[lv as usize + 1] += 1;
+    }
+    for i in 0..nlev {
+        level_ptr[i + 1] += level_ptr[i];
+    }
+    let mut level_nodes = vec![0u32; nn];
+    let mut next = level_ptr.clone();
+    for (id, &lv) in level.iter().enumerate() {
+        level_nodes[next[lv as usize]] = id as u32;
+        next[lv as usize] += 1;
+    }
+    // bulk/pipeline split: stay bulk while levels are wide
+    let mut bulk_levels = 0usize;
+    while bulk_levels < nlev && level_ptr[bulk_levels + 1] - level_ptr[bulk_levels] >= bulk_threshold
+    {
+        bulk_levels += 1;
+    }
+    (level_ptr, level_nodes, bulk_levels)
+}
+
+/// Build the levelized schedule. `bulk_threshold`: a level stays in bulk
+/// mode while it (and every level before it) has at least this many nodes.
+pub fn build_schedule(
+    nodes: &[NodeSym],
+    groups: &[Group],
+    ucols: &[u32],
+    row_node: &[u32],
+    bulk_threshold: usize,
+) -> Schedule {
+    let nn = nodes.len();
+    // forward levels (factorization + forward substitution)
+    let mut level = vec![0u32; nn];
+    for (id, nd) in nodes.iter().enumerate() {
+        let mut lv = 0u32;
+        for g in &groups[nd.g_start..nd.g_end] {
+            lv = lv.max(level[g.src as usize] + 1);
+        }
+        level[id] = lv;
+    }
+    let (level_ptr, level_nodes, bulk_levels) = levelize(&level, bulk_threshold);
+    let mut bulk_flops = 0.0;
+    for lv in 0..bulk_levels {
+        for &id in &level_nodes[level_ptr[lv]..level_ptr[lv + 1]] {
+            bulk_flops += nodes[id as usize].flops;
+        }
+    }
+
+    // reverse levels (backward substitution): node depends on the owners of
+    // its U-tail columns, processed descending
+    let mut rlevel = vec![0u32; nn];
+    for (id, nd) in nodes.iter().enumerate().rev() {
+        let mut lv = 0u32;
+        for &j in &ucols[nd.u_start..nd.u_end] {
+            lv = lv.max(rlevel[row_node[j as usize] as usize] + 1);
+        }
+        rlevel[id] = lv;
+    }
+    let (rlevel_ptr, rlevel_nodes, rbulk_levels) = levelize(&rlevel, bulk_threshold);
+
+    Schedule {
+        level,
+        level_ptr,
+        level_nodes,
+        bulk_levels,
+        bulk_flops,
+        rlevel,
+        rlevel_ptr,
+        rlevel_nodes,
+        rbulk_levels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::symbolic::{analyze_pattern, MergePolicy};
+
+    fn check_schedule(nodes: &[NodeSym], groups: &[Group], s: &Schedule) {
+        // every dependency has a strictly smaller level
+        for (id, nd) in nodes.iter().enumerate() {
+            for g in &groups[nd.g_start..nd.g_end] {
+                assert!(
+                    s.level[g.src as usize] < s.level[id],
+                    "dep level violated: {} -> {}",
+                    g.src,
+                    id
+                );
+            }
+        }
+        // level_nodes is a permutation of node ids, grouped correctly
+        let mut seen = vec![false; nodes.len()];
+        for lv in 0..s.nlevels() {
+            for &id in s.nodes_at(lv) {
+                assert!(!seen[id as usize]);
+                seen[id as usize] = true;
+                assert_eq!(s.level[id as usize] as usize, lv);
+            }
+        }
+        assert!(seen.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn schedule_levels_are_topological() {
+        for a in [
+            gen::grid2d(12, 12),
+            gen::circuit(300, 2),
+            gen::banded(100, 2, 3),
+        ] {
+            let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 32 }, 4);
+            check_schedule(&sym.nodes, &sym.groups, &sym.schedule);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_is_single_level() {
+        let a = crate::sparse::csr::Csr::identity(20);
+        let sym = analyze_pattern(&a, MergePolicy::None, 4);
+        assert_eq!(sym.schedule.nlevels(), 1);
+        assert_eq!(sym.schedule.nodes_at(0).len(), 20);
+        assert_eq!(sym.schedule.bulk_levels, 1);
+    }
+
+    #[test]
+    fn banded_chain_goes_pipeline() {
+        // a dense-band matrix forms a long dependent chain: few nodes per
+        // level => pipeline mode from the start (with threshold > 1)
+        let a = gen::banded(60, 3, 1);
+        let sym = analyze_pattern(&a, MergePolicy::None, 8);
+        assert!(sym.schedule.nlevels() > 10);
+        assert!(sym.schedule.bulk_levels < sym.schedule.nlevels());
+    }
+
+    #[test]
+    fn bulk_prefix_is_wide() {
+        let a = gen::grid2d(20, 20);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 32 }, 4);
+        let s = &sym.schedule;
+        for lv in 0..s.bulk_levels {
+            assert!(s.nodes_at(lv).len() >= 4);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Symbolic analysis: up-looking symbolic LU factorization with integrated
+//! supernode detection, plus the dependency-DAG levelization that drives the
+//! dual-mode parallel schedule.
+//!
+//! HYLU fixes the fill pattern *once* here (static-pivoting regime: MC64 has
+//! already put large entries on the diagonal, and numeric pivoting is
+//! restricted to row swaps inside supernode diagonal blocks, which preserve
+//! the pattern). Numeric factorization and refactorization replay these
+//! patterns without any symbolic work — the key to the paper's
+//! repeated-solve speedups.
+
+pub mod analyze;
+pub mod dag;
+
+pub use analyze::{analyze_pattern, MergePolicy};
+pub use dag::Schedule;
+
+/// One node of the factorization: a standalone row (`width == 1` and not
+/// `is_super`) or a supernode panel (consecutive rows with identical —
+/// possibly relaxation-padded — U structure and identical off-block L
+/// structure).
+#[derive(Clone, Debug)]
+pub struct NodeSym {
+    /// First (permuted) row of the node.
+    pub first: u32,
+    /// Number of rows.
+    pub width: u32,
+    /// True if stored as a dense panel (supernode); standalone rows store
+    /// sparse L/U rows instead.
+    pub is_super: bool,
+    /// Start of range into [`Symbolic::lcols`]: shared L pattern, columns
+    /// `< first`, sorted ascending.
+    pub l_start: usize,
+    /// End of L range.
+    pub l_end: usize,
+    /// Start of range into [`Symbolic::ucols`]: shared U tail pattern,
+    /// columns `>= first + width`, sorted ascending. (The dense diagonal
+    /// block is implicit.)
+    pub u_start: usize,
+    /// End of U range.
+    pub u_end: usize,
+    /// Start of range into [`Symbolic::groups`]: runs of the L pattern by
+    /// source node, in ascending column order.
+    pub g_start: usize,
+    /// End of group range.
+    pub g_end: usize,
+    /// Estimated factorization flops for this node (scheduling weight).
+    pub flops: f64,
+}
+
+impl NodeSym {
+    /// Number of shared L-pattern columns.
+    pub fn nl(&self) -> usize {
+        self.l_end - self.l_start
+    }
+
+    /// Number of U-tail columns.
+    pub fn nu(&self) -> usize {
+        self.u_end - self.u_start
+    }
+
+    /// Dense panel width (supernodes): L part + diagonal block + U tail.
+    pub fn panel_width(&self) -> usize {
+        self.nl() + self.width as usize + self.nu()
+    }
+}
+
+/// A run of a node's L pattern coming from one source node: columns
+/// `lcols[l_start + offset .. offset + len]` are a *tail segment* of the
+/// source node's rows (guaranteed by reach semantics; asserted in debug
+/// builds).
+#[derive(Clone, Copy, Debug)]
+pub struct Group {
+    /// Source node id.
+    pub src: u32,
+    /// Offset of the run inside this node's L pattern.
+    pub offset: u32,
+    /// Run length (number of source rows used).
+    pub len: u32,
+}
+
+/// Output of symbolic analysis on the permuted pattern.
+#[derive(Clone, Debug)]
+pub struct Symbolic {
+    /// Dimension.
+    pub n: usize,
+    /// Nodes in ascending row order.
+    pub nodes: Vec<NodeSym>,
+    /// Row -> node id.
+    pub row_node: Vec<u32>,
+    /// Concatenated shared L patterns.
+    pub lcols: Vec<u32>,
+    /// Concatenated shared U tail patterns.
+    pub ucols: Vec<u32>,
+    /// Concatenated update groups.
+    pub groups: Vec<Group>,
+    /// Total flop estimate.
+    pub flops: f64,
+    /// nnz(L) + nnz(U) including padding (panel cells for supernodes).
+    pub lu_entries: usize,
+    /// Fraction of rows living in supernodes of width >= 2.
+    pub supernode_coverage: f64,
+    /// The dual-mode schedule.
+    pub schedule: Schedule,
+}
+
+impl Symbolic {
+    /// Iterate a row's U-structure: the implicit in-block columns
+    /// `(row, first+width)` followed by the shared U tail. Used by tests
+    /// and the row-mode numeric kernel.
+    pub fn row_u_pattern(&self, row: usize) -> impl Iterator<Item = u32> + '_ {
+        let node = &self.nodes[self.row_node[row] as usize];
+        let block_end = node.first + node.width;
+        ((row as u32 + 1)..block_end).chain(self.ucols[node.u_start..node.u_end].iter().copied())
+    }
+
+    /// Total panel memory (f64 cells) across supernodes.
+    pub fn panel_cells(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|nd| nd.is_super)
+            .map(|nd| nd.width as usize * nd.panel_width())
+            .sum()
+    }
+}

@@ -1,0 +1,264 @@
+//! Test utilities: deterministic PRNG, dense LU oracle, and a tiny
+//! property-testing harness (proptest is unavailable in the offline
+//! registry, so we hand-roll the 20% of it we need).
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a PRNG; a zero seed is remapped to a fixed odd constant.
+    pub fn new(seed: u64) -> Self {
+        Prng {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Uniform integer in `[0, n)`; `n` must be nonzero.
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard-normal-ish value (sum of uniforms, Irwin–Hall 12).
+    pub fn normal(&mut self) -> f64 {
+        let mut s = 0.0;
+        for _ in 0..12 {
+            s += self.uniform();
+        }
+        s - 6.0
+    }
+
+    /// Random nonzero value bounded away from 0 (for matrix entries).
+    pub fn nonzero(&mut self) -> f64 {
+        let v = self.range_f64(0.1, 1.0);
+        if self.next_u64() & 1 == 0 {
+            v
+        } else {
+            -v
+        }
+    }
+
+    /// Random permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            p.swap(i, self.below(i + 1));
+        }
+        p
+    }
+}
+
+/// Run `f` over `cases` deterministic seeds; on failure, report the seed so
+/// the case replays exactly. Poor-man's proptest.
+pub fn for_each_seed(cases: u64, mut f: impl FnMut(&mut Prng)) {
+    for seed in 1..=cases {
+        let mut rng = Prng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Dense column-major matrix oracle for small-n checks.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub n: usize,
+    pub a: Vec<f64>, // row-major n*n
+}
+
+impl Dense {
+    pub fn zeros(n: usize) -> Self {
+        Dense {
+            n,
+            a: vec![0.0; n * n],
+        }
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    /// Dense `A x` for residual checks.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += self.a[i * n + j] * x[j];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// Solve `A x = b` by dense partial-pivoted LU. Returns None if singular
+    /// to working precision. The ground-truth oracle for solver tests.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.n;
+        let mut a = self.a.clone();
+        let mut x = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // pivot search
+            let mut p = k;
+            let mut best = a[piv[k] * n + k].abs();
+            for r in k + 1..n {
+                let v = a[piv[r] * n + k].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < 1e-300 {
+                return None;
+            }
+            piv.swap(k, p);
+            let akk = a[piv[k] * n + k];
+            for r in k + 1..n {
+                let f = a[piv[r] * n + k] / akk;
+                a[piv[r] * n + k] = f;
+                for c in k + 1..n {
+                    a[piv[r] * n + c] -= f * a[piv[k] * n + c];
+                }
+            }
+        }
+        // forward
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = x[piv[i]];
+            for j in 0..i {
+                s -= a[piv[i] * n + j] * y[j];
+            }
+            y[i] = s;
+        }
+        // backward
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= a[piv[i] * n + j] * x[j];
+            }
+            x[i] = s / a[piv[i] * n + i];
+        }
+        Some(x)
+    }
+}
+
+/// `max_i |x_i - y_i|`.
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+}
+
+/// `‖Ax − b‖₁ / ‖b‖₁` with a dense reference matvec.
+pub fn relative_residual_dense(a: &Dense, x: &[f64], b: &[f64]) -> f64 {
+    let ax = a.matvec(x);
+    let num: f64 = ax.iter().zip(b).map(|(p, q)| (p - q).abs()).sum();
+    let den: f64 = b.iter().map(|v| v.abs()).sum();
+    num / den.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prng_is_deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn prng_uniform_in_range() {
+        let mut r = Prng::new(7);
+        for _ in 0..1000 {
+            let v = r.uniform();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut r = Prng::new(3);
+        for n in [1usize, 2, 5, 33, 100] {
+            let p = r.permutation(n);
+            let mut seen = vec![false; n];
+            for &v in &p {
+                assert!(!seen[v]);
+                seen[v] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn dense_lu_solves_identity() {
+        let mut a = Dense::zeros(4);
+        for i in 0..4 {
+            a.set(i, i, 1.0);
+        }
+        let x = a.solve(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dense_lu_matches_matvec_roundtrip() {
+        let mut rng = Prng::new(11);
+        for n in [2usize, 3, 8, 17] {
+            let mut a = Dense::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    a.set(i, j, rng.normal());
+                }
+                a.set(i, i, a.get(i, i) + 4.0); // diagonally dominant-ish
+            }
+            let xt: Vec<f64> = (0..n).map(|i| i as f64 - 1.5).collect();
+            let b = a.matvec(&xt);
+            let x = a.solve(&b).unwrap();
+            assert!(max_abs_diff(&x, &xt) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dense_lu_detects_singular() {
+        let a = Dense::zeros(3);
+        assert!(a.solve(&[1.0, 1.0, 1.0]).is_none());
+    }
+}

@@ -1,0 +1,120 @@
+//! Cross-layer integration: the Rust PJRT runtime executing the AOT
+//! Pallas/JAX artifacts, compared against the native microkernel and used
+//! inside the full solver.
+//!
+//! These tests require `make artifacts` to have run; they are skipped (not
+//! failed) when the artifacts are absent so `cargo test` works on a fresh
+//! clone.
+
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::numeric::dense;
+use hylu::runtime::XlaGemm;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+use std::path::Path;
+
+fn artifacts() -> Option<XlaGemm> {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaGemm::load(Path::new("artifacts"), 1).expect("load artifacts"))
+}
+
+#[test]
+fn xla_gemm_matches_native_microkernel() {
+    let Some(xla) = artifacts() else { return };
+    let mut rng = Prng::new(3);
+    for (m, k, n) in [(4usize, 4, 8), (16, 16, 32), (17, 9, 23), (64, 64, 128), (128, 128, 256)] {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        let got = xla.gemm_update(&c, &a, &b, m, k, n).expect("xla gemm");
+        let mut want = c.clone();
+        dense::gemm_sub(&mut want, n, &a, k, &b, n, m, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10, "{m}x{k}x{n}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn xla_trsm_matches_reference() {
+    let Some(xla) = artifacts() else { return };
+    let mut rng = Prng::new(7);
+    for (w, n) in [(8usize, 16usize), (32, 40), (64, 128)] {
+        // bounded-multiplier unit-lower L
+        let mut l = vec![0.0f64; w * w];
+        for i in 0..w {
+            for j in 0..i {
+                l[i * w + j] = rng.normal() / w as f64;
+            }
+        }
+        let b: Vec<f64> = (0..w * n).map(|_| rng.normal()).collect();
+        let x = xla.trsm_unit_lower(&l, &b, w, n).expect("xla trsm");
+        // check L X = B
+        for i in 0..w {
+            for c in 0..n {
+                let mut s = x[i * n + c];
+                for j in 0..i {
+                    s += l[i * w + j] * x[j * n + c];
+                }
+                assert!((s - b[i * n + c]).abs() < 1e-9, "({i},{c})");
+            }
+        }
+    }
+}
+
+#[test]
+fn solver_with_xla_backend_solves_correctly() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let a = gen::grid2d(24, 24);
+    let solver = Solver::try_new(SolverConfig {
+        use_xla: true,
+        xla_min_dim: 8,
+        kernel: Some(hylu::numeric::select::KernelMode::SupSup),
+        threads: 2,
+        ..SolverConfig::default()
+    })
+    .expect("xla solver");
+    let an = solver.analyze(&a).unwrap();
+    let f = solver.factor(&a, &an).unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let (x, st) = solver.solve_with_stats(&a, &an, &f, &b).unwrap();
+    let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
+    assert!(err < 1e-8, "err {err} residual {}", st.residual);
+}
+
+#[test]
+fn xla_backend_agrees_with_native_backend_factors() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let a = gen::banded(300, 12, 5);
+    let native = Solver::new(SolverConfig {
+        kernel: Some(hylu::numeric::select::KernelMode::SupSup),
+        threads: 1,
+        ..SolverConfig::default()
+    });
+    let xla = Solver::try_new(SolverConfig {
+        use_xla: true,
+        xla_min_dim: 4,
+        kernel: Some(hylu::numeric::select::KernelMode::SupSup),
+        threads: 1,
+        ..SolverConfig::default()
+    })
+    .unwrap();
+    let an_n = native.analyze(&a).unwrap();
+    let an_x = xla.analyze(&a).unwrap();
+    let f_n = native.factor(&a, &an_n).unwrap();
+    let f_x = xla.factor(&a, &an_x).unwrap();
+    // same panel values to fp tolerance (same math, different engines)
+    assert_eq!(f_n.fac.panels.len(), f_x.fac.panels.len());
+    for (p, q) in f_n.fac.panels.iter().zip(&f_x.fac.panels) {
+        assert!((p - q).abs() < 1e-9 * (1.0 + p.abs()), "{p} vs {q}");
+    }
+}

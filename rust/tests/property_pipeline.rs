@@ -1,0 +1,168 @@
+//! Property tests over the full pipeline (hand-rolled harness; see
+//! `hylu::testutil::for_each_seed` — seeds are reported on failure for
+//! exact replay).
+
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::numeric::select::KernelMode;
+use hylu::sparse::coo::Coo;
+use hylu::sparse::csr::Csr;
+use hylu::testutil::{for_each_seed, Prng};
+
+/// Random structurally-nonsingular matrix: guaranteed transversal on a
+/// random permutation plus random clutter, values across several decades.
+fn random_matrix(rng: &mut Prng, n: usize) -> Csr {
+    let mut c = Coo::new(n);
+    let perm = rng.permutation(n);
+    for (j, &i) in perm.iter().enumerate() {
+        c.push(i, j, rng.nonzero() * 10f64.powf(rng.range_f64(-2.0, 2.0)));
+    }
+    let extras = rng.range(n, 4 * n);
+    for _ in 0..extras {
+        c.push(
+            rng.below(n),
+            rng.below(n),
+            rng.nonzero() * 10f64.powf(rng.range_f64(-2.0, 2.0)),
+        );
+    }
+    c.to_csr()
+}
+
+#[test]
+fn property_residual_bounded_on_random_matrices() {
+    for_each_seed(12, |rng| {
+        let n = rng.range(10, 120);
+        let a = random_matrix(rng, n);
+        let solver = Solver::new(SolverConfig {
+            threads: 1 + rng.below(3),
+            parallel_solve_min_n: 0,
+            ..SolverConfig::default()
+        });
+        let an = solver.analyze(&a).unwrap();
+        let f = solver.factor(&a, &an).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (x, st) = solver.solve_with_stats(&a, &an, &f, &b).unwrap();
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(
+            st.residual < 1e-8,
+            "residual {} (n={n}, perturbed={})",
+            st.residual,
+            f.fac.perturbed
+        );
+    });
+}
+
+#[test]
+fn property_kernels_agree_on_same_matrix() {
+    // all three kernels must produce solutions agreeing to fp tolerance
+    for_each_seed(8, |rng| {
+        let n = rng.range(10, 80);
+        let a = random_matrix(rng, n);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut solutions = Vec::new();
+        for kernel in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
+            let solver = Solver::new(SolverConfig {
+                kernel: Some(kernel),
+                threads: 1,
+                ..SolverConfig::default()
+            });
+            let an = solver.analyze(&a).unwrap();
+            let f = solver.factor(&a, &an).unwrap();
+            solutions.push(solver.solve(&a, &an, &f, &b).unwrap());
+        }
+        let scale = solutions[0]
+            .iter()
+            .map(|v| v.abs())
+            .fold(1.0f64, f64::max);
+        for s in &solutions[1..] {
+            let d = hylu::testutil::max_abs_diff(&solutions[0], s);
+            assert!(d / scale < 1e-6, "kernel disagreement {d} (n={n})");
+        }
+    });
+}
+
+#[test]
+fn property_refactor_equals_factor_on_same_values() {
+    for_each_seed(8, |rng| {
+        let n = rng.range(10, 80);
+        let a = random_matrix(rng, n);
+        let solver = Solver::new(SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        });
+        let an = solver.analyze(&a).unwrap();
+        let f1 = solver.factor(&a, &an).unwrap();
+        let mut f2 = solver.factor(&a, &an).unwrap();
+        solver.refactor(&a, &an, &mut f2).unwrap();
+        assert_eq!(f1.fac.panels, f2.fac.panels);
+        assert_eq!(f1.fac.lvals, f2.fac.lvals);
+        assert_eq!(f1.fac.uvals, f2.fac.uvals);
+        assert_eq!(f1.fac.diag, f2.fac.diag);
+        assert_eq!(f1.fac.pivot_perm, f2.fac.pivot_perm);
+    });
+}
+
+#[test]
+fn property_scaled_system_solves_like_unscaled() {
+    // row/col scaling of the input must not change the (unscaled) solution
+    for_each_seed(6, |rng| {
+        let n = rng.range(10, 60);
+        let a = random_matrix(rng, n);
+        let xt: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; n];
+        a.matvec(&xt, &mut b);
+        // scale rows of A and b by the same factors
+        let factors: Vec<f64> = (0..n).map(|_| 10f64.powf(rng.range_f64(-2.0, 2.0))).collect();
+        let mut a2 = a.clone();
+        let mut b2 = b.clone();
+        for i in 0..n {
+            for k in a2.indptr[i]..a2.indptr[i + 1] {
+                a2.vals[k] *= factors[i];
+            }
+            b2[i] *= factors[i];
+        }
+        let solver = Solver::new(SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        });
+        let an = solver.analyze(&a2).unwrap();
+        let f = solver.factor(&a2, &an).unwrap();
+        let (x, st) = solver.solve_with_stats(&a2, &an, &f, &b2).unwrap();
+        // the residual is the robust invariant; solution agreement is
+        // condition-limited (row scaling multiplies the condition number)
+        assert!(st.residual < 1e-9, "residual {}", st.residual);
+        // x-vs-xt agreement is condition-limited on random decade-spanning
+        // matrices (the dense oracle drifts identically), so the solution
+        // check is only required when the instance is well-conditioned —
+        // proxy: the unscaled solve agrees with xt too.
+        let solver0 = Solver::new(SolverConfig { threads: 1, ..SolverConfig::default() });
+        let an0 = solver0.analyze(&a).unwrap();
+        let f0 = solver0.factor(&a, &an0).unwrap();
+        let x0 = solver0.solve(&a, &an0, &f0, &b).unwrap();
+        let scale = xt.iter().map(|v| v.abs()).fold(1.0f64, f64::max);
+        let drift0 = hylu::testutil::max_abs_diff(&x0, &xt) / scale;
+        if drift0 < 1e-8 {
+            let drift = hylu::testutil::max_abs_diff(&x, &xt) / scale;
+            assert!(
+                drift < 1e-4,
+                "scaled solve drifted {drift} while unscaled was {drift0}"
+            );
+        }
+    });
+}
+
+#[test]
+fn property_multiple_rhs_consistency() {
+    // solving k rhs one at a time: each must satisfy its own residual
+    for_each_seed(5, |rng| {
+        let n = rng.range(20, 80);
+        let a = random_matrix(rng, n);
+        let solver = Solver::new(SolverConfig::default());
+        let an = solver.analyze(&a).unwrap();
+        let f = solver.factor(&a, &an).unwrap();
+        for _ in 0..4 {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = solver.solve(&a, &an, &f, &b).unwrap();
+            assert!(a.relative_residual(&x, &b) < 1e-8);
+        }
+    });
+}
