@@ -2,11 +2,14 @@
 //!
 //! ```text
 //! hylu solve  --matrix FILE.mtx | --gen CLASS:N [--threads T] [--kernel K]
-//!             [--repeated] [--xla]
+//!             [--repeated] [--xla] [--rhs K]
 //! hylu inspect --matrix FILE.mtx | --gen CLASS:N
 //! hylu gen    --gen CLASS:N --out FILE.mtx
 //! hylu bench  [--suite small|full] [--threads T]
 //! ```
+//!
+//! `--rhs K` batches K right-hand sides through the engine's multi-RHS
+//! path ([`Solver::solve_many`]) — the traffic-serving scenario.
 
 use std::path::Path;
 
@@ -142,7 +145,7 @@ pub fn run(argv: &[String]) -> i32 {
             eprintln!(
                 "usage: hylu <solve|inspect|gen|bench> [--matrix F | --gen CLASS:N] \
                  [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
-                 [--suite small|full] [--out F]"
+                 [--rhs K] [--suite small|full] [--out F]"
             );
             return 2;
         }
@@ -159,6 +162,10 @@ pub fn run(argv: &[String]) -> i32 {
 fn cmd_solve(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args)?;
     let cfg = config_from(args)?;
+    let nrhs: usize = match args.get("rhs") {
+        Some(v) => v.parse().map_err(|_| Error::Invalid("bad --rhs".into()))?,
+        None => 1,
+    };
     let solver = Solver::try_new(cfg)?;
     let an = solver.analyze(&a)?;
     let f = solver.factor(&a, &an)?;
@@ -194,6 +201,28 @@ fn cmd_solve(args: &Args) -> Result<()> {
         st.refine_iters
     );
     println!("x==1 max err : {err:.3e}");
+    if nrhs > 1 {
+        // batched path: scaled copies of b have known solutions q+1
+        let bs: Vec<Vec<f64>> = (1..=nrhs)
+            .map(|q| b.iter().map(|v| v * q as f64).collect())
+            .collect();
+        let (xs, stm) = solver.solve_many_with_stats(&a, &an, &f, &bs)?;
+        let mut err_many = 0.0f64;
+        for (q, xq) in xs.iter().enumerate() {
+            let want = (q + 1) as f64;
+            for v in xq {
+                err_many = err_many.max((v - want).abs());
+            }
+        }
+        println!(
+            "solve_many   : {} for {} rhs ({} per rhs, worst residual {:.3e}, max err {:.3e})",
+            fmt_time(stm.t_solve),
+            stm.nrhs,
+            fmt_time(stm.t_solve / stm.nrhs.max(1) as f64),
+            stm.residual,
+            err_many
+        );
+    }
     Ok(())
 }
 
@@ -310,6 +339,20 @@ mod tests {
     fn solve_command_end_to_end() {
         let code = run(&sv(&["solve", "--gen", "mesh2d:900", "--threads", "1"]));
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn solve_command_with_batched_rhs() {
+        let code = run(&sv(&[
+            "solve", "--gen", "mesh2d:400", "--threads", "2", "--rhs", "4",
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn bad_rhs_flag_is_rejected() {
+        let code = run(&sv(&["solve", "--gen", "mesh2d:100", "--rhs", "four"]));
+        assert_eq!(code, 1);
     }
 
     #[test]

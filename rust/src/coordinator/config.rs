@@ -20,8 +20,14 @@ pub struct SolverConfig {
     /// Supernode merge-policy override (default: derived from kernel +
     /// `repeated`). Used by the baselines.
     pub merge_policy: Option<MergePolicy>,
-    /// Worker threads; 0 = all available cores.
+    /// Worker threads; 0 = all available cores. The persistent worker
+    /// pool is sized from this at [`crate::coordinator::Solver::try_new`]
+    /// time; later mutation has no effect.
     pub threads: usize,
+    /// Iterations a parked pool worker spins before sleeping on its
+    /// condvar — keeps back-to-back repeated solves off the futex wakeup
+    /// path. 0 parks immediately.
+    pub worker_spin: u32,
     /// Pivoting / perturbation.
     pub pivot: PivotConfig,
     /// MC64 static pivoting + scaling (disable only for pre-scaled
@@ -62,6 +68,7 @@ impl Default for SolverConfig {
             kernel: None,
             merge_policy: None,
             threads: 0,
+            worker_spin: crate::exec::DEFAULT_SPIN,
             pivot: PivotConfig::default(),
             static_pivoting: true,
             repeated: false,

@@ -1,7 +1,12 @@
 //! The coordinator: HYLU's public solver API (`analyze` → `factor` /
-//! `refactor` → `solve`), configuration, phase statistics, and the
-//! composition of static pivoting, ordering, supernode pivoting and
-//! scalings into one consistent permutation story.
+//! `refactor` → `solve` / `solve_many`), configuration, phase statistics,
+//! and the composition of static pivoting, ordering, supernode pivoting
+//! and scalings into one consistent permutation story.
+//!
+//! A [`Solver`] owns a persistent [`Engine`] (worker pool + scratch
+//! arenas, see [`crate::exec`]) created once in [`Solver::try_new`]:
+//! after one warm-up `factor` + `solve`, every `refactor` + `solve` cycle
+//! runs on already-parked workers with zero O(n) scratch allocations.
 
 pub mod config;
 pub mod stats;
@@ -11,21 +16,26 @@ pub use stats::{FactorStats, SolveStats, SymbolicStats};
 
 use std::time::Instant;
 
+use crate::exec::{self, Engine, ExecPlan, PoolCounters, SolveScratch};
 use crate::numeric::factor::{GemmBackend, NativeGemm};
-use crate::numeric::parallel::factor_parallel;
+use crate::numeric::parallel::factor_parallel_pooled;
 use crate::numeric::select::{select_kernel, selection_stats, KernelMode};
 use crate::numeric::LuFactors;
 use crate::ordering::{self, mwm};
-use crate::par::effective_threads;
-use crate::solve::{backward, backward_parallel, forward, forward_parallel};
+use crate::par::{effective_threads, DoneFlags};
+use crate::solve::{
+    backward, backward_block, backward_parallel_pooled, forward, forward_block,
+    forward_parallel_pooled, solve_block_parallel_pooled,
+};
 use crate::sparse::csr::Csr;
 use crate::sparse::perm::Perm;
 use crate::symbolic::{analyze_pattern, MergePolicy, Symbolic};
 use crate::{Error, Result};
 
 /// The product of [`Solver::analyze`]: permutations, scalings, the symbolic
-/// factorization, the selected kernel, and the permuted pattern with value
-/// remapping tables for fast (re)factorization.
+/// factorization, the selected kernel, the permuted pattern with value
+/// remapping tables for fast (re)factorization, and the cached execution
+/// plan for the solver's worker pool.
 pub struct Analysis {
     /// Symbolic factorization of the permuted pattern.
     pub sym: Symbolic,
@@ -47,9 +57,20 @@ pub struct Analysis {
     scale: Vec<f64>,
     /// FNV hash of the analyzed pattern (guards value remapping).
     pattern_hash: u64,
+    /// Process-unique analysis id — keys the engine's permuted-matrix
+    /// cache. Two analyses of same-pattern matrices can still carry
+    /// *different* permutations (MC64 weighs values), so the pattern hash
+    /// alone must never be used as a cache identity.
+    uid: u64,
+    /// Cached schedule state (bulk chunks, scratch bounds) for the owning
+    /// solver's pool width.
+    pub plan: ExecPlan,
     /// Phase statistics.
     pub stats: SymbolicStats,
 }
+
+/// Monotonic source for [`Analysis::uid`].
+static ANALYSIS_UID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
 /// FNV-1a over the structural pattern.
 fn pattern_hash(a: &Csr) -> u64 {
@@ -69,23 +90,52 @@ fn pattern_hash(a: &Csr) -> u64 {
 }
 
 impl Analysis {
-    /// Rebuild `pa` values from a same-pattern matrix (repeated solve).
-    fn remap_values(&self, a: &Csr) -> Result<Csr> {
-        if a.n != self.pa.n || a.nnz() != self.pa.nnz() || pattern_hash(a) != self.pattern_hash
-        {
+    /// Rebuild the permuted values from a same-pattern matrix into the
+    /// engine's cached permuted matrix (repeated solve). The cache keeps
+    /// the last [`PA_CACHE_CAP`] analyses (keyed by [`Analysis::uid`]), so
+    /// a solver alternating between a few systems still pays the O(nnz)
+    /// clone only once per analysis; afterwards only the value array is
+    /// rewritten in place. On success this analysis' entry is the cache
+    /// front (`cache[0]`), maintaining true MRU order for eviction.
+    fn remap_values_into(
+        &self,
+        a: &Csr,
+        cache: &mut Vec<(u64, Csr)>,
+        counters: &PoolCounters,
+    ) -> Result<()> {
+        if a.n != self.pa.n || a.nnz() != self.pa.nnz() || pattern_hash(a) != self.pattern_hash {
             return Err(Error::Invalid(
                 "matrix pattern differs from the analyzed one".into(),
             ));
         }
-        let mut pa = self.pa.clone();
+        match cache.iter().position(|(uid, _)| *uid == self.uid) {
+            Some(i) => {
+                // true MRU: rotate the hit to the front so eviction below
+                // always drops the least-recently-used entry
+                cache[..=i].rotate_right(1);
+            }
+            None => {
+                if cache.len() >= PA_CACHE_CAP {
+                    cache.truncate(PA_CACHE_CAP - 1);
+                }
+                cache.insert(0, (self.uid, self.pa.clone()));
+                counters.note_alloc();
+            }
+        };
+        let pa = &mut cache[0].1;
         for (k, v) in pa.vals.iter_mut().enumerate() {
             *v = a.vals[self.src_idx[k]] * self.scale[k];
         }
-        Ok(pa)
+        Ok(())
     }
 }
 
+/// Number of recently used analyses whose permuted matrices the engine
+/// keeps warm (older entries are evicted and re-cloned on next use).
+const PA_CACHE_CAP: usize = 4;
+
 /// The product of [`Solver::factor`]: numeric factors plus statistics.
+#[derive(Debug)]
 pub struct Factorization {
     /// The numeric LU factors.
     pub fac: LuFactors,
@@ -93,13 +143,25 @@ pub struct Factorization {
     pub stats: FactorStats,
 }
 
-/// The HYLU solver handle. Holds configuration and the GEMM backend
-/// (native microkernel by default; XLA/PJRT AOT artifacts when
-/// [`SolverConfig::use_xla`] is set).
+/// The HYLU solver handle. Holds configuration, the GEMM backend (native
+/// microkernel by default; XLA/PJRT AOT artifacts when
+/// [`SolverConfig::use_xla`] is set), and the persistent execution engine.
+///
+/// The worker-pool width is fixed at construction from
+/// [`SolverConfig::threads`]; mutating `cfg.threads` afterwards has no
+/// effect.
+///
+/// Concurrency note: `factor`/`refactor`/`solve*` calls on one `Solver`
+/// serialize on the engine's scratch arenas (that sharing is what makes
+/// the warm path allocation-free). Concurrent callers wanting parallel
+/// *solves* should batch them into one [`Solver::solve_many`] call — the
+/// engine parallelizes across the RHS block internally — or use one
+/// `Solver` per thread (see the ROADMAP's async solve queue item).
 pub struct Solver {
     /// Active configuration.
     pub cfg: SolverConfig,
     gemm: Box<dyn GemmBackend + Sync + Send>,
+    engine: Engine,
 }
 
 impl Solver {
@@ -110,7 +172,8 @@ impl Solver {
         Self::try_new(cfg).expect("solver construction failed")
     }
 
-    /// Fallible constructor.
+    /// Fallible constructor. Spawns the worker pool (once — the same
+    /// threads serve every subsequent `factor`/`refactor`/`solve`).
     pub fn try_new(cfg: SolverConfig) -> Result<Self> {
         let gemm: Box<dyn GemmBackend + Sync + Send> = if cfg.use_xla {
             Box::new(crate::runtime::XlaGemm::load(
@@ -120,12 +183,20 @@ impl Solver {
         } else {
             Box::new(NativeGemm)
         };
-        Ok(Solver { cfg, gemm })
+        let engine = Engine::new(effective_threads(cfg.threads), cfg.worker_spin);
+        Ok(Solver { cfg, gemm, engine })
+    }
+
+    /// The persistent execution engine (pool + scratch arenas). Exposed
+    /// for observability: its counters back the zero-spawn / zero-alloc
+    /// guarantees of the warm path.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     /// Preprocessing phase: static pivoting (MC64), fill-reducing ordering,
     /// symbolic factorization with supernode detection, kernel selection,
-    /// and schedule construction.
+    /// and schedule construction (including the pool execution plan).
     pub fn analyze(&self, a: &Csr) -> Result<Analysis> {
         if a.n == 0 {
             return Err(Error::Invalid("empty matrix".into()));
@@ -184,6 +255,9 @@ impl Solver {
         }
         let t_symbolic = t2.elapsed().as_secs_f64();
 
+        // --- execution plan for the solver's pool width ---
+        let plan = ExecPlan::build(&sym, self.engine.pool().nthreads());
+
         let sel = selection_stats(&sym);
         let stats = SymbolicStats {
             n: a.n,
@@ -213,6 +287,8 @@ impl Solver {
             src_idx,
             scale,
             pattern_hash: pattern_hash(a),
+            uid: ANALYSIS_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            plan,
             stats,
         })
     }
@@ -229,21 +305,27 @@ impl Solver {
         }
     }
 
-    /// Numeric factorization (with supernode diagonal pivoting).
+    /// Numeric factorization (with supernode diagonal pivoting) as a job
+    /// on the persistent pool.
     pub fn factor(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
         let t0 = Instant::now();
-        let pa = an.remap_values(a)?;
+        let mut scratch = self.engine.scratch();
+        an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
+        self.ensure_done_flags(&mut scratch, an);
+        let pa = &scratch.pa[0].1;
         let mut fac = LuFactors::alloc(&an.sym);
-        let threads = effective_threads(self.cfg.threads);
-        let perturbed = factor_parallel(
-            &pa,
+        let threads = self.engine.pool().nthreads();
+        let perturbed = factor_parallel_pooled(
+            pa,
             &an.sym,
             an.mode,
             &self.cfg.pivot,
             &mut fac,
             false,
             self.gemm.as_ref(),
-            threads,
+            self.engine.pool(),
+            &an.plan,
+            &scratch.done,
         );
         let t = t0.elapsed().as_secs_f64();
         Ok(Factorization {
@@ -260,20 +342,26 @@ impl Solver {
     }
 
     /// Refactorization: same pattern, new values, stored pivot order, no
-    /// pivot search — the repeated-solve fast path.
+    /// pivot search — the repeated-solve fast path. On a warm engine this
+    /// spawns no threads and performs no O(n) scratch allocation.
     pub fn refactor(&self, a: &Csr, an: &Analysis, f: &mut Factorization) -> Result<()> {
         let t0 = Instant::now();
-        let pa = an.remap_values(a)?;
-        let threads = effective_threads(self.cfg.threads);
-        let perturbed = factor_parallel(
-            &pa,
+        let mut scratch = self.engine.scratch();
+        an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
+        self.ensure_done_flags(&mut scratch, an);
+        let pa = &scratch.pa[0].1;
+        let threads = self.engine.pool().nthreads();
+        let perturbed = factor_parallel_pooled(
+            pa,
             &an.sym,
             an.mode,
             &self.cfg.pivot,
             &mut f.fac,
             true,
             self.gemm.as_ref(),
-            threads,
+            self.engine.pool(),
+            &an.plan,
+            &scratch.done,
         );
         let t = t0.elapsed().as_secs_f64();
         f.stats = FactorStats {
@@ -302,76 +390,260 @@ impl Solver {
         f: &Factorization,
         b: &[f64],
     ) -> Result<(Vec<f64>, SolveStats)> {
+        let mut x = Vec::new();
+        let st = self.solve_into(a, an, f, b, &mut x)?;
+        Ok((x, st))
+    }
+
+    /// Solve into a caller-provided buffer (`x` is resized to `n`). With a
+    /// reused buffer on a warm engine, the whole call performs no O(n)
+    /// allocation — the repeated-solve inner loop.
+    pub fn solve_into(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        b: &[f64],
+        x: &mut Vec<f64>,
+    ) -> Result<SolveStats> {
         if b.len() != a.n {
             return Err(Error::Invalid("rhs length mismatch".into()));
         }
         let t0 = Instant::now();
-        let threads = effective_threads(self.cfg.threads);
-        let mut x = self.substitute(an, f, b, threads);
-        let mut residual = a.relative_residual(&x, b);
-        let mut iters = 0usize;
+        let mut guard = self.engine.scratch();
+        let scratch = &mut *guard;
+        self.substitute_into(an, f, b, &mut scratch.y, x);
+        let (residual, iters) = self.refine_in_place(a, an, f, b, x, scratch);
+        Ok(SolveStats {
+            t_solve: t0.elapsed().as_secs_f64(),
+            residual,
+            refine_iters: iters,
+            threads: self.engine.pool().nthreads(),
+            nrhs: 1,
+        })
+    }
 
-        // iterative refinement (paper: automatic after pivot perturbation)
+    /// Batched repeated solve: `A x_q = b_q` for every right-hand side in
+    /// `bs`, sweeping all of them through forward/backward substitution as
+    /// one dense block with a single pool dispatch. Column `q` of the
+    /// result is bit-identical to `solve(a, an, f, &bs[q])` — the block
+    /// kernels perform the same operations in the same order per column,
+    /// and refinement reuses the scalar path per RHS.
+    pub fn solve_many(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        bs: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>> {
+        Ok(self.solve_many_with_stats(a, an, f, bs)?.0)
+    }
+
+    /// [`Solver::solve_many`] with aggregate statistics (`residual` is the
+    /// worst per-RHS residual, `refine_iters` the total across RHS).
+    pub fn solve_many_with_stats(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        bs: &[Vec<f64>],
+    ) -> Result<(Vec<Vec<f64>>, SolveStats)> {
+        let mut xs = Vec::new();
+        let st = self.solve_many_into(a, an, f, bs, &mut xs)?;
+        Ok((xs, st))
+    }
+
+    /// Batched solve into caller-provided buffers: `xs` is resized to `k`
+    /// vectors of length `n`. With reused buffers on a warm engine the
+    /// whole call performs no O(n·k) allocation — the batched counterpart
+    /// of [`Solver::solve_into`].
+    pub fn solve_many_into(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        bs: &[Vec<f64>],
+        xs: &mut Vec<Vec<f64>>,
+    ) -> Result<SolveStats> {
+        let n = a.n;
+        let k = bs.len();
+        for b in bs {
+            if b.len() != n {
+                return Err(Error::Invalid("rhs length mismatch".into()));
+            }
+        }
+        let t0 = Instant::now();
+        let threads = self.engine.pool().nthreads();
+        let counters = self.engine.counters();
+        xs.resize_with(k, Vec::new);
+        if k == 0 {
+            return Ok(SolveStats {
+                t_solve: t0.elapsed().as_secs_f64(),
+                residual: 0.0,
+                refine_iters: 0,
+                threads,
+                nrhs: 0,
+            });
+        }
+        for x in xs.iter_mut() {
+            if x.capacity() < n {
+                counters.note_alloc();
+            }
+            x.resize(n, 0.0);
+        }
+        let mut guard = self.engine.scratch();
+        let scratch = &mut *guard;
+        exec::ensure_len(&mut scratch.yk, n * k, counters);
+        let yk = &mut scratch.yk[..n * k];
+        // pack: yk[i, q] = dr[row] * bs[q][row], row as in the scalar path
+        for i in 0..n {
+            let pre = f.fac.pivot_perm[i] as usize;
+            let orig = an.row_perm.map[pre];
+            let s = an.dr[orig];
+            let row = i * k;
+            for (q, b) in bs.iter().enumerate() {
+                yk[row + q] = s * b[orig];
+            }
+        }
+        let pool = self.engine.pool();
+        if pool.nthreads() > 1 && n > self.cfg.parallel_solve_min_n {
+            solve_block_parallel_pooled(&an.sym, &f.fac, yk, k, pool, &an.plan);
+        } else {
+            forward_block(&an.sym, &f.fac, yk, k);
+            backward_block(&an.sym, &f.fac, yk, k);
+        }
+        // unpack: x_q[orig col] = dc[orig col] * yk[new col, q]
+        for j in 0..n {
+            let orig = an.col_perm.map[j];
+            let s = an.dc[orig];
+            let row = j * k;
+            for (q, x) in xs.iter_mut().enumerate() {
+                x[orig] = s * yk[row + q];
+            }
+        }
+        // per-RHS refinement through the scalar path (identical to what k
+        // independent solve calls would do)
+        let mut worst = 0.0f64;
+        let mut total_iters = 0usize;
+        for (q, x) in xs.iter_mut().enumerate() {
+            let (residual, iters) = self.refine_in_place(a, an, f, &bs[q], x, scratch);
+            worst = worst.max(residual);
+            total_iters += iters;
+        }
+        Ok(SolveStats {
+            t_solve: t0.elapsed().as_secs_f64(),
+            residual: worst,
+            refine_iters: total_iters,
+            threads,
+            nrhs: k,
+        })
+    }
+
+    /// Grow the engine's pipeline done-flag arena to this analysis' node
+    /// count (high-water sizing; a growth event only during warm-up).
+    fn ensure_done_flags(&self, scratch: &mut SolveScratch, an: &Analysis) {
+        if scratch.done.len() < an.sym.nodes.len() {
+            scratch.done = DoneFlags::new(an.sym.nodes.len());
+            self.engine.counters().note_alloc();
+        }
+    }
+
+    /// One triangular solve round into reusable buffers: scale/permute b
+    /// into `y`, forward, backward, unpermute/unscale into `x`.
+    fn substitute_into(
+        &self,
+        an: &Analysis,
+        f: &Factorization,
+        b: &[f64],
+        y: &mut Vec<f64>,
+        x: &mut Vec<f64>,
+    ) {
+        let n = b.len();
+        let counters = self.engine.counters();
+        exec::ensure_len(y, n, counters);
+        if x.capacity() < n {
+            counters.note_alloc();
+        }
+        x.resize(n, 0.0);
+        let y = &mut y[..n];
+        // y[i] = dr[row] * b[row], row = row_perm(map ∘ pivot)
+        for i in 0..n {
+            let pre = f.fac.pivot_perm[i] as usize; // analyzed-row
+            let orig = an.row_perm.map[pre];
+            y[i] = an.dr[orig] * b[orig];
+        }
+        let pool = self.engine.pool();
+        if pool.nthreads() > 1 && n > self.cfg.parallel_solve_min_n {
+            forward_parallel_pooled(&an.sym, &f.fac, y, pool, &an.plan);
+            backward_parallel_pooled(&an.sym, &f.fac, y, pool, &an.plan);
+        } else {
+            forward(&an.sym, &f.fac, y);
+            backward(&an.sym, &f.fac, y);
+        }
+        // x[orig col] = dc[orig col] * y[new col]
+        for j in 0..n {
+            let orig = an.col_perm.map[j];
+            x[orig] = an.dc[orig] * y[j];
+        }
+    }
+
+    /// Iterative refinement on `x` (paper: automatic after pivot
+    /// perturbation) using the engine scratch arenas. Returns the final
+    /// residual and the refinement iteration count.
+    fn refine_in_place(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        b: &[f64],
+        x: &mut Vec<f64>,
+        scratch: &mut SolveScratch,
+    ) -> (f64, usize) {
+        let n = a.n;
+        let counters = self.engine.counters();
+        let mut residual = residual_norm(a, &x[..n], b, &mut scratch.r, counters);
+        let mut iters = 0usize;
         if f.fac.perturbed > 0 || residual > self.cfg.refine_tol {
-            let mut r = vec![0.0; a.n];
             while iters < self.cfg.refine_max_iter && residual > self.cfg.refine_target {
-                a.matvec(&x, &mut r);
-                for (ri, bi) in r.iter_mut().zip(b) {
+                // scratch.r holds A·x from the residual computation:
+                // rewrite it into the correction RHS b − A·x
+                for (ri, bi) in scratch.r[..n].iter_mut().zip(b) {
                     *ri = bi - *ri;
                 }
-                let d = self.substitute(an, f, &r, threads);
-                let mut x2 = x.clone();
-                for (xi, di) in x2.iter_mut().zip(&d) {
-                    *xi += di;
+                self.substitute_into(an, f, &scratch.r[..n], &mut scratch.y, &mut scratch.d);
+                if scratch.x2.capacity() < n {
+                    counters.note_alloc();
                 }
-                let res2 = a.relative_residual(&x2, b);
+                scratch.x2.resize(n, 0.0);
+                for i in 0..n {
+                    scratch.x2[i] = x[i] + scratch.d[i];
+                }
+                let res2 = residual_norm(a, &scratch.x2[..n], b, &mut scratch.r, counters);
                 iters += 1;
                 if res2 < residual {
-                    x = x2;
+                    std::mem::swap(x, &mut scratch.x2);
                     residual = res2;
                 } else {
                     break;
                 }
             }
         }
-        let t = t0.elapsed().as_secs_f64();
-        Ok((
-            x,
-            SolveStats {
-                t_solve: t,
-                residual,
-                refine_iters: iters,
-                threads,
-            },
-        ))
+        (residual, iters)
     }
+}
 
-    /// One triangular solve round: scale/permute b, forward, backward,
-    /// unpermute/unscale x.
-    fn substitute(&self, an: &Analysis, f: &Factorization, b: &[f64], threads: usize) -> Vec<f64> {
-        let n = b.len();
-        // y[i] = dr[row] * b[row], row = row_perm(map ∘ pivot)
-        let mut y = vec![0.0; n];
-        for i in 0..n {
-            let pre = f.fac.pivot_perm[i] as usize; // analyzed-row
-            let orig = an.row_perm.map[pre];
-            y[i] = an.dr[orig] * b[orig];
-        }
-        if threads > 1 && n > self.cfg.parallel_solve_min_n {
-            forward_parallel(&an.sym, &f.fac, &mut y, threads);
-            backward_parallel(&an.sym, &f.fac, &mut y, threads);
-        } else {
-            forward(&an.sym, &f.fac, &mut y);
-            backward(&an.sym, &f.fac, &mut y);
-        }
-        // x[orig col] = dc[orig col] * y[new col]
-        let mut x = vec![0.0; n];
-        for j in 0..n {
-            let orig = an.col_perm.map[j];
-            x[orig] = an.dc[orig] * y[j];
-        }
-        x
-    }
+/// `‖Ax − b‖₁ / ‖b‖₁` with `r` as the reusable `A·x` buffer (left holding
+/// `A·x` on return). The norm itself is [`Csr::relative_residual_into`] —
+/// one residual definition shared with the rest of the crate.
+fn residual_norm(
+    a: &Csr,
+    x: &[f64],
+    b: &[f64],
+    r: &mut Vec<f64>,
+    counters: &PoolCounters,
+) -> f64 {
+    exec::ensure_len(r, a.n, counters);
+    a.relative_residual_into(x, b, &mut r[..a.n])
 }
 
 /// Build the permuted+scaled matrix and the value remap tables.
@@ -513,6 +785,7 @@ mod tests {
         let an = solver.analyze(&a).unwrap();
         let f = solver.factor(&a, &an).unwrap();
         assert!(solver.solve(&a, &an, &f, &[1.0]).is_err());
+        assert!(solver.solve_many(&a, &an, &f, &[vec![1.0]]).is_err());
         let empty = Csr {
             n: 0,
             indptr: vec![0],
@@ -543,5 +816,22 @@ mod tests {
         let x1 = s1.solve(&a, &an1, &f1, &b).unwrap();
         let x4 = s4.solve(&a, &an4, &f4, &b).unwrap();
         assert_eq!(x1, x4, "threaded result must be bit-identical");
+    }
+
+    #[test]
+    fn solve_many_empty_and_basic() {
+        let a = gen::grid2d(8, 8);
+        let solver = Solver::new(SolverConfig::default());
+        let an = solver.analyze(&a).unwrap();
+        let f = solver.factor(&a, &an).unwrap();
+        assert!(solver.solve_many(&a, &an, &f, &[]).unwrap().is_empty());
+        let xt: Vec<f64> = (0..a.n).map(|i| (i % 4) as f64 - 1.0).collect();
+        let mut b = vec![0.0; a.n];
+        a.matvec(&xt, &mut b);
+        let xs = solver.solve_many(&a, &an, &f, &[b.clone(), b.clone()]).unwrap();
+        assert_eq!(xs.len(), 2);
+        for x in &xs {
+            assert!(max_abs_diff(x, &xt) < 1e-8);
+        }
     }
 }

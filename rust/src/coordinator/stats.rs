@@ -59,10 +59,13 @@ pub struct FactorStats {
 pub struct SolveStats {
     /// Wall seconds (substitution + refinement).
     pub t_solve: f64,
-    /// Final relative residual `‖Ax−b‖₁ / ‖b‖₁`.
+    /// Final relative residual `‖Ax−b‖₁ / ‖b‖₁` (worst across RHS for
+    /// batched solves).
     pub residual: f64,
-    /// Iterative-refinement rounds executed.
+    /// Iterative-refinement rounds executed (total across RHS).
     pub refine_iters: usize,
     /// Threads used.
     pub threads: usize,
+    /// Right-hand sides solved in this call (1 for the scalar path).
+    pub nrhs: usize,
 }

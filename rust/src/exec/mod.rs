@@ -1,0 +1,537 @@
+//! Persistent execution engine (the repeated-solve substrate).
+//!
+//! The paper's headline number is the *repeated-solve* path: the same
+//! pattern is refactored and resolved thousands of times inside a
+//! simulation loop. Spawning OS threads and allocating O(n) scratch on
+//! every `factor`/`refactor`/`forward`/`backward` call — what
+//! `std::thread::scope` drivers do — is pure per-call overhead there
+//! (CKTSO and ShyLU-node report the same effect). This module amortizes it
+//! once:
+//!
+//! - [`WorkerPool`] — long-lived parked workers with epoch/job dispatch.
+//!   Each worker owns a persistent [`Workspace`] arena that grows to the
+//!   high-water mark during warm-up and is reused verbatim afterwards.
+//! - [`ExecPlan`] — per-[`crate::symbolic::Symbolic`] schedule state
+//!   (flop-balanced bulk-level chunks, substitution chunks, kernel
+//!   scratch high-water bounds) computed once in `Solver::analyze`
+//!   instead of on every numeric call.
+//! - [`Engine`] — the pool plus a [`SolveScratch`] arena for the
+//!   coordinator's permuted-RHS / refinement buffers, the pipeline
+//!   done-flag arena, and the cached permuted-matrix value buffers used
+//!   by `refactor`.
+//!
+//! After one warm-up `factor` + `solve`, a `refactor` + `solve` cycle
+//! dispatches jobs onto already-running threads and performs **zero**
+//! O(n) scratch allocations; [`PoolCounters`] makes both properties
+//! observable (and assertable in tests).
+
+pub mod plan;
+
+pub use plan::ExecPlan;
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Lock ignoring poison: the pool propagates job panics *by design* (the
+/// panicking frame holds the caller-context / scratch guards), and every
+/// guarded structure is left in a consistent state on that path (workspaces
+/// are scrubbed, scratch arenas are plain buffers), so a poisoned mutex
+/// must not brick the engine.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Unwrap a condvar-wait result the same way.
+fn wait_ignore_poison<T>(r: LockResult<MutexGuard<'_, T>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+use crate::numeric::Workspace;
+use crate::sparse::csr::Csr;
+
+/// Observable engine behavior: thread spawns and scratch-arena growth.
+/// These counters back the "zero threads, zero O(n) allocations after
+/// warm-up" guarantee with assertions instead of folklore.
+#[derive(Debug, Default)]
+pub struct PoolCounters {
+    /// OS threads spawned by the engine since construction.
+    pub threads_spawned: AtomicUsize,
+    /// Scratch-arena growth events (worker workspaces + solve scratch).
+    pub scratch_allocs: AtomicU64,
+    /// Jobs dispatched onto the pool.
+    pub dispatches: AtomicU64,
+}
+
+impl PoolCounters {
+    /// Record one scratch-arena growth event.
+    pub fn note_alloc(&self) {
+        self.scratch_allocs.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Grow `v` to at least `n` elements (zero-filled), accounting the growth.
+pub fn ensure_len(v: &mut Vec<f64>, n: usize, counters: &PoolCounters) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+        counters.note_alloc();
+    }
+}
+
+/// Per-worker state handed to every job: a persistent numeric workspace
+/// plus the shared counters for allocation accounting.
+pub struct WorkerCtx {
+    /// Worker index in `[0, nthreads)`; worker 0 is the dispatching thread.
+    pub id: usize,
+    ws: Workspace,
+    counters: Arc<PoolCounters>,
+}
+
+impl WorkerCtx {
+    fn new(id: usize, counters: Arc<PoolCounters>) -> Self {
+        WorkerCtx {
+            id,
+            ws: Workspace::empty(),
+            counters,
+        }
+    }
+
+    /// The worker's workspace, grown for dimension `n` and with kernel
+    /// scratch reserved to the given high-water capacities. Growth is
+    /// counted as a scratch allocation; after warm-up this is a no-op.
+    pub fn workspace(
+        &mut self,
+        n: usize,
+        cbuf: usize,
+        tbuf: usize,
+        map_idx: usize,
+    ) -> &mut Workspace {
+        let mut grew = self.ws.ensure(n);
+        grew |= self.ws.reserve_kernel(cbuf, tbuf, map_idx);
+        if grew {
+            self.counters.note_alloc();
+        }
+        &mut self.ws
+    }
+}
+
+/// Type-erased job pointer shipped to workers. Lifetime is erased; safety
+/// comes from [`WorkerPool::run`] blocking until every worker has finished
+/// the job before the referent can go out of scope.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize, &mut WorkerCtx) + Sync + 'static));
+
+// Safety: the pointee is only dereferenced between dispatch and the
+// all-done handshake, while the dispatching stack frame is pinned inside
+// `WorkerPool::run`; the `Sync` bound makes shared calls sound.
+unsafe impl Send for JobPtr {}
+
+struct JobState {
+    epoch: u64,
+    job: Option<JobPtr>,
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    cv_work: Condvar,
+    cv_done: Condvar,
+    /// Advisory epoch mirror for the workers' pre-park spin phase.
+    epoch_hint: AtomicU64,
+    /// Spin iterations before parking on the condvar.
+    spin: u32,
+}
+
+/// A persistent pool of parked worker threads with epoch-based job
+/// dispatch.
+///
+/// `WorkerPool::new(t)` spawns `t - 1` OS threads once; the dispatching
+/// thread itself acts as worker 0, so a pool of size 1 never spawns and
+/// runs jobs inline. [`WorkerPool::run`] publishes one job (a `Fn(worker,
+/// &mut WorkerCtx)` executed by every worker exactly once) and blocks
+/// until all workers finish — which is what makes handing out borrows of
+/// the caller's stack to the workers sound. Dispatches are serialized by
+/// an internal lock, so a `&WorkerPool` can be shared freely.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Worker 0 (caller) context; doubles as the dispatch lock.
+    caller_ctx: Mutex<WorkerCtx>,
+    handles: Vec<JoinHandle<()>>,
+    nthreads: usize,
+    counters: Arc<PoolCounters>,
+}
+
+/// Default pre-park spin (iterations) — keeps sub-millisecond repeated
+/// solves from paying a futex wakeup per dispatch without burning cores
+/// when idle.
+pub const DEFAULT_SPIN: u32 = 2048;
+
+impl WorkerPool {
+    /// Pool with `nthreads` total workers (including the caller) and the
+    /// default spin; counters are created internally.
+    pub fn new(nthreads: usize) -> Self {
+        WorkerPool::with_counters(nthreads, DEFAULT_SPIN, Arc::new(PoolCounters::default()))
+    }
+
+    /// Pool wired to externally owned counters (the [`Engine`] shares one
+    /// counter block between the pool and the coordinator scratch).
+    pub fn with_counters(nthreads: usize, spin: u32, counters: Arc<PoolCounters>) -> Self {
+        let nthreads = nthreads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            cv_work: Condvar::new(),
+            cv_done: Condvar::new(),
+            epoch_hint: AtomicU64::new(0),
+            spin,
+        });
+        let mut handles = Vec::with_capacity(nthreads.saturating_sub(1));
+        for id in 1..nthreads {
+            let sh = shared.clone();
+            let ct = counters.clone();
+            counters.threads_spawned.fetch_add(1, Ordering::Relaxed);
+            let h = std::thread::Builder::new()
+                .name(format!("hylu-worker-{id}"))
+                .spawn(move || worker_loop(sh, id, ct))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        WorkerPool {
+            shared,
+            caller_ctx: Mutex::new(WorkerCtx::new(0, counters.clone())),
+            handles,
+            nthreads,
+            counters,
+        }
+    }
+
+    /// Total workers (caller included).
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Shared counters.
+    pub fn counters(&self) -> &Arc<PoolCounters> {
+        &self.counters
+    }
+
+    /// Dispatch `job` to every worker (each sees its worker id and its
+    /// persistent [`WorkerCtx`]) and block until all of them return.
+    ///
+    /// `setup` runs under the dispatch lock *before* any worker can see
+    /// the job — per-call shared state (e.g. resetting an [`ExecPlan`]'s
+    /// done-flags) goes there so back-to-back dispatches from different
+    /// threads cannot interleave setup with a running job.
+    ///
+    /// Panics in any worker (or the caller's share) are caught, the
+    /// dispatch is drained so borrows stay sound, and the panic is then
+    /// propagated on the calling thread. Caveat: that guarantee holds
+    /// only for jobs without internal cross-worker synchronization — if a
+    /// job's surviving workers block on a `Barrier` (or spin on a done
+    /// flag) the panicked worker will never reach, the dispatch cannot
+    /// drain and the call hangs, exactly as the scoped-thread drivers did.
+    /// The factor/substitution drivers rely on up-front input validation
+    /// to keep their jobs panic-free. Do not dispatch from inside a job —
+    /// the inner dispatch would deadlock on the dispatch lock.
+    #[allow(clippy::useless_transmute)] // lifetime-only transmute below
+    pub fn run<S, F>(&self, setup: S, job: F)
+    where
+        S: FnOnce(),
+        F: Fn(usize, &mut WorkerCtx) + Sync,
+    {
+        let mut ctx0 = lock_ignore_poison(&self.caller_ctx);
+        self.counters.dispatches.fetch_add(1, Ordering::Relaxed);
+        setup();
+        if self.nthreads == 1 {
+            let r = catch_unwind(AssertUnwindSafe(|| job(0, &mut ctx0)));
+            if let Err(p) = r {
+                ctx0.ws.scrub();
+                resume_unwind(p);
+            }
+            return;
+        }
+        let job_ref: &(dyn Fn(usize, &mut WorkerCtx) + Sync) = &job;
+        // Safety: lifetime erasure only — see `JobPtr`.
+        let ptr = JobPtr(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, &mut WorkerCtx) + Sync),
+                *const (dyn Fn(usize, &mut WorkerCtx) + Sync + 'static),
+            >(job_ref)
+        });
+        {
+            let mut st = lock_ignore_poison(&self.shared.state);
+            st.job = Some(ptr);
+            st.remaining = self.nthreads - 1;
+            st.panicked = false;
+            st.epoch += 1;
+            self.shared.epoch_hint.store(st.epoch, Ordering::Release);
+            self.shared.cv_work.notify_all();
+        }
+        let caller_result = catch_unwind(AssertUnwindSafe(|| job(0, &mut ctx0)));
+        let worker_panicked = {
+            let mut st = lock_ignore_poison(&self.shared.state);
+            while st.remaining > 0 {
+                st = wait_ignore_poison(self.shared.cv_done.wait(st));
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(p) = caller_result {
+            ctx0.ws.scrub();
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("a pool worker panicked during the dispatched job");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_ignore_poison(&self.shared.state);
+            st.shutdown = true;
+            self.shared.epoch_hint.store(u64::MAX, Ordering::Release);
+            self.shared.cv_work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize, counters: Arc<PoolCounters>) {
+    let mut ctx = WorkerCtx::new(id, counters);
+    let mut seen = 0u64;
+    loop {
+        // spin phase: cheap wakeup for back-to-back dispatches
+        let mut spins = 0u32;
+        while spins < shared.spin && shared.epoch_hint.load(Ordering::Acquire) == seen {
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        let job = {
+            let mut st = lock_ignore_poison(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("job published with epoch");
+                }
+                st = wait_ignore_poison(shared.cv_work.wait(st));
+            }
+        };
+        // Safety: the dispatcher pins the job until `remaining` drops to 0.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let f = unsafe { &*job.0 };
+            f(id, &mut ctx);
+        }));
+        if r.is_err() {
+            ctx.ws.scrub();
+        }
+        let mut st = lock_ignore_poison(&shared.state);
+        if r.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.cv_done.notify_all();
+        }
+    }
+}
+
+/// Reusable coordinator-side arenas: permuted RHS, refinement buffers, the
+/// multi-RHS block, and the cached permuted-value matrix for `refactor`.
+/// All grown during warm-up, reused verbatim afterwards.
+#[derive(Default)]
+pub struct SolveScratch {
+    /// Permuted/scaled RHS in factor-row space (single RHS).
+    pub y: Vec<f64>,
+    /// Residual / correction RHS buffer.
+    pub r: Vec<f64>,
+    /// Correction solution buffer.
+    pub d: Vec<f64>,
+    /// Refinement candidate solution.
+    pub x2: Vec<f64>,
+    /// Dense n×k block for [`crate::coordinator::Solver::solve_many`].
+    pub yk: Vec<f64>,
+    /// Cached permuted matrices, MRU-first, keyed by the owning analysis'
+    /// unique id: `refactor` rewrites only the values in place instead of
+    /// cloning O(nnz) per call (the coordinator caps the length).
+    pub pa: Vec<(u64, Csr)>,
+    /// Pipeline-mode done-flag arena, high-water sized to the largest
+    /// analysis this engine has factored. Lives here — not in the shared
+    /// `ExecPlan` — because it is mutable per-call state.
+    pub done: crate::par::DoneFlags,
+}
+
+/// The persistent execution engine owned by a
+/// [`crate::coordinator::Solver`]: one worker pool plus the coordinator
+/// scratch arenas, sharing one counter block.
+pub struct Engine {
+    pool: WorkerPool,
+    scratch: Mutex<SolveScratch>,
+    counters: Arc<PoolCounters>,
+}
+
+impl Engine {
+    /// Engine with `nthreads` workers and the given pre-park spin.
+    pub fn new(nthreads: usize, spin: u32) -> Self {
+        let counters = Arc::new(PoolCounters::default());
+        Engine {
+            pool: WorkerPool::with_counters(nthreads, spin, counters.clone()),
+            scratch: Mutex::new(SolveScratch::default()),
+            counters,
+        }
+    }
+
+    /// The worker pool.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Lock the coordinator scratch arenas (poison-tolerant: a propagated
+    /// job panic leaves the arenas consistent, see [`lock_ignore_poison`]).
+    pub fn scratch(&self) -> MutexGuard<'_, SolveScratch> {
+        lock_ignore_poison(&self.scratch)
+    }
+
+    /// Shared counters.
+    pub fn counters(&self) -> &Arc<PoolCounters> {
+        &self.counters
+    }
+
+    /// OS threads spawned since construction (== `nthreads - 1`, forever).
+    pub fn threads_spawned(&self) -> usize {
+        self.counters.threads_spawned.load(Ordering::Relaxed)
+    }
+
+    /// Scratch-arena growth events so far.
+    pub fn scratch_alloc_events(&self) -> u64 {
+        self.counters.scratch_allocs.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_every_worker_once_per_dispatch() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..10 {
+            pool.run(|| {}, |_, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 40);
+        assert_eq!(pool.counters().threads_spawned.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn pool_of_one_runs_inline_and_spawns_nothing() {
+        let pool = WorkerPool::new(1);
+        let mut ran = false;
+        pool.run(|| {}, |id, _| assert_eq!(id, 0));
+        pool.run(|| ran = true, |_, _| {});
+        assert!(ran);
+        assert_eq!(pool.counters().threads_spawned.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pool_jobs_see_distinct_worker_ids() {
+        let pool = WorkerPool::new(3);
+        let seen: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(|| {}, |id, _| {
+            seen[id].fetch_add(1, Ordering::Relaxed);
+        });
+        for s in &seen {
+            assert_eq!(s.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn pool_jobs_can_borrow_caller_stack() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<usize> = (0..1000).collect();
+        let partial: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(|| {}, |id, _| {
+            let chunk = data.len() / 4;
+            let s: usize = data[id * chunk..(id + 1) * chunk].iter().sum();
+            partial[id].store(s, Ordering::Relaxed);
+        });
+        let total: usize = partial.iter().map(|p| p.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn worker_workspaces_grow_once_then_stay() {
+        let pool = WorkerPool::new(3);
+        let c = pool.counters().clone();
+        for _ in 0..5 {
+            pool.run(|| {}, |_, ctx| {
+                let ws = ctx.workspace(256, 64, 64, 16);
+                assert!(ws.x.len() >= 256);
+            });
+        }
+        let after_warm = c.scratch_allocs.load(Ordering::Relaxed);
+        for _ in 0..5 {
+            pool.run(|| {}, |_, ctx| {
+                ctx.workspace(256, 64, 64, 16);
+            });
+        }
+        assert_eq!(c.scratch_allocs.load(Ordering::Relaxed), after_warm);
+    }
+
+    #[test]
+    fn setup_runs_before_workers_observe_job() {
+        let pool = WorkerPool::new(4);
+        let flag = AtomicUsize::new(0);
+        pool.run(
+            || flag.store(7, Ordering::Release),
+            |_, _| assert_eq!(flag.load(Ordering::Acquire), 7),
+        );
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_dispatcher() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(|| {}, |id, _| {
+                if id == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool must still be usable afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run(|| {}, |_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn engine_counters_are_shared() {
+        let eng = Engine::new(2, 0);
+        assert_eq!(eng.threads_spawned(), 1);
+        let before = eng.scratch_alloc_events();
+        ensure_len(&mut eng.scratch().y, 128, eng.counters());
+        assert_eq!(eng.scratch_alloc_events(), before + 1);
+        ensure_len(&mut eng.scratch().y, 128, eng.counters());
+        assert_eq!(eng.scratch_alloc_events(), before + 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Cached per-analysis schedule state.
+//!
+//! The scoped-thread drivers recomputed the flop-balanced bulk-level
+//! chunks and the substitution chunks on every numeric call. All of that
+//! is a pure function of the [`Symbolic`] and the pool width, so it is
+//! computed once here (in `Solver::analyze`) and replayed by every
+//! `factor`/`refactor`/`solve` afterwards. (The pipeline-mode done-flags
+//! are *mutable* per-call state and therefore live in the engine's
+//! scratch, not here — a plan shared between two solvers must stay
+//! race-free.)
+
+use crate::par::balanced_chunks;
+use crate::symbolic::Symbolic;
+
+/// Immutable execution plan for one symbolic analysis on one pool width.
+/// Shared freely by reference across factor/refactor/solve calls (and
+/// across solvers).
+pub struct ExecPlan {
+    /// Pool width the chunks were balanced for.
+    pub nthreads: usize,
+    /// Per bulk level: `(start, end)` node ranges per worker, balanced by
+    /// node flop estimates (factorization).
+    pub factor_chunks: Vec<Vec<(usize, usize)>>,
+    /// Per forward-substitution bulk level: ranges balanced by L nonzeros.
+    pub fwd_chunks: Vec<Vec<(usize, usize)>>,
+    /// Per backward-substitution bulk level (reverse levelization): ranges
+    /// balanced by U nonzeros.
+    pub bwd_chunks: Vec<Vec<(usize, usize)>>,
+    /// High-water bound for the sup-sup GEMM scatter buffer (`cbuf`).
+    pub max_cbuf: usize,
+    /// High-water bound for the TRSM gather scratch (`tbuf`).
+    pub max_tbuf: usize,
+    /// High-water bound for the U-tail scatter map (`map_idx`).
+    pub max_map: usize,
+}
+
+impl ExecPlan {
+    /// Borrow `self` when it matches `nthreads`, otherwise build a fresh
+    /// throwaway plan for that width into `storage`. Keeps an `Analysis`
+    /// usable with a solver of a different pool width (cold path: the
+    /// rebuild allocates; the owning solver's width always matches).
+    pub fn for_width<'a>(
+        &'a self,
+        sym: &Symbolic,
+        nthreads: usize,
+        storage: &'a mut Option<ExecPlan>,
+    ) -> &'a ExecPlan {
+        if self.nthreads == nthreads {
+            self
+        } else {
+            storage.insert(ExecPlan::build(sym, nthreads))
+        }
+    }
+
+    /// Build the plan for `sym` on a pool of `nthreads` workers.
+    pub fn build(sym: &Symbolic, nthreads: usize) -> ExecPlan {
+        let nthreads = nthreads.max(1);
+        let sched = &sym.schedule;
+        let mut weights: Vec<f64> = Vec::new();
+
+        let mut factor_chunks = Vec::with_capacity(sched.bulk_levels);
+        let mut fwd_chunks = Vec::with_capacity(sched.bulk_levels);
+        for lv in 0..sched.bulk_levels {
+            let ids = sched.nodes_at(lv);
+            weights.clear();
+            weights.extend(ids.iter().map(|&id| sym.nodes[id as usize].flops));
+            factor_chunks.push(balanced_chunks(&weights, nthreads));
+            weights.clear();
+            weights.extend(ids.iter().map(|&id| (sym.nodes[id as usize].nl() + 1) as f64));
+            fwd_chunks.push(balanced_chunks(&weights, nthreads));
+        }
+
+        let mut bwd_chunks = Vec::with_capacity(sched.rbulk_levels);
+        for lv in 0..sched.rbulk_levels {
+            let ids = &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]];
+            weights.clear();
+            weights.extend(ids.iter().map(|&id| (sym.nodes[id as usize].nu() + 1) as f64));
+            bwd_chunks.push(balanced_chunks(&weights, nthreads));
+        }
+
+        // Kernel scratch high-water marks: sized so no worker workspace
+        // ever reallocates mid-factorization regardless of which worker
+        // claims which node (pipeline-mode assignment is nondeterministic).
+        let mut max_cbuf = 0usize;
+        let mut max_tbuf = 0usize;
+        let mut max_map = 0usize;
+        for nd in &sym.nodes {
+            let w = nd.width as usize;
+            for g in &sym.groups[nd.g_start..nd.g_end] {
+                let src = &sym.nodes[g.src as usize];
+                if src.is_super {
+                    let s_nu = src.nu();
+                    let len = g.len as usize;
+                    max_cbuf = max_cbuf.max(w * s_nu);
+                    max_tbuf = max_tbuf.max(len * len);
+                    max_map = max_map.max(s_nu);
+                }
+            }
+        }
+
+        ExecPlan {
+            nthreads,
+            factor_chunks,
+            fwd_chunks,
+            bwd_chunks,
+            max_cbuf,
+            max_tbuf,
+            max_map,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::symbolic::{analyze_pattern, MergePolicy};
+
+    #[test]
+    fn plan_chunks_match_fresh_computation() {
+        let a = gen::grid2d(14, 14);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let plan = ExecPlan::build(&sym, 3);
+        assert_eq!(plan.nthreads, 3);
+        assert_eq!(plan.factor_chunks.len(), sym.schedule.bulk_levels);
+        for (lv, chunks) in plan.factor_chunks.iter().enumerate() {
+            let ids = sym.schedule.nodes_at(lv);
+            let weights: Vec<f64> = ids.iter().map(|&id| sym.nodes[id as usize].flops).collect();
+            assert_eq!(chunks, &balanced_chunks(&weights, 3));
+        }
+        assert_eq!(plan.bwd_chunks.len(), sym.schedule.rbulk_levels);
+    }
+
+    #[test]
+    fn plan_scratch_bounds_cover_every_group() {
+        let a = gen::banded(120, 6, 3);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let plan = ExecPlan::build(&sym, 2);
+        for nd in &sym.nodes {
+            for g in &sym.groups[nd.g_start..nd.g_end] {
+                let src = &sym.nodes[g.src as usize];
+                if src.is_super {
+                    assert!(nd.width as usize * src.nu() <= plan.max_cbuf);
+                    assert!(src.nu() <= plan.max_map);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_handles_single_thread_and_trivial_matrices() {
+        let a = crate::sparse::csr::Csr::identity(8);
+        let sym = analyze_pattern(&a, MergePolicy::None, 4);
+        let plan = ExecPlan::build(&sym, 1);
+        assert_eq!(plan.nthreads, 1);
+        for chunks in &plan.factor_chunks {
+            assert_eq!(chunks.len(), 1);
+        }
+    }
+}

@@ -23,14 +23,16 @@
 //!           iterative refinement (automatic after pivot perturbation)
 //! ```
 //!
-//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
-//! reproduction of every figure in the paper's evaluation.
+//! See `DESIGN.md` for the paper-to-module map (including the persistent
+//! execution engine in [`exec`]) and `benches/` for the reproduction of
+//! the paper's evaluation figures.
 
 pub mod baseline;
 pub mod bench_harness;
 pub mod bench_suite;
 pub mod cli;
 pub mod coordinator;
+pub mod exec;
 pub mod numeric;
 pub mod ordering;
 pub mod par;

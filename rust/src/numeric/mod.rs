@@ -121,6 +121,52 @@ impl Workspace {
             map_idx: Vec::new(),
         }
     }
+
+    /// Empty workspace (grown on demand by [`Workspace::ensure`]) — the
+    /// shape used by the persistent worker arenas in [`crate::exec`].
+    pub fn empty() -> Self {
+        Workspace::new(0)
+    }
+
+    /// Grow the dense accumulator and column map to dimension `n`,
+    /// preserving the all-zero / all-`-1` between-use invariants. Returns
+    /// `true` when storage actually grew (an allocation happened) so
+    /// callers can account scratch allocations.
+    pub fn ensure(&mut self, n: usize) -> bool {
+        if self.x.len() >= n {
+            return false;
+        }
+        self.x.resize(n, 0.0);
+        self.colmap.resize(n, -1);
+        true
+    }
+
+    /// Pre-reserve the kernel scratch vectors (`cbuf`/`tbuf`/`map_idx`) to
+    /// the given capacities so the numeric kernels never reallocate
+    /// mid-factorization. Returns `true` when any buffer grew.
+    pub fn reserve_kernel(&mut self, cbuf: usize, tbuf: usize, map_idx: usize) -> bool {
+        let mut grew = false;
+        if self.cbuf.capacity() < cbuf {
+            self.cbuf.reserve(cbuf - self.cbuf.len());
+            grew = true;
+        }
+        if self.tbuf.capacity() < tbuf {
+            self.tbuf.reserve(tbuf - self.tbuf.len());
+            grew = true;
+        }
+        if self.map_idx.capacity() < map_idx {
+            self.map_idx.reserve(map_idx - self.map_idx.len());
+            grew = true;
+        }
+        grew
+    }
+
+    /// Restore the between-use invariants unconditionally (used after a
+    /// caught panic may have left a kernel half-way through a node).
+    pub fn scrub(&mut self) {
+        self.x.fill(0.0);
+        self.colmap.fill(-1);
+    }
 }
 
 /// Shared mutable view over [`LuFactors`] used by the parallel driver.

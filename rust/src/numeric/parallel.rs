@@ -1,25 +1,157 @@
-//! Dual-mode parallel numeric factorization (paper §2.2.1, Fig. 2).
+//! Dual-mode parallel numeric factorization (paper §2.2.1, Fig. 2) on the
+//! persistent worker pool.
 //!
 //! Front (wide) levels run in **bulk mode**: each level's nodes are split
-//! among threads balanced by flop estimates, with a barrier between levels.
+//! among workers balanced by flop estimates, with a barrier between levels.
 //! The tail of the DAG — typically a long dependent chain — runs in
 //! **pipeline mode**: workers claim nodes from a shared topological cursor
 //! and spin on the done-flags of each claimed node's dependencies, so
 //! dependent nodes overlap at sub-node granularity instead of serializing
 //! on level barriers.
+//!
+//! The drivers run as jobs on a [`WorkerPool`]: no OS threads are spawned
+//! per call, each worker reuses its persistent
+//! [`crate::numeric::Workspace`] arena, the level chunks come precomputed
+//! from an [`ExecPlan`], and the pipeline done-flags are a caller-owned
+//! reusable arena. The [`factor_parallel`] wrapper keeps the old
+//! spawn-per-call signature for standalone use (tests, one-shot tools) by
+//! building a temporary pool.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
+use crate::exec::{ExecPlan, WorkerPool};
 use crate::numeric::factor::{factor_node, GemmBackend};
 use crate::numeric::select::KernelMode;
-use crate::numeric::{LuFactors, PivotConfig, SharedFactors, Workspace};
-use crate::par::{balanced_chunks, DoneFlags};
+use crate::numeric::{LuFactors, PivotConfig, SharedFactors};
+use crate::par::DoneFlags;
 use crate::sparse::csr::Csr;
 use crate::symbolic::Symbolic;
 
-/// Parallel factor/refactor. Falls back to the sequential driver for
-/// `nthreads <= 1`. Returns the number of perturbed pivots.
+/// Parallel factor/refactor as a job on a persistent pool. Runs
+/// sequentially (on worker 0's arena) for single-worker pools or trivial
+/// DAGs. Returns the number of perturbed pivots.
+///
+/// The plan is normally built for `sym` with `plan.nthreads ==
+/// pool.nthreads()` (the coordinator builds both from the same config); a
+/// mismatched plan — an `Analysis` used with a different solver — falls
+/// back to rebuilding a throwaway plan for this pool's width.
+///
+/// `done` is the caller's reusable pipeline-mode done-flag arena (at least
+/// `sym.nodes.len()` flags); it is reset under the pool's dispatch lock.
+/// It lives with the caller — not in the shared plan — so one `Analysis`
+/// used by two solvers concurrently cannot race on it.
+#[allow(clippy::too_many_arguments)]
+pub fn factor_parallel_pooled(
+    a: &Csr,
+    sym: &Symbolic,
+    mode: KernelMode,
+    cfg: &PivotConfig,
+    fac: &mut LuFactors,
+    refactor: bool,
+    gemm: &(dyn GemmBackend + Sync),
+    pool: &WorkerPool,
+    plan: &ExecPlan,
+    done: &DoneFlags,
+) -> usize {
+    assert!(
+        done.len() >= sym.nodes.len(),
+        "done-flag arena smaller than the node count"
+    );
+    let mut plan_storage = None;
+    let plan = plan.for_width(sym, pool.nthreads(), &mut plan_storage);
+    if !refactor {
+        for (i, p) in fac.pivot_perm.iter_mut().enumerate() {
+            *p = i as u32;
+        }
+    }
+    let eps_abs = if cfg.perturb {
+        cfg.perturb_eps * a.max_abs().max(1e-300)
+    } else {
+        0.0
+    };
+    let sf = SharedFactors::new(fac);
+    let sched = &sym.schedule;
+    let nthreads = pool.nthreads();
+    let sequential = nthreads <= 1 || sym.nodes.len() < 2;
+    let barrier = Barrier::new(nthreads);
+    // pipeline segment: nodes at levels >= bulk_levels, topological order
+    let pipe_start = sched.level_ptr[sched.bulk_levels];
+    let pipe_nodes = &sched.level_nodes[pipe_start..];
+    let cursor = AtomicUsize::new(0);
+
+    pool.run(
+        || done.reset(),
+        |t, ctx| {
+            let ws = ctx.workspace(sym.n, plan.max_cbuf, plan.max_tbuf, plan.max_map);
+            if sequential {
+                if t == 0 {
+                    for id in 0..sym.nodes.len() {
+                        // Safety: sequential — every source node is
+                        // complete in program order.
+                        unsafe {
+                            factor_node(id, a, sym, &sf, ws, mode, cfg, eps_abs, refactor, gemm)
+                        };
+                    }
+                }
+                return;
+            }
+            // bulk mode
+            for (lv, lv_chunks) in plan.factor_chunks.iter().enumerate() {
+                let ids = sched.nodes_at(lv);
+                let (s, e) = lv_chunks[t];
+                for &id in &ids[s..e] {
+                    // Safety: deps are in earlier levels (complete before
+                    // the previous barrier); this node's storage is
+                    // written only by this worker.
+                    unsafe {
+                        factor_node(
+                            id as usize,
+                            a,
+                            sym,
+                            &sf,
+                            ws,
+                            mode,
+                            cfg,
+                            eps_abs,
+                            refactor,
+                            gemm,
+                        )
+                    };
+                    done.set(id as usize);
+                }
+                barrier.wait();
+            }
+            // pipeline mode
+            loop {
+                let k = cursor.fetch_add(1, Ordering::Relaxed);
+                if k >= pipe_nodes.len() {
+                    break;
+                }
+                let id = pipe_nodes[k] as usize;
+                let nd = &sym.nodes[id];
+                for g in &sym.groups[nd.g_start..nd.g_end] {
+                    done.wait(g.src as usize);
+                }
+                // Safety: all deps observed complete (Acquire above).
+                unsafe { factor_node(id, a, sym, &sf, ws, mode, cfg, eps_abs, refactor, gemm) };
+                done.set(id);
+            }
+        },
+    );
+
+    let perturbed = sf.perturbed.load(Ordering::Relaxed);
+    fac.perturbed = perturbed;
+    perturbed
+}
+
+/// Standalone parallel factor/refactor: spawns a temporary pool (and
+/// builds a throwaway plan) per call. Falls back to the sequential driver
+/// for `nthreads <= 1`. Returns the number of perturbed pivots.
+///
+/// Repeated-solve callers should go through
+/// [`crate::coordinator::Solver`], which owns a persistent pool and a
+/// cached plan instead.
 #[allow(clippy::too_many_arguments)]
 pub fn factor_parallel(
     a: &Csr,
@@ -34,92 +166,10 @@ pub fn factor_parallel(
     if nthreads <= 1 || sym.nodes.len() < 2 {
         return crate::numeric::factor::factor(a, sym, mode, cfg, fac, refactor, gemm);
     }
-    if !refactor {
-        for (i, p) in fac.pivot_perm.iter_mut().enumerate() {
-            *p = i as u32;
-        }
-    }
-    let eps_abs = if cfg.perturb {
-        cfg.perturb_eps * a.max_abs().max(1e-300)
-    } else {
-        0.0
-    };
-    let sf = SharedFactors::new(fac);
-    let sched = &sym.schedule;
+    let pool = WorkerPool::new(nthreads);
+    let plan = ExecPlan::build(sym, nthreads);
     let done = DoneFlags::new(sym.nodes.len());
-    let barrier = Barrier::new(nthreads);
-
-    // pre-compute per-level thread chunks balanced by flops
-    let mut chunks: Vec<Vec<(usize, usize)>> = Vec::with_capacity(sched.bulk_levels);
-    for lv in 0..sched.bulk_levels {
-        let ids = sched.nodes_at(lv);
-        let weights: Vec<f64> = ids.iter().map(|&id| sym.nodes[id as usize].flops).collect();
-        chunks.push(balanced_chunks(&weights, nthreads));
-    }
-    // pipeline segment: nodes at levels >= bulk_levels, topological order
-    let pipe_start = sched.level_ptr[sched.bulk_levels];
-    let pipe_nodes = &sched.level_nodes[pipe_start..];
-    let cursor = AtomicUsize::new(0);
-
-    std::thread::scope(|scope| {
-        for t in 0..nthreads {
-            let sfr = &sf;
-            let doner = &done;
-            let barrierr = &barrier;
-            let chunksr = &chunks;
-            let cursorr = &cursor;
-            scope.spawn(move || {
-                let mut ws = Workspace::new(sym.n);
-                // bulk mode
-                for (lv, lv_chunks) in chunksr.iter().enumerate() {
-                    let ids = sched.nodes_at(lv);
-                    let (s, e) = lv_chunks[t];
-                    for &id in &ids[s..e] {
-                        // Safety: deps are in earlier levels (complete
-                        // before the previous barrier); this node's storage
-                        // is written only by this thread.
-                        unsafe {
-                            factor_node(
-                                id as usize,
-                                a,
-                                sym,
-                                sfr,
-                                &mut ws,
-                                mode,
-                                cfg,
-                                eps_abs,
-                                refactor,
-                                gemm,
-                            )
-                        };
-                        doner.set(id as usize);
-                    }
-                    barrierr.wait();
-                }
-                // pipeline mode
-                loop {
-                    let k = cursorr.fetch_add(1, Ordering::Relaxed);
-                    if k >= pipe_nodes.len() {
-                        break;
-                    }
-                    let id = pipe_nodes[k] as usize;
-                    let nd = &sym.nodes[id];
-                    for g in &sym.groups[nd.g_start..nd.g_end] {
-                        doner.wait(g.src as usize);
-                    }
-                    // Safety: all deps observed complete (Acquire above).
-                    unsafe {
-                        factor_node(id, a, sym, sfr, &mut ws, mode, cfg, eps_abs, refactor, gemm)
-                    };
-                    doner.set(id);
-                }
-            });
-        }
-    });
-
-    let perturbed = sf.perturbed.load(Ordering::Relaxed);
-    fac.perturbed = perturbed;
-    perturbed
+    factor_parallel_pooled(a, sym, mode, cfg, fac, refactor, gemm, &pool, &plan, &done)
 }
 
 #[cfg(test)]
@@ -148,6 +198,23 @@ mod tests {
             assert_eq!(f1.lvals, f2.lvals, "lvals mismatch t={threads}");
             assert_eq!(f1.uvals, f2.uvals, "uvals mismatch t={threads}");
             assert_eq!(f1.diag, f2.diag, "diag mismatch t={threads}");
+        }
+        // a persistent pool re-running the same factorization must also be
+        // bit-identical, including refactor replays on warm arenas
+        let pool = WorkerPool::new(3);
+        let plan = ExecPlan::build(&sym, 3);
+        let done = DoneFlags::new(sym.nodes.len());
+        let mut f3 = LuFactors::alloc(&sym);
+        for round in 0..3 {
+            let refactor = round > 0;
+            factor_parallel_pooled(
+                a, &sym, mode, &cfg, &mut f3, refactor, &NativeGemm, &pool, &plan, &done,
+            );
+            assert_eq!(f1.pivot_perm, f3.pivot_perm, "pooled pivot, round {round}");
+            assert_eq!(f1.panels, f3.panels, "pooled panels, round {round}");
+            assert_eq!(f1.lvals, f3.lvals, "pooled lvals, round {round}");
+            assert_eq!(f1.uvals, f3.uvals, "pooled uvals, round {round}");
+            assert_eq!(f1.diag, f3.diag, "pooled diag, round {round}");
         }
     }
 
@@ -193,5 +260,33 @@ mod tests {
         );
         assert_eq!(f1.panels, f2.panels);
         assert_eq!(f1.diag, f2.diag);
+    }
+
+    #[test]
+    fn single_worker_pool_matches_sequential_driver() {
+        let a = gen::grid2d(9, 9);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let cfg = PivotConfig::default();
+        let mut f1 = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, false, &NativeGemm);
+        let pool = WorkerPool::new(1);
+        let plan = ExecPlan::build(&sym, 1);
+        let done = DoneFlags::new(sym.nodes.len());
+        let mut f2 = LuFactors::alloc(&sym);
+        factor_parallel_pooled(
+            &a,
+            &sym,
+            KernelMode::SupSup,
+            &cfg,
+            &mut f2,
+            false,
+            &NativeGemm,
+            &pool,
+            &plan,
+            &done,
+        );
+        assert_eq!(f1.panels, f2.panels);
+        assert_eq!(f1.diag, f2.diag);
+        assert_eq!(f1.pivot_perm, f2.pivot_perm);
     }
 }

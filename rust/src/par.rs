@@ -23,6 +23,12 @@ pub struct DoneFlags {
     flags: Vec<AtomicU32>,
 }
 
+impl Default for DoneFlags {
+    fn default() -> Self {
+        DoneFlags::new(0)
+    }
+}
+
 impl DoneFlags {
     /// All-clear flags for `n` nodes.
     pub fn new(n: usize) -> Self {
@@ -35,6 +41,25 @@ impl DoneFlags {
     #[inline]
     pub fn set(&self, i: usize) {
         self.flags[i].store(1, Ordering::Release);
+    }
+
+    /// Number of flags.
+    pub fn len(&self) -> usize {
+        self.flags.len()
+    }
+
+    /// True when tracking zero nodes.
+    pub fn is_empty(&self) -> bool {
+        self.flags.is_empty()
+    }
+
+    /// Clear every flag for reuse (relaxed stores: the caller publishes
+    /// the reset to workers through its own synchronization — e.g. the
+    /// worker pool's dispatch lock).
+    pub fn reset(&self) {
+        for f in &self.flags {
+            f.store(0, Ordering::Relaxed);
+        }
     }
 
     /// True if node `i` is complete (Acquire).
@@ -62,6 +87,14 @@ impl DoneFlags {
 /// Split `items` (with weights) into `parts` contiguous chunks with roughly
 /// equal weight; returns (start, end) index pairs. Used to balance bulk
 /// levels across threads by flops.
+///
+/// Greedy bound: a chunk takes the next item only while doing so leaves it
+/// closer to its per-part target than stopping would (i.e. while
+/// `acc + w/2 <= target`), so one dominant weight never drags a whole
+/// prefix of light items into its chunk. Each non-empty chunk therefore
+/// overshoots its target by at most half of its last item, and a chunk's
+/// weight never exceeds `target + max_item/2` — in particular a dominant
+/// item ends up isolated instead of stacked on top of everything before it.
 pub fn balanced_chunks(weights: &[f64], parts: usize) -> Vec<(usize, usize)> {
     let n = weights.len();
     let parts = parts.max(1);
@@ -74,9 +107,7 @@ pub fn balanced_chunks(weights: &[f64], parts: usize) -> Vec<(usize, usize)> {
         let target = (total - consumed) / remaining_parts;
         let mut end = start;
         let mut acc = 0.0;
-        while end < n && (acc < target || end == start) {
-            // leave enough items for remaining parts? contiguous greedy is
-            // fine for our level sizes
+        while end < n && (end == start || acc + 0.5 * weights[end] <= target) {
             acc += weights[end];
             end += 1;
         }
@@ -118,6 +149,48 @@ mod tests {
             let sum = (e - s) as f64;
             assert!((sum - 25.0).abs() <= 2.0, "{sum}");
         }
+    }
+
+    /// Regression: a single dominant weight near the end must not make the
+    /// first chunk swallow every light item before it (leaving the other
+    /// parts idle), which the old `acc < target` greedy did — its first
+    /// chunk kept accepting items until it crossed a target inflated by
+    /// the giant, i.e. all of them.
+    #[test]
+    fn dominant_tail_weight_does_not_starve_other_chunks() {
+        let mut w = vec![1.0; 99];
+        w.push(1000.0);
+        let ch = balanced_chunks(&w, 4);
+        let weight = |&(s, e): &(usize, usize)| w[s..e].iter().sum::<f64>();
+        // the giant sits alone in its chunk...
+        let giant = ch.iter().find(|&&(s, e)| s <= 99 && 99 < e).unwrap();
+        assert_eq!(*giant, (99, 100), "giant must be isolated: {ch:?}");
+        // ...and the light prefix still occupies a non-empty earlier chunk
+        assert!(ch[0].1 > ch[0].0, "first chunk starved: {ch:?}");
+        let heaviest = ch.iter().map(weight).fold(0.0, f64::max);
+        assert!(heaviest <= 1000.0 + 1e-9, "heaviest chunk {heaviest}");
+    }
+
+    #[test]
+    fn dominant_leading_weight_is_isolated_too() {
+        let mut w = vec![1.0; 51];
+        w[0] = 500.0;
+        let ch = balanced_chunks(&w, 3);
+        assert_eq!(ch[0], (0, 1), "giant head must not absorb the tail: {ch:?}");
+        // remaining parts split the light tail
+        assert!(ch[1].1 > ch[1].0 && ch[2].1 > ch[2].0, "{ch:?}");
+    }
+
+    #[test]
+    fn done_flags_reset_clears_all() {
+        let f = DoneFlags::new(4);
+        f.set(1);
+        f.set(3);
+        f.reset();
+        for i in 0..4 {
+            assert!(!f.is_set(i));
+        }
+        assert_eq!(f.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! The real PJRT-backed [`GemmBackend`] (requires the `xla` cargo feature
+//! and a vendored `xla` crate).
+//!
+//! Interchange is HLO *text* (the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md). Each tile
+//! class `s ∈ {16, 32, 64, 128}` ([`super::TILE_CLASSES`]) has one compiled
+//! executable computing `C(s×2s) − A(s×s)·B(s×2s)`; blocks are zero-padded
+//! up to class shape (zero padding is exact for this update). Python never
+//! runs here — the artifacts are self-contained.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::numeric::factor::GemmBackend;
+use crate::{Error, Result};
+
+/// The xla crate's handles are `Rc`-based (single-threaded by default).
+/// We confine every handle inside this struct and only touch it under the
+/// one [`Mutex`] in [`XlaGemm`], so reference counts can never race —
+/// that confinement is what justifies the `unsafe impl Send`.
+struct Inner {
+    _client: xla::PjRtClient,
+    gemm: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    trsm: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+// Safety: see `Inner` docs — all access is serialized by XlaGemm's mutex,
+// and no handle ever escapes it.
+unsafe impl Send for Inner {}
+
+/// PJRT-backed GEMM engine (and TRSM, for tests/benches).
+pub struct XlaGemm {
+    inner: Mutex<Inner>,
+    classes: Vec<usize>,
+    min_dim: usize,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::Io("bad artifact path".into()))?,
+    )
+    .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| Error::Runtime(format!("compile {path:?}: {e}")))
+}
+
+impl XlaGemm {
+    /// Load and compile the f64 artifacts from `dir` (reads
+    /// `manifest.txt`). `min_dim`: blocks with any dimension below this
+    /// stay on the native microkernel (PJRT call overhead dominates).
+    pub fn load(dir: &Path, min_dim: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            Error::Io(format!(
+                "artifacts manifest missing (run `make artifacts`): {e}"
+            ))
+        })?;
+        let mut gemm = BTreeMap::new();
+        let mut trsm = BTreeMap::new();
+        for line in manifest.lines() {
+            let mut it = line.split('\t');
+            let (name, file) = match (it.next(), it.next()) {
+                (Some(n), Some(f)) => (n, f),
+                _ => continue,
+            };
+            if let Some(s) = name.strip_prefix("gemm_update_f64_") {
+                let s: usize = s.parse().map_err(|_| Error::Io("bad manifest".into()))?;
+                gemm.insert(s, compile(&client, &dir.join(file))?);
+            } else if let Some(s) = name.strip_prefix("trsm_f64_") {
+                let s: usize = s.parse().map_err(|_| Error::Io("bad manifest".into()))?;
+                trsm.insert(s, compile(&client, &dir.join(file))?);
+            }
+        }
+        if gemm.is_empty() {
+            return Err(Error::Runtime(
+                "no gemm_update_f64_* artifacts in manifest".into(),
+            ));
+        }
+        let classes: Vec<usize> = gemm.keys().copied().collect();
+        Ok(XlaGemm {
+            inner: Mutex::new(Inner {
+                _client: client,
+                gemm,
+                trsm,
+            }),
+            classes,
+            min_dim,
+        })
+    }
+
+    /// Smallest tile class fitting `(m, k, n)`; classes are `(s, s, 2s)`.
+    fn pick_class(&self, m: usize, k: usize, n: usize) -> Option<usize> {
+        self.classes
+            .iter()
+            .copied()
+            .find(|&s| m <= s && k <= s && n <= 2 * s)
+    }
+
+    /// Run `C − A·B` through a padded artifact; shapes `(m,k)·(k,n)`,
+    /// row-major contiguous inputs. Public for tests/benches.
+    pub fn gemm_update(
+        &self,
+        c: &[f64],
+        a: &[f64],
+        b: &[f64],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<f64>> {
+        let s = self
+            .pick_class(m, k, n)
+            .ok_or_else(|| Error::Runtime(format!("no tile class fits {m}x{k}x{n}")))?;
+        // pad
+        let mut cp = vec![0.0f64; s * 2 * s];
+        let mut ap = vec![0.0f64; s * s];
+        let mut bp = vec![0.0f64; s * 2 * s];
+        for i in 0..m {
+            cp[i * 2 * s..i * 2 * s + n].copy_from_slice(&c[i * n..(i + 1) * n]);
+            ap[i * s..i * s + k].copy_from_slice(&a[i * k..(i + 1) * k]);
+        }
+        for p in 0..k {
+            bp[p * 2 * s..p * 2 * s + n].copy_from_slice(&b[p * n..(p + 1) * n]);
+        }
+        let full = {
+            let inner = self.inner.lock().unwrap();
+            let lc = lit2(&cp, s, 2 * s)?;
+            let la = lit2(&ap, s, s)?;
+            let lb = lit2(&bp, s, 2 * s)?;
+            let out = inner.gemm[&s]
+                .execute::<xla::Literal>(&[lc, la, lb])
+                .map_err(|er| Error::Runtime(format!("execute: {er}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|er| Error::Runtime(format!("to_literal: {er}")))?;
+            out.to_tuple1()
+                .map_err(|er| Error::Runtime(format!("tuple: {er}")))?
+                .to_vec::<f64>()
+                .map_err(|er| Error::Runtime(format!("to_vec: {er}")))?
+        };
+        let mut res = vec![0.0f64; m * n];
+        for i in 0..m {
+            res[i * n..(i + 1) * n].copy_from_slice(&full[i * 2 * s..i * 2 * s + n]);
+        }
+        Ok(res)
+    }
+
+    /// Unit-lower TRSM through a padded artifact: solves `L X = B` with
+    /// `L (w×w)` (strictly-lower part read), `B (w×n)`. Padding with an
+    /// implicit-identity tail block is exact.
+    pub fn trsm_unit_lower(&self, l: &[f64], b: &[f64], w: usize, n: usize) -> Result<Vec<f64>> {
+        let s = self
+            .classes
+            .iter()
+            .copied()
+            .find(|&s| w <= s && n <= 2 * s)
+            .ok_or_else(|| Error::Runtime(format!("no trsm class fits {w}x{n}")))?;
+        let mut lp = vec![0.0f64; s * s];
+        let mut bp = vec![0.0f64; s * 2 * s];
+        for i in 0..w {
+            lp[i * s..i * s + w].copy_from_slice(&l[i * w..(i + 1) * w]);
+            bp[i * 2 * s..i * 2 * s + n].copy_from_slice(&b[i * n..(i + 1) * n]);
+        }
+        let full = {
+            let inner = self.inner.lock().unwrap();
+            let exe = inner
+                .trsm
+                .get(&s)
+                .ok_or_else(|| Error::Runtime("trsm artifact missing".into()))?;
+            let ll = lit2(&lp, s, s)?;
+            let lb = lit2(&bp, s, 2 * s)?;
+            let out = exe
+                .execute::<xla::Literal>(&[ll, lb])
+                .map_err(|er| Error::Runtime(format!("execute: {er}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|er| Error::Runtime(format!("to_literal: {er}")))?;
+            out.to_tuple1()
+                .map_err(|er| Error::Runtime(format!("tuple: {er}")))?
+                .to_vec::<f64>()
+                .map_err(|er| Error::Runtime(format!("to_vec: {er}")))?
+        };
+        let mut res = vec![0.0f64; w * n];
+        for i in 0..w {
+            res[i * n..(i + 1) * n].copy_from_slice(&full[i * 2 * s..i * 2 * s + n]);
+        }
+        Ok(res)
+    }
+}
+
+fn lit2(v: &[f64], r: usize, c: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[r as i64, c as i64])
+        .map_err(|e| Error::Runtime(format!("literal: {e}")))
+}
+
+impl GemmBackend for XlaGemm {
+    fn gemm_sub(
+        &self,
+        c: &mut [f64],
+        a: &[f64],
+        lda: usize,
+        b: &[f64],
+        ldb: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> bool {
+        if m < self.min_dim || k < self.min_dim || n < self.min_dim {
+            return false;
+        }
+        if self.pick_class(m, k, n).is_none() {
+            return false;
+        }
+        // compact strided inputs (c is contiguous ldc == n by contract)
+        let mut ac = vec![0.0f64; m * k];
+        for i in 0..m {
+            ac[i * k..(i + 1) * k].copy_from_slice(&a[i * lda..i * lda + k]);
+        }
+        let mut bc = vec![0.0f64; k * n];
+        for p in 0..k {
+            bc[p * n..(p + 1) * n].copy_from_slice(&b[p * ldb..p * ldb + n]);
+        }
+        match self.gemm_update(c, &ac, &bc, m, k, n) {
+            Ok(res) => {
+                c.copy_from_slice(&res[..m * n]);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}

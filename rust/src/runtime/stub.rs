@@ -1,0 +1,71 @@
+//! Stub XLA backend for builds without the `xla` feature (the offline
+//! registry has no PJRT bindings). Mirrors the API of [`super::pjrt`] so
+//! downstream code typechecks identically; every entry point reports that
+//! the backend is unavailable.
+
+use std::path::Path;
+
+use crate::numeric::factor::GemmBackend;
+use crate::{Error, Result};
+
+/// Placeholder for the PJRT-backed GEMM engine.
+pub struct XlaGemm {
+    _private: (),
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "XLA/PJRT backend not compiled in (add a vendored `xla` dependency \
+         to Cargo.toml, then build with `--features xla`)"
+            .into(),
+    )
+}
+
+impl XlaGemm {
+    /// Always fails: the backend is not compiled into this build.
+    pub fn load(_dir: &Path, _min_dim: usize) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Mirrors [`super::pjrt::XlaGemm::gemm_update`]; unreachable in
+    /// practice because `load` never succeeds.
+    pub fn gemm_update(
+        &self,
+        _c: &[f64],
+        _a: &[f64],
+        _b: &[f64],
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> Result<Vec<f64>> {
+        Err(unavailable())
+    }
+
+    /// Mirrors [`super::pjrt::XlaGemm::trsm_unit_lower`].
+    pub fn trsm_unit_lower(
+        &self,
+        _l: &[f64],
+        _b: &[f64],
+        _w: usize,
+        _n: usize,
+    ) -> Result<Vec<f64>> {
+        Err(unavailable())
+    }
+}
+
+impl GemmBackend for XlaGemm {
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_sub(
+        &self,
+        _c: &mut [f64],
+        _a: &[f64],
+        _lda: usize,
+        _b: &[f64],
+        _ldb: usize,
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> bool {
+        false
+    }
+}

@@ -1,6 +1,9 @@
-//! Forward/backward substitution (sequential and partition-based parallel)
-//! and iterative refinement.
+//! Forward/backward substitution (sequential, partition-based parallel,
+//! and batched multi-RHS block variants) and iterative refinement.
 
 pub mod substitution;
 
-pub use substitution::{backward, backward_parallel, forward, forward_parallel};
+pub use substitution::{
+    backward, backward_block, backward_parallel, backward_parallel_pooled, forward,
+    forward_block, forward_parallel, forward_parallel_pooled, solve_block_parallel_pooled,
+};

@@ -1,4 +1,5 @@
-//! Parallel forward-backward substitution (paper §2.3, Fig. 3).
+//! Parallel forward-backward substitution (paper §2.3, Fig. 3) on the
+//! persistent worker pool, plus the batched multi-RHS block variants.
 //!
 //! The triangular solves reuse the factorization DAG: HYLU's "bulk-
 //! sequential" dual mode processes wide levels in parallel with a barrier
@@ -7,13 +8,24 @@
 //! spin-waiting is not worth it for the tiny per-node solve work. Backward
 //! substitution uses the *reverse* levelization.
 //!
+//! The pooled entry points ([`forward_parallel_pooled`],
+//! [`backward_parallel_pooled`], [`solve_block_parallel_pooled`]) run as
+//! jobs on a [`WorkerPool`] with level chunks precomputed in an
+//! [`ExecPlan`]; the legacy `*_parallel` signatures build a temporary
+//! pool per call for standalone use. The block (`*_block`) variants sweep
+//! `k` right-hand sides laid out as a dense row-major `n×k` matrix in a
+//! single pass — one pool dispatch covers forward *and* backward over all
+//! `k` columns. Per column they perform exactly the same operations in
+//! exactly the same order as the single-RHS code, so a block solve is
+//! bit-identical to `k` independent solves.
+//!
 //! All routines operate in factor-row space: the caller (coordinator) has
 //! already applied the static + supernode pivot permutations and scalings.
 
 use std::sync::Barrier;
 
+use crate::exec::{ExecPlan, WorkerPool};
 use crate::numeric::LuFactors;
-use crate::par::balanced_chunks;
 use crate::symbolic::{NodeSym, Symbolic};
 
 /// Forward solve `y <- L^{-1} y` for one node.
@@ -77,6 +89,118 @@ fn backward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &m
     }
 }
 
+/// Forward solve for one node over a dense row-major `n×k` RHS block.
+/// Column-for-column identical (same operations, same order) to
+/// [`forward_node`].
+#[inline]
+fn forward_node_block(
+    nd: &NodeSym,
+    sym: &Symbolic,
+    fac: &LuFactors,
+    id: usize,
+    y: &mut [f64],
+    k: usize,
+) {
+    let first = nd.first as usize;
+    let w = nd.width as usize;
+    let nl = nd.nl();
+    let lcols = &sym.lcols[nd.l_start..nd.l_end];
+    if nd.is_super {
+        let stride = nd.panel_width();
+        let p = fac.panel(id);
+        for r in 0..w {
+            let base = r * stride;
+            let row = (first + r) * k;
+            for (c, &j) in lcols.iter().enumerate() {
+                let m = p[base + c];
+                let src = j as usize * k;
+                for q in 0..k {
+                    let t = m * y[src + q];
+                    y[row + q] -= t;
+                }
+            }
+            for kk in 0..r {
+                let m = p[base + nl + kk];
+                let src = (first + kk) * k;
+                for q in 0..k {
+                    let t = m * y[src + q];
+                    y[row + q] -= t;
+                }
+            }
+        }
+    } else {
+        let row = first * k;
+        for (c, &j) in lcols.iter().enumerate() {
+            let m = fac.lvals[nd.l_start + c];
+            let src = j as usize * k;
+            for q in 0..k {
+                let t = m * y[src + q];
+                y[row + q] -= t;
+            }
+        }
+    }
+}
+
+/// Backward solve for one node over a dense row-major `n×k` RHS block.
+/// Column-for-column identical to [`backward_node`].
+#[inline]
+fn backward_node_block(
+    nd: &NodeSym,
+    sym: &Symbolic,
+    fac: &LuFactors,
+    id: usize,
+    y: &mut [f64],
+    k: usize,
+) {
+    let first = nd.first as usize;
+    let w = nd.width as usize;
+    let nl = nd.nl();
+    let ucols = &sym.ucols[nd.u_start..nd.u_end];
+    if nd.is_super {
+        let stride = nd.panel_width();
+        let p = fac.panel(id);
+        for r in (0..w).rev() {
+            let base = r * stride;
+            let row = (first + r) * k;
+            let utail = &p[base + nl + w..base + stride];
+            for (c, &j) in ucols.iter().enumerate() {
+                let m = utail[c];
+                let src = j as usize * k;
+                for q in 0..k {
+                    let t = m * y[src + q];
+                    y[row + q] -= t;
+                }
+            }
+            for kk in r + 1..w {
+                let m = p[base + nl + kk];
+                let src = (first + kk) * k;
+                for q in 0..k {
+                    let t = m * y[src + q];
+                    y[row + q] -= t;
+                }
+            }
+            let piv = p[base + nl + r];
+            for q in 0..k {
+                y[row + q] /= piv;
+            }
+        }
+    } else {
+        let row = first * k;
+        for (c, &j) in ucols.iter().enumerate() {
+            let m = fac.uvals[nd.u_start + c];
+            let src = j as usize * k;
+            for q in 0..k {
+                let t = m * y[src + q];
+                y[row + q] -= t;
+            }
+        }
+        let piv = fac.diag[first];
+        for q in 0..k {
+            y[row + q] /= piv;
+        }
+    }
+}
+
 /// Sequential forward substitution: `y <- L^{-1} y`.
 pub fn forward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
     for (id, nd) in sym.nodes.iter().enumerate() {
@@ -91,6 +215,20 @@ pub fn backward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
     }
 }
 
+/// Sequential block forward substitution over a row-major `n×k` block.
+pub fn forward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+    for (id, nd) in sym.nodes.iter().enumerate() {
+        forward_node_block(nd, sym, fac, id, y, k);
+    }
+}
+
+/// Sequential block backward substitution over a row-major `n×k` block.
+pub fn backward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+    for (id, nd) in sym.nodes.iter().enumerate().rev() {
+        backward_node_block(nd, sym, fac, id, y, k);
+    }
+}
+
 /// Shared-mutable solution vector for the level-parallel solves.
 /// Safety: nodes in one level write disjoint `y` rows and only read rows
 /// finished in earlier levels (barrier-separated).
@@ -98,88 +236,185 @@ struct YPtr(*mut f64);
 unsafe impl Send for YPtr {}
 unsafe impl Sync for YPtr {}
 
-/// Parallel forward substitution (bulk-sequential dual mode).
+/// Parallel forward substitution (bulk-sequential dual mode) as a job on a
+/// persistent pool, with level chunks from the plan.
+pub fn forward_parallel_pooled(
+    sym: &Symbolic,
+    fac: &LuFactors,
+    y: &mut [f64],
+    pool: &WorkerPool,
+    plan: &ExecPlan,
+) {
+    let sched = &sym.schedule;
+    if pool.nthreads() <= 1 || sched.bulk_levels == 0 {
+        return forward(sym, fac, y);
+    }
+    let mut plan_storage = None;
+    let plan = plan.for_width(sym, pool.nthreads(), &mut plan_storage);
+    let yp = YPtr(y.as_mut_ptr());
+    let ylen = y.len();
+    let barrier = Barrier::new(pool.nthreads());
+    pool.run(
+        || {},
+        |t, _ctx| {
+            // Safety: see `YPtr` — disjoint row writes, barrier-separated
+            // level reads.
+            let y = unsafe { std::slice::from_raw_parts_mut(yp.0, ylen) };
+            for (lv, chunks) in plan.fwd_chunks.iter().enumerate() {
+                let ids = sched.nodes_at(lv);
+                let (s, e) = chunks[t];
+                for &id in &ids[s..e] {
+                    forward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                }
+                barrier.wait();
+            }
+            // sequential tail on worker 0
+            if t == 0 {
+                for lv in sched.bulk_levels..sched.nlevels() {
+                    for &id in sched.nodes_at(lv) {
+                        forward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Parallel backward substitution (bulk-sequential dual mode on the
+/// reverse levelization) as a job on a persistent pool.
+pub fn backward_parallel_pooled(
+    sym: &Symbolic,
+    fac: &LuFactors,
+    y: &mut [f64],
+    pool: &WorkerPool,
+    plan: &ExecPlan,
+) {
+    let sched = &sym.schedule;
+    if pool.nthreads() <= 1 || sched.rbulk_levels == 0 {
+        return backward(sym, fac, y);
+    }
+    let mut plan_storage = None;
+    let plan = plan.for_width(sym, pool.nthreads(), &mut plan_storage);
+    let yp = YPtr(y.as_mut_ptr());
+    let ylen = y.len();
+    let barrier = Barrier::new(pool.nthreads());
+    let nrlev = sched.rlevel_ptr.len() - 1;
+    pool.run(
+        || {},
+        |t, _ctx| {
+            // Safety: see `YPtr`.
+            let y = unsafe { std::slice::from_raw_parts_mut(yp.0, ylen) };
+            for (lv, chunks) in plan.bwd_chunks.iter().enumerate() {
+                let ids = &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]];
+                let (s, e) = chunks[t];
+                for &id in &ids[s..e] {
+                    backward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                }
+                barrier.wait();
+            }
+            if t == 0 {
+                for lv in sched.rbulk_levels..nrlev {
+                    for &id in &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]]
+                    {
+                        backward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Batched forward + backward substitution over a row-major `n×k` RHS
+/// block in **one** pool dispatch: bulk levels run chunked across workers
+/// with barriers, the dependent tails run on worker 0, and a barrier
+/// separates the forward sweep from the backward sweep.
+pub fn solve_block_parallel_pooled(
+    sym: &Symbolic,
+    fac: &LuFactors,
+    y: &mut [f64],
+    k: usize,
+    pool: &WorkerPool,
+    plan: &ExecPlan,
+) {
+    let sched = &sym.schedule;
+    if pool.nthreads() <= 1 || (sched.bulk_levels == 0 && sched.rbulk_levels == 0) {
+        forward_block(sym, fac, y, k);
+        backward_block(sym, fac, y, k);
+        return;
+    }
+    let mut plan_storage = None;
+    let plan = plan.for_width(sym, pool.nthreads(), &mut plan_storage);
+    let yp = YPtr(y.as_mut_ptr());
+    let ylen = y.len();
+    let barrier = Barrier::new(pool.nthreads());
+    let nrlev = sched.rlevel_ptr.len() - 1;
+    pool.run(
+        || {},
+        |t, _ctx| {
+            // Safety: see `YPtr` — each node owns k-column row slices.
+            let y = unsafe { std::slice::from_raw_parts_mut(yp.0, ylen) };
+            // forward sweep
+            for (lv, chunks) in plan.fwd_chunks.iter().enumerate() {
+                let ids = sched.nodes_at(lv);
+                let (s, e) = chunks[t];
+                for &id in &ids[s..e] {
+                    forward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                }
+                barrier.wait();
+            }
+            if t == 0 {
+                for lv in sched.bulk_levels..sched.nlevels() {
+                    for &id in sched.nodes_at(lv) {
+                        forward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                    }
+                }
+            }
+            // forward tail must be visible to every worker before backward
+            barrier.wait();
+            // backward sweep
+            for (lv, chunks) in plan.bwd_chunks.iter().enumerate() {
+                let ids = &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]];
+                let (s, e) = chunks[t];
+                for &id in &ids[s..e] {
+                    backward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                }
+                barrier.wait();
+            }
+            if t == 0 {
+                for lv in sched.rbulk_levels..nrlev {
+                    for &id in &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]]
+                    {
+                        backward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Parallel forward substitution with a temporary pool (legacy signature;
+/// repeated-solve callers use [`forward_parallel_pooled`] via the
+/// coordinator's persistent engine).
 pub fn forward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads: usize) {
     let sched = &sym.schedule;
     if nthreads <= 1 || sched.bulk_levels == 0 {
         return forward(sym, fac, y);
     }
-    let yp = YPtr(y.as_mut_ptr());
-    let ylen = y.len();
-    let barrier = Barrier::new(nthreads);
-    std::thread::scope(|scope| {
-        for t in 0..nthreads {
-            let ypr = &yp;
-            let barrierr = &barrier;
-            scope.spawn(move || {
-                let y = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
-                for lv in 0..sched.bulk_levels {
-                    let ids = sched.nodes_at(lv);
-                    let weights: Vec<f64> = ids
-                        .iter()
-                        .map(|&id| (sym.nodes[id as usize].nl() + 1) as f64)
-                        .collect();
-                    let (s, e) = balanced_chunks(&weights, nthreads)[t];
-                    for &id in &ids[s..e] {
-                        forward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
-                    }
-                    barrierr.wait();
-                }
-                // sequential tail on thread 0
-                if t == 0 {
-                    for lv in sched.bulk_levels..sched.nlevels() {
-                        for &id in sched.nodes_at(lv) {
-                            forward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
-                        }
-                    }
-                }
-            });
-        }
-    });
+    let pool = WorkerPool::new(nthreads);
+    let plan = ExecPlan::build(sym, nthreads);
+    forward_parallel_pooled(sym, fac, y, &pool, &plan);
 }
 
-/// Parallel backward substitution (bulk-sequential dual mode on the
-/// reverse levelization).
+/// Parallel backward substitution with a temporary pool (legacy
+/// signature).
 pub fn backward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads: usize) {
     let sched = &sym.schedule;
     if nthreads <= 1 || sched.rbulk_levels == 0 {
         return backward(sym, fac, y);
     }
-    let yp = YPtr(y.as_mut_ptr());
-    let ylen = y.len();
-    let barrier = Barrier::new(nthreads);
-    let nrlev = sched.rlevel_ptr.len() - 1;
-    std::thread::scope(|scope| {
-        for t in 0..nthreads {
-            let ypr = &yp;
-            let barrierr = &barrier;
-            scope.spawn(move || {
-                let y = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
-                for lv in 0..sched.rbulk_levels {
-                    let ids =
-                        &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]];
-                    let weights: Vec<f64> = ids
-                        .iter()
-                        .map(|&id| (sym.nodes[id as usize].nu() + 1) as f64)
-                        .collect();
-                    let (s, e) = balanced_chunks(&weights, nthreads)[t];
-                    for &id in &ids[s..e] {
-                        backward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
-                    }
-                    barrierr.wait();
-                }
-                if t == 0 {
-                    for lv in sched.rbulk_levels..nrlev {
-                        for &id in
-                            &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]]
-                        {
-                            backward_node(&sym.nodes[id as usize], sym, fac, id as usize, y);
-                        }
-                    }
-                }
-            });
-        }
-    });
+    let pool = WorkerPool::new(nthreads);
+    let plan = ExecPlan::build(sym, nthreads);
+    backward_parallel_pooled(sym, fac, y, &pool, &plan);
 }
 
 #[cfg(test)]
@@ -223,6 +458,37 @@ mod tests {
             backward_parallel(&sym, &fac, &mut y2, threads);
             assert_eq!(y, y2, "parallel solve mismatch t={threads}");
         }
+        // pooled variants on a persistent pool must agree exactly too
+        let pool = WorkerPool::new(3);
+        let plan = ExecPlan::build(&sym, 3);
+        let mut y3: Vec<f64> = (0..a.n).map(|i| b[fac.pivot_perm[i] as usize]).collect();
+        forward_parallel_pooled(&sym, &fac, &mut y3, &pool, &plan);
+        backward_parallel_pooled(&sym, &fac, &mut y3, &pool, &plan);
+        assert_eq!(y, y3, "pooled solve mismatch");
+        // block variants (k = 3, identical columns) must match column-wise
+        let k = 3usize;
+        let mut yb = vec![0.0; a.n * k];
+        for i in 0..a.n {
+            for q in 0..k {
+                yb[i * k + q] = b[fac.pivot_perm[i] as usize];
+            }
+        }
+        solve_block_parallel_pooled(&sym, &fac, &mut yb, k, &pool, &plan);
+        for q in 0..k {
+            for i in 0..a.n {
+                assert_eq!(yb[i * k + q], y[i], "block mismatch col {q} row {i}");
+            }
+        }
+        // sequential block path agrees as well
+        let mut ys = vec![0.0; a.n * k];
+        for i in 0..a.n {
+            for q in 0..k {
+                ys[i * k + q] = b[fac.pivot_perm[i] as usize];
+            }
+        }
+        forward_block(&sym, &fac, &mut ys, k);
+        backward_block(&sym, &fac, &mut ys, k);
+        assert_eq!(ys, yb, "sequential vs pooled block mismatch");
     }
 
     #[test]
@@ -247,5 +513,35 @@ mod tests {
     #[test]
     fn solves_circuit() {
         check_solve(&gen::circuit(300, 4), KernelMode::RowRow, 1e-7);
+    }
+
+    #[test]
+    fn block_with_distinct_columns_matches_independent_solves() {
+        let a = gen::grid2d(10, 10);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let cfg = PivotConfig::default();
+        let mut fac = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
+        let k = 4usize;
+        let n = a.n;
+        let cols: Vec<Vec<f64>> = (0..k)
+            .map(|q| (0..n).map(|i| ((i * (q + 2)) % 11) as f64 - 5.0).collect())
+            .collect();
+        let mut yb = vec![0.0; n * k];
+        for i in 0..n {
+            for (q, col) in cols.iter().enumerate() {
+                yb[i * k + q] = col[i];
+            }
+        }
+        forward_block(&sym, &fac, &mut yb, k);
+        backward_block(&sym, &fac, &mut yb, k);
+        for (q, col) in cols.iter().enumerate() {
+            let mut y = col.clone();
+            forward(&sym, &fac, &mut y);
+            backward(&sym, &fac, &mut y);
+            for i in 0..n {
+                assert_eq!(yb[i * k + q], y[i], "col {q} row {i}");
+            }
+        }
     }
 }

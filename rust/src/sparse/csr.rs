@@ -88,8 +88,15 @@ impl Csr {
     /// `‖Ax − b‖₁ / ‖b‖₁` — the paper's Fig. 11 residual metric.
     pub fn relative_residual(&self, x: &[f64], b: &[f64]) -> f64 {
         let mut ax = vec![0.0; self.n];
-        self.matvec(x, &mut ax);
-        let num: f64 = ax.iter().zip(b).map(|(p, q)| (p - q).abs()).sum();
+        self.relative_residual_into(x, b, &mut ax)
+    }
+
+    /// [`Csr::relative_residual`] into a caller-provided `A·x` buffer of
+    /// length `n` (left holding `A·x` on return) — the allocation-free
+    /// form used by the solve engine's refinement loop.
+    pub fn relative_residual_into(&self, x: &[f64], b: &[f64], r: &mut [f64]) -> f64 {
+        self.matvec(x, r);
+        let num: f64 = r.iter().zip(b).map(|(p, q)| (p - q).abs()).sum();
         let den: f64 = b.iter().map(|v| v.abs()).sum();
         num / den.max(1e-300)
     }

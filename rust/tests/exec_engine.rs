@@ -1,0 +1,205 @@
+//! Persistent-engine integration tests: after one warm-up cycle, a
+//! `refactor` + `solve` (and `solve_many`) cycle must spawn zero OS
+//! threads and perform zero O(n) scratch allocations — asserted through
+//! the engine's spawn/alloc counters — and the batched multi-RHS path
+//! must match independent scalar solves bit-for-bit.
+
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+
+fn rhs_set(n: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Prng::new(seed);
+    (0..k)
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+#[test]
+fn warm_refactor_solve_cycle_spawns_nothing_and_allocates_nothing() {
+    let a = gen::grid2d(24, 24);
+    let solver = Solver::new(SolverConfig {
+        threads: 3,
+        repeated: true,
+        parallel_solve_min_n: 0, // force the pooled substitution path
+        ..SolverConfig::default()
+    });
+    let an = solver.analyze(&a).unwrap();
+    let mut f = solver.factor(&a, &an).unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let bs = rhs_set(a.n, 3, 11);
+    let mut x = Vec::new();
+    let mut xs = Vec::new();
+
+    // Warm-up: one full refactor + solve + solve_many cycle grows every
+    // arena to its high-water mark.
+    solver.refactor(&a, &an, &mut f).unwrap();
+    solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+    solver.solve_many_into(&a, &an, &f, &bs, &mut xs).unwrap();
+
+    let spawned = solver.engine().threads_spawned();
+    let allocs = solver.engine().scratch_alloc_events();
+    assert_eq!(spawned, 2, "pool of 3 spawns exactly 2 OS threads");
+
+    // Warm cycles: identical inputs exercise the identical code path; the
+    // counters must not move at all.
+    for _ in 0..3 {
+        solver.refactor(&a, &an, &mut f).unwrap();
+        let st = solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+        assert!(st.residual < 1e-10, "residual {}", st.residual);
+        solver.solve_many_into(&a, &an, &f, &bs, &mut xs).unwrap();
+    }
+    assert_eq!(
+        solver.engine().threads_spawned(),
+        spawned,
+        "warm cycles must spawn no OS threads"
+    );
+    assert_eq!(
+        solver.engine().scratch_alloc_events(),
+        allocs,
+        "warm cycles must not grow any scratch arena"
+    );
+}
+
+#[test]
+fn warm_cycle_is_allocation_free_for_all_kernel_modes() {
+    use hylu::numeric::select::KernelMode;
+    let a = gen::grid2d(16, 16);
+    for mode in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
+        let solver = Solver::new(SolverConfig {
+            threads: 2,
+            kernel: Some(mode),
+            parallel_solve_min_n: 0,
+            ..SolverConfig::default()
+        });
+        let an = solver.analyze(&a).unwrap();
+        let mut f = solver.factor(&a, &an).unwrap();
+        let b = gen::rhs_for_ones(&a);
+        let mut x = Vec::new();
+        solver.refactor(&a, &an, &mut f).unwrap();
+        solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+        let spawned = solver.engine().threads_spawned();
+        let allocs = solver.engine().scratch_alloc_events();
+        for _ in 0..2 {
+            solver.refactor(&a, &an, &mut f).unwrap();
+            solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+        }
+        assert_eq!(solver.engine().threads_spawned(), spawned, "{mode}");
+        assert_eq!(solver.engine().scratch_alloc_events(), allocs, "{mode}");
+    }
+}
+
+#[test]
+fn solve_many_matches_independent_solves_bitwise() {
+    for (a, seed) in [
+        (gen::power_network(300, 7), 3u64),
+        (gen::grid2d(18, 18), 4),
+        (gen::kkt(150, 50, 3), 5), // perturbation → refinement engages
+    ] {
+        for threads in [1usize, 3] {
+            let solver = Solver::new(SolverConfig {
+                threads,
+                parallel_solve_min_n: 0,
+                ..SolverConfig::default()
+            });
+            let an = solver.analyze(&a).unwrap();
+            let f = solver.factor(&a, &an).unwrap();
+            let bs = rhs_set(a.n, 5, seed);
+            let xs = solver.solve_many(&a, &an, &f, &bs).unwrap();
+            assert_eq!(xs.len(), bs.len());
+            for (q, b) in bs.iter().enumerate() {
+                let x = solver.solve(&a, &an, &f, b).unwrap();
+                assert_eq!(
+                    xs[q], x,
+                    "batched column {q} must be bit-identical (t={threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn solve_many_k1_matches_scalar_solve() {
+    let a = gen::circuit(400, 2);
+    let solver = Solver::new(SolverConfig::default());
+    let an = solver.analyze(&a).unwrap();
+    let f = solver.factor(&a, &an).unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let xs = solver.solve_many(&a, &an, &f, &[b.clone()]).unwrap();
+    let x = solver.solve(&a, &an, &f, &b).unwrap();
+    assert_eq!(xs[0], x);
+}
+
+#[test]
+fn analysis_plan_matches_pool_width() {
+    let a = gen::grid2d(10, 10);
+    for threads in [1usize, 2, 5] {
+        let solver = Solver::new(SolverConfig {
+            threads,
+            ..SolverConfig::default()
+        });
+        let an = solver.analyze(&a).unwrap();
+        assert_eq!(an.plan.nthreads, solver.engine().pool().nthreads());
+        assert_eq!(an.plan.factor_chunks.len(), an.sym.schedule.bulk_levels);
+    }
+}
+
+#[test]
+fn alternating_two_analyses_stays_allocation_free_when_warm() {
+    // one solver serving two systems per tick: both permuted-matrix cache
+    // entries (and the shared done-flag/workspace arenas) must stay warm
+    let a1 = gen::grid2d(14, 14);
+    let a2 = gen::power_network(200, 5);
+    let solver = Solver::new(SolverConfig {
+        threads: 2,
+        parallel_solve_min_n: 0,
+        ..SolverConfig::default()
+    });
+    let an1 = solver.analyze(&a1).unwrap();
+    let an2 = solver.analyze(&a2).unwrap();
+    let mut f1 = solver.factor(&a1, &an1).unwrap();
+    let mut f2 = solver.factor(&a2, &an2).unwrap();
+    let b1 = gen::rhs_for_ones(&a1);
+    let b2 = gen::rhs_for_ones(&a2);
+    let (mut x1, mut x2) = (Vec::new(), Vec::new());
+    // warm-up tick for both systems
+    solver.refactor(&a1, &an1, &mut f1).unwrap();
+    solver.solve_into(&a1, &an1, &f1, &b1, &mut x1).unwrap();
+    solver.refactor(&a2, &an2, &mut f2).unwrap();
+    solver.solve_into(&a2, &an2, &f2, &b2, &mut x2).unwrap();
+    let spawned = solver.engine().threads_spawned();
+    let allocs = solver.engine().scratch_alloc_events();
+    for _ in 0..3 {
+        solver.refactor(&a1, &an1, &mut f1).unwrap();
+        solver.solve_into(&a1, &an1, &f1, &b1, &mut x1).unwrap();
+        solver.refactor(&a2, &an2, &mut f2).unwrap();
+        solver.solve_into(&a2, &an2, &f2, &b2, &mut x2).unwrap();
+    }
+    assert_eq!(solver.engine().threads_spawned(), spawned);
+    assert_eq!(
+        solver.engine().scratch_alloc_events(),
+        allocs,
+        "alternating warm systems must not re-clone the permuted cache"
+    );
+}
+
+#[test]
+fn engine_survives_many_analyses_and_mixed_sizes() {
+    // switching between systems of different size on one engine must stay
+    // correct (arenas are high-water sized, larger n regrows them)
+    let solver = Solver::new(SolverConfig {
+        threads: 2,
+        parallel_solve_min_n: 0,
+        ..SolverConfig::default()
+    });
+    for a in [gen::grid2d(8, 8), gen::grid2d(20, 20), gen::grid2d(5, 5)] {
+        let an = solver.analyze(&a).unwrap();
+        let f = solver.factor(&a, &an).unwrap();
+        let xt: Vec<f64> = (0..a.n).map(|i| (i % 6) as f64 - 2.0).collect();
+        let mut b = vec![0.0; a.n];
+        a.matvec(&xt, &mut b);
+        let x = solver.solve(&a, &an, &f, &b).unwrap();
+        let err = hylu::testutil::max_abs_diff(&x, &xt);
+        assert!(err < 1e-8, "n={} err={err}", a.n);
+    }
+}

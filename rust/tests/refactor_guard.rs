@@ -1,0 +1,140 @@
+//! Refactor pattern-guard tests: `Analysis` must reject a matrix whose
+//! pattern differs from the analyzed one even when dimension and nnz
+//! match (the FNV pattern hash), and a failed `refactor` must leave the
+//! existing factors untouched.
+
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::sparse::coo::Coo;
+use hylu::sparse::csr::Csr;
+use hylu::testutil::max_abs_diff;
+use hylu::Error;
+
+/// Diagonal 6×6 plus the given off-diagonal positions (same count ⇒ same
+/// nnz across variants, different positions ⇒ different pattern).
+fn with_offdiag(offdiag: &[(usize, usize)]) -> Csr {
+    let n = 6;
+    let mut c = Coo::new(n);
+    for i in 0..n {
+        c.push(i, i, 4.0 + i as f64);
+    }
+    for &(i, j) in offdiag {
+        c.push(i, j, 1.0);
+    }
+    c.to_csr()
+}
+
+#[test]
+fn factor_rejects_same_shape_different_pattern() {
+    let a1 = with_offdiag(&[(0, 1), (1, 2), (2, 3)]);
+    let a2 = with_offdiag(&[(1, 0), (2, 1), (3, 2)]);
+    assert_eq!(a1.n, a2.n);
+    assert_eq!(a1.nnz(), a2.nnz(), "variants must agree on nnz for the test");
+    let solver = Solver::new(SolverConfig::default());
+    let an = solver.analyze(&a1).unwrap();
+    let err = solver.factor(&a2, &an).unwrap_err();
+    assert!(
+        matches!(err, Error::Invalid(_)),
+        "expected Error::Invalid, got {err:?}"
+    );
+}
+
+#[test]
+fn refactor_rejects_pattern_change_and_preserves_factors() {
+    let a1 = with_offdiag(&[(0, 1), (1, 2), (2, 3)]);
+    let a2 = with_offdiag(&[(1, 0), (2, 1), (3, 2)]);
+    let solver = Solver::new(SolverConfig::default());
+    let an = solver.analyze(&a1).unwrap();
+    let mut f = solver.factor(&a1, &an).unwrap();
+
+    let xt: Vec<f64> = (0..a1.n).map(|i| i as f64 - 2.0).collect();
+    let mut b = vec![0.0; a1.n];
+    a1.matvec(&xt, &mut b);
+    let x0 = solver.solve(&a1, &an, &f, &b).unwrap();
+    assert!(max_abs_diff(&x0, &xt) < 1e-10);
+
+    // refactor with a different-pattern matrix must fail cleanly...
+    let err = solver.refactor(&a2, &an, &mut f).unwrap_err();
+    assert!(
+        matches!(err, Error::Invalid(_)),
+        "expected Error::Invalid, got {err:?}"
+    );
+
+    // ...and must not have corrupted the stored factors
+    let x1 = solver.solve(&a1, &an, &f, &b).unwrap();
+    assert_eq!(x0, x1, "factors changed by a rejected refactor");
+}
+
+#[test]
+fn refactor_rejects_dimension_and_nnz_mismatch() {
+    let a1 = with_offdiag(&[(0, 1)]);
+    let solver = Solver::new(SolverConfig::default());
+    let an = solver.analyze(&a1).unwrap();
+    let mut f = solver.factor(&a1, &an).unwrap();
+    // extra nonzero: same n, different nnz
+    let more = with_offdiag(&[(0, 1), (3, 4)]);
+    assert!(solver.refactor(&more, &an, &mut f).is_err());
+    // different dimension entirely
+    let mut c = Coo::new(5);
+    for i in 0..5 {
+        c.push(i, i, 1.0);
+    }
+    assert!(solver.refactor(&c.to_csr(), &an, &mut f).is_err());
+}
+
+/// Two analyses of *same-pattern* matrices can carry different
+/// permutations (MC64 weighs values), so the engine's cached permuted
+/// matrix must be keyed per analysis — interleaving factors against two
+/// analyses on one solver must never reuse the other's permuted structure.
+#[test]
+fn interleaved_same_pattern_analyses_do_not_poison_the_cache() {
+    let build = |d00: f64, d01: f64, d10: f64, d11: f64| {
+        let mut c = Coo::new(3);
+        c.push(0, 0, d00);
+        c.push(0, 1, d01);
+        c.push(1, 0, d10);
+        c.push(1, 1, d11);
+        c.push(2, 2, 1.0);
+        c.to_csr()
+    };
+    // a1 drives MC64 to the anti-diagonal matching, a2 to the diagonal —
+    // identical pattern (and pattern hash), different row permutations
+    let a1 = build(1e-6, 2.0, 3.0, 1e-6);
+    let a2 = build(2.0, 1e-6, 1e-6, 3.0);
+    let solver = Solver::new(SolverConfig::default());
+    let an1 = solver.analyze(&a1).unwrap();
+    let an2 = solver.analyze(&a2).unwrap();
+    let xt = [1.0, -2.0, 3.0];
+    let check = |a: &Csr, an: &hylu::coordinator::Analysis| {
+        let f = solver.factor(a, an).unwrap();
+        let mut b = vec![0.0; 3];
+        a.matvec(&xt, &mut b);
+        let x = solver.solve(a, an, &f, &b).unwrap();
+        assert!(
+            max_abs_diff(&x, &xt) < 1e-8,
+            "stale permuted-matrix cache: err {}",
+            max_abs_diff(&x, &xt)
+        );
+    };
+    // interleave so each factor call sees the other analysis' cache entry
+    check(&a1, &an1);
+    check(&a2, &an2);
+    check(&a1, &an1);
+}
+
+#[test]
+fn refactor_accepts_same_pattern_new_values() {
+    let a1 = with_offdiag(&[(0, 1), (1, 2), (2, 3)]);
+    let solver = Solver::new(SolverConfig::default());
+    let an = solver.analyze(&a1).unwrap();
+    let mut f = solver.factor(&a1, &an).unwrap();
+    let mut a2 = a1.clone();
+    for v in &mut a2.vals {
+        *v *= 1.5;
+    }
+    solver.refactor(&a2, &an, &mut f).unwrap();
+    let xt: Vec<f64> = (0..a2.n).map(|i| (i % 3) as f64 + 1.0).collect();
+    let mut b = vec![0.0; a2.n];
+    a2.matvec(&xt, &mut b);
+    let x = solver.solve(&a2, &an, &f, &b).unwrap();
+    assert!(max_abs_diff(&x, &xt) < 1e-9);
+}
