@@ -1,0 +1,112 @@
+//! Serving throughput: solves/sec vs. concurrent caller count.
+//!
+//! One shard, C caller threads each submitting single right-hand sides.
+//! The coalescing [`SolverService`] front door is compared against the
+//! serialized baseline the service replaced: one `Solver` behind one
+//! mutex, exactly one in-flight solve. The service wins by (a) checking
+//! per-call scratch out of a pool so callers overlap, and (b) draining
+//! the queue into one batched `solve_many` block dispatch per tick.
+//!
+//! ```bash
+//! cargo bench --bench throughput
+//! ```
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use hylu::bench_harness::{environment, Table};
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::service::{ServiceConfig, SolverService};
+use hylu::sparse::gen;
+
+/// Run `requests` invocations of `op` spread over `callers` threads;
+/// returns elapsed seconds.
+fn drive(callers: usize, requests: usize, op: impl Fn() + Sync) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|sc| {
+        for w in 0..callers {
+            let op = &op;
+            sc.spawn(move || {
+                let per = requests / callers + usize::from(w < requests % callers);
+                for _ in 0..per {
+                    op();
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let a = gen::grid2d(56, 56); // n = 3136
+    let b = gen::rhs_for_ones(&a);
+    let requests = 256usize;
+    let cfg = SolverConfig {
+        threads: 1,
+        repeated: true,
+        ..SolverConfig::default()
+    };
+
+    println!("{}", environment());
+    println!(
+        "matrix: grid2d n={} nnz={}, {} requests per configuration\n",
+        a.n,
+        a.nnz(),
+        requests
+    );
+    let mut table = Table::new(
+        "serving throughput, 1 shard: coalescing service vs serialized mutex front door",
+        &[
+            "callers",
+            "service sol/s",
+            "baseline sol/s",
+            "speedup",
+            "mean batch",
+            "max batch",
+        ],
+    );
+
+    for &callers in &[1usize, 2, 4, 8] {
+        let service = SolverService::new(
+            ServiceConfig {
+                shards: 1,
+                solver: cfg.clone(),
+                max_batch: 64,
+                tick: Duration::from_micros(200),
+                ..ServiceConfig::default()
+            },
+            vec![a.clone()],
+        )
+        .expect("service");
+        let t_service = drive(callers, requests, || {
+            let x = service.solve(0, b.clone()).expect("service solve");
+            assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-6));
+        });
+        let st = service.stats();
+        drop(service);
+        let service_rate = requests as f64 / t_service;
+
+        let solver = Solver::try_new(cfg.clone()).expect("solver");
+        let an = solver.analyze(&a).expect("analyze");
+        let f = solver.factor(&a, &an).expect("factor");
+        let lock = Mutex::new(());
+        let t_base = drive(callers, requests, || {
+            let _g = lock.lock().unwrap();
+            solver.solve(&a, &an, &f, &b).expect("baseline solve");
+        });
+        let base_rate = requests as f64 / t_base;
+
+        table.row(
+            vec![
+                callers.to_string(),
+                format!("{service_rate:.0}"),
+                format!("{base_rate:.0}"),
+                format!("{:.2}x", service_rate / base_rate),
+                format!("{:.2}", st.mean_batch()),
+                st.max_batch.to_string(),
+            ],
+            service_rate / base_rate,
+        );
+    }
+    table.print();
+}

@@ -6,10 +6,16 @@
 //! hylu inspect --matrix FILE.mtx | --gen CLASS:N
 //! hylu gen    --gen CLASS:N --out FILE.mtx
 //! hylu bench  [--suite small|full] [--threads T]
+//! hylu serve  --matrix FILE.mtx | --gen CLASS:N [--systems M] [--shards S]
+//!             [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]
 //! ```
 //!
 //! `--rhs K` batches K right-hand sides through the engine's multi-RHS
 //! path ([`Solver::solve_many`]) — the traffic-serving scenario.
+//! `serve` runs the full front door: a sharded
+//! [`SolverService`](crate::service::SolverService) under C concurrent
+//! callers, reporting solves/sec and coalescing statistics against the
+//! serialized single-front-door baseline.
 
 use std::path::Path;
 
@@ -18,6 +24,7 @@ use crate::bench_harness::{environment, fmt_time, Table};
 use crate::bench_suite;
 use crate::coordinator::{Solver, SolverConfig};
 use crate::numeric::select::KernelMode;
+use crate::service::{ServiceConfig, SolverService};
 use crate::sparse::csr::Csr;
 use crate::sparse::{gen, io};
 use crate::{Error, Result};
@@ -141,11 +148,13 @@ pub fn run(argv: &[String]) -> i32 {
         Some("inspect") => cmd_inspect(&args),
         Some("gen") => cmd_gen(&args),
         Some("bench") => cmd_bench(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: hylu <solve|inspect|gen|bench> [--matrix F | --gen CLASS:N] \
+                "usage: hylu <solve|inspect|gen|bench|serve> [--matrix F | --gen CLASS:N] \
                  [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
-                 [--rhs K] [--suite small|full] [--out F]"
+                 [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
+                 [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]"
             );
             return 2;
         }
@@ -300,6 +309,168 @@ fn run_once(s: &Solver, a: &Csr, b: &[f64]) -> Result<f64> {
     Ok(t.elapsed().as_secs_f64())
 }
 
+fn flag_usize(args: &Args, key: &str, default: usize) -> Result<usize> {
+    match args.get(key) {
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::Invalid(format!("bad --{key}"))),
+        None => Ok(default),
+    }
+}
+
+/// Drive `requests` solves from `callers` concurrent threads, round-robin
+/// over `nsys` systems with known all-ones solutions; returns the worst
+/// `|x − 1|` observed.
+fn drive_callers<F>(callers: usize, requests: usize, nsys: usize, solve: F) -> Result<f64>
+where
+    F: Fn(usize) -> Result<Vec<f64>> + Sync,
+{
+    let worst = std::sync::Mutex::new(0.0f64);
+    let failed: std::sync::Mutex<Option<Error>> = std::sync::Mutex::new(None);
+    std::thread::scope(|sc| {
+        for w in 0..callers {
+            let (solve, worst, failed) = (&solve, &worst, &failed);
+            sc.spawn(move || {
+                let per = requests / callers + usize::from(w < requests % callers);
+                let mut local = 0.0f64;
+                for r in 0..per {
+                    let sys = (w + r) % nsys;
+                    match solve(sys) {
+                        Ok(x) => {
+                            for v in &x {
+                                local = local.max((v - 1.0).abs());
+                            }
+                        }
+                        Err(e) => {
+                            *failed.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    }
+                }
+                let mut g = worst.lock().unwrap();
+                if local > *g {
+                    *g = local;
+                }
+            });
+        }
+    });
+    if let Some(e) = failed.lock().unwrap().take() {
+        return Err(e);
+    }
+    Ok(worst.into_inner().unwrap())
+}
+
+/// Serving-throughput mode: C concurrent callers hammer a sharded
+/// [`SolverService`], then the same workload runs through the serialized
+/// single-front-door baseline (one solver behind one mutex) for
+/// comparison.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (name, a) = load_matrix(args)?;
+    let mut cfg = config_from(args)?;
+    if args.get("threads").is_none() {
+        // per-shard pool width: default to 1 so shards + callers provide
+        // the parallelism instead of oversubscribing cores
+        cfg.threads = 1;
+    }
+    cfg.repeated = true;
+    let nsys = flag_usize(args, "systems", 1)?.max(1);
+    let shards = flag_usize(args, "shards", 1)?.max(1);
+    let callers = flag_usize(args, "rhs-workers", 4)?.max(1);
+    let requests = flag_usize(args, "requests", 256)?.max(1);
+    let max_batch = flag_usize(args, "max-batch", 32)?.max(1);
+    let tick_us = flag_usize(args, "tick-us", 200)? as u64;
+
+    // parameter sweep: same pattern, scaled values per system; each
+    // system's RHS is built so its exact solution is all-ones
+    let systems: Vec<Csr> = (0..nsys)
+        .map(|s| {
+            let mut m = a.clone();
+            let f = 1.0 + 0.1 * s as f64;
+            for v in &mut m.vals {
+                *v *= f;
+            }
+            m
+        })
+        .collect();
+    let bs: Vec<Vec<f64>> = systems.iter().map(gen::rhs_for_ones).collect();
+
+    let service = SolverService::new(
+        ServiceConfig {
+            shards,
+            solver: cfg.clone(),
+            max_batch,
+            queue_cap: 4096,
+            tick: std::time::Duration::from_micros(tick_us),
+        },
+        systems.clone(),
+    )?;
+    println!(
+        "serve        : {name} (n={}, nnz={}), {} systems over {} shards, \
+         {} callers x {} requests",
+        a.n,
+        a.nnz(),
+        service.system_count(),
+        service.shard_count(),
+        callers,
+        requests
+    );
+    let t0 = std::time::Instant::now();
+    let worst = drive_callers(callers, requests, nsys, |sys| {
+        service.solve(sys, bs[sys].clone())
+    })?;
+    let t_service = t0.elapsed().as_secs_f64();
+    let st = service.stats();
+    drop(service);
+
+    // serialized baseline: the pre-service front door (one solver, one
+    // mutex, one in-flight solve)
+    let base = Solver::try_new(cfg)?;
+    let mut states = Vec::with_capacity(nsys);
+    for m in &systems {
+        let an = base.analyze(m)?;
+        let f = base.factor(m, &an)?;
+        states.push((an, f));
+    }
+    let lock = std::sync::Mutex::new(());
+    let t1 = std::time::Instant::now();
+    let worst_base = drive_callers(callers, requests, nsys, |sys| {
+        let _g = lock.lock().unwrap();
+        let (an, f) = &states[sys];
+        base.solve(&systems[sys], an, f, &bs[sys])
+    })?;
+    let t_base = t1.elapsed().as_secs_f64();
+
+    println!(
+        "service      : {} total, {:.0} solves/s (worst |x-1| {:.2e})",
+        fmt_time(t_service),
+        requests as f64 / t_service.max(1e-12),
+        worst
+    );
+    println!(
+        "coalescing   : {} dispatches for {} requests (mean batch {:.2}, max {})",
+        st.dispatches,
+        st.requests,
+        st.mean_batch(),
+        st.max_batch
+    );
+    println!(
+        "baseline     : {} total, {:.0} solves/s (worst |x-1| {:.2e})",
+        fmt_time(t_base),
+        requests as f64 / t_base.max(1e-12),
+        worst_base
+    );
+    println!(
+        "speedup      : {:.2}x vs serialized single front door",
+        t_base / t_service.max(1e-12)
+    );
+    if worst > 1e-6 || worst_base > 1e-6 {
+        return Err(Error::Invalid(format!(
+            "served solutions drifted: service {worst:.3e}, baseline {worst_base:.3e}"
+        )));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,5 +529,31 @@ mod tests {
     #[test]
     fn unknown_command_usage() {
         assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn serve_command_end_to_end() {
+        let code = run(&sv(&[
+            "serve",
+            "--gen",
+            "mesh2d:400",
+            "--systems",
+            "2",
+            "--shards",
+            "2",
+            "--rhs-workers",
+            "3",
+            "--requests",
+            "24",
+            "--threads",
+            "1",
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn serve_rejects_bad_flags() {
+        let code = run(&sv(&["serve", "--gen", "mesh2d:100", "--requests", "many"]));
+        assert_eq!(code, 1);
     }
 }

@@ -26,8 +26,18 @@ pub struct SolverConfig {
     pub threads: usize,
     /// Iterations a parked pool worker spins before sleeping on its
     /// condvar — keeps back-to-back repeated solves off the futex wakeup
-    /// path. 0 parks immediately.
+    /// path. 0 parks immediately. This is the *maximum* budget: each
+    /// worker adapts it downward (halving per condvar park, floored at
+    /// `spin/16` so hot traffic can still be detected and the full
+    /// budget restored) when dispatch inter-arrival time outgrows the
+    /// spin window — an idle engine parks near-immediately instead of
+    /// burning cores.
     pub worker_spin: u32,
+    /// Solve-scratch checkout slots: the number of `solve`/`solve_many`
+    /// calls that can be in flight concurrently on this solver before
+    /// callers queue (each slot is an independent O(n) arena set).
+    /// 0 = auto (`max(4, threads)`); clamped to 1..=64.
+    pub scratch_slots: usize,
     /// Pivoting / perturbation.
     pub pivot: PivotConfig,
     /// MC64 static pivoting + scaling (disable only for pre-scaled
@@ -69,6 +79,7 @@ impl Default for SolverConfig {
             merge_policy: None,
             threads: 0,
             worker_spin: crate::exec::DEFAULT_SPIN,
+            scratch_slots: 0,
             pivot: PivotConfig::default(),
             static_pivoting: true,
             repeated: false,

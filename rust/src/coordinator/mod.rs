@@ -16,7 +16,7 @@ pub use stats::{FactorStats, SolveStats, SymbolicStats};
 
 use std::time::Instant;
 
-use crate::exec::{self, Engine, ExecPlan, PoolCounters, SolveScratch};
+use crate::exec::{self, Engine, ExecPlan, FactorScratch, PoolCounters, SolveScratch};
 use crate::numeric::factor::{GemmBackend, NativeGemm};
 use crate::numeric::parallel::factor_parallel_pooled;
 use crate::numeric::select::{select_kernel, selection_stats, KernelMode};
@@ -151,12 +151,17 @@ pub struct Factorization {
 /// [`SolverConfig::threads`]; mutating `cfg.threads` afterwards has no
 /// effect.
 ///
-/// Concurrency note: `factor`/`refactor`/`solve*` calls on one `Solver`
-/// serialize on the engine's scratch arenas (that sharing is what makes
-/// the warm path allocation-free). Concurrent callers wanting parallel
-/// *solves* should batch them into one [`Solver::solve_many`] call — the
-/// engine parallelizes across the RHS block internally — or use one
-/// `Solver` per thread (see the ROADMAP's async solve queue item).
+/// Concurrency note: a `&Solver` can be shared across threads and
+/// `solve*` called concurrently — each call checks a private
+/// [`SolveScratch`] arena out of the engine's pool (up to
+/// [`SolverConfig::scratch_slots`] in flight; further callers queue), so
+/// substitution and refinement overlap instead of serializing on one
+/// mutex. Only pool *dispatches* (the parallel-substitution inner steps)
+/// serialize. `factor`/`refactor` remain exclusive per call via the
+/// engine's factor-side arenas. For the highest throughput under many
+/// concurrent single-RHS callers, put a [`crate::service::SolverService`]
+/// in front: it coalesces requests into batched [`Solver::solve_many`]
+/// dispatches.
 pub struct Solver {
     /// Active configuration.
     pub cfg: SolverConfig,
@@ -172,8 +177,9 @@ impl Solver {
         Self::try_new(cfg).expect("solver construction failed")
     }
 
-    /// Fallible constructor. Spawns the worker pool (once — the same
-    /// threads serve every subsequent `factor`/`refactor`/`solve`).
+    /// Fallible constructor. Creates the engine; worker threads spawn
+    /// lazily on the first numeric dispatch, so analyze-only use never
+    /// spawns any.
     pub fn try_new(cfg: SolverConfig) -> Result<Self> {
         let gemm: Box<dyn GemmBackend + Sync + Send> = if cfg.use_xla {
             Box::new(crate::runtime::XlaGemm::load(
@@ -183,7 +189,13 @@ impl Solver {
         } else {
             Box::new(NativeGemm)
         };
-        let engine = Engine::new(effective_threads(cfg.threads), cfg.worker_spin);
+        let threads = effective_threads(cfg.threads);
+        let slots = if cfg.scratch_slots == 0 {
+            threads.max(4)
+        } else {
+            cfg.scratch_slots
+        };
+        let engine = Engine::new(threads, cfg.worker_spin, slots);
         Ok(Solver { cfg, gemm, engine })
     }
 
@@ -309,7 +321,7 @@ impl Solver {
     /// on the persistent pool.
     pub fn factor(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
         let t0 = Instant::now();
-        let mut scratch = self.engine.scratch();
+        let mut scratch = self.engine.factor_scratch();
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
         self.ensure_done_flags(&mut scratch, an);
         let pa = &scratch.pa[0].1;
@@ -346,7 +358,7 @@ impl Solver {
     /// spawns no threads and performs no O(n) scratch allocation.
     pub fn refactor(&self, a: &Csr, an: &Analysis, f: &mut Factorization) -> Result<()> {
         let t0 = Instant::now();
-        let mut scratch = self.engine.scratch();
+        let mut scratch = self.engine.factor_scratch();
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
         self.ensure_done_flags(&mut scratch, an);
         let pa = &scratch.pa[0].1;
@@ -428,7 +440,8 @@ impl Solver {
     /// one dense block with a single pool dispatch. Column `q` of the
     /// result is bit-identical to `solve(a, an, f, &bs[q])` — the block
     /// kernels perform the same operations in the same order per column,
-    /// and refinement reuses the scalar path per RHS.
+    /// and batched refinement makes the same per-column accept/stop
+    /// decisions on the same floating-point values as the scalar path.
     pub fn solve_many(
         &self,
         a: &Csr,
@@ -521,15 +534,10 @@ impl Solver {
                 x[orig] = s * yk[row + q];
             }
         }
-        // per-RHS refinement through the scalar path (identical to what k
-        // independent solve calls would do)
-        let mut worst = 0.0f64;
-        let mut total_iters = 0usize;
-        for (q, x) in xs.iter_mut().enumerate() {
-            let (residual, iters) = self.refine_in_place(a, an, f, &bs[q], x, scratch);
-            worst = worst.max(residual);
-            total_iters += iters;
-        }
+        // batched refinement: residual matvec + correction substitution
+        // run as a block over the active lanes, with per-column
+        // accept/stop decisions identical to the scalar path
+        let (worst, total_iters) = self.refine_many_in_place(a, an, f, bs, xs, scratch);
         Ok(SolveStats {
             t_solve: t0.elapsed().as_secs_f64(),
             residual: worst,
@@ -541,7 +549,7 @@ impl Solver {
 
     /// Grow the engine's pipeline done-flag arena to this analysis' node
     /// count (high-water sizing; a growth event only during warm-up).
-    fn ensure_done_flags(&self, scratch: &mut SolveScratch, an: &Analysis) {
+    fn ensure_done_flags(&self, scratch: &mut FactorScratch, an: &Analysis) {
         if scratch.done.len() < an.sym.nodes.len() {
             scratch.done = DoneFlags::new(an.sym.nodes.len());
             self.engine.counters().note_alloc();
@@ -629,6 +637,137 @@ impl Solver {
             }
         }
         (residual, iters)
+    }
+
+    /// Batched iterative refinement over `k` solutions: the residual
+    /// matvec and the correction substitution sweep all still-active
+    /// columns as one dense block (one pool dispatch per round) instead
+    /// of `k` scalar passes. Per column this performs exactly the
+    /// operations of [`Solver::refine_in_place`] on exactly the same
+    /// values — the block substitution kernels are column-for-column
+    /// identical to the scalar ones — so accept/stop decisions and
+    /// results are bit-identical to `k` independent scalar refinements.
+    /// Returns `(worst residual, total iterations)`.
+    fn refine_many_in_place(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        bs: &[Vec<f64>],
+        xs: &mut [Vec<f64>],
+        scratch: &mut SolveScratch,
+    ) -> (f64, usize) {
+        let n = a.n;
+        let k = bs.len();
+        let counters = self.engine.counters();
+        let SolveScratch { yk, rk, x2k, .. } = scratch;
+        exec::ensure_len(rk, n * k, counters);
+        let rk = &mut rk[..n * k];
+        // initial residual block: rk[i,q] = (A·x_q)[i]; per column this is
+        // Csr::matvec's accumulation order exactly
+        for i in 0..n {
+            let idx = a.row_indices(i);
+            let vals = a.row_vals(i);
+            let row = i * k;
+            for (q, x) in xs.iter().enumerate() {
+                let mut s = 0.0;
+                for (p, &j) in idx.iter().enumerate() {
+                    s += vals[p] * x[j];
+                }
+                rk[row + q] = s;
+            }
+        }
+        // ‖Ax − b‖₁ / ‖b‖₁ per column (same summation order as
+        // Csr::relative_residual_into)
+        let mut res = vec![0.0f64; k];
+        for (q, b) in bs.iter().enumerate() {
+            let mut num = 0.0;
+            for (i, bi) in b.iter().enumerate() {
+                num += (rk[i * k + q] - bi).abs();
+            }
+            let den: f64 = b.iter().map(|v| v.abs()).sum();
+            res[q] = num / den.max(1e-300);
+        }
+        let max_iter = self.cfg.refine_max_iter;
+        let mut iters = vec![0usize; k];
+        // columns entering refinement: same gate as the scalar path's
+        // outer `if` plus its first `while` check
+        let mut active: Vec<usize> = (0..k)
+            .filter(|&q| {
+                (f.fac.perturbed > 0 || res[q] > self.cfg.refine_tol)
+                    && max_iter > 0
+                    && res[q] > self.cfg.refine_target
+            })
+            .collect();
+        while !active.is_empty() {
+            let ka = active.len();
+            // correction RHS, packed and scaled directly into the block:
+            // scalar path computes r = b − A·x then y[i] = dr·r[orig]
+            for i in 0..n {
+                let pre = f.fac.pivot_perm[i] as usize;
+                let orig = an.row_perm.map[pre];
+                let s = an.dr[orig];
+                let row = i * ka;
+                for (p, &q) in active.iter().enumerate() {
+                    yk[row + p] = s * (bs[q][orig] - rk[orig * k + q]);
+                }
+            }
+            let ykb = &mut yk[..n * ka];
+            let pool = self.engine.pool();
+            if pool.nthreads() > 1 && n > self.cfg.parallel_solve_min_n {
+                solve_block_parallel_pooled(&an.sym, &f.fac, ykb, ka, pool, &an.plan);
+            } else {
+                forward_block(&an.sym, &f.fac, ykb, ka);
+                backward_block(&an.sym, &f.fac, ykb, ka);
+            }
+            exec::ensure_len(x2k, n * k, counters);
+            // candidate block: x2_q = x_q + dc·y (scalar: d[orig] = dc·y[j],
+            // then x2 = x + d)
+            for j in 0..n {
+                let orig = an.col_perm.map[j];
+                let s = an.dc[orig];
+                let row = j * ka;
+                for (p, &q) in active.iter().enumerate() {
+                    x2k[orig * k + q] = xs[q][orig] + s * ykb[row + p];
+                }
+            }
+            // candidate residual block over the active lanes
+            for i in 0..n {
+                let idx = a.row_indices(i);
+                let vals = a.row_vals(i);
+                let row = i * k;
+                for &q in active.iter() {
+                    let mut s = 0.0;
+                    for (p, &j) in idx.iter().enumerate() {
+                        s += vals[p] * x2k[j * k + q];
+                    }
+                    rk[row + q] = s;
+                }
+            }
+            // per-column accept/stop, exactly the scalar loop's logic
+            active.retain(|&q| {
+                let b = &bs[q];
+                let mut num = 0.0;
+                for (i, bi) in b.iter().enumerate() {
+                    num += (rk[i * k + q] - bi).abs();
+                }
+                let den: f64 = b.iter().map(|v| v.abs()).sum();
+                let res2 = num / den.max(1e-300);
+                iters[q] += 1;
+                if res2 < res[q] {
+                    res[q] = res2;
+                    let x = &mut xs[q];
+                    for (i, xi) in x.iter_mut().enumerate() {
+                        *xi = x2k[i * k + q];
+                    }
+                    iters[q] < max_iter && res[q] > self.cfg.refine_target
+                } else {
+                    false
+                }
+            });
+        }
+        let worst = res.iter().fold(0.0f64, |m, &v| m.max(v));
+        (worst, iters.iter().sum())
     }
 }
 

@@ -15,22 +15,28 @@
 //!   (flop-balanced bulk-level chunks, substitution chunks, kernel
 //!   scratch high-water bounds) computed once in `Solver::analyze`
 //!   instead of on every numeric call.
-//! - [`Engine`] — the pool plus a [`SolveScratch`] arena for the
-//!   coordinator's permuted-RHS / refinement buffers, the pipeline
-//!   done-flag arena, and the cached permuted-matrix value buffers used
-//!   by `refactor`.
+//! - [`Engine`] — the pool plus the coordinator-side scratch: a
+//!   [`ScratchPool`] of [`SolveScratch`] arenas (per-call checkout, so
+//!   concurrent `solve*` callers overlap instead of serializing on one
+//!   mutex) and a [`FactorScratch`] (pipeline done-flags + the cached
+//!   permuted-matrix value buffers used by `refactor`), which stays
+//!   behind a mutex because (re)factorization is exclusive by nature.
 //!
-//! After one warm-up `factor` + `solve`, a `refactor` + `solve` cycle
-//! dispatches jobs onto already-running threads and performs **zero**
-//! O(n) scratch allocations; [`PoolCounters`] makes both properties
-//! observable (and assertable in tests).
+//! Worker threads spawn **lazily** on the first dispatch, so analyze-only
+//! uses (`hylu inspect`, the fig4 bench) never spawn at all. After one
+//! warm-up `factor` + `solve`, a `refactor` + `solve` cycle dispatches
+//! jobs onto already-running threads and performs **zero** O(n) scratch
+//! allocations; [`PoolCounters`] makes both properties observable (and
+//! assertable in tests).
 
 pub mod plan;
+pub mod scratch;
 
 pub use plan::ExecPlan;
+pub use scratch::{ScratchGuard, ScratchPool, MAX_SCRATCH_SLOTS};
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
@@ -39,12 +45,12 @@ use std::thread::JoinHandle;
 /// guarded structure is left in a consistent state on that path (workspaces
 /// are scrubbed, scratch arenas are plain buffers), so a poisoned mutex
 /// must not brick the engine.
-fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Unwrap a condvar-wait result the same way.
-fn wait_ignore_poison<T>(r: LockResult<MutexGuard<'_, T>>) -> MutexGuard<'_, T> {
+pub(crate) fn wait_ignore_poison<T>(r: LockResult<MutexGuard<'_, T>>) -> MutexGuard<'_, T> {
     r.unwrap_or_else(PoisonError::into_inner)
 }
 
@@ -62,6 +68,10 @@ pub struct PoolCounters {
     pub scratch_allocs: AtomicU64,
     /// Jobs dispatched onto the pool.
     pub dispatches: AtomicU64,
+    /// Times a worker's adaptive spin budget was halved after it had to
+    /// park on the condvar (dispatch inter-arrival grew past the spin
+    /// window). Lets tests observe the decay directly.
+    pub spin_decays: AtomicU64,
 }
 
 impl PoolCounters {
@@ -148,18 +158,23 @@ struct Shared {
 /// A persistent pool of parked worker threads with epoch-based job
 /// dispatch.
 ///
-/// `WorkerPool::new(t)` spawns `t - 1` OS threads once; the dispatching
-/// thread itself acts as worker 0, so a pool of size 1 never spawns and
-/// runs jobs inline. [`WorkerPool::run`] publishes one job (a `Fn(worker,
-/// &mut WorkerCtx)` executed by every worker exactly once) and blocks
-/// until all workers finish — which is what makes handing out borrows of
-/// the caller's stack to the workers sound. Dispatches are serialized by
-/// an internal lock, so a `&WorkerPool` can be shared freely.
+/// A pool of width `t` owns `t - 1` OS threads, spawned **lazily on the
+/// first dispatch** — a pool that never dispatches (analyze-only paths)
+/// never spawns; the dispatching thread itself acts as worker 0, so a
+/// pool of size 1 never spawns at all and runs jobs inline.
+/// [`WorkerPool::run`] publishes one job (a `Fn(worker, &mut WorkerCtx)`
+/// executed by every worker exactly once) and blocks until all workers
+/// finish — which is what makes handing out borrows of the caller's
+/// stack to the workers sound. Dispatches are serialized by an internal
+/// lock, so a `&WorkerPool` can be shared freely.
 pub struct WorkerPool {
     shared: Arc<Shared>,
     /// Worker 0 (caller) context; doubles as the dispatch lock.
     caller_ctx: Mutex<WorkerCtx>,
-    handles: Vec<JoinHandle<()>>,
+    /// Spawned worker handles (empty until the first dispatch).
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Whether the `nthreads - 1` workers have been spawned yet.
+    spawned: AtomicBool,
     nthreads: usize,
     counters: Arc<PoolCounters>,
 }
@@ -178,6 +193,7 @@ impl WorkerPool {
 
     /// Pool wired to externally owned counters (the [`Engine`] shares one
     /// counter block between the pool and the coordinator scratch).
+    /// Worker threads are not spawned here — see [`WorkerPool`].
     pub fn with_counters(nthreads: usize, spin: u32, counters: Arc<PoolCounters>) -> Self {
         let nthreads = nthreads.max(1);
         let shared = Arc::new(Shared {
@@ -193,24 +209,39 @@ impl WorkerPool {
             epoch_hint: AtomicU64::new(0),
             spin,
         });
-        let mut handles = Vec::with_capacity(nthreads.saturating_sub(1));
-        for id in 1..nthreads {
-            let sh = shared.clone();
-            let ct = counters.clone();
-            counters.threads_spawned.fetch_add(1, Ordering::Relaxed);
+        WorkerPool {
+            shared,
+            caller_ctx: Mutex::new(WorkerCtx::new(0, counters.clone())),
+            handles: Mutex::new(Vec::new()),
+            spawned: AtomicBool::new(false),
+            nthreads,
+            counters,
+        }
+    }
+
+    /// Spawn the `nthreads - 1` workers if they are not running yet.
+    /// Called with the dispatch lock held, so at most one dispatcher
+    /// races the check; the `handles` lock additionally orders it
+    /// against `Drop`.
+    fn ensure_spawned(&self) {
+        if self.nthreads <= 1 || self.spawned.load(Ordering::Acquire) {
+            return;
+        }
+        let mut handles = lock_ignore_poison(&self.handles);
+        if !handles.is_empty() {
+            return;
+        }
+        for id in 1..self.nthreads {
+            let sh = self.shared.clone();
+            let ct = self.counters.clone();
+            self.counters.threads_spawned.fetch_add(1, Ordering::Relaxed);
             let h = std::thread::Builder::new()
                 .name(format!("hylu-worker-{id}"))
                 .spawn(move || worker_loop(sh, id, ct))
                 .expect("spawn pool worker");
             handles.push(h);
         }
-        WorkerPool {
-            shared,
-            caller_ctx: Mutex::new(WorkerCtx::new(0, counters.clone())),
-            handles,
-            nthreads,
-            counters,
-        }
+        self.spawned.store(true, Ordering::Release);
     }
 
     /// Total workers (caller included).
@@ -258,6 +289,7 @@ impl WorkerPool {
             }
             return;
         }
+        self.ensure_spawned();
         let job_ref: &(dyn Fn(usize, &mut WorkerCtx) + Sync) = &job;
         // Safety: lifetime erasure only — see `JobPtr`.
         let ptr = JobPtr(unsafe {
@@ -302,7 +334,7 @@ impl Drop for WorkerPool {
             self.shared.epoch_hint.store(u64::MAX, Ordering::Release);
             self.shared.cv_work.notify_all();
         }
-        for h in self.handles.drain(..) {
+        for h in lock_ignore_poison(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -311,13 +343,26 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: Arc<Shared>, id: usize, counters: Arc<PoolCounters>) {
     let mut ctx = WorkerCtx::new(id, counters);
     let mut seen = 0u64;
+    // Adaptive pre-park spin: start at the configured budget; halve it
+    // every time the next job arrives only after parking on the condvar
+    // (dispatch inter-arrival outgrew the spin window), restore it the
+    // moment a job lands without a park. An idle engine therefore decays
+    // toward a tiny floor and parks almost immediately instead of
+    // burning a core, while a hot repeated-solve loop keeps the full
+    // spin. The floor (spin/16) keeps a small detection window alive so
+    // traffic turning hot again can still land inside the spin phase and
+    // restore the full budget — decaying all the way to 0 would be a
+    // one-way ratchet (with no spin window, every arrival looks parked).
+    let floor = shared.spin / 16;
+    let mut budget = shared.spin;
     loop {
         // spin phase: cheap wakeup for back-to-back dispatches
         let mut spins = 0u32;
-        while spins < shared.spin && shared.epoch_hint.load(Ordering::Acquire) == seen {
+        while spins < budget && shared.epoch_hint.load(Ordering::Acquire) == seen {
             std::hint::spin_loop();
             spins += 1;
         }
+        let mut parked = false;
         let job = {
             let mut st = lock_ignore_poison(&shared.state);
             loop {
@@ -328,9 +373,19 @@ fn worker_loop(shared: Arc<Shared>, id: usize, counters: Arc<PoolCounters>) {
                     seen = st.epoch;
                     break st.job.expect("job published with epoch");
                 }
+                parked = true;
                 st = wait_ignore_poison(shared.cv_work.wait(st));
             }
         };
+        if parked {
+            let next = (budget / 2).max(floor);
+            if next < budget {
+                ctx.counters.spin_decays.fetch_add(1, Ordering::Relaxed);
+            }
+            budget = next;
+        } else {
+            budget = shared.spin;
+        }
         // Safety: the dispatcher pins the job until `remaining` drops to 0.
         let r = catch_unwind(AssertUnwindSafe(|| {
             let f = unsafe { &*job.0 };
@@ -350,9 +405,10 @@ fn worker_loop(shared: Arc<Shared>, id: usize, counters: Arc<PoolCounters>) {
     }
 }
 
-/// Reusable coordinator-side arenas: permuted RHS, refinement buffers, the
-/// multi-RHS block, and the cached permuted-value matrix for `refactor`.
-/// All grown during warm-up, reused verbatim afterwards.
+/// Reusable per-call solve arenas: permuted RHS, refinement buffers and
+/// the multi-RHS blocks. One instance per concurrent in-flight `solve*`
+/// call, checked out of the engine's [`ScratchPool`]; each grows to its
+/// own high-water mark during warm-up and is reused verbatim afterwards.
 #[derive(Default)]
 pub struct SolveScratch {
     /// Permuted/scaled RHS in factor-row space (single RHS).
@@ -365,6 +421,17 @@ pub struct SolveScratch {
     pub x2: Vec<f64>,
     /// Dense n×k block for [`crate::coordinator::Solver::solve_many`].
     pub yk: Vec<f64>,
+    /// Dense n×k residual block (`A·X`) for batched refinement.
+    pub rk: Vec<f64>,
+    /// Dense n×k refinement-candidate block.
+    pub x2k: Vec<f64>,
+}
+
+/// Factor-side mutable engine state, exclusive for the duration of a
+/// `factor`/`refactor` call (numeric factorization is exclusive by
+/// nature: it rewrites the shared `LuFactors`).
+#[derive(Default)]
+pub struct FactorScratch {
     /// Cached permuted matrices, MRU-first, keyed by the owning analysis'
     /// unique id: `refactor` rewrites only the values in place instead of
     /// cloning O(nnz) per call (the coordinator caps the length).
@@ -377,20 +444,25 @@ pub struct SolveScratch {
 
 /// The persistent execution engine owned by a
 /// [`crate::coordinator::Solver`]: one worker pool plus the coordinator
-/// scratch arenas, sharing one counter block.
+/// scratch (a checkout pool of solve arenas and the factor-side arenas),
+/// sharing one counter block.
 pub struct Engine {
     pool: WorkerPool,
-    scratch: Mutex<SolveScratch>,
+    scratch: ScratchPool,
+    factor_scratch: Mutex<FactorScratch>,
     counters: Arc<PoolCounters>,
 }
 
 impl Engine {
-    /// Engine with `nthreads` workers and the given pre-park spin.
-    pub fn new(nthreads: usize, spin: u32) -> Self {
+    /// Engine with `nthreads` workers, the given pre-park spin, and a
+    /// solve-scratch checkout pool of `scratch_slots` instances
+    /// (clamped to `1..=`[`MAX_SCRATCH_SLOTS`]).
+    pub fn new(nthreads: usize, spin: u32, scratch_slots: usize) -> Self {
         let counters = Arc::new(PoolCounters::default());
         Engine {
             pool: WorkerPool::with_counters(nthreads, spin, counters.clone()),
-            scratch: Mutex::new(SolveScratch::default()),
+            scratch: ScratchPool::new(scratch_slots),
+            factor_scratch: Mutex::new(FactorScratch::default()),
             counters,
         }
     }
@@ -400,10 +472,24 @@ impl Engine {
         &self.pool
     }
 
-    /// Lock the coordinator scratch arenas (poison-tolerant: a propagated
-    /// job panic leaves the arenas consistent, see [`lock_ignore_poison`]).
-    pub fn scratch(&self) -> MutexGuard<'_, SolveScratch> {
-        lock_ignore_poison(&self.scratch)
+    /// Check one solve-scratch arena out of the pool (blocks while all
+    /// slots are in flight; LIFO, so sequential callers always reuse the
+    /// same warm slot). The slot returns to the pool when the guard
+    /// drops.
+    pub fn scratch(&self) -> ScratchGuard<'_> {
+        self.scratch.checkout()
+    }
+
+    /// The scratch checkout pool (observability: capacity / in-use).
+    pub fn scratch_pool(&self) -> &ScratchPool {
+        &self.scratch
+    }
+
+    /// Lock the factor-side arenas (permuted-matrix MRU cache + pipeline
+    /// done-flags). Poison-tolerant: a propagated job panic leaves the
+    /// arenas consistent, see [`lock_ignore_poison`].
+    pub fn factor_scratch(&self) -> MutexGuard<'_, FactorScratch> {
+        lock_ignore_poison(&self.factor_scratch)
     }
 
     /// Shared counters.
@@ -411,7 +497,8 @@ impl Engine {
         &self.counters
     }
 
-    /// OS threads spawned since construction (== `nthreads - 1`, forever).
+    /// OS threads spawned so far (0 until the first dispatch, then
+    /// `nthreads - 1` forever).
     pub fn threads_spawned(&self) -> usize {
         self.counters.threads_spawned.load(Ordering::Relaxed)
     }
@@ -526,12 +613,57 @@ mod tests {
 
     #[test]
     fn engine_counters_are_shared() {
-        let eng = Engine::new(2, 0);
+        let eng = Engine::new(2, 0, 2);
+        assert_eq!(eng.threads_spawned(), 0, "no spawns before first dispatch");
+        eng.pool().run(|| {}, |_, _| {});
         assert_eq!(eng.threads_spawned(), 1);
         let before = eng.scratch_alloc_events();
         ensure_len(&mut eng.scratch().y, 128, eng.counters());
         assert_eq!(eng.scratch_alloc_events(), before + 1);
+        // LIFO checkout returns the same warm slot: no further growth
         ensure_len(&mut eng.scratch().y, 128, eng.counters());
         assert_eq!(eng.scratch_alloc_events(), before + 1);
+    }
+
+    #[test]
+    fn pool_spawns_lazily_on_first_dispatch() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.counters().threads_spawned.load(Ordering::Relaxed), 0);
+        pool.run(|| {}, |_, _| {});
+        assert_eq!(pool.counters().threads_spawned.load(Ordering::Relaxed), 3);
+        pool.run(|| {}, |_, _| {});
+        assert_eq!(
+            pool.counters().threads_spawned.load(Ordering::Relaxed),
+            3,
+            "spawn happens exactly once"
+        );
+    }
+
+    #[test]
+    fn worker_spin_decays_on_idle_gaps() {
+        let pool = WorkerPool::with_counters(2, 512, Arc::new(PoolCounters::default()));
+        pool.run(|| {}, |_, _| {});
+        // 512 spin iterations elapse in far less than 20ms: the worker
+        // parks, so the next dispatch arrives via the condvar and decays
+        // the budget.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.run(|| {}, |_, _| {});
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.run(|| {}, |_, _| {});
+        assert!(
+            pool.counters().spin_decays.load(Ordering::Relaxed) > 0,
+            "idle gaps must decay the spin budget"
+        );
+    }
+
+    #[test]
+    fn engine_scratch_checkout_overlaps() {
+        let eng = Engine::new(1, 0, 3);
+        let g1 = eng.scratch();
+        let g2 = eng.scratch();
+        assert_eq!(eng.scratch_pool().in_use(), 2);
+        drop(g1);
+        drop(g2);
+        assert_eq!(eng.scratch_pool().in_use(), 0);
     }
 }

@@ -1,0 +1,255 @@
+//! Per-call scratch checkout: a lock-free pool of [`SolveScratch`]
+//! instances.
+//!
+//! The engine's original design kept one `SolveScratch` behind a mutex,
+//! which serialized every `solve*` call on a solver — exactly one
+//! in-flight solve per handle, no matter how many callers. The checkout
+//! pool removes that bottleneck: a caller pops a scratch instance off a
+//! lock-free free-list (a 64-bit bitmask, one bit per slot), works
+//! against it, and pushes it back on drop. Concurrent callers therefore
+//! overlap on substitution and refinement; only the genuinely shared
+//! state — the worker-pool dispatch and the factor-side arenas — still
+//! serializes.
+//!
+//! Checkout is LIFO on the lowest free slot, so a sequential caller
+//! always gets the *same* instance back and the warm-path "zero O(n)
+//! allocations" guarantee is untouched: arena growth happens once per
+//! slot actually exercised by concurrency, counted through the usual
+//! [`PoolCounters`] events. When every slot is checked out, callers park
+//! on a condvar until one returns — the pool caps memory at
+//! `cap ×` (high-water scratch footprint).
+
+use std::cell::UnsafeCell;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::{lock_ignore_poison, wait_ignore_poison, SolveScratch};
+
+/// Hard cap on checkout-pool width: the free-list is one 64-bit mask.
+pub const MAX_SCRATCH_SLOTS: usize = 64;
+
+/// One pool slot. Interior mutability is sound because a slot is only
+/// ever reachable through a [`ScratchGuard`] holding exclusive ownership
+/// of the slot's free-list bit.
+struct Slot(UnsafeCell<SolveScratch>);
+
+// Safety: access is gated by free-list bit ownership (see `Slot`).
+unsafe impl Sync for Slot {}
+unsafe impl Send for Slot {}
+
+/// A fixed-capacity checkout pool of [`SolveScratch`] arenas with a
+/// lock-free bitmask free-list and a condvar fallback for the all-busy
+/// case.
+pub struct ScratchPool {
+    slots: Box<[Slot]>,
+    /// Bit `i` set ⇔ slot `i` is free. Checkout clears the lowest set
+    /// bit (LIFO on slot index → stable warm slot for sequential use).
+    free: AtomicU64,
+    /// Callers currently parked waiting for a slot. Incremented under
+    /// `park` *before* the final free-list retry, so a concurrent
+    /// check-in either satisfies the retry or sees the waiter and
+    /// notifies (SeqCst pairs the bit publication with this read).
+    waiters: AtomicUsize,
+    park: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ScratchPool {
+    /// Pool with `cap` slots (clamped to `1..=`[`MAX_SCRATCH_SLOTS`]).
+    /// Slots start as empty arenas; each grows to its own high-water
+    /// mark on first use, with growth counted by the engine counters.
+    pub fn new(cap: usize) -> ScratchPool {
+        let cap = cap.clamp(1, MAX_SCRATCH_SLOTS);
+        let slots: Box<[Slot]> = (0..cap)
+            .map(|_| Slot(UnsafeCell::new(SolveScratch::default())))
+            .collect();
+        let free = if cap == MAX_SCRATCH_SLOTS {
+            u64::MAX
+        } else {
+            (1u64 << cap) - 1
+        };
+        ScratchPool {
+            slots,
+            free: AtomicU64::new(free),
+            waiters: AtomicUsize::new(0),
+            park: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Total slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently checked out.
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.load(Ordering::SeqCst).count_ones() as usize
+    }
+
+    /// Non-blocking checkout: `None` when every slot is in use.
+    pub fn try_checkout(&self) -> Option<ScratchGuard<'_>> {
+        let mut mask = self.free.load(Ordering::SeqCst);
+        loop {
+            if mask == 0 {
+                return None;
+            }
+            let idx = mask.trailing_zeros() as usize;
+            let bit = 1u64 << idx;
+            match self.free.compare_exchange_weak(
+                mask,
+                mask & !bit,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return Some(ScratchGuard { pool: self, idx }),
+                Err(cur) => mask = cur,
+            }
+        }
+    }
+
+    /// Checkout, parking on the condvar while every slot is in use.
+    pub fn checkout(&self) -> ScratchGuard<'_> {
+        if let Some(g) = self.try_checkout() {
+            return g;
+        }
+        let mut guard = lock_ignore_poison(&self.park);
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let g = loop {
+            if let Some(g) = self.try_checkout() {
+                break g;
+            }
+            guard = wait_ignore_poison(self.cv.wait(guard));
+        };
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+        g
+    }
+
+    fn checkin(&self, idx: usize) {
+        self.free.fetch_or(1u64 << idx, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // Taking the park lock orders this notify against a waiter
+            // that has registered but not yet parked.
+            let _g = lock_ignore_poison(&self.park);
+            self.cv.notify_one();
+        }
+    }
+}
+
+/// Exclusive handle to one checked-out [`SolveScratch`]; returns the
+/// slot to the pool on drop.
+pub struct ScratchGuard<'a> {
+    pool: &'a ScratchPool,
+    idx: usize,
+}
+
+impl Deref for ScratchGuard<'_> {
+    type Target = SolveScratch;
+    fn deref(&self) -> &SolveScratch {
+        // Safety: exclusive ownership of the slot's free-list bit.
+        unsafe { &*self.pool.slots[self.idx].0.get() }
+    }
+}
+
+impl DerefMut for ScratchGuard<'_> {
+    fn deref_mut(&mut self) -> &mut SolveScratch {
+        // Safety: as above.
+        unsafe { &mut *self.pool.slots[self.idx].0.get() }
+    }
+}
+
+impl Drop for ScratchGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.checkin(self.idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_checkout_reuses_the_same_slot() {
+        let pool = ScratchPool::new(4);
+        {
+            let mut g = pool.checkout();
+            g.y.resize(100, 1.0);
+            assert_eq!(pool.in_use(), 1);
+        }
+        let g = pool.checkout();
+        assert_eq!(g.y.len(), 100, "LIFO must return the warm slot");
+        assert_eq!(pool.in_use(), 1);
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_slots() {
+        let pool = ScratchPool::new(3);
+        let g1 = pool.checkout();
+        let g2 = pool.checkout();
+        let g3 = pool.checkout();
+        assert_eq!(pool.in_use(), 3);
+        assert!(pool.try_checkout().is_none(), "pool exhausted at cap");
+        drop(g2);
+        assert!(pool.try_checkout().is_some()); // guard dropped immediately
+        drop(g1);
+        drop(g3);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn exhausted_pool_blocks_then_resumes() {
+        let pool = Arc::new(ScratchPool::new(1));
+        let got = Arc::new(AtomicUsize::new(0));
+        let g = pool.checkout();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            let c = got.clone();
+            handles.push(std::thread::spawn(move || {
+                let _g = p.checkout(); // blocks until a slot frees
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(got.load(Ordering::SeqCst), 0, "cap=1 must block all");
+        drop(g);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(got.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn cap_is_clamped() {
+        assert_eq!(ScratchPool::new(0).capacity(), 1);
+        assert_eq!(ScratchPool::new(1000).capacity(), MAX_SCRATCH_SLOTS);
+    }
+
+    #[test]
+    fn hammered_pool_never_double_hands_a_slot() {
+        let pool = Arc::new(ScratchPool::new(2));
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    let mut g = p.checkout();
+                    // exclusive access: write a token, yield, read it back
+                    g.y.clear();
+                    g.y.push((t * 1000 + i) as f64);
+                    std::thread::yield_now();
+                    assert_eq!(g.y[0], (t * 1000 + i) as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.in_use(), 0);
+    }
+}

@@ -21,6 +21,8 @@
 //! refactor: pattern-reusing numeric-only fast path (repeated solve)
 //! solve:    partition/level-based parallel fwd/bwd substitution;
 //!           iterative refinement (automatic after pivot perturbation)
+//! serve:    sharded, request-coalescing [`service::SolverService`]
+//!           front door for concurrent callers (batched block solves)
 //! ```
 //!
 //! See `DESIGN.md` for the paper-to-module map (including the persistent
@@ -37,6 +39,7 @@ pub mod numeric;
 pub mod ordering;
 pub mod par;
 pub mod runtime;
+pub mod service;
 pub mod solve;
 pub mod sparse;
 pub mod symbolic;
@@ -47,6 +50,7 @@ pub mod prelude {
     pub use crate::coordinator::{FactorStats, SolveStats, Solver, SolverConfig, SymbolicStats};
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;
+    pub use crate::service::{ServiceConfig, ServiceStats, SolverService};
     pub use crate::sparse::csr::Csr;
 }
 

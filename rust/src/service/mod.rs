@@ -1,0 +1,225 @@
+//! Concurrent serving front door: a sharded, request-coalescing solve
+//! service over the repeated-solve engine.
+//!
+//! HYLU's headline number is the repeated-solve loop, and the workloads
+//! that loop serves (circuit transient simulation, many-RHS node-level
+//! solves) issue requests *concurrently* from many callers. A
+//! [`SolverService`] turns the crate's one-caller-at-a-time `Solver`
+//! API into a traffic-serving front door:
+//!
+//! - **Shards.** The service owns `S` independent [`Solver`]s (one
+//!   persistent engine each). Systems — matrices registered at
+//!   construction — are routed to shards round-robin, so a multi-matrix
+//!   parameter sweep spreads across engines while each matrix keeps its
+//!   warm factor/scratch state on one shard.
+//! - **Coalescing queue.** Callers [`SolverService::submit`] single
+//!   right-hand sides and get a [`Ticket`] (a per-request channel). A
+//!   per-shard dispatcher thread drains its queue once per tick and
+//!   issues **one batched block dispatch per system**
+//!   ([`crate::coordinator::Solver::solve_many_into`]) for everything
+//!   that piled up — k concurrent callers cost one substitution sweep
+//!   over a dense n×k block instead of k scalar sweeps. Batched columns
+//!   are bit-identical to independent scalar solves, so coalescing is
+//!   invisible to callers.
+//! - **Refactor routing.** [`SolverService::refactor`] ships new
+//!   same-pattern values through the same queue; queued solves submitted
+//!   before the refactor are flushed first, so a caller never observes
+//!   values newer than its submission point.
+//!
+//! [`ServiceStats`] exposes the coalescing behavior (requests,
+//! dispatches, mean/max batch width) for benches and tests.
+
+mod shard;
+
+pub use shard::ServiceStats;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Solver, SolverConfig};
+use crate::sparse::csr::Csr;
+use crate::{Error, Result};
+
+use shard::{Job, ShardQueue, ShardWorker, SystemState};
+
+/// Configuration for [`SolverService`].
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Number of shards (independent solvers + dispatcher threads).
+    /// Clamped to `1..=systems` at construction.
+    pub shards: usize,
+    /// Solver configuration used by every shard. Note `solver.threads`
+    /// is the worker-pool width *per shard*.
+    pub solver: SolverConfig,
+    /// Maximum right-hand sides coalesced into one block dispatch.
+    pub max_batch: usize,
+    /// Maximum queued jobs per shard before `submit` applies
+    /// backpressure (blocks).
+    pub queue_cap: usize,
+    /// Coalescing window: after waking on a non-empty queue, the
+    /// dispatcher waits this long before draining, letting concurrent
+    /// submitters pile onto the same tick. `Duration::ZERO` (default)
+    /// drains immediately — lowest latency, batching only under
+    /// sustained load.
+    pub tick: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            shards: 1,
+            solver: SolverConfig::default(),
+            max_batch: 32,
+            queue_cap: 4096,
+            tick: Duration::ZERO,
+        }
+    }
+}
+
+/// Handle to one in-flight solve request.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Vec<f64>>>,
+}
+
+impl Ticket {
+    /// Block until the dispatcher resolves this request.
+    pub fn wait(self) -> Result<Vec<f64>> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Runtime("service dropped the request".into())),
+        }
+    }
+}
+
+struct ShardHandle {
+    queue: Arc<ShardQueue>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// The sharded, coalescing solve service. See the module docs.
+pub struct SolverService {
+    shards: Vec<ShardHandle>,
+    /// Per public system id: `(shard, shard-local index, dimension)`.
+    route: Vec<(usize, usize, usize)>,
+}
+
+impl SolverService {
+    /// Build the service: analyze + factor every system on its shard's
+    /// solver, then start one dispatcher thread per shard. System ids
+    /// are the indices into `systems`.
+    pub fn new(cfg: ServiceConfig, systems: Vec<Csr>) -> Result<SolverService> {
+        if systems.is_empty() {
+            return Err(Error::Invalid("service needs at least one system".into()));
+        }
+        let nshards = cfg.shards.max(1).min(systems.len());
+        let mut route = Vec::with_capacity(systems.len());
+        let mut per_shard: Vec<Vec<Csr>> = (0..nshards).map(|_| Vec::new()).collect();
+        for (i, a) in systems.into_iter().enumerate() {
+            let shard = i % nshards;
+            route.push((shard, per_shard[shard].len(), a.n));
+            per_shard[shard].push(a);
+        }
+        let mut shards = Vec::with_capacity(nshards);
+        for (s, mats) in per_shard.into_iter().enumerate() {
+            let solver = Solver::try_new(cfg.solver.clone())?;
+            let mut sys = Vec::with_capacity(mats.len());
+            for a in mats {
+                let an = solver.analyze(&a)?;
+                let f = solver.factor(&a, &an)?;
+                sys.push(SystemState { a, an, f });
+            }
+            let queue = Arc::new(ShardQueue::new(cfg.queue_cap.max(1)));
+            let worker =
+                ShardWorker::new(solver, sys, queue.clone(), cfg.tick, cfg.max_batch.max(1));
+            let thread = std::thread::Builder::new()
+                .name(format!("hylu-serve-{s}"))
+                .spawn(move || worker.run())
+                .map_err(|e| Error::Runtime(format!("spawn shard dispatcher: {e}")))?;
+            shards.push(ShardHandle {
+                queue,
+                thread: Some(thread),
+            });
+        }
+        Ok(SolverService { shards, route })
+    }
+
+    fn lookup(&self, sys: usize) -> Result<(usize, usize, usize)> {
+        self.route
+            .get(sys)
+            .copied()
+            .ok_or_else(|| Error::Invalid(format!("unknown system id {sys}")))
+    }
+
+    /// Enqueue one right-hand side for `sys`; returns a [`Ticket`] to
+    /// wait on. Blocks only when the shard queue is at capacity
+    /// (backpressure).
+    pub fn submit(&self, sys: usize, b: Vec<f64>) -> Result<Ticket> {
+        let (shard, local, n) = self.lookup(sys)?;
+        if b.len() != n {
+            return Err(Error::Invalid("rhs length mismatch".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.shards[shard].queue.push(Job::Solve { sys: local, b, tx })?;
+        Ok(Ticket { rx })
+    }
+
+    /// Submit and wait: the blocking convenience wrapper.
+    pub fn solve(&self, sys: usize, b: Vec<f64>) -> Result<Vec<f64>> {
+        self.submit(sys, b)?.wait()
+    }
+
+    /// Replace system `sys`'s values with a same-pattern matrix and
+    /// refactorize on its shard (parameter-sweep step). Blocks until the
+    /// refactorization is applied; solves submitted afterwards observe
+    /// the new values.
+    pub fn refactor(&self, sys: usize, a: Csr) -> Result<()> {
+        let (shard, local, n) = self.lookup(sys)?;
+        if a.n != n {
+            return Err(Error::Invalid("refactor dimension mismatch".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.shards[shard]
+            .queue
+            .push(Job::Refactor { sys: local, a, tx })?;
+        match rx.recv() {
+            Ok(r) => r.map(|_| ()),
+            Err(_) => Err(Error::Runtime("service dropped the refactor".into())),
+        }
+    }
+
+    /// Number of shards actually running.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Number of registered systems.
+    pub fn system_count(&self) -> usize {
+        self.route.len()
+    }
+
+    /// Aggregate coalescing statistics across shards.
+    pub fn stats(&self) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for sh in &self.shards {
+            sh.queue.add_stats_into(&mut total);
+        }
+        total
+    }
+}
+
+impl Drop for SolverService {
+    /// Graceful shutdown: dispatchers drain everything already queued
+    /// (resolving those tickets), then exit and are joined.
+    fn drop(&mut self) {
+        for sh in &self.shards {
+            sh.queue.shutdown();
+        }
+        for sh in &mut self.shards {
+            if let Some(h) = sh.thread.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}

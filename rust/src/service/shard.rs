@@ -1,0 +1,255 @@
+//! Shard internals: the bounded coalescing queue and the dispatcher
+//! loop that turns queued single-RHS requests into batched
+//! `solve_many_into` block dispatches.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{Analysis, Factorization, Solver};
+use crate::exec::{lock_ignore_poison, wait_ignore_poison};
+use crate::sparse::csr::Csr;
+use crate::{Error, Result};
+
+/// Per-request reply channel (refactor acks send an empty vector,
+/// hidden behind the typed wrappers in `service::SolverService`).
+pub(crate) type Reply = Sender<Result<Vec<f64>>>;
+
+/// Pending solves for one system within a drained tick.
+type SolveGroup = Vec<(Vec<f64>, Reply)>;
+
+pub(crate) enum Job {
+    Solve { sys: usize, b: Vec<f64>, tx: Reply },
+    Refactor { sys: usize, a: Csr, tx: Reply },
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Bounded MPSC job queue with condvar wakeups on both ends: the
+/// dispatcher parks on `nonempty`, submitters at capacity park on
+/// `space`. Coalescing statistics live here so the service can
+/// aggregate them without touching the dispatcher thread.
+pub(crate) struct ShardQueue {
+    q: Mutex<QueueState>,
+    nonempty: Condvar,
+    space: Condvar,
+    cap: usize,
+    requests: AtomicU64,
+    dispatches: AtomicU64,
+    rhs_solved: AtomicU64,
+    refactors: AtomicU64,
+    max_batch: AtomicUsize,
+}
+
+impl ShardQueue {
+    pub fn new(cap: usize) -> ShardQueue {
+        ShardQueue {
+            q: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            cap,
+            requests: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+            rhs_solved: AtomicU64::new(0),
+            refactors: AtomicU64::new(0),
+            max_batch: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enqueue a job, blocking while the queue is at capacity; errors
+    /// once shutdown has begun.
+    pub fn push(&self, job: Job) -> Result<()> {
+        let mut st = lock_ignore_poison(&self.q);
+        loop {
+            if st.shutdown {
+                return Err(Error::Runtime("service is shutting down".into()));
+            }
+            if st.jobs.len() < self.cap {
+                break;
+            }
+            st = wait_ignore_poison(self.space.wait(st));
+        }
+        if matches!(job, Job::Solve { .. }) {
+            self.requests.fetch_add(1, Ordering::Relaxed);
+        }
+        st.jobs.push_back(job);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    pub fn shutdown(&self) {
+        let mut st = lock_ignore_poison(&self.q);
+        st.shutdown = true;
+        self.nonempty.notify_all();
+        self.space.notify_all();
+    }
+
+    pub fn add_stats_into(&self, out: &mut ServiceStats) {
+        out.requests += self.requests.load(Ordering::Relaxed);
+        out.dispatches += self.dispatches.load(Ordering::Relaxed);
+        out.rhs_solved += self.rhs_solved.load(Ordering::Relaxed);
+        out.refactors += self.refactors.load(Ordering::Relaxed);
+        out.max_batch = out.max_batch.max(self.max_batch.load(Ordering::Relaxed));
+    }
+}
+
+/// Aggregate coalescing statistics for a [`super::SolverService`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Solve requests accepted.
+    pub requests: u64,
+    /// Batched block dispatches issued.
+    pub dispatches: u64,
+    /// Right-hand sides solved across all dispatches.
+    pub rhs_solved: u64,
+    /// Refactorizations applied.
+    pub refactors: u64,
+    /// Widest single batch dispatched.
+    pub max_batch: usize,
+}
+
+impl ServiceStats {
+    /// Mean right-hand sides per block dispatch (the coalescing factor).
+    pub fn mean_batch(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.rhs_solved as f64 / self.dispatches as f64
+        }
+    }
+}
+
+/// One registered system on a shard: the matrix (current values), its
+/// analysis, and its live factorization.
+pub(crate) struct SystemState {
+    pub a: Csr,
+    pub an: Analysis,
+    pub f: Factorization,
+}
+
+/// The dispatcher state moved onto the shard thread.
+pub(crate) struct ShardWorker {
+    solver: Solver,
+    systems: Vec<SystemState>,
+    queue: Arc<ShardQueue>,
+    tick: Duration,
+    max_batch: usize,
+}
+
+impl ShardWorker {
+    pub fn new(
+        solver: Solver,
+        systems: Vec<SystemState>,
+        queue: Arc<ShardQueue>,
+        tick: Duration,
+        max_batch: usize,
+    ) -> ShardWorker {
+        ShardWorker {
+            solver,
+            systems,
+            queue,
+            tick,
+            max_batch,
+        }
+    }
+
+    /// Dispatcher loop: park until work arrives, optionally sleep one
+    /// coalescing tick, drain everything queued, process it as batched
+    /// block dispatches. On shutdown the queue is drained to empty
+    /// before exiting, so every accepted ticket resolves.
+    pub fn run(mut self) {
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        loop {
+            let drained = {
+                let mut st = lock_ignore_poison(&self.queue.q);
+                while st.jobs.is_empty() && !st.shutdown {
+                    st = wait_ignore_poison(self.queue.nonempty.wait(st));
+                }
+                if st.jobs.is_empty() {
+                    return; // shutdown with nothing left to do
+                }
+                // coalescing window — skipped when the batch is already
+                // full (sleeping could not widen it) or shutdown has
+                // begun (drain as fast as possible)
+                if !self.tick.is_zero() && !st.shutdown && st.jobs.len() < self.max_batch {
+                    drop(st);
+                    std::thread::sleep(self.tick);
+                    st = lock_ignore_poison(&self.queue.q);
+                }
+                let drained: Vec<Job> = st.jobs.drain(..).collect();
+                self.queue.space.notify_all();
+                drained
+            };
+            self.process(drained, &mut xs);
+        }
+    }
+
+    fn process(&mut self, jobs: Vec<Job>, xs: &mut Vec<Vec<f64>>) {
+        let nsys = self.systems.len();
+        let mut groups: Vec<SolveGroup> = (0..nsys).map(|_| Vec::new()).collect();
+        for job in jobs {
+            match job {
+                Job::Solve { sys, b, tx } => groups[sys].push((b, tx)),
+                Job::Refactor { sys, a, tx } => {
+                    // flush queued solves first: a request submitted
+                    // before this refactor must not observe new values
+                    self.flush(&mut groups, xs);
+                    let r = self.apply_refactor(sys, a);
+                    self.queue.refactors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(r.map(|_| Vec::new()));
+                }
+            }
+        }
+        self.flush(&mut groups, xs);
+    }
+
+    fn apply_refactor(&mut self, sys: usize, a: Csr) -> Result<()> {
+        let st = &mut self.systems[sys];
+        self.solver.refactor(&a, &st.an, &mut st.f)?;
+        st.a = a;
+        Ok(())
+    }
+
+    /// Solve every queued group as block dispatches of at most
+    /// `max_batch` columns, replying through the per-request channels.
+    /// Disconnected receivers (abandoned tickets) are ignored.
+    fn flush(&self, groups: &mut [SolveGroup], xs: &mut Vec<Vec<f64>>) {
+        for (sys, group) in groups.iter_mut().enumerate() {
+            while !group.is_empty() {
+                let take = group.len().min(self.max_batch);
+                let mut bs = Vec::with_capacity(take);
+                let mut txs = Vec::with_capacity(take);
+                for (b, tx) in group.drain(..take) {
+                    bs.push(b);
+                    txs.push(tx);
+                }
+                let st = &self.systems[sys];
+                match self.solver.solve_many_into(&st.a, &st.an, &st.f, &bs, xs) {
+                    Ok(_) => {
+                        self.queue.dispatches.fetch_add(1, Ordering::Relaxed);
+                        self.queue
+                            .rhs_solved
+                            .fetch_add(bs.len() as u64, Ordering::Relaxed);
+                        self.queue.max_batch.fetch_max(bs.len(), Ordering::Relaxed);
+                        for (q, tx) in txs.into_iter().enumerate() {
+                            let _ = tx.send(Ok(std::mem::take(&mut xs[q])));
+                        }
+                    }
+                    Err(e) => {
+                        for tx in txs {
+                            let _ = tx.send(Err(e.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -16,6 +16,26 @@ fn rhs_set(n: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
 }
 
 #[test]
+fn analyze_only_paths_spawn_no_threads() {
+    // lazy pool spawn: `hylu inspect` / fig4-style analyze-only use must
+    // never pay for worker threads; the first numeric dispatch spawns
+    let a = gen::grid2d(12, 12);
+    let solver = Solver::new(SolverConfig {
+        threads: 4,
+        ..SolverConfig::default()
+    });
+    assert_eq!(solver.engine().threads_spawned(), 0, "construction spawns nothing");
+    let an = solver.analyze(&a).unwrap();
+    assert_eq!(solver.engine().threads_spawned(), 0, "analyze spawns nothing");
+    let _f = solver.factor(&a, &an).unwrap();
+    assert_eq!(
+        solver.engine().threads_spawned(),
+        3,
+        "first numeric dispatch spawns threads-1 workers"
+    );
+}
+
+#[test]
 fn warm_refactor_solve_cycle_spawns_nothing_and_allocates_nothing() {
     let a = gen::grid2d(24, 24);
     let solver = Solver::new(SolverConfig {

@@ -1,0 +1,230 @@
+//! Concurrency tests for the serving stack: N threads hammering one
+//! `Solver` (scratch checkout pool) and one `SolverService` (coalescing
+//! queue), asserting bit-identical results vs. sequential solves, no
+//! deadlock, and that coalescing actually batches k > 1 right-hand
+//! sides per dispatch.
+
+use std::time::Duration;
+
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::service::{ServiceConfig, SolverService};
+use hylu::sparse::csr::Csr;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+
+fn rhs_set(n: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Prng::new(seed);
+    (0..k)
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+#[test]
+fn threads_hammering_one_solver_match_sequential_bitwise() {
+    let a = gen::grid2d(20, 20);
+    let solver = Solver::new(SolverConfig {
+        threads: 2,
+        scratch_slots: 8,
+        ..SolverConfig::default()
+    });
+    let an = solver.analyze(&a).unwrap();
+    let f = solver.factor(&a, &an).unwrap();
+    let bs = rhs_set(a.n, 8, 21);
+    // sequential references first
+    let expect: Vec<Vec<f64>> = bs
+        .iter()
+        .map(|b| solver.solve(&a, &an, &f, b).unwrap())
+        .collect();
+    std::thread::scope(|sc| {
+        for t in 0..8usize {
+            let (solver, a, an, f, bs, expect) = (&solver, &a, &an, &f, &bs, &expect);
+            sc.spawn(move || {
+                for rep in 0..10 {
+                    let q = (t + rep) % bs.len();
+                    let x = solver.solve(a, an, f, &bs[q]).unwrap();
+                    assert_eq!(x, expect[q], "thread {t} rep {rep} col {q}");
+                }
+            });
+        }
+    });
+    // every slot went back to the pool
+    assert_eq!(solver.engine().scratch_pool().in_use(), 0);
+}
+
+#[test]
+fn solver_with_one_scratch_slot_still_serves_concurrent_callers() {
+    // cap 1 forces callers through the condvar fallback path: correctness
+    // and liveness must hold even fully contended
+    let a = gen::grid2d(12, 12);
+    let solver = Solver::new(SolverConfig {
+        threads: 1,
+        scratch_slots: 1,
+        ..SolverConfig::default()
+    });
+    let an = solver.analyze(&a).unwrap();
+    let f = solver.factor(&a, &an).unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let expect = solver.solve(&a, &an, &f, &b).unwrap();
+    std::thread::scope(|sc| {
+        for _ in 0..6 {
+            let (solver, a, an, f, b, expect) = (&solver, &a, &an, &f, &b, &expect);
+            sc.spawn(move || {
+                for _ in 0..20 {
+                    assert_eq!(solver.solve(a, an, f, b).unwrap(), *expect);
+                }
+            });
+        }
+    });
+    assert_eq!(solver.engine().scratch_pool().in_use(), 0);
+}
+
+fn service_cfg(shards: usize, tick_ms: u64) -> ServiceConfig {
+    ServiceConfig {
+        shards,
+        solver: SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        },
+        max_batch: 64,
+        queue_cap: 4096,
+        tick: Duration::from_millis(tick_ms),
+    }
+}
+
+#[test]
+fn service_coalesces_and_matches_sequential_bitwise() {
+    let a = gen::grid2d(40, 40);
+    let service = SolverService::new(service_cfg(1, 2), vec![a.clone()]).unwrap();
+    // identically configured standalone solver: the deterministic
+    // pipeline produces the same analysis/factors, so results must be
+    // bit-identical to the service's batched columns
+    let reference = Solver::new(SolverConfig {
+        threads: 1,
+        ..SolverConfig::default()
+    });
+    let an = reference.analyze(&a).unwrap();
+    let f = reference.factor(&a, &an).unwrap();
+    let bs = rhs_set(a.n, 48, 7);
+    let expect: Vec<Vec<f64>> = bs
+        .iter()
+        .map(|b| reference.solve(&a, &an, &f, b).unwrap())
+        .collect();
+    // submit everything up front: the 2ms coalescing tick piles the
+    // whole burst into very few dispatches
+    let tickets: Vec<_> = bs
+        .iter()
+        .map(|b| service.submit(0, b.clone()).unwrap())
+        .collect();
+    for (q, ticket) in tickets.into_iter().enumerate() {
+        let x = ticket.wait().unwrap();
+        assert_eq!(x, expect[q], "column {q}");
+    }
+    let st = service.stats();
+    assert_eq!(st.requests, 48);
+    assert_eq!(st.rhs_solved, 48);
+    assert!(
+        st.max_batch > 1,
+        "burst of 48 must coalesce: max batch {}",
+        st.max_batch
+    );
+    assert!(
+        st.mean_batch() > 1.0,
+        "mean batch {} must exceed 1",
+        st.mean_batch()
+    );
+    assert!(st.dispatches < 48, "dispatches {}", st.dispatches);
+}
+
+#[test]
+fn sharded_multi_system_service_with_concurrent_callers() {
+    // four same-size systems with different values across two shards
+    let base = gen::power_network(300, 7);
+    let systems: Vec<Csr> = (0..4)
+        .map(|s| {
+            let mut m = base.clone();
+            for v in &mut m.vals {
+                *v *= 1.0 + 0.2 * s as f64;
+            }
+            m
+        })
+        .collect();
+    let service = SolverService::new(service_cfg(2, 1), systems.clone()).unwrap();
+    assert_eq!(service.shard_count(), 2);
+    assert_eq!(service.system_count(), 4);
+    // references from an identically configured solver
+    let reference = Solver::new(SolverConfig {
+        threads: 1,
+        ..SolverConfig::default()
+    });
+    let bs = rhs_set(base.n, 4, 3);
+    let mut expect = Vec::new();
+    for (s, m) in systems.iter().enumerate() {
+        let an = reference.analyze(m).unwrap();
+        let f = reference.factor(m, &an).unwrap();
+        expect.push(reference.solve(m, &an, &f, &bs[s]).unwrap());
+    }
+    std::thread::scope(|sc| {
+        for t in 0..6usize {
+            let (service, bs, expect) = (&service, &bs, &expect);
+            sc.spawn(move || {
+                for rep in 0..8 {
+                    let sys = (t + rep) % 4;
+                    let x = service.solve(sys, bs[sys].clone()).unwrap();
+                    assert_eq!(x, expect[sys], "thread {t} sys {sys}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn service_refactor_updates_results() {
+    let a = gen::grid2d(15, 15);
+    let service = SolverService::new(service_cfg(1, 0), vec![a.clone()]).unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let x = service.solve(0, b.clone()).unwrap();
+    let err: f64 = x.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+    assert!(err < 1e-8, "initial solve err {err}");
+    // sweep step: double every value; same rhs now solves to 0.5
+    let mut a2 = a.clone();
+    for v in &mut a2.vals {
+        *v *= 2.0;
+    }
+    service.refactor(0, a2).unwrap();
+    let x2 = service.solve(0, b).unwrap();
+    let err2: f64 = x2.iter().map(|v| (v - 0.5).abs()).fold(0.0, f64::max);
+    assert!(err2 < 1e-8, "post-refactor err {err2}");
+    assert_eq!(service.stats().refactors, 1);
+}
+
+#[test]
+fn service_drop_resolves_all_pending_tickets() {
+    let a = gen::grid2d(30, 30);
+    let b = gen::rhs_for_ones(&a);
+    let service = SolverService::new(service_cfg(1, 5), vec![a.clone()]).unwrap();
+    let tickets: Vec<_> = (0..16)
+        .map(|_| service.submit(0, b.clone()).unwrap())
+        .collect();
+    // dropping the service drains the queue before joining the
+    // dispatcher: every accepted ticket must still resolve
+    drop(service);
+    for t in tickets {
+        let x = t.wait().unwrap();
+        assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-7));
+    }
+}
+
+#[test]
+fn service_rejects_bad_requests() {
+    let a = gen::grid2d(8, 8);
+    let service = SolverService::new(ServiceConfig::default(), vec![a.clone()]).unwrap();
+    assert!(service.submit(1, vec![0.0; a.n]).is_err(), "unknown system");
+    assert!(service.submit(0, vec![0.0; 3]).is_err(), "bad rhs length");
+    let mut wrong = gen::grid2d(8, 9);
+    wrong.vals.iter_mut().for_each(|v| *v *= 2.0);
+    assert!(service.refactor(0, wrong).is_err(), "dimension mismatch");
+    assert!(
+        SolverService::new(ServiceConfig::default(), vec![]).is_err(),
+        "no systems"
+    );
+}
