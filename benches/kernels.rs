@@ -1,0 +1,215 @@
+//! Microbench: the dense-kernel dispatch tiers against each other.
+//!
+//! Seeds the perf trajectory for the SIMD microkernel subsystem:
+//!
+//! 1. `gemm_sub` per tier (scalar / portable / native) across panel
+//!    shapes — the headline is native >= 2x scalar on 64x64x64;
+//! 2. `trsm_right_upper` per tier across triangle sizes;
+//! 3. block substitution at k in {1, 4, 16} per tier, against the
+//!    k x (single-RHS scalar sweep) baseline — the headline is k=16
+//!    block >= 1.5x that baseline.
+
+use hylu::bench_harness::{environment, fmt_time, time_best, Table};
+use hylu::numeric::factor::{factor, NativeGemm};
+use hylu::numeric::kernels::{self, KernelTier};
+use hylu::numeric::select::KernelMode;
+use hylu::numeric::{LuFactors, PivotConfig};
+use hylu::solve::{backward, backward_block_with, forward, forward_block_with};
+use hylu::sparse::gen;
+use hylu::symbolic::{analyze_pattern, MergePolicy};
+use hylu::testutil::Prng;
+
+fn tiers() -> Vec<KernelTier> {
+    [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
+        .into_iter()
+        .filter(|t| t.available())
+        .collect()
+}
+
+fn main() {
+    println!("{}", environment());
+    let p = kernels::probe();
+    println!(
+        "active tier {} | probe: gemm {:.2} GFLOP/s vs scalar {:.2} GFLOP/s \
+         (advantage {:.2}x, selection calibration {:.2})",
+        kernels::active_tier(),
+        p.gemm_gflops,
+        p.scalar_gflops,
+        p.advantage(),
+        kernels::calibration()
+    );
+    if !KernelTier::Native.available() {
+        println!("(native tier unavailable on this machine: AVX2+FMA not detected)");
+    }
+
+    // --- 1. gemm_sub tiers ---
+    let mut rng = Prng::new(11);
+    let mut t1 = Table::new(
+        "gemm_sub dispatch tiers (C[mxn] -= A[mxk] B[kxn], per-call time)",
+        &["m,k,n", "scalar", "portable", "native", "native/scalar"],
+    );
+    let mut native_64 = f64::NAN;
+    for (m, k, n) in [(16usize, 16usize, 16usize), (32, 32, 32), (64, 64, 64), (64, 64, 192)] {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut times = [f64::NAN; 3];
+        for (ti, tier) in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
+            .into_iter()
+            .enumerate()
+        {
+            if !tier.available() {
+                continue;
+            }
+            let mut c = c0.clone();
+            times[ti] = time_best(30, || {
+                kernels::gemm_sub(tier, &mut c, n, &a, k, &b, n, m, k, n);
+                std::hint::black_box(c[0]);
+            });
+        }
+        let speed = times[0] / times[2];
+        if (m, k, n) == (64, 64, 64) {
+            native_64 = speed;
+        }
+        t1.row(
+            vec![
+                format!("{m},{k},{n}"),
+                fmt_time(times[0]),
+                fmt_time(times[1]),
+                if times[2].is_nan() { "n/a".into() } else { fmt_time(times[2]) },
+                if speed.is_nan() { "n/a".into() } else { format!("{speed:.2}x") },
+            ],
+            if speed.is_finite() { speed } else { 1.0 },
+        );
+    }
+    t1.print();
+    if native_64.is_finite() {
+        println!(
+            "acceptance: native gemm_sub on 64x64x64 = {:.2}x scalar (target >= 2x): {}",
+            native_64,
+            if native_64 >= 2.0 { "PASS" } else { "MISS" }
+        );
+    }
+
+    // --- 2. trsm tiers ---
+    let mut t2 = Table::new(
+        "trsm_right_upper dispatch tiers (m rows vs len-wide triangle)",
+        &["m,len", "scalar", "portable", "native", "native/scalar"],
+    );
+    for (m, len) in [(32usize, 16usize), (64, 48), (64, 96)] {
+        let ldu = len + 2;
+        let mut u = vec![0.0; (len + 1) * ldu];
+        for r in 0..len {
+            for c in r..len {
+                u[(1 + r) * ldu + 1 + c] =
+                    if r == c { 2.0 + rng.uniform() } else { 0.2 * rng.normal() };
+            }
+        }
+        let ldx = len;
+        let x0: Vec<f64> = (0..m * ldx).map(|_| rng.normal()).collect();
+        let mut times = [f64::NAN; 3];
+        for (ti, tier) in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
+            .into_iter()
+            .enumerate()
+        {
+            if !tier.available() {
+                continue;
+            }
+            let mut x = x0.clone();
+            let mut scratch = Vec::new();
+            times[ti] = time_best(30, || {
+                x.copy_from_slice(&x0);
+                kernels::trsm_right_upper(
+                    tier,
+                    &mut x,
+                    ldx,
+                    0,
+                    m,
+                    &u,
+                    ldu,
+                    1,
+                    1,
+                    len,
+                    &mut scratch,
+                );
+                std::hint::black_box(x[0]);
+            });
+        }
+        let speed = times[0] / times[2];
+        t2.row(
+            vec![
+                format!("{m},{len}"),
+                fmt_time(times[0]),
+                fmt_time(times[1]),
+                if times[2].is_nan() { "n/a".into() } else { fmt_time(times[2]) },
+                if speed.is_nan() { "n/a".into() } else { format!("{speed:.2}x") },
+            ],
+            if speed.is_finite() { speed } else { 1.0 },
+        );
+    }
+    t2.print();
+
+    // --- 3. block substitution: k lanes vs k x single-RHS ---
+    let a = gen::grid2d(60, 60);
+    let n = a.n;
+    let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 32 }, 8);
+    let cfg = PivotConfig::default();
+    let mut fac = LuFactors::alloc(&sym);
+    factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
+    let b = gen::rhs_for_ones(&a);
+
+    // baseline: the single-RHS scalar sweep
+    let mut y1 = b.clone();
+    let t_single = time_best(20, || {
+        y1.copy_from_slice(&b);
+        forward(&sym, &fac, &mut y1);
+        backward(&sym, &fac, &mut y1);
+        std::hint::black_box(y1[0]);
+    });
+    println!(
+        "\nblock substitution on mesh2d n={n} (single-RHS scalar sweep: {} per rhs)",
+        fmt_time(t_single)
+    );
+    let mut t3 = Table::new(
+        "block substitution tiers (per-RHS time, speedup vs k x single-RHS)",
+        &["tier,k", "total", "per rhs", "vs kx single"],
+    );
+    let mut native_k16 = f64::NAN;
+    for tier in tiers() {
+        for k in [1usize, 4, 16] {
+            let mut yb = vec![0.0; n * k];
+            let t_block = time_best(10, || {
+                for i in 0..n {
+                    for q in 0..k {
+                        yb[i * k + q] = b[i];
+                    }
+                }
+                forward_block_with(tier, &sym, &fac, &mut yb, k);
+                backward_block_with(tier, &sym, &fac, &mut yb, k);
+                std::hint::black_box(yb[0]);
+            });
+            let speed = t_single * k as f64 / t_block;
+            if k == 16 && tier == *tiers().last().unwrap() {
+                native_k16 = speed;
+            }
+            t3.row(
+                vec![
+                    format!("{tier},k={k}"),
+                    fmt_time(t_block),
+                    fmt_time(t_block / k as f64),
+                    format!("{speed:.2}x"),
+                ],
+                speed,
+            );
+        }
+    }
+    t3.print();
+    if native_k16.is_finite() {
+        println!(
+            "acceptance: k=16 block substitution (best tier) = {:.2}x the 16 x single-RHS \
+             scalar baseline (target >= 1.5x): {}",
+            native_k16,
+            if native_k16 >= 1.5 { "PASS" } else { "MISS" }
+        );
+    }
+}

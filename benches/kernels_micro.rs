@@ -81,9 +81,12 @@ fn main() {
                 let a: Vec<f64> = (0..m * m).map(|i| (i % 7) as f64 - 3.0).collect();
                 let b: Vec<f64> = (0..m * 2 * m).map(|i| (i % 5) as f64 - 2.0).collect();
                 let c: Vec<f64> = vec![1.0; m * 2 * m];
+                let tier = hylu::numeric::kernels::active_tier();
                 let t_native = common::best(20, || {
                     let mut cc = c.clone();
-                    hylu::numeric::dense::gemm_sub(&mut cc, 2 * m, &a, m, &b, 2 * m, m, m, 2 * m);
+                    hylu::numeric::kernels::gemm_sub(
+                        tier, &mut cc, 2 * m, &a, m, &b, 2 * m, m, m, 2 * m,
+                    );
                     std::hint::black_box(cc);
                 });
                 let t_xla = common::best(20, || {

@@ -6,6 +6,7 @@
 //! hylu inspect --matrix FILE.mtx | --gen CLASS:N
 //! hylu gen    --gen CLASS:N --out FILE.mtx
 //! hylu bench  [--suite small|full] [--threads T]
+//!             [--kernel scalar|portable|native|auto]
 //! hylu serve  --matrix FILE.mtx | --gen CLASS:N [--systems M] [--shards S]
 //!             [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]
 //! ```
@@ -16,6 +17,11 @@
 //! [`SolverService`](crate::service::SolverService) under C concurrent
 //! callers, reporting solves/sec and coalescing statistics against the
 //! serialized single-front-door baseline.
+//!
+//! Note the two meanings of `--kernel`: for `solve` it forces the numeric
+//! kernel *family* (row-row / sup-row / sup-sup); for `bench` it pins the
+//! dense microkernel *dispatch tier* (scalar / portable / native) for A/B
+//! runs, reported alongside the one-shot throughput probe.
 
 use std::path::Path;
 
@@ -23,6 +29,7 @@ use crate::baseline;
 use crate::bench_harness::{environment, fmt_time, Table};
 use crate::bench_suite;
 use crate::coordinator::{Solver, SolverConfig};
+use crate::numeric::kernels::{self, KernelTier};
 use crate::numeric::select::KernelMode;
 use crate::service::{ServiceConfig, SolverService};
 use crate::sparse::csr::Csr;
@@ -154,7 +161,8 @@ pub fn run(argv: &[String]) -> i32 {
                 "usage: hylu <solve|inspect|gen|bench|serve> [--matrix F | --gen CLASS:N] \
                  [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
                  [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
-                 [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]"
+                 [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
+                 (bench: --kernel scalar|portable|native|auto pins the dispatch tier)"
             );
             return 2;
         }
@@ -248,7 +256,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("lu nnz   : {} (fill {:.2}x)", s.lu_entries, s.fill_ratio);
     println!("flops    : {:.3e}", s.flops);
     println!("coverage : {:.3}", s.supernode_coverage);
-    println!("avg width: {:.2}", s.avg_super_width);
+    println!("avg width: {:.2} ({:.2} over panels only)", s.avg_super_width, s.avg_panel_width);
     println!("nodes    : {} over {} levels ({} bulk)", s.nodes, s.levels, s.bulk_levels);
     Ok(())
 }
@@ -264,13 +272,34 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
-    let threads = cfg.threads;
+    // For `bench`, --kernel pins the dense-microkernel DISPATCH TIER
+    // (scalar|portable|native|auto), not the factor kernel family.
+    if let Some(k) = args.get("kernel") {
+        if k != "auto" {
+            let tier = KernelTier::parse(k).ok_or_else(|| {
+                Error::Invalid(format!(
+                    "unknown kernel tier {k} (scalar|portable|native|auto)"
+                ))
+            })?;
+            kernels::set_tier(tier);
+        }
+    }
+    let threads = flag_usize(args, "threads", 0)?;
     let suite = match args.get("suite").unwrap_or("small") {
         "full" => bench_suite::suite37(),
         _ => bench_suite::suite_small(),
     };
     println!("{}", environment());
+    let p = kernels::probe();
+    println!(
+        "kernel tier  : {} (probe: gemm {:.2} GFLOP/s vs scalar {:.2} GFLOP/s, \
+         advantage {:.2}x, selection calibration {:.2})",
+        kernels::active_tier(),
+        p.gemm_gflops,
+        p.scalar_gflops,
+        p.advantage(),
+        kernels::calibration()
+    );
     let mut table = Table::new(
         "one-time solve: HYLU vs PARDISO-like baseline",
         &["matrix", "class", "n", "hylu", "baseline", "speedup"],
@@ -529,6 +558,13 @@ mod tests {
     #[test]
     fn unknown_command_usage() {
         assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn bench_rejects_bad_kernel_tier() {
+        // bench interprets --kernel as the dispatch tier; bad names fail
+        // fast before any suite work
+        assert_eq!(run(&sv(&["bench", "--kernel", "bogus"])), 1);
     }
 
     #[test]

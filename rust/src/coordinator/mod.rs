@@ -283,6 +283,7 @@ impl Solver {
             flops: sym.flops,
             supernode_coverage: sel.coverage,
             avg_super_width: sel.avg_super_width,
+            avg_panel_width: sel.avg_panel_width,
             nodes: sym.nodes.len(),
             levels: sym.schedule.nlevels(),
             bulk_levels: sym.schedule.bulk_levels,

@@ -25,8 +25,12 @@ pub struct SymbolicStats {
     pub flops: f64,
     /// Fraction of rows in supernodes.
     pub supernode_coverage: f64,
-    /// Mean supernode width.
+    /// Mean node width across all nodes (panels and singleton trailing
+    /// columns alike).
     pub avg_super_width: f64,
+    /// Mean width over supernode panels only (the wide-panel selection
+    /// signal).
+    pub avg_panel_width: f64,
     /// Node count (rows + supernodes).
     pub nodes: usize,
     /// DAG levels.

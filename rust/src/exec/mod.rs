@@ -116,9 +116,10 @@ impl WorkerCtx {
         cbuf: usize,
         tbuf: usize,
         map_idx: usize,
+        pbuf: usize,
     ) -> &mut Workspace {
         let mut grew = self.ws.ensure(n);
-        grew |= self.ws.reserve_kernel(cbuf, tbuf, map_idx);
+        grew |= self.ws.reserve_kernel(cbuf, tbuf, map_idx, pbuf);
         if grew {
             self.counters.note_alloc();
         }
@@ -569,14 +570,14 @@ mod tests {
         let c = pool.counters().clone();
         for _ in 0..5 {
             pool.run(|| {}, |_, ctx| {
-                let ws = ctx.workspace(256, 64, 64, 16);
+                let ws = ctx.workspace(256, 64, 64, 16, 64);
                 assert!(ws.x.len() >= 256);
             });
         }
         let after_warm = c.scratch_allocs.load(Ordering::Relaxed);
         for _ in 0..5 {
             pool.run(|| {}, |_, ctx| {
-                ctx.workspace(256, 64, 64, 16);
+                ctx.workspace(256, 64, 64, 16, 64);
             });
         }
         assert_eq!(c.scratch_allocs.load(Ordering::Relaxed), after_warm);

@@ -32,6 +32,8 @@ pub struct ExecPlan {
     pub max_tbuf: usize,
     /// High-water bound for the U-tail scatter map (`map_idx`).
     pub max_map: usize,
+    /// High-water bound for the GEMM B-operand packing scratch (`pbuf`).
+    pub max_pbuf: usize,
 }
 
 impl ExecPlan {
@@ -84,6 +86,7 @@ impl ExecPlan {
         let mut max_cbuf = 0usize;
         let mut max_tbuf = 0usize;
         let mut max_map = 0usize;
+        let mut max_pbuf = 0usize;
         for nd in &sym.nodes {
             let w = nd.width as usize;
             for g in &sym.groups[nd.g_start..nd.g_end] {
@@ -94,6 +97,7 @@ impl ExecPlan {
                     max_cbuf = max_cbuf.max(w * s_nu);
                     max_tbuf = max_tbuf.max(len * len);
                     max_map = max_map.max(s_nu);
+                    max_pbuf = max_pbuf.max(len * s_nu);
                 }
             }
         }
@@ -106,6 +110,7 @@ impl ExecPlan {
             max_cbuf,
             max_tbuf,
             max_map,
+            max_pbuf,
         }
     }
 }
@@ -142,6 +147,7 @@ mod tests {
                 if src.is_super {
                     assert!(nd.width as usize * src.nu() <= plan.max_cbuf);
                     assert!(src.nu() <= plan.max_map);
+                    assert!(g.len as usize * src.nu() <= plan.max_pbuf);
                 }
             }
         }

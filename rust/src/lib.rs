@@ -48,6 +48,7 @@ pub mod testutil;
 /// Common imports for downstream users.
 pub mod prelude {
     pub use crate::coordinator::{FactorStats, SolveStats, Solver, SolverConfig, SymbolicStats};
+    pub use crate::numeric::kernels::KernelTier;
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;
     pub use crate::service::{ServiceConfig, ServiceStats, SolverService};

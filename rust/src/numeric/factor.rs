@@ -14,19 +14,20 @@
 //! Refactorization (`refactor = true`) replays the stored pivot order with
 //! no search — the paper's repeated-solve fast path.
 
-use crate::numeric::dense;
+use crate::numeric::kernels;
 use crate::numeric::select::KernelMode;
 use crate::numeric::{LuFactors, PivotConfig, SharedFactors, Workspace};
 use crate::sparse::csr::Csr;
 use crate::symbolic::Symbolic;
 
 /// Pluggable dense-GEMM backend: the sup-sup kernel calls this for its
-/// level-3 update; [`NativeGemm`] uses the in-crate microkernel, and the
-/// XLA/PJRT runtime provides an AOT-Pallas-artifact implementation
-/// ([`crate::runtime`]).
+/// level-3 update; [`NativeGemm`] uses the in-crate tiered microkernels
+/// ([`crate::numeric::kernels`]), and the XLA/PJRT runtime provides an
+/// AOT-Pallas-artifact implementation ([`crate::runtime`]).
 pub trait GemmBackend: Sync {
-    /// `c[m×n] (ldc=n, zeroed) -= a[m×k] (lda) · b[k×n] (ldb)`. Return
-    /// `false` to fall back to the native microkernel.
+    /// `c[m×n] (ldc=n, zeroed) -= a[m×k] (lda) · b[k×n] (ldb)`. The B
+    /// operand arrives pre-packed contiguous (`ldb == n`). Return `false`
+    /// to fall back to the in-crate microkernel.
     #[allow(clippy::too_many_arguments)]
     fn gemm_sub(
         &self,
@@ -41,7 +42,7 @@ pub trait GemmBackend: Sync {
     ) -> bool;
 }
 
-/// Default backend: the in-crate register-blocked microkernel.
+/// Default backend: the in-crate runtime-dispatched microkernels.
 pub struct NativeGemm;
 
 impl GemmBackend for NativeGemm {
@@ -141,6 +142,7 @@ unsafe fn factor_panel(
     refactor: bool,
     gemm: &dyn GemmBackend,
 ) {
+    let tier = kernels::active_tier();
     let nd = &sym.nodes[id];
     let first = nd.first as usize;
     let w = nd.width as usize;
@@ -192,12 +194,23 @@ unsafe fn factor_panel(
             debug_assert_eq!(k0 + len, s_w, "group must be a tail segment");
             let spanel = sf.panel_ref(g.src as usize);
             // TRSM: finalize L block (panel cols goff..goff+len)
-            dense::trsm_right_upper(
-                panel, stride, goff, w, spanel, sstride, k0, s_nl + k0, len, &mut ws.tbuf,
+            kernels::trsm_right_upper(
+                tier, panel, stride, goff, w, spanel, sstride, k0, s_nl + k0, len, &mut ws.tbuf,
             );
             // GEMM: C = X · U_tail, then scatter-subtract
             if s_nu > 0 {
                 let sucols = &sym.ucols[src.u_start..src.u_end];
+                // Pack the source panel's U-tail sliver (len × s_nu,
+                // strided by sstride) contiguous ONCE per target panel,
+                // so the microkernel streams B linearly instead of
+                // re-striding the source panel for every row block.
+                kernels::pack_rows(
+                    &mut ws.pbuf,
+                    &spanel[k0 * sstride + s_nl + s_w..],
+                    sstride,
+                    len,
+                    s_nu,
+                );
                 // Fast path: both column lists are sorted, so the map is
                 // monotone; if it is also *contiguous* the GEMM can run
                 // directly into the target panel — no cbuf, no scatter.
@@ -208,13 +221,14 @@ unsafe fn factor_panel(
                     // [goff, goff+len) are disjoint ranges of the same
                     // panel rows (goff+len <= nl <= pc0), so the raw-core
                     // accesses never alias element-wise.
-                    dense::gemm_sub_raw(
+                    kernels::gemm_sub_raw(
+                        tier,
                         panel.as_mut_ptr().add(pc0 as usize),
                         stride,
                         panel.as_ptr().add(goff),
                         stride,
-                        spanel.as_ptr().add(k0 * sstride + s_nl + s_w),
-                        sstride,
+                        ws.pbuf.as_ptr(),
+                        s_nu,
                         w,
                         len,
                         s_nu,
@@ -228,20 +242,21 @@ unsafe fn factor_panel(
                     &mut ws.cbuf,
                     &panel[goff..],
                     stride,
-                    &spanel[k0 * sstride + s_nl + s_w..],
-                    sstride,
+                    &ws.pbuf,
+                    s_nu,
                     w,
                     len,
                     s_nu,
                 );
                 if !did {
-                    dense::gemm_sub(
+                    kernels::gemm_sub(
+                        tier,
                         &mut ws.cbuf,
                         s_nu,
                         &panel[goff..],
                         stride,
-                        &spanel[k0 * sstride + s_nl + s_w..],
-                        sstride,
+                        &ws.pbuf,
+                        s_nu,
                         w,
                         len,
                         s_nu,
@@ -326,7 +341,7 @@ unsafe fn factor_panel(
             let f = tail[base + pcol] * inv;
             tail[base + pcol] = f;
             if f != 0.0 {
-                dense::axpy_sub(&mut tail[base + pcol + 1..base + stride], crow, f);
+                kernels::axpy_sub(tier, &mut tail[base + pcol + 1..base + stride], crow, f);
             }
         }
         // keep diag[] mirror for row-kernel sources reading supernode rows

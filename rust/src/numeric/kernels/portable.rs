@@ -1,0 +1,146 @@
+//! Portable tier: register-blocked, autovectorization-friendly kernels
+//! with fixed 4-wide inner shapes. No `std::arch` — this is the fallback
+//! on targets without the AVX2+FMA native tier, and what `HYLU_KERNEL=
+//! portable` selects for A/B runs. LLVM vectorizes the fixed-trip inner
+//! loops with whatever the target baseline offers (SSE2 on stock x86_64,
+//! NEON on aarch64).
+
+/// Raw core of the portable `gemm_sub`: register-tiled 4x16 microkernel.
+/// A 4-row x 16-col C tile lives in registers across the whole k loop;
+/// the j chunk is OUTER so each (k x 16) B sliver stays in L1 across row
+/// blocks.
+///
+/// # Safety
+/// `cp/ap/bp` must be valid for the strided `m x n`, `m x k`, `k x n`
+/// accesses, and the C range must not overlap A or B element-wise.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_sub_raw(
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    // j-chunk OUTER so each (k x 16) B sliver stays in L1 across all
+    // row blocks; C tiles are touched exactly once.
+    let mut j = 0;
+    while j + 16 <= n {
+        let mut i = 0;
+        while i + 4 <= m {
+            let a0 = ap.add(i * lda);
+            let a1 = ap.add((i + 1) * lda);
+            let a2 = ap.add((i + 2) * lda);
+            let a3 = ap.add((i + 3) * lda);
+            let c0 = cp.add(i * ldc + j);
+            let c1 = cp.add((i + 1) * ldc + j);
+            let c2 = cp.add((i + 2) * ldc + j);
+            let c3 = cp.add((i + 3) * ldc + j);
+            let mut t0 = [0.0f64; 16];
+            let mut t1 = [0.0f64; 16];
+            let mut t2 = [0.0f64; 16];
+            let mut t3 = [0.0f64; 16];
+            for q in 0..16 {
+                t0[q] = *c0.add(q);
+                t1[q] = *c1.add(q);
+                t2[q] = *c2.add(q);
+                t3[q] = *c3.add(q);
+            }
+            for p in 0..k {
+                let f0 = *a0.add(p);
+                let f1 = *a1.add(p);
+                let f2 = *a2.add(p);
+                let f3 = *a3.add(p);
+                let brow = bp.add(p * ldb + j);
+                for q in 0..16 {
+                    let bv = *brow.add(q);
+                    t0[q] -= f0 * bv;
+                    t1[q] -= f1 * bv;
+                    t2[q] -= f2 * bv;
+                    t3[q] -= f3 * bv;
+                }
+            }
+            for q in 0..16 {
+                *c0.add(q) = t0[q];
+                *c1.add(q) = t1[q];
+                *c2.add(q) = t2[q];
+                *c3.add(q) = t3[q];
+            }
+            i += 4;
+        }
+        // row remainder (m % 4) for this j chunk
+        while i < m {
+            let arow = ap.add(i * lda);
+            let crow = cp.add(i * ldc + j);
+            let mut t = [0.0f64; 16];
+            for q in 0..16 {
+                t[q] = *crow.add(q);
+            }
+            for p in 0..k {
+                let f = *arow.add(p);
+                let brow = bp.add(p * ldb + j);
+                for q in 0..16 {
+                    t[q] -= f * *brow.add(q);
+                }
+            }
+            for q in 0..16 {
+                *crow.add(q) = t[q];
+            }
+            i += 1;
+        }
+        j += 16;
+    }
+    if j < n {
+        // column remainder: simple row loop. No zero-skip here — the main
+        // strip and the scalar tier don't skip either, so every tier stays
+        // structurally uniform (matters only for non-finite data, but a
+        // column must not behave differently for landing in the remainder)
+        for i in 0..m {
+            let arow = ap.add(i * lda);
+            let crow = cp.add(i * ldc);
+            for p in 0..k {
+                let f = *arow.add(p);
+                let brow = bp.add(p * ldb);
+                for jj in j..n {
+                    *crow.add(jj) -= f * *brow.add(jj);
+                }
+            }
+        }
+    }
+}
+
+/// Dot product with 4 parallel accumulators (vectorization-friendly
+/// reduction shape).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let mut i = 0;
+    let n = a.len().min(b.len());
+    while i + 4 <= n {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    while i < n {
+        s0 += a[i] * b[i];
+        i += 1;
+    }
+    s0 + s1 + s2 + s3
+}
+
+/// `y[0..n] -= f * x[0..n]` (contiguous axpy; the compiler vectorizes the
+/// simple zip loop at the target baseline width).
+#[inline]
+pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy -= f * xx;
+    }
+}

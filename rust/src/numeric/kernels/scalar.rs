@@ -1,0 +1,53 @@
+//! Scalar reference tier: straight-line loops with no register blocking
+//! and no explicit vector widths. This is the baseline the dispatch layer
+//! A/Bs against (`HYLU_KERNEL=scalar`) and the semantics reference the
+//! property tests compare the other tiers to.
+
+/// Raw scalar core of `gemm_sub`: `C[m×n] -= A[m×k] · B[k×n]`, row-major
+/// with leading dimensions.
+///
+/// # Safety
+/// `cp/ap/bp` must be valid for the strided `m×n`, `m×k`, `k×n` accesses,
+/// and the C range must not overlap A or B element-wise.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_sub_raw(
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..m {
+        let arow = ap.add(i * lda);
+        let crow = cp.add(i * ldc);
+        for p in 0..k {
+            let f = *arow.add(p);
+            let brow = bp.add(p * ldb);
+            for jj in 0..n {
+                *crow.add(jj) -= f * *brow.add(jj);
+            }
+        }
+    }
+}
+
+/// Scalar dot product (strict left-to-right accumulation).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y[0..n] -= f * x[0..n]`.
+#[inline]
+pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy -= f * xx;
+    }
+}

@@ -1,0 +1,201 @@
+//! Native x86_64 tier: AVX2+FMA microkernels via `std::arch` intrinsics.
+//!
+//! Every function here carries `#[target_feature(enable = "avx2",
+//! enable = "fma")]` and must only be *called* after runtime detection —
+//! the dispatch layer in [`super`] guards every entry with
+//! `is_x86_feature_detected!`. The GEMM/axpy/dot kernels use fused
+//! multiply-add freely (per-tier determinism only); the lane kernels used
+//! by block substitution deliberately stick to separate multiply+subtract
+//! so every tier — and therefore every batched solve column — stays
+//! bit-identical to the scalar single-RHS path.
+
+use std::arch::x86_64::*;
+
+/// Raw AVX2+FMA core of `gemm_sub`: 4-row x 8-col register tile (8 ymm
+/// accumulators held across the whole k loop), j chunk outer for B-sliver
+/// L1 reuse; remainders fall back to the portable core.
+///
+/// # Safety
+/// AVX2+FMA must be available (runtime-detected by the caller), `cp/ap/bp`
+/// must be valid for the strided `m x n`, `m x k`, `k x n` accesses, and
+/// the C range must not overlap A or B element-wise.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn gemm_sub_raw(
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut j = 0;
+    while j + 8 <= n {
+        let mut i = 0;
+        while i + 4 <= m {
+            let a0 = ap.add(i * lda);
+            let a1 = ap.add((i + 1) * lda);
+            let a2 = ap.add((i + 2) * lda);
+            let a3 = ap.add((i + 3) * lda);
+            let c0 = cp.add(i * ldc + j);
+            let c1 = cp.add((i + 1) * ldc + j);
+            let c2 = cp.add((i + 2) * ldc + j);
+            let c3 = cp.add((i + 3) * ldc + j);
+            let mut t00 = _mm256_loadu_pd(c0);
+            let mut t01 = _mm256_loadu_pd(c0.add(4));
+            let mut t10 = _mm256_loadu_pd(c1);
+            let mut t11 = _mm256_loadu_pd(c1.add(4));
+            let mut t20 = _mm256_loadu_pd(c2);
+            let mut t21 = _mm256_loadu_pd(c2.add(4));
+            let mut t30 = _mm256_loadu_pd(c3);
+            let mut t31 = _mm256_loadu_pd(c3.add(4));
+            for p in 0..k {
+                let brow = bp.add(p * ldb + j);
+                let b0 = _mm256_loadu_pd(brow);
+                let b1 = _mm256_loadu_pd(brow.add(4));
+                let f0 = _mm256_set1_pd(*a0.add(p));
+                t00 = _mm256_fnmadd_pd(f0, b0, t00);
+                t01 = _mm256_fnmadd_pd(f0, b1, t01);
+                let f1 = _mm256_set1_pd(*a1.add(p));
+                t10 = _mm256_fnmadd_pd(f1, b0, t10);
+                t11 = _mm256_fnmadd_pd(f1, b1, t11);
+                let f2 = _mm256_set1_pd(*a2.add(p));
+                t20 = _mm256_fnmadd_pd(f2, b0, t20);
+                t21 = _mm256_fnmadd_pd(f2, b1, t21);
+                let f3 = _mm256_set1_pd(*a3.add(p));
+                t30 = _mm256_fnmadd_pd(f3, b0, t30);
+                t31 = _mm256_fnmadd_pd(f3, b1, t31);
+            }
+            _mm256_storeu_pd(c0, t00);
+            _mm256_storeu_pd(c0.add(4), t01);
+            _mm256_storeu_pd(c1, t10);
+            _mm256_storeu_pd(c1.add(4), t11);
+            _mm256_storeu_pd(c2, t20);
+            _mm256_storeu_pd(c2.add(4), t21);
+            _mm256_storeu_pd(c3, t30);
+            _mm256_storeu_pd(c3.add(4), t31);
+            i += 4;
+        }
+        // row remainder (m % 4): 1x8 tiles
+        while i < m {
+            let arow = ap.add(i * lda);
+            let crow = cp.add(i * ldc + j);
+            let mut t0 = _mm256_loadu_pd(crow);
+            let mut t1 = _mm256_loadu_pd(crow.add(4));
+            for p in 0..k {
+                let brow = bp.add(p * ldb + j);
+                let f = _mm256_set1_pd(*arow.add(p));
+                t0 = _mm256_fnmadd_pd(f, _mm256_loadu_pd(brow), t0);
+                t1 = _mm256_fnmadd_pd(f, _mm256_loadu_pd(brow.add(4)), t1);
+            }
+            _mm256_storeu_pd(crow, t0);
+            _mm256_storeu_pd(crow.add(4), t1);
+            i += 1;
+        }
+        j += 8;
+    }
+    if j < n {
+        // column remainder strip (n % 8): portable core
+        super::portable::gemm_sub_raw(cp.add(j), ldc, ap, lda, bp.add(j), ldb, m, k, n - j);
+    }
+}
+
+/// FMA dot product (two 4-wide accumulators, horizontal sum at the end).
+///
+/// # Safety
+/// AVX2+FMA must be available; `a`/`b` must be valid for `n` reads.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot(a: *const f64, b: *const f64, n: usize) -> f64 {
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(a.add(i)), _mm256_loadu_pd(b.add(i)), acc0);
+        acc1 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(a.add(i + 4)),
+            _mm256_loadu_pd(b.add(i + 4)),
+            acc1,
+        );
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(a.add(i)), _mm256_loadu_pd(b.add(i)), acc0);
+        i += 4;
+    }
+    let acc = _mm256_add_pd(acc0, acc1);
+    let mut tmp = [0.0f64; 4];
+    _mm256_storeu_pd(tmp.as_mut_ptr(), acc);
+    let mut s = (tmp[0] + tmp[1]) + (tmp[2] + tmp[3]);
+    while i < n {
+        s += *a.add(i) * *b.add(i);
+        i += 1;
+    }
+    s
+}
+
+/// FMA `y[0..n] -= f * x[0..n]`.
+///
+/// # Safety
+/// AVX2+FMA must be available; `y`/`x` must be valid for `n` accesses and
+/// must not overlap.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn axpy_sub(y: *mut f64, x: *const f64, n: usize, f: f64) {
+    let vf = _mm256_set1_pd(f);
+    let mut i = 0;
+    while i + 4 <= n {
+        let yy = _mm256_loadu_pd(y.add(i));
+        let xx = _mm256_loadu_pd(x.add(i));
+        _mm256_storeu_pd(y.add(i), _mm256_fnmadd_pd(vf, xx, yy));
+        i += 4;
+    }
+    while i < n {
+        *y.add(i) -= f * *x.add(i);
+        i += 1;
+    }
+}
+
+/// Lane update `dst[0..n] -= m * src[0..n]` with separate multiply and
+/// subtract — bit-identical per lane to the scalar tier (NO fma here; see
+/// the module docs).
+///
+/// # Safety
+/// AVX2 must be available; `dst`/`src` must be valid for `n` accesses and
+/// must not overlap.
+#[target_feature(enable = "avx2")]
+pub unsafe fn lanes_axpy_sub(dst: *mut f64, src: *const f64, n: usize, m: f64) {
+    let vm = _mm256_set1_pd(m);
+    let mut q = 0;
+    while q + 4 <= n {
+        let y = _mm256_loadu_pd(dst.add(q));
+        let x = _mm256_loadu_pd(src.add(q));
+        _mm256_storeu_pd(dst.add(q), _mm256_sub_pd(y, _mm256_mul_pd(vm, x)));
+        q += 4;
+    }
+    while q < n {
+        *dst.add(q) -= m * *src.add(q);
+        q += 1;
+    }
+}
+
+/// Lane divide `dst[0..n] /= piv` (IEEE division, bit-identical to the
+/// scalar tier per lane).
+///
+/// # Safety
+/// AVX2 must be available; `dst` must be valid for `n` accesses.
+#[target_feature(enable = "avx2")]
+pub unsafe fn lanes_div(dst: *mut f64, n: usize, piv: f64) {
+    let vp = _mm256_set1_pd(piv);
+    let mut q = 0;
+    while q + 4 <= n {
+        let y = _mm256_loadu_pd(dst.add(q));
+        _mm256_storeu_pd(dst.add(q), _mm256_div_pd(y, vp));
+        q += 4;
+    }
+    while q < n {
+        *dst.add(q) /= piv;
+        q += 1;
+    }
+}

@@ -1,9 +1,11 @@
 //! Numeric factorization: the paper's hybrid kernels (row-row, sup-row,
 //! sup-sup), supernode diagonal pivoting with perturbation, the sequential
-//! and dual-mode parallel drivers, and the refactorization fast path.
+//! and dual-mode parallel drivers, and the refactorization fast path. The
+//! dense inner loops live in [`kernels`] — tiled microkernels behind a
+//! runtime dispatch layer (scalar / portable / AVX2+FMA native).
 
-pub mod dense;
 pub mod factor;
+pub mod kernels;
 pub mod parallel;
 pub mod select;
 
@@ -108,6 +110,9 @@ pub struct Workspace {
     pub tbuf: Vec<f64>,
     /// Scatter map scratch (per-group U-tail -> panel column).
     pub map_idx: Vec<i32>,
+    /// GEMM B-operand packing scratch (source-panel U-tail sliver,
+    /// gathered contiguous once per target panel).
+    pub pbuf: Vec<f64>,
 }
 
 impl Workspace {
@@ -119,6 +124,7 @@ impl Workspace {
             cbuf: Vec::new(),
             tbuf: Vec::new(),
             map_idx: Vec::new(),
+            pbuf: Vec::new(),
         }
     }
 
@@ -141,10 +147,16 @@ impl Workspace {
         true
     }
 
-    /// Pre-reserve the kernel scratch vectors (`cbuf`/`tbuf`/`map_idx`) to
-    /// the given capacities so the numeric kernels never reallocate
-    /// mid-factorization. Returns `true` when any buffer grew.
-    pub fn reserve_kernel(&mut self, cbuf: usize, tbuf: usize, map_idx: usize) -> bool {
+    /// Pre-reserve the kernel scratch vectors (`cbuf`/`tbuf`/`map_idx`/
+    /// `pbuf`) to the given capacities so the numeric kernels never
+    /// reallocate mid-factorization. Returns `true` when any buffer grew.
+    pub fn reserve_kernel(
+        &mut self,
+        cbuf: usize,
+        tbuf: usize,
+        map_idx: usize,
+        pbuf: usize,
+    ) -> bool {
         let mut grew = false;
         if self.cbuf.capacity() < cbuf {
             self.cbuf.reserve(cbuf - self.cbuf.len());
@@ -156,6 +168,10 @@ impl Workspace {
         }
         if self.map_idx.capacity() < map_idx {
             self.map_idx.reserve(map_idx - self.map_idx.len());
+            grew = true;
+        }
+        if self.pbuf.capacity() < pbuf {
+            self.pbuf.reserve(pbuf - self.pbuf.len());
             grew = true;
         }
         grew

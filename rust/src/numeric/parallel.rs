@@ -83,7 +83,8 @@ pub fn factor_parallel_pooled(
     pool.run(
         || done.reset(),
         |t, ctx| {
-            let ws = ctx.workspace(sym.n, plan.max_cbuf, plan.max_tbuf, plan.max_map);
+            let ws =
+                ctx.workspace(sym.n, plan.max_cbuf, plan.max_tbuf, plan.max_map, plan.max_pbuf);
             if sequential {
                 if t == 0 {
                     for id in 0..sym.nodes.len() {

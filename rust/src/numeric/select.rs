@@ -1,8 +1,14 @@
 //! Kernel selection — the paper's "smart kernel selection strategy based on
 //! the matrix sparsity" (§2.1, last sentence): symbolic factorization
 //! produces flop counts and supernode statistics, and HYLU picks the numeric
-//! kernel from them.
+//! kernel from them. The flop crossovers are no longer fixed constants:
+//! they are calibrated once per process from the microkernel throughput
+//! probe ([`crate::numeric::kernels::probe`]), so a machine whose dense
+//! tier beats the scalar reference by more than the reference tuning
+//! assumed routes borderline matrices to the dense kernels sooner (and a
+//! scalar-dispatch run routes them later).
 
+use crate::numeric::kernels;
 use crate::symbolic::Symbolic;
 
 /// Which numeric kernel family drives the factorization.
@@ -35,8 +41,16 @@ impl std::fmt::Display for KernelMode {
 pub struct SelectionStats {
     /// Fraction of rows inside supernodes (width >= 2).
     pub coverage: f64,
-    /// Mean width of supernodes.
+    /// Mean node width across ALL nodes — supernode panels *and* the
+    /// singleton trailing columns between/after them. (The panels-only
+    /// mean lives in [`SelectionStats::avg_panel_width`]; reporting it as
+    /// "the" average width overstated typical width on circuit-class
+    /// matrices, where a handful of wide panels sit in a sea of
+    /// singletons.)
     pub avg_super_width: f64,
+    /// Mean width over supernode panels only — the wide-panel signal
+    /// that drives the level-3 escape in [`select_kernel`].
+    pub avg_panel_width: f64,
     /// Factorization flops per row.
     pub flops_per_row: f64,
     /// Factorization flops per stored LU entry (compute density).
@@ -55,7 +69,10 @@ pub fn selection_stats(sym: &Symbolic) -> SelectionStats {
         .sum();
     SelectionStats {
         coverage: sym.supernode_coverage,
-        avg_super_width: if supers == 0 {
+        // every row belongs to exactly one node, so the node widths sum
+        // to n and the all-node mean is n / |nodes|
+        avg_super_width: n / sym.nodes.len().max(1) as f64,
+        avg_panel_width: if supers == 0 {
             1.0
         } else {
             rows_in_supers as f64 / supers as f64
@@ -65,19 +82,30 @@ pub fn selection_stats(sym: &Symbolic) -> SelectionStats {
     }
 }
 
+/// Flop-per-row crossover below which (with narrow panels) the scalar
+/// row-row kernel wins, at the reference dense advantage.
+const ROW_ROW_FLOPS: f64 = 2500.0;
+/// Flop-per-row crossover below which (with narrow panels) the level-2
+/// sup-row kernel wins over sup-sup, at the reference dense advantage.
+const SUP_ROW_FLOPS: f64 = 20_000.0;
+
 /// Pick the kernel for a symbolic analysis.
 ///
-/// Thresholds are tuned against measured factor times on the synthetic
-/// suite (EXPERIMENTS.md, ablation 1): extremely sparse low-flop matrices
-/// (circuit class: ~1.9k flops/row) want the scalar kernel; narrow
-/// supernodes with moderate compute want sup-row; wide supernodes or
-/// heavy compute (bands, KKT, 3-D meshes, power networks) want the
-/// level-3 sup-sup kernel.
+/// The base thresholds were tuned against measured factor times on the
+/// synthetic suite (EXPERIMENTS.md, ablation 1): extremely sparse
+/// low-flop matrices (circuit class: ~1.9k flops/row) want the scalar
+/// kernel; narrow supernodes with moderate compute want sup-row; wide
+/// supernodes or heavy compute (bands, KKT, 3-D meshes, power networks)
+/// want the level-3 sup-sup kernel. The flop crossovers are scaled by
+/// [`kernels::calibration`] — a one-shot microkernel throughput probe —
+/// instead of being trusted verbatim on every machine: the faster the
+/// dense tier actually is here, the earlier the dense kernels pay off.
 pub fn select_kernel(sym: &Symbolic) -> KernelMode {
     let s = selection_stats(sym);
-    if s.flops_per_row < 2500.0 && s.avg_super_width < 8.0 {
+    let cal = kernels::calibration();
+    if s.flops_per_row < ROW_ROW_FLOPS * cal && s.avg_panel_width < 8.0 {
         KernelMode::RowRow
-    } else if s.avg_super_width < 3.0 && s.flops_per_row < 20_000.0 {
+    } else if s.avg_panel_width < 3.0 && s.flops_per_row < SUP_ROW_FLOPS * cal {
         KernelMode::SupRow
     } else {
         KernelMode::SupSup
@@ -134,6 +162,49 @@ mod tests {
         let s = selection_stats(&sym);
         assert!(s.coverage >= 0.0 && s.coverage <= 1.0);
         assert!(s.avg_super_width >= 1.0);
+        assert!(s.avg_panel_width >= 1.0);
         assert!(s.flops_per_row > 0.0);
+    }
+
+    #[test]
+    fn mean_width_counts_singleton_trailing_columns() {
+        // Regression: banded under Exact merge yields one wide panel at
+        // the dense trailing corner plus a long run of singleton columns.
+        // The all-node mean must be dragged down by those singletons (the
+        // old accounting averaged panels only and reported ~25 here),
+        // while the panels-only mean keeps carrying the wide-panel signal
+        // that routes this matrix to the level-3 kernel.
+        let a = gen::banded(600, 24, 2);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 64 }, 4);
+        let s = selection_stats(&sym);
+        assert!(
+            s.avg_panel_width > 8.0,
+            "panel mean lost the wide-panel signal: {}",
+            s.avg_panel_width
+        );
+        assert!(
+            s.avg_super_width < 2.0,
+            "all-node mean must count singleton columns: {}",
+            s.avg_super_width
+        );
+        // the two agree exactly when every row lives in a panel
+        let d = gen::banded(16, 15, 1); // fully dense block => one panel
+        let dsym = analyze_pattern(&d, MergePolicy::Forced { min_width: 16, max_width: 16 }, 4);
+        let ds = selection_stats(&dsym);
+        if dsym.nodes.len() == 1 {
+            assert!((ds.avg_super_width - ds.avg_panel_width).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn calibration_stays_in_band_and_selection_is_stable() {
+        // the probe-scaled thresholds must never swing selection outside
+        // the clamp band, whatever this testbed measures
+        let cal = kernels::calibration();
+        assert!((0.9..=1.5).contains(&cal), "calibration {cal}");
+        // repeated calls see the same cached probe => same selection
+        let a = gen::banded(600, 24, 2);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 64 }, 4);
+        assert_eq!(select_kernel(&sym), select_kernel(&sym));
     }
 }

@@ -219,11 +219,20 @@ impl GemmBackend for XlaGemm {
         for i in 0..m {
             ac[i * k..(i + 1) * k].copy_from_slice(&a[i * lda..i * lda + k]);
         }
-        let mut bc = vec![0.0f64; k * n];
-        for p in 0..k {
-            bc[p * n..(p + 1) * n].copy_from_slice(&b[p * ldb..p * ldb + n]);
-        }
-        match self.gemm_update(c, &ac, &bc, m, k, n) {
+        // B now arrives pre-packed contiguous (ldb == n) from the factor
+        // kernel's pack_rows; only re-compact if a caller ever strides it
+        let bc_storage;
+        let bc: &[f64] = if ldb == n {
+            &b[..k * n]
+        } else {
+            let mut tmp = vec![0.0f64; k * n];
+            for p in 0..k {
+                tmp[p * n..(p + 1) * n].copy_from_slice(&b[p * ldb..p * ldb + n]);
+            }
+            bc_storage = tmp;
+            &bc_storage
+        };
+        match self.gemm_update(c, &ac, bc, m, k, n) {
             Ok(res) => {
                 c.copy_from_slice(&res[..m * n]);
                 true

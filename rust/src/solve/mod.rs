@@ -4,6 +4,7 @@
 pub mod substitution;
 
 pub use substitution::{
-    backward, backward_block, backward_parallel, backward_parallel_pooled, forward,
-    forward_block, forward_parallel, forward_parallel_pooled, solve_block_parallel_pooled,
+    backward, backward_block, backward_block_with, backward_parallel, backward_parallel_pooled,
+    forward, forward_block, forward_block_with, forward_parallel, forward_parallel_pooled,
+    solve_block_parallel_pooled,
 };

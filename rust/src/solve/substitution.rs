@@ -15,8 +15,11 @@
 //! pool per call for standalone use. The block (`*_block`) variants sweep
 //! `k` right-hand sides laid out as a dense row-major `n×k` matrix in a
 //! single pass — one pool dispatch covers forward *and* backward over all
-//! `k` columns. Per column they perform exactly the same operations in
-//! exactly the same order as the single-RHS code, so a block solve is
+//! `k` columns, with the per-node inner loops vectorized across the `k`
+//! lanes by the [`crate::numeric::kernels`] lane kernels (wide supernode
+//! diagonal blocks route through the panel TRSM+GEMM shape). Per column
+//! they perform exactly the same operations in exactly the same order as
+//! the single-RHS code — on every dispatch tier — so a block solve is
 //! bit-identical to `k` independent solves.
 //!
 //! All routines operate in factor-row space: the caller (coordinator) has
@@ -25,6 +28,7 @@
 use std::sync::Barrier;
 
 use crate::exec::{ExecPlan, WorkerPool};
+use crate::numeric::kernels::{self, KernelTier};
 use crate::numeric::LuFactors;
 use crate::symbolic::{NodeSym, Symbolic};
 
@@ -89,9 +93,13 @@ fn backward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &m
     }
 }
 
-/// Forward solve for one node over a dense row-major `n×k` RHS block.
+/// Forward solve for one node over a dense row-major `n×k` RHS block,
+/// vectorized across the `k` lanes ([`kernels::lanes_axpy_sub`]).
 /// Column-for-column identical (same operations, same order) to
-/// [`forward_node`].
+/// [`forward_node`] on every dispatch tier — the lane kernels keep each
+/// lane's multiply/subtract sequence exactly the scalar one. Supernodes
+/// at least [`kernels::BLOCK_PANEL_MIN_W`] wide route through the panel
+/// TRSM+GEMM kernel, which preserves the same per-lane order.
 #[inline]
 fn forward_node_block(
     nd: &NodeSym,
@@ -100,6 +108,7 @@ fn forward_node_block(
     id: usize,
     y: &mut [f64],
     k: usize,
+    tier: KernelTier,
 ) {
     let first = nd.first as usize;
     let w = nd.width as usize;
@@ -108,41 +117,39 @@ fn forward_node_block(
     if nd.is_super {
         let stride = nd.panel_width();
         let p = fac.panel(id);
+        if w >= kernels::BLOCK_PANEL_MIN_W {
+            kernels::forward_panel_block(tier, y, k, first, w, stride, p, lcols);
+            return;
+        }
         for r in 0..w {
             let base = r * stride;
-            let row = (first + r) * k;
+            // rows before `first + r` are sources only (lcols < first,
+            // in-block rows < r): split keeps the borrows disjoint
+            let (done, rest) = y.split_at_mut((first + r) * k);
+            let row = &mut rest[..k];
             for (c, &j) in lcols.iter().enumerate() {
-                let m = p[base + c];
                 let src = j as usize * k;
-                for q in 0..k {
-                    let t = m * y[src + q];
-                    y[row + q] -= t;
-                }
+                kernels::lanes_axpy_sub(tier, row, &done[src..src + k], p[base + c]);
             }
             for kk in 0..r {
-                let m = p[base + nl + kk];
                 let src = (first + kk) * k;
-                for q in 0..k {
-                    let t = m * y[src + q];
-                    y[row + q] -= t;
-                }
+                kernels::lanes_axpy_sub(tier, row, &done[src..src + k], p[base + nl + kk]);
             }
         }
     } else {
-        let row = first * k;
+        let (done, rest) = y.split_at_mut(first * k);
+        let row = &mut rest[..k];
         for (c, &j) in lcols.iter().enumerate() {
-            let m = fac.lvals[nd.l_start + c];
             let src = j as usize * k;
-            for q in 0..k {
-                let t = m * y[src + q];
-                y[row + q] -= t;
-            }
+            kernels::lanes_axpy_sub(tier, row, &done[src..src + k], fac.lvals[nd.l_start + c]);
         }
     }
 }
 
-/// Backward solve for one node over a dense row-major `n×k` RHS block.
-/// Column-for-column identical to [`backward_node`].
+/// Backward solve for one node over a dense row-major `n×k` RHS block,
+/// vectorized across the `k` lanes. Column-for-column identical to
+/// [`backward_node`] on every dispatch tier; wide supernodes route
+/// through the panel TRSM+GEMM kernel (see [`forward_node_block`]).
 #[inline]
 fn backward_node_block(
     nd: &NodeSym,
@@ -151,6 +158,7 @@ fn backward_node_block(
     id: usize,
     y: &mut [f64],
     k: usize,
+    tier: KernelTier,
 ) {
     let first = nd.first as usize;
     let w = nd.width as usize;
@@ -159,45 +167,35 @@ fn backward_node_block(
     if nd.is_super {
         let stride = nd.panel_width();
         let p = fac.panel(id);
+        if w >= kernels::BLOCK_PANEL_MIN_W {
+            kernels::backward_panel_block(tier, y, k, first, w, nl, stride, p, ucols);
+            return;
+        }
         for r in (0..w).rev() {
             let base = r * stride;
-            let row = (first + r) * k;
             let utail = &p[base + nl + w..base + stride];
+            // rows after `first + r` are sources only (ucols >= first + w,
+            // in-block rows > r): split keeps the borrows disjoint
+            let (head, rest) = y.split_at_mut((first + r + 1) * k);
+            let row = &mut head[(first + r) * k..];
             for (c, &j) in ucols.iter().enumerate() {
-                let m = utail[c];
-                let src = j as usize * k;
-                for q in 0..k {
-                    let t = m * y[src + q];
-                    y[row + q] -= t;
-                }
+                let src = (j as usize - first - r - 1) * k;
+                kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], utail[c]);
             }
             for kk in r + 1..w {
-                let m = p[base + nl + kk];
-                let src = (first + kk) * k;
-                for q in 0..k {
-                    let t = m * y[src + q];
-                    y[row + q] -= t;
-                }
+                let src = (kk - r - 1) * k;
+                kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], p[base + nl + kk]);
             }
-            let piv = p[base + nl + r];
-            for q in 0..k {
-                y[row + q] /= piv;
-            }
+            kernels::lanes_div(tier, row, p[base + nl + r]);
         }
     } else {
-        let row = first * k;
+        let (head, rest) = y.split_at_mut((first + 1) * k);
+        let row = &mut head[first * k..];
         for (c, &j) in ucols.iter().enumerate() {
-            let m = fac.uvals[nd.u_start + c];
-            let src = j as usize * k;
-            for q in 0..k {
-                let t = m * y[src + q];
-                y[row + q] -= t;
-            }
+            let src = (j as usize - first - 1) * k;
+            kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], fac.uvals[nd.u_start + c]);
         }
-        let piv = fac.diag[first];
-        for q in 0..k {
-            y[row + q] /= piv;
-        }
+        kernels::lanes_div(tier, row, fac.diag[first]);
     }
 }
 
@@ -215,17 +213,48 @@ pub fn backward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
     }
 }
 
-/// Sequential block forward substitution over a row-major `n×k` block.
+/// Sequential block forward substitution over a row-major `n×k` block
+/// (active dispatch tier).
 pub fn forward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+    forward_block_with(kernels::active_tier(), sym, fac, y, k);
+}
+
+/// Sequential block backward substitution over a row-major `n×k` block
+/// (active dispatch tier).
+pub fn backward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+    backward_block_with(kernels::active_tier(), sym, fac, y, k);
+}
+
+/// [`forward_block`] on an explicit dispatch tier (A/B benching; every
+/// tier produces bit-identical blocks).
+pub fn forward_block_with(
+    tier: KernelTier,
+    sym: &Symbolic,
+    fac: &LuFactors,
+    y: &mut [f64],
+    k: usize,
+) {
+    if k == 0 {
+        return;
+    }
     for (id, nd) in sym.nodes.iter().enumerate() {
-        forward_node_block(nd, sym, fac, id, y, k);
+        forward_node_block(nd, sym, fac, id, y, k, tier);
     }
 }
 
-/// Sequential block backward substitution over a row-major `n×k` block.
-pub fn backward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+/// [`backward_block`] on an explicit dispatch tier.
+pub fn backward_block_with(
+    tier: KernelTier,
+    sym: &Symbolic,
+    fac: &LuFactors,
+    y: &mut [f64],
+    k: usize,
+) {
+    if k == 0 {
+        return;
+    }
     for (id, nd) in sym.nodes.iter().enumerate().rev() {
-        backward_node_block(nd, sym, fac, id, y, k);
+        backward_node_block(nd, sym, fac, id, y, k, tier);
     }
 }
 
@@ -342,6 +371,10 @@ pub fn solve_block_parallel_pooled(
         backward_block(sym, fac, y, k);
         return;
     }
+    if k == 0 {
+        return;
+    }
+    let tier = kernels::active_tier();
     let mut plan_storage = None;
     let plan = plan.for_width(sym, pool.nthreads(), &mut plan_storage);
     let yp = YPtr(y.as_mut_ptr());
@@ -358,14 +391,22 @@ pub fn solve_block_parallel_pooled(
                 let ids = sched.nodes_at(lv);
                 let (s, e) = chunks[t];
                 for &id in &ids[s..e] {
-                    forward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                    forward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k, tier);
                 }
                 barrier.wait();
             }
             if t == 0 {
                 for lv in sched.bulk_levels..sched.nlevels() {
                     for &id in sched.nodes_at(lv) {
-                        forward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                        forward_node_block(
+                            &sym.nodes[id as usize],
+                            sym,
+                            fac,
+                            id as usize,
+                            y,
+                            k,
+                            tier,
+                        );
                     }
                 }
             }
@@ -376,7 +417,7 @@ pub fn solve_block_parallel_pooled(
                 let ids = &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]];
                 let (s, e) = chunks[t];
                 for &id in &ids[s..e] {
-                    backward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                    backward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k, tier);
                 }
                 barrier.wait();
             }
@@ -384,7 +425,15 @@ pub fn solve_block_parallel_pooled(
                 for lv in sched.rbulk_levels..nrlev {
                     for &id in &sched.rlevel_nodes[sched.rlevel_ptr[lv]..sched.rlevel_ptr[lv + 1]]
                     {
-                        backward_node_block(&sym.nodes[id as usize], sym, fac, id as usize, y, k);
+                        backward_node_block(
+                            &sym.nodes[id as usize],
+                            sym,
+                            fac,
+                            id as usize,
+                            y,
+                            k,
+                            tier,
+                        );
                     }
                 }
             }
@@ -542,6 +591,26 @@ mod tests {
             for i in 0..n {
                 assert_eq!(yb[i * k + q], y[i], "col {q} row {i}");
             }
+        }
+        // every dispatch tier must reproduce the block bit-for-bit (the
+        // lane kernels never fuse or reorder per-lane operations)
+        for tier in [
+            crate::numeric::kernels::KernelTier::Scalar,
+            crate::numeric::kernels::KernelTier::Portable,
+            crate::numeric::kernels::KernelTier::Native,
+        ] {
+            if !tier.available() {
+                continue;
+            }
+            let mut yt = vec![0.0; n * k];
+            for i in 0..n {
+                for (q, col) in cols.iter().enumerate() {
+                    yt[i * k + q] = col[i];
+                }
+            }
+            forward_block_with(tier, &sym, &fac, &mut yt, k);
+            backward_block_with(tier, &sym, &fac, &mut yt, k);
+            assert_eq!(yt, yb, "tier {tier} block mismatch");
         }
     }
 }

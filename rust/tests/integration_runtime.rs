@@ -7,7 +7,7 @@
 //! clone.
 
 use hylu::coordinator::{Solver, SolverConfig};
-use hylu::numeric::dense;
+use hylu::numeric::kernels;
 use hylu::runtime::XlaGemm;
 use hylu::sparse::gen;
 use hylu::testutil::Prng;
@@ -39,7 +39,7 @@ fn xla_gemm_matches_native_microkernel() {
         let c: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
         let got = xla.gemm_update(&c, &a, &b, m, k, n).expect("xla gemm");
         let mut want = c.clone();
-        dense::gemm_sub(&mut want, n, &a, k, &b, n, m, k, n);
+        kernels::gemm_sub(kernels::active_tier(), &mut want, n, &a, k, &b, n, m, k, n);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-10, "{m}x{k}x{n}: {g} vs {w}");
         }

@@ -1,0 +1,162 @@
+//! Dispatch-tier equivalence: the scalar, portable and native microkernel
+//! tiers must agree on random panels within an ulp-scaled tolerance, the
+//! lane kernels must agree bit-for-bit, and the batched `solve_many` path
+//! (which rides the lane-major tiling and the panel TRSM+GEMM route) must
+//! keep matching independent single-RHS solves exactly.
+
+use hylu::coordinator::{Solver, SolverConfig};
+use hylu::numeric::kernels::{self, KernelTier};
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+
+fn available_tiers() -> Vec<KernelTier> {
+    [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
+        .into_iter()
+        .filter(|t| t.available())
+        .collect()
+}
+
+#[test]
+fn property_gemm_tiers_agree_within_ulp_scaled_tolerance() {
+    let mut rng = Prng::new(21);
+    for round in 0..30 {
+        let m = rng.range(1, 40);
+        let k = rng.range(1, 40);
+        let n = rng.range(1, 70);
+        let lda = k + rng.range(0, 5);
+        let ldb = n + rng.range(0, 5);
+        let ldc = n + rng.range(0, 5);
+        let a: Vec<f64> = (0..m * lda).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * ldb).map(|_| rng.normal()).collect();
+        let c0: Vec<f64> = (0..m * ldc).map(|_| rng.normal()).collect();
+        // per-element magnitude bound sum_p |a||b| drives the ulp scale
+        let mut bound = 0.0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = c0[i * ldc + j].abs();
+                for p in 0..k {
+                    s += (a[i * lda + p] * b[p * ldb + j]).abs();
+                }
+                bound = bound.max(s);
+            }
+        }
+        // each tier's error vs the exact product is bounded by ~k ulps of
+        // the magnitude sum; allow both sides plus slack
+        let tol = 4.0 * (k as f64 + 4.0) * f64::EPSILON * bound;
+        let mut ref_c: Option<Vec<f64>> = None;
+        for tier in available_tiers() {
+            let mut c = c0.clone();
+            kernels::gemm_sub(tier, &mut c, ldc, &a, lda, &b, ldb, m, k, n);
+            match &ref_c {
+                None => ref_c = Some(c),
+                Some(want) => {
+                    for (x, y) in c.iter().zip(want) {
+                        assert!(
+                            (x - y).abs() <= tol,
+                            "round {round} tier {tier} ({m},{k},{n}): {x} vs {y} tol {tol}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn property_trsm_tiers_agree_within_tolerance() {
+    let mut rng = Prng::new(22);
+    for &len in &[4usize, 17, 48, 80] {
+        let m = rng.range(2, 12);
+        let ldu = len + 3;
+        let mut u = vec![0.0; (len + 2) * ldu];
+        for r in 0..len {
+            for c in r..len {
+                // strongly diagonally dominant => O(1) condition, so the
+                // cross-tier tolerance below stays ulp-scaled
+                u[(2 + r) * ldu + 1 + c] = if r == c {
+                    2.0 + rng.uniform()
+                } else {
+                    rng.normal() / len as f64
+                };
+            }
+        }
+        let ldx = len + 1;
+        let x0: Vec<f64> = (0..m * ldx).map(|_| rng.normal()).collect();
+        let mut ref_x: Option<Vec<f64>> = None;
+        for tier in available_tiers() {
+            let mut x = x0.clone();
+            let mut scratch = Vec::new();
+            kernels::trsm_right_upper(tier, &mut x, ldx, 0, m, &u, ldu, 2, 1, len, &mut scratch);
+            match &ref_x {
+                None => ref_x = Some(x),
+                Some(want) => {
+                    let scale = want.iter().fold(1.0f64, |s, v| s.max(v.abs()));
+                    let tol = (len as f64 + 2.0) * 8.0 * f64::EPSILON * scale;
+                    for (g, w) in x.iter().zip(want) {
+                        assert!(
+                            (g - w).abs() <= tol,
+                            "tier {tier} len {len}: {g} vs {w} tol {tol}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn solve_many_columns_match_single_rhs_on_wide_supernodes() {
+    // mesh + forced-wide supernodes: the panel TRSM+GEMM substitution
+    // route must keep batched columns bit-identical to scalar solves
+    let a = gen::grid2d(20, 20);
+    let solver = Solver::new(SolverConfig {
+        threads: 2,
+        repeated: true, // relaxed supernodes => wide panels
+        parallel_solve_min_n: 0,
+        ..SolverConfig::default()
+    });
+    let an = solver.analyze(&a).unwrap();
+    let f = solver.factor(&a, &an).unwrap();
+    let mut rng = Prng::new(23);
+    for k in [1usize, 4, 16] {
+        let bs: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..a.n).map(|_| rng.normal()).collect())
+            .collect();
+        let xs = solver.solve_many(&a, &an, &f, &bs).unwrap();
+        for (q, b) in bs.iter().enumerate() {
+            let x = solver.solve(&a, &an, &f, b).unwrap();
+            assert_eq!(xs[q], x, "k={k} column {q} diverged from the scalar solve");
+        }
+    }
+}
+
+#[test]
+fn factor_solve_roundtrip_is_correct_on_every_forced_mode() {
+    // end-to-end guard with the dispatched kernels underneath: all three
+    // factor kernel families still invert the matrix
+    use hylu::numeric::select::KernelMode;
+    let a = gen::power_network(250, 9);
+    let xt: Vec<f64> = (0..a.n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+    let mut b = vec![0.0; a.n];
+    a.matvec(&xt, &mut b);
+    for mode in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
+        let solver = Solver::new(SolverConfig {
+            kernel: Some(mode),
+            ..SolverConfig::default()
+        });
+        let an = solver.analyze(&a).unwrap();
+        let f = solver.factor(&a, &an).unwrap();
+        let x = solver.solve(&a, &an, &f, &b).unwrap();
+        let err = hylu::testutil::max_abs_diff(&x, &xt);
+        assert!(err < 1e-7, "{mode}: err {err}");
+    }
+}
+
+#[test]
+fn probe_reports_and_calibration_band() {
+    let p = kernels::probe();
+    assert!(p.gemm_gflops.is_finite() && p.gemm_gflops > 0.0);
+    assert!(p.scalar_gflops.is_finite() && p.scalar_gflops > 0.0);
+    let cal = kernels::calibration();
+    assert!((0.9..=1.5).contains(&cal));
+}
