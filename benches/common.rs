@@ -7,8 +7,8 @@
 //! - `HYLU_BENCH_FAST=1` — run the 6-matrix smoke subset instead of all 37.
 //! - `HYLU_BENCH_THREADS=N` — thread count (default: all cores).
 
+use hylu::api::{Solver, SolverBuilder};
 use hylu::bench_suite::{suite37, suite_small, BenchMatrix};
-use hylu::coordinator::{Solver, SolverConfig};
 use hylu::sparse::csr::Csr;
 
 /// Suite selected by env.
@@ -30,21 +30,20 @@ pub fn threads() -> usize {
 
 /// HYLU solver under benchmark configuration.
 pub fn hylu_solver(repeated: bool) -> Solver {
-    Solver::new(SolverConfig {
-        threads: threads(),
-        repeated,
-        ..SolverConfig::default()
-    })
+    let b = SolverBuilder::new().threads(threads());
+    let b = if repeated { b.repeated() } else { b.one_shot() };
+    b.build().expect("hylu solver")
 }
 
 /// The PARDISO-like comparator.
 pub fn baseline_solver() -> Solver {
-    Solver::new(hylu::baseline::pardiso_like(threads()))
+    Solver::from_config(hylu::baseline::pardiso_like(threads())).expect("baseline solver")
 }
 
 /// The KLU-like comparator (used by the ablation bench).
+#[allow(dead_code)]
 pub fn klu_solver() -> Solver {
-    Solver::new(hylu::baseline::klu_like(threads()))
+    Solver::from_config(hylu::baseline::klu_like(threads())).expect("klu solver")
 }
 
 /// Right-hand side with known solution 1.

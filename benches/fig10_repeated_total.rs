@@ -23,17 +23,15 @@ fn main() {
         let b = common::rhs(&a);
         let hylu = common::hylu_solver(true);
         let base = common::baseline_solver();
-        let an_h = hylu.analyze(&a).expect("analyze");
-        let an_b = base.analyze(&a).expect("analyze");
-        let mut f_h = hylu.factor(&a, &an_h).expect("factor");
-        let mut f_b = base.factor(&a, &an_b).expect("factor");
+        let mut sys_h = hylu.analyze(&a).expect("analyze").factor().expect("factor");
+        let mut sys_b = base.analyze(&a).expect("analyze").factor().expect("factor");
         let t_h = common::best(3, || {
-            hylu.refactor(&a, &an_h, &mut f_h).expect("refactor");
-            let _ = hylu.solve(&a, &an_h, &f_h, &b).expect("solve");
+            sys_h.refactor(&a.vals).expect("refactor");
+            let _ = sys_h.solve(&b).expect("solve");
         });
         let t_b = common::best(3, || {
-            base.refactor(&a, &an_b, &mut f_b).expect("refactor");
-            let _ = base.solve(&a, &an_b, &f_b, &b).expect("solve");
+            sys_b.refactor(&a.vals).expect("refactor");
+            let _ = sys_b.solve(&b).expect("solve");
         });
         total += 1;
         if t_h < t_b {

@@ -28,13 +28,11 @@ fn main() {
         let mut base_cfg = hylu::baseline::pardiso_like(common::threads());
         base_cfg.refine_max_iter = 0;
         base_cfg.pivot.supernode_pivoting = false;
-        let base = hylu::coordinator::Solver::new(base_cfg);
-        let an_h = hylu.analyze(&a).expect("analyze");
-        let an_b = base.analyze(&a).expect("analyze");
-        let f_h = hylu.factor(&a, &an_h).expect("factor");
-        let f_b = base.factor(&a, &an_b).expect("factor");
-        let (_, st_h) = hylu.solve_with_stats(&a, &an_h, &f_h, &b).expect("solve");
-        let x_b = base.solve(&a, &an_b, &f_b, &b).expect("solve");
+        let base = hylu::api::Solver::from_config(base_cfg).expect("baseline solver");
+        let sys_h = hylu.analyze(&a).expect("analyze").factor().expect("factor");
+        let sys_b = base.analyze(&a).expect("analyze").factor().expect("factor");
+        let (_, st_h) = sys_h.solve_with_stats(&b).expect("solve");
+        let x_b = sys_b.solve(&b).expect("solve");
         let r_b = a.relative_residual(&x_b, &b);
         let ratio = r_b / st_h.residual.max(1e-300);
         ratios.push(ratio.max(1e-6)); // clamp for geomean sanity

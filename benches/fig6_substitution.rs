@@ -21,17 +21,15 @@ fn main() {
         let b = common::rhs(&a);
         let hylu = common::hylu_solver(false);
         let base = common::baseline_solver();
-        let an_h = hylu.analyze(&a).expect("analyze");
-        let an_b = base.analyze(&a).expect("analyze");
-        let f_h = hylu.factor(&a, &an_h).expect("factor");
-        let f_b = base.factor(&a, &an_b).expect("factor");
+        let sys_h = hylu.analyze(&a).expect("analyze").factor().expect("factor");
+        let sys_b = base.analyze(&a).expect("analyze").factor().expect("factor");
         let mut iters = 0;
         let t_h = common::best(3, || {
-            let (_, st) = hylu.solve_with_stats(&a, &an_h, &f_h, &b).expect("solve");
+            let (_, st) = sys_h.solve_with_stats(&b).expect("solve");
             iters = st.refine_iters;
         });
         let t_b = common::best(3, || {
-            let _ = base.solve(&a, &an_b, &f_b, &b).expect("solve");
+            let _ = sys_b.solve(&b).expect("solve");
         });
         table.row(
             vec![

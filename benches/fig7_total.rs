@@ -6,15 +6,14 @@
 #[path = "common.rs"]
 mod common;
 
+use hylu::api::Solver;
 use hylu::bench_harness::{environment, fmt_time, Table};
-use hylu::coordinator::Solver;
 use hylu::sparse::csr::Csr;
 
 fn total_once(s: &Solver, a: &Csr, b: &[f64]) -> f64 {
     let t = std::time::Instant::now();
-    let an = s.analyze(a).expect("analyze");
-    let f = s.factor(a, &an).expect("factor");
-    let _ = s.solve(a, &an, &f, b).expect("solve");
+    let sys = s.analyze(a).expect("analyze").factor().expect("factor");
+    let _ = sys.solve(b).expect("solve");
     t.elapsed().as_secs_f64()
 }
 

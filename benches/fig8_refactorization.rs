@@ -19,22 +19,20 @@ fn main() {
         let a = (bm.build)();
         let hylu = common::hylu_solver(true); // repeated mode
         let base = common::baseline_solver();
-        let an_h = hylu.analyze(&a).expect("analyze");
-        let an_b = base.analyze(&a).expect("analyze");
-        let mut f_h = hylu.factor(&a, &an_h).expect("factor");
-        let mut f_b = base.factor(&a, &an_b).expect("factor");
+        let mut sys_h = hylu.analyze(&a).expect("analyze").factor().expect("factor");
+        let mut sys_b = base.analyze(&a).expect("analyze").factor().expect("factor");
         let t_h = common::best(3, || {
-            hylu.refactor(&a, &an_h, &mut f_h).expect("refactor");
+            sys_h.refactor(&a.vals).expect("refactor");
         });
         let t_b = common::best(3, || {
-            base.refactor(&a, &an_b, &mut f_b).expect("refactor");
+            sys_b.refactor(&a.vals).expect("refactor");
         });
         table.row(
             vec![
                 bm.name.into(),
                 bm.class.into(),
                 a.n.to_string(),
-                format!("{}", an_h.mode),
+                format!("{}", sys_h.analysis().mode),
                 fmt_time(t_h),
                 fmt_time(t_b),
                 format!("{:.2}x", t_b / t_h),

@@ -9,17 +9,18 @@
 #[path = "common.rs"]
 mod common;
 
+use hylu::api::Solver;
 use hylu::bench_harness::{environment, fmt_time, Table};
-use hylu::coordinator::{Solver, SolverConfig};
+use hylu::coordinator::SolverConfig;
 use hylu::numeric::select::KernelMode;
 use hylu::sparse::gen;
 use hylu::symbolic::MergePolicy;
 
 fn factor_time(cfg: SolverConfig, a: &hylu::sparse::csr::Csr) -> f64 {
-    let s = Solver::new(cfg);
-    let an = s.analyze(a).expect("analyze");
+    let s = Solver::from_config(cfg).expect("solver");
+    let mut sys = s.analyze(a).expect("analyze").factor().expect("factor");
     common::best(2, || {
-        let _ = s.factor(a, &an).expect("factor");
+        sys.factorize().expect("factor");
     })
 }
 
@@ -173,22 +174,22 @@ fn main() {
             },
         ),
     ] {
-        let s = Solver::new(SolverConfig {
+        let s = Solver::from_config(SolverConfig {
             merge_policy: Some(policy),
             kernel: Some(KernelMode::SupSup),
             threads: common::threads(),
             ..SolverConfig::default()
-        });
+        })
+        .expect("solver");
         let t_an = common::best(2, || {
             let _ = s.analyze(&a).expect("analyze");
         });
-        let an = s.analyze(&a).expect("analyze");
+        let mut sys = s.analyze(&a).expect("analyze").factor().expect("factor");
         let t_f = common::best(2, || {
-            let _ = s.factor(&a, &an).expect("factor");
+            sys.factorize().expect("factor");
         });
-        let mut f = s.factor(&a, &an).expect("factor");
         let t_r = common::best(3, || {
-            s.refactor(&a, &an, &mut f).expect("refactor");
+            sys.refactor(&a.vals).expect("refactor");
         });
         t4.row(
             vec![
@@ -196,7 +197,7 @@ fn main() {
                 fmt_time(t_an),
                 fmt_time(t_f),
                 fmt_time(t_r),
-                an.stats.lu_entries.to_string(),
+                sys.symbolic_stats().lu_entries.to_string(),
             ],
             1.0,
         );

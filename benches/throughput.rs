@@ -14,8 +14,9 @@
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use hylu::api::Solver;
 use hylu::bench_harness::{environment, Table};
-use hylu::coordinator::{Solver, SolverConfig};
+use hylu::coordinator::SolverConfig;
 use hylu::service::{ServiceConfig, SolverService};
 use hylu::sparse::gen;
 
@@ -86,13 +87,12 @@ fn main() {
         drop(service);
         let service_rate = requests as f64 / t_service;
 
-        let solver = Solver::try_new(cfg.clone()).expect("solver");
-        let an = solver.analyze(&a).expect("analyze");
-        let f = solver.factor(&a, &an).expect("factor");
+        let solver = Solver::from_config(cfg.clone()).expect("solver");
+        let sys = solver.analyze(&a).expect("analyze").factor().expect("factor");
         let lock = Mutex::new(());
         let t_base = drive(callers, requests, || {
             let _g = lock.lock().unwrap();
-            solver.solve(&a, &an, &f, &b).expect("baseline solve");
+            sys.solve(&b).expect("baseline solve");
         });
         let base_rate = requests as f64 / t_base;
 

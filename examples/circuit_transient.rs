@@ -22,21 +22,18 @@ fn main() {
     println!("circuit: n = {}, nnz = {}", a0.n, a0.nnz());
 
     // repeated-mode solver: pays for relaxed supernode analysis once
-    let solver = Solver::new(SolverConfig {
-        repeated: true,
-        ..SolverConfig::default()
-    });
+    let solver = SolverBuilder::new().repeated().build().expect("solver");
     let t = Instant::now();
-    let an = solver.analyze(&a0).expect("analyze");
+    let analyzed = solver.analyze(&a0).expect("analyze");
     println!(
         "analyze: {:.1} ms (kernel {}, fill {:.2}x)",
         t.elapsed().as_secs_f64() * 1e3,
-        an.mode,
-        an.stats.fill_ratio
+        analyzed.symbolic_stats().mode,
+        analyzed.symbolic_stats().fill_ratio
     );
 
-    let mut fac = solver.factor(&a0, &an).expect("factor");
-    println!("first factor: {:.2} ms", fac.stats.t_factor * 1e3);
+    let mut sys = analyzed.factor().expect("factor");
+    println!("first factor: {:.2} ms", sys.factor_stats().t_factor * 1e3);
 
     // transient loop: timesteps x newton iterations
     let timesteps = 10;
@@ -52,10 +49,10 @@ fn main() {
             for v in &mut a.vals {
                 *v *= 1.0 + 0.02 * rng.normal();
             }
-            solver.refactor(&a, &an, &mut fac).expect("refactor");
-            t_refactor += fac.stats.t_factor;
+            sys.refactor(&a.vals).expect("refactor");
+            t_refactor += sys.factor_stats().t_factor;
             let b = gen::rhs_for_ones(&a);
-            let (x, st) = solver.solve_with_stats(&a, &an, &fac, &b).expect("solve");
+            let (x, st) = sys.solve_with_stats(&b).expect("solve");
             t_solve += st.t_solve;
             worst_residual = worst_residual.max(st.residual);
             let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
@@ -75,7 +72,7 @@ fn main() {
     // solver would do)
     let t = Instant::now();
     for _ in 0..5 {
-        let _ = solver.factor(&a, &an).expect("factor");
+        sys.factorize().expect("factor");
     }
     let t_full = t.elapsed().as_secs_f64() / 5.0;
     println!(

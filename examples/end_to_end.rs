@@ -15,7 +15,7 @@
 use hylu::baseline;
 use hylu::bench_harness::{environment, fmt_time, geomean, Table};
 use hylu::bench_suite::suite_small;
-use hylu::coordinator::{Solver, SolverConfig};
+use hylu::prelude::*;
 use hylu::sparse::gen;
 use std::time::Instant;
 
@@ -34,29 +34,30 @@ fn main() {
         let b = gen::rhs_for_ones(&a);
 
         // HYLU one-time
-        let hylu = Solver::new(SolverConfig::default());
-        let an = hylu.analyze(&a).expect("analyze");
+        let hylu = SolverBuilder::new().one_shot().build().expect("solver");
+        let analyzed = hylu.analyze(&a).expect("analyze");
+        let mode = analyzed.symbolic_stats().mode;
         let t = Instant::now();
-        let f = hylu.factor(&a, &an).expect("factor");
+        let sys = analyzed.factor().expect("factor");
         let t_h = t.elapsed().as_secs_f64();
-        let (x, st) = hylu.solve_with_stats(&a, &an, &f, &b).expect("solve");
+        let (x, st) = sys.solve_with_stats(&b).expect("solve");
         let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
         assert!(err < 1e-5, "{}: solution error {err}", bm.name);
 
         // PARDISO-like one-time
-        let base = Solver::new(baseline::pardiso_like(0));
-        let anb = base.analyze(&a).expect("analyze");
+        let base = Solver::from_config(baseline::pardiso_like(0)).expect("solver");
+        let base_an = base.analyze(&a).expect("analyze");
         let t = Instant::now();
-        let fb = base.factor(&a, &anb).expect("factor");
+        let mut base_sys = base_an.factor().expect("factor");
         let t_b = t.elapsed().as_secs_f64();
-        let _ = base.solve(&a, &anb, &fb, &b).expect("solve");
+        let _ = base_sys.solve(&b).expect("solve");
 
         one_time.row(
             vec![
                 bm.name.into(),
                 bm.class.into(),
                 a.n.to_string(),
-                format!("{}", an.mode),
+                format!("{mode}"),
                 fmt_time(t_h),
                 fmt_time(t_b),
                 format!("{:.2}x", t_b / t_h),
@@ -66,21 +67,16 @@ fn main() {
         );
 
         // repeated mode: refactor vs baseline refactor
-        let hylu_r = Solver::new(SolverConfig {
-            repeated: true,
-            ..SolverConfig::default()
-        });
-        let anr = hylu_r.analyze(&a).expect("analyze");
-        let mut fr = hylu_r.factor(&a, &anr).expect("factor");
+        let hylu_r = SolverBuilder::new().repeated().build().expect("solver");
+        let mut sys_r = hylu_r.analyze(&a).expect("analyze").factor().expect("factor");
         let t = Instant::now();
         for _ in 0..3 {
-            hylu_r.refactor(&a, &anr, &mut fr).expect("refactor");
+            sys_r.refactor(&a.vals).expect("refactor");
         }
         let t_rh = t.elapsed().as_secs_f64() / 3.0;
-        let mut frb = base.factor(&a, &anb).expect("factor");
         let t = Instant::now();
         for _ in 0..3 {
-            base.refactor(&a, &anb, &mut frb).expect("refactor");
+            base_sys.refactor(&a.vals).expect("refactor");
         }
         let t_rb = t.elapsed().as_secs_f64() / 3.0;
         repeated_speedups.push(t_rb / t_rh);
@@ -93,20 +89,16 @@ fn main() {
     );
 
     // XLA/Pallas path, if artifacts were built
-    match Solver::try_new(SolverConfig {
-        use_xla: true,
-        ..SolverConfig::default()
-    }) {
+    match SolverBuilder::new().use_xla("artifacts").build() {
         Ok(xla_solver) => {
             let a = gen::grid2d(60, 60);
             let b = gen::rhs_for_ones(&a);
-            let an = xla_solver.analyze(&a).expect("analyze");
-            let f = xla_solver.factor(&a, &an).expect("factor");
-            let (x, st) = xla_solver.solve_with_stats(&a, &an, &f, &b).expect("solve");
+            let sys = xla_solver.analyze(&a).expect("analyze").factor().expect("factor");
+            let (x, st) = sys.solve_with_stats(&b).expect("solve");
             let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
             println!(
                 "xla/pallas path: factor {} residual {:.1e} max|x-1| {:.1e} => numerics OK",
-                fmt_time(f.stats.t_factor),
+                fmt_time(sys.factor_stats().t_factor),
                 st.residual,
                 err
             );

@@ -8,7 +8,7 @@
 //! ```
 
 use hylu::bench_harness::{fmt_time, time_best};
-use hylu::coordinator::{Solver, SolverConfig};
+use hylu::prelude::*;
 use hylu::sparse::gen;
 use hylu::testutil::max_abs_diff;
 
@@ -17,13 +17,12 @@ fn main() {
     let k = 8usize;
     println!("matrix: n = {}, nnz = {}, {} rhs per step", a.n, a.nnz(), k);
 
-    let solver = Solver::new(SolverConfig {
-        repeated: true,
-        parallel_solve_min_n: 0,
-        ..SolverConfig::default()
-    });
-    let an = solver.analyze(&a).expect("analyze");
-    let mut f = solver.factor(&a, &an).expect("factor");
+    let solver = SolverBuilder::new()
+        .repeated()
+        .configure(|cfg| cfg.parallel_solve_min_n = 0)
+        .build()
+        .expect("solver");
+    let mut sys = solver.analyze(&a).expect("analyze").factor().expect("factor");
 
     // k right-hand sides with known solutions x*_q = q + 1
     let base = gen::rhs_for_ones(&a);
@@ -32,23 +31,21 @@ fn main() {
         .collect();
 
     // warm the engine arenas, then time the two strategies
-    solver.refactor(&a, &an, &mut f).expect("refactor");
-    let (xs, st) = solver
-        .solve_many_with_stats(&a, &an, &f, &bs)
-        .expect("solve_many");
+    sys.refactor(&a.vals).expect("refactor");
+    let (xs, st) = sys.solve_many_with_stats(&bs).expect("solve_many");
     let t_batched = time_best(5, || {
-        solver.solve_many(&a, &an, &f, &bs).expect("solve_many");
+        sys.solve_many(&bs).expect("solve_many");
     });
     let t_loop = time_best(5, || {
         for b in &bs {
-            solver.solve(&a, &an, &f, b).expect("solve");
+            sys.solve(b).expect("solve");
         }
     });
 
     // batched result must agree with independent solves
     let mut worst = 0.0f64;
     for (q, b) in bs.iter().enumerate() {
-        let x = solver.solve(&a, &an, &f, b).expect("solve");
+        let x = sys.solve(b).expect("solve");
         worst = worst.max(max_abs_diff(&xs[q], &x));
     }
     assert!(worst <= 1e-12, "batched/scalar disagreement {worst}");

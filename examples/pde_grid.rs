@@ -15,15 +15,14 @@ use std::time::Instant;
 fn solve_once(solver: &Solver, a: &hylu::sparse::csr::Csr) -> (f64, f64) {
     let b = gen::rhs_for_ones(a);
     let t = Instant::now();
-    let an = solver.analyze(a).expect("analyze");
-    let f = solver.factor(a, &an).expect("factor");
-    let (_, st) = solver.solve_with_stats(a, &an, &f, &b).expect("solve");
+    let sys = solver.analyze(a).expect("analyze").factor().expect("factor");
+    let (_, st) = sys.solve_with_stats(&b).expect("solve");
     (t.elapsed().as_secs_f64(), st.residual)
 }
 
 fn main() {
-    let hylu = Solver::new(SolverConfig::default());
-    let klu = Solver::new(baseline::klu_like(0));
+    let hylu = SolverBuilder::new().build().expect("solver");
+    let klu = Solver::from_config(baseline::klu_like(0)).expect("solver");
 
     println!("2-D convection-diffusion, n = 96x96, sweeping Péclet number\n");
     println!(

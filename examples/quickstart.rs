@@ -15,26 +15,27 @@ fn main() {
     // Known solution x* = 1, right-hand side b = A·1.
     let b = gen::rhs_for_ones(&a);
 
-    // analyze -> factor -> solve
-    let solver = Solver::new(SolverConfig::default());
-    let analysis = solver.analyze(&a).expect("analyze");
+    // analyze -> factor -> solve, as owning typestate handles: the
+    // matrix, analysis and factors travel together, so a mismatched
+    // pairing cannot be expressed
+    let solver = SolverBuilder::new().one_shot().build().expect("solver");
+    let system = solver.analyze(&a).expect("analyze"); // LinearSystem<Analyzed>
+    let stats = system.symbolic_stats();
     println!(
         "analysis: kernel = {}, fill = {:.2}x, supernode coverage = {:.0}%",
-        analysis.mode,
-        analysis.stats.fill_ratio,
-        100.0 * analysis.stats.supernode_coverage
+        stats.mode,
+        stats.fill_ratio,
+        100.0 * stats.supernode_coverage
     );
 
-    let factors = solver.factor(&a, &analysis).expect("factor");
+    let system = system.factor().expect("factor"); // LinearSystem<Factored>
     println!(
         "factor: {:.3} ms, {} perturbed pivots",
-        factors.stats.t_factor * 1e3,
-        factors.stats.perturbed
+        system.factor_stats().t_factor * 1e3,
+        system.factor_stats().perturbed
     );
 
-    let (x, st) = solver
-        .solve_with_stats(&a, &analysis, &factors, &b)
-        .expect("solve");
+    let (x, st) = system.solve_with_stats(&b).expect("solve");
     let max_err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
     println!(
         "solve: {:.3} ms, residual = {:.3e}, max |x - 1| = {:.3e}",

@@ -1,0 +1,102 @@
+/* hylu.h — stable C ABI for the HYLU sparse LU solver (Rust crate,
+ * feature `ffi`; build with `cargo build --release --features ffi` to
+ * get libhylu.so / libhylu.dylib).
+ *
+ * Lifecycle (mirrors upstream HYLU's Analyze/Factorize/ReFactorize/
+ * Solve/Free):
+ *
+ *   hylu_handle h;
+ *   hylu_create(0, 1, &h);                    // all cores, repeated mode
+ *   hylu_analyze(h, n, ap, ai, ax);           // CSR, 0-based indices
+ *   hylu_factorize(h);                        // pivot-searching factor
+ *   while (newton_step) {
+ *       hylu_refactorize(h, ax_new);          // same pattern, new values
+ *       hylu_solve(h, b, x);
+ *   }
+ *   hylu_free(h);
+ *
+ * Matrix contract: `ap` holds n+1 monotone row offsets with ap[0] == 0;
+ * `ai`/`ax` hold ap[n] column indices (0-based, strictly increasing
+ * within each row) and values. `hylu_refactorize`'s `ax` aligns
+ * element-for-element with the analyzed `ai`/`ax`.
+ *
+ * Every function returns HYLU_OK (0) or a stable positive error code
+ * (shared with the `hylu` CLI exit status and Rust's `Error::code`).
+ * `hylu_last_error` returns a human-readable message for the last
+ * failing call on the handle.
+ *
+ * Threading: handles are not thread-safe. Every call (including
+ * hylu_solve/hylu_solve_many, which record failures in the handle's
+ * error slot) takes the handle exclusively; serialize all calls per
+ * handle or use one handle per thread. Concurrent solving on shared
+ * factors is a Rust-API capability, not an ABI one.
+ *
+ * Panics: a caught internal panic (HYLU_ERR_PANIC) from analyze/
+ * factorize/refactorize poisons the handle — factors may be
+ * inconsistent, and every later call returns HYLU_ERR_INVALID until a
+ * fresh hylu_analyze resets the state. */
+
+#ifndef HYLU_H
+#define HYLU_H
+
+#include <stdint.h>
+
+#ifdef __cplusplus
+extern "C" {
+#endif
+
+/* Opaque solver + system handle. */
+typedef struct hylu_handle_s *hylu_handle;
+
+/* Stable status codes (append-only). */
+#define HYLU_OK 0             /* success */
+#define HYLU_ERR_PANIC 1      /* internal panic caught at the boundary */
+#define HYLU_ERR_INVALID 2    /* invalid input or out-of-order call */
+#define HYLU_ERR_IO 3         /* i/o or parse failure */
+#define HYLU_ERR_SINGULAR 4   /* structurally singular matrix */
+#define HYLU_ERR_ZERO_PIVOT 5 /* unperturbable zero pivot */
+#define HYLU_ERR_RUNTIME 6    /* runtime/backend failure */
+
+/* Create a solver handle. threads = 0 uses all cores; repeated != 0
+ * selects the repeated-solve preset (relaxed supernodes, fast
+ * refactorization). */
+int32_t hylu_create(int64_t threads, int32_t repeated, hylu_handle *out);
+
+/* Analyze a CSR matrix (preprocessing: static pivoting, ordering,
+ * symbolic factorization, kernel selection). Replaces any previous
+ * system on the handle. */
+int32_t hylu_analyze(hylu_handle h, int64_t n, const int64_t *ap,
+                     const int64_t *ai, const double *ax);
+
+/* Numeric factorization with pivot search. On an already-factorized
+ * handle, re-runs the full factorization of the current values. */
+int32_t hylu_factorize(hylu_handle h);
+
+/* Refactorize with new values on the stored pivot order (no pivot
+ * search — the repeated-solve fast path). */
+int32_t hylu_refactorize(hylu_handle h, const double *ax);
+
+/* Solve A x = b (length-n arrays; iterative refinement is automatic). */
+int32_t hylu_solve(hylu_handle h, const double *b, double *x);
+
+/* Batched solve: nrhs right-hand sides packed column-after-column
+ * (b + q*n); column q is bit-identical to hylu_solve of that column. */
+int32_t hylu_solve_many(hylu_handle h, int64_t nrhs, const double *b,
+                        double *x);
+
+/* Dimension / stored nonzeros of the analyzed system (0 when none). */
+int64_t hylu_n(hylu_handle h);
+int64_t hylu_nnz(hylu_handle h);
+
+/* Message of the last error on this handle (empty string when none);
+ * valid until the next failing call or hylu_free. */
+const char *hylu_last_error(hylu_handle h);
+
+/* Release the handle (null is a no-op). */
+void hylu_free(hylu_handle h);
+
+#ifdef __cplusplus
+} /* extern "C" */
+#endif
+
+#endif /* HYLU_H */

@@ -1,0 +1,199 @@
+//! Chained solver configuration ([`SolverBuilder`]) and per-solve
+//! refinement overrides ([`SolveOpts`]).
+
+use crate::coordinator::{RefineParams, SolverConfig};
+use crate::numeric::select::KernelMode;
+use crate::ordering::OrderingChoice;
+use crate::Result;
+
+use super::Solver;
+
+/// Chained configuration for a [`Solver`], replacing raw
+/// [`SolverConfig`] field-poking with presets and named knobs.
+///
+/// The two presets mirror the paper's two scenarios:
+/// [`SolverBuilder::one_shot`] (the default; fastest single
+/// analyze+factor+solve) and [`SolverBuilder::repeated`] (pays for
+/// relaxed supernodes once in analysis, refactors faster forever —
+/// circuit transient simulation, parameter sweeps).
+///
+/// ```
+/// use hylu::prelude::*;
+/// let solver = SolverBuilder::new()
+///     .repeated()
+///     .threads(2)
+///     .kernel(KernelMode::SupSup)
+///     .refine_target(1e-12)
+///     .build()
+///     .unwrap();
+/// assert!(solver.config().repeated);
+/// assert_eq!(solver.config().threads, 2);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct SolverBuilder {
+    cfg: SolverConfig,
+}
+
+impl SolverBuilder {
+    /// Start from the defaults (the paper's one-time-solve setup).
+    pub fn new() -> SolverBuilder {
+        SolverBuilder {
+            cfg: SolverConfig::default(),
+        }
+    }
+
+    /// Start from an existing raw configuration.
+    pub fn from_config(cfg: SolverConfig) -> SolverBuilder {
+        SolverBuilder { cfg }
+    }
+
+    /// Preset: optimize for a single `analyze → factor → solve` pass
+    /// (exact supernode merging, fastest preprocessing). The default.
+    pub fn one_shot(mut self) -> SolverBuilder {
+        self.cfg.repeated = false;
+        self
+    }
+
+    /// Preset: optimize preprocessing for repeated solving with a fixed
+    /// pattern (relaxed supernode merging: slower analysis, faster
+    /// `refactor`; paper §3.2).
+    pub fn repeated(mut self) -> SolverBuilder {
+        self.cfg.repeated = true;
+        self
+    }
+
+    /// Worker-pool width (0 = all available cores). Fixed at `build`.
+    pub fn threads(mut self, n: usize) -> SolverBuilder {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Fill-reducing ordering (default: auto-select AMD vs ND).
+    pub fn ordering(mut self, o: OrderingChoice) -> SolverBuilder {
+        self.cfg.ordering = o;
+        self
+    }
+
+    /// Force a numeric kernel family instead of selecting from symbolic
+    /// statistics.
+    pub fn kernel(mut self, k: KernelMode) -> SolverBuilder {
+        self.cfg.kernel = Some(k);
+        self
+    }
+
+    /// Enable/disable MC64 static pivoting + scaling (disable only for
+    /// pre-scaled diagonally-dominant inputs).
+    pub fn static_pivoting(mut self, on: bool) -> SolverBuilder {
+        self.cfg.static_pivoting = on;
+        self
+    }
+
+    /// Concurrent `solve*` scratch checkout slots (0 = auto).
+    pub fn scratch_slots(mut self, slots: usize) -> SolverBuilder {
+        self.cfg.scratch_slots = slots;
+        self
+    }
+
+    /// Iterative-refinement iteration cap (the configured default;
+    /// override per call with [`SolveOpts`]).
+    pub fn refine_max_iter(mut self, n: usize) -> SolverBuilder {
+        self.cfg.refine_max_iter = n;
+        self
+    }
+
+    /// Residual above which refinement starts even without pivot
+    /// perturbation.
+    pub fn refine_tol(mut self, tol: f64) -> SolverBuilder {
+        self.cfg.refine_tol = tol;
+        self
+    }
+
+    /// Residual below which refinement stops.
+    pub fn refine_target(mut self, target: f64) -> SolverBuilder {
+        self.cfg.refine_target = target;
+        self
+    }
+
+    /// Route large sup-sup GEMMs through the XLA/PJRT AOT artifacts in
+    /// `artifacts_dir` (ablation path; the native microkernel is
+    /// default).
+    pub fn use_xla(mut self, artifacts_dir: impl Into<String>) -> SolverBuilder {
+        self.cfg.use_xla = true;
+        self.cfg.artifacts_dir = artifacts_dir.into();
+        self
+    }
+
+    /// Escape hatch: mutate the underlying [`SolverConfig`] for knobs
+    /// without a named builder method (pivoting thresholds, supernode
+    /// caps, …).
+    pub fn configure(mut self, f: impl FnOnce(&mut SolverConfig)) -> SolverBuilder {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// The configuration built so far.
+    pub fn config(&self) -> &SolverConfig {
+        &self.cfg
+    }
+
+    /// Finish into the raw configuration (for
+    /// [`crate::service::ServiceConfig`] and other config carriers).
+    pub fn into_config(self) -> SolverConfig {
+        self.cfg
+    }
+
+    /// Build the solver (engine + GEMM backend). Worker threads spawn
+    /// lazily on the first numeric dispatch.
+    pub fn build(self) -> Result<Solver> {
+        Solver::from_config(self.cfg)
+    }
+}
+
+/// Per-solve overrides for the iterative-refinement policy. Unset knobs
+/// fall back to the solver's configured defaults.
+///
+/// ```
+/// use hylu::prelude::*;
+/// let opts = SolveOpts::new().refine_max_iter(5).refine_target(1e-13);
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveOpts {
+    refine_max_iter: Option<usize>,
+    refine_tol: Option<f64>,
+    refine_target: Option<f64>,
+}
+
+impl SolveOpts {
+    /// No overrides: the solver's configured refinement policy.
+    pub fn new() -> SolveOpts {
+        SolveOpts::default()
+    }
+
+    /// Cap refinement iterations for this solve (0 disables refinement).
+    pub fn refine_max_iter(mut self, n: usize) -> SolveOpts {
+        self.refine_max_iter = Some(n);
+        self
+    }
+
+    /// Residual above which refinement starts even without pivot
+    /// perturbation, for this solve.
+    pub fn refine_tol(mut self, tol: f64) -> SolveOpts {
+        self.refine_tol = Some(tol);
+        self
+    }
+
+    /// Residual target at which refinement stops, for this solve.
+    pub fn refine_target(mut self, target: f64) -> SolveOpts {
+        self.refine_target = Some(target);
+        self
+    }
+
+    pub(crate) fn resolve(&self, cfg: &SolverConfig) -> RefineParams {
+        let d = RefineParams::from_config(cfg);
+        RefineParams {
+            max_iter: self.refine_max_iter.unwrap_or(d.max_iter),
+            tol: self.refine_tol.unwrap_or(d.tol),
+            target: self.refine_target.unwrap_or(d.target),
+        }
+    }
+}

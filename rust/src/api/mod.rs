@@ -1,0 +1,368 @@
+//! The public solver API: owning, typestate `LinearSystem` handles.
+//!
+//! HYLU's value proposition is the `analyze → factor → refactor → solve`
+//! lifecycle. The legacy coordinator API forced every caller to thread a
+//! `(matrix, &Analysis, &Factorization)` triple through each call — the
+//! exact stale-pairing footgun the engine's uid-keyed caches exist to
+//! defend against. This module makes the pairing a *type*:
+//!
+//! - [`SolverBuilder`] (chained configuration, `one_shot()` /
+//!   `repeated()` presets) builds a [`Solver`].
+//! - [`Solver::analyze`] ingests any [`MatrixInput`] (CSR, COO, CSC
+//!   triplets, a MatrixMarket path) and returns a
+//!   [`LinearSystem<Analyzed>`](LinearSystem) that **owns** the matrix
+//!   and its analysis.
+//! - [`LinearSystem::factor`] consumes it into a
+//!   [`LinearSystem<Factored>`](LinearSystem) with `refactor`, `solve`,
+//!   `solve_into`, `solve_many`, and per-call [`SolveOpts`].
+//!
+//! A factorization paired with the wrong analysis, or a solve before a
+//! factor, is now unrepresentable at compile time. The same handles back
+//! the C ABI in [`crate::ffi`] (opaque pointers over
+//! `LinearSystem<Factored>`), so the compile-time story degrades to a
+//! checked state machine across the FFI boundary.
+//!
+//! ```
+//! use hylu::prelude::*;
+//!
+//! let a = hylu::sparse::gen::grid2d(8, 8);
+//! let b = hylu::sparse::gen::rhs_for_ones(&a);
+//!
+//! let solver = SolverBuilder::new().one_shot().threads(1).build().unwrap();
+//! let system = solver.analyze(&a).unwrap(); // LinearSystem<Analyzed>
+//! let system = system.factor().unwrap(); //    LinearSystem<Factored>
+//! let x = system.solve(&b).unwrap();
+//! assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-8));
+//! ```
+
+mod builder;
+
+pub use builder::{SolveOpts, SolverBuilder};
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+use crate::coordinator::{
+    Analysis, Factorization, FactorStats, RefineParams, Solver as Core, SolveStats, SolverConfig,
+    SymbolicStats,
+};
+use crate::exec::Engine;
+use crate::sparse::csr::Csr;
+use crate::sparse::input::MatrixInput;
+use crate::{Error, Result};
+
+/// Typestate marker: analyzed, not yet numerically factorized.
+pub enum Analyzed {}
+
+/// Typestate marker: numerically factorized, ready to solve.
+pub enum Factored {}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for super::Analyzed {}
+    impl Sealed for super::Factored {}
+}
+
+/// The set of [`LinearSystem`] states ([`Analyzed`] | [`Factored`]).
+pub trait State: sealed::Sealed {}
+impl State for Analyzed {}
+impl State for Factored {}
+
+/// The handle-producing solver: configuration plus the persistent
+/// execution engine (worker pool, scratch arenas), shared by every
+/// [`LinearSystem`] it analyzes.
+///
+/// Cheap to clone (`Arc` internally); clones share the engine. Built by
+/// [`SolverBuilder`]; see the [module docs](self) for the lifecycle.
+#[derive(Clone)]
+pub struct Solver {
+    core: Arc<Core>,
+}
+
+impl Solver {
+    /// Start a chained configuration ([`SolverBuilder::new`]).
+    pub fn builder() -> SolverBuilder {
+        SolverBuilder::new()
+    }
+
+    /// Build directly from a raw [`SolverConfig`] (the escape hatch for
+    /// code that already carries one, e.g. [`crate::service::ServiceConfig`]).
+    pub fn from_config(cfg: SolverConfig) -> Result<Solver> {
+        Ok(Solver {
+            core: Arc::new(Core::try_new(cfg)?),
+        })
+    }
+
+    /// Active configuration.
+    pub fn config(&self) -> &SolverConfig {
+        &self.core.cfg
+    }
+
+    /// The persistent execution engine (pool + scratch arenas). Exposed
+    /// for observability: its counters back the zero-spawn / zero-alloc
+    /// guarantees of the warm path.
+    pub fn engine(&self) -> &Engine {
+        self.core.engine()
+    }
+
+    /// Ingest and analyze a matrix: validation, static pivoting (MC64),
+    /// fill-reducing ordering, symbolic factorization with supernode
+    /// detection, kernel selection, and pool schedule construction.
+    ///
+    /// Accepts any [`MatrixInput`]: `Csr`/`&Csr`, [`crate::sparse::Coo`],
+    /// CSC triplets ([`crate::sparse::CscInput`]), or a MatrixMarket path.
+    /// The returned handle owns the (validated) matrix and its analysis.
+    ///
+    /// ```
+    /// use hylu::prelude::*;
+    /// let solver = SolverBuilder::new().threads(1).build().unwrap();
+    /// let mut coo = Coo::new(2);
+    /// coo.push(0, 0, 2.0);
+    /// coo.push(1, 1, 4.0);
+    /// coo.push(1, 0, 1.0);
+    /// let system = solver.analyze(coo).unwrap().factor().unwrap();
+    /// let x = system.solve(&[2.0, 5.0]).unwrap();
+    /// assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 1.0).abs() < 1e-12);
+    /// ```
+    pub fn analyze<M: MatrixInput>(&self, m: M) -> Result<LinearSystem<Analyzed>> {
+        let a = m.into_csr()?;
+        let an = self.core.analyze_core(&a)?;
+        Ok(LinearSystem {
+            core: self.core.clone(),
+            a,
+            an,
+            f: None,
+            _state: PhantomData,
+        })
+    }
+}
+
+/// An owning handle to one linear system `A x = b` on one [`Solver`].
+///
+/// The handle owns the matrix, its [`Analysis`], and (in the
+/// [`Factored`] state) its [`Factorization`], so a stale
+/// matrix/analysis/factorization pairing cannot be expressed. It is
+/// `Send + Sync`: a `&LinearSystem<Factored>` can be shared across
+/// threads and `solve*` called concurrently (each call checks a private
+/// scratch arena out of the engine's pool); `refactor` requires `&mut`.
+pub struct LinearSystem<S: State> {
+    core: Arc<Core>,
+    a: Csr,
+    an: Analysis,
+    f: Option<Factorization>,
+    _state: PhantomData<S>,
+}
+
+impl<S: State> LinearSystem<S> {
+    /// Dimension of the system.
+    pub fn n(&self) -> usize {
+        self.a.n
+    }
+
+    /// Stored nonzeros of the owned matrix.
+    pub fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
+    /// The owned (validated) matrix.
+    pub fn matrix(&self) -> &Csr {
+        &self.a
+    }
+
+    /// The owned analysis (permutations, scalings, symbolic
+    /// factorization, execution plan).
+    pub fn analysis(&self) -> &Analysis {
+        &self.an
+    }
+
+    /// Preprocessing statistics of the owned analysis.
+    pub fn symbolic_stats(&self) -> &SymbolicStats {
+        &self.an.stats
+    }
+}
+
+impl LinearSystem<Analyzed> {
+    /// Numeric factorization (supernode diagonal pivoting), consuming
+    /// the analyzed handle into a solvable one.
+    pub fn factor(self) -> Result<LinearSystem<Factored>> {
+        let f = self.core.factor_core(&self.a, &self.an)?;
+        Ok(LinearSystem {
+            core: self.core,
+            a: self.a,
+            an: self.an,
+            f: Some(f),
+            _state: PhantomData,
+        })
+    }
+}
+
+impl LinearSystem<Factored> {
+    fn fac(&self) -> &Factorization {
+        self.f.as_ref().expect("Factored state always holds factors")
+    }
+
+    /// The owned numeric factorization.
+    pub fn factorization(&self) -> &Factorization {
+        self.fac()
+    }
+
+    /// Statistics of the last (re)factorization.
+    pub fn factor_stats(&self) -> &FactorStats {
+        &self.fac().stats
+    }
+
+    /// Replace the matrix values (same pattern) and refactorize on the
+    /// stored pivot order without a pivot search — the repeated-solve
+    /// fast path. `new_vals` must align with the owned matrix's
+    /// [`Csr::vals`] (CSR order, length [`LinearSystem::nnz`]). On a
+    /// warm engine this spawns no threads and performs no O(n) scratch
+    /// allocation.
+    ///
+    /// ```
+    /// use hylu::prelude::*;
+    /// let a = hylu::sparse::gen::grid2d(6, 6);
+    /// let solver = SolverBuilder::new().repeated().threads(1).build().unwrap();
+    /// let mut system = solver.analyze(&a).unwrap().factor().unwrap();
+    /// // Newton-style value update: same pattern, scaled values
+    /// let vals: Vec<f64> = a.vals.iter().map(|v| v * 2.0).collect();
+    /// system.refactor(&vals).unwrap();
+    /// let b = hylu::sparse::gen::rhs_for_ones(&a);
+    /// let x = system.solve(&b).unwrap();
+    /// assert!(x.iter().all(|v| (v - 0.5).abs() < 1e-8)); // A doubled ⇒ x halved
+    /// ```
+    pub fn refactor(&mut self, new_vals: &[f64]) -> Result<()> {
+        if new_vals.len() != self.a.nnz() {
+            return Err(Error::Invalid(format!(
+                "refactor values length {} does not match matrix nnz {}",
+                new_vals.len(),
+                self.a.nnz()
+            )));
+        }
+        self.a.vals.copy_from_slice(new_vals);
+        self.core
+            .refactor_core(&self.a, &self.an, self.f.as_mut().expect("factored"))
+    }
+
+    /// [`LinearSystem::refactor`] from a whole same-pattern matrix (any
+    /// [`MatrixInput`]). Rejected — with the owned matrix and factors
+    /// untouched — when the ingested pattern differs from the analyzed
+    /// one.
+    pub fn refactor_matrix<M: MatrixInput>(&mut self, m: M) -> Result<()> {
+        let a = m.into_csr()?;
+        self.core
+            .refactor_core(&a, &self.an, self.f.as_mut().expect("factored"))?;
+        self.a = a;
+        Ok(())
+    }
+
+    /// Full numeric re-factorization of the current values *with* a
+    /// fresh pivot search (what [`LinearSystem::factor`] does),
+    /// replacing the stored factors. Use after `refactor` drift
+    /// accumulates perturbed pivots, or to time factorization
+    /// repeatedly.
+    pub fn factorize(&mut self) -> Result<()> {
+        self.f = Some(self.core.factor_core(&self.a, &self.an)?);
+        Ok(())
+    }
+
+    /// Solve `A x = b`; iterative refinement runs automatically when
+    /// pivots were perturbed or the residual exceeds the configured
+    /// tolerance.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        Ok(self.solve_with_stats(b)?.0)
+    }
+
+    /// [`LinearSystem::solve`] with phase statistics.
+    pub fn solve_with_stats(&self, b: &[f64]) -> Result<(Vec<f64>, SolveStats)> {
+        let mut x = Vec::new();
+        let st = self.solve_into(b, &mut x)?;
+        Ok((x, st))
+    }
+
+    /// Solve into a caller-provided buffer (`x` is resized to `n`). With
+    /// a reused buffer on a warm engine the whole call performs no O(n)
+    /// allocation — the repeated-solve inner loop.
+    pub fn solve_into(&self, b: &[f64], x: &mut Vec<f64>) -> Result<SolveStats> {
+        self.core.solve_into_core(
+            &self.a,
+            &self.an,
+            self.fac(),
+            b,
+            x,
+            &RefineParams::from_config(&self.core.cfg),
+        )
+    }
+
+    /// Solve with per-call [`SolveOpts`] overriding the configured
+    /// refinement policy (iteration cap, start tolerance, residual
+    /// target).
+    ///
+    /// ```
+    /// use hylu::prelude::*;
+    /// let a = hylu::sparse::gen::grid2d(6, 6);
+    /// let b = hylu::sparse::gen::rhs_for_ones(&a);
+    /// let solver = SolverBuilder::new().threads(1).build().unwrap();
+    /// let system = solver.analyze(&a).unwrap().factor().unwrap();
+    /// let opts = SolveOpts::new().refine_max_iter(0); // raw substitution
+    /// let (x, st) = system.solve_with_opts(&b, &opts).unwrap();
+    /// assert_eq!(st.refine_iters, 0);
+    /// assert_eq!(x.len(), a.n);
+    /// ```
+    pub fn solve_with_opts(&self, b: &[f64], opts: &SolveOpts) -> Result<(Vec<f64>, SolveStats)> {
+        let mut x = Vec::new();
+        let st = self.solve_into_with_opts(b, &mut x, opts)?;
+        Ok((x, st))
+    }
+
+    /// [`LinearSystem::solve_into`] with per-call [`SolveOpts`].
+    pub fn solve_into_with_opts(
+        &self,
+        b: &[f64],
+        x: &mut Vec<f64>,
+        opts: &SolveOpts,
+    ) -> Result<SolveStats> {
+        self.core
+            .solve_into_core(&self.a, &self.an, self.fac(), b, x, &opts.resolve(&self.core.cfg))
+    }
+
+    /// Batched repeated solve: all right-hand sides sweep through
+    /// substitution as one dense block with a single pool dispatch.
+    /// Column `q` is bit-identical to `solve(&bs[q])`.
+    pub fn solve_many(&self, bs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        Ok(self.solve_many_with_stats(bs)?.0)
+    }
+
+    /// [`LinearSystem::solve_many`] with aggregate statistics
+    /// (`residual` is the worst per-RHS residual, `refine_iters` the
+    /// total across RHS).
+    pub fn solve_many_with_stats(&self, bs: &[Vec<f64>]) -> Result<(Vec<Vec<f64>>, SolveStats)> {
+        let mut xs = Vec::new();
+        let st = self.solve_many_into(bs, &mut xs)?;
+        Ok((xs, st))
+    }
+
+    /// Batched solve into caller-provided buffers (`xs` is resized to
+    /// `bs.len()` vectors of length `n`); allocation-free with reused
+    /// buffers on a warm engine.
+    pub fn solve_many_into(&self, bs: &[Vec<f64>], xs: &mut Vec<Vec<f64>>) -> Result<SolveStats> {
+        self.core.solve_many_into_core(
+            &self.a,
+            &self.an,
+            self.fac(),
+            bs,
+            xs,
+            &RefineParams::from_config(&self.core.cfg),
+        )
+    }
+
+    /// [`LinearSystem::solve_many_into`] with per-call [`SolveOpts`].
+    pub fn solve_many_into_with_opts(
+        &self,
+        bs: &[Vec<f64>],
+        xs: &mut Vec<Vec<f64>>,
+        opts: &SolveOpts,
+    ) -> Result<SolveStats> {
+        self.core
+            .solve_many_into_core(&self.a, &self.an, self.fac(), bs, xs, &opts.resolve(&self.core.cfg))
+    }
+}

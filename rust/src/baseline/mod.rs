@@ -55,18 +55,17 @@ pub fn klu_like(threads: usize) -> SolverConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Solver;
+    use crate::api::Solver;
     use crate::sparse::gen;
     use crate::testutil::max_abs_diff;
 
     fn roundtrip(cfg: SolverConfig, a: &crate::sparse::csr::Csr) -> f64 {
-        let s = Solver::new(cfg);
-        let an = s.analyze(a).unwrap();
-        let f = s.factor(a, &an).unwrap();
+        let s = Solver::from_config(cfg).unwrap();
+        let sys = s.analyze(a).unwrap().factor().unwrap();
         let xt: Vec<f64> = (0..a.n).map(|i| (i % 9) as f64 - 4.0).collect();
         let mut b = vec![0.0; a.n];
         a.matvec(&xt, &mut b);
-        let x = s.solve(a, &an, &f, &b).unwrap();
+        let x = sys.solve(&b).unwrap();
         max_abs_diff(&x, &xt)
     }
 
@@ -81,17 +80,17 @@ mod tests {
     #[test]
     fn pardiso_like_pads_heavily_on_circuits() {
         let a = gen::circuit(1500, 3);
-        let sp = Solver::new(pardiso_like(1));
-        let sk = Solver::new(klu_like(1));
+        let sp = Solver::from_config(pardiso_like(1)).unwrap();
+        let sk = Solver::from_config(klu_like(1)).unwrap();
         let ap = sp.analyze(&a).unwrap();
         let ak = sk.analyze(&a).unwrap();
         // the PARDISO-like baseline stores far more (padded) entries —
         // the fill explosion the paper reports
         assert!(
-            ap.stats.lu_entries as f64 > 3.0 * ak.stats.lu_entries as f64,
+            ap.symbolic_stats().lu_entries as f64 > 3.0 * ak.symbolic_stats().lu_entries as f64,
             "pardiso {} vs klu {}",
-            ap.stats.lu_entries,
-            ak.stats.lu_entries
+            ap.symbolic_stats().lu_entries,
+            ak.symbolic_stats().lu_entries
         );
     }
 }

@@ -12,7 +12,7 @@
 //! ```
 //!
 //! `--rhs K` batches K right-hand sides through the engine's multi-RHS
-//! path ([`Solver::solve_many`]) — the traffic-serving scenario.
+//! path ([`LinearSystem::solve_many`]) — the traffic-serving scenario.
 //! `serve` runs the full front door: a sharded
 //! [`SolverService`](crate::service::SolverService) under C concurrent
 //! callers, reporting solves/sec and coalescing statistics against the
@@ -25,10 +25,10 @@
 
 use std::path::Path;
 
+use crate::api::{Factored, LinearSystem, Solver, SolverBuilder};
 use crate::baseline;
 use crate::bench_harness::{environment, fmt_time, Table};
 use crate::bench_suite;
-use crate::coordinator::{Solver, SolverConfig};
 use crate::numeric::kernels::{self, KernelTier};
 use crate::numeric::select::KernelMode;
 use crate::service::{ServiceConfig, SolverService};
@@ -121,33 +121,38 @@ pub fn load_matrix(args: &Args) -> Result<(String, Csr)> {
     ))
 }
 
-/// Build a [`SolverConfig`] from common flags.
-pub fn config_from(args: &Args) -> Result<SolverConfig> {
-    let mut cfg = SolverConfig::default();
+/// Build a [`SolverBuilder`] from common flags.
+pub fn config_from(args: &Args) -> Result<SolverBuilder> {
+    let mut b = SolverBuilder::new();
     if let Some(t) = args.get("threads") {
-        cfg.threads = t
-            .parse()
-            .map_err(|_| Error::Invalid("bad --threads".into()))?;
+        b = b.threads(
+            t.parse()
+                .map_err(|_| Error::Invalid("bad --threads".into()))?,
+        );
     }
     if let Some(k) = args.get("kernel") {
-        cfg.kernel = Some(match k {
-            "row-row" | "rowrow" => KernelMode::RowRow,
-            "sup-row" | "suprow" => KernelMode::SupRow,
-            "sup-sup" | "supsup" => KernelMode::SupSup,
-            "auto" => return Ok(cfg),
+        match k {
+            "row-row" | "rowrow" => b = b.kernel(KernelMode::RowRow),
+            "sup-row" | "suprow" => b = b.kernel(KernelMode::SupRow),
+            "sup-sup" | "supsup" => b = b.kernel(KernelMode::SupSup),
+            "auto" => {}
             other => return Err(Error::Invalid(format!("unknown kernel {other}"))),
-        });
+        }
     }
     if args.has("repeated") {
-        cfg.repeated = true;
+        b = b.repeated();
     }
     if args.has("xla") {
-        cfg.use_xla = true;
+        b = b.configure(|cfg| cfg.use_xla = true);
     }
-    Ok(cfg)
+    Ok(b)
 }
 
 /// Run the CLI; returns the process exit code.
+///
+/// Exit statuses are the stable [`Error::code`] values shared with the
+/// C ABI (`include/hylu.h`): 0 success, 2 invalid input/usage, 3 I/O,
+/// 4 structurally singular, 5 zero pivot, 6 runtime failure.
 pub fn run(argv: &[String]) -> i32 {
     let args = Args::parse(argv);
     let result = match args.command() {
@@ -164,30 +169,30 @@ pub fn run(argv: &[String]) -> i32 {
                  [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
                  (bench: --kernel scalar|portable|native|auto pins the dispatch tier)"
             );
-            return 2;
+            // usage errors share Error::Invalid's stable code
+            return Error::Invalid(String::new()).code();
         }
     };
     match result {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
-            1
+            e.code()
         }
     }
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args)?;
-    let cfg = config_from(args)?;
     let nrhs: usize = match args.get("rhs") {
         Some(v) => v.parse().map_err(|_| Error::Invalid("bad --rhs".into()))?,
         None => 1,
     };
-    let solver = Solver::try_new(cfg)?;
-    let an = solver.analyze(&a)?;
-    let f = solver.factor(&a, &an)?;
-    let b = gen::rhs_for_ones(&a);
-    let (x, st) = solver.solve_with_stats(&a, &an, &f, &b)?;
+    let solver = config_from(args)?.build()?;
+    let sys = solver.analyze(a)?.factor()?;
+    let (a, an) = (sys.matrix(), sys.analysis());
+    let b = gen::rhs_for_ones(a);
+    let (x, st) = sys.solve_with_stats(&b)?;
     let err = x
         .iter()
         .map(|v| (v - 1.0).abs())
@@ -204,12 +209,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "kernel       : {} (coverage {:.2}, avg width {:.1}, fill {:.2}x)",
         an.mode, an.stats.supernode_coverage, an.stats.avg_super_width, an.stats.fill_ratio
     );
+    let fs = sys.factor_stats();
     println!(
         "factor       : {} ({:.2} GFLOP/s, {} perturbed pivots, {} threads)",
-        fmt_time(f.stats.t_factor),
-        f.stats.gflops,
-        f.stats.perturbed,
-        f.stats.threads
+        fmt_time(fs.t_factor),
+        fs.gflops,
+        fs.perturbed,
+        fs.threads
     );
     println!(
         "solve        : {} (residual {:.3e}, {} refinement iters)",
@@ -223,7 +229,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         let bs: Vec<Vec<f64>> = (1..=nrhs)
             .map(|q| b.iter().map(|v| v * q as f64).collect())
             .collect();
-        let (xs, stm) = solver.solve_many_with_stats(&a, &an, &f, &bs)?;
+        let (xs, stm) = sys.solve_many_with_stats(&bs)?;
         let mut err_many = 0.0f64;
         for (q, xq) in xs.iter().enumerate() {
             let want = (q + 1) as f64;
@@ -245,10 +251,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args)?;
-    let cfg = config_from(args)?;
-    let solver = Solver::try_new(cfg)?;
-    let an = solver.analyze(&a)?;
-    let s = an.stats;
+    let solver = config_from(args)?.build()?;
+    let sys = solver.analyze(a)?;
+    let s = *sys.symbolic_stats();
     println!("matrix   : {name}");
     println!("n        : {}", s.n);
     println!("nnz      : {}", s.nnz);
@@ -306,11 +311,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
     for bm in &suite {
         let a = (bm.build)();
-        let hylu = Solver::try_new(SolverConfig {
-            threads,
-            ..SolverConfig::default()
-        })?;
-        let base = Solver::try_new(baseline::pardiso_like(threads))?;
+        let hylu = SolverBuilder::new().threads(threads).build()?;
+        let base = Solver::from_config(baseline::pardiso_like(threads))?;
         let b = gen::rhs_for_ones(&a);
         let t_h = run_once(&hylu, &a, &b)?;
         let t_b = run_once(&base, &a, &b)?;
@@ -332,9 +334,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 fn run_once(s: &Solver, a: &Csr, b: &[f64]) -> Result<f64> {
     let t = std::time::Instant::now();
-    let an = s.analyze(a)?;
-    let f = s.factor(a, &an)?;
-    let _ = s.solve(a, &an, &f, b)?;
+    let sys = s.analyze(a)?.factor()?;
+    let _ = sys.solve(b)?;
     Ok(t.elapsed().as_secs_f64())
 }
 
@@ -395,13 +396,13 @@ where
 /// comparison.
 fn cmd_serve(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args)?;
-    let mut cfg = config_from(args)?;
+    let mut builder = config_from(args)?.repeated();
     if args.get("threads").is_none() {
         // per-shard pool width: default to 1 so shards + callers provide
         // the parallelism instead of oversubscribing cores
-        cfg.threads = 1;
+        builder = builder.threads(1);
     }
-    cfg.repeated = true;
+    let cfg = builder.into_config();
     let nsys = flag_usize(args, "systems", 1)?.max(1);
     let shards = flag_usize(args, "shards", 1)?.max(1);
     let callers = flag_usize(args, "rhs-workers", 4)?.max(1);
@@ -453,19 +454,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // serialized baseline: the pre-service front door (one solver, one
     // mutex, one in-flight solve)
-    let base = Solver::try_new(cfg)?;
-    let mut states = Vec::with_capacity(nsys);
+    let base = Solver::from_config(cfg)?;
+    let mut states: Vec<LinearSystem<Factored>> = Vec::with_capacity(nsys);
     for m in &systems {
-        let an = base.analyze(m)?;
-        let f = base.factor(m, &an)?;
-        states.push((an, f));
+        states.push(base.analyze(m)?.factor()?);
     }
     let lock = std::sync::Mutex::new(());
     let t1 = std::time::Instant::now();
     let worst_base = drive_callers(callers, requests, nsys, |sys| {
         let _g = lock.lock().unwrap();
-        let (an, f) = &states[sys];
-        base.solve(&systems[sys], an, f, &bs[sys])
+        states[sys].solve(&bs[sys])
     })?;
     let t_base = t1.elapsed().as_secs_f64();
 
@@ -530,9 +528,17 @@ mod tests {
     #[test]
     fn config_kernel_parse() {
         let a = Args::parse(&sv(&["solve", "--kernel", "sup-sup"]));
-        assert_eq!(config_from(&a).unwrap().kernel, Some(KernelMode::SupSup));
+        assert_eq!(
+            config_from(&a).unwrap().config().kernel,
+            Some(KernelMode::SupSup)
+        );
         let bad = Args::parse(&sv(&["solve", "--kernel", "bogus"]));
         assert!(config_from(&bad).is_err());
+        // flags after `--kernel auto` must still apply
+        let auto = Args::parse(&sv(&["solve", "--kernel", "auto", "--repeated"]));
+        let cfg = config_from(&auto).unwrap().into_config();
+        assert_eq!(cfg.kernel, None);
+        assert!(cfg.repeated);
     }
 
     #[test]
@@ -551,20 +557,29 @@ mod tests {
 
     #[test]
     fn bad_rhs_flag_is_rejected() {
+        // exit status is the stable Error::Invalid code
         let code = run(&sv(&["solve", "--gen", "mesh2d:100", "--rhs", "four"]));
-        assert_eq!(code, 1);
+        assert_eq!(code, Error::Invalid(String::new()).code());
     }
 
     #[test]
     fn unknown_command_usage() {
+        // usage errors share Error::Invalid's stable code (2)
         assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn io_errors_exit_with_the_io_code() {
+        let code = run(&sv(&["solve", "--matrix", "/no/such/file.mtx"]));
+        assert_eq!(code, Error::Io(String::new()).code());
+        assert_eq!(code, 3);
     }
 
     #[test]
     fn bench_rejects_bad_kernel_tier() {
         // bench interprets --kernel as the dispatch tier; bad names fail
         // fast before any suite work
-        assert_eq!(run(&sv(&["bench", "--kernel", "bogus"])), 1);
+        assert_eq!(run(&sv(&["bench", "--kernel", "bogus"])), 2);
     }
 
     #[test]

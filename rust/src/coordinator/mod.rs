@@ -1,4 +1,4 @@
-//! The coordinator: HYLU's public solver API (`analyze` → `factor` /
+//! The coordinator: HYLU's solver core (`analyze` → `factor` /
 //! `refactor` → `solve` / `solve_many`), configuration, phase statistics,
 //! and the composition of static pivoting, ordering, supernode pivoting
 //! and scalings into one consistent permutation story.
@@ -7,6 +7,17 @@
 //! arenas, see [`crate::exec`]) created once in [`Solver::try_new`]:
 //! after one warm-up `factor` + `solve`, every `refactor` + `solve` cycle
 //! runs on already-parked workers with zero O(n) scratch allocations.
+//!
+//! **This module's triple-threading methods are deprecated as a public
+//! API.** Callers used to thread `(a, &Analysis, &Factorization)` through
+//! every call themselves — the exact mismatched-analysis footgun the
+//! engine's uid-keyed caches defend against. The supported public surface
+//! is the owning, typestate handle API in [`crate::api`]
+//! ([`crate::api::SolverBuilder`] → [`crate::api::Solver::analyze`] →
+//! [`crate::api::LinearSystem`]), which makes stale pairings
+//! unrepresentable at compile time. The deprecated wrappers remain as
+//! thin shims over the same internals and produce bit-identical results
+//! (asserted in `rust/tests/api_handles.rs`).
 
 pub mod config;
 pub mod stats;
@@ -134,6 +145,32 @@ impl Analysis {
 /// keeps warm (older entries are evicted and re-cloned on next use).
 const PA_CACHE_CAP: usize = 4;
 
+/// Resolved iterative-refinement parameters for one solve call.
+///
+/// The legacy API always reads these from [`SolverConfig`]; the handle
+/// API ([`crate::api::LinearSystem`]) lets callers override them per
+/// solve through [`crate::api::SolveOpts`].
+#[derive(Clone, Copy, Debug)]
+pub struct RefineParams {
+    /// Iteration cap (0 disables refinement entirely).
+    pub max_iter: usize,
+    /// Residual above which refinement starts even without perturbation.
+    pub tol: f64,
+    /// Refinement stops once the residual is below this.
+    pub target: f64,
+}
+
+impl RefineParams {
+    /// The configured defaults of `cfg` (what the legacy API always uses).
+    pub fn from_config(cfg: &SolverConfig) -> RefineParams {
+        RefineParams {
+            max_iter: cfg.refine_max_iter,
+            tol: cfg.refine_tol,
+            target: cfg.refine_target,
+        }
+    }
+}
+
 /// The product of [`Solver::factor`]: numeric factors plus statistics.
 #[derive(Debug)]
 pub struct Factorization {
@@ -209,7 +246,16 @@ impl Solver {
     /// Preprocessing phase: static pivoting (MC64), fill-reducing ordering,
     /// symbolic factorization with supernode detection, kernel selection,
     /// and schedule construction (including the pool execution plan).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `hylu::api::Solver::analyze` \
+                (see DESIGN.md §6 for the migration table)"
+    )]
     pub fn analyze(&self, a: &Csr) -> Result<Analysis> {
+        self.analyze_core(a)
+    }
+
+    pub(crate) fn analyze_core(&self, a: &Csr) -> Result<Analysis> {
         if a.n == 0 {
             return Err(Error::Invalid("empty matrix".into()));
         }
@@ -320,7 +366,16 @@ impl Solver {
 
     /// Numeric factorization (with supernode diagonal pivoting) as a job
     /// on the persistent pool.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Analyzed>::factor` \
+                owns the matrix/analysis pairing (see DESIGN.md §6)"
+    )]
     pub fn factor(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
+        self.factor_core(a, an)
+    }
+
+    pub(crate) fn factor_core(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
         let t0 = Instant::now();
         let mut scratch = self.engine.factor_scratch();
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
@@ -357,7 +412,21 @@ impl Solver {
     /// Refactorization: same pattern, new values, stored pivot order, no
     /// pivot search — the repeated-solve fast path. On a warm engine this
     /// spawns no threads and performs no O(n) scratch allocation.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Factored>::refactor` \
+                (see DESIGN.md §6)"
+    )]
     pub fn refactor(&self, a: &Csr, an: &Analysis, f: &mut Factorization) -> Result<()> {
+        self.refactor_core(a, an, f)
+    }
+
+    pub(crate) fn refactor_core(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &mut Factorization,
+    ) -> Result<()> {
         let t0 = Instant::now();
         let mut scratch = self.engine.factor_scratch();
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
@@ -391,11 +460,23 @@ impl Solver {
     /// Solve `A x = b` with the factorization; iterative refinement runs
     /// automatically when pivots were perturbed (or the residual exceeds
     /// the configured tolerance).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Factored>::solve` \
+                (see DESIGN.md §6)"
+    )]
     pub fn solve(&self, a: &Csr, an: &Analysis, f: &Factorization, b: &[f64]) -> Result<Vec<f64>> {
-        Ok(self.solve_with_stats(a, an, f, b)?.0)
+        let mut x = Vec::new();
+        self.solve_into_core(a, an, f, b, &mut x, &RefineParams::from_config(&self.cfg))?;
+        Ok(x)
     }
 
     /// [`Solver::solve`] with phase statistics.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Factored>::solve_with_stats` \
+                (see DESIGN.md §6)"
+    )]
     pub fn solve_with_stats(
         &self,
         a: &Csr,
@@ -404,13 +485,18 @@ impl Solver {
         b: &[f64],
     ) -> Result<(Vec<f64>, SolveStats)> {
         let mut x = Vec::new();
-        let st = self.solve_into(a, an, f, b, &mut x)?;
+        let st = self.solve_into_core(a, an, f, b, &mut x, &RefineParams::from_config(&self.cfg))?;
         Ok((x, st))
     }
 
     /// Solve into a caller-provided buffer (`x` is resized to `n`). With a
     /// reused buffer on a warm engine, the whole call performs no O(n)
     /// allocation — the repeated-solve inner loop.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Factored>::solve_into` \
+                (see DESIGN.md §6)"
+    )]
     pub fn solve_into(
         &self,
         a: &Csr,
@@ -419,6 +505,18 @@ impl Solver {
         b: &[f64],
         x: &mut Vec<f64>,
     ) -> Result<SolveStats> {
+        self.solve_into_core(a, an, f, b, x, &RefineParams::from_config(&self.cfg))
+    }
+
+    pub(crate) fn solve_into_core(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        b: &[f64],
+        x: &mut Vec<f64>,
+        rp: &RefineParams,
+    ) -> Result<SolveStats> {
         if b.len() != a.n {
             return Err(Error::Invalid("rhs length mismatch".into()));
         }
@@ -426,7 +524,7 @@ impl Solver {
         let mut guard = self.engine.scratch();
         let scratch = &mut *guard;
         self.substitute_into(an, f, b, &mut scratch.y, x);
-        let (residual, iters) = self.refine_in_place(a, an, f, b, x, scratch);
+        let (residual, iters) = self.refine_in_place(a, an, f, b, x, scratch, rp);
         Ok(SolveStats {
             t_solve: t0.elapsed().as_secs_f64(),
             residual,
@@ -443,6 +541,11 @@ impl Solver {
     /// kernels perform the same operations in the same order per column,
     /// and batched refinement makes the same per-column accept/stop
     /// decisions on the same floating-point values as the scalar path.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Factored>::solve_many` \
+                (see DESIGN.md §6)"
+    )]
     pub fn solve_many(
         &self,
         a: &Csr,
@@ -450,11 +553,18 @@ impl Solver {
         f: &Factorization,
         bs: &[Vec<f64>],
     ) -> Result<Vec<Vec<f64>>> {
-        Ok(self.solve_many_with_stats(a, an, f, bs)?.0)
+        let mut xs = Vec::new();
+        self.solve_many_into_core(a, an, f, bs, &mut xs, &RefineParams::from_config(&self.cfg))?;
+        Ok(xs)
     }
 
     /// [`Solver::solve_many`] with aggregate statistics (`residual` is the
     /// worst per-RHS residual, `refine_iters` the total across RHS).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: \
+                `LinearSystem::<Factored>::solve_many_with_stats` (see DESIGN.md §6)"
+    )]
     pub fn solve_many_with_stats(
         &self,
         a: &Csr,
@@ -463,7 +573,8 @@ impl Solver {
         bs: &[Vec<f64>],
     ) -> Result<(Vec<Vec<f64>>, SolveStats)> {
         let mut xs = Vec::new();
-        let st = self.solve_many_into(a, an, f, bs, &mut xs)?;
+        let st =
+            self.solve_many_into_core(a, an, f, bs, &mut xs, &RefineParams::from_config(&self.cfg))?;
         Ok((xs, st))
     }
 
@@ -471,6 +582,11 @@ impl Solver {
     /// vectors of length `n`. With reused buffers on a warm engine the
     /// whole call performs no O(n·k) allocation — the batched counterpart
     /// of [`Solver::solve_into`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the LinearSystem handle API: `LinearSystem::<Factored>::solve_many_into` \
+                (see DESIGN.md §6)"
+    )]
     pub fn solve_many_into(
         &self,
         a: &Csr,
@@ -478,6 +594,18 @@ impl Solver {
         f: &Factorization,
         bs: &[Vec<f64>],
         xs: &mut Vec<Vec<f64>>,
+    ) -> Result<SolveStats> {
+        self.solve_many_into_core(a, an, f, bs, xs, &RefineParams::from_config(&self.cfg))
+    }
+
+    pub(crate) fn solve_many_into_core(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &Factorization,
+        bs: &[Vec<f64>],
+        xs: &mut Vec<Vec<f64>>,
+        rp: &RefineParams,
     ) -> Result<SolveStats> {
         let n = a.n;
         let k = bs.len();
@@ -538,7 +666,7 @@ impl Solver {
         // batched refinement: residual matvec + correction substitution
         // run as a block over the active lanes, with per-column
         // accept/stop decisions identical to the scalar path
-        let (worst, total_iters) = self.refine_many_in_place(a, an, f, bs, xs, scratch);
+        let (worst, total_iters) = self.refine_many_in_place(a, an, f, bs, xs, scratch, rp);
         Ok(SolveStats {
             t_solve: t0.elapsed().as_secs_f64(),
             residual: worst,
@@ -607,13 +735,14 @@ impl Solver {
         b: &[f64],
         x: &mut Vec<f64>,
         scratch: &mut SolveScratch,
+        rp: &RefineParams,
     ) -> (f64, usize) {
         let n = a.n;
         let counters = self.engine.counters();
         let mut residual = residual_norm(a, &x[..n], b, &mut scratch.r, counters);
         let mut iters = 0usize;
-        if f.fac.perturbed > 0 || residual > self.cfg.refine_tol {
-            while iters < self.cfg.refine_max_iter && residual > self.cfg.refine_target {
+        if f.fac.perturbed > 0 || residual > rp.tol {
+            while iters < rp.max_iter && residual > rp.target {
                 // scratch.r holds A·x from the residual computation:
                 // rewrite it into the correction RHS b − A·x
                 for (ri, bi) in scratch.r[..n].iter_mut().zip(b) {
@@ -657,6 +786,7 @@ impl Solver {
         bs: &[Vec<f64>],
         xs: &mut [Vec<f64>],
         scratch: &mut SolveScratch,
+        rp: &RefineParams,
     ) -> (f64, usize) {
         let n = a.n;
         let k = bs.len();
@@ -689,15 +819,13 @@ impl Solver {
             let den: f64 = b.iter().map(|v| v.abs()).sum();
             res[q] = num / den.max(1e-300);
         }
-        let max_iter = self.cfg.refine_max_iter;
+        let max_iter = rp.max_iter;
         let mut iters = vec![0usize; k];
         // columns entering refinement: same gate as the scalar path's
         // outer `if` plus its first `while` check
         let mut active: Vec<usize> = (0..k)
             .filter(|&q| {
-                (f.fac.perturbed > 0 || res[q] > self.cfg.refine_tol)
-                    && max_iter > 0
-                    && res[q] > self.cfg.refine_target
+                (f.fac.perturbed > 0 || res[q] > rp.tol) && max_iter > 0 && res[q] > rp.target
             })
             .collect();
         while !active.is_empty() {
@@ -761,7 +889,7 @@ impl Solver {
                     for (i, xi) in x.iter_mut().enumerate() {
                         *xi = x2k[i * k + q];
                     }
-                    iters[q] < max_iter && res[q] > self.cfg.refine_target
+                    iters[q] < max_iter && res[q] > rp.target
                 } else {
                     false
                 }
@@ -836,6 +964,10 @@ fn build_permuted(
 
 #[cfg(test)]
 mod tests {
+    // these tests deliberately exercise the legacy `(a, an, f)` wrappers;
+    // the handle API's coverage lives in rust/tests/api_handles.rs
+    #![allow(deprecated)]
+
     use super::*;
     use crate::sparse::gen;
     use crate::testutil::{max_abs_diff, Prng};

@@ -1,0 +1,486 @@
+//! Stable C ABI over the [`crate::api`] handles (feature `ffi`).
+//!
+//! Mirrors upstream HYLU's C interface shape —
+//! `Analyze / Factorize / ReFactorize / Solve / Free` on one opaque
+//! handle — so cross-language callers and PARDISO-style drop-in
+//! comparisons work against this reproduction. The Rust typestate
+//! (`LinearSystem<Analyzed>` → `LinearSystem<Factored>`) degrades to a
+//! runtime-checked state machine here: calling out of order returns
+//! `HYLU_ERR_INVALID` instead of failing to compile.
+//!
+//! The authoritative C declarations live in `include/hylu.h`. Error
+//! codes are [`crate::Error::code`] values (shared with the CLI exit
+//! status); `0` is success and `1` is reserved for a caught Rust panic.
+//!
+//! Build: `cargo build --release --features ffi` produces
+//! `libhylu.{so,dylib}` (the crate is also a `cdylib`).
+//!
+//! # Conventions
+//!
+//! - Matrices enter in CSR with 0-based `int64_t` indices: `ap` has
+//!   `n + 1` row offsets starting at 0, `ai`/`ax` hold `ap[n]` column
+//!   indices and values. Column indices must be strictly increasing
+//!   within each row (use the MatrixMarket reader or a COO pre-pass to
+//!   clean up arbitrary input).
+//! - `hylu_refactorize`'s `ax` aligns element-for-element with the
+//!   `ai`/`ax` arrays passed to `hylu_analyze` (same pattern, new
+//!   values).
+//! - Right-hand sides and solutions are dense `double` arrays of length
+//!   `n`; `hylu_solve_many` packs `nrhs` of them column-after-column
+//!   (`b + q*n`).
+//! - Handles are **not thread-safe**: every entry point (including
+//!   `hylu_solve`, which records failures in the handle's error slot)
+//!   takes the handle exclusively — serialize all calls per handle, or
+//!   use one handle per thread. Concurrent solving on shared factors is
+//!   a Rust-API capability (`LinearSystem` is `Sync`), not an ABI one.
+//! - A caught panic ([`HYLU_ERR_PANIC`]) in `analyze`/`factorize`/
+//!   `refactorize` **poisons** the handle (factors may be inconsistent);
+//!   subsequent calls fail with [`HYLU_ERR_INVALID`] until a fresh
+//!   `hylu_analyze` resets it.
+
+use std::ffi::CString;
+use std::os::raw::c_char;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::api::{Analyzed, Factored, LinearSystem, Solver, SolverBuilder};
+use crate::sparse::csr::Csr;
+use crate::{Error, Result};
+
+/// Success.
+pub const HYLU_OK: i32 = 0;
+/// A Rust panic was caught at the ABI boundary (internal bug).
+pub const HYLU_ERR_PANIC: i32 = 1;
+/// Invalid input or out-of-order call ([`Error::Invalid`]).
+pub const HYLU_ERR_INVALID: i32 = 2;
+/// I/O or parse failure ([`Error::Io`]).
+pub const HYLU_ERR_IO: i32 = 3;
+/// Structurally singular matrix ([`Error::StructurallySingular`]).
+pub const HYLU_ERR_SINGULAR: i32 = 4;
+/// Unperturbable zero pivot ([`Error::ZeroPivot`]).
+pub const HYLU_ERR_ZERO_PIVOT: i32 = 5;
+/// Runtime/backend failure ([`Error::Runtime`]).
+pub const HYLU_ERR_RUNTIME: i32 = 6;
+
+enum SystemState {
+    Empty,
+    Analyzed(LinearSystem<Analyzed>),
+    Factored(LinearSystem<Factored>),
+    /// A panic was caught mid-mutation; factors may be half-written.
+    /// Everything fails loudly until `hylu_analyze` rebuilds the state.
+    Poisoned,
+}
+
+/// The opaque handle behind `hylu_handle` in `include/hylu.h`: one
+/// solver (persistent engine) plus at most one linear system in one of
+/// the lifecycle states, and the reusable solve buffers that keep the
+/// warm repeated-solve loop allocation-free through the ABI too (after
+/// the first solve of a given width, `hylu_solve`/`hylu_solve_many`
+/// perform no heap allocation — only the unavoidable copies between the
+/// caller's arrays and the engine's buffers).
+pub struct HyluHandle {
+    solver: Solver,
+    state: SystemState,
+    last_error: CString,
+    /// Packed RHS buffers for `hylu_solve_many` (capacity reused).
+    bs: Vec<Vec<f64>>,
+    /// Solution buffers for `hylu_solve_many` (capacity reused).
+    xs: Vec<Vec<f64>>,
+    /// Single-RHS solution buffer (capacity reused).
+    x1: Vec<f64>,
+}
+
+impl HyluHandle {
+    fn fail(&mut self, e: &Error) -> i32 {
+        self.last_error = CString::new(e.to_string()).unwrap_or_default();
+        e.code()
+    }
+
+    fn invalid(&mut self, msg: &str) -> i32 {
+        self.fail(&Error::Invalid(msg.into()))
+    }
+}
+
+/// Run `f` with panic containment; a panic reports [`HYLU_ERR_PANIC`].
+/// For handle-mutating entry points use [`guarded_mut`] instead, which
+/// also poisons the handle.
+fn guarded(f: impl FnOnce() -> i32) -> i32 {
+    catch_unwind(AssertUnwindSafe(f)).unwrap_or(HYLU_ERR_PANIC)
+}
+
+/// [`guarded`] for read-only entry points on a handle (the solve path):
+/// a caught panic leaves the factors untouched, so the handle stays
+/// usable, but the message slot is updated so `hylu_last_error` never
+/// reports a stale, unrelated failure.
+fn guarded_note(h: &mut HyluHandle, f: impl FnOnce(&mut HyluHandle) -> i32) -> i32 {
+    match catch_unwind(AssertUnwindSafe(|| f(&mut *h))) {
+        Ok(code) => code,
+        Err(_) => {
+            h.last_error = CString::new("internal panic caught in solve; factors unchanged")
+                .unwrap_or_default();
+            HYLU_ERR_PANIC
+        }
+    }
+}
+
+/// [`guarded`] for entry points that mutate the system state: a caught
+/// panic may have left factors half-written, so the handle is poisoned
+/// (every later call fails with [`HYLU_ERR_INVALID`] until a fresh
+/// `hylu_analyze`).
+fn guarded_mut(h: &mut HyluHandle, f: impl FnOnce(&mut HyluHandle) -> i32) -> i32 {
+    match catch_unwind(AssertUnwindSafe(|| f(&mut *h))) {
+        Ok(code) => code,
+        Err(_) => {
+            h.state = SystemState::Poisoned;
+            h.last_error =
+                CString::new("internal panic caught; handle poisoned — call hylu_analyze to reset")
+                    .unwrap_or_default();
+            HYLU_ERR_PANIC
+        }
+    }
+}
+
+/// Build a validated CSR matrix from raw 0-based CSR arrays.
+///
+/// # Safety
+/// `ap` must point to `n + 1` readable `i64`s; `ai` and `ax` must point
+/// to `ap[n]` readable elements each.
+unsafe fn csr_from_raw(n: i64, ap: *const i64, ai: *const i64, ax: *const f64) -> Result<Csr> {
+    if n <= 0 {
+        return Err(Error::Invalid(format!("n must be positive (got {n})")));
+    }
+    if ap.is_null() || ai.is_null() || ax.is_null() {
+        return Err(Error::Invalid("ap/ai/ax must be non-null".into()));
+    }
+    let n = n as usize;
+    let ap = std::slice::from_raw_parts(ap, n + 1);
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut prev = 0i64;
+    for (i, &p) in ap.iter().enumerate() {
+        if p < prev || (i == 0 && p != 0) {
+            return Err(Error::Invalid(format!(
+                "ap[{i}] = {p} is not a monotone 0-based row offset"
+            )));
+        }
+        prev = p;
+        indptr.push(p as usize);
+    }
+    let nnz = indptr[n];
+    let ai = std::slice::from_raw_parts(ai, nnz);
+    let ax = std::slice::from_raw_parts(ax, nnz);
+    let mut indices = Vec::with_capacity(nnz);
+    for (k, &j) in ai.iter().enumerate() {
+        if j < 0 || j as usize >= n {
+            return Err(Error::Invalid(format!(
+                "ai[{k}] = {j} out of bounds for n={n} (indices are 0-based)"
+            )));
+        }
+        indices.push(j as usize);
+    }
+    let a = Csr {
+        n,
+        indptr,
+        indices,
+        vals: ax.to_vec(),
+    };
+    a.validate().map_err(|e| {
+        Error::Invalid(format!(
+            "csr input rejected ({e}); column indices must be strictly increasing per row"
+        ))
+    })?;
+    Ok(a)
+}
+
+/// Create a solver handle. `threads = 0` uses all cores; `repeated != 0`
+/// selects the repeated-solve preset (relaxed supernodes, fast
+/// refactorization). Writes the handle to `*out` and returns `HYLU_OK`.
+///
+/// # Safety
+/// `out` must be a valid pointer to a `hylu_handle` slot. The returned
+/// handle must be released with [`hylu_free`].
+#[no_mangle]
+pub unsafe extern "C" fn hylu_create(threads: i64, repeated: i32, out: *mut *mut HyluHandle) -> i32 {
+    guarded(|| {
+        if out.is_null() {
+            return HYLU_ERR_INVALID;
+        }
+        if threads < 0 {
+            return HYLU_ERR_INVALID;
+        }
+        let mut builder = SolverBuilder::new().threads(threads as usize);
+        builder = if repeated != 0 {
+            builder.repeated()
+        } else {
+            builder.one_shot()
+        };
+        match builder.build() {
+            Ok(solver) => {
+                let h = Box::new(HyluHandle {
+                    solver,
+                    state: SystemState::Empty,
+                    last_error: CString::default(),
+                    bs: Vec::new(),
+                    xs: Vec::new(),
+                    x1: Vec::new(),
+                });
+                *out = Box::into_raw(h);
+                HYLU_OK
+            }
+            // no handle exists yet to carry a message, but the stable
+            // code still tells the caller what class of failure this was
+            Err(e) => e.code(),
+        }
+    })
+}
+
+/// Analyze a CSR matrix (0-based indices, see the module docs for the
+/// array contract). Replaces any previously analyzed/factorized system
+/// on this handle.
+///
+/// # Safety
+/// `h` must be a live handle from [`hylu_create`]; `ap` must point to
+/// `n + 1` readable `int64_t`s and `ai`/`ax` to `ap[n]` readable
+/// elements each.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_analyze(
+    h: *mut HyluHandle,
+    n: i64,
+    ap: *const i64,
+    ai: *const i64,
+    ax: *const f64,
+) -> i32 {
+    if h.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let h = &mut *h;
+    guarded_mut(h, |h| {
+        let a = match csr_from_raw(n, ap, ai, ax) {
+            Ok(a) => a,
+            Err(e) => return h.fail(&e),
+        };
+        match h.solver.analyze(a) {
+            Ok(sys) => {
+                h.state = SystemState::Analyzed(sys);
+                HYLU_OK
+            }
+            Err(e) => h.fail(&e),
+        }
+    })
+}
+
+/// Numeric factorization with pivot search: `Analyzed → Factored`. On an
+/// already-factored handle this re-runs the full factorization of the
+/// current values (fresh pivot order).
+///
+/// # Safety
+/// `h` must be a live handle from [`hylu_create`].
+#[no_mangle]
+pub unsafe extern "C" fn hylu_factorize(h: *mut HyluHandle) -> i32 {
+    if h.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let h = &mut *h;
+    guarded_mut(h, |h| {
+        match std::mem::replace(&mut h.state, SystemState::Empty) {
+            SystemState::Empty => h.invalid("hylu_factorize before hylu_analyze"),
+            SystemState::Poisoned => {
+                h.state = SystemState::Poisoned;
+                h.invalid("handle poisoned by a caught panic; call hylu_analyze to reset")
+            }
+            SystemState::Analyzed(sys) => match sys.factor() {
+                Ok(sys) => {
+                    h.state = SystemState::Factored(sys);
+                    HYLU_OK
+                }
+                Err(e) => h.fail(&e),
+            },
+            SystemState::Factored(mut sys) => {
+                let r = sys.factorize();
+                h.state = SystemState::Factored(sys);
+                match r {
+                    Ok(()) => HYLU_OK,
+                    Err(e) => h.fail(&e),
+                }
+            }
+        }
+    })
+}
+
+/// Refactorize with new values on the stored pivot order (no pivot
+/// search — the repeated-solve fast path). `ax` aligns with the arrays
+/// passed to [`hylu_analyze`] and must hold `nnz` values.
+///
+/// # Safety
+/// `h` must be a live, factorized handle; `ax` must point to `nnz`
+/// readable doubles (`nnz` as returned by [`hylu_nnz`]).
+#[no_mangle]
+pub unsafe extern "C" fn hylu_refactorize(h: *mut HyluHandle, ax: *const f64) -> i32 {
+    if h.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let h = &mut *h;
+    guarded_mut(h, |h| {
+        if ax.is_null() {
+            return h.invalid("ax must be non-null");
+        }
+        let res = match &mut h.state {
+            SystemState::Factored(sys) => {
+                let vals = std::slice::from_raw_parts(ax, sys.nnz());
+                sys.refactor(vals)
+            }
+            SystemState::Poisoned => {
+                return h.invalid("handle poisoned by a caught panic; call hylu_analyze to reset")
+            }
+            _ => return h.invalid("hylu_refactorize before hylu_factorize"),
+        };
+        match res {
+            Ok(()) => HYLU_OK,
+            Err(e) => h.fail(&e),
+        }
+    })
+}
+
+/// Solve `A x = b` (iterative refinement runs automatically when pivots
+/// were perturbed). `b` and `x` are length-`n` arrays; they may not
+/// alias.
+///
+/// # Safety
+/// `h` must be a live, factorized handle; `b` must point to `n` readable
+/// doubles and `x` to `n` writable doubles.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_solve(h: *mut HyluHandle, b: *const f64, x: *mut f64) -> i32 {
+    hylu_solve_many(h, 1, b, x)
+}
+
+/// Batched solve: `nrhs` right-hand sides packed column-after-column in
+/// `b` (`b + q*n`), solutions written the same way into `x`. Column `q`
+/// is bit-identical to a scalar [`hylu_solve`] of that column.
+///
+/// # Safety
+/// `h` must be a live, factorized handle; `b` must point to `nrhs * n`
+/// readable doubles and `x` to `nrhs * n` writable doubles.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_solve_many(
+    h: *mut HyluHandle,
+    nrhs: i64,
+    b: *const f64,
+    x: *mut f64,
+) -> i32 {
+    if h.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let h = &mut *h;
+    guarded_note(h, |h| {
+        if nrhs <= 0 {
+            return h.invalid("nrhs must be positive");
+        }
+        if b.is_null() || x.is_null() {
+            return h.invalid("b/x must be non-null");
+        }
+        let k = nrhs as usize;
+        let n = match &h.state {
+            SystemState::Factored(sys) => sys.n(),
+            SystemState::Poisoned => {
+                return h.invalid("handle poisoned by a caught panic; call hylu_analyze to reset")
+            }
+            _ => return h.invalid("hylu_solve before hylu_factorize"),
+        };
+        let bin = std::slice::from_raw_parts(b, n * k);
+        // the engine solves into the handle's reusable buffers: after
+        // the first call of a given width this path is allocation-free
+        let res = if k == 1 {
+            let SystemState::Factored(sys) = &h.state else {
+                unreachable!()
+            };
+            sys.solve_into(bin, &mut h.x1).map(|_| ())
+        } else {
+            h.bs.truncate(k);
+            h.bs.resize_with(k, Vec::new);
+            for (q, dst) in h.bs.iter_mut().enumerate() {
+                dst.clear();
+                dst.extend_from_slice(&bin[q * n..(q + 1) * n]);
+            }
+            let SystemState::Factored(sys) = &h.state else {
+                unreachable!()
+            };
+            sys.solve_many_into(&h.bs, &mut h.xs).map(|_| ())
+        };
+        match res {
+            Ok(()) => {
+                let out = std::slice::from_raw_parts_mut(x, n * k);
+                if k == 1 {
+                    out.copy_from_slice(&h.x1);
+                } else {
+                    for (q, xq) in h.xs.iter().enumerate() {
+                        out[q * n..(q + 1) * n].copy_from_slice(xq);
+                    }
+                }
+                HYLU_OK
+            }
+            Err(e) => h.fail(&e),
+        }
+    })
+}
+
+/// Dimension of the analyzed system, or 0 when nothing is analyzed.
+///
+/// # Safety
+/// `h` must be a live handle from [`hylu_create`] (or null, which
+/// returns 0).
+#[no_mangle]
+pub unsafe extern "C" fn hylu_n(h: *const HyluHandle) -> i64 {
+    if h.is_null() {
+        return 0;
+    }
+    match &(*h).state {
+        SystemState::Analyzed(sys) => sys.n() as i64,
+        SystemState::Factored(sys) => sys.n() as i64,
+        SystemState::Empty | SystemState::Poisoned => 0,
+    }
+}
+
+/// Stored nonzeros of the analyzed system, or 0 when nothing is
+/// analyzed.
+///
+/// # Safety
+/// `h` must be a live handle from [`hylu_create`] (or null, which
+/// returns 0).
+#[no_mangle]
+pub unsafe extern "C" fn hylu_nnz(h: *const HyluHandle) -> i64 {
+    if h.is_null() {
+        return 0;
+    }
+    match &(*h).state {
+        SystemState::Analyzed(sys) => sys.nnz() as i64,
+        SystemState::Factored(sys) => sys.nnz() as i64,
+        SystemState::Empty | SystemState::Poisoned => 0,
+    }
+}
+
+/// Message of the last error recorded on this handle (empty string when
+/// none). The pointer is valid until the next failing call on the same
+/// handle or [`hylu_free`].
+///
+/// # Safety
+/// `h` must be a live handle from [`hylu_create`] (or null, which
+/// returns an empty static string).
+#[no_mangle]
+pub unsafe extern "C" fn hylu_last_error(h: *const HyluHandle) -> *const c_char {
+    if h.is_null() {
+        static EMPTY: &[u8] = b"\0";
+        return EMPTY.as_ptr() as *const c_char;
+    }
+    (*h).last_error.as_ptr()
+}
+
+/// Release a handle (idempotent for null). Joins nothing: the engine's
+/// worker threads park and exit with the handle.
+///
+/// # Safety
+/// `h` must be null or a live handle from [`hylu_create`]; it must not
+/// be used afterwards.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_free(h: *mut HyluHandle) {
+    if !h.is_null() {
+        drop(Box::from_raw(h));
+    }
+}

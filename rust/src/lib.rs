@@ -25,16 +25,24 @@
 //!           front door for concurrent callers (batched block solves)
 //! ```
 //!
+//! The public surface is the typestate handle API in [`api`]
+//! ([`api::SolverBuilder`] → [`api::Solver::analyze`] →
+//! [`api::LinearSystem`]); a stable C ABI over the same handles lives
+//! behind the `ffi` feature (`include/hylu.h`).
+//!
 //! See `DESIGN.md` for the paper-to-module map (including the persistent
 //! execution engine in [`exec`]) and `benches/` for the reproduction of
 //! the paper's evaluation figures.
 
+pub mod api;
 pub mod baseline;
 pub mod bench_harness;
 pub mod bench_suite;
 pub mod cli;
 pub mod coordinator;
 pub mod exec;
+#[cfg(feature = "ffi")]
+pub mod ffi;
 pub mod numeric;
 pub mod ordering;
 pub mod par;
@@ -46,17 +54,30 @@ pub mod symbolic;
 pub mod testutil;
 
 /// Common imports for downstream users.
+///
+/// `Solver` here is the handle-based [`crate::api::Solver`]; the legacy
+/// triple-threading solver stays importable as
+/// [`crate::coordinator::Solver`] (deprecated).
 pub mod prelude {
-    pub use crate::coordinator::{FactorStats, SolveStats, Solver, SolverConfig, SymbolicStats};
+    pub use crate::api::{Analyzed, Factored, LinearSystem, SolveOpts, Solver, SolverBuilder};
+    pub use crate::coordinator::{FactorStats, SolveStats, SolverConfig, SymbolicStats};
     pub use crate::numeric::kernels::KernelTier;
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;
     pub use crate::service::{ServiceConfig, ServiceStats, SolverService};
     pub use crate::sparse::csr::Csr;
+    pub use crate::sparse::input::{CscInput, MatrixInput};
+    pub use crate::sparse::Coo;
 }
 
 /// Crate-wide error type.
+///
+/// Marked `#[non_exhaustive]`: downstream matches need a wildcard arm, so
+/// future variants are not a breaking change. Every variant carries a
+/// stable numeric code ([`Error::code`]) shared by the C ABI
+/// (`include/hylu.h`) and the `hylu` CLI's process exit status.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub enum Error {
     /// The matrix is structurally singular (no full transversal exists).
     StructurallySingular { matched: usize, n: usize },
@@ -68,6 +89,33 @@ pub enum Error {
     Io(String),
     /// XLA/PJRT runtime failure.
     Runtime(String),
+}
+
+impl Error {
+    /// Stable numeric code for this error, shared across the library, the
+    /// C ABI (`include/hylu.h`, `HYLU_ERR_*`), and the CLI exit status.
+    ///
+    /// | code | meaning                              |
+    /// |------|--------------------------------------|
+    /// | 0    | success (never returned by `code`)   |
+    /// | 2    | invalid input ([`Error::Invalid`])   |
+    /// | 3    | I/O or parse failure ([`Error::Io`]) |
+    /// | 4    | structurally singular                |
+    /// | 5    | zero pivot (perturbation disabled)   |
+    /// | 6    | runtime/backend failure              |
+    ///
+    /// Codes are append-only: existing assignments never change, new
+    /// variants get new codes. Code 1 is reserved (generic failure in
+    /// shells and test harnesses).
+    pub fn code(&self) -> i32 {
+        match self {
+            Error::Invalid(_) => 2,
+            Error::Io(_) => 3,
+            Error::StructurallySingular { .. } => 4,
+            Error::ZeroPivot { .. } => 5,
+            Error::Runtime(_) => 6,
+        }
+    }
 }
 
 impl std::fmt::Display for Error {

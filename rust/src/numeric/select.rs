@@ -126,12 +126,8 @@ mod tests {
     /// Selection through the real pipeline (MC64 + ordering), which is what
     /// the thresholds were tuned against.
     fn pipeline_mode(a: &crate::sparse::csr::Csr) -> KernelMode {
-        use crate::coordinator::{Solver, SolverConfig};
-        let s = Solver::new(SolverConfig {
-            threads: 1,
-            ..SolverConfig::default()
-        });
-        s.analyze(a).unwrap().mode
+        let s = crate::api::SolverBuilder::new().threads(1).build().unwrap();
+        s.analyze(a).unwrap().analysis().mode
     }
 
     #[test]

@@ -7,16 +7,18 @@
 //! [`SolverService`] turns the crate's one-caller-at-a-time `Solver`
 //! API into a traffic-serving front door:
 //!
-//! - **Shards.** The service owns `S` independent [`Solver`]s (one
-//!   persistent engine each). Systems — matrices registered at
-//!   construction — are routed to shards round-robin, so a multi-matrix
-//!   parameter sweep spreads across engines while each matrix keeps its
-//!   warm factor/scratch state on one shard.
+//! - **Shards.** The service owns `S` independent solver engines, each
+//!   carrying its systems as owning
+//!   [`LinearSystem<Factored>`](crate::api::LinearSystem) handles.
+//!   Systems — matrices registered at construction — are routed to
+//!   shards round-robin, so a multi-matrix parameter sweep spreads
+//!   across engines while each matrix keeps its warm factor/scratch
+//!   state on one shard.
 //! - **Coalescing queue.** Callers [`SolverService::submit`] single
 //!   right-hand sides and get a [`Ticket`] (a per-request channel). A
 //!   per-shard dispatcher thread drains its queue once per tick and
 //!   issues **one batched block dispatch per system**
-//!   ([`crate::coordinator::Solver::solve_many_into`]) for everything
+//!   ([`crate::api::LinearSystem::solve_many_into`]) for everything
 //!   that piled up — k concurrent callers cost one substitution sweep
 //!   over a dense n×k block instead of k scalar sweeps. Batched columns
 //!   are bit-identical to independent scalar solves, so coalescing is
@@ -38,11 +40,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::{Solver, SolverConfig};
+use crate::api::Solver;
+use crate::coordinator::SolverConfig;
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
-use shard::{Job, ShardQueue, ShardWorker, SystemState};
+use shard::{Job, ShardQueue, ShardWorker};
 
 /// Configuration for [`SolverService`].
 #[derive(Clone, Debug)]
@@ -123,16 +126,16 @@ impl SolverService {
         }
         let mut shards = Vec::with_capacity(nshards);
         for (s, mats) in per_shard.into_iter().enumerate() {
-            let solver = Solver::try_new(cfg.solver.clone())?;
+            // one handle-producing solver (engine) per shard; the solver
+            // value is dropped after construction — every LinearSystem
+            // keeps the shared engine alive
+            let solver = Solver::from_config(cfg.solver.clone())?;
             let mut sys = Vec::with_capacity(mats.len());
             for a in mats {
-                let an = solver.analyze(&a)?;
-                let f = solver.factor(&a, &an)?;
-                sys.push(SystemState { a, an, f });
+                sys.push(solver.analyze(a)?.factor()?);
             }
             let queue = Arc::new(ShardQueue::new(cfg.queue_cap.max(1)));
-            let worker =
-                ShardWorker::new(solver, sys, queue.clone(), cfg.tick, cfg.max_batch.max(1));
+            let worker = ShardWorker::new(sys, queue.clone(), cfg.tick, cfg.max_batch.max(1));
             let thread = std::thread::Builder::new()
                 .name(format!("hylu-serve-{s}"))
                 .spawn(move || worker.run())

@@ -8,7 +8,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::{Analysis, Factorization, Solver};
+use crate::api::{Factored, LinearSystem};
 use crate::exec::{lock_ignore_poison, wait_ignore_poison};
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
@@ -127,18 +127,12 @@ impl ServiceStats {
     }
 }
 
-/// One registered system on a shard: the matrix (current values), its
-/// analysis, and its live factorization.
-pub(crate) struct SystemState {
-    pub a: Csr,
-    pub an: Analysis,
-    pub f: Factorization,
-}
-
-/// The dispatcher state moved onto the shard thread.
+/// The dispatcher state moved onto the shard thread. Each registered
+/// system is an owning [`LinearSystem<Factored>`] handle — matrix,
+/// analysis and factorization travel as one value, and all handles on a
+/// shard share that shard's solver engine (`Arc` internally).
 pub(crate) struct ShardWorker {
-    solver: Solver,
-    systems: Vec<SystemState>,
+    systems: Vec<LinearSystem<Factored>>,
     queue: Arc<ShardQueue>,
     tick: Duration,
     max_batch: usize,
@@ -146,14 +140,12 @@ pub(crate) struct ShardWorker {
 
 impl ShardWorker {
     pub fn new(
-        solver: Solver,
-        systems: Vec<SystemState>,
+        systems: Vec<LinearSystem<Factored>>,
         queue: Arc<ShardQueue>,
         tick: Duration,
         max_batch: usize,
     ) -> ShardWorker {
         ShardWorker {
-            solver,
             systems,
             queue,
             tick,
@@ -212,10 +204,7 @@ impl ShardWorker {
     }
 
     fn apply_refactor(&mut self, sys: usize, a: Csr) -> Result<()> {
-        let st = &mut self.systems[sys];
-        self.solver.refactor(&a, &st.an, &mut st.f)?;
-        st.a = a;
-        Ok(())
+        self.systems[sys].refactor_matrix(a)
     }
 
     /// Solve every queued group as block dispatches of at most
@@ -231,8 +220,7 @@ impl ShardWorker {
                     bs.push(b);
                     txs.push(tx);
                 }
-                let st = &self.systems[sys];
-                match self.solver.solve_many_into(&st.a, &st.an, &st.f, &bs, xs) {
+                match self.systems[sys].solve_many_into(&bs, xs) {
                     Ok(_) => {
                         self.queue.dispatches.fetch_add(1, Ordering::Relaxed);
                         self.queue

@@ -124,6 +124,53 @@ mod tests {
         assert_eq!(m.vals, vec![2.0, 4.0, -1.0]);
     }
 
+    /// Regression for the MatrixMarket footgun: files list entries in
+    /// arbitrary order and repeat coordinates. `to_csr` must produce the
+    /// same matrix regardless of push order, summing duplicates.
+    #[test]
+    fn unsorted_input_with_duplicates_matches_sorted_input() {
+        let entries = [
+            (2usize, 1usize, -1.0),
+            (0, 2, 1.0),
+            (1, 0, 5.0),
+            (0, 0, 2.0),
+            (2, 1, 0.5), // duplicate of (2,1), far from its twin
+            (0, 2, 3.0), // duplicate of (0,2)
+            (2, 0, 7.0),
+        ];
+        let mut shuffled = Coo::new(3);
+        for &(i, j, v) in &entries {
+            shuffled.push(i, j, v);
+        }
+        let mut sorted = Coo::new(3);
+        let mut by_coord = entries;
+        by_coord.sort_by_key(|&(i, j, _)| (i, j));
+        for &(i, j, v) in &by_coord {
+            sorted.push(i, j, v);
+        }
+        let a = shuffled.to_csr();
+        assert_eq!(a, sorted.to_csr());
+        a.validate().unwrap();
+        let d = a.to_dense();
+        assert_eq!(d.get(0, 2), 4.0);
+        assert_eq!(d.get(2, 1), -0.5);
+    }
+
+    /// Duplicates that cancel must keep their (structural) entry: solvers
+    /// analyze the pattern, and MatrixMarket semantics sum values only.
+    #[test]
+    fn cancelling_duplicates_keep_the_pattern_entry() {
+        let mut c = Coo::new(2);
+        c.push(0, 0, 1.0);
+        c.push(0, 1, 2.5);
+        c.push(0, 1, -2.5);
+        c.push(1, 1, 1.0);
+        let a = c.to_csr();
+        assert_eq!(a.nnz(), 3, "cancelled duplicate must stay structural");
+        assert_eq!(a.indices, vec![0, 1, 1]);
+        assert_eq!(a.vals, vec![1.0, 0.0, 1.0]);
+    }
+
     #[test]
     fn empty_rows_are_represented() {
         let c = Coo::new(4);

@@ -1,0 +1,271 @@
+//! The one validated matrix-ingestion point.
+//!
+//! Every way a matrix enters the solver — CSR, COO triplets, CSC
+//! triplets, a MatrixMarket file — funnels through [`MatrixInput`], which
+//! converts the input into a validated [`Csr`] (square, sorted, in-bounds
+//! indices, duplicates summed). [`crate::api::Solver::analyze`] accepts
+//! any `impl MatrixInput`, so callers never pre-massage formats and never
+//! skip validation.
+//!
+//! ```
+//! use hylu::prelude::*;
+//!
+//! // COO triplets (duplicates are summed, order does not matter)
+//! let mut coo = Coo::new(2);
+//! coo.push(1, 1, 3.0);
+//! coo.push(0, 0, 1.0);
+//! coo.push(1, 1, -1.0);
+//! let a = coo.into_csr().unwrap();
+//! assert_eq!(a.vals, vec![1.0, 2.0]);
+//!
+//! // CSC triplets (colptr / rowind / vals)
+//! let b = CscInput::new(&[0, 1, 2], &[0, 1], &[1.0, 2.0]).into_csr().unwrap();
+//! assert_eq!(b.nnz(), 2);
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::sparse::io::read_matrix_market;
+use crate::{Error, Result};
+
+/// A type that can be ingested as a square sparse matrix.
+///
+/// Implementations must return a **validated** CSR matrix (see
+/// [`Csr::validate`]): square, monotone `indptr`, strictly sorted
+/// in-bounds column indices per row. The conversion consumes `self`;
+/// borrowed inputs (`&Csr`, `&Coo`, paths) copy.
+pub trait MatrixInput {
+    /// Convert into a validated CSR matrix.
+    fn into_csr(self) -> Result<Csr>;
+}
+
+impl MatrixInput for Csr {
+    fn into_csr(self) -> Result<Csr> {
+        self.validate()?;
+        Ok(self)
+    }
+}
+
+impl MatrixInput for &Csr {
+    fn into_csr(self) -> Result<Csr> {
+        self.validate()?;
+        Ok(self.clone())
+    }
+}
+
+/// Bounds-check COO entries before the counting sort in `Coo::to_csr`
+/// (which trusts its input) can index out of range.
+fn coo_to_csr_checked(c: &Coo) -> Result<Csr> {
+    if c.rows.len() != c.cols.len() || c.rows.len() != c.vals.len() {
+        return Err(Error::Invalid(
+            "coo arrays (rows/cols/vals) differ in length".into(),
+        ));
+    }
+    for (e, (&i, &j)) in c.rows.iter().zip(&c.cols).enumerate() {
+        if i >= c.n || j >= c.n {
+            return Err(Error::Invalid(format!(
+                "coo entry {e} at ({i},{j}) out of bounds for n={}",
+                c.n
+            )));
+        }
+    }
+    let a = c.to_csr();
+    a.validate()?;
+    Ok(a)
+}
+
+impl MatrixInput for Coo {
+    fn into_csr(self) -> Result<Csr> {
+        coo_to_csr_checked(&self)
+    }
+}
+
+impl MatrixInput for &Coo {
+    fn into_csr(self) -> Result<Csr> {
+        coo_to_csr_checked(self)
+    }
+}
+
+/// Borrowed CSC (compressed sparse column) triplets: `colptr` of length
+/// `n + 1`, `rowind`/`vals` of length `colptr[n]`. Row indices within a
+/// column may be unsorted; duplicate row indices within a column are
+/// rejected (ambiguous without a summing convention — pre-sum via
+/// [`Coo`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CscInput<'a> {
+    /// Column pointer array (`n + 1` entries, monotone).
+    pub colptr: &'a [usize],
+    /// Row indices, aligned with `vals`.
+    pub rowind: &'a [usize],
+    /// Values.
+    pub vals: &'a [f64],
+}
+
+impl<'a> CscInput<'a> {
+    /// Bundle CSC triplets; dimension is `colptr.len() - 1`.
+    pub fn new(colptr: &'a [usize], rowind: &'a [usize], vals: &'a [f64]) -> CscInput<'a> {
+        CscInput {
+            colptr,
+            rowind,
+            vals,
+        }
+    }
+}
+
+impl MatrixInput for CscInput<'_> {
+    fn into_csr(self) -> Result<Csr> {
+        if self.colptr.is_empty() {
+            return Err(Error::Invalid("csc colptr must have n+1 entries".into()));
+        }
+        let n = self.colptr.len() - 1;
+        let nnz = *self.colptr.last().unwrap();
+        if self.colptr[0] != 0 {
+            return Err(Error::Invalid("csc colptr must start at 0".into()));
+        }
+        for (j, w) in self.colptr.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(Error::Invalid(format!("csc colptr not monotone at {j}")));
+            }
+        }
+        if self.rowind.len() != nnz || self.vals.len() != nnz {
+            return Err(Error::Invalid(format!(
+                "csc rowind/vals length {} / {} does not match colptr nnz {nnz}",
+                self.rowind.len(),
+                self.vals.len()
+            )));
+        }
+        if let Some(&bad) = self.rowind.iter().find(|&&i| i >= n) {
+            return Err(Error::Invalid(format!(
+                "csc row index {bad} out of bounds for n={n}"
+            )));
+        }
+        // CSC of A is CSR of Aᵀ: transposing sorts each output row even
+        // when row indices within a column are unsorted.
+        let at = Csr {
+            n,
+            indptr: self.colptr.to_vec(),
+            indices: self.rowind.to_vec(),
+            vals: self.vals.to_vec(),
+        };
+        let a = at.transpose();
+        a.validate()
+            .map_err(|_| Error::Invalid("csc input has duplicate entries within a column".into()))?;
+        Ok(a)
+    }
+}
+
+/// Raw `(colptr, rowind, vals)` CSC triplets.
+impl MatrixInput for (&[usize], &[usize], &[f64]) {
+    fn into_csr(self) -> Result<Csr> {
+        CscInput::new(self.0, self.1, self.2).into_csr()
+    }
+}
+
+impl MatrixInput for &Path {
+    fn into_csr(self) -> Result<Csr> {
+        let a = read_matrix_market(self)?;
+        a.validate()?;
+        Ok(a)
+    }
+}
+
+impl MatrixInput for PathBuf {
+    fn into_csr(self) -> Result<Csr> {
+        self.as_path().into_csr()
+    }
+}
+
+impl MatrixInput for &str {
+    fn into_csr(self) -> Result<Csr> {
+        Path::new(self).into_csr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn csr_is_validated_not_trusted() {
+        let good = gen::grid2d(4, 4);
+        assert_eq!((&good).into_csr().unwrap(), good);
+        let bad = Csr {
+            n: 2,
+            indptr: vec![0, 1, 2],
+            indices: vec![0, 5], // out of bounds
+            vals: vec![1.0, 1.0],
+        };
+        assert!(bad.into_csr().is_err());
+    }
+
+    #[test]
+    fn coo_out_of_bounds_is_an_error_not_a_panic() {
+        let c = Coo {
+            n: 2,
+            rows: vec![0, 7],
+            cols: vec![0, 0],
+            vals: vec![1.0, 1.0],
+        };
+        let err = c.into_csr().unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)));
+    }
+
+    #[test]
+    fn csc_roundtrips_against_transpose() {
+        let a = gen::random_sparse(30, 3, 9);
+        let at = a.transpose();
+        // CSC arrays of `a` are exactly the CSR arrays of `at`
+        let b = CscInput::new(&at.indptr, &at.indices, &at.vals)
+            .into_csr()
+            .unwrap();
+        assert_eq!(a, b);
+        // the raw-tuple impl routes the same way
+        let c = (&at.indptr[..], &at.indices[..], &at.vals[..])
+            .into_csr()
+            .unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn csc_tolerates_unsorted_rows_within_a_column() {
+        // column 0 holds rows {2, 0} out of order
+        let colptr = [0usize, 2, 3, 4];
+        let rowind = [2usize, 0, 1, 2];
+        let vals = [3.0, 1.0, 2.0, 4.0];
+        let a = CscInput::new(&colptr, &rowind, &vals).into_csr().unwrap();
+        let d = a.to_dense();
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(2, 0), 3.0);
+        assert_eq!(d.get(1, 1), 2.0);
+        assert_eq!(d.get(2, 2), 4.0);
+    }
+
+    #[test]
+    fn csc_rejects_malformed_triplets() {
+        assert!(CscInput::new(&[], &[], &[]).into_csr().is_err());
+        assert!(CscInput::new(&[0, 2, 1], &[0, 0], &[1.0, 1.0])
+            .into_csr()
+            .is_err()); // non-monotone colptr
+        assert!(CscInput::new(&[0, 1], &[3], &[1.0]).into_csr().is_err()); // row oob
+        assert!(CscInput::new(&[0, 2], &[0], &[1.0]).into_csr().is_err()); // length mismatch
+        assert!(CscInput::new(&[0, 2], &[0, 0], &[1.0, 2.0])
+            .into_csr()
+            .is_err()); // duplicate row in one column
+    }
+
+    #[test]
+    fn matrix_market_path_ingestion() {
+        let a = gen::grid2d(5, 5);
+        let dir = std::env::temp_dir().join("hylu_input_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("in.mtx");
+        crate::sparse::io::write_matrix_market(&p, &a).unwrap();
+        assert_eq!(p.as_path().into_csr().unwrap(), a);
+        assert_eq!(p.to_str().unwrap().into_csr().unwrap(), a);
+        assert_eq!(p.clone().into_csr().unwrap(), a);
+        assert!("/no/such/file.mtx".into_csr().is_err());
+    }
+}

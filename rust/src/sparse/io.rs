@@ -30,38 +30,90 @@ enum Symmetry {
 }
 
 /// Read a square MatrixMarket coordinate file into CSR.
+///
+/// Parse errors name the offending (1-based) line of the file —
+/// `"foo.mtx: line 12: bad entry row"` — and unsupported headers
+/// (`complex`, `hermitian`, `array`, …) are rejected up front with the
+/// list of supported alternatives.
 pub fn read_matrix_market(path: &Path) -> Result<Csr> {
-    let file = std::fs::File::open(path)?;
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
     let mut reader = BufReader::new(file);
+    let mut lineno = 0usize;
+    let at = |lineno: usize, msg: String| Error::Io(format!("{}: line {lineno}: {msg}", path.display()));
     let mut header = String::new();
-    reader.read_line(&mut header)?;
+    reader
+        .read_line(&mut header)
+        .map_err(|e| at(1, format!("read error: {e}")))?;
+    lineno += 1;
     let h: Vec<&str> = header.split_whitespace().collect();
     if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") || h[1] != "matrix" {
-        return Err(Error::Io("not a MatrixMarket file".into()));
+        return Err(at(
+            lineno,
+            "not a MatrixMarket header (expected \
+             '%%MatrixMarket matrix coordinate <field> <symmetry>')"
+                .into(),
+        ));
     }
     if h[2] != "coordinate" {
-        return Err(Error::Io(format!("unsupported format {}", h[2])));
+        return Err(at(
+            lineno,
+            format!("unsupported format '{}' (only 'coordinate' is supported)", h[2]),
+        ));
     }
     let field = match h[3] {
         "real" => Field::Real,
         "integer" => Field::Integer,
         "pattern" => Field::Pattern,
-        other => return Err(Error::Io(format!("unsupported field {other}"))),
+        "complex" => {
+            return Err(at(
+                lineno,
+                "complex matrices are not supported (this solver is real-valued; \
+                 supported fields: real, integer, pattern)"
+                    .into(),
+            ))
+        }
+        other => {
+            return Err(at(
+                lineno,
+                format!("unsupported field '{other}' (supported: real, integer, pattern)"),
+            ))
+        }
     };
     let symmetry = match h[4] {
         "general" => Symmetry::General,
         "symmetric" => Symmetry::Symmetric,
         "skew-symmetric" => Symmetry::SkewSymmetric,
-        other => return Err(Error::Io(format!("unsupported symmetry {other}"))),
+        "hermitian" => {
+            return Err(at(
+                lineno,
+                "hermitian symmetry implies a complex matrix, which is not supported \
+                 (supported: general, symmetric, skew-symmetric)"
+                    .into(),
+            ))
+        }
+        other => {
+            return Err(at(
+                lineno,
+                format!(
+                    "unsupported symmetry '{other}' \
+                     (supported: general, symmetric, skew-symmetric)"
+                ),
+            ))
+        }
     };
 
     let mut line = String::new();
     // skip comments
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Err(Error::Io("missing size line".into()));
+        let read = reader
+            .read_line(&mut line)
+            .map_err(|e| at(lineno + 1, format!("read error: {e}")))?;
+        if read == 0 {
+            return Err(at(lineno, "missing size line".into()));
         }
+        lineno += 1;
         let t = line.trim();
         if !t.is_empty() && !t.starts_with('%') {
             break;
@@ -69,14 +121,17 @@ pub fn read_matrix_market(path: &Path) -> Result<Csr> {
     }
     let dims: Vec<usize> = line
         .split_whitespace()
-        .map(|s| s.parse().map_err(|_| Error::Io("bad size line".into())))
+        .map(|s| {
+            s.parse()
+                .map_err(|_| at(lineno, format!("bad size line (unparsable '{s}')")))
+        })
         .collect::<Result<_>>()?;
     if dims.len() != 3 {
-        return Err(Error::Io("size line needs rows cols nnz".into()));
+        return Err(at(lineno, "size line needs 'rows cols nnz'".into()));
     }
     let (nr, nc, nnz) = (dims[0], dims[1], dims[2]);
     if nr != nc {
-        return Err(Error::Io(format!("matrix not square: {nr}x{nc}")));
+        return Err(at(lineno, format!("matrix not square: {nr}x{nc}")));
     }
     let mut coo = Coo::with_capacity(
         nr,
@@ -89,9 +144,16 @@ pub fn read_matrix_market(path: &Path) -> Result<Csr> {
     let mut seen = 0usize;
     while seen < nnz {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Err(Error::Io(format!("expected {nnz} entries, got {seen}")));
+        let read = reader
+            .read_line(&mut line)
+            .map_err(|e| at(lineno + 1, format!("read error: {e}")))?;
+        if read == 0 {
+            return Err(at(
+                lineno,
+                format!("file ends after {seen} of {nnz} entries"),
+            ));
         }
+        lineno += 1;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
@@ -100,20 +162,23 @@ pub fn read_matrix_market(path: &Path) -> Result<Csr> {
         let i: usize = it
             .next()
             .and_then(|s| s.parse().ok())
-            .ok_or_else(|| Error::Io("bad entry row".into()))?;
+            .ok_or_else(|| at(lineno, "bad entry row".into()))?;
         let j: usize = it
             .next()
             .and_then(|s| s.parse().ok())
-            .ok_or_else(|| Error::Io("bad entry col".into()))?;
+            .ok_or_else(|| at(lineno, "bad entry col".into()))?;
         let v: f64 = match field {
             Field::Pattern => 1.0,
             _ => it
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| Error::Io("bad entry value".into()))?,
+                .ok_or_else(|| at(lineno, "bad entry value".into()))?,
         };
         if i == 0 || j == 0 || i > nr || j > nc {
-            return Err(Error::Io(format!("entry ({i},{j}) out of bounds")));
+            return Err(at(
+                lineno,
+                format!("entry ({i},{j}) out of bounds (1-based, n={nr})"),
+            ));
         }
         let (i, j) = (i - 1, j - 1);
         coo.push(i, j, v);
@@ -184,6 +249,68 @@ mod tests {
         let b = read_matrix_market(&q).unwrap();
         assert_eq!(b.nnz(), 3);
         assert!(b.vals.iter().all(|&v| v == 1.0));
+    }
+
+    fn parse_err(name: &str, contents: &str) -> String {
+        let dir = std::env::temp_dir().join("hylu_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, contents).unwrap();
+        match read_matrix_market(&p) {
+            Err(crate::Error::Io(m)) => m,
+            other => panic!("expected Error::Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_complex_and_unsupported_headers_clearly() {
+        let m = parse_err(
+            "cplx.mtx",
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1.0 0.0\n",
+        );
+        assert!(m.contains("line 1") && m.contains("complex"), "{m}");
+        let m = parse_err(
+            "herm.mtx",
+            "%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 1.0\n",
+        );
+        assert!(m.contains("hermitian"), "{m}");
+        let m = parse_err(
+            "arr.mtx",
+            "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n4.0\n",
+        );
+        assert!(m.contains("'array'") && m.contains("coordinate"), "{m}");
+        let m = parse_err("nothdr.mtx", "hello world\n");
+        assert!(m.contains("line 1"), "{m}");
+    }
+
+    #[test]
+    fn malformed_entries_report_the_offending_line() {
+        // entry lines start at line 4 here (header, comment, size line)
+        let m = parse_err(
+            "badrow.mtx",
+            "%%MatrixMarket matrix coordinate real general\n% comment\n2 2 2\n1 1 1.0\nx 2 2.0\n",
+        );
+        assert!(m.contains("line 5") && m.contains("bad entry row"), "{m}");
+        let m = parse_err(
+            "badval.mtx",
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nope\n",
+        );
+        assert!(m.contains("line 3") && m.contains("bad entry value"), "{m}");
+        let m = parse_err(
+            "oob.mtx",
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+        );
+        assert!(m.contains("line 3") && m.contains("out of bounds"), "{m}");
+        let m = parse_err(
+            "badsize.mtx",
+            "%%MatrixMarket matrix coordinate real general\n2 two 1\n1 1 1.0\n",
+        );
+        assert!(m.contains("line 2") && m.contains("size line"), "{m}");
+        let m = parse_err(
+            "short.mtx",
+            "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n2 2 1.0\n",
+        );
+        assert!(m.contains("2 of 3 entries"), "{m}");
     }
 
     #[test]

@@ -5,9 +5,11 @@
 pub mod coo;
 pub mod csr;
 pub mod gen;
+pub mod input;
 pub mod io;
 pub mod perm;
 
 pub use coo::Coo;
 pub use csr::Csr;
+pub use input::{CscInput, MatrixInput};
 pub use perm::Perm;

@@ -1,0 +1,242 @@
+//! Handle-API equivalence and typestate-guard tests.
+//!
+//! The acceptance bar for the API redesign: the `LinearSystem` handle
+//! lifecycle (`analyze → factor → refactor → solve`/`solve_many`) must be
+//! **bit-identical** to the legacy `(a, &Analysis, &Factorization)`
+//! coordinator path it wraps, every `MatrixInput` ingestion route must
+//! produce the same matrix, and the guards that used to be runtime
+//! errors must hold at the handle level too.
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+
+fn rhs_set(n: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Prng::new(seed);
+    (0..k)
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+/// The deprecated coordinator path, quarantined in one helper.
+#[allow(deprecated)]
+fn legacy_cycle(
+    cfg: SolverConfig,
+    a: &Csr,
+    new_vals: &[f64],
+    b: &[f64],
+    bs: &[Vec<f64>],
+) -> (Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
+    let solver = hylu::coordinator::Solver::try_new(cfg).unwrap();
+    let an = solver.analyze(a).unwrap();
+    let mut f = solver.factor(a, &an).unwrap();
+    let x_factor = solver.solve(a, &an, &f, b).unwrap();
+    let mut a2 = a.clone();
+    a2.vals.copy_from_slice(new_vals);
+    solver.refactor(&a2, &an, &mut f).unwrap();
+    let x_refactor = solver.solve(&a2, &an, &f, b).unwrap();
+    let xs = solver.solve_many(&a2, &an, &f, bs).unwrap();
+    (x_factor, x_refactor, xs)
+}
+
+fn handle_cycle(
+    cfg: SolverConfig,
+    a: &Csr,
+    new_vals: &[f64],
+    b: &[f64],
+    bs: &[Vec<f64>],
+) -> (Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
+    let solver = Solver::from_config(cfg).unwrap();
+    let mut sys = solver.analyze(a).unwrap().factor().unwrap();
+    let x_factor = sys.solve(b).unwrap();
+    sys.refactor(new_vals).unwrap();
+    let x_refactor = sys.solve(b).unwrap();
+    let xs = sys.solve_many(bs).unwrap();
+    (x_factor, x_refactor, xs)
+}
+
+#[test]
+fn handle_lifecycle_is_bit_identical_to_legacy_path() {
+    let mut rng = Prng::new(41);
+    for (a, threads) in [
+        (gen::grid2d(16, 16), 1usize),
+        (gen::circuit(400, 3), 2),
+        (gen::kkt(150, 50, 3), 2), // perturbation → refinement engages
+    ] {
+        let cfg = SolverConfig {
+            threads,
+            repeated: true,
+            parallel_solve_min_n: 0,
+            ..SolverConfig::default()
+        };
+        let new_vals: Vec<f64> = a
+            .vals
+            .iter()
+            .map(|v| v * rng.range_f64(0.8, 1.2))
+            .collect();
+        let b = gen::rhs_for_ones(&a);
+        let bs = rhs_set(a.n, 4, 17);
+        let legacy = legacy_cycle(cfg.clone(), &a, &new_vals, &b, &bs);
+        let handle = handle_cycle(cfg, &a, &new_vals, &b, &bs);
+        assert_eq!(legacy.0, handle.0, "factor+solve diverged (t={threads})");
+        assert_eq!(legacy.1, handle.1, "refactor+solve diverged (t={threads})");
+        assert_eq!(legacy.2, handle.2, "solve_many diverged (t={threads})");
+    }
+}
+
+#[test]
+fn factorize_matches_first_factor_bitwise() {
+    // `factorize` on a Factored handle re-runs exactly what the
+    // Analyzed→Factored transition ran
+    let a = gen::power_network(300, 5);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let sys1 = solver.analyze(&a).unwrap().factor().unwrap();
+    let mut sys2 = solver.analyze(&a).unwrap().factor().unwrap();
+    sys2.factorize().unwrap();
+    let (f1, f2) = (&sys1.factorization().fac, &sys2.factorization().fac);
+    assert_eq!(f1.panels, f2.panels);
+    assert_eq!(f1.lvals, f2.lvals);
+    assert_eq!(f1.uvals, f2.uvals);
+    assert_eq!(f1.pivot_perm, f2.pivot_perm);
+}
+
+#[test]
+fn builder_presets_set_the_expected_config() {
+    let one = SolverBuilder::new().one_shot().build().unwrap();
+    assert!(!one.config().repeated);
+    let rep = SolverBuilder::new().repeated().threads(3).build().unwrap();
+    assert!(rep.config().repeated);
+    assert_eq!(rep.config().threads, 3);
+    // the escape hatch reaches every raw knob
+    let tweaked = SolverBuilder::new()
+        .configure(|cfg| cfg.max_supernode = 64)
+        .build()
+        .unwrap();
+    assert_eq!(tweaked.config().max_supernode, 64);
+}
+
+#[test]
+fn every_matrix_input_route_reaches_the_same_solution() {
+    let a = gen::random_sparse(60, 4, 13);
+    let b = gen::rhs_for_ones(&a);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let x_csr = solver.analyze(&a).unwrap().factor().unwrap().solve(&b).unwrap();
+
+    // COO route
+    let mut coo = Coo::new(a.n);
+    for i in 0..a.n {
+        for (k, &j) in a.row_indices(i).iter().enumerate() {
+            coo.push(i, j, a.row_vals(i)[k]);
+        }
+    }
+    let x_coo = solver.analyze(coo).unwrap().factor().unwrap().solve(&b).unwrap();
+    assert_eq!(x_csr, x_coo);
+
+    // CSC route (CSC arrays of A == CSR arrays of Aᵀ)
+    let at = a.transpose();
+    let x_csc = solver
+        .analyze(CscInput::new(&at.indptr, &at.indices, &at.vals))
+        .unwrap()
+        .factor()
+        .unwrap()
+        .solve(&b)
+        .unwrap();
+    assert_eq!(x_csr, x_csc);
+
+    // MatrixMarket path route (text roundtrip loses no f64 precision at
+    // 17 significant digits)
+    let dir = std::env::temp_dir().join("hylu_api_handles");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("route.mtx");
+    hylu::sparse::io::write_matrix_market(&p, &a).unwrap();
+    let x_mm = solver
+        .analyze(p.as_path())
+        .unwrap()
+        .factor()
+        .unwrap()
+        .solve(&b)
+        .unwrap();
+    assert_eq!(x_csr, x_mm);
+}
+
+#[test]
+fn refactor_guards_hold_on_handles() {
+    let a = gen::grid2d(8, 8);
+    let solver = SolverBuilder::new().build().unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let x0 = sys.solve(&b).unwrap();
+
+    // wrong values length
+    let err = sys.refactor(&[1.0, 2.0]).unwrap_err();
+    assert_eq!(err.code(), 2);
+
+    // different-pattern matrix through refactor_matrix must fail cleanly...
+    let wrong = gen::grid2d(8, 9);
+    assert!(sys.refactor_matrix(&wrong).is_err());
+    // ...and must leave matrix and factors untouched
+    assert_eq!(sys.matrix(), &a);
+    assert_eq!(sys.solve(&b).unwrap(), x0);
+
+    // same-pattern new values through refactor_matrix are applied
+    let mut scaled = a.clone();
+    for v in &mut scaled.vals {
+        *v *= 2.0;
+    }
+    sys.refactor_matrix(scaled).unwrap();
+    let x2 = sys.solve(&b).unwrap();
+    assert!(x2.iter().all(|v| (v - 0.5).abs() < 1e-8));
+}
+
+#[test]
+fn solve_opts_override_the_configured_refinement() {
+    // an ill-conditioned system where refinement actually iterates
+    let a = gen::kkt(150, 50, 3);
+    let b = gen::rhs_for_ones(&a);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let (_, st_default) = sys.solve_with_stats(&b).unwrap();
+
+    // disabling refinement per call must report zero iterations
+    let opts = SolveOpts::new().refine_max_iter(0);
+    let (_, st_off) = sys.solve_with_opts(&b, &opts).unwrap();
+    assert_eq!(st_off.refine_iters, 0);
+
+    // no overrides == the configured default, bit for bit
+    let (x_plain, _) = sys.solve_with_stats(&b).unwrap();
+    let (x_noop, st_noop) = sys.solve_with_opts(&b, &SolveOpts::new()).unwrap();
+    assert_eq!(x_plain, x_noop);
+    assert_eq!(st_noop.refine_iters, st_default.refine_iters);
+
+    // batched path takes the same overrides
+    let bs = vec![b.clone(), b.clone()];
+    let mut xs = Vec::new();
+    let st_many = sys
+        .solve_many_into_with_opts(&bs, &mut xs, &opts)
+        .unwrap();
+    assert_eq!(st_many.refine_iters, 0);
+}
+
+#[test]
+fn handles_outlive_the_solver_value() {
+    // the handle owns the engine (Arc): dropping the Solver value must
+    // not invalidate live systems — the property the FFI layer leans on
+    let a = gen::grid2d(10, 10);
+    let b = gen::rhs_for_ones(&a);
+    let sys = {
+        let solver = SolverBuilder::new().threads(2).build().unwrap();
+        solver.analyze(&a).unwrap().factor().unwrap()
+    };
+    let x = sys.solve(&b).unwrap();
+    assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-8));
+}
+
+#[test]
+fn error_codes_are_stable() {
+    use hylu::Error;
+    assert_eq!(Error::Invalid(String::new()).code(), 2);
+    assert_eq!(Error::Io(String::new()).code(), 3);
+    assert_eq!(Error::StructurallySingular { matched: 0, n: 1 }.code(), 4);
+    assert_eq!(Error::ZeroPivot { row: 0 }.code(), 5);
+    assert_eq!(Error::Runtime(String::new()).code(), 6);
+}

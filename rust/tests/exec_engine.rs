@@ -2,9 +2,11 @@
 //! `refactor` + `solve` (and `solve_many`) cycle must spawn zero OS
 //! threads and perform zero O(n) scratch allocations — asserted through
 //! the engine's spawn/alloc counters — and the batched multi-RHS path
-//! must match independent scalar solves bit-for-bit.
+//! must match independent scalar solves bit-for-bit. Runs entirely on
+//! the `LinearSystem` handle API, so the zero-spawn / zero-alloc
+//! guarantees are asserted for the surface users actually call.
 
-use hylu::coordinator::{Solver, SolverConfig};
+use hylu::prelude::*;
 use hylu::sparse::gen;
 use hylu::testutil::Prng;
 
@@ -20,14 +22,11 @@ fn analyze_only_paths_spawn_no_threads() {
     // lazy pool spawn: `hylu inspect` / fig4-style analyze-only use must
     // never pay for worker threads; the first numeric dispatch spawns
     let a = gen::grid2d(12, 12);
-    let solver = Solver::new(SolverConfig {
-        threads: 4,
-        ..SolverConfig::default()
-    });
+    let solver = SolverBuilder::new().threads(4).build().unwrap();
     assert_eq!(solver.engine().threads_spawned(), 0, "construction spawns nothing");
-    let an = solver.analyze(&a).unwrap();
+    let sys = solver.analyze(&a).unwrap();
     assert_eq!(solver.engine().threads_spawned(), 0, "analyze spawns nothing");
-    let _f = solver.factor(&a, &an).unwrap();
+    let _sys = sys.factor().unwrap();
     assert_eq!(
         solver.engine().threads_spawned(),
         3,
@@ -38,14 +37,13 @@ fn analyze_only_paths_spawn_no_threads() {
 #[test]
 fn warm_refactor_solve_cycle_spawns_nothing_and_allocates_nothing() {
     let a = gen::grid2d(24, 24);
-    let solver = Solver::new(SolverConfig {
-        threads: 3,
-        repeated: true,
-        parallel_solve_min_n: 0, // force the pooled substitution path
-        ..SolverConfig::default()
-    });
-    let an = solver.analyze(&a).unwrap();
-    let mut f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new()
+        .repeated()
+        .threads(3)
+        .configure(|cfg| cfg.parallel_solve_min_n = 0) // force the pooled substitution path
+        .build()
+        .unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
     let b = gen::rhs_for_ones(&a);
     let bs = rhs_set(a.n, 3, 11);
     let mut x = Vec::new();
@@ -53,9 +51,9 @@ fn warm_refactor_solve_cycle_spawns_nothing_and_allocates_nothing() {
 
     // Warm-up: one full refactor + solve + solve_many cycle grows every
     // arena to its high-water mark.
-    solver.refactor(&a, &an, &mut f).unwrap();
-    solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
-    solver.solve_many_into(&a, &an, &f, &bs, &mut xs).unwrap();
+    sys.refactor(&a.vals).unwrap();
+    sys.solve_into(&b, &mut x).unwrap();
+    sys.solve_many_into(&bs, &mut xs).unwrap();
 
     let spawned = solver.engine().threads_spawned();
     let allocs = solver.engine().scratch_alloc_events();
@@ -64,10 +62,10 @@ fn warm_refactor_solve_cycle_spawns_nothing_and_allocates_nothing() {
     // Warm cycles: identical inputs exercise the identical code path; the
     // counters must not move at all.
     for _ in 0..3 {
-        solver.refactor(&a, &an, &mut f).unwrap();
-        let st = solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+        sys.refactor(&a.vals).unwrap();
+        let st = sys.solve_into(&b, &mut x).unwrap();
         assert!(st.residual < 1e-10, "residual {}", st.residual);
-        solver.solve_many_into(&a, &an, &f, &bs, &mut xs).unwrap();
+        sys.solve_many_into(&bs, &mut xs).unwrap();
     }
     assert_eq!(
         solver.engine().threads_spawned(),
@@ -83,26 +81,24 @@ fn warm_refactor_solve_cycle_spawns_nothing_and_allocates_nothing() {
 
 #[test]
 fn warm_cycle_is_allocation_free_for_all_kernel_modes() {
-    use hylu::numeric::select::KernelMode;
     let a = gen::grid2d(16, 16);
     for mode in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
-        let solver = Solver::new(SolverConfig {
-            threads: 2,
-            kernel: Some(mode),
-            parallel_solve_min_n: 0,
-            ..SolverConfig::default()
-        });
-        let an = solver.analyze(&a).unwrap();
-        let mut f = solver.factor(&a, &an).unwrap();
+        let solver = SolverBuilder::new()
+            .threads(2)
+            .kernel(mode)
+            .configure(|cfg| cfg.parallel_solve_min_n = 0)
+            .build()
+            .unwrap();
+        let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
         let b = gen::rhs_for_ones(&a);
         let mut x = Vec::new();
-        solver.refactor(&a, &an, &mut f).unwrap();
-        solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+        sys.refactor(&a.vals).unwrap();
+        sys.solve_into(&b, &mut x).unwrap();
         let spawned = solver.engine().threads_spawned();
         let allocs = solver.engine().scratch_alloc_events();
         for _ in 0..2 {
-            solver.refactor(&a, &an, &mut f).unwrap();
-            solver.solve_into(&a, &an, &f, &b, &mut x).unwrap();
+            sys.refactor(&a.vals).unwrap();
+            sys.solve_into(&b, &mut x).unwrap();
         }
         assert_eq!(solver.engine().threads_spawned(), spawned, "{mode}");
         assert_eq!(solver.engine().scratch_alloc_events(), allocs, "{mode}");
@@ -117,18 +113,17 @@ fn solve_many_matches_independent_solves_bitwise() {
         (gen::kkt(150, 50, 3), 5), // perturbation → refinement engages
     ] {
         for threads in [1usize, 3] {
-            let solver = Solver::new(SolverConfig {
-                threads,
-                parallel_solve_min_n: 0,
-                ..SolverConfig::default()
-            });
-            let an = solver.analyze(&a).unwrap();
-            let f = solver.factor(&a, &an).unwrap();
+            let solver = SolverBuilder::new()
+                .threads(threads)
+                .configure(|cfg| cfg.parallel_solve_min_n = 0)
+                .build()
+                .unwrap();
+            let sys = solver.analyze(&a).unwrap().factor().unwrap();
             let bs = rhs_set(a.n, 5, seed);
-            let xs = solver.solve_many(&a, &an, &f, &bs).unwrap();
+            let xs = sys.solve_many(&bs).unwrap();
             assert_eq!(xs.len(), bs.len());
             for (q, b) in bs.iter().enumerate() {
-                let x = solver.solve(&a, &an, &f, b).unwrap();
+                let x = sys.solve(b).unwrap();
                 assert_eq!(
                     xs[q], x,
                     "batched column {q} must be bit-identical (t={threads})"
@@ -141,12 +136,11 @@ fn solve_many_matches_independent_solves_bitwise() {
 #[test]
 fn solve_many_k1_matches_scalar_solve() {
     let a = gen::circuit(400, 2);
-    let solver = Solver::new(SolverConfig::default());
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new().build().unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let b = gen::rhs_for_ones(&a);
-    let xs = solver.solve_many(&a, &an, &f, &[b.clone()]).unwrap();
-    let x = solver.solve(&a, &an, &f, &b).unwrap();
+    let xs = sys.solve_many(&[b.clone()]).unwrap();
+    let x = sys.solve(&b).unwrap();
     assert_eq!(xs[0], x);
 }
 
@@ -154,11 +148,9 @@ fn solve_many_k1_matches_scalar_solve() {
 fn analysis_plan_matches_pool_width() {
     let a = gen::grid2d(10, 10);
     for threads in [1usize, 2, 5] {
-        let solver = Solver::new(SolverConfig {
-            threads,
-            ..SolverConfig::default()
-        });
-        let an = solver.analyze(&a).unwrap();
+        let solver = SolverBuilder::new().threads(threads).build().unwrap();
+        let sys = solver.analyze(&a).unwrap();
+        let an = sys.analysis();
         assert_eq!(an.plan.nthreads, solver.engine().pool().nthreads());
         assert_eq!(an.plan.factor_chunks.len(), an.sym.schedule.bulk_levels);
     }
@@ -170,30 +162,28 @@ fn alternating_two_analyses_stays_allocation_free_when_warm() {
     // entries (and the shared done-flag/workspace arenas) must stay warm
     let a1 = gen::grid2d(14, 14);
     let a2 = gen::power_network(200, 5);
-    let solver = Solver::new(SolverConfig {
-        threads: 2,
-        parallel_solve_min_n: 0,
-        ..SolverConfig::default()
-    });
-    let an1 = solver.analyze(&a1).unwrap();
-    let an2 = solver.analyze(&a2).unwrap();
-    let mut f1 = solver.factor(&a1, &an1).unwrap();
-    let mut f2 = solver.factor(&a2, &an2).unwrap();
+    let solver = SolverBuilder::new()
+        .threads(2)
+        .configure(|cfg| cfg.parallel_solve_min_n = 0)
+        .build()
+        .unwrap();
+    let mut s1 = solver.analyze(&a1).unwrap().factor().unwrap();
+    let mut s2 = solver.analyze(&a2).unwrap().factor().unwrap();
     let b1 = gen::rhs_for_ones(&a1);
     let b2 = gen::rhs_for_ones(&a2);
     let (mut x1, mut x2) = (Vec::new(), Vec::new());
     // warm-up tick for both systems
-    solver.refactor(&a1, &an1, &mut f1).unwrap();
-    solver.solve_into(&a1, &an1, &f1, &b1, &mut x1).unwrap();
-    solver.refactor(&a2, &an2, &mut f2).unwrap();
-    solver.solve_into(&a2, &an2, &f2, &b2, &mut x2).unwrap();
+    s1.refactor(&a1.vals).unwrap();
+    s1.solve_into(&b1, &mut x1).unwrap();
+    s2.refactor(&a2.vals).unwrap();
+    s2.solve_into(&b2, &mut x2).unwrap();
     let spawned = solver.engine().threads_spawned();
     let allocs = solver.engine().scratch_alloc_events();
     for _ in 0..3 {
-        solver.refactor(&a1, &an1, &mut f1).unwrap();
-        solver.solve_into(&a1, &an1, &f1, &b1, &mut x1).unwrap();
-        solver.refactor(&a2, &an2, &mut f2).unwrap();
-        solver.solve_into(&a2, &an2, &f2, &b2, &mut x2).unwrap();
+        s1.refactor(&a1.vals).unwrap();
+        s1.solve_into(&b1, &mut x1).unwrap();
+        s2.refactor(&a2.vals).unwrap();
+        s2.solve_into(&b2, &mut x2).unwrap();
     }
     assert_eq!(solver.engine().threads_spawned(), spawned);
     assert_eq!(
@@ -207,19 +197,55 @@ fn alternating_two_analyses_stays_allocation_free_when_warm() {
 fn engine_survives_many_analyses_and_mixed_sizes() {
     // switching between systems of different size on one engine must stay
     // correct (arenas are high-water sized, larger n regrows them)
-    let solver = Solver::new(SolverConfig {
-        threads: 2,
-        parallel_solve_min_n: 0,
-        ..SolverConfig::default()
-    });
+    let solver = SolverBuilder::new()
+        .threads(2)
+        .configure(|cfg| cfg.parallel_solve_min_n = 0)
+        .build()
+        .unwrap();
     for a in [gen::grid2d(8, 8), gen::grid2d(20, 20), gen::grid2d(5, 5)] {
-        let an = solver.analyze(&a).unwrap();
-        let f = solver.factor(&a, &an).unwrap();
+        let sys = solver.analyze(&a).unwrap().factor().unwrap();
         let xt: Vec<f64> = (0..a.n).map(|i| (i % 6) as f64 - 2.0).collect();
         let mut b = vec![0.0; a.n];
         a.matvec(&xt, &mut b);
-        let x = solver.solve(&a, &an, &f, &b).unwrap();
+        let x = sys.solve(&b).unwrap();
         let err = hylu::testutil::max_abs_diff(&x, &xt);
         assert!(err < 1e-8, "n={} err={err}", a.n);
     }
+}
+
+#[test]
+fn handles_share_one_engine_across_clones() {
+    // a cloned Solver shares the engine: systems analyzed through either
+    // clone dispatch onto the same pool (one spawn event total)
+    let a = gen::grid2d(10, 10);
+    let solver = SolverBuilder::new().threads(2).build().unwrap();
+    let clone = solver.clone();
+    let s1 = solver.analyze(&a).unwrap().factor().unwrap();
+    let spawned = solver.engine().threads_spawned();
+    let s2 = clone.analyze(&a).unwrap().factor().unwrap();
+    assert_eq!(
+        clone.engine().threads_spawned(),
+        spawned,
+        "second handle must reuse the already-spawned pool"
+    );
+    let b = gen::rhs_for_ones(&a);
+    assert_eq!(s1.solve(&b).unwrap(), s2.solve(&b).unwrap());
+}
+
+// keep the raw-config path compiling too: SolverConfig is still the
+// underlying configuration carrier for services and baselines
+#[test]
+fn from_config_matches_builder() {
+    let a = gen::grid2d(9, 9);
+    let cfg = SolverConfig {
+        threads: 1,
+        repeated: true,
+        ..SolverConfig::default()
+    };
+    let s1 = Solver::from_config(cfg).unwrap();
+    let s2 = SolverBuilder::new().repeated().threads(1).build().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let x1 = s1.analyze(&a).unwrap().factor().unwrap().solve(&b).unwrap();
+    let x2 = s2.analyze(&a).unwrap().factor().unwrap().solve(&b).unwrap();
+    assert_eq!(x1, x2);
 }

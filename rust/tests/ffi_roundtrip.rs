@@ -1,0 +1,144 @@
+//! FFI round-trip smoke tests: drive the `extern "C"` entry points the
+//! way a C caller would (raw CSR arrays, opaque handle, numeric status
+//! codes) and check the full Analyze → Factorize → Solve → ReFactorize →
+//! Solve lifecycle, the out-of-order guards, and message reporting.
+//!
+//! Built only with `--features ffi` (see `[[test]]` in Cargo.toml).
+
+use std::ffi::CStr;
+
+use hylu::ffi::{
+    hylu_analyze, hylu_create, hylu_factorize, hylu_free, hylu_last_error, hylu_n, hylu_nnz,
+    hylu_refactorize, hylu_solve, hylu_solve_many, HyluHandle, HYLU_ERR_INVALID, HYLU_OK,
+};
+use hylu::prelude::*;
+use hylu::sparse::gen;
+
+/// A matrix in the raw arrays a C caller would hold.
+struct RawCsr {
+    n: i64,
+    ap: Vec<i64>,
+    ai: Vec<i64>,
+    ax: Vec<f64>,
+}
+
+fn raw(a: &Csr) -> RawCsr {
+    RawCsr {
+        n: a.n as i64,
+        ap: a.indptr.iter().map(|&p| p as i64).collect(),
+        ai: a.indices.iter().map(|&j| j as i64).collect(),
+        ax: a.vals.clone(),
+    }
+}
+
+#[test]
+fn ffi_lifecycle_roundtrip_matches_rust_api() {
+    let a = gen::grid2d(12, 12);
+    let b = gen::rhs_for_ones(&a);
+    let m = raw(&a);
+
+    unsafe {
+        let mut h: *mut HyluHandle = std::ptr::null_mut();
+        assert_eq!(hylu_create(1, 1, &mut h), HYLU_OK);
+        assert!(!h.is_null());
+
+        // out-of-order calls are state errors, not UB
+        assert_eq!(hylu_factorize(h), HYLU_ERR_INVALID);
+        assert_eq!(hylu_refactorize(h, m.ax.as_ptr()), HYLU_ERR_INVALID);
+        let msg = CStr::from_ptr(hylu_last_error(h)).to_str().unwrap();
+        assert!(msg.contains("before"), "unhelpful message: {msg}");
+
+        assert_eq!(
+            hylu_analyze(h, m.n, m.ap.as_ptr(), m.ai.as_ptr(), m.ax.as_ptr()),
+            HYLU_OK
+        );
+        assert_eq!(hylu_n(h), m.n);
+        assert_eq!(hylu_nnz(h), m.ax.len() as i64);
+        assert_eq!(hylu_factorize(h), HYLU_OK);
+
+        let mut x = vec![0.0f64; a.n];
+        assert_eq!(hylu_solve(h, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+        // bit-identical to the same lifecycle through the Rust handles
+        let solver = SolverBuilder::new().repeated().threads(1).build().unwrap();
+        let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+        assert_eq!(x, sys.solve(&b).unwrap());
+
+        // refactorize with scaled values: solution halves
+        let ax2: Vec<f64> = m.ax.iter().map(|v| v * 2.0).collect();
+        assert_eq!(hylu_refactorize(h, ax2.as_ptr()), HYLU_OK);
+        assert_eq!(hylu_solve(h, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+        sys.refactor(&ax2).unwrap();
+        assert_eq!(x, sys.solve(&b).unwrap());
+        assert!(x.iter().all(|v| (v - 0.5).abs() < 1e-8));
+
+        hylu_free(h);
+    }
+}
+
+#[test]
+fn ffi_solve_many_packs_columns() {
+    let a = gen::power_network(200, 7);
+    let b1 = gen::rhs_for_ones(&a);
+    let b2: Vec<f64> = b1.iter().map(|v| v * 3.0).collect();
+    let m = raw(&a);
+    unsafe {
+        let mut h: *mut HyluHandle = std::ptr::null_mut();
+        assert_eq!(hylu_create(1, 0, &mut h), HYLU_OK);
+        assert_eq!(
+            hylu_analyze(h, m.n, m.ap.as_ptr(), m.ai.as_ptr(), m.ax.as_ptr()),
+            HYLU_OK
+        );
+        assert_eq!(hylu_factorize(h), HYLU_OK);
+        let n = a.n;
+        let mut packed = Vec::with_capacity(2 * n);
+        packed.extend_from_slice(&b1);
+        packed.extend_from_slice(&b2);
+        let mut xs = vec![0.0f64; 2 * n];
+        assert_eq!(hylu_solve_many(h, 2, packed.as_ptr(), xs.as_mut_ptr()), HYLU_OK);
+        assert!(xs[..n].iter().all(|v| (v - 1.0).abs() < 1e-7));
+        assert!(xs[n..].iter().all(|v| (v - 3.0).abs() < 1e-7));
+        hylu_free(h);
+    }
+}
+
+#[test]
+fn ffi_rejects_malformed_input_with_codes_and_messages() {
+    unsafe {
+        let mut h: *mut HyluHandle = std::ptr::null_mut();
+        assert_eq!(hylu_create(1, 0, &mut h), HYLU_OK);
+
+        // null pointers
+        assert_eq!(
+            hylu_analyze(h, 2, std::ptr::null(), std::ptr::null(), std::ptr::null()),
+            HYLU_ERR_INVALID
+        );
+        // non-positive n
+        let ap = [0i64, 1, 2];
+        let ai = [0i64, 1];
+        let ax = [1.0f64, 1.0];
+        assert_eq!(
+            hylu_analyze(h, 0, ap.as_ptr(), ai.as_ptr(), ax.as_ptr()),
+            HYLU_ERR_INVALID
+        );
+        // out-of-bounds column index
+        let bad_ai = [0i64, 9];
+        assert_eq!(
+            hylu_analyze(h, 2, ap.as_ptr(), bad_ai.as_ptr(), ax.as_ptr()),
+            HYLU_ERR_INVALID
+        );
+        let msg = CStr::from_ptr(hylu_last_error(h)).to_str().unwrap();
+        assert!(msg.contains("out of bounds"), "{msg}");
+
+        // a structurally singular matrix surfaces its stable code
+        // (2x2 with an empty column): ap=[0,1,2], ai=[0,0]
+        let sing_ai = [0i64, 0];
+        let code = hylu_analyze(h, 2, ap.as_ptr(), sing_ai.as_ptr(), ax.as_ptr());
+        assert_eq!(code, hylu::Error::StructurallySingular { matched: 0, n: 0 }.code());
+
+        // null handle is tolerated everywhere
+        assert_eq!(hylu_factorize(std::ptr::null_mut()), HYLU_ERR_INVALID);
+        assert_eq!(hylu_n(std::ptr::null()), 0);
+        hylu_free(std::ptr::null_mut());
+        hylu_free(h);
+    }
+}

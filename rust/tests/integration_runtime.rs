@@ -6,8 +6,8 @@
 //! failed) when the artifacts are absent so `cargo test` works on a fresh
 //! clone.
 
-use hylu::coordinator::{Solver, SolverConfig};
 use hylu::numeric::kernels;
+use hylu::prelude::*;
 use hylu::runtime::XlaGemm;
 use hylu::sparse::gen;
 use hylu::testutil::Prng;
@@ -80,10 +80,10 @@ fn solver_with_xla_backend_solves_correctly() {
         return;
     }
     let a = gen::grid2d(24, 24);
-    let solver = match Solver::try_new(SolverConfig {
+    let solver = match Solver::from_config(SolverConfig {
         use_xla: true,
         xla_min_dim: 8,
-        kernel: Some(hylu::numeric::select::KernelMode::SupSup),
+        kernel: Some(KernelMode::SupSup),
         threads: 2,
         ..SolverConfig::default()
     }) {
@@ -93,10 +93,9 @@ fn solver_with_xla_backend_solves_correctly() {
             return;
         }
     };
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let b = gen::rhs_for_ones(&a);
-    let (x, st) = solver.solve_with_stats(&a, &an, &f, &b).unwrap();
+    let (x, st) = sys.solve_with_stats(&b).unwrap();
     let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
     assert!(err < 1e-8, "err {err} residual {}", st.residual);
 }
@@ -108,15 +107,15 @@ fn xla_backend_agrees_with_native_backend_factors() {
         return;
     }
     let a = gen::banded(300, 12, 5);
-    let native = Solver::new(SolverConfig {
-        kernel: Some(hylu::numeric::select::KernelMode::SupSup),
-        threads: 1,
-        ..SolverConfig::default()
-    });
-    let xla = match Solver::try_new(SolverConfig {
+    let native = SolverBuilder::new()
+        .kernel(KernelMode::SupSup)
+        .threads(1)
+        .build()
+        .unwrap();
+    let xla = match Solver::from_config(SolverConfig {
         use_xla: true,
         xla_min_dim: 4,
-        kernel: Some(hylu::numeric::select::KernelMode::SupSup),
+        kernel: Some(KernelMode::SupSup),
         threads: 1,
         ..SolverConfig::default()
     }) {
@@ -126,11 +125,10 @@ fn xla_backend_agrees_with_native_backend_factors() {
             return;
         }
     };
-    let an_n = native.analyze(&a).unwrap();
-    let an_x = xla.analyze(&a).unwrap();
-    let f_n = native.factor(&a, &an_n).unwrap();
-    let f_x = xla.factor(&a, &an_x).unwrap();
+    let sys_n = native.analyze(&a).unwrap().factor().unwrap();
+    let sys_x = xla.analyze(&a).unwrap().factor().unwrap();
     // same panel values to fp tolerance (same math, different engines)
+    let (f_n, f_x) = (sys_n.factorization(), sys_x.factorization());
     assert_eq!(f_n.fac.panels.len(), f_x.fac.panels.len());
     for (p, q) in f_n.fac.panels.iter().zip(&f_x.fac.panels) {
         assert!((p - q).abs() < 1e-9 * (1.0 + p.abs()), "{p} vs {q}");

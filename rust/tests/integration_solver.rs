@@ -1,23 +1,20 @@
 //! End-to-end integration tests: the full pipeline against a dense LU
 //! oracle on every matrix class, all kernel modes, one-time and repeated,
-//! sequential and parallel.
+//! sequential and parallel — all through the `LinearSystem` handle API.
 
 use hylu::baseline;
-use hylu::coordinator::{Solver, SolverConfig};
-use hylu::numeric::select::KernelMode;
-use hylu::sparse::csr::Csr;
+use hylu::prelude::*;
 use hylu::sparse::gen;
 use hylu::testutil::{max_abs_diff, Prng};
 
 /// Solve with HYLU and compare against the dense oracle solution.
 fn check_against_oracle(a: &Csr, cfg: SolverConfig, tol: f64) {
     let n = a.n;
-    let solver = Solver::new(cfg);
-    let an = solver.analyze(a).unwrap();
-    let f = solver.factor(a, &an).unwrap();
+    let solver = Solver::from_config(cfg).unwrap();
+    let sys = solver.analyze(a).unwrap().factor().unwrap();
     let mut rng = Prng::new(99);
     let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let x = solver.solve(a, &an, &f, &b).unwrap();
+    let x = sys.solve(&b).unwrap();
     let oracle = a.to_dense().solve(&b).expect("oracle solvable");
     let scale = oracle.iter().map(|v| v.abs()).fold(1.0f64, f64::max);
     assert!(
@@ -72,24 +69,19 @@ fn oracle_baselines() {
 #[test]
 fn repeated_solve_long_loop_stays_accurate() {
     let a0 = gen::circuit(800, 5);
-    let solver = Solver::new(SolverConfig {
-        repeated: true,
-        threads: 2,
-        ..SolverConfig::default()
-    });
-    let an = solver.analyze(&a0).unwrap();
-    let mut f = solver.factor(&a0, &an).unwrap();
+    let solver = SolverBuilder::new().repeated().threads(2).build().unwrap();
+    let mut sys = solver.analyze(&a0).unwrap().factor().unwrap();
     let mut rng = Prng::new(1);
     let mut a = a0.clone();
     for round in 0..10 {
         for v in &mut a.vals {
             *v *= 1.0 + 0.05 * rng.normal();
         }
-        solver.refactor(&a, &an, &mut f).unwrap();
+        sys.refactor(&a.vals).unwrap();
         let xt: Vec<f64> = (0..a.n).map(|i| ((i + round) % 13) as f64 - 6.0).collect();
         let mut b = vec![0.0; a.n];
         a.matvec(&xt, &mut b);
-        let x = solver.solve(&a, &an, &f, &b).unwrap();
+        let x = sys.solve(&b).unwrap();
         assert!(
             max_abs_diff(&x, &xt) < 1e-6,
             "round {round}: {}",
@@ -104,36 +96,31 @@ fn indefinite_saddle_point_needs_static_pivoting() {
     // with MC64 (default) it solves cleanly
     let a = gen::kkt(200, 80, 9);
     check_against_oracle(&a, SolverConfig::default(), 1e-6);
-    let no_mc64 = SolverConfig {
-        static_pivoting: false,
-        ..SolverConfig::default()
-    };
     // must still produce a usable answer thanks to perturbation+refinement
-    let solver = Solver::new(no_mc64);
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new().static_pivoting(false).build().unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let b = gen::rhs_for_ones(&a);
-    let (_, st) = solver.solve_with_stats(&a, &an, &f, &b).unwrap();
+    let (_, st) = sys.solve_with_stats(&b).unwrap();
     assert!(st.residual < 1e-6, "residual {}", st.residual);
 }
 
 #[test]
 fn structurally_singular_matrix_is_rejected() {
     // a matrix with an empty column cannot be matched
-    let mut c = hylu::sparse::coo::Coo::new(4);
+    let mut c = Coo::new(4);
     c.push(0, 0, 1.0);
     c.push(1, 1, 1.0);
     c.push(2, 2, 1.0);
     c.push(3, 0, 1.0); // column 3 empty
-    let a = c.to_csr();
-    let solver = Solver::new(SolverConfig::default());
-    assert!(solver.analyze(&a).is_err());
+    let solver = SolverBuilder::new().build().unwrap();
+    let err = solver.analyze(c).unwrap_err();
+    assert_eq!(err.code(), 4, "structural singularity has a stable code");
 }
 
 #[test]
 fn numerically_singular_matrix_perturbs_and_reports() {
     // rank-deficient: two identical rows
-    let mut c = hylu::sparse::coo::Coo::new(3);
+    let mut c = Coo::new(3);
     for (i, j, v) in [
         (0usize, 0usize, 1.0),
         (0, 1, 2.0),
@@ -144,11 +131,12 @@ fn numerically_singular_matrix_perturbs_and_reports() {
     ] {
         c.push(i, j, v);
     }
-    let a = c.to_csr();
-    let solver = Solver::new(SolverConfig::default());
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
-    assert!(f.fac.perturbed > 0, "expected pivot perturbation");
+    let solver = SolverBuilder::new().build().unwrap();
+    let sys = solver.analyze(c).unwrap().factor().unwrap();
+    assert!(
+        sys.factor_stats().perturbed > 0,
+        "expected pivot perturbation"
+    );
 }
 
 #[test]
@@ -156,11 +144,10 @@ fn ill_conditioned_matrix_degrades_gracefully() {
     // Hamrle3-like: both solvers "fail" accuracy in the paper; we still
     // must not panic and must report a (large) residual honestly
     let a = gen::ill_conditioned(500, 3);
-    let solver = Solver::new(SolverConfig::default());
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new().build().unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let b = gen::rhs_for_ones(&a);
-    let (x, st) = solver.solve_with_stats(&a, &an, &f, &b).unwrap();
+    let (x, st) = sys.solve_with_stats(&b).unwrap();
     assert!(x.iter().all(|v| v.is_finite()));
     assert!(st.residual.is_finite());
 }
@@ -174,4 +161,10 @@ fn matrix_market_roundtrip_through_solver() {
     hylu::sparse::io::write_matrix_market(&path, &a).unwrap();
     let b = hylu::sparse::io::read_matrix_market(&path).unwrap();
     check_against_oracle(&b, SolverConfig::default(), 1e-8);
+    // ...and the path itself is a MatrixInput: ingest directly
+    let solver = SolverBuilder::new().build().unwrap();
+    let sys = solver.analyze(path.as_path()).unwrap().factor().unwrap();
+    let rhs = gen::rhs_for_ones(&a);
+    let x = sys.solve(&rhs).unwrap();
+    assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-8));
 }

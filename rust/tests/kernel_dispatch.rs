@@ -4,8 +4,8 @@
 //! (which rides the lane-major tiling and the panel TRSM+GEMM route) must
 //! keep matching independent single-RHS solves exactly.
 
-use hylu::coordinator::{Solver, SolverConfig};
 use hylu::numeric::kernels::{self, KernelTier};
+use hylu::prelude::*;
 use hylu::sparse::gen;
 use hylu::testutil::Prng;
 
@@ -109,22 +109,21 @@ fn solve_many_columns_match_single_rhs_on_wide_supernodes() {
     // mesh + forced-wide supernodes: the panel TRSM+GEMM substitution
     // route must keep batched columns bit-identical to scalar solves
     let a = gen::grid2d(20, 20);
-    let solver = Solver::new(SolverConfig {
-        threads: 2,
-        repeated: true, // relaxed supernodes => wide panels
-        parallel_solve_min_n: 0,
-        ..SolverConfig::default()
-    });
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new()
+        .threads(2)
+        .repeated() // relaxed supernodes => wide panels
+        .configure(|cfg| cfg.parallel_solve_min_n = 0)
+        .build()
+        .unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let mut rng = Prng::new(23);
     for k in [1usize, 4, 16] {
         let bs: Vec<Vec<f64>> = (0..k)
             .map(|_| (0..a.n).map(|_| rng.normal()).collect())
             .collect();
-        let xs = solver.solve_many(&a, &an, &f, &bs).unwrap();
+        let xs = sys.solve_many(&bs).unwrap();
         for (q, b) in bs.iter().enumerate() {
-            let x = solver.solve(&a, &an, &f, b).unwrap();
+            let x = sys.solve(b).unwrap();
             assert_eq!(xs[q], x, "k={k} column {q} diverged from the scalar solve");
         }
     }
@@ -134,19 +133,14 @@ fn solve_many_columns_match_single_rhs_on_wide_supernodes() {
 fn factor_solve_roundtrip_is_correct_on_every_forced_mode() {
     // end-to-end guard with the dispatched kernels underneath: all three
     // factor kernel families still invert the matrix
-    use hylu::numeric::select::KernelMode;
     let a = gen::power_network(250, 9);
     let xt: Vec<f64> = (0..a.n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
     let mut b = vec![0.0; a.n];
     a.matvec(&xt, &mut b);
     for mode in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
-        let solver = Solver::new(SolverConfig {
-            kernel: Some(mode),
-            ..SolverConfig::default()
-        });
-        let an = solver.analyze(&a).unwrap();
-        let f = solver.factor(&a, &an).unwrap();
-        let x = solver.solve(&a, &an, &f, &b).unwrap();
+        let solver = SolverBuilder::new().kernel(mode).build().unwrap();
+        let sys = solver.analyze(&a).unwrap().factor().unwrap();
+        let x = sys.solve(&b).unwrap();
         let err = hylu::testutil::max_abs_diff(&x, &xt);
         assert!(err < 1e-7, "{mode}: err {err}");
     }

@@ -1,11 +1,9 @@
 //! Property tests over the full pipeline (hand-rolled harness; see
 //! `hylu::testutil::for_each_seed` — seeds are reported on failure for
-//! exact replay).
+//! exact replay), driven through the `LinearSystem` handle API.
 
-use hylu::coordinator::{Solver, SolverConfig};
-use hylu::numeric::select::KernelMode;
+use hylu::prelude::*;
 use hylu::sparse::coo::Coo;
-use hylu::sparse::csr::Csr;
 use hylu::testutil::{for_each_seed, Prng};
 
 /// Random structurally-nonsingular matrix: guaranteed transversal on a
@@ -32,21 +30,20 @@ fn property_residual_bounded_on_random_matrices() {
     for_each_seed(12, |rng| {
         let n = rng.range(10, 120);
         let a = random_matrix(rng, n);
-        let solver = Solver::new(SolverConfig {
-            threads: 1 + rng.below(3),
-            parallel_solve_min_n: 0,
-            ..SolverConfig::default()
-        });
-        let an = solver.analyze(&a).unwrap();
-        let f = solver.factor(&a, &an).unwrap();
+        let solver = SolverBuilder::new()
+            .threads(1 + rng.below(3))
+            .configure(|cfg| cfg.parallel_solve_min_n = 0)
+            .build()
+            .unwrap();
+        let sys = solver.analyze(&a).unwrap().factor().unwrap();
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let (x, st) = solver.solve_with_stats(&a, &an, &f, &b).unwrap();
+        let (x, st) = sys.solve_with_stats(&b).unwrap();
         assert!(x.iter().all(|v| v.is_finite()));
         assert!(
             st.residual < 1e-8,
             "residual {} (n={n}, perturbed={})",
             st.residual,
-            f.fac.perturbed
+            sys.factor_stats().perturbed
         );
     });
 }
@@ -60,14 +57,9 @@ fn property_kernels_agree_on_same_matrix() {
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let mut solutions = Vec::new();
         for kernel in [KernelMode::RowRow, KernelMode::SupRow, KernelMode::SupSup] {
-            let solver = Solver::new(SolverConfig {
-                kernel: Some(kernel),
-                threads: 1,
-                ..SolverConfig::default()
-            });
-            let an = solver.analyze(&a).unwrap();
-            let f = solver.factor(&a, &an).unwrap();
-            solutions.push(solver.solve(&a, &an, &f, &b).unwrap());
+            let solver = SolverBuilder::new().kernel(kernel).threads(1).build().unwrap();
+            let sys = solver.analyze(&a).unwrap().factor().unwrap();
+            solutions.push(sys.solve(&b).unwrap());
         }
         let scale = solutions[0]
             .iter()
@@ -85,19 +77,16 @@ fn property_refactor_equals_factor_on_same_values() {
     for_each_seed(8, |rng| {
         let n = rng.range(10, 80);
         let a = random_matrix(rng, n);
-        let solver = Solver::new(SolverConfig {
-            threads: 1,
-            ..SolverConfig::default()
-        });
-        let an = solver.analyze(&a).unwrap();
-        let f1 = solver.factor(&a, &an).unwrap();
-        let mut f2 = solver.factor(&a, &an).unwrap();
-        solver.refactor(&a, &an, &mut f2).unwrap();
-        assert_eq!(f1.fac.panels, f2.fac.panels);
-        assert_eq!(f1.fac.lvals, f2.fac.lvals);
-        assert_eq!(f1.fac.uvals, f2.fac.uvals);
-        assert_eq!(f1.fac.diag, f2.fac.diag);
-        assert_eq!(f1.fac.pivot_perm, f2.fac.pivot_perm);
+        let solver = SolverBuilder::new().threads(1).build().unwrap();
+        let sys1 = solver.analyze(&a).unwrap().factor().unwrap();
+        let mut sys2 = solver.analyze(&a).unwrap().factor().unwrap();
+        sys2.refactor(&a.vals).unwrap();
+        let (f1, f2) = (&sys1.factorization().fac, &sys2.factorization().fac);
+        assert_eq!(f1.panels, f2.panels);
+        assert_eq!(f1.lvals, f2.lvals);
+        assert_eq!(f1.uvals, f2.uvals);
+        assert_eq!(f1.diag, f2.diag);
+        assert_eq!(f1.pivot_perm, f2.pivot_perm);
     });
 }
 
@@ -120,13 +109,9 @@ fn property_scaled_system_solves_like_unscaled() {
             }
             b2[i] *= factors[i];
         }
-        let solver = Solver::new(SolverConfig {
-            threads: 1,
-            ..SolverConfig::default()
-        });
-        let an = solver.analyze(&a2).unwrap();
-        let f = solver.factor(&a2, &an).unwrap();
-        let (x, st) = solver.solve_with_stats(&a2, &an, &f, &b2).unwrap();
+        let solver = SolverBuilder::new().threads(1).build().unwrap();
+        let sys = solver.analyze(&a2).unwrap().factor().unwrap();
+        let (x, st) = sys.solve_with_stats(&b2).unwrap();
         // the residual is the robust invariant; solution agreement is
         // condition-limited (row scaling multiplies the condition number)
         assert!(st.residual < 1e-9, "residual {}", st.residual);
@@ -134,10 +119,9 @@ fn property_scaled_system_solves_like_unscaled() {
         // matrices (the dense oracle drifts identically), so the solution
         // check is only required when the instance is well-conditioned —
         // proxy: the unscaled solve agrees with xt too.
-        let solver0 = Solver::new(SolverConfig { threads: 1, ..SolverConfig::default() });
-        let an0 = solver0.analyze(&a).unwrap();
-        let f0 = solver0.factor(&a, &an0).unwrap();
-        let x0 = solver0.solve(&a, &an0, &f0, &b).unwrap();
+        let solver0 = SolverBuilder::new().threads(1).build().unwrap();
+        let sys0 = solver0.analyze(&a).unwrap().factor().unwrap();
+        let x0 = sys0.solve(&b).unwrap();
         let scale = xt.iter().map(|v| v.abs()).fold(1.0f64, f64::max);
         let drift0 = hylu::testutil::max_abs_diff(&x0, &xt) / scale;
         if drift0 < 1e-8 {
@@ -156,12 +140,11 @@ fn property_multiple_rhs_consistency() {
     for_each_seed(5, |rng| {
         let n = rng.range(20, 80);
         let a = random_matrix(rng, n);
-        let solver = Solver::new(SolverConfig::default());
-        let an = solver.analyze(&a).unwrap();
-        let f = solver.factor(&a, &an).unwrap();
+        let solver = SolverBuilder::new().build().unwrap();
+        let sys = solver.analyze(&a).unwrap().factor().unwrap();
         for _ in 0..4 {
             let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let x = solver.solve(&a, &an, &f, &b).unwrap();
+            let x = sys.solve(&b).unwrap();
             assert!(a.relative_residual(&x, &b) < 1e-8);
         }
     });

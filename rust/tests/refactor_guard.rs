@@ -2,6 +2,12 @@
 //! pattern differs from the analyzed one even when dimension and nnz
 //! match (the FNV pattern hash), and a failed `refactor` must leave the
 //! existing factors untouched.
+//!
+//! These tests deliberately stay on the deprecated `(a, an, f)`
+//! coordinator API: the guards exist precisely for callers who thread
+//! the triple by hand, and the wrappers must keep working. The handle
+//! API's equivalents live in `rust/tests/api_handles.rs`.
+#![allow(deprecated)]
 
 use hylu::coordinator::{Solver, SolverConfig};
 use hylu::sparse::coo::Coo;

@@ -6,9 +6,7 @@
 
 use std::time::Duration;
 
-use hylu::coordinator::{Solver, SolverConfig};
-use hylu::service::{ServiceConfig, SolverService};
-use hylu::sparse::csr::Csr;
+use hylu::prelude::*;
 use hylu::sparse::gen;
 use hylu::testutil::Prng;
 
@@ -20,28 +18,24 @@ fn rhs_set(n: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
 }
 
 #[test]
-fn threads_hammering_one_solver_match_sequential_bitwise() {
+fn threads_hammering_one_system_match_sequential_bitwise() {
     let a = gen::grid2d(20, 20);
-    let solver = Solver::new(SolverConfig {
-        threads: 2,
-        scratch_slots: 8,
-        ..SolverConfig::default()
-    });
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new()
+        .threads(2)
+        .scratch_slots(8)
+        .build()
+        .unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let bs = rhs_set(a.n, 8, 21);
     // sequential references first
-    let expect: Vec<Vec<f64>> = bs
-        .iter()
-        .map(|b| solver.solve(&a, &an, &f, b).unwrap())
-        .collect();
+    let expect: Vec<Vec<f64>> = bs.iter().map(|b| sys.solve(b).unwrap()).collect();
     std::thread::scope(|sc| {
         for t in 0..8usize {
-            let (solver, a, an, f, bs, expect) = (&solver, &a, &an, &f, &bs, &expect);
+            let (sys, bs, expect) = (&sys, &bs, &expect);
             sc.spawn(move || {
                 for rep in 0..10 {
                     let q = (t + rep) % bs.len();
-                    let x = solver.solve(a, an, f, &bs[q]).unwrap();
+                    let x = sys.solve(&bs[q]).unwrap();
                     assert_eq!(x, expect[q], "thread {t} rep {rep} col {q}");
                 }
             });
@@ -56,21 +50,20 @@ fn solver_with_one_scratch_slot_still_serves_concurrent_callers() {
     // cap 1 forces callers through the condvar fallback path: correctness
     // and liveness must hold even fully contended
     let a = gen::grid2d(12, 12);
-    let solver = Solver::new(SolverConfig {
-        threads: 1,
-        scratch_slots: 1,
-        ..SolverConfig::default()
-    });
-    let an = solver.analyze(&a).unwrap();
-    let f = solver.factor(&a, &an).unwrap();
+    let solver = SolverBuilder::new()
+        .threads(1)
+        .scratch_slots(1)
+        .build()
+        .unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
     let b = gen::rhs_for_ones(&a);
-    let expect = solver.solve(&a, &an, &f, &b).unwrap();
+    let expect = sys.solve(&b).unwrap();
     std::thread::scope(|sc| {
         for _ in 0..6 {
-            let (solver, a, an, f, b, expect) = (&solver, &a, &an, &f, &b, &expect);
+            let (sys, b, expect) = (&sys, &b, &expect);
             sc.spawn(move || {
                 for _ in 0..20 {
-                    assert_eq!(solver.solve(a, an, f, b).unwrap(), *expect);
+                    assert_eq!(sys.solve(b).unwrap(), *expect);
                 }
             });
         }
@@ -98,17 +91,16 @@ fn service_coalesces_and_matches_sequential_bitwise() {
     // identically configured standalone solver: the deterministic
     // pipeline produces the same analysis/factors, so results must be
     // bit-identical to the service's batched columns
-    let reference = Solver::new(SolverConfig {
-        threads: 1,
-        ..SolverConfig::default()
-    });
-    let an = reference.analyze(&a).unwrap();
-    let f = reference.factor(&a, &an).unwrap();
+    let reference = SolverBuilder::new()
+        .threads(1)
+        .build()
+        .unwrap()
+        .analyze(&a)
+        .unwrap()
+        .factor()
+        .unwrap();
     let bs = rhs_set(a.n, 48, 7);
-    let expect: Vec<Vec<f64>> = bs
-        .iter()
-        .map(|b| reference.solve(&a, &an, &f, b).unwrap())
-        .collect();
+    let expect: Vec<Vec<f64>> = bs.iter().map(|b| reference.solve(b).unwrap()).collect();
     // submit everything up front: the 2ms coalescing tick piles the
     // whole burst into very few dispatches
     let tickets: Vec<_> = bs
@@ -152,16 +144,12 @@ fn sharded_multi_system_service_with_concurrent_callers() {
     assert_eq!(service.shard_count(), 2);
     assert_eq!(service.system_count(), 4);
     // references from an identically configured solver
-    let reference = Solver::new(SolverConfig {
-        threads: 1,
-        ..SolverConfig::default()
-    });
+    let reference = SolverBuilder::new().threads(1).build().unwrap();
     let bs = rhs_set(base.n, 4, 3);
     let mut expect = Vec::new();
     for (s, m) in systems.iter().enumerate() {
-        let an = reference.analyze(m).unwrap();
-        let f = reference.factor(m, &an).unwrap();
-        expect.push(reference.solve(m, &an, &f, &bs[s]).unwrap());
+        let sys = reference.analyze(m).unwrap().factor().unwrap();
+        expect.push(sys.solve(&bs[s]).unwrap());
     }
     std::thread::scope(|sc| {
         for t in 0..6usize {
