@@ -1,11 +1,20 @@
-//! Serving throughput: solves/sec vs. concurrent caller count.
+//! Serving throughput: solves/sec, p50 latency, and batch width vs.
+//! concurrent caller count — static coalescing tick vs. the adaptive
+//! window, against the serialized one-mutex baseline.
 //!
 //! One shard, C caller threads each submitting single right-hand sides.
-//! The coalescing [`SolverService`] front door is compared against the
-//! serialized baseline the service replaced: one `Solver` behind one
-//! mutex, exactly one in-flight solve. The service wins by (a) checking
-//! per-call scratch out of a pool so callers overlap, and (b) draining
-//! the queue into one batched `solve_many` block dispatch per tick.
+//! Three configurations per caller count:
+//!
+//! - **baseline** — the pre-service front door: one `Solver` behind one
+//!   mutex, exactly one in-flight solve.
+//! - **static** — `SolverService` with a fixed 200µs coalescing tick.
+//! - **adaptive** — `SolverService` with `tick_max = 2ms`: the window
+//!   stretches while sustained arrivals keep widening batches and
+//!   collapses to zero when the shard idles.
+//!
+//! Acceptance (the PR 5 criterion): at every concurrency level the
+//! adaptive tick must reach a mean batch width >= the static tick's at
+//! equal or lower p50 latency (5% tolerance).
 //!
 //! ```bash
 //! cargo bench --bench throughput
@@ -17,25 +26,81 @@ use std::time::{Duration, Instant};
 use hylu::api::Solver;
 use hylu::bench_harness::{environment, Table};
 use hylu::coordinator::SolverConfig;
-use hylu::service::{ServiceConfig, SolverService};
+use hylu::service::{ServiceConfig, SolverService, SystemId};
 use hylu::sparse::gen;
 
 /// Run `requests` invocations of `op` spread over `callers` threads;
-/// returns elapsed seconds.
-fn drive(callers: usize, requests: usize, op: impl Fn() + Sync) -> f64 {
+/// returns (elapsed seconds, per-request latencies in seconds).
+fn drive(callers: usize, requests: usize, op: impl Fn() + Sync) -> (f64, Vec<f64>) {
+    let latencies = Mutex::new(Vec::with_capacity(requests));
     let t0 = Instant::now();
     std::thread::scope(|sc| {
         for w in 0..callers {
-            let op = &op;
+            let (op, latencies) = (&op, &latencies);
             sc.spawn(move || {
                 let per = requests / callers + usize::from(w < requests % callers);
+                let mut local = Vec::with_capacity(per);
                 for _ in 0..per {
+                    let t = Instant::now();
                     op();
+                    local.push(t.elapsed().as_secs_f64());
                 }
+                latencies.lock().unwrap().extend(local);
             });
         }
     });
-    t0.elapsed().as_secs_f64()
+    (t0.elapsed().as_secs_f64(), latencies.into_inner().unwrap())
+}
+
+fn p50(lat: &mut [f64]) -> f64 {
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if lat.is_empty() {
+        0.0
+    } else {
+        lat[lat.len() / 2]
+    }
+}
+
+struct ServiceRun {
+    rate: f64,
+    p50_us: f64,
+    mean_batch: f64,
+    max_batch: usize,
+}
+
+fn run_service(
+    cfg: &SolverConfig,
+    a: &hylu::sparse::csr::Csr,
+    b: &[f64],
+    callers: usize,
+    requests: usize,
+    tick: Duration,
+    tick_max: Duration,
+) -> ServiceRun {
+    let service = SolverService::new(
+        ServiceConfig {
+            shards: 1,
+            solver: cfg.clone(),
+            max_batch: 64,
+            tick,
+            tick_max,
+            ..ServiceConfig::default()
+        },
+        vec![a.clone()],
+    )
+    .expect("service");
+    let (t, mut lat) = drive(callers, requests, || {
+        let x = service.solve(SystemId(0), b.to_vec()).expect("service solve");
+        assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-6));
+    });
+    let st = service.stats();
+    drop(service);
+    ServiceRun {
+        rate: requests as f64 / t,
+        p50_us: p50(&mut lat) * 1e6,
+        mean_batch: st.mean_batch(),
+        max_batch: st.max_batch,
+    }
 }
 
 fn main() {
@@ -56,57 +121,102 @@ fn main() {
         requests
     );
     let mut table = Table::new(
-        "serving throughput, 1 shard: coalescing service vs serialized mutex front door",
+        "serving throughput, 1 shard: static tick vs adaptive window vs serialized mutex",
         &[
             "callers",
-            "service sol/s",
-            "baseline sol/s",
-            "speedup",
+            "mode",
+            "sol/s",
+            "p50 us",
+            "vs base",
             "mean batch",
             "max batch",
         ],
     );
 
+    let mut acceptance = Vec::new();
     for &callers in &[1usize, 2, 4, 8] {
-        let service = SolverService::new(
-            ServiceConfig {
-                shards: 1,
-                solver: cfg.clone(),
-                max_batch: 64,
-                tick: Duration::from_micros(200),
-                ..ServiceConfig::default()
-            },
-            vec![a.clone()],
-        )
-        .expect("service");
-        let t_service = drive(callers, requests, || {
-            let x = service.solve(0, b.clone()).expect("service solve");
-            assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-6));
-        });
-        let st = service.stats();
-        drop(service);
-        let service_rate = requests as f64 / t_service;
-
+        // serialized baseline: the pre-service front door
         let solver = Solver::from_config(cfg.clone()).expect("solver");
         let sys = solver.analyze(&a).expect("analyze").factor().expect("factor");
         let lock = Mutex::new(());
-        let t_base = drive(callers, requests, || {
+        let (t_base, mut lat_base) = drive(callers, requests, || {
             let _g = lock.lock().unwrap();
             sys.solve(&b).expect("baseline solve");
         });
         let base_rate = requests as f64 / t_base;
-
         table.row(
             vec![
                 callers.to_string(),
-                format!("{service_rate:.0}"),
+                "baseline".into(),
                 format!("{base_rate:.0}"),
-                format!("{:.2}x", service_rate / base_rate),
-                format!("{:.2}", st.mean_batch()),
-                st.max_batch.to_string(),
+                format!("{:.0}", p50(&mut lat_base) * 1e6),
+                "1.00x".into(),
+                "-".into(),
+                "-".into(),
             ],
-            service_rate / base_rate,
+            1.0,
         );
+
+        let fixed = run_service(
+            &cfg,
+            &a,
+            &b,
+            callers,
+            requests,
+            Duration::from_micros(200),
+            Duration::ZERO,
+        );
+        table.row(
+            vec![
+                callers.to_string(),
+                "static".into(),
+                format!("{:.0}", fixed.rate),
+                format!("{:.0}", fixed.p50_us),
+                format!("{:.2}x", fixed.rate / base_rate),
+                format!("{:.2}", fixed.mean_batch),
+                fixed.max_batch.to_string(),
+            ],
+            fixed.rate / base_rate,
+        );
+
+        let adaptive = run_service(
+            &cfg,
+            &a,
+            &b,
+            callers,
+            requests,
+            Duration::from_micros(50),
+            Duration::from_millis(2),
+        );
+        table.row(
+            vec![
+                callers.to_string(),
+                "adaptive".into(),
+                format!("{:.0}", adaptive.rate),
+                format!("{:.0}", adaptive.p50_us),
+                format!("{:.2}x", adaptive.rate / base_rate),
+                format!("{:.2}", adaptive.mean_batch),
+                adaptive.max_batch.to_string(),
+            ],
+            adaptive.rate / base_rate,
+        );
+
+        acceptance.push((callers, fixed, adaptive));
     }
     table.print();
+
+    println!("\nacceptance: adaptive mean batch >= static at p50 <= static * 1.05");
+    for (callers, fixed, adaptive) in &acceptance {
+        let batch_ok = adaptive.mean_batch >= fixed.mean_batch * 0.999;
+        let lat_ok = adaptive.p50_us <= fixed.p50_us * 1.05;
+        println!(
+            "  {callers} callers: batch {:.2} vs {:.2} [{}], p50 {:.0}us vs {:.0}us [{}]",
+            adaptive.mean_batch,
+            fixed.mean_batch,
+            if batch_ok { "ok" } else { "MISS" },
+            adaptive.p50_us,
+            fixed.p50_us,
+            if lat_ok { "ok" } else { "MISS" },
+        );
+    }
 }

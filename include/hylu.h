@@ -95,6 +95,54 @@ const char *hylu_last_error(hylu_handle h);
 /* Release the handle (null is a no-op). */
 void hylu_free(hylu_handle h);
 
+/* ---- Elastic solve service ------------------------------------------
+ *
+ * Mirrors the Rust SolverService: a sharded, request-coalescing front
+ * door whose systems come and go on a live service. Matrices enter
+ * with hylu_service_register (same CSR contract as hylu_analyze, plus
+ * an internal factorization); requests are routed by the returned id;
+ * hylu_service_retire drains in-flight work for the system before
+ * dropping its factors; hylu_service_rebalance moves hot systems onto
+ * quiet shards by observed load. Ids are never reused.
+ *
+ * Like hylu_handle, a hylu_service handle is not thread-safe at the
+ * ABI: serialize calls per handle (concurrent submission is a Rust-API
+ * capability). */
+
+typedef struct hylu_service_s *hylu_service;
+
+/* Create an elastic service: `shards` dispatcher threads, `threads`
+ * engine workers per registered solver (0 = all cores). Starts empty. */
+int32_t hylu_service_create(int64_t shards, int64_t threads,
+                            hylu_service *out);
+
+/* Analyze + factorize a CSR matrix and register it on the live
+ * service; writes the routing id to *out_id. */
+int32_t hylu_service_register(hylu_service s, int64_t n, const int64_t *ap,
+                              const int64_t *ai, const double *ax,
+                              uint64_t *out_id);
+
+/* Retire a system: queued solves for it drain first, then its factors
+ * drop. Later calls with the id fail with HYLU_ERR_INVALID. */
+int32_t hylu_service_retire(hylu_service s, uint64_t id);
+
+/* Solve A x = b on system `id` through the coalescing queue (blocking;
+ * b and x are length-n arrays for that system). */
+int32_t hylu_service_solve(hylu_service s, uint64_t id, const double *b,
+                           double *x);
+
+/* Move hot systems onto quiet shards by observed load; writes the
+ * number of systems moved to *moved (may be NULL). */
+int32_t hylu_service_rebalance(hylu_service s, int64_t *moved);
+
+/* Message of the last error on this service handle (empty when none);
+ * valid until the next failing call or hylu_service_free. */
+const char *hylu_service_last_error(hylu_service s);
+
+/* Release the service (null is a no-op): queued work drains, dispatcher
+ * threads join, all registered factors drop. */
+void hylu_service_free(hylu_service s);
+
 #ifdef __cplusplus
 } /* extern "C" */
 #endif

@@ -145,6 +145,15 @@ impl Solver {
 /// `Send + Sync`: a `&LinearSystem<Factored>` can be shared across
 /// threads and `solve*` called concurrently (each call checks a private
 /// scratch arena out of the engine's pool); `refactor` requires `&mut`.
+///
+/// Because the handle also keeps its engine alive (`Arc` internally),
+/// **moving** it between threads is a plain value move with no
+/// rebinding: factor state, plan, and warm arenas travel with it, and
+/// `refactor`/`solve` results are bit-identical wherever the value
+/// lands. This is the property the elastic
+/// [`SolverService`](crate::service::SolverService) leans on when it
+/// migrates systems between shards under traffic (asserted in
+/// `rust/tests/handle_moves.rs`).
 pub struct LinearSystem<S: State> {
     core: Arc<Core>,
     a: Csr,
@@ -157,6 +166,17 @@ impl<S: State> LinearSystem<S> {
     /// Dimension of the system.
     pub fn n(&self) -> usize {
         self.a.n
+    }
+
+    /// A [`Solver`] handle sharing this system's engine (cheap `Arc`
+    /// clone). Lets code that only holds a handle — e.g. after
+    /// [`crate::service::SolverService::retire`] returned it — analyze
+    /// further systems on the same pool without having kept the original
+    /// `Solver` value around.
+    pub fn solver(&self) -> Solver {
+        Solver {
+            core: self.core.clone(),
+        }
     }
 
     /// Stored nonzeros of the owned matrix.

@@ -9,6 +9,7 @@
 //!             [--kernel scalar|portable|native|auto]
 //! hylu serve  --matrix FILE.mtx | --gen CLASS:N [--systems M] [--shards S]
 //!             [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]
+//!             [--tick-max-us U] [--elastic]
 //! ```
 //!
 //! `--rhs K` batches K right-hand sides through the engine's multi-RHS
@@ -16,7 +17,12 @@
 //! `serve` runs the full front door: a sharded
 //! [`SolverService`](crate::service::SolverService) under C concurrent
 //! callers, reporting solves/sec and coalescing statistics against the
-//! serialized single-front-door baseline.
+//! serialized single-front-door baseline. `--tick-max-us` enables the
+//! adaptive coalescing window (stretches toward the ceiling under
+//! sustained arrivals, collapses to zero when a shard idles);
+//! `--elastic` additionally runs a churn thread that registers, solves,
+//! retires, and rebalances systems *while* the callers hammer the
+//! stable ones — the live-topology scenario.
 //!
 //! Note the two meanings of `--kernel`: for `solve` it forces the numeric
 //! kernel *family* (row-row / sup-row / sup-sup); for `bench` it pins the
@@ -31,7 +37,7 @@ use crate::bench_harness::{environment, fmt_time, Table};
 use crate::bench_suite;
 use crate::numeric::kernels::{self, KernelTier};
 use crate::numeric::select::KernelMode;
-use crate::service::{ServiceConfig, SolverService};
+use crate::service::{ServiceConfig, SolverService, SystemId};
 use crate::sparse::csr::Csr;
 use crate::sparse::{gen, io};
 use crate::{Error, Result};
@@ -167,6 +173,7 @@ pub fn run(argv: &[String]) -> i32 {
                  [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
                  [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
                  [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
+                 [--tick-max-us U] [--elastic] \
                  (bench: --kernel scalar|portable|native|auto pins the dispatch tier)"
             );
             // usage errors share Error::Invalid's stable code
@@ -393,7 +400,8 @@ where
 /// Serving-throughput mode: C concurrent callers hammer a sharded
 /// [`SolverService`], then the same workload runs through the serialized
 /// single-front-door baseline (one solver behind one mutex) for
-/// comparison.
+/// comparison. With `--elastic`, a churn thread registers / solves /
+/// retires extra systems and rebalances placement while the callers run.
 fn cmd_serve(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args)?;
     let mut builder = config_from(args)?.repeated();
@@ -409,6 +417,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = flag_usize(args, "requests", 256)?.max(1);
     let max_batch = flag_usize(args, "max-batch", 32)?.max(1);
     let tick_us = flag_usize(args, "tick-us", 200)? as u64;
+    let tick_max_us = flag_usize(args, "tick-max-us", 0)? as u64;
+    let elastic = args.has("elastic");
 
     // parameter sweep: same pattern, scaled values per system; each
     // system's RHS is built so its exact solution is all-ones
@@ -431,25 +441,82 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch,
             queue_cap: 4096,
             tick: std::time::Duration::from_micros(tick_us),
+            tick_max: std::time::Duration::from_micros(tick_max_us),
+            ..ServiceConfig::default()
         },
         systems.clone(),
     )?;
+    let ids = service.system_ids();
     println!(
         "serve        : {name} (n={}, nnz={}), {} systems over {} shards, \
-         {} callers x {} requests",
+         {} callers x {} requests{}{}",
         a.n,
         a.nnz(),
         service.system_count(),
         service.shard_count(),
         callers,
-        requests
+        requests,
+        if tick_max_us > 0 { " [adaptive tick]" } else { "" },
+        if elastic { " [elastic churn]" } else { "" },
     );
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let churn_cycles = std::sync::atomic::AtomicUsize::new(0);
     let t0 = std::time::Instant::now();
-    let worst = drive_callers(callers, requests, nsys, |sys| {
-        service.solve(sys, bs[sys].clone())
+    let (worst, churn_result) = std::thread::scope(|sc| -> Result<(f64, Result<()>)> {
+        let churn = if elastic {
+            let (service, a, stop, churn_cycles) = (&service, &a, &stop, &churn_cycles);
+            Some(sc.spawn(move || -> Result<()> {
+                // live-topology churn: register a fresh system, serve it
+                // once, retire it, rebalance — repeatedly, against the
+                // same service the callers are hammering
+                let churn_solver = SolverBuilder::new().repeated().threads(1).build()?;
+                let b = gen::rhs_for_ones(a);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let sys = churn_solver.analyze(a)?.factor()?;
+                    let id = service.register(sys)?;
+                    let x = service.solve(id, b.clone())?;
+                    let err = x.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
+                    if err > 1e-6 {
+                        return Err(Error::Runtime(format!(
+                            "churn system drifted: |x-1| = {err:.3e}"
+                        )));
+                    }
+                    let _ = service.retire(id)?;
+                    service.rebalance()?;
+                    churn_cycles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Ok(())
+            }))
+        } else {
+            None
+        };
+        let worst = drive_callers(callers, requests, nsys, |sys| {
+            service.solve(ids[sys], bs[sys].clone())
+        });
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let churn_result = match churn {
+            Some(h) => h.join().unwrap_or_else(|_| {
+                Err(Error::Runtime("elastic churn thread panicked".into()))
+            }),
+            None => Ok(()),
+        };
+        Ok((worst?, churn_result))
     })?;
+    churn_result?;
     let t_service = t0.elapsed().as_secs_f64();
     let st = service.stats();
+    if elastic {
+        println!(
+            "elasticity   : {} churn cycles ({} registers, {} retires, {} moves, \
+             {} forwarded, route epoch {})",
+            churn_cycles.load(std::sync::atomic::Ordering::Relaxed),
+            st.registers,
+            st.retires,
+            st.moves,
+            st.forwarded,
+            service.route_epoch()
+        );
+    }
     drop(service);
 
     // serialized baseline: the pre-service front door (one solver, one
@@ -604,7 +671,33 @@ mod tests {
 
     #[test]
     fn serve_rejects_bad_flags() {
+        // flag parse failures share Error::Invalid's stable code
         let code = run(&sv(&["serve", "--gen", "mesh2d:100", "--requests", "many"]));
-        assert_eq!(code, 1);
+        assert_eq!(code, Error::Invalid(String::new()).code());
+    }
+
+    #[test]
+    fn serve_elastic_end_to_end() {
+        // live churn (register/solve/retire/rebalance) against caller
+        // traffic, plus the adaptive coalescing window
+        let code = run(&sv(&[
+            "serve",
+            "--gen",
+            "mesh2d:225",
+            "--systems",
+            "2",
+            "--shards",
+            "2",
+            "--rhs-workers",
+            "2",
+            "--requests",
+            "24",
+            "--threads",
+            "1",
+            "--elastic",
+            "--tick-max-us",
+            "500",
+        ]));
+        assert_eq!(code, 0);
     }
 }

@@ -43,6 +43,7 @@ use std::os::raw::c_char;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::api::{Analyzed, Factored, LinearSystem, Solver, SolverBuilder};
+use crate::service::{ServiceConfig, SolverService, SystemId};
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
@@ -482,5 +483,245 @@ pub unsafe extern "C" fn hylu_last_error(h: *const HyluHandle) -> *const c_char 
 pub unsafe extern "C" fn hylu_free(h: *mut HyluHandle) {
     if !h.is_null() {
         drop(Box::from_raw(h));
+    }
+}
+
+/// The opaque elastic-service handle behind `hylu_service` in
+/// `include/hylu.h`: a sharded, coalescing
+/// [`SolverService`](crate::service::SolverService) plus the solver used
+/// to analyze+factor matrices entering through
+/// [`hylu_service_register`], and the error slot. Mirrors the Rust
+/// service's register/retire/rebalance lifecycle; like [`HyluHandle`],
+/// the *handle* is not thread-safe (serialize calls per handle) even
+/// though the underlying service is — concurrent submission is a
+/// Rust-API capability.
+pub struct HyluService {
+    service: SolverService,
+    solver: Solver,
+    last_error: CString,
+    /// Retained handles of retired systems are dropped immediately; this
+    /// buffer only reuses the single-RHS solution allocation.
+    x1: Vec<f64>,
+}
+
+impl HyluService {
+    fn fail(&mut self, e: &Error) -> i32 {
+        self.last_error = CString::new(e.to_string()).unwrap_or_default();
+        e.code()
+    }
+}
+
+/// Create an elastic solve service with `shards` dispatcher threads and
+/// `threads` engine workers per registered system's solver (0 = all
+/// cores). The service starts empty; admit systems with
+/// [`hylu_service_register`]. Writes the handle to `*out`.
+///
+/// # Safety
+/// `out` must be a valid pointer to a `hylu_service` slot. The returned
+/// handle must be released with [`hylu_service_free`].
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_create(
+    shards: i64,
+    threads: i64,
+    out: *mut *mut HyluService,
+) -> i32 {
+    guarded(|| {
+        if out.is_null() || shards <= 0 || threads < 0 {
+            return HYLU_ERR_INVALID;
+        }
+        let cfg = ServiceConfig {
+            shards: shards as usize,
+            ..ServiceConfig::default()
+        };
+        let solver = match SolverBuilder::new()
+            .repeated()
+            .threads(threads as usize)
+            .build()
+        {
+            Ok(s) => s,
+            Err(e) => return e.code(),
+        };
+        match SolverService::with_shards(cfg) {
+            Ok(service) => {
+                let h = Box::new(HyluService {
+                    service,
+                    solver,
+                    last_error: CString::default(),
+                    x1: Vec::new(),
+                });
+                *out = Box::into_raw(h);
+                HYLU_OK
+            }
+            Err(e) => e.code(),
+        }
+    })
+}
+
+/// Analyze + factorize a CSR matrix (same array contract as
+/// [`hylu_analyze`]) and register it on the live service. Writes the
+/// system id to `*out_id`; requests for retired ids fail with
+/// [`HYLU_ERR_INVALID`] (ids are never reused).
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `ap` must
+/// point to `n + 1` readable `int64_t`s, `ai`/`ax` to `ap[n]` readable
+/// elements each, and `out_id` to a writable `uint64_t`.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_register(
+    s: *mut HyluService,
+    n: i64,
+    ap: *const i64,
+    ai: *const i64,
+    ax: *const f64,
+    out_id: *mut u64,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        if out_id.is_null() {
+            return s.fail(&Error::Invalid("out_id must be non-null".into()));
+        }
+        let a = match csr_from_raw(n, ap, ai, ax) {
+            Ok(a) => a,
+            Err(e) => return s.fail(&e),
+        };
+        let factored = match s.solver.analyze(a).and_then(|sys| sys.factor()) {
+            Ok(f) => f,
+            Err(e) => return s.fail(&e),
+        };
+        match s.service.register(factored) {
+            Ok(id) => {
+                *out_id = id.0;
+                HYLU_OK
+            }
+            Err(e) => s.fail(&e),
+        }
+    })
+}
+
+/// Retire a system from the live service: queued solves for it drain
+/// first, then its factor state is dropped.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`].
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_retire(s: *mut HyluService, id: u64) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| match s.service.retire(SystemId(id)) {
+        Ok(_handle) => HYLU_OK, // dropping the handle releases its factors
+        Err(e) => s.fail(&e),
+    })
+}
+
+/// Solve `A x = b` on system `id` through the coalescing queue
+/// (blocking). `b` and `x` are length-`n` arrays for that system's `n`.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `b` must
+/// point to `n` readable doubles and `x` to `n` writable doubles.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_solve(
+    s: *mut HyluService,
+    id: u64,
+    b: *const f64,
+    x: *mut f64,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        if b.is_null() || x.is_null() {
+            return s.fail(&Error::Invalid("b/x must be non-null".into()));
+        }
+        // the routing table owns the authoritative dimension
+        let n = match s.service.system_dim(SystemId(id)) {
+            Some(n) => n,
+            None => return s.fail(&Error::Invalid(format!("unknown system id {id}"))),
+        };
+        let bin = std::slice::from_raw_parts(b, n);
+        s.x1.clear();
+        s.x1.extend_from_slice(bin);
+        let rhs = std::mem::take(&mut s.x1);
+        match s.service.solve(SystemId(id), rhs) {
+            Ok(sol) => {
+                let out = std::slice::from_raw_parts_mut(x, n);
+                out.copy_from_slice(&sol);
+                s.x1 = sol; // keep the allocation warm
+                HYLU_OK
+            }
+            Err(e) => s.fail(&e),
+        }
+    })
+}
+
+/// Rebalance hot systems across shards by observed load; writes the
+/// number of systems moved to `*moved` (may be null).
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `moved` must
+/// be null or point to a writable `int64_t`.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_rebalance(s: *mut HyluService, moved: *mut i64) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| match s.service.rebalance() {
+        Ok(k) => {
+            if !moved.is_null() {
+                *moved = k as i64;
+            }
+            HYLU_OK
+        }
+        Err(e) => s.fail(&e),
+    })
+}
+
+/// Message of the last error recorded on this service handle (empty
+/// string when none). The pointer is valid until the next failing call
+/// on the same handle or [`hylu_service_free`].
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`] (or null,
+/// which returns an empty static string).
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_last_error(s: *const HyluService) -> *const c_char {
+    if s.is_null() {
+        static EMPTY: &[u8] = b"\0";
+        return EMPTY.as_ptr() as *const c_char;
+    }
+    (*s).last_error.as_ptr()
+}
+
+/// Release a service handle (idempotent for null): queued work drains,
+/// dispatcher threads join, every registered system's factors drop.
+///
+/// # Safety
+/// `s` must be null or a live handle from [`hylu_service_create`]; it
+/// must not be used afterwards.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_free(s: *mut HyluService) {
+    if !s.is_null() {
+        drop(Box::from_raw(s));
+    }
+}
+
+/// [`guarded`] for service entry points: a caught panic records a
+/// message but does not poison — the service's own dispatchers contain
+/// per-request failures, so the handle stays usable.
+fn guarded_service(s: &mut HyluService, f: impl FnOnce(&mut HyluService) -> i32) -> i32 {
+    match catch_unwind(AssertUnwindSafe(|| f(&mut *s))) {
+        Ok(code) => code,
+        Err(_) => {
+            s.last_error = CString::new("internal panic caught at the service ABI boundary")
+                .unwrap_or_default();
+            HYLU_ERR_PANIC
+        }
     }
 }

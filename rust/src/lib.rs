@@ -64,7 +64,9 @@ pub mod prelude {
     pub use crate::numeric::kernels::KernelTier;
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;
-    pub use crate::service::{ServiceConfig, ServiceStats, SolverService};
+    pub use crate::service::{
+        Priority, ServiceConfig, ServiceStats, SolverService, SystemId, SystemLoad,
+    };
     pub use crate::sparse::csr::Csr;
     pub use crate::sparse::input::{CscInput, MatrixInput};
     pub use crate::sparse::Coo;

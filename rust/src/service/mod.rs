@@ -1,60 +1,85 @@
-//! Concurrent serving front door: a sharded, request-coalescing solve
-//! service over the repeated-solve engine.
+//! Concurrent serving front door: a sharded, request-coalescing,
+//! **elastic** solve service over the repeated-solve engine.
 //!
 //! HYLU's headline number is the repeated-solve loop, and the workloads
 //! that loop serves (circuit transient simulation, many-RHS node-level
-//! solves) issue requests *concurrently* from many callers. A
+//! solves) issue requests *concurrently* from many callers — and their
+//! working set of matrices changes over the life of the process. A
 //! [`SolverService`] turns the crate's one-caller-at-a-time `Solver`
 //! API into a traffic-serving front door:
 //!
-//! - **Shards.** The service owns `S` independent solver engines, each
-//!   carrying its systems as owning
-//!   [`LinearSystem<Factored>`](crate::api::LinearSystem) handles.
-//!   Systems — matrices registered at construction — are routed to
-//!   shards round-robin, so a multi-matrix parameter sweep spreads
-//!   across engines while each matrix keeps its warm factor/scratch
-//!   state on one shard.
-//! - **Coalescing queue.** Callers [`SolverService::submit`] single
-//!   right-hand sides and get a [`Ticket`] (a per-request channel). A
-//!   per-shard dispatcher thread drains its queue once per tick and
-//!   issues **one batched block dispatch per system**
-//!   ([`crate::api::LinearSystem::solve_many_into`]) for everything
-//!   that piled up — k concurrent callers cost one substitution sweep
-//!   over a dense n×k block instead of k scalar sweeps. Batched columns
-//!   are bit-identical to independent scalar solves, so coalescing is
+//! - **Shards.** The service runs `S` dispatcher threads. Each system is
+//!   an owning [`LinearSystem<Factored>`](crate::api::LinearSystem)
+//!   handle — matrix, analysis, factorization and engine travel as one
+//!   value — resident on exactly one shard, where its warm factor and
+//!   scratch state stays local.
+//! - **Elastic topology.** Systems come and go on a *live* service:
+//!   [`SolverService::register`] admits a factored handle under a fresh
+//!   [`SystemId`], [`SolverService::retire`] drains its in-flight
+//!   tickets and hands the value back, and [`SolverService::rebalance`]
+//!   moves hot systems (by per-system EWMA load,
+//!   [`SolverService::system_load`]) onto quiet shards as value moves.
+//!   Routing is a lock-free read of an epoch-published table
+//!   (`service/route.rs`; protocol in DESIGN.md §4); requests racing a
+//!   move are forwarded or briefly parked, never lost.
+//! - **Coalescing queue with priority lanes.** Callers
+//!   [`SolverService::submit`] single right-hand sides and get a
+//!   [`Ticket`]. A per-shard dispatcher drains its queue once per tick
+//!   and issues **one batched block dispatch per system** for everything
+//!   that piled up. Requests ride one of two lanes
+//!   ([`Priority::Deadline`] | [`Priority::Bulk`]): deadline requests
+//!   dispatch first (earliest deadline first), bounded against bulk
+//!   starvation (`ServiceConfig::starvation_bound`). Batched columns are
+//!   bit-identical to independent scalar solves, so coalescing is
 //!   invisible to callers.
+//! - **Adaptive tick.** The coalescing window is no longer a fixed
+//!   constant: with [`ServiceConfig::tick_max`] set, it stretches while
+//!   sustained arrivals keep widening batches and collapses to zero the
+//!   moment a shard idles ([`queue::AdaptiveTick`]).
 //! - **Refactor routing.** [`SolverService::refactor`] ships new
-//!   same-pattern values through the same queue; queued solves submitted
-//!   before the refactor are flushed first, so a caller never observes
-//!   values newer than its submission point.
+//!   same-pattern values through the same queue; solves admitted before
+//!   the refactor are flushed first (a barrier that lane re-ordering
+//!   cannot jump), so a caller never observes values newer than its
+//!   submission point.
 //!
-//! [`ServiceStats`] exposes the coalescing behavior (requests,
-//! dispatches, mean/max batch width) for benches and tests.
+//! [`ServiceStats`] exposes the coalescing and elasticity behavior
+//! (requests, dispatches, mean/max batch, forwards, moves) for benches
+//! and tests.
 
+pub mod queue;
+mod route;
 mod shard;
 
+pub use queue::Priority;
+pub use route::{SystemId, SystemLoad, SystemStats};
 pub use shard::ServiceStats;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::Solver;
+use crate::api::{Factored, LinearSystem, Solver};
 use crate::coordinator::SolverConfig;
+use crate::exec::lock_ignore_poison;
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
-use shard::{Job, ShardQueue, ShardWorker};
+use queue::AdaptiveTick;
+use route::{RouteCell, RouteEntry};
+use shard::{Control, ShardQueue, ShardSystem, ShardWorker, SolveJob};
 
 /// Configuration for [`SolverService`].
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// Number of shards (independent solvers + dispatcher threads).
-    /// Clamped to `1..=systems` at construction.
+    /// Number of shards (dispatcher threads). Clamped to `>= 1`.
     pub shards: usize,
-    /// Solver configuration used by every shard. Note `solver.threads`
-    /// is the worker-pool width *per shard*.
+    /// Solver configuration used for systems built by
+    /// [`SolverService::new`] (one solver engine per shard; note
+    /// `solver.threads` is the worker-pool width *per shard*). Systems
+    /// admitted through [`SolverService::register`] bring their own
+    /// engine and ignore this.
     pub solver: SolverConfig,
     /// Maximum right-hand sides coalesced into one block dispatch.
     pub max_batch: usize,
@@ -63,10 +88,20 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     /// Coalescing window: after waking on a non-empty queue, the
     /// dispatcher waits this long before draining, letting concurrent
-    /// submitters pile onto the same tick. `Duration::ZERO` (default)
-    /// drains immediately — lowest latency, batching only under
-    /// sustained load.
+    /// submitters pile onto the same tick. With `tick_max` zero this is
+    /// the *static* window (`Duration::ZERO` default: drain immediately
+    /// — lowest latency, batching only under sustained load); with
+    /// `tick_max` set it seeds the adaptive controller's first stretch.
     pub tick: Duration,
+    /// Adaptive-tick ceiling. Zero (default) keeps the static `tick`;
+    /// nonzero enables the adaptive window, which stretches toward this
+    /// ceiling under sustained arrivals and collapses to zero when a
+    /// shard idles. See [`queue::AdaptiveTick`].
+    pub tick_max: Duration,
+    /// Bulk-lane starvation bound: at most this many deadline-lane
+    /// requests are dispatched between consecutive bulk-lane requests
+    /// (clamped to `>= 1`). See [`queue::LaneQueue`].
+    pub starvation_bound: usize,
 }
 
 impl Default for ServiceConfig {
@@ -77,6 +112,8 @@ impl Default for ServiceConfig {
             max_batch: 32,
             queue_cap: 4096,
             tick: Duration::ZERO,
+            tick_max: Duration::ZERO,
+            starvation_bound: 8,
         }
     }
 }
@@ -87,7 +124,10 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the dispatcher resolves this request.
+    /// Block until the dispatcher resolves this request. Every accepted
+    /// ticket resolves exactly once — with the solution, or with the
+    /// error that befell its dispatch (including a clean
+    /// "shutting down" error if the service is dropped mid-move).
     pub fn wait(self) -> Result<Vec<f64>> {
         match self.rx.recv() {
             Ok(r) => r,
@@ -96,118 +136,485 @@ impl Ticket {
     }
 }
 
-struct ShardHandle {
-    queue: Arc<ShardQueue>,
-    thread: Option<JoinHandle<()>>,
+/// State shared between the service value and every shard dispatcher:
+/// the routing publication cell, all shard queues (for forwarding), and
+/// the elasticity counters.
+pub(crate) struct ServiceShared {
+    pub(crate) routes: RouteCell,
+    pub(crate) queues: Vec<Arc<ShardQueue>>,
+    /// Service-wide admission counter: every solve and control job is
+    /// stamped from it at submission, and forwarding preserves the
+    /// stamp — so barrier ordering (refactor/retire/migrate vs solves)
+    /// reflects true admission order even across a shard hop.
+    seq: AtomicU64,
+    registers: AtomicU64,
+    retires: AtomicU64,
+    moves: AtomicU64,
 }
 
-/// The sharded, coalescing solve service. See the module docs.
+impl ServiceShared {
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// The sharded, coalescing, elastic solve service. See the module docs.
 pub struct SolverService {
-    shards: Vec<ShardHandle>,
-    /// Per public system id: `(shard, shard-local index, dimension)`.
-    route: Vec<(usize, usize, usize)>,
+    shared: Arc<ServiceShared>,
+    /// Serializes topology operations (register / retire / migrate /
+    /// rebalance) and owns the next system id. Request routing never
+    /// takes this lock.
+    topology: Mutex<u64>,
+    threads: Vec<Option<JoinHandle<()>>>,
 }
 
 impl SolverService {
-    /// Build the service: analyze + factor every system on its shard's
-    /// solver, then start one dispatcher thread per shard. System ids
-    /// are the indices into `systems`.
+    /// Build an **empty** elastic service: `cfg.shards` dispatcher
+    /// threads and no systems. Admit systems with
+    /// [`SolverService::register`].
+    pub fn with_shards(cfg: ServiceConfig) -> Result<SolverService> {
+        let nshards = cfg.shards.max(1);
+        let queues: Vec<Arc<ShardQueue>> = (0..nshards)
+            .map(|_| Arc::new(ShardQueue::new(cfg.queue_cap.max(1))))
+            .collect();
+        let shared = Arc::new(ServiceShared {
+            routes: RouteCell::new(),
+            queues,
+            seq: AtomicU64::new(0),
+            registers: AtomicU64::new(0),
+            retires: AtomicU64::new(0),
+            moves: AtomicU64::new(0),
+        });
+        let mut threads = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            let worker = ShardWorker::new(
+                s,
+                shared.queues[s].clone(),
+                shared.clone(),
+                AdaptiveTick::new(cfg.tick, cfg.tick_max),
+                cfg.max_batch.max(1),
+                cfg.starvation_bound,
+            );
+            let spawned = std::thread::Builder::new()
+                .name(format!("hylu-serve-{s}"))
+                .spawn(move || worker.run());
+            match spawned {
+                Ok(h) => threads.push(Some(h)),
+                Err(e) => {
+                    // unwind cleanly: stop the dispatchers spawned so far
+                    for q in &shared.queues {
+                        q.shutdown();
+                    }
+                    for h in threads.iter_mut().filter_map(Option::take) {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Runtime(format!("spawn shard dispatcher: {e}")));
+                }
+            }
+        }
+        Ok(SolverService {
+            shared,
+            topology: Mutex::new(0),
+            threads,
+        })
+    }
+
+    /// Build the service pre-loaded with `systems`: analyze + factor
+    /// every matrix on its shard's solver (round-robin assignment, one
+    /// engine per shard), then register them. System ids are assigned in
+    /// order: `SystemId(i)` for `systems[i]`.
+    ///
+    /// For an initially-empty elastic service use
+    /// [`SolverService::with_shards`].
     pub fn new(cfg: ServiceConfig, systems: Vec<Csr>) -> Result<SolverService> {
         if systems.is_empty() {
-            return Err(Error::Invalid("service needs at least one system".into()));
+            return Err(Error::Invalid(
+                "service needs at least one system (use with_shards for an empty elastic service)"
+                    .into(),
+            ));
         }
-        let nshards = cfg.shards.max(1).min(systems.len());
-        let mut route = Vec::with_capacity(systems.len());
-        let mut per_shard: Vec<Vec<Csr>> = (0..nshards).map(|_| Vec::new()).collect();
+        let solver_cfg = cfg.solver.clone();
+        let svc = SolverService::with_shards(cfg)?;
+        let nshards = svc.shard_count();
+        // one handle-producing solver (engine) per shard actually used;
+        // the solver values are dropped after construction — every
+        // LinearSystem keeps its shared engine alive
+        let nsolvers = nshards.min(systems.len());
+        let solvers = (0..nsolvers)
+            .map(|_| Solver::from_config(solver_cfg.clone()))
+            .collect::<Result<Vec<_>>>()?;
         for (i, a) in systems.into_iter().enumerate() {
             let shard = i % nshards;
-            route.push((shard, per_shard[shard].len(), a.n));
-            per_shard[shard].push(a);
+            let sys = solvers[shard % nsolvers].analyze(a)?.factor()?;
+            svc.register_on(sys, shard)?;
         }
-        let mut shards = Vec::with_capacity(nshards);
-        for (s, mats) in per_shard.into_iter().enumerate() {
-            // one handle-producing solver (engine) per shard; the solver
-            // value is dropped after construction — every LinearSystem
-            // keeps the shared engine alive
-            let solver = Solver::from_config(cfg.solver.clone())?;
-            let mut sys = Vec::with_capacity(mats.len());
-            for a in mats {
-                sys.push(solver.analyze(a)?.factor()?);
+        Ok(svc)
+    }
+
+    /// Admit a factored system on the live service, placing it on the
+    /// least-loaded shard (by EWMA load, then resident count). Returns
+    /// the id all requests for this system use. The handle's engine
+    /// travels with it — systems registered from different solvers keep
+    /// their own pools.
+    pub fn register(&self, sys: LinearSystem<Factored>) -> Result<SystemId> {
+        let shard = self.least_loaded_shard();
+        self.register_on(sys, shard)
+    }
+
+    /// [`SolverService::register`] onto an explicit shard.
+    pub fn register_on(&self, sys: LinearSystem<Factored>, shard: usize) -> Result<SystemId> {
+        if shard >= self.shared.queues.len() {
+            return Err(Error::Invalid(format!(
+                "shard {shard} out of range ({} shards)",
+                self.shared.queues.len()
+            )));
+        }
+        let mut next_id = lock_ignore_poison(&self.topology);
+        let id = *next_id;
+        let n = sys.n();
+        let stats = Arc::new(SystemStats::default());
+        let system = Box::new(ShardSystem {
+            sys,
+            stats: stats.clone(),
+        });
+        // install BEFORE publishing the route: any request admitted
+        // after the publication lands behind the install in the same
+        // FIFO queue, so it can never observe a routed-but-absent system.
+        // (push_control only fails after shutdown, which requires the
+        // Drop's `&mut self` — unreachable while this `&self` exists, so
+        // the handle inside the Install cannot actually be lost here.)
+        let seq = self.shared.next_seq();
+        if self.shared.queues[shard]
+            .push_control(Control::Install { id, system }, seq, true)
+            .is_err()
+        {
+            return Err(Error::Runtime("service is shutting down".into()));
+        }
+        *next_id += 1;
+        self.shared
+            .routes
+            .publish(|t| t.with(id, RouteEntry { shard, n, stats }));
+        self.shared.registers.fetch_add(1, Ordering::Relaxed);
+        Ok(SystemId(id))
+    }
+
+    /// Remove a system from the live service and hand its owning handle
+    /// back. In-flight tickets admitted before the retirement drain
+    /// first (the extract is a queue barrier); requests admitted after
+    /// it fail fast with an `Invalid` error.
+    pub fn retire(&self, id: SystemId) -> Result<LinearSystem<Factored>> {
+        let _topology = lock_ignore_poison(&self.topology);
+        let shard = {
+            let t = self.shared.routes.load();
+            t.map.get(&id.0).map(|e| e.shard)
+        };
+        let Some(shard) = shard else {
+            return Err(Error::Invalid(format!("unknown system id {id}")));
+        };
+        // unpublish first: new submits fail fast instead of queueing
+        // behind a teardown
+        self.shared.routes.publish(|t| t.without(id.0));
+        let (tx, rx) = mpsc::channel();
+        let seq = self.shared.next_seq();
+        if self.shared.queues[shard]
+            .push_control(Control::Extract { id: id.0, tx }, seq, true)
+            .is_err()
+        {
+            return Err(Error::Runtime("service is shutting down".into()));
+        }
+        match rx.recv() {
+            Ok(Some(system)) => {
+                self.shared.retires.fetch_add(1, Ordering::Relaxed);
+                Ok(system.sys)
             }
-            let queue = Arc::new(ShardQueue::new(cfg.queue_cap.max(1)));
-            let worker = ShardWorker::new(sys, queue.clone(), cfg.tick, cfg.max_batch.max(1));
-            let thread = std::thread::Builder::new()
-                .name(format!("hylu-serve-{s}"))
-                .spawn(move || worker.run())
-                .map_err(|e| Error::Runtime(format!("spawn shard dispatcher: {e}")))?;
-            shards.push(ShardHandle {
-                queue,
-                thread: Some(thread),
-            });
+            Ok(None) | Err(_) => Err(Error::Runtime(format!(
+                "system {id} vanished during retire"
+            ))),
         }
-        Ok(SolverService { shards, route })
     }
 
-    fn lookup(&self, sys: usize) -> Result<(usize, usize, usize)> {
-        self.route
-            .get(sys)
-            .copied()
-            .ok_or_else(|| Error::Invalid(format!("unknown system id {sys}")))
+    /// Move one system to an explicit shard (the targeted form of
+    /// [`SolverService::rebalance`]); a no-op if it is already there.
+    /// Traffic keeps flowing during the move: requests racing the
+    /// transition are forwarded or parked by the dispatchers, and the
+    /// factor state is untouched — results are bit-identical across the
+    /// move.
+    pub fn migrate(&self, id: SystemId, shard: usize) -> Result<()> {
+        let _topology = lock_ignore_poison(&self.topology);
+        self.migrate_locked(id, shard)
     }
 
-    /// Enqueue one right-hand side for `sys`; returns a [`Ticket`] to
-    /// wait on. Blocks only when the shard queue is at capacity
-    /// (backpressure).
-    pub fn submit(&self, sys: usize, b: Vec<f64>) -> Result<Ticket> {
-        let (shard, local, n) = self.lookup(sys)?;
+    fn migrate_locked(&self, id: SystemId, to: usize) -> Result<()> {
+        if to >= self.shared.queues.len() {
+            return Err(Error::Invalid(format!(
+                "shard {to} out of range ({} shards)",
+                self.shared.queues.len()
+            )));
+        }
+        let entry = {
+            let t = self.shared.routes.load();
+            t.map.get(&id.0).cloned()
+        };
+        let Some(entry) = entry else {
+            return Err(Error::Invalid(format!("unknown system id {id}")));
+        };
+        if entry.shard == to {
+            return Ok(());
+        }
+        // 1. publish the new placement: new submits queue on the
+        //    destination and park there until the value arrives
+        let moved = RouteEntry {
+            shard: to,
+            n: entry.n,
+            stats: entry.stats.clone(),
+        };
+        self.shared.routes.publish(|t| t.with(id.0, moved));
+        // 2. extract from the source — queued solves admitted before
+        //    this point drain there first (barrier)
+        let (tx, rx) = mpsc::channel();
+        let seq = self.shared.next_seq();
+        if self.shared.queues[entry.shard]
+            .push_control(Control::Extract { id: id.0, tx }, seq, true)
+            .is_err()
+        {
+            return Err(Error::Runtime("service is shutting down".into()));
+        }
+        let system = match rx.recv() {
+            Ok(Some(s)) => s,
+            Ok(None) | Err(_) => {
+                return Err(Error::Runtime(format!("system {id} vanished during move")))
+            }
+        };
+        // 3. install on the destination: its parked requests flush in
+        //    admission order right after. (As in register_on, this push
+        //    cannot fail while `&self` exists — shutdown requires Drop's
+        //    `&mut self` — so the extracted handle cannot be lost here.)
+        let seq = self.shared.next_seq();
+        if self.shared.queues[to]
+            .push_control(Control::Install { id: id.0, system }, seq, true)
+            .is_err()
+        {
+            return Err(Error::Runtime("service is shutting down".into()));
+        }
+        self.shared.moves.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Rebalance load across shards: greedily move the hottest system
+    /// (by EWMA load) off the most-loaded shard onto the least-loaded
+    /// one, while each move strictly reduces the load spread. Returns
+    /// the number of systems moved. Safe to call under traffic.
+    pub fn rebalance(&self) -> Result<usize> {
+        let _topology = lock_ignore_poison(&self.topology);
+        let nshards = self.shared.queues.len();
+        let mut moved = 0usize;
+        if nshards < 2 {
+            return Ok(0);
+        }
+        let max_moves = self.shared.routes.load().map.len();
+        for _ in 0..max_moves {
+            let plan = {
+                let t = self.shared.routes.load();
+                let mut load = vec![0.0f64; nshards];
+                let mut hottest: Vec<Option<(u64, f64)>> = vec![None; nshards];
+                // deterministic scan order (ids ascending)
+                let mut entries: Vec<(&u64, &RouteEntry)> = t.map.iter().collect();
+                entries.sort_by_key(|(id, _)| **id);
+                for (id, e) in entries {
+                    let l = e.stats.ewma_load();
+                    load[e.shard] += l;
+                    let hotter = match hottest[e.shard] {
+                        Some((_, h)) => l > h,
+                        None => true,
+                    };
+                    if hotter {
+                        hottest[e.shard] = Some((*id, l));
+                    }
+                }
+                let (mut hi, mut lo) = (0usize, 0usize);
+                for s in 1..nshards {
+                    if load[s] > load[hi] {
+                        hi = s;
+                    }
+                    if load[s] < load[lo] {
+                        lo = s;
+                    }
+                }
+                match hottest[hi] {
+                    // moving l from hi to lo strictly shrinks the spread
+                    // iff l < load[hi] - load[lo]
+                    Some((id, l)) if hi != lo && l > 0.0 && l < load[hi] - load[lo] => {
+                        Some((id, lo))
+                    }
+                    _ => None,
+                }
+            };
+            let Some((id, to)) = plan else { break };
+            self.migrate_locked(SystemId(id), to)?;
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Least-loaded shard by (EWMA load sum, resident count, index).
+    fn least_loaded_shard(&self) -> usize {
+        let nshards = self.shared.queues.len();
+        let mut load = vec![(0.0f64, 0usize); nshards];
+        {
+            let t = self.shared.routes.load();
+            for e in t.map.values() {
+                load[e.shard].0 += e.stats.ewma_load();
+                load[e.shard].1 += 1;
+            }
+        }
+        let mut best = 0usize;
+        for s in 1..nshards {
+            if (load[s].0, load[s].1) < (load[best].0, load[best].1) {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Enqueue one right-hand side for `id` on the bulk lane; returns a
+    /// [`Ticket`] to wait on. Blocks only when the shard queue is at
+    /// capacity (backpressure).
+    pub fn submit(&self, id: SystemId, b: Vec<f64>) -> Result<Ticket> {
+        self.submit_with(id, b, Priority::Bulk)
+    }
+
+    /// [`SolverService::submit`] with an explicit [`Priority`] lane.
+    pub fn submit_with(&self, id: SystemId, b: Vec<f64>, prio: Priority) -> Result<Ticket> {
+        let (shard, n, stats) = {
+            let t = self.shared.routes.load();
+            let e = t
+                .map
+                .get(&id.0)
+                .ok_or_else(|| Error::Invalid(format!("unknown system id {id}")))?;
+            (e.shard, e.n, e.stats.clone())
+        };
         if b.len() != n {
             return Err(Error::Invalid("rhs length mismatch".into()));
         }
         let (tx, rx) = mpsc::channel();
-        self.shards[shard].queue.push(Job::Solve { sys: local, b, tx })?;
-        Ok(Ticket { rx })
+        let seq = self.shared.next_seq();
+        match self.shared.queues[shard].push_solve(SolveJob { id: id.0, b, tx }, prio, seq, false) {
+            Ok(()) => {
+                stats.note_request();
+                Ok(Ticket { rx })
+            }
+            Err(_) => Err(Error::Runtime("service is shutting down".into())),
+        }
     }
 
-    /// Submit and wait: the blocking convenience wrapper.
-    pub fn solve(&self, sys: usize, b: Vec<f64>) -> Result<Vec<f64>> {
-        self.submit(sys, b)?.wait()
+    /// Submit and wait: the blocking convenience wrapper (bulk lane).
+    pub fn solve(&self, id: SystemId, b: Vec<f64>) -> Result<Vec<f64>> {
+        self.submit(id, b)?.wait()
     }
 
-    /// Replace system `sys`'s values with a same-pattern matrix and
+    /// Submit on an explicit lane and wait.
+    pub fn solve_with(&self, id: SystemId, b: Vec<f64>, prio: Priority) -> Result<Vec<f64>> {
+        self.submit_with(id, b, prio)?.wait()
+    }
+
+    /// Replace system `id`'s values with a same-pattern matrix and
     /// refactorize on its shard (parameter-sweep step). Blocks until the
     /// refactorization is applied; solves submitted afterwards observe
-    /// the new values.
-    pub fn refactor(&self, sys: usize, a: Csr) -> Result<()> {
-        let (shard, local, n) = self.lookup(sys)?;
+    /// the new values, solves admitted before it are flushed first
+    /// (admission order is service-wide and survives forwarding).
+    ///
+    /// One caveat under live topology changes: a solve whose ticket is
+    /// still unresolved when a *concurrent* migration is moving this
+    /// system may be re-queued behind the refactor and observe the new
+    /// values — a legal ordering of the two overlapping operations. A
+    /// caller that waits for each ticket before refactoring (the usual
+    /// sweep loop) always sees strict program order.
+    pub fn refactor(&self, id: SystemId, a: Csr) -> Result<()> {
+        let (shard, n) = {
+            let t = self.shared.routes.load();
+            let e = t
+                .map
+                .get(&id.0)
+                .ok_or_else(|| Error::Invalid(format!("unknown system id {id}")))?;
+            (e.shard, e.n)
+        };
         if a.n != n {
             return Err(Error::Invalid("refactor dimension mismatch".into()));
         }
         let (tx, rx) = mpsc::channel();
-        self.shards[shard]
-            .queue
-            .push(Job::Refactor { sys: local, a, tx })?;
+        let seq = self.shared.next_seq();
+        if self.shared.queues[shard]
+            .push_control(Control::Refactor { id: id.0, a, tx }, seq, false)
+            .is_err()
+        {
+            return Err(Error::Runtime("service is shutting down".into()));
+        }
         match rx.recv() {
             Ok(r) => r.map(|_| ()),
             Err(_) => Err(Error::Runtime("service dropped the refactor".into())),
         }
     }
 
-    /// Number of shards actually running.
+    /// Number of shards running.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.shared.queues.len()
     }
 
-    /// Number of registered systems.
+    /// Number of currently registered systems.
     pub fn system_count(&self) -> usize {
-        self.route.len()
+        self.shared.routes.load().map.len()
     }
 
-    /// Aggregate coalescing statistics across shards.
+    /// Ids of all currently registered systems, ascending.
+    pub fn system_ids(&self) -> Vec<SystemId> {
+        let mut ids: Vec<SystemId> = self
+            .shared
+            .routes
+            .load()
+            .map
+            .keys()
+            .map(|&id| SystemId(id))
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Shard currently owning `id`, if registered.
+    pub fn shard_of(&self, id: SystemId) -> Option<usize> {
+        self.shared.routes.load().map.get(&id.0).map(|e| e.shard)
+    }
+
+    /// Dimension of system `id`, if registered.
+    pub fn system_dim(&self, id: SystemId) -> Option<usize> {
+        self.shared.routes.load().map.get(&id.0).map(|e| e.n)
+    }
+
+    /// Placement and load snapshot for one system, if registered.
+    pub fn system_load(&self, id: SystemId) -> Option<SystemLoad> {
+        self.shared.routes.load().map.get(&id.0).map(|e| SystemLoad {
+            shard: e.shard,
+            requests: e.stats.requests(),
+            rhs_solved: e.stats.rhs_solved(),
+            ewma: e.stats.ewma_load(),
+        })
+    }
+
+    /// Routing epochs published so far (1 = the initial empty table);
+    /// each topology change publishes one. Observability for the
+    /// publication protocol.
+    pub fn route_epoch(&self) -> usize {
+        self.shared.routes.epoch()
+    }
+
+    /// Aggregate serving statistics across shards.
     pub fn stats(&self) -> ServiceStats {
         let mut total = ServiceStats::default();
-        for sh in &self.shards {
-            sh.queue.add_stats_into(&mut total);
+        for q in &self.shared.queues {
+            q.add_stats_into(&mut total);
         }
+        total.registers = self.shared.registers.load(Ordering::Relaxed);
+        total.retires = self.shared.retires.load(Ordering::Relaxed);
+        total.moves = self.shared.moves.load(Ordering::Relaxed);
         total
     }
 }
@@ -216,11 +623,11 @@ impl Drop for SolverService {
     /// Graceful shutdown: dispatchers drain everything already queued
     /// (resolving those tickets), then exit and are joined.
     fn drop(&mut self) {
-        for sh in &self.shards {
-            sh.queue.shutdown();
+        for q in &self.shared.queues {
+            q.shutdown();
         }
-        for sh in &mut self.shards {
-            if let Some(h) = sh.thread.take() {
+        for t in &mut self.threads {
+            if let Some(h) = t.take() {
                 let _ = h.join();
             }
         }

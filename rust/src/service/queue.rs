@@ -1,0 +1,367 @@
+//! The deterministic core of the coalescing queue: priority lanes and
+//! the adaptive tick controller.
+//!
+//! Both pieces are pure state machines — no threads, no clocks of their
+//! own — so the service's scheduling behavior is property-testable in
+//! isolation (`rust/tests/service_props.rs`) and the concurrent shard
+//! dispatcher (`service/shard.rs`) stays a thin driver around them.
+//!
+//! - [`LaneQueue`] holds queued solve requests in **two priority lanes**
+//!   ([`Priority::Deadline`] | [`Priority::Bulk`]) and produces the
+//!   per-tick dispatch order: deadline-lane requests first (earliest
+//!   deadline first), FIFO within each lane, with a **starvation bound**
+//!   — at most `starvation_bound` deadline-lane requests are dispatched
+//!   between consecutive bulk-lane requests, so a saturated deadline
+//!   lane can delay a bulk request by at most that many positions.
+//! - [`AdaptiveTick`] replaces the static coalescing window: under
+//!   sustained arrivals the window stretches (doubling per productive
+//!   drain) toward `tick_max`, and it collapses to zero the moment the
+//!   shard idles, trading latency for batch width only while there is
+//!   traffic to batch. The window is invariantly within
+//!   `[0, tick_max]`; with `tick_max` zero the controller degrades to
+//!   the static window (`tick`) unchanged.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Scheduling class of one submitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-critical: drained before the bulk lane (earliest deadline
+    /// first), subject to the bulk-lane starvation bound.
+    Deadline(Instant),
+    /// Throughput traffic: FIFO, yields to the deadline lane up to the
+    /// starvation bound.
+    Bulk,
+}
+
+/// One queued item annotated with its admission sequence number and
+/// lane. Sequence numbers are assigned by the enclosing queue at push
+/// time and are what the shard dispatcher uses to order solves against
+/// barrier jobs (refactor / retire / migrate).
+#[derive(Debug)]
+pub struct Drained<T> {
+    /// Admission order within the owning shard queue (monotone).
+    pub seq: u64,
+    /// `Some(deadline)` for deadline-lane items, `None` for bulk.
+    pub deadline: Option<Instant>,
+    /// The queued payload.
+    pub item: T,
+}
+
+/// A two-lane priority queue with a starvation-bounded drain order. See
+/// the [module docs](self) for the scheduling contract.
+#[derive(Debug)]
+pub struct LaneQueue<T> {
+    /// Deadline lane, in arrival order; sorted by `(deadline, seq)` at
+    /// drain time (drains are the hot path only once per tick).
+    deadline: Vec<(Instant, u64, T)>,
+    /// Bulk lane, FIFO.
+    bulk: VecDeque<(u64, T)>,
+}
+
+impl<T> Default for LaneQueue<T> {
+    fn default() -> Self {
+        LaneQueue::new()
+    }
+}
+
+impl<T> LaneQueue<T> {
+    /// An empty queue.
+    pub fn new() -> LaneQueue<T> {
+        LaneQueue {
+            deadline: Vec::new(),
+            bulk: VecDeque::new(),
+        }
+    }
+
+    /// Queued items across both lanes.
+    pub fn len(&self) -> usize {
+        self.deadline.len() + self.bulk.len()
+    }
+
+    /// Whether both lanes are empty.
+    pub fn is_empty(&self) -> bool {
+        self.deadline.is_empty() && self.bulk.is_empty()
+    }
+
+    /// Items waiting in the deadline lane.
+    pub fn deadline_len(&self) -> usize {
+        self.deadline.len()
+    }
+
+    /// Enqueue one item with its admission sequence number.
+    pub fn push(&mut self, seq: u64, prio: Priority, item: T) {
+        match prio {
+            Priority::Deadline(at) => self.deadline.push((at, seq, item)),
+            Priority::Bulk => self.bulk.push_back((seq, item)),
+        }
+    }
+
+    /// Drain both lanes into dispatch order.
+    ///
+    /// Deadline-lane items come out earliest-deadline-first (ties by
+    /// admission order); the bulk lane stays FIFO. The two lanes are
+    /// interleaved so that at most `starvation_bound` (clamped to >= 1)
+    /// deadline items are dispatched between consecutive bulk items —
+    /// the documented bulk starvation bound.
+    pub fn drain_ordered(&mut self, starvation_bound: usize) -> Vec<Drained<T>> {
+        let bound = starvation_bound.max(1);
+        let mut dl = std::mem::take(&mut self.deadline);
+        dl.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut dl = dl.into_iter();
+        let mut next_dl = dl.next();
+        let mut out = Vec::with_capacity(dl.len() + 1 + self.bulk.len());
+        let mut run = 0usize; // deadline items since the last bulk item
+        loop {
+            let take_deadline = match (&next_dl, self.bulk.front()) {
+                (Some(_), Some(_)) => run < bound,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_deadline {
+                let (at, seq, item) = next_dl.take().expect("deadline item present");
+                next_dl = dl.next();
+                run += 1;
+                out.push(Drained {
+                    seq,
+                    deadline: Some(at),
+                    item,
+                });
+            } else {
+                let (seq, item) = self.bulk.pop_front().expect("bulk item present");
+                run = 0;
+                out.push(Drained {
+                    seq,
+                    deadline: None,
+                    item,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Floor for the adaptive window's first stretch when the configured
+/// base `tick` is zero: without it the doubling controller could never
+/// leave zero.
+const STEP_FLOOR: Duration = Duration::from_micros(25);
+
+/// The coalescing-window controller. Static when `tick_max` is zero
+/// (the window is the configured `tick`, always); adaptive otherwise:
+///
+/// - while sustained arrivals keep **widening** batches (this drain
+///   coalesced >= 2 requests and more than the previous one), the
+///   window doubles, starting from `max(tick, 25µs)` and saturating at
+///   `tick_max` — growth is paid for with batch width;
+/// - at a **plateau** (>= 2 coalesced, but no wider than last time) the
+///   window holds: it already captures the concurrency on offer, and
+///   stretching further would buy latency for nothing;
+/// - an **unproductive drain** (<= 1 request) halves it — sleeping was
+///   not batching anything;
+/// - **idling** (the dispatcher parked on an empty queue) collapses it
+///   to zero — the next lone request is served at minimum latency.
+///
+/// The window is invariantly within `[0, tick_max]` (asserted under
+/// arbitrary traces in `rust/tests/service_props.rs`).
+#[derive(Clone, Debug)]
+pub struct AdaptiveTick {
+    /// Current window, nanoseconds.
+    window_ns: u64,
+    /// First stretch target, nanoseconds (the configured `tick`, floored).
+    step_ns: u64,
+    /// Ceiling, nanoseconds; zero disables adaptation (static mode).
+    max_ns: u64,
+    /// Width of the previous drain (0 after idle) — growth requires the
+    /// batches to still be widening.
+    last_drained: usize,
+}
+
+impl AdaptiveTick {
+    /// Controller for a static `tick` and an adaptive ceiling
+    /// `tick_max` (zero ⇒ static mode).
+    pub fn new(tick: Duration, tick_max: Duration) -> AdaptiveTick {
+        let max_ns = tick_max.as_nanos().min(u64::MAX as u128) as u64;
+        let tick_ns = tick.as_nanos().min(u64::MAX as u128) as u64;
+        if max_ns == 0 {
+            // static mode: the window is the configured tick, forever
+            return AdaptiveTick {
+                window_ns: tick_ns,
+                step_ns: tick_ns,
+                max_ns: 0,
+                last_drained: 0,
+            };
+        }
+        let step_ns = tick_ns.max(STEP_FLOOR.as_nanos() as u64).min(max_ns);
+        AdaptiveTick {
+            window_ns: 0,
+            step_ns,
+            max_ns,
+            last_drained: 0,
+        }
+    }
+
+    /// Whether the controller adapts (ceiling nonzero).
+    pub fn is_adaptive(&self) -> bool {
+        self.max_ns != 0
+    }
+
+    /// The current coalescing window.
+    pub fn window(&self) -> Duration {
+        Duration::from_nanos(self.window_ns)
+    }
+
+    /// Record one drain of `drained` solve requests. `max_batch` is the
+    /// coalescing cap: a drain already at the cap holds the window
+    /// steady (sleeping longer cannot widen a full batch).
+    pub fn on_drain(&mut self, drained: usize, max_batch: usize) {
+        if !self.is_adaptive() {
+            return;
+        }
+        let widening = drained > self.last_drained;
+        self.last_drained = drained;
+        if drained >= max_batch.max(2) {
+            return; // saturated: growing the window buys nothing
+        }
+        if drained >= 2 {
+            if widening {
+                self.window_ns = self
+                    .window_ns
+                    .saturating_mul(2)
+                    .max(self.step_ns)
+                    .min(self.max_ns);
+            }
+            // plateau: hold — this window already captures the offered
+            // concurrency
+        } else {
+            self.window_ns /= 2;
+        }
+    }
+
+    /// Record that the dispatcher parked on an empty queue: collapse the
+    /// window so the next lone request is served immediately.
+    pub fn on_idle(&mut self) {
+        if self.is_adaptive() {
+            self.window_ns = 0;
+            self.last_drained = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_ids(q: &mut LaneQueue<u32>, bound: usize) -> Vec<u32> {
+        q.drain_ordered(bound).into_iter().map(|d| d.item).collect()
+    }
+
+    #[test]
+    fn bulk_alone_is_fifo() {
+        let mut q = LaneQueue::new();
+        for i in 0..5u32 {
+            q.push(i as u64, Priority::Bulk, i);
+        }
+        assert_eq!(drain_ids(&mut q, 3), vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deadline_sorts_by_deadline_then_seq() {
+        let t0 = Instant::now();
+        let mut q = LaneQueue::new();
+        q.push(0, Priority::Deadline(t0 + Duration::from_millis(3)), 30u32);
+        q.push(1, Priority::Deadline(t0 + Duration::from_millis(1)), 10);
+        q.push(2, Priority::Deadline(t0 + Duration::from_millis(1)), 11);
+        q.push(3, Priority::Deadline(t0 + Duration::from_millis(2)), 20);
+        assert_eq!(drain_ids(&mut q, 8), vec![10, 11, 20, 30]);
+    }
+
+    #[test]
+    fn starvation_bound_interleaves_bulk() {
+        let t0 = Instant::now();
+        let mut q = LaneQueue::new();
+        for i in 0..6u32 {
+            q.push(i as u64, Priority::Deadline(t0 + Duration::from_micros(i as u64)), i);
+        }
+        q.push(6, Priority::Bulk, 100);
+        q.push(7, Priority::Bulk, 101);
+        // bound 2: two deadline items, then a bulk item, repeating
+        assert_eq!(drain_ids(&mut q, 2), vec![0, 1, 100, 2, 3, 101, 4, 5]);
+    }
+
+    #[test]
+    fn bound_is_clamped_to_one() {
+        let t0 = Instant::now();
+        let mut q = LaneQueue::new();
+        q.push(0, Priority::Deadline(t0), 0u32);
+        q.push(1, Priority::Deadline(t0), 1);
+        q.push(2, Priority::Bulk, 100);
+        assert_eq!(drain_ids(&mut q, 0), vec![0, 100, 1]);
+    }
+
+    #[test]
+    fn static_tick_never_moves() {
+        let mut t = AdaptiveTick::new(Duration::from_micros(200), Duration::ZERO);
+        assert!(!t.is_adaptive());
+        for _ in 0..10 {
+            t.on_drain(64, 64);
+            assert_eq!(t.window(), Duration::from_micros(200));
+            t.on_idle();
+            assert_eq!(t.window(), Duration::from_micros(200));
+        }
+    }
+
+    #[test]
+    fn adaptive_tick_stretches_and_collapses() {
+        let max = Duration::from_millis(1);
+        let mut t = AdaptiveTick::new(Duration::from_micros(50), max);
+        assert_eq!(t.window(), Duration::ZERO, "starts collapsed");
+        // widening drains (arrivals outpacing the window) stretch it
+        for drained in 2..22usize {
+            t.on_drain(drained, 64);
+            assert!(t.window() <= max);
+        }
+        assert_eq!(t.window(), max, "sustained widening reaches the ceiling");
+        t.on_idle();
+        assert_eq!(t.window(), Duration::ZERO, "idle collapses to zero");
+    }
+
+    #[test]
+    fn plateaued_batches_hold_the_window() {
+        // closed-loop traffic: batches stop widening once every caller
+        // is captured — the window must hold, not creep to the ceiling
+        let mut t = AdaptiveTick::new(Duration::from_micros(50), Duration::from_millis(2));
+        for drained in [2usize, 4, 8] {
+            t.on_drain(drained, 64);
+        }
+        let settled = t.window();
+        assert!(settled > Duration::ZERO);
+        for _ in 0..50 {
+            t.on_drain(8, 64);
+        }
+        assert_eq!(t.window(), settled, "plateau holds the window");
+    }
+
+    #[test]
+    fn unproductive_drains_shrink_the_window() {
+        let mut t = AdaptiveTick::new(Duration::from_micros(50), Duration::from_millis(1));
+        t.on_drain(4, 64);
+        let wide = t.window();
+        assert!(wide > Duration::ZERO);
+        for _ in 0..40 {
+            t.on_drain(1, 64);
+        }
+        assert_eq!(t.window(), Duration::ZERO, "lone arrivals decay the window");
+    }
+
+    #[test]
+    fn saturated_batches_hold_the_window() {
+        let mut t = AdaptiveTick::new(Duration::from_micros(50), Duration::from_millis(1));
+        t.on_drain(8, 64);
+        let w = t.window();
+        t.on_drain(64, 64);
+        assert_eq!(t.window(), w, "a full batch neither grows nor shrinks");
+    }
+}

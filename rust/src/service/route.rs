@@ -1,0 +1,358 @@
+//! System identity, per-system load statistics, and the lock-free-read
+//! routing table behind the elastic service.
+//!
+//! # Routing-table publication protocol
+//!
+//! Request routing is the hottest read in the service — every `submit`
+//! does one lookup — while topology changes (register / retire /
+//! rebalance) are rare events. [`RouteCell`] therefore publishes
+//! immutable [`RouteTable`] snapshots arc-swap style:
+//!
+//! - **Readers** pin the cell (one `SeqCst` increment — never a lock,
+//!   never blocking or spinning), do one `SeqCst` `AtomicPtr` load, and
+//!   use the table; the guard unpins on drop. The pin is load-bearing
+//!   for reclamation — see the soundness argument on
+//!   [`RouteCell::load`] — so it must not be "optimized away".
+//! - **Writers** serialize on a mutex, build a *new* table derived from
+//!   the current one, and publish it with a Release store. Superseded
+//!   epochs are **parked** in the writer's epoch list; a reader that
+//!   loaded the pointer a microsecond before a swap therefore still
+//!   dereferences a live table. Parked epochs are reclaimed through a
+//!   **quiescence check**: every reader pins the cell (one atomic
+//!   increment) for the duration of its borrow, and a writer whose
+//!   parked list has grown past a threshold frees everything but the
+//!   current epoch at a moment it observes zero pins — if readers are
+//!   never simultaneously quiescent it simply skips and retries on the
+//!   next publication, so reads stay lock-free (pin/unpin never blocks
+//!   or spins) and memory stays bounded by the threshold plus transient
+//!   overlap. Teardown (`&mut`) frees the rest.
+//!
+//! The protocol gives in-flight requests a coherent (possibly one-epoch
+//! stale) view: a request routed on epoch `e` to a shard that no longer
+//! owns the system is *forwarded* by that shard's dispatcher against
+//! the current epoch (see [`super::shard`]), so staleness costs one
+//! queue hop, never correctness.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::exec::lock_ignore_poison;
+
+/// Opaque identity of one registered system on a
+/// [`super::SolverService`]. Ids are assigned in registration order
+/// (construction-time systems get `0..k`) and are never reused, so a
+/// retired id stays invalid forever instead of aliasing a newcomer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SystemId(pub u64);
+
+impl std::fmt::Display for SystemId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sys#{}", self.0)
+    }
+}
+
+/// EWMA smoothing factor for per-system load: ~4-drain memory, enough
+/// to rank hot vs cold systems without chasing single bursts.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// Per-system serving statistics, updated lock-free by submitters and
+/// the owning shard dispatcher; travels with the system across moves.
+#[derive(Debug, Default)]
+pub struct SystemStats {
+    requests: AtomicU64,
+    rhs_solved: AtomicU64,
+    /// EWMA of right-hand sides dispatched per drain cycle, as f64 bits.
+    ewma_bits: AtomicU64,
+}
+
+impl SystemStats {
+    pub(crate) fn note_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_solved(&self, k: u64) {
+        self.rhs_solved.fetch_add(k, Ordering::Relaxed);
+    }
+
+    /// Fold one drain-cycle sample (right-hand sides dispatched for this
+    /// system in the cycle; 0 when it was quiet) into the EWMA.
+    pub(crate) fn update_ewma(&self, sample: f64) {
+        let prev = f64::from_bits(self.ewma_bits.load(Ordering::Relaxed));
+        let next = EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * prev;
+        self.ewma_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Solve requests accepted for this system.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Right-hand sides dispatched for this system.
+    pub fn rhs_solved(&self) -> u64 {
+        self.rhs_solved.load(Ordering::Relaxed)
+    }
+
+    /// EWMA load (right-hand sides per drain cycle) — what
+    /// [`super::SolverService::rebalance`] ranks systems by.
+    pub fn ewma_load(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Copyable snapshot of one system's placement and load, for
+/// observability ([`super::SolverService::system_load`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SystemLoad {
+    /// Shard currently owning the system.
+    pub shard: usize,
+    /// Solve requests accepted.
+    pub requests: u64,
+    /// Right-hand sides dispatched.
+    pub rhs_solved: u64,
+    /// EWMA load (RHS per drain cycle).
+    pub ewma: f64,
+}
+
+/// One routing entry: where the system lives and what a valid request
+/// looks like, plus the shared stats block that travels with it.
+#[derive(Clone)]
+pub(crate) struct RouteEntry {
+    pub shard: usize,
+    pub n: usize,
+    pub stats: Arc<SystemStats>,
+}
+
+/// One immutable routing epoch: system id → entry.
+#[derive(Default)]
+pub(crate) struct RouteTable {
+    pub map: HashMap<u64, RouteEntry>,
+}
+
+impl RouteTable {
+    /// Copy-on-write insert/replace.
+    pub fn with(&self, id: u64, entry: RouteEntry) -> RouteTable {
+        let mut map = self.map.clone();
+        map.insert(id, entry);
+        RouteTable { map }
+    }
+
+    /// Copy-on-write removal.
+    pub fn without(&self, id: u64) -> RouteTable {
+        let mut map = self.map.clone();
+        map.remove(&id);
+        RouteTable { map }
+    }
+}
+
+/// Parked-epoch threshold past which a publication attempts the
+/// quiescence-based reclamation described in the [module docs](self).
+const EPOCH_PRUNE_THRESHOLD: usize = 16;
+
+/// The arc-swap-style publication cell described in the [module
+/// docs](self): lock-free pinned reads of the current [`RouteTable`]
+/// epoch, mutex-serialized copy-on-write publication, superseded epochs
+/// parked until a quiescent reclamation (or drop).
+pub(crate) struct RouteCell {
+    /// The current epoch. Always points into a `Box` owned by `epochs`.
+    current: AtomicPtr<RouteTable>,
+    /// Readers currently holding a [`RouteRef`]. Writers free parked
+    /// epochs only at an observed-zero moment (see `publish`).
+    pins: AtomicU64,
+    /// Published epochs, oldest first; the last entry is always the
+    /// current one. Pruned down to the current epoch when the threshold
+    /// is exceeded and no reader is pinned; fully dropped in `Drop`.
+    epochs: Mutex<Vec<Box<RouteTable>>>,
+    /// Monotone count of publications (1 = the initial empty table);
+    /// independent of pruning.
+    published: AtomicU64,
+}
+
+impl Default for RouteCell {
+    fn default() -> Self {
+        RouteCell::new()
+    }
+}
+
+/// A pinned borrow of the current routing epoch; unpins on drop. Keep
+/// it short-lived — a held guard defers (never blocks) epoch pruning.
+pub(crate) struct RouteRef<'a> {
+    cell: &'a RouteCell,
+    table: *const RouteTable,
+}
+
+impl std::ops::Deref for RouteRef<'_> {
+    type Target = RouteTable;
+    fn deref(&self) -> &RouteTable {
+        // Safety: the pin taken before the pointer load keeps writers
+        // from freeing this epoch while the guard lives (see `load`).
+        unsafe { &*self.table }
+    }
+}
+
+impl Drop for RouteRef<'_> {
+    fn drop(&mut self) {
+        self.cell.pins.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl RouteCell {
+    pub fn new() -> RouteCell {
+        let first = Box::new(RouteTable::default());
+        let ptr = &*first as *const RouteTable as *mut RouteTable;
+        RouteCell {
+            current: AtomicPtr::new(ptr),
+            pins: AtomicU64::new(0),
+            epochs: Mutex::new(vec![first]),
+            published: AtomicU64::new(1),
+        }
+    }
+
+    /// Lock-free pinned read of the current epoch.
+    ///
+    /// Soundness of the pin/prune handshake (all SeqCst): the reader
+    /// pins *before* loading the pointer; the writer publishes the new
+    /// current *before* checking for zero pins. In the SeqCst total
+    /// order, a reader that observed an old epoch's pointer did so
+    /// before the writer's swap, hence its pin also precedes the
+    /// writer's zero-pins check — the writer either sees the pin (and
+    /// skips freeing) or the reader has already unpinned (and is done
+    /// with the epoch).
+    pub fn load(&self) -> RouteRef<'_> {
+        self.pins.fetch_add(1, Ordering::SeqCst);
+        let table = self.current.load(Ordering::SeqCst);
+        RouteRef { cell: self, table }
+    }
+
+    /// Publish a new epoch derived from the current one. Writers
+    /// serialize on the epoch list's mutex; readers are never blocked.
+    /// When the parked list outgrows its threshold, epochs older than
+    /// the new current are freed at an observed-zero-pins moment
+    /// (skipped — not waited for — if readers are active).
+    pub fn publish(&self, f: impl FnOnce(&RouteTable) -> RouteTable) {
+        let mut epochs = lock_ignore_poison(&self.epochs);
+        // Safe to re-read under the writer lock: publications are
+        // serialized here, so `current` cannot move beneath us.
+        let cur = unsafe { &*self.current.load(Ordering::SeqCst) };
+        let next = Box::new(f(cur));
+        let ptr = &*next as *const RouteTable as *mut RouteTable;
+        epochs.push(next);
+        self.current.store(ptr, Ordering::SeqCst);
+        self.published.fetch_add(1, Ordering::Relaxed);
+        if epochs.len() > EPOCH_PRUNE_THRESHOLD && self.pins.load(Ordering::SeqCst) == 0 {
+            // zero pins observed after the swap: nobody can still be
+            // dereferencing a superseded epoch (see `load`)
+            let current = epochs.pop().expect("current epoch present");
+            epochs.clear();
+            epochs.push(current);
+        }
+    }
+
+    /// Number of epochs published so far (1 = the initial empty table);
+    /// monotone, unaffected by reclamation.
+    pub fn epoch(&self) -> usize {
+        self.published.load(Ordering::Relaxed) as usize
+    }
+
+    /// Parked epochs currently held (current included) — observability
+    /// for the reclamation tests.
+    #[cfg(test)]
+    fn parked(&self) -> usize {
+        lock_ignore_poison(&self.epochs).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(shard: usize, n: usize) -> RouteEntry {
+        RouteEntry {
+            shard,
+            n,
+            stats: Arc::new(SystemStats::default()),
+        }
+    }
+
+    #[test]
+    fn publish_is_visible_and_epochs_count() {
+        let cell = RouteCell::new();
+        assert_eq!(cell.epoch(), 1);
+        assert!(cell.load().map.is_empty());
+        cell.publish(|t| t.with(7, entry(2, 100)));
+        assert_eq!(cell.epoch(), 2);
+        let e = cell.load().map.get(&7).expect("published entry");
+        assert_eq!((e.shard, e.n), (2, 100));
+        cell.publish(|t| t.without(7));
+        assert_eq!(cell.epoch(), 3);
+        assert!(cell.load().map.is_empty());
+    }
+
+    #[test]
+    fn stale_borrows_survive_later_publications() {
+        // The pinning guarantee: a guard loaded before a swap keeps
+        // reading its (stale) epoch safely — pruning is deferred, never
+        // forced, while it lives.
+        let cell = RouteCell::new();
+        cell.publish(|t| t.with(1, entry(0, 10)));
+        let stale = cell.load();
+        for i in 2..50u64 {
+            cell.publish(|t| t.with(i, entry(i as usize % 3, 10)));
+        }
+        assert_eq!(stale.map.len(), 1, "stale epoch is immutable");
+        assert_eq!(cell.load().map.len(), 49);
+        assert!(
+            cell.parked() > EPOCH_PRUNE_THRESHOLD,
+            "pinned reader defers pruning ({} parked)",
+            cell.parked()
+        );
+        drop(stale);
+        // with no pins the next publication reclaims the backlog
+        cell.publish(|t| t.with(99, entry(0, 10)));
+        assert_eq!(cell.parked(), 1, "quiescent publication prunes to current");
+        assert_eq!(cell.epoch(), 51, "the publication count is monotone");
+        assert_eq!(cell.load().map.len(), 50);
+    }
+
+    #[test]
+    fn concurrent_readers_race_writers_safely() {
+        let cell = Arc::new(RouteCell::new());
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                let cell = &cell;
+                sc.spawn(move || {
+                    for _ in 0..2000 {
+                        let t = cell.load();
+                        // every observed entry must be internally coherent
+                        for (id, e) in &t.map {
+                            assert_eq!(e.n, (*id as usize % 7) + 1);
+                        }
+                    }
+                });
+            }
+            let cell = &cell;
+            sc.spawn(move || {
+                for i in 0..500u64 {
+                    cell.publish(|t| t.with(i, entry(0, (i as usize % 7) + 1)));
+                    if i % 3 == 0 {
+                        cell.publish(|t| t.without(i / 2));
+                    }
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn ewma_tracks_sustained_load() {
+        let s = SystemStats::default();
+        assert_eq!(s.ewma_load(), 0.0);
+        for _ in 0..50 {
+            s.update_ewma(8.0);
+        }
+        assert!((s.ewma_load() - 8.0).abs() < 1e-3, "converges to the rate");
+        for _ in 0..50 {
+            s.update_ewma(0.0);
+        }
+        assert!(s.ewma_load() < 1e-3, "decays when quiet");
+    }
+}

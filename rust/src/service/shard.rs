@@ -1,8 +1,31 @@
-//! Shard internals: the bounded coalescing queue and the dispatcher
-//! loop that turns queued single-RHS requests into batched
+//! Shard internals: the bounded two-lane coalescing queue and the
+//! dispatcher loop that turns queued single-RHS requests into batched
 //! `solve_many_into` block dispatches.
+//!
+//! The elastic pieces live here too:
+//!
+//! - **Barrier ordering.** Every queued item carries an admission
+//!   sequence number. Control jobs (refactor, install, extract) are
+//!   barriers: solves admitted *before* a control are flushed before it
+//!   applies, and solves admitted after it never jump it — even though
+//!   the two solve lanes themselves re-order (deadline first). A solve
+//!   submitted after `refactor` returns therefore always observes the
+//!   new values, exactly as in the pre-elastic service.
+//! - **Forwarding.** A solve (or refactor) drained by a shard that no
+//!   longer owns its system is re-routed against the *current* routing
+//!   epoch: forwarded to the owning shard (keeping its priority), or
+//!   failed fast when the system is retired. Routing staleness costs
+//!   one queue hop, never a lost ticket.
+//! - **Parking.** A request that arrives at the shard the routing table
+//!   points to *before* the system value itself has landed (its
+//!   `Install` is still in the queue — the register/migrate window)
+//!   parks locally and is retried, in admission order, after every
+//!   control application. Install jobs are pushed before the routing
+//!   epoch that points at them is published, so a parked request's
+//!   install is always already in the queue — parking is bounded, not
+//!   speculative waiting.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -13,74 +36,156 @@ use crate::exec::{lock_ignore_poison, wait_ignore_poison};
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
+use super::queue::{AdaptiveTick, Drained, LaneQueue, Priority};
+use super::route::SystemStats;
+use super::ServiceShared;
+
 /// Per-request reply channel (refactor acks send an empty vector,
 /// hidden behind the typed wrappers in `service::SolverService`).
 pub(crate) type Reply = Sender<Result<Vec<f64>>>;
 
-/// Pending solves for one system within a drained tick.
-type SolveGroup = Vec<(Vec<f64>, Reply)>;
+/// One system living on a shard: the owning typestate handle plus the
+/// stats block that travels with it across moves.
+pub(crate) struct ShardSystem {
+    pub sys: LinearSystem<Factored>,
+    pub stats: Arc<SystemStats>,
+}
 
-pub(crate) enum Job {
-    Solve { sys: usize, b: Vec<f64>, tx: Reply },
-    Refactor { sys: usize, a: Csr, tx: Reply },
+/// One queued solve request.
+pub(crate) struct SolveJob {
+    pub id: u64,
+    pub b: Vec<f64>,
+    pub tx: Reply,
+}
+
+/// Control jobs: barriers relative to the solve lanes (see module docs).
+pub(crate) enum Control {
+    /// Same-pattern value update; flushes earlier solves first.
+    Refactor { id: u64, a: Csr, tx: Reply },
+    /// A system value arriving on this shard (register / migrate).
+    Install { id: u64, system: Box<ShardSystem> },
+    /// Remove and return a system value (retire / migrate); earlier
+    /// solves drain first, so in-flight tickets resolve before teardown.
+    Extract {
+        id: u64,
+        tx: Sender<Option<Box<ShardSystem>>>,
+    },
 }
 
 struct QueueState {
-    jobs: VecDeque<Job>,
+    solves: LaneQueue<SolveJob>,
+    controls: VecDeque<(u64, Control)>,
     shutdown: bool,
+}
+
+impl QueueState {
+    fn len(&self) -> usize {
+        self.solves.len() + self.controls.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.solves.is_empty() && self.controls.is_empty()
+    }
 }
 
 /// Bounded MPSC job queue with condvar wakeups on both ends: the
 /// dispatcher parks on `nonempty`, submitters at capacity park on
-/// `space`. Coalescing statistics live here so the service can
-/// aggregate them without touching the dispatcher thread.
+/// `space`. Forced pushes (forwarding, topology installs) bypass the
+/// capacity check — blocking a dispatcher on another shard's
+/// backpressure could deadlock the pair. Coalescing statistics live
+/// here so the service can aggregate them without touching the
+/// dispatcher thread.
 pub(crate) struct ShardQueue {
     q: Mutex<QueueState>,
     nonempty: Condvar,
     space: Condvar,
     cap: usize,
     requests: AtomicU64,
+    deadline_requests: AtomicU64,
     dispatches: AtomicU64,
     rhs_solved: AtomicU64,
     refactors: AtomicU64,
+    forwarded: AtomicU64,
     max_batch: AtomicUsize,
+    max_tick_ns: AtomicU64,
 }
 
 impl ShardQueue {
     pub fn new(cap: usize) -> ShardQueue {
         ShardQueue {
             q: Mutex::new(QueueState {
-                jobs: VecDeque::new(),
+                solves: LaneQueue::new(),
+                controls: VecDeque::new(),
                 shutdown: false,
             }),
             nonempty: Condvar::new(),
             space: Condvar::new(),
             cap,
             requests: AtomicU64::new(0),
+            deadline_requests: AtomicU64::new(0),
             dispatches: AtomicU64::new(0),
             rhs_solved: AtomicU64::new(0),
             refactors: AtomicU64::new(0),
+            forwarded: AtomicU64::new(0),
             max_batch: AtomicUsize::new(0),
+            max_tick_ns: AtomicU64::new(0),
         }
     }
 
-    /// Enqueue a job, blocking while the queue is at capacity; errors
-    /// once shutdown has begun.
-    pub fn push(&self, job: Job) -> Result<()> {
+    /// Enqueue a solve under its service-wide admission seq, blocking
+    /// while the queue is at capacity (unless `forced` — the forwarding
+    /// path, which also *preserves* the job's original seq so a
+    /// forwarded solve keeps its admission order relative to barriers).
+    /// Once shutdown has begun the job is handed back so the caller can
+    /// resolve its ticket.
+    pub fn push_solve(
+        &self,
+        job: SolveJob,
+        prio: Priority,
+        seq: u64,
+        forced: bool,
+    ) -> std::result::Result<(), SolveJob> {
         let mut st = lock_ignore_poison(&self.q);
         loop {
             if st.shutdown {
-                return Err(Error::Runtime("service is shutting down".into()));
+                return Err(job);
             }
-            if st.jobs.len() < self.cap {
+            if forced || st.len() < self.cap {
                 break;
             }
             st = wait_ignore_poison(self.space.wait(st));
         }
-        if matches!(job, Job::Solve { .. }) {
+        if !forced {
             self.requests.fetch_add(1, Ordering::Relaxed);
+            if matches!(prio, Priority::Deadline(_)) {
+                self.deadline_requests.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        st.jobs.push_back(job);
+        st.solves.push(seq, prio, job);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue a control job (barrier) under its service-wide admission
+    /// seq. Same capacity/shutdown contract as
+    /// [`ShardQueue::push_solve`].
+    pub fn push_control(
+        &self,
+        ctrl: Control,
+        seq: u64,
+        forced: bool,
+    ) -> std::result::Result<(), Control> {
+        let mut st = lock_ignore_poison(&self.q);
+        loop {
+            if st.shutdown {
+                return Err(ctrl);
+            }
+            if forced || st.len() < self.cap {
+                break;
+            }
+            st = wait_ignore_poison(self.space.wait(st));
+        }
+        st.controls.push_back((seq, ctrl));
         self.nonempty.notify_one();
         Ok(())
     }
@@ -94,26 +199,45 @@ impl ShardQueue {
 
     pub fn add_stats_into(&self, out: &mut ServiceStats) {
         out.requests += self.requests.load(Ordering::Relaxed);
+        out.deadline_requests += self.deadline_requests.load(Ordering::Relaxed);
         out.dispatches += self.dispatches.load(Ordering::Relaxed);
         out.rhs_solved += self.rhs_solved.load(Ordering::Relaxed);
         out.refactors += self.refactors.load(Ordering::Relaxed);
+        out.forwarded += self.forwarded.load(Ordering::Relaxed);
         out.max_batch = out.max_batch.max(self.max_batch.load(Ordering::Relaxed));
+        let tick = Duration::from_nanos(self.max_tick_ns.load(Ordering::Relaxed));
+        out.max_tick = out.max_tick.max(tick);
     }
 }
 
-/// Aggregate coalescing statistics for a [`super::SolverService`].
+/// Aggregate serving statistics for a [`super::SolverService`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServiceStats {
     /// Solve requests accepted.
     pub requests: u64,
+    /// Subset of `requests` submitted on the deadline lane.
+    pub deadline_requests: u64,
     /// Batched block dispatches issued.
     pub dispatches: u64,
     /// Right-hand sides solved across all dispatches.
     pub rhs_solved: u64,
     /// Refactorizations applied.
     pub refactors: u64,
+    /// Requests re-routed between shards (routing-epoch staleness during
+    /// a move; each costs one queue hop).
+    pub forwarded: u64,
+    /// Systems registered over the service lifetime (construction-time
+    /// systems included).
+    pub registers: u64,
+    /// Systems retired.
+    pub retires: u64,
+    /// Systems moved between shards (`migrate` / `rebalance`).
+    pub moves: u64,
     /// Widest single batch dispatched.
     pub max_batch: usize,
+    /// Widest adaptive coalescing window any shard actually slept
+    /// (zero with a static zero tick).
+    pub max_tick: Duration,
 }
 
 impl ServiceStats {
@@ -127,114 +251,325 @@ impl ServiceStats {
     }
 }
 
-/// The dispatcher state moved onto the shard thread. Each registered
+/// A request parked while its system's `Install` is still queued (see
+/// the module docs); retried in admission order after every control.
+enum ParkedJob {
+    Solve(Drained<SolveJob>),
+    Refactor { seq: u64, id: u64, a: Csr, tx: Reply },
+}
+
+impl ParkedJob {
+    fn seq(&self) -> u64 {
+        match self {
+            ParkedJob::Solve(d) => d.seq,
+            ParkedJob::Refactor { seq, .. } => *seq,
+        }
+    }
+}
+
+/// The dispatcher state moved onto the shard thread. Each resident
 /// system is an owning [`LinearSystem<Factored>`] handle — matrix,
-/// analysis and factorization travel as one value, and all handles on a
-/// shard share that shard's solver engine (`Arc` internally).
+/// analysis, factorization *and engine* travel as one value, which is
+/// what makes cross-shard moves a plain value move.
 pub(crate) struct ShardWorker {
-    systems: Vec<LinearSystem<Factored>>,
+    shard: usize,
+    systems: HashMap<u64, ShardSystem>,
     queue: Arc<ShardQueue>,
-    tick: Duration,
+    shared: Arc<ServiceShared>,
+    tick: AdaptiveTick,
     max_batch: usize,
+    starvation_bound: usize,
+    parked: Vec<ParkedJob>,
+    /// Per-drain-cycle dispatch counts, folded into each system's EWMA.
+    batch_counts: HashMap<u64, u64>,
 }
 
 impl ShardWorker {
     pub fn new(
-        systems: Vec<LinearSystem<Factored>>,
+        shard: usize,
         queue: Arc<ShardQueue>,
-        tick: Duration,
+        shared: Arc<ServiceShared>,
+        tick: AdaptiveTick,
         max_batch: usize,
+        starvation_bound: usize,
     ) -> ShardWorker {
         ShardWorker {
-            systems,
+            shard,
+            systems: HashMap::new(),
             queue,
+            shared,
             tick,
             max_batch,
+            starvation_bound,
+            parked: Vec::new(),
+            batch_counts: HashMap::new(),
         }
     }
 
-    /// Dispatcher loop: park until work arrives, optionally sleep one
-    /// coalescing tick, drain everything queued, process it as batched
-    /// block dispatches. On shutdown the queue is drained to empty
-    /// before exiting, so every accepted ticket resolves.
+    /// Dispatcher loop: park until work arrives (collapsing the adaptive
+    /// window), optionally sleep one coalescing window, drain everything
+    /// queued, process it as batched block dispatches. On shutdown the
+    /// queue is drained to empty before exiting, so every accepted
+    /// ticket resolves.
     pub fn run(mut self) {
         let mut xs: Vec<Vec<f64>> = Vec::new();
         loop {
             let drained = {
                 let mut st = lock_ignore_poison(&self.queue.q);
-                while st.jobs.is_empty() && !st.shutdown {
+                while st.is_empty() && !st.shutdown {
+                    self.tick.on_idle();
                     st = wait_ignore_poison(self.queue.nonempty.wait(st));
                 }
-                if st.jobs.is_empty() {
-                    return; // shutdown with nothing left to do
-                }
-                // coalescing window — skipped when the batch is already
-                // full (sleeping could not widen it) or shutdown has
-                // begun (drain as fast as possible)
-                if !self.tick.is_zero() && !st.shutdown && st.jobs.len() < self.max_batch {
-                    drop(st);
-                    std::thread::sleep(self.tick);
-                    st = lock_ignore_poison(&self.queue.q);
-                }
-                let drained: Vec<Job> = st.jobs.drain(..).collect();
-                self.queue.space.notify_all();
-                drained
-            };
-            self.process(drained, &mut xs);
-        }
-    }
-
-    fn process(&mut self, jobs: Vec<Job>, xs: &mut Vec<Vec<f64>>) {
-        let nsys = self.systems.len();
-        let mut groups: Vec<SolveGroup> = (0..nsys).map(|_| Vec::new()).collect();
-        for job in jobs {
-            match job {
-                Job::Solve { sys, b, tx } => groups[sys].push((b, tx)),
-                Job::Refactor { sys, a, tx } => {
-                    // flush queued solves first: a request submitted
-                    // before this refactor must not observe new values
-                    self.flush(&mut groups, xs);
-                    let r = self.apply_refactor(sys, a);
-                    self.queue.refactors.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(r.map(|_| Vec::new()));
-                }
-            }
-        }
-        self.flush(&mut groups, xs);
-    }
-
-    fn apply_refactor(&mut self, sys: usize, a: Csr) -> Result<()> {
-        self.systems[sys].refactor_matrix(a)
-    }
-
-    /// Solve every queued group as block dispatches of at most
-    /// `max_batch` columns, replying through the per-request channels.
-    /// Disconnected receivers (abandoned tickets) are ignored.
-    fn flush(&self, groups: &mut [SolveGroup], xs: &mut Vec<Vec<f64>>) {
-        for (sys, group) in groups.iter_mut().enumerate() {
-            while !group.is_empty() {
-                let take = group.len().min(self.max_batch);
-                let mut bs = Vec::with_capacity(take);
-                let mut txs = Vec::with_capacity(take);
-                for (b, tx) in group.drain(..take) {
-                    bs.push(b);
-                    txs.push(tx);
-                }
-                match self.systems[sys].solve_many_into(&bs, xs) {
-                    Ok(_) => {
-                        self.queue.dispatches.fetch_add(1, Ordering::Relaxed);
+                if st.is_empty() {
+                    None // shutdown with nothing left to do
+                } else {
+                    // coalescing window — skipped when the batch is
+                    // already full (sleeping could not widen it), when a
+                    // control job is waiting (refactor/retire/migrate
+                    // callers block on it; sleeping cannot widen a
+                    // barrier), or when shutdown has begun
+                    let window = self.tick.window();
+                    if !window.is_zero()
+                        && !st.shutdown
+                        && st.controls.is_empty()
+                        && st.solves.len() < self.max_batch
+                    {
+                        drop(st);
                         self.queue
-                            .rhs_solved
-                            .fetch_add(bs.len() as u64, Ordering::Relaxed);
-                        self.queue.max_batch.fetch_max(bs.len(), Ordering::Relaxed);
-                        for (q, tx) in txs.into_iter().enumerate() {
-                            let _ = tx.send(Ok(std::mem::take(&mut xs[q])));
+                            .max_tick_ns
+                            .fetch_max(window.as_nanos() as u64, Ordering::Relaxed);
+                        std::thread::sleep(window);
+                        st = lock_ignore_poison(&self.queue.q);
+                    }
+                    let solves = st.solves.drain_ordered(self.starvation_bound);
+                    let controls: Vec<(u64, Control)> = st.controls.drain(..).collect();
+                    self.queue.space.notify_all();
+                    Some((solves, controls))
+                }
+            };
+            let Some((solves, controls)) = drained else {
+                // Shutdown: anything still parked can never be satisfied
+                // (no more installs are coming) — fail it loudly rather
+                // than dropping the reply channel.
+                for p in self.parked.drain(..) {
+                    let shutting = || Error::Runtime("service is shutting down".into());
+                    match p {
+                        ParkedJob::Solve(d) => {
+                            let _ = d.item.tx.send(Err(shutting()));
+                        }
+                        ParkedJob::Refactor { tx, .. } => {
+                            let _ = tx.send(Err(shutting()));
                         }
                     }
-                    Err(e) => {
-                        for tx in txs {
-                            let _ = tx.send(Err(e.clone()));
-                        }
+                }
+                return;
+            };
+            let nsolves = solves.len();
+            self.process(solves, controls, &mut xs);
+            self.tick.on_drain(nsolves, self.max_batch);
+        }
+    }
+
+    /// Process one drained tick: flush solves against control barriers
+    /// in admission order, then fold per-system dispatch counts into the
+    /// EWMA loads that guide `rebalance`.
+    fn process(
+        &mut self,
+        mut solves: Vec<Drained<SolveJob>>,
+        controls: Vec<(u64, Control)>,
+        xs: &mut Vec<Vec<f64>>,
+    ) {
+        self.batch_counts.clear();
+        for (cseq, ctrl) in controls {
+            // flush solves admitted before this barrier (the lanes
+            // re-order amongst themselves, so partition by seq — a
+            // later-admitted deadline solve must not jump a refactor)
+            let mut rest = Vec::with_capacity(solves.len());
+            let mut ready = Vec::new();
+            for j in solves {
+                if j.seq < cseq {
+                    ready.push(j);
+                } else {
+                    rest.push(j);
+                }
+            }
+            solves = rest;
+            self.flush_solves(ready, xs);
+            self.apply_control(cseq, ctrl);
+            // a control may have installed or removed a system: parked
+            // requests re-route against the new local/state view
+            let parked = std::mem::take(&mut self.parked);
+            self.retry_parked(parked, xs);
+        }
+        self.flush_solves(solves, xs);
+        // one EWMA sample per resident system per drain cycle (0 when
+        // quiet), so hot systems rank above merely-warm ones
+        for (id, s) in &self.systems {
+            let sample = self.batch_counts.get(id).copied().unwrap_or(0) as f64;
+            s.stats.update_ewma(sample);
+        }
+    }
+
+    fn apply_control(&mut self, seq: u64, ctrl: Control) {
+        match ctrl {
+            Control::Refactor { id, a, tx } => self.apply_refactor(seq, id, a, tx),
+            Control::Install { id, system } => {
+                self.systems.insert(id, *system);
+            }
+            Control::Extract { id, tx } => {
+                let system = self.systems.remove(&id).map(Box::new);
+                let _ = tx.send(system);
+            }
+        }
+    }
+
+    /// Apply a refactor locally, or park/forward/fail it by the current
+    /// routing epoch when the system is not resident here.
+    fn apply_refactor(&mut self, seq: u64, id: u64, a: Csr, tx: Reply) {
+        if let Some(s) = self.systems.get_mut(&id) {
+            let r = s.sys.refactor_matrix(a);
+            self.queue.refactors.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(r.map(|_| Vec::new()));
+            return;
+        }
+        let target = {
+            let t = self.shared.routes.load();
+            t.map.get(&id).map(|e| e.shard)
+        };
+        match target {
+            Some(s) if s == self.shard => {
+                self.parked.push(ParkedJob::Refactor { seq, id, a, tx });
+            }
+            Some(s) => {
+                // forwarded with its ORIGINAL admission seq, so it keeps
+                // its barrier order at the destination
+                self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
+                if let Err(Control::Refactor { tx, .. }) =
+                    self.shared.queues[s].push_control(Control::Refactor { id, a, tx }, seq, true)
+                {
+                    let _ = tx.send(Err(Error::Runtime("service is shutting down".into())));
+                }
+            }
+            None => {
+                let _ = tx.send(Err(Error::Invalid(format!(
+                    "system sys#{id} is not registered (retired?)"
+                ))));
+            }
+        }
+    }
+
+    /// Retry parked requests in admission order. Requests whose system
+    /// landed dispatch now; the rest re-route (park again, forward, or
+    /// fail) against the current epoch.
+    fn retry_parked(&mut self, mut parked: Vec<ParkedJob>, xs: &mut Vec<Vec<f64>>) {
+        parked.sort_by_key(|p| p.seq());
+        for p in parked {
+            match p {
+                ParkedJob::Solve(d) => {
+                    if self.systems.contains_key(&d.item.id) {
+                        let id = d.item.id;
+                        self.dispatch_group(id, vec![(d.item.b, d.item.tx)], xs);
+                    } else {
+                        self.reroute_solve(d);
+                    }
+                }
+                ParkedJob::Refactor { seq, id, a, tx } => self.apply_refactor(seq, id, a, tx),
+            }
+        }
+    }
+
+    /// Flush a batch of drained solves: group per resident system in
+    /// dispatch order and issue block dispatches; non-resident solves
+    /// re-route (park / forward / fail).
+    fn flush_solves(&mut self, jobs: Vec<Drained<SolveJob>>, xs: &mut Vec<Vec<f64>>) {
+        let mut order: Vec<u64> = Vec::new();
+        let mut groups: HashMap<u64, Vec<(Vec<f64>, Reply)>> = HashMap::new();
+        for d in jobs {
+            if self.systems.contains_key(&d.item.id) {
+                let group = groups.entry(d.item.id).or_default();
+                if group.is_empty() {
+                    order.push(d.item.id);
+                }
+                group.push((d.item.b, d.item.tx));
+            } else {
+                self.reroute_solve(d);
+            }
+        }
+        for id in order {
+            let group = groups.remove(&id).expect("grouped above");
+            self.dispatch_group(id, group, xs);
+        }
+    }
+
+    /// Re-route one solve that is not resident here (see module docs).
+    fn reroute_solve(&mut self, d: Drained<SolveJob>) {
+        let target = {
+            let t = self.shared.routes.load();
+            t.map.get(&d.item.id).map(|e| e.shard)
+        };
+        match target {
+            Some(s) if s == self.shard => self.parked.push(ParkedJob::Solve(d)),
+            Some(s) => {
+                // forwarded with its ORIGINAL admission seq and lane, so
+                // it keeps its barrier order at the destination
+                self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
+                let prio = match d.deadline {
+                    Some(at) => Priority::Deadline(at),
+                    None => Priority::Bulk,
+                };
+                if let Err(job) = self.shared.queues[s].push_solve(d.item, prio, d.seq, true) {
+                    let _ = job
+                        .tx
+                        .send(Err(Error::Runtime("service is shutting down".into())));
+                }
+            }
+            None => {
+                let _ = d.item.tx.send(Err(Error::Invalid(format!(
+                    "system sys#{} is not registered (retired?)",
+                    d.item.id
+                ))));
+            }
+        }
+    }
+
+    /// Solve one system's queued group as block dispatches of at most
+    /// `max_batch` columns, replying through the per-request channels.
+    /// Disconnected receivers (abandoned tickets) are ignored.
+    fn dispatch_group(
+        &mut self,
+        id: u64,
+        mut group: Vec<(Vec<f64>, Reply)>,
+        xs: &mut Vec<Vec<f64>>,
+    ) {
+        while !group.is_empty() {
+            let take = group.len().min(self.max_batch);
+            let mut bs = Vec::with_capacity(take);
+            let mut txs = Vec::with_capacity(take);
+            for (b, tx) in group.drain(..take) {
+                bs.push(b);
+                txs.push(tx);
+            }
+            let res = {
+                let s = self.systems.get(&id).expect("dispatch_group on resident system");
+                s.sys.solve_many_into(&bs, xs)
+            };
+            match res {
+                Ok(_) => {
+                    let k = bs.len() as u64;
+                    self.queue.dispatches.fetch_add(1, Ordering::Relaxed);
+                    self.queue.rhs_solved.fetch_add(k, Ordering::Relaxed);
+                    self.queue.max_batch.fetch_max(bs.len(), Ordering::Relaxed);
+                    *self.batch_counts.entry(id).or_insert(0) += k;
+                    if let Some(s) = self.systems.get(&id) {
+                        s.stats.note_solved(k);
+                    }
+                    for (q, tx) in txs.into_iter().enumerate() {
+                        let _ = tx.send(Ok(std::mem::take(&mut xs[q])));
+                    }
+                }
+                Err(e) => {
+                    for tx in txs {
+                        let _ = tx.send(Err(e.clone()));
                     }
                 }
             }

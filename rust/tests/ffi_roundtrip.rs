@@ -9,7 +9,9 @@ use std::ffi::CStr;
 
 use hylu::ffi::{
     hylu_analyze, hylu_create, hylu_factorize, hylu_free, hylu_last_error, hylu_n, hylu_nnz,
-    hylu_refactorize, hylu_solve, hylu_solve_many, HyluHandle, HYLU_ERR_INVALID, HYLU_OK,
+    hylu_refactorize, hylu_service_create, hylu_service_free, hylu_service_last_error,
+    hylu_service_rebalance, hylu_service_register, hylu_service_retire, hylu_service_solve,
+    hylu_solve, hylu_solve_many, HyluHandle, HyluService, HYLU_ERR_INVALID, HYLU_OK,
 };
 use hylu::prelude::*;
 use hylu::sparse::gen;
@@ -140,5 +142,74 @@ fn ffi_rejects_malformed_input_with_codes_and_messages() {
         assert_eq!(hylu_n(std::ptr::null()), 0);
         hylu_free(std::ptr::null_mut());
         hylu_free(h);
+    }
+}
+
+#[test]
+fn ffi_service_register_retire_roundtrip() {
+    let a = gen::grid2d(13, 13);
+    let b = gen::rhs_for_ones(&a);
+    let m = raw(&a);
+    unsafe {
+        let mut s: *mut HyluService = std::ptr::null_mut();
+        assert_eq!(hylu_service_create(2, 1, &mut s), HYLU_OK);
+        assert!(!s.is_null());
+
+        // two registered systems: the base matrix and a doubled copy
+        let mut id0 = u64::MAX;
+        assert_eq!(
+            hylu_service_register(s, m.n, m.ap.as_ptr(), m.ai.as_ptr(), m.ax.as_ptr(), &mut id0),
+            HYLU_OK
+        );
+        let ax2: Vec<f64> = m.ax.iter().map(|v| v * 2.0).collect();
+        let mut id1 = u64::MAX;
+        assert_eq!(
+            hylu_service_register(s, m.n, m.ap.as_ptr(), m.ai.as_ptr(), ax2.as_ptr(), &mut id1),
+            HYLU_OK
+        );
+        assert_ne!(id0, id1);
+
+        // routed solves: x == 1 on the base system, 0.5 on the doubled one,
+        // and bit-identical to the same lifecycle through the Rust handles
+        let mut x = vec![0.0f64; a.n];
+        assert_eq!(hylu_service_solve(s, id0, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+        let reference = SolverBuilder::new()
+            .repeated()
+            .threads(1)
+            .build()
+            .unwrap()
+            .analyze(&a)
+            .unwrap()
+            .factor()
+            .unwrap();
+        assert_eq!(x, reference.solve(&b).unwrap());
+        assert_eq!(hylu_service_solve(s, id1, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+        assert!(x.iter().all(|v| (v - 0.5).abs() < 1e-8));
+
+        // rebalance is safe to call at any time
+        let mut moved = -1i64;
+        assert_eq!(hylu_service_rebalance(s, &mut moved), HYLU_OK);
+        assert!(moved >= 0);
+
+        // retire: the id is gone for good, with a readable message
+        assert_eq!(hylu_service_retire(s, id0), HYLU_OK);
+        assert_eq!(
+            hylu_service_solve(s, id0, b.as_ptr(), x.as_mut_ptr()),
+            HYLU_ERR_INVALID
+        );
+        let msg = CStr::from_ptr(hylu_service_last_error(s)).to_str().unwrap();
+        assert!(msg.contains("unknown system"), "unhelpful message: {msg}");
+        assert_eq!(hylu_service_retire(s, id0), HYLU_ERR_INVALID);
+        // the surviving system still serves
+        assert_eq!(hylu_service_solve(s, id1, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+
+        // null tolerance mirrors the core handle ABI
+        assert_eq!(hylu_service_retire(std::ptr::null_mut(), 0), HYLU_ERR_INVALID);
+        assert_eq!(
+            hylu_service_solve(std::ptr::null_mut(), 0, b.as_ptr(), x.as_mut_ptr()),
+            HYLU_ERR_INVALID
+        );
+        hylu_service_free(std::ptr::null_mut());
+        hylu_service_free(s);
     }
 }

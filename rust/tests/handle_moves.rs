@@ -1,0 +1,109 @@
+//! `LinearSystem<Factored>` is an owning value: moving it between
+//! threads (what the elastic service does when it migrates a system
+//! between shards) must not change a single bit of `refactor`/`solve`
+//! behavior. These tests guard the value-move rebalance path.
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+
+fn rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn handle_moved_across_threads_solves_bit_identically() {
+    let a = gen::power_network(260, 9);
+    let b = rhs(a.n, 4);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    // the stay-at-home twin: identical pipeline, never moved
+    let home = solver.analyze(&a).unwrap().factor().unwrap();
+    let expect = home.solve(&b).unwrap();
+
+    // the traveler: moved through a chain of threads, solving at each hop
+    let mut traveler = solver.analyze(&a).unwrap().factor().unwrap();
+    for hop in 0..4 {
+        traveler = std::thread::scope(|sc| {
+            sc.spawn(|| {
+                let x = traveler.solve(&b).unwrap();
+                assert_eq!(x, expect, "hop {hop}");
+                traveler // moved out of the thread again
+            })
+            .join()
+            .unwrap()
+        });
+    }
+    assert_eq!(traveler.solve(&b).unwrap(), expect, "after the last hop");
+}
+
+#[test]
+fn handle_moved_across_threads_refactors_bit_identically() {
+    let a = gen::grid2d(15, 15);
+    let b = rhs(a.n, 8);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let mut home = solver.analyze(&a).unwrap().factor().unwrap();
+    let mut traveler = solver.analyze(&a).unwrap().factor().unwrap();
+
+    for step in 1..=4u64 {
+        let vals: Vec<f64> = a.vals.iter().map(|v| v * (1.0 + 0.3 * step as f64)).collect();
+        home.refactor(&vals).unwrap();
+        let expect = home.solve(&b).unwrap();
+        // refactor + solve happen on a different thread each step
+        traveler = std::thread::scope(|sc| {
+            sc.spawn(|| {
+                let mut t = traveler;
+                t.refactor(&vals).unwrap();
+                assert_eq!(t.solve(&b).unwrap(), expect, "step {step}");
+                t
+            })
+            .join()
+            .unwrap()
+        });
+        // the factors themselves are bitwise equal, not just the solutions
+        let (hf, tf) = (&home.factorization().fac, &traveler.factorization().fac);
+        assert_eq!(hf.lvals, tf.lvals, "step {step}");
+        assert_eq!(hf.uvals, tf.uvals, "step {step}");
+        assert_eq!(hf.diag, tf.diag, "step {step}");
+        assert_eq!(hf.pivot_perm, tf.pivot_perm, "step {step}");
+    }
+}
+
+#[test]
+fn service_migration_round_trip_preserves_factor_bits() {
+    // register → migrate across every shard → retire: the returned
+    // handle's factors are bitwise those of a handle that never moved
+    let a = gen::power_network(200, 2);
+    let b = rhs(a.n, 12);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let home = solver.analyze(&a).unwrap().factor().unwrap();
+    let expect = home.solve(&b).unwrap();
+
+    let traveler = solver.analyze(&a).unwrap().factor().unwrap();
+    let service = SolverService::with_shards(ServiceConfig {
+        shards: 3,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let id = service.register_on(traveler, 0).unwrap();
+    for shard in [1, 2, 0, 2] {
+        service.migrate(id, shard).unwrap();
+        assert_eq!(service.shard_of(id), Some(shard));
+        assert_eq!(
+            service.solve(id, b.clone()).unwrap(),
+            expect,
+            "on shard {shard}"
+        );
+    }
+    let back = service.retire(id).unwrap();
+    drop(service);
+    assert_eq!(back.solve(&b).unwrap(), expect, "after retire");
+    let (hf, bf) = (&home.factorization().fac, &back.factorization().fac);
+    assert_eq!(hf.lvals, bf.lvals);
+    assert_eq!(hf.uvals, bf.uvals);
+    assert_eq!(hf.diag, bf.diag);
+    assert_eq!(hf.pivot_perm, bf.pivot_perm);
+    // the handle can keep growing the same engine after its travels
+    let sibling = back.solver().analyze(&a).unwrap().factor().unwrap();
+    assert_eq!(sibling.solve(&b).unwrap(), expect);
+}

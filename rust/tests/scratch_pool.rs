@@ -1,0 +1,152 @@
+//! `exec::ScratchPool` boundary regressions: the full 64-slot bitmask,
+//! a single slot under contention, and LIFO warm-slot reuse observed
+//! through the engine's allocation counters.
+
+use std::sync::atomic::Ordering;
+
+use hylu::exec::{Engine, ScratchPool, MAX_SCRATCH_SLOTS};
+use hylu::prelude::*;
+use hylu::sparse::gen;
+
+#[test]
+fn full_width_pool_uses_every_bit_of_the_mask() {
+    // cap == MAX_SCRATCH_SLOTS exercises the `u64::MAX` free-mask edge
+    // (a plain `(1 << 64) - 1` would overflow)
+    let pool = ScratchPool::new(MAX_SCRATCH_SLOTS);
+    assert_eq!(pool.capacity(), 64);
+    assert_eq!(pool.in_use(), 0);
+    let guards: Vec<_> = (0..MAX_SCRATCH_SLOTS).map(|_| pool.checkout()).collect();
+    assert_eq!(pool.in_use(), 64, "all 64 slots check out");
+    assert!(pool.try_checkout().is_none(), "the 65th caller finds nothing");
+    drop(guards);
+    assert_eq!(pool.in_use(), 0, "every slot returned");
+    // the mask is fully restored: all 64 check out again
+    let again: Vec<_> = (0..MAX_SCRATCH_SLOTS).map(|_| pool.checkout()).collect();
+    assert_eq!(pool.in_use(), 64);
+    drop(again);
+}
+
+#[test]
+fn oversized_caps_clamp_to_the_mask_width() {
+    assert_eq!(ScratchPool::new(65).capacity(), MAX_SCRATCH_SLOTS);
+    assert_eq!(ScratchPool::new(usize::MAX).capacity(), MAX_SCRATCH_SLOTS);
+    assert_eq!(ScratchPool::new(0).capacity(), 1, "zero clamps up to one");
+}
+
+#[test]
+fn one_slot_under_contention_stays_exclusive_and_live() {
+    // cap 1: every concurrent caller funnels through the condvar
+    // fallback; the slot must never be double-handed and all callers
+    // must finish (liveness)
+    let pool = ScratchPool::new(1);
+    std::thread::scope(|sc| {
+        for t in 0..8usize {
+            let pool = &pool;
+            sc.spawn(move || {
+                for i in 0..150 {
+                    let mut g = pool.checkout();
+                    g.y.clear();
+                    g.y.push((t * 10_000 + i) as f64);
+                    std::thread::yield_now();
+                    assert_eq!(
+                        g.y[0],
+                        (t * 10_000 + i) as f64,
+                        "slot mutated by another thread"
+                    );
+                }
+            });
+        }
+    });
+    assert_eq!(pool.in_use(), 0);
+}
+
+#[test]
+fn lifo_reuse_keeps_sequential_solves_allocation_free() {
+    // warm-slot LIFO through a real solver: after one warm-up solve,
+    // sequential solves re-check-out the same slot and perform no
+    // scratch growth (observed via the engine's allocation counters)
+    let a = gen::grid2d(16, 16);
+    let solver = SolverBuilder::new()
+        .threads(1)
+        .scratch_slots(8)
+        .build()
+        .unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let mut x = Vec::new();
+    sys.solve_into(&b, &mut x).unwrap(); // warm-up grows slot 0 once
+    let counters = solver.engine().counters();
+    let warm = counters.scratch_allocs.load(Ordering::Relaxed);
+    for _ in 0..50 {
+        sys.solve_into(&b, &mut x).unwrap();
+    }
+    assert_eq!(
+        counters.scratch_allocs.load(Ordering::Relaxed),
+        warm,
+        "sequential solves must reuse the same warm slot (LIFO)"
+    );
+
+    // concurrency exercises additional slots: growth happens (each new
+    // slot warms once) but is bounded by the slots actually used
+    std::thread::scope(|sc| {
+        for _ in 0..4 {
+            let (sys, b) = (&sys, &b);
+            sc.spawn(move || {
+                for _ in 0..20 {
+                    sys.solve(b).unwrap();
+                }
+            });
+        }
+    });
+    let after_burst = counters.scratch_allocs.load(Ordering::Relaxed);
+    assert!(
+        after_burst >= warm,
+        "burst can only add growth, never rewind"
+    );
+    assert_eq!(solver.engine().scratch_pool().in_use(), 0);
+
+    // back to sequential: the warm slot is the first one free again
+    for _ in 0..50 {
+        sys.solve_into(&b, &mut x).unwrap();
+    }
+    assert_eq!(
+        counters.scratch_allocs.load(Ordering::Relaxed),
+        after_burst,
+        "post-burst sequential solves are allocation-free again"
+    );
+}
+
+#[test]
+fn engine_one_slot_pool_serializes_without_growth_churn() {
+    // Engine-level cap 1: concurrent solves serialize on the single
+    // scratch slot; once it is warm, no further growth events occur no
+    // matter how many threads hammer it
+    let a = gen::grid2d(12, 12);
+    let solver = SolverBuilder::new()
+        .threads(1)
+        .scratch_slots(1)
+        .build()
+        .unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    sys.solve(&b).unwrap(); // warm the single slot
+    let counters = solver.engine().counters();
+    let warm = counters.scratch_allocs.load(Ordering::Relaxed);
+    std::thread::scope(|sc| {
+        for _ in 0..6 {
+            let (sys, b) = (&sys, &b);
+            sc.spawn(move || {
+                for _ in 0..25 {
+                    sys.solve(b).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(
+        counters.scratch_allocs.load(Ordering::Relaxed),
+        warm,
+        "one warm slot serves all contended callers with zero growth"
+    );
+    assert_eq!(solver.engine().scratch_pool().in_use(), 0);
+    let _ = Engine::new(1, 0, 1); // constructor smoke for the cap-1 engine
+}

@@ -1,10 +1,10 @@
 //! Concurrency tests for the serving stack: N threads hammering one
 //! `Solver` (scratch checkout pool) and one `SolverService` (coalescing
-//! queue), asserting bit-identical results vs. sequential solves, no
-//! deadlock, and that coalescing actually batches k > 1 right-hand
-//! sides per dispatch.
+//! queue + elastic topology), asserting bit-identical results vs.
+//! sequential solves, no deadlock, coalescing of k > 1 right-hand sides
+//! per dispatch, and live register/retire/migrate semantics.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use hylu::prelude::*;
 use hylu::sparse::gen;
@@ -81,6 +81,7 @@ fn service_cfg(shards: usize, tick_ms: u64) -> ServiceConfig {
         max_batch: 64,
         queue_cap: 4096,
         tick: Duration::from_millis(tick_ms),
+        ..ServiceConfig::default()
     }
 }
 
@@ -105,7 +106,7 @@ fn service_coalesces_and_matches_sequential_bitwise() {
     // whole burst into very few dispatches
     let tickets: Vec<_> = bs
         .iter()
-        .map(|b| service.submit(0, b.clone()).unwrap())
+        .map(|b| service.submit(SystemId(0), b.clone()).unwrap())
         .collect();
     for (q, ticket) in tickets.into_iter().enumerate() {
         let x = ticket.wait().unwrap();
@@ -143,6 +144,11 @@ fn sharded_multi_system_service_with_concurrent_callers() {
     let service = SolverService::new(service_cfg(2, 1), systems.clone()).unwrap();
     assert_eq!(service.shard_count(), 2);
     assert_eq!(service.system_count(), 4);
+    assert_eq!(
+        service.system_ids(),
+        (0..4).map(SystemId).collect::<Vec<_>>(),
+        "construction ids are assigned in order"
+    );
     // references from an identically configured solver
     let reference = SolverBuilder::new().threads(1).build().unwrap();
     let bs = rhs_set(base.n, 4, 3);
@@ -157,7 +163,7 @@ fn sharded_multi_system_service_with_concurrent_callers() {
             sc.spawn(move || {
                 for rep in 0..8 {
                     let sys = (t + rep) % 4;
-                    let x = service.solve(sys, bs[sys].clone()).unwrap();
+                    let x = service.solve(SystemId(sys as u64), bs[sys].clone()).unwrap();
                     assert_eq!(x, expect[sys], "thread {t} sys {sys}");
                 }
             });
@@ -170,7 +176,7 @@ fn service_refactor_updates_results() {
     let a = gen::grid2d(15, 15);
     let service = SolverService::new(service_cfg(1, 0), vec![a.clone()]).unwrap();
     let b = gen::rhs_for_ones(&a);
-    let x = service.solve(0, b.clone()).unwrap();
+    let x = service.solve(SystemId(0), b.clone()).unwrap();
     let err: f64 = x.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
     assert!(err < 1e-8, "initial solve err {err}");
     // sweep step: double every value; same rhs now solves to 0.5
@@ -178,8 +184,8 @@ fn service_refactor_updates_results() {
     for v in &mut a2.vals {
         *v *= 2.0;
     }
-    service.refactor(0, a2).unwrap();
-    let x2 = service.solve(0, b).unwrap();
+    service.refactor(SystemId(0), a2).unwrap();
+    let x2 = service.solve(SystemId(0), b).unwrap();
     let err2: f64 = x2.iter().map(|v| (v - 0.5).abs()).fold(0.0, f64::max);
     assert!(err2 < 1e-8, "post-refactor err {err2}");
     assert_eq!(service.stats().refactors, 1);
@@ -191,7 +197,7 @@ fn service_drop_resolves_all_pending_tickets() {
     let b = gen::rhs_for_ones(&a);
     let service = SolverService::new(service_cfg(1, 5), vec![a.clone()]).unwrap();
     let tickets: Vec<_> = (0..16)
-        .map(|_| service.submit(0, b.clone()).unwrap())
+        .map(|_| service.submit(SystemId(0), b.clone()).unwrap())
         .collect();
     // dropping the service drains the queue before joining the
     // dispatcher: every accepted ticket must still resolve
@@ -206,13 +212,218 @@ fn service_drop_resolves_all_pending_tickets() {
 fn service_rejects_bad_requests() {
     let a = gen::grid2d(8, 8);
     let service = SolverService::new(ServiceConfig::default(), vec![a.clone()]).unwrap();
-    assert!(service.submit(1, vec![0.0; a.n]).is_err(), "unknown system");
-    assert!(service.submit(0, vec![0.0; 3]).is_err(), "bad rhs length");
+    assert!(
+        service.submit(SystemId(1), vec![0.0; a.n]).is_err(),
+        "unknown system"
+    );
+    assert!(
+        service.submit(SystemId(0), vec![0.0; 3]).is_err(),
+        "bad rhs length"
+    );
     let mut wrong = gen::grid2d(8, 9);
     wrong.vals.iter_mut().for_each(|v| *v *= 2.0);
-    assert!(service.refactor(0, wrong).is_err(), "dimension mismatch");
+    assert!(service.refactor(SystemId(0), wrong).is_err(), "dimension mismatch");
     assert!(
         SolverService::new(ServiceConfig::default(), vec![]).is_err(),
         "no systems"
     );
+}
+
+#[test]
+fn register_and_retire_on_a_live_service() {
+    let a = gen::grid2d(14, 14);
+    let service = SolverService::with_shards(service_cfg(2, 0)).unwrap();
+    assert_eq!(service.system_count(), 0);
+    let epoch0 = service.route_epoch();
+
+    // register: the handle is analyzed/factored outside the service and
+    // moves in as a value; solving through the service must be
+    // bit-identical to solving on the handle before it moved
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let expect = sys.solve(&b).unwrap();
+    let id = service.register(sys).unwrap();
+    assert_eq!(service.system_count(), 1);
+    assert!(service.route_epoch() > epoch0, "register publishes an epoch");
+    assert_eq!(service.solve(id, b.clone()).unwrap(), expect);
+
+    // retire hands the owning handle back; it keeps solving bit-identically
+    let back = service.retire(id).unwrap();
+    assert_eq!(service.system_count(), 0);
+    assert_eq!(back.solve(&b).unwrap(), expect);
+
+    // the retired id is gone for good
+    assert!(service.submit(id, b.clone()).is_err(), "retired id rejected");
+    assert!(service.shard_of(id).is_none());
+
+    // ids are never reused
+    let sys2 = solver.analyze(&a).unwrap().factor().unwrap();
+    let id2 = service.register(sys2).unwrap();
+    assert_ne!(id2, id);
+    let _ = service.retire(id2).unwrap();
+}
+
+#[test]
+fn retire_drains_in_flight_tickets_first() {
+    let a = gen::grid2d(25, 25);
+    let b = gen::rhs_for_ones(&a);
+    // a 5ms tick holds the burst in the queue long enough for retire to
+    // land behind it
+    let service = SolverService::new(service_cfg(1, 5), vec![a.clone()]).unwrap();
+    let tickets: Vec<_> = (0..12)
+        .map(|_| service.submit(SystemId(0), b.clone()).unwrap())
+        .collect();
+    let handle = service.retire(SystemId(0)).unwrap();
+    // every ticket admitted before the retire resolved with a solution
+    for t in tickets {
+        let x = t.wait().unwrap();
+        assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-7));
+    }
+    assert_eq!(handle.n(), a.n);
+}
+
+#[test]
+fn migrate_under_traffic_is_bit_identical() {
+    let a = gen::power_network(240, 3);
+    let service = SolverService::new(service_cfg(2, 0), vec![a.clone()]).unwrap();
+    let reference = SolverBuilder::new()
+        .threads(1)
+        .build()
+        .unwrap()
+        .analyze(&a)
+        .unwrap()
+        .factor()
+        .unwrap();
+    let bs = rhs_set(a.n, 6, 11);
+    let expect: Vec<Vec<f64>> = bs.iter().map(|b| reference.solve(b).unwrap()).collect();
+    let id = SystemId(0);
+    let done = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|sc| {
+        for t in 0..4usize {
+            let (service, bs, expect, done) = (&service, &bs, &expect, &done);
+            sc.spawn(move || {
+                let mut rep = 0usize;
+                while !done.load(std::sync::atomic::Ordering::Relaxed) || rep < 10 {
+                    let q = (t + rep) % bs.len();
+                    let x = service.solve(id, bs[q].clone()).unwrap();
+                    assert_eq!(x, expect[q], "thread {t} rep {rep}");
+                    rep += 1;
+                    if rep > 400 {
+                        break; // safety valve
+                    }
+                }
+            });
+        }
+        // bounce the system between shards while the callers hammer it
+        for round in 0..20 {
+            service.migrate(id, round % 2).unwrap();
+        }
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    let st = service.stats();
+    assert_eq!(st.moves, 19, "19 of 20 bounces actually moved (first is a no-op)");
+}
+
+#[test]
+fn rebalance_moves_hot_systems_off_a_loaded_shard() {
+    let a = gen::grid2d(16, 16);
+    let b = gen::rhs_for_ones(&a);
+    // both systems forced onto shard 0 of 2: shard 1 starts idle
+    let service = SolverService::with_shards(service_cfg(2, 0)).unwrap();
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let s0 = solver.analyze(&a).unwrap().factor().unwrap();
+    let s1 = solver.analyze(&a).unwrap().factor().unwrap();
+    let id0 = service.register_on(s0, 0).unwrap();
+    let id1 = service.register_on(s1, 0).unwrap();
+    assert_eq!(service.shard_of(id0), Some(0));
+    assert_eq!(service.shard_of(id1), Some(0));
+    // drive traffic so both systems accumulate EWMA load
+    for _ in 0..30 {
+        service.solve(id0, b.clone()).unwrap();
+        service.solve(id1, b.clone()).unwrap();
+    }
+    assert!(
+        service.system_load(id0).unwrap().ewma > 0.0,
+        "traffic must register in the EWMA"
+    );
+    let moved = service.rebalance().unwrap();
+    assert!(moved >= 1, "an all-on-one placement must rebalance");
+    let shards = [service.shard_of(id0).unwrap(), service.shard_of(id1).unwrap()];
+    assert_ne!(shards[0], shards[1], "systems spread across shards");
+    // traffic still serves correctly after the move
+    let x = service.solve(id0, b.clone()).unwrap();
+    assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-7));
+    assert_eq!(service.stats().moves as usize, moved);
+}
+
+#[test]
+fn deadline_lane_dispatches_before_bulk() {
+    let a = gen::grid2d(20, 20);
+    let b = gen::rhs_for_ones(&a);
+    // a long tick holds one drain window open while both lanes fill
+    let cfg = ServiceConfig {
+        tick: Duration::from_millis(10),
+        max_batch: 4,
+        ..service_cfg(1, 10)
+    };
+    let service = SolverService::new(cfg, vec![a.clone()]).unwrap();
+    let bulk: Vec<_> = (0..6)
+        .map(|_| service.submit(SystemId(0), b.clone()).unwrap())
+        .collect();
+    let urgent = service
+        .submit_with(
+            SystemId(0),
+            b.clone(),
+            Priority::Deadline(Instant::now() + Duration::from_millis(1)),
+        )
+        .unwrap();
+    // all resolve, bit-identically
+    let xu = urgent.wait().unwrap();
+    for t in bulk {
+        assert_eq!(t.wait().unwrap(), xu);
+    }
+    let st = service.stats();
+    assert_eq!(st.requests, 7);
+    assert_eq!(st.deadline_requests, 1);
+}
+
+#[test]
+fn adaptive_tick_stays_bounded_and_batches() {
+    let a = gen::grid2d(24, 24);
+    let b = gen::rhs_for_ones(&a);
+    let cfg = ServiceConfig {
+        tick: Duration::from_micros(100),
+        tick_max: Duration::from_millis(2),
+        ..service_cfg(1, 0)
+    };
+    let service = SolverService::new(cfg, vec![a.clone()]).unwrap();
+    // sustained concurrent bursts: the window should stretch and coalesce
+    std::thread::scope(|sc| {
+        for _ in 0..4 {
+            let (service, b) = (&service, &b);
+            sc.spawn(move || {
+                for _ in 0..30 {
+                    let x = service.solve(SystemId(0), b.clone()).unwrap();
+                    assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-7));
+                }
+            });
+        }
+    });
+    let st = service.stats();
+    assert_eq!(st.rhs_solved, 120);
+    assert!(
+        st.max_tick <= Duration::from_millis(2),
+        "adaptive window {:?} exceeded tick_max",
+        st.max_tick
+    );
+}
+
+#[test]
+fn empty_elastic_service_shuts_down_cleanly() {
+    let service = SolverService::with_shards(service_cfg(4, 0)).unwrap();
+    assert_eq!(service.shard_count(), 4);
+    assert_eq!(service.system_count(), 0);
+    assert_eq!(service.stats().requests, 0);
+    drop(service); // joins 4 idle dispatchers without work
 }

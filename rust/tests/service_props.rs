@@ -1,0 +1,200 @@
+//! Property tests for the coalescing queue's deterministic core and for
+//! the service's scheduling invariants, driven by the crate's
+//! hand-rolled seed harness (`hylu::testutil::for_each_seed` — proptest
+//! is not in the offline registry; failures report the seed for exact
+//! replay).
+//!
+//! Invariants covered:
+//! - drain order: FIFO within each priority lane; the deadline lane is
+//!   earliest-deadline-first; bulk is never starved beyond the
+//!   documented bound; no item is lost or duplicated;
+//! - adaptive tick: the window stays within `[0, tick_max]` under
+//!   arbitrary drain/idle traces, collapses on idle, and a static
+//!   configuration never moves;
+//! - end-to-end: batches never exceed `max_batch`, and every ticket of
+//!   an arbitrary arrival trace resolves bit-identically to the oracle.
+
+use std::time::{Duration, Instant};
+
+use hylu::prelude::*;
+use hylu::service::queue::{AdaptiveTick, Drained, LaneQueue};
+use hylu::sparse::gen;
+use hylu::testutil::{for_each_seed, Prng};
+
+/// Random trace of pushes with lane tags; returns the drained order and
+/// the pushed (seq, lane) pairs for cross-checking.
+fn random_drain(
+    rng: &mut Prng,
+    bound: usize,
+) -> (Vec<Drained<usize>>, Vec<(u64, Option<Duration>)>) {
+    let t0 = Instant::now();
+    let mut q = LaneQueue::new();
+    let npush = rng.range(1, 60);
+    let mut pushed = Vec::with_capacity(npush);
+    for i in 0..npush {
+        let seq = i as u64;
+        if rng.below(3) == 0 {
+            // deadline lane, deadlines in arbitrary order (incl. ties)
+            let off = Duration::from_micros(rng.below(8) as u64 * 100);
+            q.push(seq, Priority::Deadline(t0 + off), i);
+            pushed.push((seq, Some(off)));
+        } else {
+            q.push(seq, Priority::Bulk, i);
+            pushed.push((seq, None));
+        }
+    }
+    (q.drain_ordered(bound), pushed)
+}
+
+#[test]
+fn property_drain_preserves_lane_fifo_and_loses_nothing() {
+    for_each_seed(40, |rng| {
+        let bound = rng.range(1, 6);
+        let (out, pushed) = random_drain(rng, bound);
+        assert_eq!(out.len(), pushed.len(), "no item lost or duplicated");
+        // each item appears exactly once
+        let mut seen = vec![false; pushed.len()];
+        for d in &out {
+            assert!(!seen[d.item], "item {} duplicated", d.item);
+            seen[d.item] = true;
+        }
+        // FIFO within the bulk lane: seq strictly increasing
+        let bulk_seqs: Vec<u64> = out
+            .iter()
+            .filter(|d| d.deadline.is_none())
+            .map(|d| d.seq)
+            .collect();
+        assert!(bulk_seqs.windows(2).all(|w| w[0] < w[1]), "bulk lane FIFO");
+        // deadline lane: earliest deadline first, ties by admission order
+        let dl: Vec<(Instant, u64)> = out
+            .iter()
+            .filter_map(|d| d.deadline.map(|at| (at, d.seq)))
+            .collect();
+        assert!(
+            dl.windows(2).all(|w| w[0] <= w[1]),
+            "deadline lane sorted by (deadline, seq)"
+        );
+    });
+}
+
+#[test]
+fn property_bulk_never_starves_beyond_the_bound() {
+    for_each_seed(40, |rng| {
+        let bound = rng.range(1, 6);
+        let (out, _) = random_drain(rng, bound);
+        // between consecutive bulk items (and before the first one, if
+        // any bulk was queued) at most `bound` deadline items appear
+        let mut run = 0usize;
+        let bulk_remaining = out.iter().filter(|d| d.deadline.is_none()).count();
+        let mut left = bulk_remaining;
+        for d in &out {
+            if d.deadline.is_some() {
+                run += 1;
+                assert!(
+                    left == 0 || run <= bound,
+                    "bulk item delayed by {run} deadline items (bound {bound})"
+                );
+            } else {
+                run = 0;
+                left -= 1;
+            }
+        }
+    });
+}
+
+#[test]
+fn property_adaptive_tick_stays_within_bounds() {
+    for_each_seed(60, |rng| {
+        let tick = Duration::from_micros(rng.below(400) as u64);
+        let max = Duration::from_micros(rng.range(1, 4000) as u64);
+        let mut t = AdaptiveTick::new(tick, max);
+        assert!(t.is_adaptive());
+        let max_batch = rng.range(2, 64);
+        for _ in 0..rng.range(10, 300) {
+            match rng.below(4) {
+                0 => t.on_idle(),
+                _ => t.on_drain(rng.below(2 * max_batch), max_batch),
+            }
+            assert!(
+                t.window() <= max,
+                "window {:?} exceeded tick_max {:?}",
+                t.window(),
+                max
+            );
+        }
+        t.on_idle();
+        assert_eq!(t.window(), Duration::ZERO, "idle collapses the window");
+    });
+}
+
+#[test]
+fn property_static_tick_is_inert() {
+    for_each_seed(20, |rng| {
+        let tick = Duration::from_micros(rng.below(500) as u64);
+        let mut t = AdaptiveTick::new(tick, Duration::ZERO);
+        assert!(!t.is_adaptive());
+        for _ in 0..50 {
+            match rng.below(3) {
+                0 => t.on_idle(),
+                _ => t.on_drain(rng.below(128), 64),
+            }
+            assert_eq!(t.window(), tick, "static window never moves");
+        }
+    });
+}
+
+#[test]
+fn property_service_batches_capped_and_bit_identical() {
+    // arbitrary arrival traces against a real service: batches never
+    // exceed max_batch, every ticket resolves with the oracle's bits
+    let a = gen::grid2d(14, 14);
+    let reference = SolverBuilder::new()
+        .threads(1)
+        .build()
+        .unwrap()
+        .analyze(&a)
+        .unwrap()
+        .factor()
+        .unwrap();
+    let mut seed_rng = Prng::new(0xBEEF);
+    let bs: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..a.n).map(|_| seed_rng.normal()).collect())
+        .collect();
+    let expect: Vec<Vec<f64>> = bs.iter().map(|b| reference.solve(b).unwrap()).collect();
+    for_each_seed(6, |rng| {
+        let max_batch = rng.range(1, 9);
+        let cfg = ServiceConfig {
+            shards: 1,
+            solver: SolverConfig {
+                threads: 1,
+                ..SolverConfig::default()
+            },
+            max_batch,
+            tick: Duration::from_micros(500),
+            ..ServiceConfig::default()
+        };
+        let service = SolverService::new(cfg, vec![a.clone()]).unwrap();
+        let nreq = rng.range(1, 40);
+        let mut tickets = Vec::with_capacity(nreq);
+        for _ in 0..nreq {
+            let q = rng.below(bs.len());
+            let prio = if rng.below(4) == 0 {
+                Priority::Deadline(Instant::now() + Duration::from_micros(rng.below(500) as u64))
+            } else {
+                Priority::Bulk
+            };
+            tickets.push((q, service.submit_with(SystemId(0), bs[q].clone(), prio).unwrap()));
+        }
+        for (q, t) in tickets {
+            assert_eq!(t.wait().unwrap(), expect[q], "rhs {q}");
+        }
+        let st = service.stats();
+        assert_eq!(st.requests as usize, nreq);
+        assert_eq!(st.rhs_solved as usize, nreq);
+        assert!(
+            st.max_batch <= max_batch,
+            "batch {} exceeded cap {max_batch}",
+            st.max_batch
+        );
+    });
+}

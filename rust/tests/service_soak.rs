@@ -1,0 +1,235 @@
+//! Deterministic service soak: client threads hammer solve/refactor on
+//! stable systems while a chaos thread registers, solves, retires, and
+//! rebalances systems on the same live service.
+//!
+//! Every completed solve is asserted **bit-identical** to a sequential
+//! oracle:
+//!
+//! - the solver pipeline is deterministic, so an identically configured
+//!   standalone handle produces the same analysis/factors;
+//! - batched service columns are bit-identical to independent scalar
+//!   solves (the engine's multi-RHS contract);
+//! - refactor on the stored pivot order depends only on the current
+//!   values, so the oracle can replay the same value history and record
+//!   the expected solution per version.
+//!
+//! Each stable system has exactly one owner thread (the only submitter
+//! for that id), so the owner always knows which value version its next
+//! solve must observe — `refactor` blocks until applied and is a queue
+//! barrier, making the per-system order deterministic even while the
+//! chaos thread migrates the system between shards mid-traffic.
+//!
+//! Ticket accounting: submissions and completions are counted; every
+//! accepted ticket resolves exactly once (mpsc gives at-most-once; the
+//! counts give at-least-once). The final phase asserts clean drain on
+//! drop.
+//!
+//! The shard count comes from `HYLU_TEST_SHARDS` when set (the CI
+//! matrix runs {1, 4}); otherwise both are exercised in-process.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+
+const STABLE_SYSTEMS: usize = 4;
+const VERSIONS: usize = 4; // value versions per stable system
+const ROUNDS: usize = 24; // solves per owner thread
+const CHAOS_CYCLES: usize = 12;
+
+/// Per-system value history: version v scales the base values by
+/// `1 + 0.25 * (s + 1) * v`-ish factors, deterministic per (s, v).
+fn version_vals(base: &Csr, sys: usize, version: usize) -> Vec<f64> {
+    let f = 1.0 + 0.2 * (sys + 1) as f64 + 0.35 * version as f64;
+    base.vals.iter().map(|v| v * f).collect()
+}
+
+struct Oracle {
+    /// expected[s][v] = bitwise-expected solution of system s at value
+    /// version v for that system's fixed rhs.
+    expected: Vec<Vec<Vec<f64>>>,
+    rhs: Vec<Vec<f64>>,
+}
+
+/// Replay the exact value history each service system will live through
+/// on identically configured standalone handles.
+fn build_oracle(base: &Csr) -> Oracle {
+    let mut rng = Prng::new(0xD5);
+    let rhs: Vec<Vec<f64>> = (0..STABLE_SYSTEMS)
+        .map(|_| (0..base.n).map(|_| rng.normal()).collect())
+        .collect();
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let mut expected = Vec::with_capacity(STABLE_SYSTEMS);
+    for s in 0..STABLE_SYSTEMS {
+        let mut a = base.clone();
+        a.vals = version_vals(base, s, 0);
+        let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+        let mut per_version = Vec::with_capacity(VERSIONS);
+        per_version.push(sys.solve(&rhs[s]).unwrap());
+        for v in 1..VERSIONS {
+            sys.refactor(&version_vals(base, s, v)).unwrap();
+            per_version.push(sys.solve(&rhs[s]).unwrap());
+        }
+        expected.push(per_version);
+    }
+    Oracle { expected, rhs }
+}
+
+fn soak_cfg(shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        shards,
+        solver: SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        },
+        max_batch: 16,
+        queue_cap: 1024,
+        // adaptive window: stretches under the hammering, collapses when
+        // a shard idles — the soak also covers the controller
+        tick: Duration::from_micros(50),
+        tick_max: Duration::from_millis(1),
+        ..ServiceConfig::default()
+    }
+}
+
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("HYLU_TEST_SHARDS") {
+        Ok(v) => vec![v.parse().expect("HYLU_TEST_SHARDS must be a number")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+#[test]
+fn soak_register_retire_rebalance_under_traffic() {
+    let base = gen::power_network(220, 5);
+    let oracle = build_oracle(&base);
+    for shards in shard_counts() {
+        soak_once(&base, &oracle, shards);
+    }
+}
+
+fn soak_once(base: &Csr, oracle: &Oracle, shards: usize) {
+    let service = SolverService::with_shards(soak_cfg(shards)).unwrap();
+    // stable systems enter at version 0, one engine each (threads=1 so
+    // dispatch is deterministic), ids recorded per slot
+    let mut ids = Vec::with_capacity(STABLE_SYSTEMS);
+    for s in 0..STABLE_SYSTEMS {
+        let solver = SolverBuilder::new().threads(1).build().unwrap();
+        let mut a = base.clone();
+        a.vals = version_vals(base, s, 0);
+        let sys = solver.analyze(&a).unwrap().factor().unwrap();
+        ids.push(service.register(sys).unwrap());
+    }
+    let submitted = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+
+    std::thread::scope(|sc| {
+        // owner threads: the ONLY submitters for their system, so each
+        // solve's expected version is known exactly
+        for s in 0..STABLE_SYSTEMS {
+            let (service, oracle, ids) = (&service, oracle, &ids);
+            let (submitted, completed) = (&submitted, &completed);
+            sc.spawn(move || {
+                let id = ids[s];
+                let mut version = 0usize;
+                for round in 0..ROUNDS {
+                    // bump the value version at deterministic points
+                    if round > 0 && round % (ROUNDS / VERSIONS) == 0 && version + 1 < VERSIONS {
+                        version += 1;
+                        let mut a = base.clone();
+                        a.vals = version_vals(base, s, version);
+                        service.refactor(id, a).unwrap();
+                    }
+                    // alternate lanes: deadline traffic must see the
+                    // same bits as bulk traffic
+                    let prio = if round % 3 == 0 {
+                        Priority::Deadline(Instant::now() + Duration::from_micros(200))
+                    } else {
+                        Priority::Bulk
+                    };
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    let x = service
+                        .solve_with(id, oracle.rhs[s].clone(), prio)
+                        .unwrap();
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    assert_eq!(
+                        x, oracle.expected[s][version],
+                        "system {s} round {round} version {version} (shards {shards})"
+                    );
+                }
+            });
+        }
+
+        // chaos thread: live topology churn against the same service
+        {
+            let (service, ids) = (&service, &ids);
+            sc.spawn(move || {
+                let chaos_solver = SolverBuilder::new().threads(1).build().unwrap();
+                let b = gen::rhs_for_ones(base);
+                for cycle in 0..CHAOS_CYCLES {
+                    // register a transient system, prove it serves
+                    // bit-identically to its pre-registration self,
+                    // then retire it and prove the value came back intact
+                    let sys = chaos_solver.analyze(base).unwrap().factor().unwrap();
+                    let expect = sys.solve(&b).unwrap();
+                    let id = service.register(sys).unwrap();
+                    assert_eq!(
+                        service.solve(id, b.clone()).unwrap(),
+                        expect,
+                        "transient system, cycle {cycle}"
+                    );
+                    let back = service.retire(id).unwrap();
+                    assert_eq!(back.solve(&b).unwrap(), expect, "retired handle, cycle {cycle}");
+
+                    // bounce a stable system between shards mid-traffic
+                    // and let the load balancer shuffle the rest
+                    let victim = ids[cycle % STABLE_SYSTEMS];
+                    service.migrate(victim, cycle % shards).unwrap();
+                    service.rebalance().unwrap();
+
+                    // a retired id must stay dead
+                    assert!(service.submit(id, b.clone()).is_err(), "retired id rejected");
+                }
+            });
+        }
+    });
+
+    // no lost or double-completed tickets
+    assert_eq!(
+        submitted.load(Ordering::Relaxed),
+        completed.load(Ordering::Relaxed),
+        "every accepted ticket resolves exactly once"
+    );
+    assert_eq!(
+        submitted.load(Ordering::Relaxed),
+        (STABLE_SYSTEMS * ROUNDS) as u64
+    );
+
+    let st = service.stats();
+    assert!(
+        st.rhs_solved >= (STABLE_SYSTEMS * ROUNDS) as u64,
+        "owner traffic plus chaos solves all dispatched"
+    );
+    assert_eq!(st.registers as usize, STABLE_SYSTEMS + CHAOS_CYCLES);
+    assert_eq!(st.retires as usize, CHAOS_CYCLES);
+    assert!(
+        st.max_tick <= Duration::from_millis(1),
+        "adaptive window {:?} within tick_max",
+        st.max_tick
+    );
+    // the routing epoch advanced once per topology change at least
+    assert!(service.route_epoch() >= 1 + STABLE_SYSTEMS + 2 * CHAOS_CYCLES);
+
+    // clean drain on drop: a burst left in the queue resolves after the
+    // service value is gone
+    let burst: Vec<_> = (0..10)
+        .map(|_| service.submit(ids[0], oracle.rhs[0].clone()).unwrap())
+        .collect();
+    drop(service);
+    for t in burst {
+        let x = t.wait().unwrap();
+        assert_eq!(x, oracle.expected[0][VERSIONS - 1], "drained after drop");
+    }
+}
