@@ -2,16 +2,19 @@
 //!
 //! Seeds the perf trajectory for the SIMD microkernel subsystem:
 //!
-//! 1. `gemm_sub` per tier (scalar / portable / native) across panel
-//!    shapes — the headline is native >= 2x scalar on 64x64x64;
+//! 1. `gemm_sub` per tier (scalar / portable / native / avx512) across
+//!    panel shapes — the headline is native >= 2x scalar on 64x64x64;
 //! 2. `trsm_right_upper` per tier across triangle sizes;
 //! 3. block substitution at k in {1, 4, 16} per tier, against the
 //!    k x (single-RHS scalar sweep) baseline — the headline is k=16
-//!    block >= 1.5x that baseline.
+//!    block >= 1.5x that baseline;
+//! 4. tuned-vs-default A/B: every enumerated autotuner GEMM tile
+//!    variant and packed-A vs strided-A against the active tier's
+//!    default kernel — the rows the `hylu gauntlet` artifact records.
 
 use hylu::bench_harness::{environment, fmt_time, time_best, Table};
 use hylu::numeric::factor::{factor, NativeGemm};
-use hylu::numeric::kernels::{self, KernelTier};
+use hylu::numeric::kernels::{self, tuner, GemmVariant, KernelPlan, KernelTier};
 use hylu::numeric::select::KernelMode;
 use hylu::numeric::{LuFactors, PivotConfig};
 use hylu::solve::{backward, backward_block_with, forward, forward_block_with};
@@ -19,11 +22,15 @@ use hylu::sparse::gen;
 use hylu::symbolic::{analyze_pattern, MergePolicy};
 use hylu::testutil::Prng;
 
+const ALL_TIERS: [KernelTier; 4] = [
+    KernelTier::Scalar,
+    KernelTier::Portable,
+    KernelTier::Native,
+    KernelTier::Avx512,
+];
+
 fn tiers() -> Vec<KernelTier> {
-    [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
-        .into_iter()
-        .filter(|t| t.available())
-        .collect()
+    ALL_TIERS.into_iter().filter(|t| t.available()).collect()
 }
 
 fn main() {
@@ -41,23 +48,26 @@ fn main() {
     if !KernelTier::Native.available() {
         println!("(native tier unavailable on this machine: AVX2+FMA not detected)");
     }
+    if !KernelTier::Avx512.available() {
+        println!(
+            "(avx512 tier unavailable: needs avx512f+avx512vl at runtime AND \
+             RUSTFLAGS=-C target-feature=+avx512f,+avx512vl at compile time)"
+        );
+    }
 
     // --- 1. gemm_sub tiers ---
     let mut rng = Prng::new(11);
     let mut t1 = Table::new(
         "gemm_sub dispatch tiers (C[mxn] -= A[mxk] B[kxn], per-call time)",
-        &["m,k,n", "scalar", "portable", "native", "native/scalar"],
+        &["m,k,n", "scalar", "portable", "native", "avx512", "native/scalar"],
     );
     let mut native_64 = f64::NAN;
     for (m, k, n) in [(16usize, 16usize, 16usize), (32, 32, 32), (64, 64, 64), (64, 64, 192)] {
         let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
-        let mut times = [f64::NAN; 3];
-        for (ti, tier) in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
-            .into_iter()
-            .enumerate()
-        {
+        let mut times = [f64::NAN; 4];
+        for (ti, tier) in ALL_TIERS.into_iter().enumerate() {
             if !tier.available() {
                 continue;
             }
@@ -77,6 +87,7 @@ fn main() {
                 fmt_time(times[0]),
                 fmt_time(times[1]),
                 if times[2].is_nan() { "n/a".into() } else { fmt_time(times[2]) },
+                if times[3].is_nan() { "n/a".into() } else { fmt_time(times[3]) },
                 if speed.is_nan() { "n/a".into() } else { format!("{speed:.2}x") },
             ],
             if speed.is_finite() { speed } else { 1.0 },
@@ -94,7 +105,7 @@ fn main() {
     // --- 2. trsm tiers ---
     let mut t2 = Table::new(
         "trsm_right_upper dispatch tiers (m rows vs len-wide triangle)",
-        &["m,len", "scalar", "portable", "native", "native/scalar"],
+        &["m,len", "scalar", "portable", "native", "avx512", "native/scalar"],
     );
     for (m, len) in [(32usize, 16usize), (64, 48), (64, 96)] {
         let ldu = len + 2;
@@ -107,11 +118,8 @@ fn main() {
         }
         let ldx = len;
         let x0: Vec<f64> = (0..m * ldx).map(|_| rng.normal()).collect();
-        let mut times = [f64::NAN; 3];
-        for (ti, tier) in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
-            .into_iter()
-            .enumerate()
-        {
+        let mut times = [f64::NAN; 4];
+        for (ti, tier) in ALL_TIERS.into_iter().enumerate() {
             if !tier.available() {
                 continue;
             }
@@ -142,6 +150,7 @@ fn main() {
                 fmt_time(times[0]),
                 fmt_time(times[1]),
                 if times[2].is_nan() { "n/a".into() } else { fmt_time(times[2]) },
+                if times[3].is_nan() { "n/a".into() } else { fmt_time(times[3]) },
                 if speed.is_nan() { "n/a".into() } else { format!("{speed:.2}x") },
             ],
             if speed.is_finite() { speed } else { 1.0 },
@@ -210,6 +219,74 @@ fn main() {
              scalar baseline (target >= 1.5x): {}",
             native_k16,
             if native_k16 >= 1.5 { "PASS" } else { "MISS" }
+        );
+    }
+
+    // --- 4. autotuner variants: tuned vs tier default ---
+    // The same A/B rows `hylu gauntlet` records in its JSON artifact:
+    // every enumerated GEMM tile variant, plus packed-A vs strided-A,
+    // against the active tier's default kernel on a representative
+    // sup-sup shape (strided A, like a panel read in place).
+    let tier = kernels::active_tier();
+    let (m, k, n) = (48usize, 32usize, 96usize);
+    let lda = k + 8;
+    let a: Vec<f64> = (0..m * lda).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0; m * n];
+    let t_def = time_best(30, || {
+        kernels::gemm_sub(tier, &mut c, n, &a, lda, &b, n, m, k, n);
+        std::hint::black_box(c[0]);
+    });
+    let mut t4 = Table::new(
+        "autotuner GEMM variants vs tier default (48x32x96, strided A)",
+        &["variant", "default", "variant", "default/variant"],
+    );
+    let mut best_ratio = f64::NAN;
+    for &(mr, nr, ku) in tuner::TILE_VARIANTS.iter() {
+        let plan = KernelPlan {
+            gemm: GemmVariant::Tiled { mr, nr, ku },
+            ..Default::default()
+        };
+        let t_var = time_best(30, || {
+            kernels::gemm_sub_planned(tier, &plan, &mut c, n, &a, lda, &b, n, m, k, n);
+            std::hint::black_box(c[0]);
+        });
+        let ratio = t_def / t_var;
+        // f64::max ignores the NaN seed on the first row
+        best_ratio = best_ratio.max(ratio);
+        t4.row(
+            vec![
+                format!("tile {mr}x{nr} k-unroll {ku}"),
+                fmt_time(t_def),
+                fmt_time(t_var),
+                format!("{ratio:.2}x"),
+            ],
+            ratio,
+        );
+    }
+    let mut packed = Vec::new();
+    let t_packed = time_best(30, || {
+        kernels::pack_rows(&mut packed, &a, lda, m, k);
+        kernels::gemm_sub(tier, &mut c, n, &packed, k, &b, n, m, k, n);
+        std::hint::black_box(c[0]);
+    });
+    t4.row(
+        vec![
+            "packed-A (pack + gemm)".into(),
+            fmt_time(t_def),
+            fmt_time(t_packed),
+            format!("{:.2}x", t_def / t_packed),
+        ],
+        t_def / t_packed,
+    );
+    t4.print();
+    if best_ratio.is_finite() {
+        println!(
+            "acceptance: best enumerated variant = {:.2}x the {} default on 48x32x96 \
+             (tuner picks the max of these per pattern; >= 1x by construction): {}",
+            best_ratio,
+            tier,
+            if best_ratio >= 0.95 { "PASS" } else { "MISS" }
         );
     }
 }

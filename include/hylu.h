@@ -34,7 +34,31 @@
  * Panics: a caught internal panic (HYLU_ERR_PANIC) from analyze/
  * factorize/refactorize poisons the handle — factors may be
  * inconsistent, and every later call returns HYLU_ERR_INVALID until a
- * fresh hylu_analyze resets the state. */
+ * fresh hylu_analyze resets the state.
+ *
+ * Tuning knobs (process-wide environment variables; the ABI itself is
+ * unchanged — plans live inside the analysis):
+ *
+ *   HYLU_KERNEL=scalar|portable|native|avx512
+ *       Pin the dense-microkernel dispatch tier (default: best
+ *       available; avx512 additionally needs a build with
+ *       RUSTFLAGS="-C target-feature=+avx512f,+avx512vl").
+ *   HYLU_TUNING=off|quick|full
+ *       Per-pattern kernel autotuning level applied at hylu_analyze
+ *       time (default off). quick/full search GEMM tile variants,
+ *       A-operand packing, and TRSM crossover thresholds against the
+ *       analyzed pattern's supernode shape histogram; the winning plan
+ *       is cached in the analysis, so hylu_refactorize/hylu_solve pay
+ *       no tuning cost. Results are unchanged to solver accuracy
+ *       (GEMM variants are bit-identical to the scalar reference).
+ *   HYLU_TUNE_CACHE=dir
+ *       Persist tuned plans to `dir` keyed by (version, tier, pattern
+ *       hash) and reload them on the next analyze of the same pattern
+ *       — a process restart starts warm. Corrupt or version-bumped
+ *       entries are ignored; writes are best-effort.
+ *   HYLU_PROBE=off
+ *       Disable the kernel-selection throughput calibration probe
+ *       (pins the selection crossovers to their reference tuning). */
 
 #ifndef HYLU_H
 #define HYLU_H

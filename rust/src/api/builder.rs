@@ -2,6 +2,7 @@
 //! refinement overrides ([`SolveOpts`]).
 
 use crate::coordinator::{RefineParams, SolverConfig};
+use crate::numeric::kernels::Tuning;
 use crate::numeric::select::KernelMode;
 use crate::ordering::OrderingChoice;
 use crate::Result;
@@ -85,6 +86,17 @@ impl SolverBuilder {
     /// pre-scaled diagonally-dominant inputs).
     pub fn static_pivoting(mut self, on: bool) -> SolverBuilder {
         self.cfg.static_pivoting = on;
+        self
+    }
+
+    /// Per-pattern kernel autotuning level (default [`Tuning::Off`]).
+    /// `Quick`/`Full` search GEMM tile / A-packing / TRSM-crossover
+    /// variants against the analyzed pattern's supernode shape histogram
+    /// at analyze time; warm refactor+solve replays the winner for free.
+    /// Overridable process-wide via the `HYLU_TUNING` env var
+    /// (`off`/`quick`/`full`).
+    pub fn tuning(mut self, t: Tuning) -> SolverBuilder {
+        self.cfg.tuning = t;
         self
     }
 

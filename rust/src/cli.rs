@@ -6,11 +6,23 @@
 //! hylu inspect --matrix FILE.mtx | --gen CLASS:N
 //! hylu gen    --gen CLASS:N --out FILE.mtx
 //! hylu bench  [--suite small|full] [--threads T]
-//!             [--kernel scalar|portable|native|auto]
+//!             [--kernel scalar|portable|native|avx512|auto]
+//!             [--tuning off|quick|full]
+//! hylu tune   --matrix FILE.mtx | --gen CLASS:N [--tuning quick|full]
+//!             [--threads T]
+//! hylu gauntlet [--suite small|full] [--threads T] [--reps R]
+//!             [--tuning quick|full] [--out FILE.json]
 //! hylu serve  --matrix FILE.mtx | --gen CLASS:N [--systems M] [--shards S]
 //!             [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]
 //!             [--tick-max-us U] [--elastic]
 //! ```
+//!
+//! `tune` runs the per-pattern kernel autotuner on one matrix and prints
+//! the searched [`KernelPlan`](crate::numeric::kernels::KernelPlan).
+//! `gauntlet` runs the fig4–fig11 bench suite once with autotuning and
+//! once without (repeated refactor+solve per matrix) plus the kernel-
+//! variant A/B micro rows, and writes the whole trajectory to a single
+//! `BENCH_<date>.json` artifact (schema in DESIGN.md §5).
 //!
 //! `--rhs K` batches K right-hand sides through the engine's multi-RHS
 //! path ([`LinearSystem::solve_many`]) — the traffic-serving scenario.
@@ -33,9 +45,9 @@ use std::path::Path;
 
 use crate::api::{Factored, LinearSystem, Solver, SolverBuilder};
 use crate::baseline;
-use crate::bench_harness::{environment, fmt_time, Table};
+use crate::bench_harness::{environment, fmt_time, time_best, Table};
 use crate::bench_suite;
-use crate::numeric::kernels::{self, KernelTier};
+use crate::numeric::kernels::{self, tuner, KernelTier, Tuning};
 use crate::numeric::select::KernelMode;
 use crate::service::{ServiceConfig, SolverService, SystemId};
 use crate::sparse::csr::Csr;
@@ -151,7 +163,24 @@ pub fn config_from(args: &Args) -> Result<SolverBuilder> {
     if args.has("xla") {
         b = b.configure(|cfg| cfg.use_xla = true);
     }
+    if let Some(t) = tuning_from(args, Tuning::Off)? {
+        b = b.tuning(t);
+    }
     Ok(b)
+}
+
+/// Parse `--tuning off|quick|full`; a bare `--tuning` means `default`.
+/// Returns `None` when the flag is absent.
+fn tuning_from(args: &Args, default: Tuning) -> Result<Option<Tuning>> {
+    if !args.has("tuning") {
+        return Ok(None);
+    }
+    match args.get("tuning") {
+        None => Ok(Some(default)),
+        Some(v) => Tuning::parse(v)
+            .map(Some)
+            .ok_or_else(|| Error::Invalid(format!("unknown tuning level {v} (off|quick|full)"))),
+    }
 }
 
 /// Run the CLI; returns the process exit code.
@@ -166,15 +195,18 @@ pub fn run(argv: &[String]) -> i32 {
         Some("inspect") => cmd_inspect(&args),
         Some("gen") => cmd_gen(&args),
         Some("bench") => cmd_bench(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("gauntlet") => cmd_gauntlet(&args),
         Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: hylu <solve|inspect|gen|bench|serve> [--matrix F | --gen CLASS:N] \
+                "usage: hylu <solve|inspect|gen|bench|tune|gauntlet|serve> \
+                 [--matrix F | --gen CLASS:N] \
                  [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
                  [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
                  [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
-                 [--tick-max-us U] [--elastic] \
-                 (bench: --kernel scalar|portable|native|auto pins the dispatch tier)"
+                 [--tick-max-us U] [--elastic] [--tuning off|quick|full] [--reps R] \
+                 (bench: --kernel scalar|portable|native|avx512|auto pins the dispatch tier)"
             );
             // usage errors share Error::Invalid's stable code
             return Error::Invalid(String::new()).code();
@@ -290,12 +322,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         if k != "auto" {
             let tier = KernelTier::parse(k).ok_or_else(|| {
                 Error::Invalid(format!(
-                    "unknown kernel tier {k} (scalar|portable|native|auto)"
+                    "unknown kernel tier {k} (scalar|portable|native|avx512|auto)"
                 ))
             })?;
             kernels::set_tier(tier);
         }
     }
+    let tuning = tuning_from(args, Tuning::Quick)?;
     let threads = flag_usize(args, "threads", 0)?;
     let suite = match args.get("suite").unwrap_or("small") {
         "full" => bench_suite::suite37(),
@@ -318,7 +351,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
     for bm in &suite {
         let a = (bm.build)();
-        let hylu = SolverBuilder::new().threads(threads).build()?;
+        let mut hb = SolverBuilder::new().threads(threads);
+        if let Some(t) = tuning {
+            hb = hb.tuning(t);
+        }
+        let hylu = hb.build()?;
         let base = Solver::from_config(baseline::pardiso_like(threads))?;
         let b = gen::rhs_for_ones(&a);
         let t_h = run_once(&hylu, &a, &b)?;
@@ -353,6 +390,248 @@ fn flag_usize(args: &Args, key: &str, default: usize) -> Result<usize> {
             .map_err(|_| Error::Invalid(format!("bad --{key}"))),
         None => Ok(default),
     }
+}
+
+/// Run the per-pattern autotuner on one matrix and report the winning
+/// kernel plan (and what it was searched against).
+fn cmd_tune(args: &Args) -> Result<()> {
+    let (name, a) = load_matrix(args)?;
+    let tuning = tuning_from(args, Tuning::Quick)?.unwrap_or(Tuning::Quick);
+    let solver = config_from(args)?.tuning(tuning).build()?;
+    let tier = kernels::active_tier();
+    let t0 = std::time::Instant::now();
+    let sys = solver.analyze(a)?;
+    let t_analyze = t0.elapsed().as_secs_f64();
+    let an = sys.analysis();
+    println!("matrix     : {name} (n={}, nnz={})", an.stats.n, an.stats.nnz);
+    println!("tier       : {tier}");
+    println!("tuning     : {tuning}");
+    println!("analyze    : {} (autotune included)", fmt_time(t_analyze));
+    let hist = tuner::shape_histogram(&an.sym, 8);
+    if hist.is_empty() {
+        println!("histogram  : no supernode GEMM shapes (plan defaults)");
+    } else {
+        println!("histogram  : top sup-sup GEMM shapes (m x k x n, weight)");
+        for s in &hist {
+            println!("             {:>4} x {:>4} x {:>4}  {:.3e}", s.m, s.k, s.n, s.weight);
+        }
+    }
+    println!("plan       : {}", an.plan.kernel);
+    match std::env::var("HYLU_TUNE_CACHE") {
+        Ok(dir) if !dir.is_empty() => println!("disk cache : {dir}"),
+        _ => println!("disk cache : off (set HYLU_TUNE_CACHE=dir to persist plans)"),
+    }
+    Ok(())
+}
+
+/// One analyze+factor, then best-of-`reps` timed refactor+solve cycles —
+/// the repeated-solve figure of merit. Returns (best cycle seconds,
+/// rendered kernel plan).
+fn repeated_cycle(
+    solver: &Solver,
+    a: &Csr,
+    b: &[f64],
+    reps: usize,
+) -> Result<(f64, String)> {
+    let vals = a.vals.clone();
+    let mut sys = solver.analyze(a)?.factor()?;
+    let plan = sys.analysis().plan.kernel.to_string();
+    let mut x = Vec::new();
+    sys.solve_into(b, &mut x)?; // warm-up: grow every arena once
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        sys.refactor(&vals)?;
+        sys.solve_into(b, &mut x)?;
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    Ok((best, plan))
+}
+
+/// Deterministic fill for kernel A/B operands (no RNG dependency).
+fn ab_fill(len: usize, phase: usize) -> Vec<f64> {
+    (0..len)
+        .map(|i| ((i * 7 + phase * 13) % 23) as f64 * 0.125 - 1.375)
+        .collect()
+}
+
+/// Tuned-vs-default microkernel A/B rows on a representative sup-sup
+/// shape: every enumerated GEMM tile variant against the tier kernel,
+/// plus packed-A vs strided-A. Returns `(label, t_default, t_variant)`.
+fn kernel_ab_rows(tier: KernelTier) -> Vec<(String, f64, f64)> {
+    let (m, k, n) = (48usize, 32usize, 96usize);
+    let lda = k + 8; // strided A, like a panel read in place
+    let a = ab_fill(m * lda, 1);
+    let b = ab_fill(k * n, 2);
+    let mut c = vec![0.0; m * n];
+    let reps = 30;
+    let t_tier = time_best(reps, || {
+        kernels::gemm_sub(tier, &mut c, n, &a, lda, &b, n, m, k, n);
+    });
+    let mut rows = Vec::new();
+    for &(mr, nr, ku) in tuner::TILE_VARIANTS.iter() {
+        let plan = kernels::KernelPlan {
+            gemm: kernels::GemmVariant::Tiled { mr, nr, ku },
+            ..Default::default()
+        };
+        let t_var = time_best(reps, || {
+            kernels::gemm_sub_planned(tier, &plan, &mut c, n, &a, lda, &b, n, m, k, n);
+        });
+        rows.push((format!("gemm {mr}x{nr}k{ku} vs {tier}"), t_tier, t_var));
+    }
+    // packed-A vs strided-A through the same tier kernel
+    let mut packed = Vec::new();
+    let t_packed = time_best(reps, || {
+        kernels::pack_rows(&mut packed, &a, lda, m, k);
+        kernels::gemm_sub(tier, &mut c, n, &packed, k, &b, n, m, k, n);
+    });
+    rows.push((format!("gemm packed-A vs strided-A ({tier})"), t_tier, t_packed));
+    rows
+}
+
+/// Days-from-epoch to civil date (Howard Hinnant's algorithm; avoids a
+/// chrono dependency for the artifact filename).
+fn civil_today() -> (i64, u32, u32) {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0);
+    let z = secs.div_euclid(86_400) + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    (y, m, d)
+}
+
+/// Minimal JSON string escape (the strings involved are ASCII labels).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// The perf-trajectory gauntlet: tuned-vs-untuned repeated refactor+solve
+/// over the bench suite plus the kernel-variant A/B micro rows, written to
+/// one `BENCH_<date>.json` artifact (schema documented in DESIGN.md §5).
+fn cmd_gauntlet(args: &Args) -> Result<()> {
+    let tuning = tuning_from(args, Tuning::Quick)?.unwrap_or(Tuning::Quick);
+    if tuning == Tuning::Off {
+        return Err(Error::Invalid(
+            "gauntlet compares tuned vs untuned; use --tuning quick|full".into(),
+        ));
+    }
+    let threads = flag_usize(args, "threads", 0)?;
+    let reps = flag_usize(args, "reps", 5)?.max(1);
+    let suite_name = if args.get("suite") == Some("full") {
+        "full"
+    } else {
+        "small"
+    };
+    let suite = if suite_name == "full" {
+        bench_suite::suite37()
+    } else {
+        bench_suite::suite_small()
+    };
+    let env = environment();
+    let tier = kernels::active_tier();
+    println!("{env}");
+    let mut table = Table::new(
+        "gauntlet: autotuned vs default repeated refactor+solve",
+        &["matrix", "class", "n", "untuned", "tuned", "speedup", "plan"],
+    );
+    let mut mats = Vec::new();
+    for bm in &suite {
+        let a = (bm.build)();
+        let b = gen::rhs_for_ones(&a);
+        let untuned = SolverBuilder::new().repeated().threads(threads).build()?;
+        let (t_un, _) = repeated_cycle(&untuned, &a, &b, reps)?;
+        let tuned = SolverBuilder::new()
+            .repeated()
+            .threads(threads)
+            .tuning(tuning)
+            .build()?;
+        let (t_tu, plan) = repeated_cycle(&tuned, &a, &b, reps)?;
+        let speedup = t_un / t_tu.max(1e-12);
+        table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_un),
+                fmt_time(t_tu),
+                format!("{speedup:.2}x"),
+                plan.clone(),
+            ],
+            speedup,
+        );
+        mats.push(format!(
+            "    {{\"name\": \"{}\", \"class\": \"{}\", \"n\": {}, \"nnz\": {}, \
+             \"t_untuned\": {:e}, \"t_tuned\": {:e}, \"speedup\": {:.4}, \"plan\": \"{}\"}}",
+            json_escape(bm.name),
+            json_escape(bm.class),
+            a.n,
+            a.nnz(),
+            t_un,
+            t_tu,
+            speedup,
+            json_escape(&plan),
+        ));
+    }
+    table.print();
+    let ab = kernel_ab_rows(tier);
+    let mut ab_table = Table::new(
+        "kernel A/B: enumerated variants vs tier default (48x32x96)",
+        &["variant", "default", "variant", "ratio"],
+    );
+    let mut ab_json = Vec::new();
+    for (label, t_def, t_var) in &ab {
+        let ratio = t_def / t_var.max(1e-12);
+        ab_table.row(
+            vec![
+                label.clone(),
+                fmt_time(*t_def),
+                fmt_time(*t_var),
+                format!("{ratio:.2}x"),
+            ],
+            ratio,
+        );
+        ab_json.push(format!(
+            "    {{\"name\": \"{}\", \"t_default\": {:e}, \"t_variant\": {:e}, \
+             \"ratio\": {:.4}}}",
+            json_escape(label),
+            t_def,
+            t_var,
+            ratio
+        ));
+    }
+    ab_table.print();
+
+    let (y, mo, d) = civil_today();
+    let date = format!("{y:04}-{mo:02}-{d:02}");
+    let path = match args.get("out") {
+        Some(p) => p.to_string(),
+        None => format!("BENCH_{date}.json"),
+    };
+    let gm = table.geomean_speedup();
+    let json = format!(
+        "{{\n  \"schema\": \"hylu-bench-v1\",\n  \"date\": \"{date}\",\n  \
+         \"suite\": \"{suite_name}\",\n  \"threads\": {threads},\n  \
+         \"reps\": {reps},\n  \"tier\": \"{tier}\",\n  \"tuning\": \"{tuning}\",\n  \
+         \"environment\": \"{}\",\n  \"matrices\": [\n{}\n  ],\n  \
+         \"geomean_speedup\": {gm:.4},\n  \"kernel_ab\": [\n{}\n  ]\n}}\n",
+        json_escape(&env),
+        mats.join(",\n"),
+        ab_json.join(",\n"),
+    );
+    std::fs::write(&path, json)?;
+    println!(
+        "\nwrote {path} (geomean tuned/untuned speedup {gm:.2}x over {} matrices)",
+        suite.len()
+    );
+    Ok(())
 }
 
 /// Drive `requests` solves from `callers` concurrent threads, round-robin
@@ -647,6 +926,57 @@ mod tests {
         // bench interprets --kernel as the dispatch tier; bad names fail
         // fast before any suite work
         assert_eq!(run(&sv(&["bench", "--kernel", "bogus"])), 2);
+    }
+
+    #[test]
+    fn tune_command_end_to_end() {
+        let code = run(&sv(&[
+            "tune", "--gen", "mesh2d:400", "--tuning", "quick", "--threads", "1",
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn tune_rejects_bad_level() {
+        let code = run(&sv(&["tune", "--gen", "mesh2d:100", "--tuning", "turbo"]));
+        assert_eq!(code, Error::Invalid(String::new()).code());
+    }
+
+    #[test]
+    fn gauntlet_rejects_tuning_off() {
+        // the whole point is tuned-vs-untuned; off has nothing to compare
+        assert_eq!(run(&sv(&["gauntlet", "--tuning", "off"])), 2);
+    }
+
+    #[test]
+    fn gauntlet_writes_artifact() {
+        let out = std::env::temp_dir().join(format!("hylu-gauntlet-{}.json", std::process::id()));
+        let code = run(&sv(&[
+            "gauntlet",
+            "--reps",
+            "1",
+            "--threads",
+            "1",
+            "--tuning",
+            "quick",
+            "--out",
+            out.to_str().unwrap(),
+        ]));
+        assert_eq!(code, 0);
+        let s = std::fs::read_to_string(&out).unwrap();
+        assert!(s.contains("\"schema\": \"hylu-bench-v1\""));
+        assert!(s.contains("\"geomean_speedup\""));
+        assert!(s.contains("\"kernel_ab\""));
+        assert!(s.contains("\"matrices\""));
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn civil_today_is_sane() {
+        let (y, m, d) = civil_today();
+        assert!((2024..3000).contains(&y));
+        assert!((1..=12).contains(&m));
+        assert!((1..=31).contains(&d));
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Solver configuration.
 
+use crate::numeric::kernels::Tuning;
 use crate::numeric::select::KernelMode;
 use crate::numeric::PivotConfig;
 use crate::ordering::OrderingChoice;
@@ -17,6 +18,13 @@ pub struct SolverConfig {
     pub ordering: OrderingChoice,
     /// Numeric kernel override (default: select from symbolic statistics).
     pub kernel: Option<KernelMode>,
+    /// Per-pattern kernel autotuning level (default: off). `Quick`/`Full`
+    /// search tile/pack/TRSM variants on the pattern's supernode shape
+    /// histogram at analyze time; the winning plan is cached in the
+    /// analysis (and optionally on disk via `HYLU_TUNE_CACHE`), so warm
+    /// refactor+solve paths pay no tuning cost. The `HYLU_TUNING` env var
+    /// overrides this setting when set.
+    pub tuning: Tuning,
     /// Supernode merge-policy override (default: derived from kernel +
     /// `repeated`). Used by the baselines.
     pub merge_policy: Option<MergePolicy>,
@@ -76,6 +84,7 @@ impl Default for SolverConfig {
         SolverConfig {
             ordering: OrderingChoice::Auto,
             kernel: None,
+            tuning: Tuning::Off,
             merge_policy: None,
             threads: 0,
             worker_spin: crate::exec::DEFAULT_SPIN,
@@ -108,6 +117,7 @@ mod tests {
         assert!(!c.repeated);
         assert!(c.static_pivoting);
         assert!(c.kernel.is_none());
+        assert_eq!(c.tuning, Tuning::Off);
         assert!(!c.use_xla);
         assert!(c.max_supernode <= 256);
     }

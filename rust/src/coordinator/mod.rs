@@ -29,6 +29,7 @@ use std::time::Instant;
 
 use crate::exec::{self, Engine, ExecPlan, FactorScratch, PoolCounters, SolveScratch};
 use crate::numeric::factor::{GemmBackend, NativeGemm};
+use crate::numeric::kernels::{self, tuner, Tuning};
 use crate::numeric::parallel::factor_parallel_pooled;
 use crate::numeric::select::{select_kernel, selection_stats, KernelMode};
 use crate::numeric::LuFactors;
@@ -314,7 +315,20 @@ impl Solver {
         let t_symbolic = t2.elapsed().as_secs_f64();
 
         // --- execution plan for the solver's pool width ---
-        let plan = ExecPlan::build(&sym, self.engine.pool().nthreads());
+        let mut plan = ExecPlan::build(&sym, self.engine.pool().nthreads());
+
+        // --- per-pattern kernel autotuning (analyze-time only) ---
+        // The winning plan rides inside the ExecPlan, so warm
+        // refactor+solve paths replay it with zero probing. Keyed by the
+        // input pattern hash: the in-process memo (and the optional disk
+        // cache) guarantees every analysis of the same pattern in one
+        // process uses one plan — factor bits stay deterministic across
+        // solvers and pool widths.
+        let phash = pattern_hash(a);
+        let tuning = tuner::effective(self.cfg.tuning);
+        if tuning != Tuning::Off {
+            plan.kernel = tuner::tune_cached(&sym, kernels::active_tier(), tuning, phash);
+        }
 
         let sel = selection_stats(&sym);
         let stats = SymbolicStats {
@@ -345,7 +359,7 @@ impl Solver {
             pa,
             src_idx,
             scale,
-            pattern_hash: pattern_hash(a),
+            pattern_hash: phash,
             uid: ANALYSIS_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             plan,
             stats,

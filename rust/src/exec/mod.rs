@@ -117,9 +117,10 @@ impl WorkerCtx {
         tbuf: usize,
         map_idx: usize,
         pbuf: usize,
+        abuf: usize,
     ) -> &mut Workspace {
         let mut grew = self.ws.ensure(n);
-        grew |= self.ws.reserve_kernel(cbuf, tbuf, map_idx, pbuf);
+        grew |= self.ws.reserve_kernel(cbuf, tbuf, map_idx, pbuf, abuf);
         if grew {
             self.counters.note_alloc();
         }
@@ -570,14 +571,14 @@ mod tests {
         let c = pool.counters().clone();
         for _ in 0..5 {
             pool.run(|| {}, |_, ctx| {
-                let ws = ctx.workspace(256, 64, 64, 16, 64);
+                let ws = ctx.workspace(256, 64, 64, 16, 64, 64);
                 assert!(ws.x.len() >= 256);
             });
         }
         let after_warm = c.scratch_allocs.load(Ordering::Relaxed);
         for _ in 0..5 {
             pool.run(|| {}, |_, ctx| {
-                ctx.workspace(256, 64, 64, 16, 64);
+                ctx.workspace(256, 64, 64, 16, 64, 64);
             });
         }
         assert_eq!(c.scratch_allocs.load(Ordering::Relaxed), after_warm);

@@ -9,6 +9,7 @@
 //! scratch, not here — a plan shared between two solvers must stay
 //! race-free.)
 
+use crate::numeric::kernels::KernelPlan;
 use crate::par::balanced_chunks;
 use crate::symbolic::Symbolic;
 
@@ -34,6 +35,14 @@ pub struct ExecPlan {
     pub max_map: usize,
     /// High-water bound for the GEMM B-operand packing scratch (`pbuf`).
     pub max_pbuf: usize,
+    /// High-water bound for the GEMM A-operand packing scratch (`abuf`);
+    /// only consumed when [`ExecPlan::kernel`] enables A packing, but
+    /// always reserved so toggling the plan never reallocates warm paths.
+    pub max_abuf: usize,
+    /// Tuned kernel plan for this pattern (GEMM variant, A-packing, TRSM
+    /// crossovers). Defaults to [`KernelPlan::default`]; `Solver::analyze`
+    /// overwrites it with the autotuner's winner when tuning is enabled.
+    pub kernel: KernelPlan,
 }
 
 impl ExecPlan {
@@ -50,7 +59,9 @@ impl ExecPlan {
         if self.nthreads == nthreads {
             self
         } else {
-            storage.insert(ExecPlan::build(sym, nthreads))
+            let mut p = ExecPlan::build(sym, nthreads);
+            p.kernel = self.kernel; // keep the tuned plan across rebuilds
+            storage.insert(p)
         }
     }
 
@@ -87,6 +98,7 @@ impl ExecPlan {
         let mut max_tbuf = 0usize;
         let mut max_map = 0usize;
         let mut max_pbuf = 0usize;
+        let mut max_abuf = 0usize;
         for nd in &sym.nodes {
             let w = nd.width as usize;
             for g in &sym.groups[nd.g_start..nd.g_end] {
@@ -98,6 +110,7 @@ impl ExecPlan {
                     max_tbuf = max_tbuf.max(len * len);
                     max_map = max_map.max(s_nu);
                     max_pbuf = max_pbuf.max(len * s_nu);
+                    max_abuf = max_abuf.max(w * len);
                 }
             }
         }
@@ -111,6 +124,8 @@ impl ExecPlan {
             max_tbuf,
             max_map,
             max_pbuf,
+            max_abuf,
+            kernel: KernelPlan::default(),
         }
     }
 }
@@ -148,6 +163,7 @@ mod tests {
                     assert!(nd.width as usize * src.nu() <= plan.max_cbuf);
                     assert!(src.nu() <= plan.max_map);
                     assert!(g.len as usize * src.nu() <= plan.max_pbuf);
+                    assert!(nd.width as usize * g.len as usize <= plan.max_abuf);
                 }
             }
         }

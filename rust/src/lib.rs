@@ -61,7 +61,7 @@ pub mod testutil;
 pub mod prelude {
     pub use crate::api::{Analyzed, Factored, LinearSystem, SolveOpts, Solver, SolverBuilder};
     pub use crate::coordinator::{FactorStats, SolveStats, SolverConfig, SymbolicStats};
-    pub use crate::numeric::kernels::KernelTier;
+    pub use crate::numeric::kernels::{KernelPlan, KernelTier, Tuning};
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;
     pub use crate::service::{

@@ -15,6 +15,7 @@
 //! no search — the paper's repeated-solve fast path.
 
 use crate::numeric::kernels;
+use crate::numeric::kernels::KernelPlan;
 use crate::numeric::select::KernelMode;
 use crate::numeric::{LuFactors, PivotConfig, SharedFactors, Workspace};
 use crate::sparse::csr::Csr;
@@ -85,10 +86,15 @@ pub fn factor(
     };
     let sf = SharedFactors::new(fac);
     let mut ws = Workspace::new(sym.n);
+    // The standalone driver has no ExecPlan to carry a tuned kernel plan;
+    // the default plan keeps it bit-compatible with pre-tuner behavior.
+    let plan = KernelPlan::default();
     for id in 0..sym.nodes.len() {
         // Safety: sequential — every source node is complete in program
         // order; each node writes only its own storage.
-        unsafe { factor_node(id, a, sym, &sf, &mut ws, mode, cfg, eps_abs, refactor, gemm) };
+        unsafe {
+            factor_node(id, a, sym, &sf, &mut ws, mode, cfg, eps_abs, refactor, gemm, &plan)
+        };
     }
     let perturbed = sf.perturbed.load(std::sync::atomic::Ordering::Relaxed);
     fac.perturbed = perturbed;
@@ -109,10 +115,11 @@ pub(crate) unsafe fn factor_node(
     eps_abs: f64,
     refactor: bool,
     gemm: &dyn GemmBackend,
+    plan: &KernelPlan,
 ) {
     let nd = &sym.nodes[id];
     if nd.is_super && mode == KernelMode::SupSup {
-        factor_panel(id, a, sym, sf, ws, cfg, eps_abs, refactor, gemm);
+        factor_panel(id, a, sym, sf, ws, cfg, eps_abs, refactor, gemm, plan);
     } else {
         factor_rows(id, a, sym, sf, ws, eps_abs);
     }
@@ -141,6 +148,7 @@ unsafe fn factor_panel(
     eps_abs: f64,
     refactor: bool,
     gemm: &dyn GemmBackend,
+    plan: &KernelPlan,
 ) {
     let tier = kernels::active_tier();
     let nd = &sym.nodes[id];
@@ -193,9 +201,22 @@ unsafe fn factor_panel(
             let k0 = lcols[goff] as usize - src.first as usize;
             debug_assert_eq!(k0 + len, s_w, "group must be a tail segment");
             let spanel = sf.panel_ref(g.src as usize);
-            // TRSM: finalize L block (panel cols goff..goff+len)
-            kernels::trsm_right_upper(
-                tier, panel, stride, goff, w, spanel, sstride, k0, s_nl + k0, len, &mut ws.tbuf,
+            // TRSM: finalize L block (panel cols goff..goff+len); the
+            // gather crossover comes from the tuned plan.
+            kernels::trsm_right_upper_with(
+                tier,
+                panel,
+                stride,
+                goff,
+                w,
+                spanel,
+                sstride,
+                k0,
+                s_nl + k0,
+                len,
+                &mut ws.tbuf,
+                plan.trsm_min_len,
+                plan.trsm_min_m,
             );
             // GEMM: C = X · U_tail, then scatter-subtract
             if s_nu > 0 {
@@ -214,19 +235,37 @@ unsafe fn factor_panel(
                 // Fast path: both column lists are sorted, so the map is
                 // monotone; if it is also *contiguous* the GEMM can run
                 // directly into the target panel — no cbuf, no scatter.
+                // A-operand packing (tuned): gather the w × len multiplier
+                // block (panel cols [goff, goff+len), strided) contiguous
+                // into the `abuf` arena so the microkernel streams *both*
+                // operands linearly. Same values, same FP order — only the
+                // leading dimension changes, so this is bit-neutral.
+                let (a_lda, pack) = if plan.pack_a {
+                    kernels::pack_rows(&mut ws.abuf, &panel[goff..], stride, w, len);
+                    (len, true)
+                } else {
+                    (stride, false)
+                };
                 let pc0 = ws.colmap[sucols[0] as usize];
                 let pc_last = ws.colmap[sucols[s_nu - 1] as usize];
                 if pc0 >= 0 && (pc_last - pc0) as usize == s_nu - 1 {
                     // Safety: C columns [pc0, pc0+s_nu) and A columns
                     // [goff, goff+len) are disjoint ranges of the same
-                    // panel rows (goff+len <= nl <= pc0), so the raw-core
-                    // accesses never alias element-wise.
-                    kernels::gemm_sub_raw(
+                    // panel rows (goff+len <= nl <= pc0) — or A is the
+                    // packed copy in `abuf` — so the raw-core accesses
+                    // never alias element-wise.
+                    let ap = if pack {
+                        ws.abuf.as_ptr()
+                    } else {
+                        panel.as_ptr().add(goff)
+                    };
+                    kernels::gemm_sub_raw_planned(
                         tier,
+                        plan,
                         panel.as_mut_ptr().add(pc0 as usize),
                         stride,
-                        panel.as_ptr().add(goff),
-                        stride,
+                        ap,
+                        a_lda,
                         ws.pbuf.as_ptr(),
                         s_nu,
                         w,
@@ -237,30 +276,43 @@ unsafe fn factor_panel(
                 }
                 ws.cbuf.clear();
                 ws.cbuf.resize(w * s_nu, 0.0);
-                // X lives in panel cols [goff, goff+len) (strided)
-                let did = gemm.gemm_sub(
-                    &mut ws.cbuf,
-                    &panel[goff..],
-                    stride,
-                    &ws.pbuf,
-                    s_nu,
-                    w,
-                    len,
-                    s_nu,
-                );
-                if !did {
-                    kernels::gemm_sub(
-                        tier,
+                // X lives in panel cols [goff, goff+len) (strided), or
+                // contiguous in abuf when the plan packs A
+                let did = if pack {
+                    gemm.gemm_sub(&mut ws.cbuf, &ws.abuf, a_lda, &ws.pbuf, s_nu, w, len, s_nu)
+                } else {
+                    gemm.gemm_sub(
                         &mut ws.cbuf,
-                        s_nu,
                         &panel[goff..],
-                        stride,
+                        a_lda,
                         &ws.pbuf,
                         s_nu,
                         w,
                         len,
                         s_nu,
-                    );
+                    )
+                };
+                if !did {
+                    if pack {
+                        kernels::gemm_sub_planned(
+                            tier, plan, &mut ws.cbuf, s_nu, &ws.abuf, a_lda, &ws.pbuf, s_nu, w,
+                            len, s_nu,
+                        );
+                    } else {
+                        kernels::gemm_sub_planned(
+                            tier,
+                            plan,
+                            &mut ws.cbuf,
+                            s_nu,
+                            &panel[goff..],
+                            a_lda,
+                            &ws.pbuf,
+                            s_nu,
+                            w,
+                            len,
+                            s_nu,
+                        );
+                    }
                 }
                 // cbuf now holds -X·U; add into panel through the map
                 let sucols = &sym.ucols[src.u_start..src.u_end];

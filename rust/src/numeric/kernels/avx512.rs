@@ -1,0 +1,182 @@
+//! AVX-512 tier: 8-wide (zmm) blocked kernels in safe, dependency-free
+//! Rust.
+//!
+//! Unlike the [`super::x86`] tier these functions contain no `std::arch`
+//! intrinsics: AVX-512 intrinsics would pin the crate to a newer compiler
+//! than the baseline toolchain guarantees, so the tier is written as
+//! fixed-width blocked shapes (8-row x 16-column GEMM tiles — two zmm
+//! vectors per row — and 8-lane reductions) that the autovectorizer lowers
+//! to zmm code when the crate is compiled with
+//! `-C target-feature=+avx512f,+avx512vl` (the dedicated CI leg).
+//!
+//! [`super::KernelTier::Avx512`] is therefore only *selected* by
+//! `best_available` when the crate was compiled with those target features
+//! **and** the CPU reports them at runtime — a baseline build never routes
+//! here by default. Every function is nevertheless plain safe-shape Rust
+//! that executes correctly on any machine, which is what lets the test
+//! suite exercise this tier's numerics everywhere (no illegal-instruction
+//! hazard; the dispatch guard is a performance gate, not a safety gate).
+//!
+//! Determinism: the GEMM tile keeps one accumulator per C element, walks
+//! `k` ascending, and uses a separate multiply and subtract — bit-identical
+//! to the scalar reference (no FMA contraction in Rust by default). The
+//! lane kernels perform exactly one multiply+subtract (or divide) per lane,
+//! bit-identical to every other tier, preserving the batched-solve
+//! contract.
+
+#![allow(clippy::needless_range_loop)]
+
+/// Raw 8x16-blocked core of `gemm_sub`: `C[m×n] -= A[m×k] · B[k×n]`,
+/// row-major with leading dimensions. Row remainders run as 1x16 strips;
+/// the column remainder falls back to the portable core (also
+/// scalar-order-preserving).
+///
+/// # Safety
+/// `cp/ap/bp` must be valid for the strided `m×n`, `m×k`, `k×n` accesses,
+/// and the C range must not overlap A or B element-wise.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_sub_raw(
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut j = 0;
+    while j + 16 <= n {
+        let mut i = 0;
+        while i + 8 <= m {
+            let mut t = [[0.0f64; 16]; 8];
+            for r in 0..8 {
+                let crow = cp.add((i + r) * ldc + j);
+                for q in 0..16 {
+                    t[r][q] = *crow.add(q);
+                }
+            }
+            for p in 0..k {
+                let brow = bp.add(p * ldb + j);
+                let mut bv = [0.0f64; 16];
+                for q in 0..16 {
+                    bv[q] = *brow.add(q);
+                }
+                for r in 0..8 {
+                    let f = *ap.add((i + r) * lda + p);
+                    for q in 0..16 {
+                        t[r][q] -= f * bv[q];
+                    }
+                }
+            }
+            for r in 0..8 {
+                let crow = cp.add((i + r) * ldc + j);
+                for q in 0..16 {
+                    *crow.add(q) = t[r][q];
+                }
+            }
+            i += 8;
+        }
+        // row remainder (m % 8): 1x16 strips
+        while i < m {
+            let mut t = [0.0f64; 16];
+            let crow = cp.add(i * ldc + j);
+            for q in 0..16 {
+                t[q] = *crow.add(q);
+            }
+            let arow = ap.add(i * lda);
+            for p in 0..k {
+                let f = *arow.add(p);
+                let brow = bp.add(p * ldb + j);
+                for q in 0..16 {
+                    t[q] -= f * *brow.add(q);
+                }
+            }
+            for q in 0..16 {
+                *crow.add(q) = t[q];
+            }
+            i += 1;
+        }
+        j += 16;
+    }
+    if j < n {
+        // column remainder strip (n % 16): portable core
+        super::portable::gemm_sub_raw(cp.add(j), ldc, ap, lda, bp.add(j), ldb, m, k, n - j);
+    }
+}
+
+/// 8-lane blocked dot product (one accumulator per lane, pairwise
+/// horizontal sum at the end).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut lanes = [0.0f64; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for q in 0..8 {
+            lanes[q] += a[i + q] * b[i + q];
+        }
+        i += 8;
+    }
+    let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// `y[0..n] -= f * x[0..n]` in 8-wide chunks.
+#[inline]
+pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+    let n = y.len().min(x.len());
+    let split = n - n % 8;
+    let (yc, yr) = y[..n].split_at_mut(split);
+    let (xc, xr) = x[..n].split_at(split);
+    for (y8, x8) in yc.chunks_exact_mut(8).zip(xc.chunks_exact(8)) {
+        for q in 0..8 {
+            y8[q] -= f * x8[q];
+        }
+    }
+    for (yy, xx) in yr.iter_mut().zip(xr) {
+        *yy -= f * xx;
+    }
+}
+
+/// Lane update `dst[0..n] -= m * src[0..n]` in 8-wide chunks with a
+/// separate multiply and subtract per lane — bit-identical per lane to the
+/// scalar tier (no FMA; see the module docs).
+#[inline]
+pub fn lanes_axpy_sub(dst: &mut [f64], src: &[f64], m: f64) {
+    let n = dst.len().min(src.len());
+    let split = n - n % 8;
+    let (dc, dr) = dst[..n].split_at_mut(split);
+    let (sc, sr) = src[..n].split_at(split);
+    for (d8, s8) in dc.chunks_exact_mut(8).zip(sc.chunks_exact(8)) {
+        for q in 0..8 {
+            d8[q] -= m * s8[q];
+        }
+    }
+    for (d, s) in dr.iter_mut().zip(sr) {
+        *d -= m * *s;
+    }
+}
+
+/// Lane divide `dst[0..n] /= piv` in 8-wide chunks (IEEE division,
+/// bit-identical to the scalar tier per lane).
+#[inline]
+pub fn lanes_div(dst: &mut [f64], piv: f64) {
+    let n = dst.len();
+    let split = n - n % 8;
+    let (dc, dr) = dst.split_at_mut(split);
+    for d8 in dc.chunks_exact_mut(8) {
+        for q in 0..8 {
+            d8[q] /= piv;
+        }
+    }
+    for d in dr.iter_mut() {
+        *d /= piv;
+    }
+}

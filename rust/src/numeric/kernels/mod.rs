@@ -2,7 +2,7 @@
 //! of the MKL BLAS calls in the paper (the Pallas/XLA path in
 //! [`crate::runtime`] is the TPU-shaped alternative; see DESIGN.md §5).
 //!
-//! Three dispatch tiers implement one kernel family:
+//! Four dispatch tiers implement one kernel family:
 //!
 //! - [`KernelTier::Scalar`] — straight-line reference loops
 //!   ([`scalar`]); the semantics baseline and the `HYLU_KERNEL=scalar`
@@ -12,12 +12,24 @@
 //!   the default off x86_64.
 //! - [`KernelTier::Native`] — AVX2+FMA `std::arch` microkernels
 //!   ([`x86`]), selected at runtime via `is_x86_feature_detected!`.
+//! - [`KernelTier::Avx512`] — 8-wide zmm-shaped blocked kernels
+//!   ([`avx512`]); selected only when the crate was *compiled* with
+//!   `+avx512f,+avx512vl` **and** the CPU reports both at runtime (the
+//!   code itself is safe on any machine).
 //!
-//! The tier is resolved once per process: `HYLU_KERNEL=scalar|portable|
-//! native` overrides, [`set_tier`] pre-empts (the `hylu bench --kernel`
-//! flag), otherwise the best available tier wins. An unavailable request
-//! falls back to portable. All matrices are row-major with explicit
-//! leading dimensions (panels are strided).
+//! The tier resolves lazily: `HYLU_KERNEL=scalar|portable|native|avx512`
+//! overrides, otherwise the best available tier wins; an unavailable
+//! request falls back to portable. [`set_tier`] (the `hylu bench
+//! --kernel` flag) re-pins the tier at any time, and the calibration
+//! [`probe`] re-measures itself on the next read after a tier change —
+//! a later `set_tier` can no longer leave `select_kernel` scaled by a
+//! stale tier's probe. All matrices are row-major with explicit leading
+//! dimensions (panels are strided).
+//!
+//! On top of the per-process tier, the [`tuner`] module searches
+//! per-analyzed-pattern GEMM tile variants, A-operand packing, and TRSM
+//! crossovers, recording the winner as a [`KernelPlan`] inside the
+//! analysis' exec plan (see DESIGN.md §5).
 //!
 //! Determinism contract: within one tier every kernel is deterministic
 //! (refactor replay and parallel-vs-sequential bit-equality hold per
@@ -32,12 +44,17 @@
 
 mod scalar;
 
+pub mod avx512;
 pub mod portable;
+pub mod tuner;
 
 #[cfg(target_arch = "x86_64")]
 pub mod x86;
 
-use std::sync::OnceLock;
+pub use tuner::{GemmVariant, KernelPlan, Tuning};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 
 /// One dispatch tier of the dense-kernel family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,6 +65,9 @@ pub enum KernelTier {
     Portable,
     /// AVX2+FMA `std::arch` microkernels (x86_64 with runtime support).
     Native,
+    /// 8-wide zmm-shaped blocked kernels (x86_64 compiled with
+    /// `+avx512f,+avx512vl` and runtime support).
+    Avx512,
 }
 
 impl std::fmt::Display for KernelTier {
@@ -56,6 +76,7 @@ impl std::fmt::Display for KernelTier {
             KernelTier::Scalar => write!(f, "scalar"),
             KernelTier::Portable => write!(f, "portable"),
             KernelTier::Native => write!(f, "native"),
+            KernelTier::Avx512 => write!(f, "avx512"),
         }
     }
 }
@@ -73,28 +94,53 @@ fn native_supported() -> bool {
     }
 }
 
+/// Detection chain for the AVX-512 tier: the kernels are plain safe Rust
+/// (no intrinsics), so they only *pay off* when the compiler was allowed
+/// to lower their 8-wide shapes to zmm code — hence the `cfg!` half of
+/// the check — and the runtime half keeps a `+avx512` build honest on a
+/// machine without the feature.
+#[inline]
+fn avx512_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        cfg!(target_feature = "avx512f")
+            && std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512vl")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
 impl KernelTier {
-    /// Parse a tier name (`scalar` / `portable` / `native`).
+    /// Parse a tier name (`scalar` / `portable` / `native` / `avx512`).
     pub fn parse(s: &str) -> Option<KernelTier> {
         match s {
             "scalar" => Some(KernelTier::Scalar),
             "portable" => Some(KernelTier::Portable),
             "native" => Some(KernelTier::Native),
+            "avx512" => Some(KernelTier::Avx512),
             _ => None,
         }
     }
 
-    /// Whether this tier can run on this machine.
+    /// Whether this tier can run at full speed on this machine (for
+    /// [`KernelTier::Avx512`] that includes having been *compiled* with
+    /// the AVX-512 target features; see [`avx512`]).
     pub fn available(self) -> bool {
         match self {
             KernelTier::Native => native_supported(),
+            KernelTier::Avx512 => avx512_supported(),
             _ => true,
         }
     }
 
     /// Best tier this machine supports.
     pub fn best_available() -> KernelTier {
-        if native_supported() {
+        if avx512_supported() {
+            KernelTier::Avx512
+        } else if native_supported() {
             KernelTier::Native
         } else {
             KernelTier::Portable
@@ -111,14 +157,33 @@ impl KernelTier {
     }
 }
 
-/// Process-wide resolved tier (first resolution wins).
-static TIER: OnceLock<KernelTier> = OnceLock::new();
+/// Process-wide active tier: 0 = unresolved, else `encode_tier + 1`-style
+/// codes (see [`decode_tier`]). An atomic rather than a `OnceLock` so
+/// [`set_tier`] can re-pin mid-process — the calibration probe keys its
+/// cache by tier and re-measures after a change.
+static TIER: AtomicU8 = AtomicU8::new(0);
 
-/// The active dispatch tier. Resolved once: an explicit [`set_tier`] call
-/// wins, else the `HYLU_KERNEL` env var (`scalar|portable|native`), else
-/// the best available tier; unavailable requests fall back to portable.
-pub fn active_tier() -> KernelTier {
-    *TIER.get_or_init(|| match std::env::var("HYLU_KERNEL") {
+fn encode_tier(t: KernelTier) -> u8 {
+    match t {
+        KernelTier::Scalar => 1,
+        KernelTier::Portable => 2,
+        KernelTier::Native => 3,
+        KernelTier::Avx512 => 4,
+    }
+}
+
+fn decode_tier(v: u8) -> Option<KernelTier> {
+    match v {
+        1 => Some(KernelTier::Scalar),
+        2 => Some(KernelTier::Portable),
+        3 => Some(KernelTier::Native),
+        4 => Some(KernelTier::Avx512),
+        _ => None,
+    }
+}
+
+fn resolve_env_tier() -> KernelTier {
+    match std::env::var("HYLU_KERNEL") {
         // empty = unset (CI matrix legs define the var with no value)
         Ok(s) if s.is_empty() => KernelTier::best_available(),
         Ok(s) => match KernelTier::parse(&s) {
@@ -128,21 +193,38 @@ pub fn active_tier() -> KernelTier {
                 // measure the wrong kernels
                 eprintln!(
                     "hylu: ignoring unknown HYLU_KERNEL={s:?} \
-                     (expected scalar|portable|native)"
+                     (expected scalar|portable|native|avx512)"
                 );
                 KernelTier::best_available()
             }
         },
         Err(_) => KernelTier::best_available(),
-    })
+    }
+}
+
+/// The active dispatch tier. Resolved lazily on first use: the
+/// `HYLU_KERNEL` env var (`scalar|portable|native|avx512`) wins, else the
+/// best available tier; unavailable requests fall back to portable. An
+/// explicit [`set_tier`] call overrides at any time.
+pub fn active_tier() -> KernelTier {
+    if let Some(t) = decode_tier(TIER.load(Ordering::Relaxed)) {
+        return t;
+    }
+    let t = resolve_env_tier();
+    // first resolver wins a race; a concurrent set_tier still lands after
+    let _ = TIER.compare_exchange(0, encode_tier(t), Ordering::Relaxed, Ordering::Relaxed);
+    decode_tier(TIER.load(Ordering::Relaxed)).unwrap_or(t)
 }
 
 /// Pin the dispatch tier for this process (A/B runs: `hylu bench
-/// --kernel`). Returns `false` when the tier was already resolved — call
-/// before the first kernel dispatch to take effect. Unavailable tiers
-/// fall back to portable.
+/// --kernel`). Takes effect immediately — even after kernels already
+/// dispatched — and invalidates the cached calibration [`probe`], which
+/// re-measures on its next read. Unavailable tiers fall back to portable.
+/// Always returns `true` (kept for call-site compatibility with the old
+/// resolve-once semantics, where a late call could lose).
 pub fn set_tier(tier: KernelTier) -> bool {
-    TIER.set(tier.or_fallback()).is_ok()
+    TIER.store(encode_tier(tier.or_fallback()), Ordering::Relaxed);
+    true
 }
 
 /// Supernodes at least this wide route their block substitution through
@@ -209,7 +291,77 @@ pub unsafe fn gemm_sub_raw(
         KernelTier::Native if native_supported() => {
             x86::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n)
         }
+        // safe blocked shapes — correct on any machine, zmm-fast only on
+        // the builds/CPUs `best_available` actually selects it for
+        KernelTier::Avx512 => avx512::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n),
         _ => portable::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n),
+    }
+}
+
+/// [`gemm_sub`] with an analysis' tuned [`KernelPlan`] applied: a tuned
+/// tile variant replaces the tier microkernel when the plan carries one.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_sub_planned(
+    tier: KernelTier,
+    plan: &KernelPlan,
+    c: &mut [f64],
+    ldc: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(c.len() >= (m - 1) * ldc + n);
+    debug_assert!(a.len() >= (m - 1) * lda + k);
+    debug_assert!(b.len() >= (k - 1) * ldb + n);
+    // Safety: bounds established by the debug_asserts above.
+    unsafe {
+        gemm_sub_raw_planned(
+            tier,
+            plan,
+            c.as_mut_ptr(),
+            ldc,
+            a.as_ptr(),
+            lda,
+            b.as_ptr(),
+            ldb,
+            m,
+            k,
+            n,
+        )
+    }
+}
+
+/// Raw-pointer core of [`gemm_sub_planned`] for the sup-sup contiguous
+/// fast path (A and C are element-disjoint ranges of one panel).
+///
+/// # Safety
+/// Same contract as [`gemm_sub_raw`].
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_sub_raw_planned(
+    tier: KernelTier,
+    plan: &KernelPlan,
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match plan.gemm {
+        GemmVariant::Tier => gemm_sub_raw(tier, cp, ldc, ap, lda, bp, ldb, m, k, n),
+        GemmVariant::Tiled { mr, nr, ku } => {
+            tuner::gemm_sub_tiled(mr, nr, ku, cp, ldc, ap, lda, bp, ldb, m, k, n)
+        }
     }
 }
 
@@ -243,7 +395,9 @@ pub fn pack_rows(dst: &mut Vec<f64>, src: &[f64], ld: usize, rows: usize, cols: 
 /// Large triangles on the vectorized tiers gather the triangle columns
 /// into `scratch` (column-major) so the reduction streams linearly
 /// instead of striding by `ldu` per element; `scratch` is a reusable
-/// arena sized by `ExecPlan::max_tbuf`.
+/// arena sized by `ExecPlan::max_tbuf`. The gather crossover is the
+/// historical `len >= 48 && m >= 8`; the autotuner varies it per pattern
+/// through [`trsm_right_upper_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn trsm_right_upper(
     tier: KernelTier,
@@ -258,7 +412,29 @@ pub fn trsm_right_upper(
     len: usize,
     scratch: &mut Vec<f64>,
 ) {
-    if tier != KernelTier::Scalar && len >= 48 && m >= 8 {
+    trsm_right_upper_with(tier, x, ldx, x_off, m, u, ldu, u_row0, u_col0, len, scratch, 48, 8)
+}
+
+/// [`trsm_right_upper`] with an explicit gather crossover `(min_len,
+/// min_m)` — the [`KernelPlan`]'s tuned thresholds; `(usize::MAX,
+/// usize::MAX)` disables the gather path entirely.
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_right_upper_with(
+    tier: KernelTier,
+    x: &mut [f64],
+    ldx: usize,
+    x_off: usize,
+    m: usize,
+    u: &[f64],
+    ldu: usize,
+    u_row0: usize,
+    u_col0: usize,
+    len: usize,
+    scratch: &mut Vec<f64>,
+    min_len: usize,
+    min_m: usize,
+) {
+    if tier != KernelTier::Scalar && len >= min_len && m >= min_m {
         // Large triangles: gather columns into a contiguous column-major
         // scratch so the dot reductions stream linearly. (Small triangles
         // stay in L1 either way and the gather costs more than it saves.)
@@ -311,6 +487,7 @@ pub fn axpy_sub(tier: KernelTier, y: &mut [f64], x: &[f64], f: f64) {
             // Safety: bounds by `n`; panel tail and pivot row never alias.
             unsafe { x86::axpy_sub(y.as_mut_ptr(), x.as_ptr(), n, f) }
         }
+        KernelTier::Avx512 => avx512::axpy_sub(y, x, f),
         _ => portable::axpy_sub(y, x, f),
     }
 }
@@ -326,6 +503,7 @@ pub fn dot(tier: KernelTier, a: &[f64], b: &[f64]) -> f64 {
             // Safety: bounds by `n`.
             unsafe { x86::dot(a.as_ptr(), b.as_ptr(), n) }
         }
+        KernelTier::Avx512 => avx512::dot(a, b),
         _ => portable::dot(a, b),
     }
 }
@@ -346,6 +524,7 @@ pub fn lanes_axpy_sub(tier: KernelTier, dst: &mut [f64], src: &[f64], m: f64) {
             // Safety: bounds by `n`; `dst`/`src` are distinct row slices.
             unsafe { x86::lanes_axpy_sub(dst.as_mut_ptr(), src.as_ptr(), n, m) }
         }
+        KernelTier::Avx512 => avx512::lanes_axpy_sub(dst, src, m),
         KernelTier::Scalar | KernelTier::Portable | KernelTier::Native => {
             for (d, s) in dst[..n].iter_mut().zip(&src[..n]) {
                 *d -= m * *s;
@@ -364,6 +543,7 @@ pub fn lanes_div(tier: KernelTier, dst: &mut [f64], piv: f64) {
             // Safety: bounds by `dst.len()`.
             unsafe { x86::lanes_div(dst.as_mut_ptr(), dst.len(), piv) }
         }
+        KernelTier::Avx512 => avx512::lanes_div(dst, piv),
         KernelTier::Scalar | KernelTier::Portable | KernelTier::Native => {
             for d in dst.iter_mut() {
                 *d /= piv;
@@ -490,41 +670,57 @@ impl KernelProbe {
     }
 }
 
-static PROBE: OnceLock<KernelProbe> = OnceLock::new();
+/// Cached probe measurement, keyed by the tier it measured: a
+/// [`set_tier`] change self-invalidates the cache on the next read, so a
+/// re-pinned process never keeps the previous tier's probe-scaled
+/// selection crossovers (the old `OnceLock` did exactly that).
+static PROBE: Mutex<Option<KernelProbe>> = Mutex::new(None);
 
 /// Dense-advantage assumed by the selection thresholds' reference tuning
 /// (the pre-probe hard-coded flop ratios were measured at ~2x).
 const REFERENCE_ADVANTAGE: f64 = 2.0;
 
-/// Run (once per process) and cache the microkernel throughput probe.
-/// Costs well under a millisecond; every later call returns the cached
-/// measurement.
-pub fn probe() -> &'static KernelProbe {
-    PROBE.get_or_init(|| {
-        const D: usize = 48;
-        let a: Vec<f64> = (0..D * D).map(|i| ((i % 13) as f64 - 6.0) * 0.125).collect();
-        let b: Vec<f64> = (0..D * D).map(|i| ((i % 7) as f64 - 3.0) * 0.25).collect();
-        let mut c = vec![0.0f64; D * D];
-        let flops = 2.0 * (D * D * D) as f64;
-        let tier = active_tier();
-        let mut time_tier = |t: KernelTier| {
-            let mut best = f64::INFINITY;
-            for _ in 0..5 {
-                let t0 = std::time::Instant::now();
-                gemm_sub(t, &mut c, D, &a, D, &b, D, D, D, D);
-                std::hint::black_box(c[0]);
-                best = best.min(t0.elapsed().as_secs_f64());
-            }
-            best
-        };
-        let t_active = time_tier(tier);
-        let t_scalar = time_tier(KernelTier::Scalar);
-        KernelProbe {
-            tier,
-            gemm_gflops: flops / t_active.max(1e-9) / 1e9,
-            scalar_gflops: flops / t_scalar.max(1e-9) / 1e9,
+fn run_probe(tier: KernelTier) -> KernelProbe {
+    const D: usize = 48;
+    let a: Vec<f64> = (0..D * D).map(|i| ((i % 13) as f64 - 6.0) * 0.125).collect();
+    let b: Vec<f64> = (0..D * D).map(|i| ((i % 7) as f64 - 3.0) * 0.25).collect();
+    let mut c = vec![0.0f64; D * D];
+    let flops = 2.0 * (D * D * D) as f64;
+    let mut time_tier = |t: KernelTier| {
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            gemm_sub(t, &mut c, D, &a, D, &b, D, D, D, D);
+            std::hint::black_box(c[0]);
+            best = best.min(t0.elapsed().as_secs_f64());
         }
-    })
+        best
+    };
+    let t_active = time_tier(tier);
+    let t_scalar = time_tier(KernelTier::Scalar);
+    KernelProbe {
+        tier,
+        gemm_gflops: flops / t_active.max(1e-9) / 1e9,
+        scalar_gflops: flops / t_scalar.max(1e-9) / 1e9,
+    }
+}
+
+/// Run (once per active tier) and cache the microkernel throughput probe.
+/// Costs well under a millisecond; later calls return the cached
+/// measurement until [`set_tier`] changes the tier, which re-measures on
+/// the next read — `calibration`-scaled kernel selection always reflects
+/// the tier actually dispatching.
+pub fn probe() -> KernelProbe {
+    let tier = active_tier();
+    let mut cached = PROBE.lock().unwrap();
+    if let Some(p) = *cached {
+        if p.tier == tier {
+            return p;
+        }
+    }
+    let p = run_probe(tier);
+    *cached = Some(p);
+    p
 }
 
 /// Multiplier applied to the kernel-selection flop thresholds, calibrated
@@ -545,7 +741,7 @@ mod tests {
     use crate::testutil::Prng;
 
     fn available_tiers() -> Vec<KernelTier> {
-        [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native]
+        [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native, KernelTier::Avx512]
             .into_iter()
             .filter(|t| t.available())
             .collect()
@@ -781,12 +977,36 @@ mod tests {
         assert_eq!(KernelTier::parse("scalar"), Some(KernelTier::Scalar));
         assert_eq!(KernelTier::parse("portable"), Some(KernelTier::Portable));
         assert_eq!(KernelTier::parse("native"), Some(KernelTier::Native));
+        assert_eq!(KernelTier::parse("avx512"), Some(KernelTier::Avx512));
         assert_eq!(KernelTier::parse("bogus"), None);
         assert!(KernelTier::Scalar.available());
         assert!(KernelTier::Portable.available());
+        // detection chain: the AVX-512 tier is only available when the
+        // crate was compiled with the feature AND the CPU reports it
+        if !cfg!(target_feature = "avx512f") {
+            assert!(!KernelTier::Avx512.available());
+        }
         let best = KernelTier::best_available();
         assert!(best.available());
         assert_ne!(best, KernelTier::Scalar);
+    }
+
+    #[test]
+    fn avx512_gemm_matches_scalar_bitwise() {
+        // the avx512 tier is safe blocked Rust: its numerics are testable
+        // on every machine regardless of hardware support, and it keeps
+        // the scalar per-element operation order exactly
+        let mut rng = Prng::new(11);
+        for (m, k, n) in [(1, 1, 1), (7, 5, 9), (8, 8, 16), (9, 17, 33), (20, 9, 18)] {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut want = c0.clone();
+            gemm_sub(KernelTier::Scalar, &mut want, n, &a, k, &b, n, m, k, n);
+            let mut c = c0.clone();
+            gemm_sub(KernelTier::Avx512, &mut c, n, &a, k, &b, n, m, k, n);
+            assert_eq!(c, want, "avx512 gemm must keep the scalar op order ({m},{k},{n})");
+        }
     }
 
     #[test]

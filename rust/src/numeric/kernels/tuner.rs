@@ -1,0 +1,738 @@
+//! Per-pattern kernel autotuner.
+//!
+//! The dispatch layer in [`super`] picks one kernel *tier* per process
+//! from a one-shot probe; real HYLU deployments factor the *same sparsity
+//! pattern* millions of times, which pays for much deeper tuning. This
+//! module searches a bounded variant space — GEMM register-tile shapes
+//! ([`TILE_VARIANTS`]: MR×NR ∈ {4×8, 8×8, 4×16, 8×16, 2×24}, k-loop
+//! unroll ∈ {1, 4}), A-operand packing on/off, and the TRSM
+//! gather-crossover thresholds — and times every candidate **on the
+//! pattern's own supernode shape histogram** (the same nodes×groups sweep
+//! that sizes the `ExecPlan` scratch bounds), weighted by each shape's
+//! flop share. The winner is recorded as a [`KernelPlan`] and cached
+//! inside the analysis' `ExecPlan`, so warm refactor+solve paths stay
+//! zero-alloc and zero-probe: tuning cost is paid once at analyze/tune
+//! time.
+//!
+//! Determinism: every tiled GEMM variant keeps one accumulator per C
+//! element, walks `k` ascending, and separates multiply from subtract, so
+//! it is **bit-identical to the scalar reference** (no FMA contraction) —
+//! swapping variants never changes factor bits. The TRSM thresholds pick
+//! between the two existing per-tier paths (gather vs direct), which may
+//! differ by rounding within a tier; a plan is fixed per analysis, so
+//! refactor replay and parallel-vs-sequential bit-equality still hold.
+//! Tuned plans are memoized in-process per `(tier, pattern hash)` so two
+//! solvers analyzing the same pattern always agree on one plan.
+//!
+//! Persistence: with `HYLU_TUNE_CACHE=dir` set, winning plans are written
+//! to a small versioned text file keyed by `(format version, tier,
+//! pattern hash)` and reloaded on the next analyze of the same pattern —
+//! a service restart starts warm. Corrupt, truncated, or version-bumped
+//! entries are ignored (the search simply re-runs); cache writes are
+//! best-effort.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{gemm_sub, pack_rows, trsm_right_upper_with, KernelTier};
+use crate::symbolic::Symbolic;
+
+/// How much search effort `analyze` spends tuning kernels per pattern.
+/// Selected by `SolverBuilder::tuning` / `hylu bench --tuning`; the
+/// `HYLU_TUNING=off|quick|full` env var overrides the configured value
+/// (see [`effective`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tuning {
+    /// No search: every analysis uses the default [`KernelPlan`]
+    /// (exactly the pre-tuner behavior). The default.
+    Off,
+    /// Bounded search: top 3 histogram shapes, unroll-4 tile variants
+    /// only, few timing reps. Adds on the order of milliseconds to
+    /// analyze.
+    Quick,
+    /// Full search: top 8 histogram shapes, every tile variant, more
+    /// timing reps.
+    Full,
+}
+
+impl Tuning {
+    /// Parse a tuning level name (`off` / `quick` / `full`).
+    pub fn parse(s: &str) -> Option<Tuning> {
+        match s {
+            "off" => Some(Tuning::Off),
+            "quick" => Some(Tuning::Quick),
+            "full" => Some(Tuning::Full),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Tuning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tuning::Off => write!(f, "off"),
+            Tuning::Quick => write!(f, "quick"),
+            Tuning::Full => write!(f, "full"),
+        }
+    }
+}
+
+/// The configured tuning level with the `HYLU_TUNING` env override
+/// applied (set and parseable wins; anything else keeps `cfg`). This is
+/// what lets a CI leg or an operator flip tuning on without touching
+/// call sites.
+pub fn effective(cfg: Tuning) -> Tuning {
+    match std::env::var("HYLU_TUNING") {
+        Ok(s) if !s.is_empty() => Tuning::parse(&s).unwrap_or(cfg),
+        _ => cfg,
+    }
+}
+
+/// GEMM inner-kernel choice inside a [`KernelPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmVariant {
+    /// The active tier's own microkernel (the untuned default).
+    Tier,
+    /// Register-tiled variant: `mr`×`nr` C tile held in accumulators
+    /// across the whole k loop, k loop unrolled by `ku`. Bit-identical
+    /// to the scalar reference on every shape.
+    Tiled {
+        /// Tile rows.
+        mr: u8,
+        /// Tile columns.
+        nr: u8,
+        /// k-loop unroll factor.
+        ku: u8,
+    },
+}
+
+impl std::fmt::Display for GemmVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GemmVariant::Tier => write!(f, "tier"),
+            GemmVariant::Tiled { mr, nr, ku } => write!(f, "tiled {mr}x{nr}/u{ku}"),
+        }
+    }
+}
+
+/// Winning kernel configuration for one analyzed pattern. Cached in
+/// `ExecPlan::kernel`; [`KernelPlan::default`] reproduces the untuned
+/// behavior exactly (tier microkernel, strided A, the historical
+/// `len >= 48 && m >= 8` TRSM gather crossover).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelPlan {
+    /// Which GEMM inner kernel the sup-sup update uses.
+    pub gemm: GemmVariant,
+    /// Pack the GEMM A operand (the target panel's L-part columns) into
+    /// the `Workspace::abuf` arena so both operands stream contiguously.
+    pub pack_a: bool,
+    /// Minimum triangle size for the TRSM gather path.
+    pub trsm_min_len: usize,
+    /// Minimum target row count for the TRSM gather path.
+    pub trsm_min_m: usize,
+}
+
+impl Default for KernelPlan {
+    fn default() -> Self {
+        KernelPlan { gemm: GemmVariant::Tier, pack_a: false, trsm_min_len: 48, trsm_min_m: 8 }
+    }
+}
+
+impl std::fmt::Display for KernelPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gemm={} pack_a={} trsm>=({},{})",
+            self.gemm,
+            if self.pack_a { "on" } else { "off" },
+            self.trsm_min_len,
+            self.trsm_min_m
+        )
+    }
+}
+
+/// The enumerated GEMM tile variant space: `(MR, NR, KU)` triples. Every
+/// triple here has a monomorphized kernel instance in
+/// [`gemm_sub_tiled`]; the disk cache rejects triples outside this list
+/// (a stale entry from an older variant space must not dispatch to the
+/// scalar fallback silently).
+pub const TILE_VARIANTS: [(u8, u8, u8); 10] = [
+    (4, 8, 1),
+    (4, 8, 4),
+    (8, 8, 1),
+    (8, 8, 4),
+    (4, 16, 1),
+    (4, 16, 4),
+    (8, 16, 1),
+    (8, 16, 4),
+    (2, 24, 1),
+    (2, 24, 4),
+];
+
+// ---------------------------------------------------------------------
+// Tiled GEMM variants
+// ---------------------------------------------------------------------
+
+/// One monomorphized tile variant of `gemm_sub`: MR×NR C tile held in
+/// per-element accumulators across the whole k loop (unrolled by KU),
+/// 1×NR row-remainder strips, scalar-order column remainder. Each C
+/// element sees exactly the scalar reference's operation sequence
+/// (products subtracted one at a time, k ascending), so the result is
+/// bit-identical to [`super::KernelTier::Scalar`] for every shape.
+///
+/// # Safety
+/// `cp/ap/bp` must be valid for the strided `m×n`, `m×k`, `k×n` accesses,
+/// and the C range must not overlap A or B element-wise.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+unsafe fn gemm_sub_tile<const MR: usize, const NR: usize, const KU: usize>(
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut j = 0;
+    while j + NR <= n {
+        let mut i = 0;
+        while i + MR <= m {
+            let mut t = [[0.0f64; NR]; MR];
+            for r in 0..MR {
+                let crow = cp.add((i + r) * ldc + j);
+                for q in 0..NR {
+                    t[r][q] = *crow.add(q);
+                }
+            }
+            let mut p = 0;
+            while p + KU <= k {
+                for u in 0..KU {
+                    let pp = p + u;
+                    let brow = bp.add(pp * ldb + j);
+                    for r in 0..MR {
+                        let f = *ap.add((i + r) * lda + pp);
+                        for q in 0..NR {
+                            t[r][q] -= f * *brow.add(q);
+                        }
+                    }
+                }
+                p += KU;
+            }
+            while p < k {
+                let brow = bp.add(p * ldb + j);
+                for r in 0..MR {
+                    let f = *ap.add((i + r) * lda + p);
+                    for q in 0..NR {
+                        t[r][q] -= f * *brow.add(q);
+                    }
+                }
+                p += 1;
+            }
+            for r in 0..MR {
+                let crow = cp.add((i + r) * ldc + j);
+                for q in 0..NR {
+                    *crow.add(q) = t[r][q];
+                }
+            }
+            i += MR;
+        }
+        // row remainder (m % MR): 1×NR strips
+        while i < m {
+            let mut t = [0.0f64; NR];
+            let crow = cp.add(i * ldc + j);
+            for q in 0..NR {
+                t[q] = *crow.add(q);
+            }
+            let arow = ap.add(i * lda);
+            for p in 0..k {
+                let f = *arow.add(p);
+                let brow = bp.add(p * ldb + j);
+                for q in 0..NR {
+                    t[q] -= f * *brow.add(q);
+                }
+            }
+            for q in 0..NR {
+                *crow.add(q) = t[q];
+            }
+            i += 1;
+        }
+        j += NR;
+    }
+    if j < n {
+        // column remainder strip (n % NR): scalar-order loop, same
+        // per-element update sequence
+        super::scalar::gemm_sub_raw(cp.add(j), ldc, ap, lda, bp.add(j), ldb, m, k, n - j);
+    }
+}
+
+/// Runtime dispatch over the monomorphized [`TILE_VARIANTS`] instances.
+/// Unknown triples (possible only via a hand-edited plan) run the scalar
+/// reference, which every variant is bit-identical to anyway.
+///
+/// # Safety
+/// Same contract as [`gemm_sub_tile`].
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_sub_tiled(
+    mr: u8,
+    nr: u8,
+    ku: u8,
+    cp: *mut f64,
+    ldc: usize,
+    ap: *const f64,
+    lda: usize,
+    bp: *const f64,
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    match (mr, nr, ku) {
+        (4, 8, 1) => gemm_sub_tile::<4, 8, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 8, 4) => gemm_sub_tile::<4, 8, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 8, 1) => gemm_sub_tile::<8, 8, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 8, 4) => gemm_sub_tile::<8, 8, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 16, 1) => gemm_sub_tile::<4, 16, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 16, 4) => gemm_sub_tile::<4, 16, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 16, 1) => gemm_sub_tile::<8, 16, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 16, 4) => gemm_sub_tile::<8, 16, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (2, 24, 1) => gemm_sub_tile::<2, 24, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (2, 24, 4) => gemm_sub_tile::<2, 24, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        _ => super::scalar::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shape histogram + candidate timing
+// ---------------------------------------------------------------------
+
+/// One aggregated sup-sup GEMM shape from the pattern: `m×k×n` =
+/// (target width × group length × source U-tail), weighted by its total
+/// flop share across the whole factorization.
+#[derive(Clone, Copy, Debug)]
+pub struct Shape {
+    /// GEMM rows (target panel width).
+    pub m: usize,
+    /// GEMM depth (update group length = triangle size of the TRSM).
+    pub k: usize,
+    /// GEMM columns (source U-tail width).
+    pub n: usize,
+    /// Total `2·m·k·n` flop weight of every group with this shape.
+    pub weight: f64,
+}
+
+/// Aggregate the pattern's sup-sup update shapes (the same nodes×groups
+/// sweep `ExecPlan::build` uses for its scratch bounds), heaviest first,
+/// truncated to `cap` entries. Empty when the pattern has no sup-sup
+/// updates — nothing to tune.
+pub fn shape_histogram(sym: &Symbolic, cap: usize) -> Vec<Shape> {
+    use std::collections::HashMap;
+    let mut acc: HashMap<(usize, usize, usize), f64> = HashMap::new();
+    for node in &sym.nodes {
+        if !node.is_super {
+            continue;
+        }
+        let w = node.width as usize;
+        for g in &sym.groups[node.g_start..node.g_end] {
+            let src = &sym.nodes[g.src as usize];
+            if !src.is_super {
+                continue;
+            }
+            let len = g.len as usize;
+            let s_nu = src.nu();
+            if len == 0 || s_nu == 0 {
+                continue;
+            }
+            *acc.entry((w, len, s_nu)).or_insert(0.0) += 2.0 * (w * len * s_nu) as f64;
+        }
+    }
+    let mut shapes: Vec<Shape> =
+        acc.into_iter().map(|((m, k, n), weight)| Shape { m, k, n, weight }).collect();
+    // heaviest first; deterministic tie-break on the shape key
+    shapes.sort_by(|a, b| {
+        b.weight
+            .partial_cmp(&a.weight)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then((a.m, a.k, a.n).cmp(&(b.m, b.k, b.n)))
+    });
+    shapes.truncate(cap);
+    shapes
+}
+
+/// Deterministic pseudo-values for timing buffers (same idiom as the
+/// dispatch probe).
+fn fill(buf: &mut [f64], phase: usize) {
+    for (i, v) in buf.iter_mut().enumerate() {
+        *v = (((i + phase) % 13) as f64 - 6.0) * 0.125;
+    }
+}
+
+/// Best-of-`reps` wall time of one GEMM candidate on one shape. A is laid
+/// out strided (`lda = k + 8`, mimicking the panel read); `pack_a`
+/// candidates pay the pack inside the timed region, exactly as the factor
+/// kernel would.
+fn bench_gemm(
+    tier: KernelTier,
+    variant: GemmVariant,
+    pack_a: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+    reps: usize,
+) -> f64 {
+    let lda_strided = k + 8;
+    let mut a = vec![0.0f64; m * lda_strided];
+    let mut b = vec![0.0f64; k * n];
+    let mut c = vec![0.0f64; m * n];
+    fill(&mut a, 1);
+    fill(&mut b, 2);
+    fill(&mut c, 3);
+    let mut abuf: Vec<f64> = Vec::with_capacity(m * k);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (ap, lda): (&[f64], usize) = if pack_a {
+            pack_rows(&mut abuf, &a, lda_strided, m, k);
+            (&abuf, k)
+        } else {
+            (&a, lda_strided)
+        };
+        match variant {
+            GemmVariant::Tier => gemm_sub(tier, &mut c, n, ap, lda, &b, n, m, k, n),
+            GemmVariant::Tiled { mr, nr, ku } => unsafe {
+                gemm_sub_tiled(mr, nr, ku, c.as_mut_ptr(), n, ap.as_ptr(), lda, b.as_ptr(), n, m, k, n)
+            },
+        }
+        std::hint::black_box(&c);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Best-of-`reps` wall times of the TRSM (gather path, direct path) on a
+/// `len`-triangle against `m` target rows.
+fn bench_trsm(tier: KernelTier, len: usize, m: usize, reps: usize) -> (f64, f64) {
+    let ldu = len;
+    let mut u = vec![0.0f64; len * ldu];
+    for r in 0..len {
+        for c in r..len {
+            u[r * ldu + c] = if r == c { 2.0 + ((c % 5) as f64) * 0.1 } else { 0.01 };
+        }
+    }
+    let mut x0 = vec![0.0f64; m * len];
+    fill(&mut x0, 5);
+    let mut x = x0.clone();
+    let mut scratch = Vec::new();
+    let mut time_path = |min_len: usize, min_m: usize| {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            x.copy_from_slice(&x0);
+            let t0 = Instant::now();
+            trsm_right_upper_with(
+                tier,
+                &mut x,
+                len,
+                0,
+                m,
+                &u,
+                ldu,
+                0,
+                0,
+                len,
+                &mut scratch,
+                min_len,
+                min_m,
+            );
+            std::hint::black_box(&x);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let gather = time_path(0, 0);
+    let direct = time_path(usize::MAX, usize::MAX);
+    (gather, direct)
+}
+
+/// The TRSM crossover candidates: three graded thresholds plus "gather
+/// off". `(48, 8)` is the historical default.
+const TRSM_CANDIDATES: [(usize, usize); 4] =
+    [(32, 4), (48, 8), (64, 16), (usize::MAX, usize::MAX)];
+
+fn pick_trsm(tier: KernelTier, shapes: &[Shape], reps: usize) -> (usize, usize) {
+    if tier == KernelTier::Scalar {
+        // the gather path never triggers on the scalar tier
+        return (48, 8);
+    }
+    // time both paths once per shape, then score every candidate from the
+    // same measurements (deterministic given the timings)
+    let timed: Vec<(usize, usize, f64, f64, f64)> = shapes
+        .iter()
+        .map(|s| {
+            let len = s.k.clamp(1, 192);
+            let m = s.m.clamp(1, 48);
+            let (gather, direct) = bench_trsm(tier, len, m, reps);
+            (len, m, s.weight, gather, direct)
+        })
+        .collect();
+    let mut best = (48usize, 8usize);
+    let mut best_cost = f64::INFINITY;
+    for (min_len, min_m) in TRSM_CANDIDATES {
+        let cost: f64 = timed
+            .iter()
+            .map(|&(len, m, w, gather, direct)| {
+                w * if len >= min_len && m >= min_m { gather } else { direct }
+            })
+            .sum();
+        if cost < best_cost {
+            best_cost = cost;
+            best = (min_len, min_m);
+        }
+    }
+    best
+}
+
+/// The GEMM candidate list for one tuning level: the tier's own kernel
+/// plus the tile variants (Quick keeps only the unroll-4 tiles).
+fn candidate_variants(tuning: Tuning) -> Vec<GemmVariant> {
+    let mut v = vec![GemmVariant::Tier];
+    for &(mr, nr, ku) in TILE_VARIANTS.iter() {
+        if tuning == Tuning::Quick && ku != 4 {
+            continue;
+        }
+        v.push(GemmVariant::Tiled { mr, nr, ku });
+    }
+    v
+}
+
+/// Run the search: time every candidate on the pattern's shape histogram
+/// and return the flop-weighted winner. Does not consult any cache — use
+/// [`tune_cached`] from the analyze path.
+pub fn search(sym: &Symbolic, tier: KernelTier, tuning: Tuning) -> KernelPlan {
+    let (cap, reps) = match tuning {
+        Tuning::Off => return KernelPlan::default(),
+        Tuning::Quick => (3, 3),
+        Tuning::Full => (8, 5),
+    };
+    let shapes = shape_histogram(sym, cap);
+    if shapes.is_empty() {
+        // no sup-sup updates: the dense GEMM never runs on this pattern
+        return KernelPlan::default();
+    }
+    let mut best = (GemmVariant::Tier, false);
+    let mut best_cost = f64::INFINITY;
+    for variant in candidate_variants(tuning) {
+        for pack_a in [false, true] {
+            let cost: f64 = shapes
+                .iter()
+                .map(|s| {
+                    s.weight
+                        * bench_gemm(
+                            tier,
+                            variant,
+                            pack_a,
+                            s.m.clamp(1, 96),
+                            s.k.clamp(1, 384),
+                            s.n.clamp(1, 384),
+                            reps,
+                        )
+                })
+                .sum();
+            if cost < best_cost {
+                best_cost = cost;
+                best = (variant, pack_a);
+            }
+        }
+    }
+    let (trsm_min_len, trsm_min_m) = pick_trsm(tier, &shapes, reps);
+    KernelPlan { gemm: best.0, pack_a: best.1, trsm_min_len, trsm_min_m }
+}
+
+// ---------------------------------------------------------------------
+// In-process memo + on-disk cache
+// ---------------------------------------------------------------------
+
+/// In-process memo of tuned plans keyed by `(tier, pattern hash)`: two
+/// solvers analyzing the same pattern in one process must agree on one
+/// plan (timing noise would otherwise let their TRSM thresholds — the one
+/// non-bit-identical knob — diverge).
+static MEMO: Mutex<Vec<(KernelTier, u64, KernelPlan)>> = Mutex::new(Vec::new());
+const MEMO_CAP: usize = 32;
+
+fn memo_get(tier: KernelTier, hash: u64) -> Option<KernelPlan> {
+    let memo = MEMO.lock().unwrap();
+    memo.iter().find(|e| e.0 == tier && e.1 == hash).map(|e| e.2)
+}
+
+fn memo_put(tier: KernelTier, hash: u64, plan: KernelPlan) {
+    let mut memo = MEMO.lock().unwrap();
+    if memo.iter().any(|e| e.0 == tier && e.1 == hash) {
+        return;
+    }
+    if memo.len() >= MEMO_CAP {
+        memo.remove(0);
+    }
+    memo.push((tier, hash, plan));
+}
+
+/// On-disk cache format version; bumped whenever [`KernelPlan`] or the
+/// variant space changes meaning. Entries from other versions are
+/// ignored (both the filename and the header carry it).
+pub const TUNE_CACHE_VERSION: u32 = 1;
+
+fn cache_dir() -> Option<PathBuf> {
+    match std::env::var("HYLU_TUNE_CACHE") {
+        Ok(s) if !s.is_empty() => Some(PathBuf::from(s)),
+        _ => None,
+    }
+}
+
+fn cache_path(dir: &Path, tier: KernelTier, hash: u64) -> PathBuf {
+    dir.join(format!("hylu-tune-v{TUNE_CACHE_VERSION}-{tier}-{hash:016x}.txt"))
+}
+
+/// Best-effort write of a tuned plan to the on-disk cache directory
+/// (created if missing; I/O errors are ignored — the cache is an
+/// optimization, never a correctness dependency).
+pub fn store_cached(dir: &Path, tier: KernelTier, hash: u64, plan: &KernelPlan) {
+    let _ = std::fs::create_dir_all(dir);
+    let gemm = match plan.gemm {
+        GemmVariant::Tier => "tier".to_string(),
+        GemmVariant::Tiled { mr, nr, ku } => format!("tiled {mr} {nr} {ku}"),
+    };
+    let body = format!(
+        "hylu-tune-cache v{TUNE_CACHE_VERSION}\ngemm {gemm}\npack_a {}\ntrsm {} {}\n",
+        plan.pack_a as u8,
+        plan.trsm_min_len,
+        plan.trsm_min_m
+    );
+    let _ = std::fs::write(cache_path(dir, tier, hash), body);
+}
+
+/// Load a tuned plan from the on-disk cache. Returns `None` — never an
+/// error — for missing, truncated, garbage, version-bumped, or
+/// out-of-variant-space entries.
+pub fn load_cached(dir: &Path, tier: KernelTier, hash: u64) -> Option<KernelPlan> {
+    let text = std::fs::read_to_string(cache_path(dir, tier, hash)).ok()?;
+    parse_plan(&text)
+}
+
+fn parse_plan(text: &str) -> Option<KernelPlan> {
+    let mut lines = text.lines();
+    if lines.next()? != format!("hylu-tune-cache v{TUNE_CACHE_VERSION}").as_str() {
+        return None;
+    }
+    let mut gemm = None;
+    let mut pack_a = None;
+    let mut trsm = None;
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("gemm") => match it.next()? {
+                "tier" => gemm = Some(GemmVariant::Tier),
+                "tiled" => {
+                    let mr: u8 = it.next()?.parse().ok()?;
+                    let nr: u8 = it.next()?.parse().ok()?;
+                    let ku: u8 = it.next()?.parse().ok()?;
+                    if !TILE_VARIANTS.contains(&(mr, nr, ku)) {
+                        return None;
+                    }
+                    gemm = Some(GemmVariant::Tiled { mr, nr, ku });
+                }
+                _ => return None,
+            },
+            Some("pack_a") => {
+                pack_a = Some(match it.next()? {
+                    "0" => false,
+                    "1" => true,
+                    _ => return None,
+                })
+            }
+            Some("trsm") => {
+                let l: usize = it.next()?.parse().ok()?;
+                let m: usize = it.next()?.parse().ok()?;
+                trsm = Some((l, m));
+            }
+            Some(_) => return None,
+            None => {} // blank line
+        }
+    }
+    let (trsm_min_len, trsm_min_m) = trsm?;
+    Some(KernelPlan { gemm: gemm?, pack_a: pack_a?, trsm_min_len, trsm_min_m })
+}
+
+/// The analyze-path entry point: resolve a plan for `(tier, pattern)`
+/// through the in-process memo, then the optional on-disk cache
+/// (`HYLU_TUNE_CACHE=dir`), then a fresh [`search`]; winners propagate
+/// back into both caches. `Tuning::Off` short-circuits to the default
+/// plan with zero probing.
+pub fn tune_cached(sym: &Symbolic, tier: KernelTier, tuning: Tuning, pattern_hash: u64) -> KernelPlan {
+    if tuning == Tuning::Off {
+        return KernelPlan::default();
+    }
+    if let Some(p) = memo_get(tier, pattern_hash) {
+        return p;
+    }
+    if let Some(dir) = cache_dir() {
+        if let Some(p) = load_cached(&dir, tier, pattern_hash) {
+            memo_put(tier, pattern_hash, p);
+            return p;
+        }
+    }
+    let plan = search(sym, tier, tuning);
+    memo_put(tier, pattern_hash, plan);
+    if let Some(dir) = cache_dir() {
+        store_cached(&dir, tier, pattern_hash, &plan);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_roundtrips_through_the_text_format() {
+        for gemm in [GemmVariant::Tier, GemmVariant::Tiled { mr: 8, nr: 16, ku: 4 }] {
+            for pack_a in [false, true] {
+                let plan =
+                    KernelPlan { gemm, pack_a, trsm_min_len: 32, trsm_min_m: 4 };
+                let gemm_txt = match plan.gemm {
+                    GemmVariant::Tier => "tier".to_string(),
+                    GemmVariant::Tiled { mr, nr, ku } => format!("tiled {mr} {nr} {ku}"),
+                };
+                let body = format!(
+                    "hylu-tune-cache v{TUNE_CACHE_VERSION}\ngemm {gemm_txt}\npack_a {}\ntrsm {} {}\n",
+                    plan.pack_a as u8, plan.trsm_min_len, plan.trsm_min_m
+                );
+                assert_eq!(parse_plan(&body), Some(plan));
+            }
+        }
+    }
+
+    #[test]
+    fn parser_rejects_bad_entries() {
+        assert_eq!(parse_plan(""), None);
+        assert_eq!(parse_plan("hylu-tune-cache v999\ngemm tier\npack_a 0\ntrsm 48 8\n"), None);
+        assert_eq!(
+            parse_plan("hylu-tune-cache v1\ngemm tiled 5 5 5\npack_a 0\ntrsm 48 8\n"),
+            None,
+            "out-of-variant-space tile must be rejected"
+        );
+        assert_eq!(parse_plan("hylu-tune-cache v1\ngemm tier\n"), None, "truncated");
+        assert_eq!(parse_plan("garbage\nbytes"), None);
+    }
+
+    #[test]
+    fn effective_defaults_to_configured_level() {
+        // HYLU_TUNING is not set in the test environment
+        if std::env::var("HYLU_TUNING").is_err() {
+            assert_eq!(effective(Tuning::Quick), Tuning::Quick);
+            assert_eq!(effective(Tuning::Off), Tuning::Off);
+        }
+    }
+}

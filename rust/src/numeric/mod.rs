@@ -113,6 +113,9 @@ pub struct Workspace {
     /// GEMM B-operand packing scratch (source-panel U-tail sliver,
     /// gathered contiguous once per target panel).
     pub pbuf: Vec<f64>,
+    /// GEMM A-operand packing scratch (target-panel L-part columns,
+    /// gathered contiguous when the tuned `KernelPlan` enables A packing).
+    pub abuf: Vec<f64>,
 }
 
 impl Workspace {
@@ -125,6 +128,7 @@ impl Workspace {
             tbuf: Vec::new(),
             map_idx: Vec::new(),
             pbuf: Vec::new(),
+            abuf: Vec::new(),
         }
     }
 
@@ -148,7 +152,7 @@ impl Workspace {
     }
 
     /// Pre-reserve the kernel scratch vectors (`cbuf`/`tbuf`/`map_idx`/
-    /// `pbuf`) to the given capacities so the numeric kernels never
+    /// `pbuf`/`abuf`) to the given capacities so the numeric kernels never
     /// reallocate mid-factorization. Returns `true` when any buffer grew.
     pub fn reserve_kernel(
         &mut self,
@@ -156,6 +160,7 @@ impl Workspace {
         tbuf: usize,
         map_idx: usize,
         pbuf: usize,
+        abuf: usize,
     ) -> bool {
         let mut grew = false;
         if self.cbuf.capacity() < cbuf {
@@ -172,6 +177,10 @@ impl Workspace {
         }
         if self.pbuf.capacity() < pbuf {
             self.pbuf.reserve(pbuf - self.pbuf.len());
+            grew = true;
+        }
+        if self.abuf.capacity() < abuf {
+            self.abuf.reserve(abuf - self.abuf.len());
             grew = true;
         }
         grew

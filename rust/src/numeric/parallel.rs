@@ -83,15 +83,24 @@ pub fn factor_parallel_pooled(
     pool.run(
         || done.reset(),
         |t, ctx| {
-            let ws =
-                ctx.workspace(sym.n, plan.max_cbuf, plan.max_tbuf, plan.max_map, plan.max_pbuf);
+            let ws = ctx.workspace(
+                sym.n,
+                plan.max_cbuf,
+                plan.max_tbuf,
+                plan.max_map,
+                plan.max_pbuf,
+                plan.max_abuf,
+            );
+            let kp = &plan.kernel;
             if sequential {
                 if t == 0 {
                     for id in 0..sym.nodes.len() {
                         // Safety: sequential — every source node is
                         // complete in program order.
                         unsafe {
-                            factor_node(id, a, sym, &sf, ws, mode, cfg, eps_abs, refactor, gemm)
+                            factor_node(
+                                id, a, sym, &sf, ws, mode, cfg, eps_abs, refactor, gemm, kp,
+                            )
                         };
                     }
                 }
@@ -117,6 +126,7 @@ pub fn factor_parallel_pooled(
                             eps_abs,
                             refactor,
                             gemm,
+                            kp,
                         )
                     };
                     done.set(id as usize);
@@ -135,7 +145,9 @@ pub fn factor_parallel_pooled(
                     done.wait(g.src as usize);
                 }
                 // Safety: all deps observed complete (Acquire above).
-                unsafe { factor_node(id, a, sym, &sf, ws, mode, cfg, eps_abs, refactor, gemm) };
+                unsafe {
+                    factor_node(id, a, sym, &sf, ws, mode, cfg, eps_abs, refactor, gemm, kp)
+                };
                 done.set(id);
             }
         },

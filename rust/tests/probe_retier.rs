@@ -1,0 +1,62 @@
+//! Regression test for the stale-calibration bug: re-pinning the
+//! dispatch tier with `set_tier` must invalidate the cached throughput
+//! probe so kernel selection is calibrated against the tier actually
+//! dispatching (the old `OnceLock` probe kept the first tier's
+//! measurement forever).
+//!
+//! `set_tier` is process-global state, so this whole scenario lives in
+//! ONE test function in its OWN test binary — it must not run next to
+//! tests that assume the default tier.
+
+use hylu::numeric::kernels::{self, KernelTier};
+
+#[test]
+fn probe_and_calibration_follow_tier_repinning() {
+    let original = kernels::active_tier();
+
+    // pin scalar: the probe must measure scalar (advantage ~1 by
+    // construction: the probe races the tier kernel against the scalar
+    // reference, and here they are the same kernel)
+    kernels::set_tier(KernelTier::Scalar);
+    let p_scalar = kernels::probe();
+    assert_eq!(p_scalar.tier, KernelTier::Scalar);
+    assert!(
+        p_scalar.advantage() > 0.3 && p_scalar.advantage() < 3.0,
+        "scalar-vs-scalar probe advantage should be near 1, got {:.2}",
+        p_scalar.advantage()
+    );
+
+    // re-pin portable: the cached scalar probe is stale and must be
+    // re-measured, not returned
+    kernels::set_tier(KernelTier::Portable);
+    let p_portable = kernels::probe();
+    assert_eq!(
+        p_portable.tier,
+        KernelTier::Portable,
+        "probe returned a stale measurement from the previous tier"
+    );
+
+    // repeated reads without a tier change reuse the cached measurement
+    let again = kernels::probe();
+    assert_eq!(again.tier, KernelTier::Portable);
+    assert_eq!(again.gemm_gflops.to_bits(), p_portable.gemm_gflops.to_bits());
+    assert_eq!(again.scalar_gflops.to_bits(), p_portable.scalar_gflops.to_bits());
+
+    // calibration always reflects the *current* tier's probe and stays in
+    // its clamped stability band
+    for tier in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Native, KernelTier::Avx512]
+    {
+        if !tier.available() {
+            continue;
+        }
+        kernels::set_tier(tier);
+        let c = kernels::calibration();
+        assert!(
+            (0.9..=1.5).contains(&c),
+            "calibration for {tier} out of band: {c:.3}"
+        );
+        assert_eq!(kernels::probe().tier, tier);
+    }
+
+    kernels::set_tier(original);
+}

@@ -1,0 +1,374 @@
+//! Autotuner contract tests.
+//!
+//! - Every enumerated GEMM tile variant (and the avx512 tier, whose
+//!   dispatch arm is safe Rust and therefore callable everywhere) is
+//!   **bit-identical** to the scalar reference, including every remainder
+//!   edge around the tile boundaries — swapping kernel plans must never
+//!   change factor bits.
+//! - A-operand packing is bit-neutral: same values, same FP order, only
+//!   the leading dimension changes.
+//! - The on-disk tune cache round-trips plans and tolerates truncated,
+//!   garbage, and version-bumped files (returns `None`, never errors).
+//! - `Tuning::Quick` end to end: tuned solves are correct, and warm
+//!   refactor replay under a tuned plan is bitwise deterministic.
+
+use hylu::numeric::kernels::{self, tuner, GemmVariant, KernelPlan, KernelTier, Tuning};
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::symbolic::{analyze_pattern, MergePolicy};
+
+/// Deterministic non-trivial fill (matches the tuner's probe idiom).
+fn fill(buf: &mut [f64], phase: usize) {
+    for (i, v) in buf.iter_mut().enumerate() {
+        *v = (((i * 7 + phase * 13) % 23) as f64 - 11.0) * 0.0625;
+    }
+}
+
+/// Edge sizes around a tile boundary `t`: 1, small odds, t-1, t, t+1.
+fn edges(t: usize) -> Vec<usize> {
+    let mut v = vec![1, 3, 7, t.saturating_sub(1), t, t + 1, 2 * t + 3];
+    v.retain(|&x| x > 0);
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Scalar-reference GEMM into a fresh copy of `c0`.
+#[allow(clippy::too_many_arguments)]
+fn scalar_ref(
+    c0: &[f64],
+    ldc: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f64> {
+    let mut c = c0.to_vec();
+    kernels::gemm_sub(KernelTier::Scalar, &mut c, ldc, a, lda, b, ldb, m, k, n);
+    c
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs ({g:e} vs {w:e})"
+        );
+    }
+}
+
+#[test]
+fn every_tile_variant_is_bit_identical_to_scalar_on_remainder_edges() {
+    for &(mr, nr, ku) in tuner::TILE_VARIANTS.iter() {
+        for m in edges(mr as usize) {
+            for n in edges(nr as usize) {
+                for k in edges(ku as usize).into_iter().chain([13]) {
+                    let (lda, ldb, ldc) = (k + 3, n + 2, n + 5);
+                    let mut a = vec![0.0; m * lda];
+                    let mut b = vec![0.0; k * ldb];
+                    let mut c0 = vec![0.0; m * ldc];
+                    fill(&mut a, 1);
+                    fill(&mut b, 2);
+                    fill(&mut c0, 3);
+                    let want = scalar_ref(&c0, ldc, &a, lda, &b, ldb, m, k, n);
+                    let mut c = c0.clone();
+                    unsafe {
+                        tuner::gemm_sub_tiled(
+                            mr,
+                            nr,
+                            ku,
+                            c.as_mut_ptr(),
+                            ldc,
+                            a.as_ptr(),
+                            lda,
+                            b.as_ptr(),
+                            ldb,
+                            m,
+                            k,
+                            n,
+                        );
+                    }
+                    assert_bits_eq(&c, &want, &format!("tile {mr}x{nr}/u{ku} m={m} k={k} n={n}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn avx512_gemm_is_bit_identical_to_scalar() {
+    // the avx512 dispatch arm is blocked safe Rust (no intrinsics), so it
+    // runs — and must match scalar bits — whether or not the CPU/compile
+    // flags make it the *preferred* tier
+    for m in [1usize, 3, 7, 8, 9, 15, 16, 17, 33] {
+        for n in [1usize, 3, 7, 15, 16, 17, 31, 33] {
+            for k in [1usize, 5, 8, 24] {
+                let (lda, ldb, ldc) = (k + 1, n + 4, n + 1);
+                let mut a = vec![0.0; m * lda];
+                let mut b = vec![0.0; k * ldb];
+                let mut c0 = vec![0.0; m * ldc];
+                fill(&mut a, 4);
+                fill(&mut b, 5);
+                fill(&mut c0, 6);
+                let want = scalar_ref(&c0, ldc, &a, lda, &b, ldb, m, k, n);
+                let mut c = c0.clone();
+                kernels::gemm_sub(KernelTier::Avx512, &mut c, ldc, &a, lda, &b, ldb, m, k, n);
+                assert_bits_eq(&c, &want, &format!("avx512 m={m} k={k} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_a_is_bit_neutral_for_every_plan() {
+    let (m, k, n) = (17usize, 13usize, 29usize);
+    let lda = k + 6;
+    let mut a = vec![0.0; m * lda];
+    let mut b = vec![0.0; k * n];
+    let mut c0 = vec![0.0; m * n];
+    fill(&mut a, 7);
+    fill(&mut b, 8);
+    fill(&mut c0, 9);
+    let mut packed = Vec::new();
+    kernels::pack_rows(&mut packed, &a, lda, m, k);
+    assert_eq!(packed.len(), m * k);
+    let mut variants = vec![GemmVariant::Tier];
+    variants.extend(
+        tuner::TILE_VARIANTS
+            .iter()
+            .map(|&(mr, nr, ku)| GemmVariant::Tiled { mr, nr, ku }),
+    );
+    for tier in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Avx512] {
+        for gemm in &variants {
+            let plan = KernelPlan { gemm: *gemm, ..Default::default() };
+            let mut c_strided = c0.clone();
+            kernels::gemm_sub_planned(tier, &plan, &mut c_strided, n, &a, lda, &b, n, m, k, n);
+            let mut c_packed = c0.clone();
+            kernels::gemm_sub_planned(tier, &plan, &mut c_packed, n, &packed, k, &b, n, m, k, n);
+            assert_bits_eq(
+                &c_packed,
+                &c_strided,
+                &format!("pack-A neutrality tier={tier} gemm={gemm}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn planned_gemm_tile_variants_match_scalar_through_the_dispatcher() {
+    let (m, k, n) = (19usize, 11usize, 27usize);
+    let mut a = vec![0.0; m * k];
+    let mut b = vec![0.0; k * n];
+    let mut c0 = vec![0.0; m * n];
+    fill(&mut a, 10);
+    fill(&mut b, 11);
+    fill(&mut c0, 12);
+    let want = scalar_ref(&c0, n, &a, k, &b, n, m, k, n);
+    for &(mr, nr, ku) in tuner::TILE_VARIANTS.iter() {
+        let plan = KernelPlan {
+            gemm: GemmVariant::Tiled { mr, nr, ku },
+            ..Default::default()
+        };
+        // any tier: the tiled variant overrides the tier microkernel
+        for tier in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Avx512] {
+            let mut c = c0.clone();
+            kernels::gemm_sub_planned(tier, &plan, &mut c, n, &a, k, &b, n, m, k, n);
+            assert_bits_eq(&c, &want, &format!("planned {mr}x{nr}/u{ku} on {tier}"));
+        }
+    }
+}
+
+#[test]
+fn trsm_threshold_paths_agree_numerically() {
+    // the two TRSM paths the tuned thresholds choose between may differ
+    // by rounding but must agree to solver-grade accuracy
+    let (m, len) = (24usize, 40usize);
+    let ldu = len + 1;
+    let mut u = vec![0.0; len * ldu];
+    for r in 0..len {
+        for c in r..len {
+            u[r * ldu + c] = if r == c {
+                3.0 + (c % 7) as f64 * 0.25
+            } else {
+                0.01 * ((r + c) % 5) as f64
+            };
+        }
+    }
+    let mut x0 = vec![0.0; m * len];
+    fill(&mut x0, 13);
+    let mut run = |min_len: usize, min_m: usize| {
+        let mut x = x0.clone();
+        let mut scratch = Vec::new();
+        kernels::trsm_right_upper_with(
+            KernelTier::Portable,
+            &mut x,
+            len,
+            0,
+            m,
+            &u,
+            ldu,
+            0,
+            0,
+            len,
+            &mut scratch,
+            min_len,
+            min_m,
+        );
+        x
+    };
+    let gather = run(0, 0);
+    let direct = run(usize::MAX, usize::MAX);
+    for (g, d) in gather.iter().zip(&direct) {
+        assert!(
+            (g - d).abs() <= 1e-12 * d.abs().max(1.0),
+            "TRSM gather/direct diverged: {g:e} vs {d:e}"
+        );
+    }
+}
+
+/// Unique-per-test temp dir (this binary's tests run concurrently).
+fn temp_cache_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hylu-tune-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn disk_cache_roundtrips_every_plan_shape() {
+    let dir = temp_cache_dir("roundtrip");
+    let tier = KernelTier::Portable;
+    let mut plans = vec![KernelPlan::default()];
+    for &(mr, nr, ku) in tuner::TILE_VARIANTS.iter() {
+        plans.push(KernelPlan {
+            gemm: GemmVariant::Tiled { mr, nr, ku },
+            pack_a: (mr + nr) % 2 == 0,
+            trsm_min_len: 32,
+            trsm_min_m: 4,
+        });
+    }
+    for (i, plan) in plans.iter().enumerate() {
+        let hash = 0xABCD_0000 + i as u64;
+        assert_eq!(tuner::load_cached(&dir, tier, hash), None, "cold cache");
+        tuner::store_cached(&dir, tier, hash, plan);
+        assert_eq!(tuner::load_cached(&dir, tier, hash), Some(*plan));
+        // keyed by tier too: another tier misses
+        assert_eq!(tuner::load_cached(&dir, KernelTier::Scalar, hash), None);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_cache_tolerates_truncated_garbage_and_version_bumped_files() {
+    let dir = temp_cache_dir("corrupt");
+    let tier = KernelTier::Portable;
+    let plan = KernelPlan {
+        gemm: GemmVariant::Tiled { mr: 8, nr: 16, ku: 4 },
+        pack_a: true,
+        trsm_min_len: 64,
+        trsm_min_m: 16,
+    };
+    tuner::store_cached(&dir, tier, 1, &plan);
+    let path = std::fs::read_dir(&dir)
+        .unwrap()
+        .next()
+        .unwrap()
+        .unwrap()
+        .path();
+    let good = std::fs::read_to_string(&path).unwrap();
+    assert!(good.starts_with(&format!("hylu-tune-cache v{}", tuner::TUNE_CACHE_VERSION)));
+
+    // truncated: drop the trsm line
+    let truncated: String = good.lines().take(3).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&path, truncated).unwrap();
+    assert_eq!(tuner::load_cached(&dir, tier, 1), None, "truncated file must be ignored");
+
+    // garbage bytes (not even UTF-8 structure the parser expects)
+    std::fs::write(&path, b"\x00\xffnot a plan\nat all\n").unwrap();
+    assert_eq!(tuner::load_cached(&dir, tier, 1), None, "garbage file must be ignored");
+
+    // version-bumped header in an otherwise valid body
+    let bumped = good.replacen(
+        &format!("v{}", tuner::TUNE_CACHE_VERSION),
+        &format!("v{}", tuner::TUNE_CACHE_VERSION + 1),
+        1,
+    );
+    std::fs::write(&path, bumped).unwrap();
+    assert_eq!(tuner::load_cached(&dir, tier, 1), None, "version bump must be ignored");
+
+    // out-of-variant-space tile from a hypothetical newer build
+    std::fs::write(
+        &path,
+        format!(
+            "hylu-tune-cache v{}\ngemm tiled 6 32 2\npack_a 0\ntrsm 48 8\n",
+            tuner::TUNE_CACHE_VERSION
+        ),
+    )
+    .unwrap();
+    assert_eq!(tuner::load_cached(&dir, tier, 1), None, "unknown tile must be ignored");
+
+    // and a good file still loads after all that
+    std::fs::write(&path, good).unwrap();
+    assert_eq!(tuner::load_cached(&dir, tier, 1), Some(plan));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tune_cached_is_memoized_per_pattern() {
+    let a = gen::grid2d(24, 24);
+    let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 32 }, 8);
+    let tier = kernels::active_tier();
+    // timing noise must not let two analyses of one pattern disagree
+    let p1 = tuner::tune_cached(&sym, tier, Tuning::Quick, 0xDEAD_BEEF);
+    let p2 = tuner::tune_cached(&sym, tier, Tuning::Quick, 0xDEAD_BEEF);
+    assert_eq!(p1, p2);
+    // Off always short-circuits to the default plan, even when memoized
+    assert_eq!(
+        tuner::tune_cached(&sym, tier, Tuning::Off, 0xDEAD_BEEF),
+        KernelPlan::default()
+    );
+}
+
+#[test]
+fn quick_tuning_end_to_end_is_correct_and_replay_deterministic() {
+    let a = gen::grid2d(40, 40);
+    let b = gen::rhs_for_ones(&a);
+    let vals = a.vals.clone();
+    let solver = SolverBuilder::new()
+        .repeated()
+        .threads(2)
+        .tuning(Tuning::Quick)
+        .build()
+        .unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let x1 = sys.solve(&b).unwrap();
+    let err = x1.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
+    assert!(err < 1e-8, "tuned solve drifted: |x-1| = {err:.3e}");
+    // warm refactor with identical values must replay bit-identically
+    // under the tuned plan (the plan is fixed per analysis)
+    sys.refactor(&vals).unwrap();
+    let x2 = sys.solve(&b).unwrap();
+    for (u, v) in x1.iter().zip(&x2) {
+        assert_eq!(u.to_bits(), v.to_bits(), "tuned refactor replay changed bits");
+    }
+}
+
+#[test]
+fn tuned_and_untuned_solvers_agree_numerically() {
+    let a = gen::circuit(1500, 3);
+    let b = gen::rhs_for_ones(&a);
+    let tuned = SolverBuilder::new().tuning(Tuning::Full).build().unwrap();
+    let untuned = SolverBuilder::new().build().unwrap();
+    let xt = tuned.analyze(&a).unwrap().factor().unwrap().solve(&b).unwrap();
+    let xu = untuned.analyze(&a).unwrap().factor().unwrap().solve(&b).unwrap();
+    for (t, u) in xt.iter().zip(&xu) {
+        assert!(
+            (t - u).abs() <= 1e-9 * u.abs().max(1.0),
+            "tuned vs untuned diverged: {t:e} vs {u:e}"
+        );
+    }
+}
