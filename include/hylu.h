@@ -58,7 +58,16 @@
  *       entries are ignored; writes are best-effort.
  *   HYLU_PROBE=off
  *       Disable the kernel-selection throughput calibration probe
- *       (pins the selection crossovers to their reference tuning). */
+ *       (pins the selection crossovers to their reference tuning).
+ *
+ * Precision: the C ABI is pinned to f64. Every handle created by
+ * hylu_create factors and solves in double precision regardless of the
+ * HYLU_PRECISION environment variable, which applies only to the Rust
+ * API's SolverBuilder-configured solvers (Precision::Mixed: f32 factor
+ * core + f64 refinement recovery with stall-driven f64 fallback). The
+ * values/rhs/solution types below (double) are the contract; a future
+ * mixed-precision ABI opt-in would be a new flag on hylu_create, not a
+ * behavior change to existing callers. */
 
 #ifndef HYLU_H
 #define HYLU_H

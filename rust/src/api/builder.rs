@@ -1,7 +1,7 @@
 //! Chained solver configuration ([`SolverBuilder`]) and per-solve
 //! refinement overrides ([`SolveOpts`]).
 
-use crate::coordinator::{RefineParams, SolverConfig};
+use crate::coordinator::{Precision, RefineParams, SolverConfig};
 use crate::numeric::kernels::Tuning;
 use crate::numeric::select::KernelMode;
 use crate::ordering::OrderingChoice;
@@ -126,6 +126,16 @@ impl SolverBuilder {
         self
     }
 
+    /// Numeric precision policy (default [`Precision::F64`]).
+    /// [`Precision::Mixed`] factors in `f32` and recovers double
+    /// accuracy in `f64` iterative refinement, falling back to a full
+    /// `f64` refactorization when refinement stalls. Overridable
+    /// process-wide via the `HYLU_PRECISION` env var (`f64`/`mixed`).
+    pub fn precision(mut self, p: Precision) -> SolverBuilder {
+        self.cfg.precision = p;
+        self
+    }
+
     /// Route large sup-sup GEMMs through the XLA/PJRT AOT artifacts in
     /// `artifacts_dir` (ablation path; the native microkernel is
     /// default).
@@ -173,6 +183,7 @@ pub struct SolveOpts {
     refine_max_iter: Option<usize>,
     refine_tol: Option<f64>,
     refine_target: Option<f64>,
+    precision: Option<Precision>,
 }
 
 impl SolveOpts {
@@ -200,12 +211,22 @@ impl SolveOpts {
         self
     }
 
+    /// Precision override for this solve. `Precision::F64` forces the
+    /// solve onto `f64` factors even when the factorization is mixed
+    /// (building the recovery factors on first use); `Precision::Mixed`
+    /// is a no-op on a pure-`f64` factorization.
+    pub fn precision(mut self, p: Precision) -> SolveOpts {
+        self.precision = Some(p);
+        self
+    }
+
     pub(crate) fn resolve(&self, cfg: &SolverConfig) -> RefineParams {
         let d = RefineParams::from_config(cfg);
         RefineParams {
             max_iter: self.refine_max_iter.unwrap_or(d.max_iter),
             tol: self.refine_tol.unwrap_or(d.tol),
             target: self.refine_target.unwrap_or(d.target),
+            precision: self.precision,
         }
     }
 }

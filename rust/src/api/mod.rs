@@ -43,8 +43,8 @@ use std::marker::PhantomData;
 use std::sync::Arc;
 
 use crate::coordinator::{
-    Analysis, Factorization, FactorStats, RefineParams, Solver as Core, SolveStats, SolverConfig,
-    SymbolicStats,
+    Analysis, Factorization, FactorStats, Precision, RefineParams, Solver as Core, SolveStats,
+    SolverConfig, SymbolicStats,
 };
 use crate::exec::Engine;
 use crate::sparse::csr::Csr;
@@ -229,6 +229,19 @@ impl LinearSystem<Factored> {
     /// Statistics of the last (re)factorization.
     pub fn factor_stats(&self) -> &FactorStats {
         &self.fac().stats
+    }
+
+    /// Precision of the factors a solve would use right now: `Mixed`
+    /// while the `f32` core is active, `F64` otherwise (including after
+    /// the stall fallback latched).
+    pub fn precision(&self) -> Precision {
+        self.fac().precision()
+    }
+
+    /// Stall-driven `f64` fallback events recorded against the current
+    /// factorization.
+    pub fn fallback_events(&self) -> u64 {
+        self.fac().fallback_events()
     }
 
     /// Replace the matrix values (same pattern) and refactorize on the

@@ -7,7 +7,7 @@
 //! hylu gen    --gen CLASS:N --out FILE.mtx
 //! hylu bench  [--suite small|full] [--threads T]
 //!             [--kernel scalar|portable|native|avx512|auto]
-//!             [--tuning off|quick|full]
+//!             [--tuning off|quick|full] [--precision f64|mixed]
 //! hylu tune   --matrix FILE.mtx | --gen CLASS:N [--tuning quick|full]
 //!             [--threads T]
 //! hylu gauntlet [--suite small|full] [--threads T] [--reps R]
@@ -20,9 +20,11 @@
 //! `tune` runs the per-pattern kernel autotuner on one matrix and prints
 //! the searched [`KernelPlan`](crate::numeric::kernels::KernelPlan).
 //! `gauntlet` runs the fig4–fig11 bench suite once with autotuning and
-//! once without (repeated refactor+solve per matrix) plus the kernel-
-//! variant A/B micro rows, and writes the whole trajectory to a single
-//! `BENCH_<date>.json` artifact (schema in DESIGN.md §5).
+//! once without (repeated refactor+solve per matrix), a mixed-vs-f64
+//! precision section (refactor+solve speedup, refinement iterations
+//! added, fallback count per matrix), plus the kernel-variant A/B micro
+//! rows, and writes the whole trajectory to a single `BENCH_<date>.json`
+//! artifact (schema `hylu-bench-v2`, documented in DESIGN.md §5).
 //!
 //! `--rhs K` batches K right-hand sides through the engine's multi-RHS
 //! path ([`LinearSystem::solve_many`]) — the traffic-serving scenario.
@@ -45,6 +47,7 @@ use std::path::Path;
 
 use crate::api::{Factored, LinearSystem, Solver, SolverBuilder};
 use crate::baseline;
+use crate::coordinator::Precision;
 use crate::bench_harness::{environment, fmt_time, time_best, Table};
 use crate::bench_suite;
 use crate::numeric::kernels::{self, tuner, KernelTier, Tuning};
@@ -166,7 +169,25 @@ pub fn config_from(args: &Args) -> Result<SolverBuilder> {
     if let Some(t) = tuning_from(args, Tuning::Off)? {
         b = b.tuning(t);
     }
+    if let Some(p) = precision_from(args)? {
+        b = b.precision(p);
+    }
     Ok(b)
+}
+
+/// Parse `--precision f64|mixed`. Returns `None` when the flag is absent.
+fn precision_from(args: &Args) -> Result<Option<Precision>> {
+    if !args.has("precision") {
+        return Ok(None);
+    }
+    match args.get("precision") {
+        None => Err(Error::Invalid(
+            "--precision needs a value (f64|mixed)".into(),
+        )),
+        Some(v) => Precision::parse(v)
+            .map(Some)
+            .ok_or_else(|| Error::Invalid(format!("unknown precision {v} (f64|mixed)"))),
+    }
 }
 
 /// Parse `--tuning off|quick|full`; a bare `--tuning` means `default`.
@@ -206,6 +227,7 @@ pub fn run(argv: &[String]) -> i32 {
                  [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
                  [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
                  [--tick-max-us U] [--elastic] [--tuning off|quick|full] [--reps R] \
+                 [--precision f64|mixed] \
                  (bench: --kernel scalar|portable|native|avx512|auto pins the dispatch tier)"
             );
             // usage errors share Error::Invalid's stable code
@@ -257,10 +279,17 @@ fn cmd_solve(args: &Args) -> Result<()> {
         fs.threads
     );
     println!(
-        "solve        : {} (residual {:.3e}, {} refinement iters)",
+        "solve        : {} (residual {:.3e}, {} refinement iters, {}, precision {}{})",
         fmt_time(st.t_solve),
         st.residual,
-        st.refine_iters
+        st.refine_iters,
+        st.outcome,
+        st.precision,
+        if st.fallbacks > 0 {
+            format!(", {} precision fallbacks", st.fallbacks)
+        } else {
+            String::new()
+        }
     );
     println!("x==1 max err : {err:.3e}");
     if nrhs > 1 {
@@ -329,6 +358,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
     let tuning = tuning_from(args, Tuning::Quick)?;
+    let precision = precision_from(args)?;
     let threads = flag_usize(args, "threads", 0)?;
     let suite = match args.get("suite").unwrap_or("small") {
         "full" => bench_suite::suite37(),
@@ -345,6 +375,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         p.advantage(),
         kernels::calibration()
     );
+    if let Some(p) = precision {
+        println!("precision    : {p} (hylu side; baseline stays f64)");
+    }
     let mut table = Table::new(
         "one-time solve: HYLU vs PARDISO-like baseline",
         &["matrix", "class", "n", "hylu", "baseline", "speedup"],
@@ -354,6 +387,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut hb = SolverBuilder::new().threads(threads);
         if let Some(t) = tuning {
             hb = hb.tuning(t);
+        }
+        if let Some(p) = precision {
+            hb = hb.precision(p);
         }
         let hylu = hb.build()?;
         let base = Solver::from_config(baseline::pardiso_like(threads))?;
@@ -448,6 +484,32 @@ fn repeated_cycle(
     Ok((best, plan))
 }
 
+/// Mixed-vs-f64 figure of merit for the gauntlet: one analyze+factor,
+/// then best-of-`reps` timed refactor+solve cycles. Returns the best
+/// cycle seconds, the refinement iterations of the final cycle's solve,
+/// and the precision-fallback events accumulated on the handle (always 0
+/// for a pure-`f64` solver).
+fn precision_cycle(
+    solver: &Solver,
+    a: &Csr,
+    b: &[f64],
+    reps: usize,
+) -> Result<(f64, usize, u64)> {
+    let vals = a.vals.clone();
+    let mut sys = solver.analyze(a)?.factor()?;
+    let mut x = Vec::new();
+    sys.solve_into(b, &mut x)?; // warm-up: grow every arena once
+    let mut best = f64::INFINITY;
+    let mut iters = 0usize;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        sys.refactor(&vals)?;
+        iters = sys.solve_into(b, &mut x)?.refine_iters;
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    Ok((best, iters, sys.fallback_events()))
+}
+
 /// Deterministic fill for kernel A/B operands (no RNG dependency).
 fn ab_fill(len: usize, phase: usize) -> Vec<f64> {
     (0..len)
@@ -514,8 +576,10 @@ fn json_escape(s: &str) -> String {
 }
 
 /// The perf-trajectory gauntlet: tuned-vs-untuned repeated refactor+solve
-/// over the bench suite plus the kernel-variant A/B micro rows, written to
-/// one `BENCH_<date>.json` artifact (schema documented in DESIGN.md §5).
+/// over the bench suite, a mixed-vs-f64 precision section (cycle speedup,
+/// refinement iterations added, fallback count per matrix), plus the
+/// kernel-variant A/B micro rows, written to one `BENCH_<date>.json`
+/// artifact (schema `hylu-bench-v2`, documented in DESIGN.md §5).
 fn cmd_gauntlet(args: &Args) -> Result<()> {
     let tuning = tuning_from(args, Tuning::Quick)?.unwrap_or(Tuning::Quick);
     if tuning == Tuning::Off {
@@ -581,6 +645,53 @@ fn cmd_gauntlet(args: &Args) -> Result<()> {
         ));
     }
     table.print();
+    let mut prec_table = Table::new(
+        "precision: mixed (f32 factor + f64 refinement) vs f64 repeated refactor+solve",
+        &["matrix", "class", "n", "f64", "mixed", "speedup", "iters+", "fallbacks"],
+    );
+    let mut prec_json = Vec::new();
+    for bm in &suite {
+        let a = (bm.build)();
+        let b = gen::rhs_for_ones(&a);
+        let full = SolverBuilder::new().repeated().threads(threads).build()?;
+        let (t_f64, it_f64, _) = precision_cycle(&full, &a, &b, reps)?;
+        let mixed = SolverBuilder::new()
+            .repeated()
+            .threads(threads)
+            .precision(Precision::Mixed)
+            .build()?;
+        let (t_mx, it_mx, fb) = precision_cycle(&mixed, &a, &b, reps)?;
+        let speedup = t_f64 / t_mx.max(1e-12);
+        let extra = it_mx as i64 - it_f64 as i64;
+        prec_table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(t_f64),
+                fmt_time(t_mx),
+                format!("{speedup:.2}x"),
+                format!("{extra:+}"),
+                fb.to_string(),
+            ],
+            speedup,
+        );
+        prec_json.push(format!(
+            "    {{\"name\": \"{}\", \"class\": \"{}\", \"n\": {}, \"t_f64\": {:e}, \
+             \"t_mixed\": {:e}, \"speedup\": {:.4}, \"refine_iters_f64\": {}, \
+             \"refine_iters_mixed\": {}, \"fallbacks\": {}}}",
+            json_escape(bm.name),
+            json_escape(bm.class),
+            a.n,
+            t_f64,
+            t_mx,
+            speedup,
+            it_f64,
+            it_mx,
+            fb,
+        ));
+    }
+    prec_table.print();
     let ab = kernel_ab_rows(tier);
     let mut ab_table = Table::new(
         "kernel A/B: enumerated variants vs tier default (48x32x96)",
@@ -617,13 +728,15 @@ fn cmd_gauntlet(args: &Args) -> Result<()> {
     };
     let gm = table.geomean_speedup();
     let json = format!(
-        "{{\n  \"schema\": \"hylu-bench-v1\",\n  \"date\": \"{date}\",\n  \
+        "{{\n  \"schema\": \"hylu-bench-v2\",\n  \"date\": \"{date}\",\n  \
          \"suite\": \"{suite_name}\",\n  \"threads\": {threads},\n  \
          \"reps\": {reps},\n  \"tier\": \"{tier}\",\n  \"tuning\": \"{tuning}\",\n  \
          \"environment\": \"{}\",\n  \"matrices\": [\n{}\n  ],\n  \
-         \"geomean_speedup\": {gm:.4},\n  \"kernel_ab\": [\n{}\n  ]\n}}\n",
+         \"geomean_speedup\": {gm:.4},\n  \"precision\": [\n{}\n  ],\n  \
+         \"kernel_ab\": [\n{}\n  ]\n}}\n",
         json_escape(&env),
         mats.join(",\n"),
+        prec_json.join(",\n"),
         ab_json.join(",\n"),
     );
     std::fs::write(&path, json)?;
@@ -964,11 +1077,27 @@ mod tests {
         ]));
         assert_eq!(code, 0);
         let s = std::fs::read_to_string(&out).unwrap();
-        assert!(s.contains("\"schema\": \"hylu-bench-v1\""));
+        assert!(s.contains("\"schema\": \"hylu-bench-v2\""));
         assert!(s.contains("\"geomean_speedup\""));
         assert!(s.contains("\"kernel_ab\""));
         assert!(s.contains("\"matrices\""));
+        assert!(s.contains("\"precision\""));
+        assert!(s.contains("\"refine_iters_mixed\""));
         let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn solve_command_with_mixed_precision() {
+        let code = run(&sv(&[
+            "solve", "--gen", "mesh2d:400", "--threads", "1", "--precision", "mixed",
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn bad_precision_flag_is_rejected() {
+        let code = run(&sv(&["solve", "--gen", "mesh2d:100", "--precision", "f16"]));
+        assert_eq!(code, Error::Invalid(String::new()).code());
     }
 
     #[test]

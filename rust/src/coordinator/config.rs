@@ -6,6 +6,57 @@ use crate::numeric::PivotConfig;
 use crate::ordering::OrderingChoice;
 use crate::symbolic::MergePolicy;
 
+/// Numeric-factorization precision policy.
+///
+/// `F64` is the classic double-precision pipeline. `Mixed` factors in
+/// `f32` (roughly half the memory traffic through the panel kernels) and
+/// recovers double accuracy inside the already-batched iterative
+/// refinement loop: the residual matvec and the correction solves run in
+/// `f64` against the `f32` factors. When refinement stalls (the residual
+/// ratio stops improving) or exhausts its widened budget above the
+/// acceptance tolerance, the solve escalates to a full `f64`
+/// refactorization of the same values and the handle continues in `f64`
+/// for subsequent refactors until the pattern changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Factor and solve entirely in double precision (default).
+    F64,
+    /// `f32` numeric core + `f64` refinement recovery with stall-driven
+    /// fallback to `f64`.
+    Mixed,
+}
+
+impl Precision {
+    /// Parse a policy name as used by `HYLU_PRECISION` and the CLI
+    /// (`f64` | `mixed`, case-insensitive).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Precision::F64),
+            "mixed" | "f32" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+
+    /// The policy to use given a configured value: the `HYLU_PRECISION`
+    /// environment variable overrides when set (and parseable), mirroring
+    /// `HYLU_KERNEL` / `HYLU_TUNING`.
+    pub fn effective(configured: Precision) -> Precision {
+        match std::env::var("HYLU_PRECISION") {
+            Ok(v) => Precision::parse(&v).unwrap_or(configured),
+            Err(_) => configured,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Precision::F64 => write!(f, "f64"),
+            Precision::Mixed => write!(f, "mixed"),
+        }
+    }
+}
+
 /// Configuration for [`crate::coordinator::Solver`].
 ///
 /// The defaults reproduce the paper's one-time-solve setup; set
@@ -62,6 +113,15 @@ pub struct SolverConfig {
     pub relax_abs: usize,
     /// Minimum nodes per level to stay in bulk mode.
     pub bulk_threshold: usize,
+    /// Numeric precision policy (default: [`Precision::F64`]). The
+    /// `HYLU_PRECISION` env var overrides when set (unless
+    /// [`SolverConfig::pin_precision`]). `Mixed` can also be requested
+    /// per call via `SolveOpts`.
+    pub precision: Precision,
+    /// Ignore the `HYLU_PRECISION` env override and use
+    /// [`SolverConfig::precision`] as configured. The C ABI sets this:
+    /// `include/hylu.h` pins every FFI handle to `f64`.
+    pub pin_precision: bool,
     /// Iterative-refinement iteration cap.
     pub refine_max_iter: usize,
     /// Residual above which refinement starts even without perturbation.
@@ -96,6 +156,8 @@ impl Default for SolverConfig {
             relax_frac: 0.2,
             relax_abs: 24,
             bulk_threshold: 8,
+            precision: Precision::F64,
+            pin_precision: false,
             refine_max_iter: 3,
             refine_tol: 1e-10,
             refine_target: 1e-14,
@@ -120,5 +182,16 @@ mod tests {
         assert_eq!(c.tuning, Tuning::Off);
         assert!(!c.use_xla);
         assert!(c.max_supernode <= 256);
+        assert_eq!(c.precision, Precision::F64);
+    }
+
+    #[test]
+    fn precision_parses_and_displays() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("Mixed"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("f32"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Precision::F64.to_string(), "f64");
+        assert_eq!(Precision::Mixed.to_string(), "mixed");
     }
 }

@@ -22,9 +22,11 @@
 pub mod config;
 pub mod stats;
 
-pub use config::SolverConfig;
-pub use stats::{FactorStats, SolveStats, SymbolicStats};
+pub use config::{Precision, SolverConfig};
+pub use stats::{FactorStats, RefineOutcome, SolveStats, SymbolicStats};
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::exec::{self, Engine, ExecPlan, FactorScratch, PoolCounters, SolveScratch};
@@ -32,7 +34,7 @@ use crate::numeric::factor::{GemmBackend, NativeGemm};
 use crate::numeric::kernels::{self, tuner, Tuning};
 use crate::numeric::parallel::factor_parallel_pooled;
 use crate::numeric::select::{select_kernel, selection_stats, KernelMode};
-use crate::numeric::LuFactors;
+use crate::numeric::{LuFactors, Scalar};
 use crate::ordering::{self, mwm};
 use crate::par::{effective_threads, DoneFlags};
 use crate::solve::{
@@ -159,6 +161,13 @@ pub struct RefineParams {
     pub tol: f64,
     /// Refinement stops once the residual is below this.
     pub target: f64,
+    /// Per-call precision override: `Some(Precision::F64)` forces this
+    /// solve onto the `f64` recovery factors even when the factorization
+    /// is mixed (building them on first use, without latching the stall
+    /// fallback); `None` follows the factorization's own precision.
+    /// `Some(Precision::Mixed)` against a pure-`f64` factorization is a
+    /// no-op — there are no `f32` factors to use.
+    pub precision: Option<Precision>,
 }
 
 impl RefineParams {
@@ -168,17 +177,74 @@ impl RefineParams {
             max_iter: cfg.refine_max_iter,
             tol: cfg.refine_tol,
             target: cfg.refine_target,
+            precision: None,
         }
     }
 }
 
+/// Extra refinement iterations granted to the mixed-precision path: the
+/// `f32` factors converge roughly one decimal digit per round slower
+/// than `f64` factors, so the widened budget lets well-conditioned
+/// systems reach the same target before the stall detector fires.
+const MIXED_EXTRA_ITERS: usize = 4;
+/// An accepted mixed-refinement step that shrinks the residual by less
+/// than this factor counts as a "slow" round for the stall detector.
+const MIXED_STALL_RATIO: f64 = 0.5;
+/// Consecutive slow rounds before the mixed path declares a stall and
+/// escalates to the `f64` recovery factors.
+const MIXED_STALL_ROUNDS: u32 = 2;
+
 /// The product of [`Solver::factor`]: numeric factors plus statistics.
+///
+/// Under [`Precision::F64`] (the default), `fac` holds the
+/// double-precision factors and the mixed-precision fields stay inert.
+/// Under [`Precision::Mixed`] the numeric core runs in `f32` (`fac32`);
+/// `fac` is a zero-storage placeholder carrying only the pivot order,
+/// and `f64` *recovery* factors of the same values are built lazily the
+/// first time a solve's refinement stalls above tolerance (or a caller
+/// forces `Precision::F64` per call). A stall latches `fell_back`:
+/// later solves go straight to the recovery factors, and the next
+/// [`Solver::refactor`] promotes the handle to pure `f64` permanently
+/// (until the pattern is re-analyzed and re-factored).
 #[derive(Debug)]
 pub struct Factorization {
-    /// The numeric LU factors.
+    /// The numeric LU factors (`f64`). In mixed mode this is a
+    /// zero-storage placeholder (pivot order only) until fallback
+    /// promotion.
     pub fac: LuFactors,
+    /// The `f32` factors of the mixed numeric core (`None` in `F64`
+    /// mode and after fallback promotion).
+    pub(crate) fac32: Option<LuFactors<f32>>,
+    /// Lazily built `f64` factors of the same values — stall recovery
+    /// and forced-`f64` solves against a mixed factorization. Solves
+    /// against the recovery factors serialize on this mutex.
+    pub(crate) recovery: Mutex<Option<LuFactors>>,
+    /// Latched once a stall escalated: later solves skip the mixed
+    /// attempt, and the next refactor promotes to pure `f64`.
+    pub(crate) fell_back: AtomicBool,
+    /// Stall-driven fallback events over the factorization's lifetime.
+    pub(crate) fallback_events: AtomicU64,
     /// Statistics of the last (re)factorization.
     pub stats: FactorStats,
+}
+
+impl Factorization {
+    /// Precision of the factors a solve would use right now: `Mixed`
+    /// while the `f32` core is active, `F64` otherwise (including after
+    /// the stall fallback latched).
+    pub fn precision(&self) -> Precision {
+        if self.fac32.is_some() && !self.fell_back.load(Ordering::Relaxed) {
+            Precision::Mixed
+        } else {
+            Precision::F64
+        }
+    }
+
+    /// Total stall-driven `f64` fallback events recorded against this
+    /// factorization.
+    pub fn fallback_events(&self) -> u64 {
+        self.fallback_events.load(Ordering::Relaxed)
+    }
 }
 
 /// The HYLU solver handle. Holds configuration, the GEMM backend (native
@@ -390,28 +456,64 @@ impl Solver {
     }
 
     pub(crate) fn factor_core(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
+        let precision = if self.cfg.pin_precision {
+            self.cfg.precision
+        } else {
+            Precision::effective(self.cfg.precision)
+        };
         let t0 = Instant::now();
         let mut scratch = self.engine.factor_scratch();
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
         self.ensure_done_flags(&mut scratch, an);
         let pa = &scratch.pa[0].1;
-        let mut fac = LuFactors::alloc(&an.sym);
         let threads = self.engine.pool().nthreads();
-        let perturbed = factor_parallel_pooled(
-            pa,
-            &an.sym,
-            an.mode,
-            &self.cfg.pivot,
-            &mut fac,
-            false,
-            self.gemm.as_ref(),
-            self.engine.pool(),
-            &an.plan,
-            &scratch.done,
-        );
+        let (fac, fac32, perturbed) = match precision {
+            Precision::F64 => {
+                let mut fac: LuFactors = LuFactors::alloc(&an.sym);
+                let perturbed = factor_parallel_pooled(
+                    pa,
+                    &an.sym,
+                    an.mode,
+                    &self.cfg.pivot,
+                    &mut fac,
+                    false,
+                    self.gemm.as_ref(),
+                    self.engine.pool(),
+                    &an.plan,
+                    &scratch.done,
+                );
+                (fac, None, perturbed)
+            }
+            Precision::Mixed => {
+                let mut fac32: LuFactors<f32> = LuFactors::alloc(&an.sym);
+                let perturbed = factor_parallel_pooled(
+                    pa,
+                    &an.sym,
+                    an.mode,
+                    &self.cfg.pivot,
+                    &mut fac32,
+                    false,
+                    self.gemm.as_ref(),
+                    self.engine.pool(),
+                    &an.plan,
+                    &scratch.done,
+                );
+                // zero-storage stand-in carrying the pivot order, so
+                // `Factorization::fac` keeps its type for existing
+                // callers; solves route through `fac32`
+                let mut fac: LuFactors = LuFactors::placeholder(an.sym.n);
+                fac.pivot_perm.copy_from_slice(&fac32.pivot_perm);
+                fac.perturbed = fac32.perturbed;
+                (fac, Some(fac32), perturbed)
+            }
+        };
         let t = t0.elapsed().as_secs_f64();
         Ok(Factorization {
             fac,
+            fac32,
+            recovery: Mutex::new(None),
+            fell_back: AtomicBool::new(false),
+            fallback_events: AtomicU64::new(0),
             stats: FactorStats {
                 t_factor: t,
                 perturbed,
@@ -419,6 +521,7 @@ impl Solver {
                 mode: an.mode,
                 threads,
                 refactor: false,
+                precision,
             },
         })
     }
@@ -447,18 +550,80 @@ impl Solver {
         self.ensure_done_flags(&mut scratch, an);
         let pa = &scratch.pa[0].1;
         let threads = self.engine.pool().nthreads();
-        let perturbed = factor_parallel_pooled(
-            pa,
-            &an.sym,
-            an.mode,
-            &self.cfg.pivot,
-            &mut f.fac,
-            true,
-            self.gemm.as_ref(),
-            self.engine.pool(),
-            &an.plan,
-            &scratch.done,
-        );
+        let (perturbed, precision) = if f.fac32.is_some() && f.fell_back.load(Ordering::Relaxed) {
+            // A mixed handle whose refinement stalled: promote to pure
+            // f64. Reuse the recovery factors' storage and pivot order
+            // when present (the common case — the stall built them);
+            // otherwise factor fresh with a pivot search.
+            let rec = exec::lock_ignore_poison(&f.recovery).take();
+            let perturbed = if let Some(mut rfac) = rec {
+                let p = factor_parallel_pooled(
+                    pa,
+                    &an.sym,
+                    an.mode,
+                    &self.cfg.pivot,
+                    &mut rfac,
+                    true,
+                    self.gemm.as_ref(),
+                    self.engine.pool(),
+                    &an.plan,
+                    &scratch.done,
+                );
+                f.fac = rfac;
+                p
+            } else {
+                let mut rfac: LuFactors = LuFactors::alloc(&an.sym);
+                let p = factor_parallel_pooled(
+                    pa,
+                    &an.sym,
+                    an.mode,
+                    &self.cfg.pivot,
+                    &mut rfac,
+                    false,
+                    self.gemm.as_ref(),
+                    self.engine.pool(),
+                    &an.plan,
+                    &scratch.done,
+                );
+                f.fac = rfac;
+                p
+            };
+            f.fac32 = None;
+            (perturbed, Precision::F64)
+        } else if let Some(fac32) = f.fac32.as_mut() {
+            // still mixed: f32 refactor replay along the stored pivots
+            let p = factor_parallel_pooled(
+                pa,
+                &an.sym,
+                an.mode,
+                &self.cfg.pivot,
+                fac32,
+                true,
+                self.gemm.as_ref(),
+                self.engine.pool(),
+                &an.plan,
+                &scratch.done,
+            );
+            // any recovery factors hold the previous values now — drop
+            // them so the next stall rebuilds from the current matrix
+            *exec::lock_ignore_poison(&f.recovery) = None;
+            f.fac.perturbed = fac32.perturbed;
+            (p, Precision::Mixed)
+        } else {
+            let p = factor_parallel_pooled(
+                pa,
+                &an.sym,
+                an.mode,
+                &self.cfg.pivot,
+                &mut f.fac,
+                true,
+                self.gemm.as_ref(),
+                self.engine.pool(),
+                &an.plan,
+                &scratch.done,
+            );
+            (p, Precision::F64)
+        };
         let t = t0.elapsed().as_secs_f64();
         f.stats = FactorStats {
             t_factor: t,
@@ -467,6 +632,7 @@ impl Solver {
             mode: an.mode,
             threads,
             refactor: true,
+            precision,
         };
         Ok(())
     }
@@ -535,16 +701,69 @@ impl Solver {
             return Err(Error::Invalid("rhs length mismatch".into()));
         }
         let t0 = Instant::now();
+        let threads = self.engine.pool().nthreads();
         let mut guard = self.engine.scratch();
         let scratch = &mut *guard;
-        self.substitute_into(an, f, b, &mut scratch.y, x);
-        let (residual, iters) = self.refine_in_place(a, an, f, b, x, scratch, rp);
+
+        if let Some(fac32) = f.fac32.as_ref() {
+            let force_f64 = rp.precision == Some(Precision::F64);
+            let mut iters_mixed = 0usize;
+            let mut fallbacks = 0u64;
+            if !force_f64 && !f.fell_back.load(Ordering::Relaxed) {
+                // mixed attempt: f32 substitution, f64 refinement
+                self.substitute_into(an, fac32, b, &mut scratch.y, x);
+                let (residual, iters, outcome) =
+                    self.refine_in_place(a, an, fac32, b, x, scratch, rp, true);
+                if outcome == RefineOutcome::Converged || residual <= rp.tol {
+                    return Ok(SolveStats {
+                        t_solve: t0.elapsed().as_secs_f64(),
+                        residual,
+                        refine_iters: iters,
+                        threads,
+                        nrhs: 1,
+                        outcome,
+                        precision: Precision::Mixed,
+                        fallbacks: 0,
+                    });
+                }
+                // refinement stalled (or ran out of budget) above
+                // tolerance: escalate to the f64 recovery factors and
+                // latch the fallback for the rest of the handle's life
+                iters_mixed = iters;
+                self.ensure_recovery(a, an, f, true)?;
+                fallbacks = 1;
+            } else {
+                self.ensure_recovery(a, an, f, false)?;
+            }
+            let rec = exec::lock_ignore_poison(&f.recovery);
+            let rfac = rec.as_ref().expect("recovery factors present");
+            self.substitute_into(an, rfac, b, &mut scratch.y, x);
+            let (residual, iters, outcome) =
+                self.refine_in_place(a, an, rfac, b, x, scratch, rp, false);
+            return Ok(SolveStats {
+                t_solve: t0.elapsed().as_secs_f64(),
+                residual,
+                refine_iters: iters_mixed + iters,
+                threads,
+                nrhs: 1,
+                outcome,
+                precision: Precision::F64,
+                fallbacks,
+            });
+        }
+
+        self.substitute_into(an, &f.fac, b, &mut scratch.y, x);
+        let (residual, iters, outcome) =
+            self.refine_in_place(a, an, &f.fac, b, x, scratch, rp, false);
         Ok(SolveStats {
             t_solve: t0.elapsed().as_secs_f64(),
             residual,
             refine_iters: iters,
-            threads: self.engine.pool().nthreads(),
+            threads,
             nrhs: 1,
+            outcome,
+            precision: Precision::F64,
+            fallbacks: 0,
         })
     }
 
@@ -639,6 +858,12 @@ impl Solver {
                 refine_iters: 0,
                 threads,
                 nrhs: 0,
+                outcome: RefineOutcome::Converged,
+                precision: match f.fac32 {
+                    Some(_) => Precision::Mixed,
+                    None => Precision::F64,
+                },
+                fallbacks: 0,
             });
         }
         for x in xs.iter_mut() {
@@ -649,11 +874,126 @@ impl Solver {
         }
         let mut guard = self.engine.scratch();
         let scratch = &mut *guard;
+
+        if let Some(fac32) = f.fac32.as_ref() {
+            let force_f64 = rp.precision == Some(Precision::F64);
+            if !force_f64 && !f.fell_back.load(Ordering::Relaxed) {
+                let (mut res, iters, mut outcomes) =
+                    self.solve_many_pass(a, an, fac32, bs, xs, scratch, rp, true);
+                // columns whose mixed refinement ended above tolerance
+                // need the f64 recovery factors
+                let bad: Vec<usize> = (0..k)
+                    .filter(|&q| outcomes[q] != RefineOutcome::Converged && res[q] > rp.tol)
+                    .collect();
+                if bad.is_empty() {
+                    let worst = res.iter().fold(0.0f64, |m, &v| m.max(v));
+                    let outcome = outcomes
+                        .iter()
+                        .fold(RefineOutcome::Converged, |w, &o| w.worst(o));
+                    return Ok(SolveStats {
+                        t_solve: t0.elapsed().as_secs_f64(),
+                        residual: worst,
+                        refine_iters: iters,
+                        threads,
+                        nrhs: k,
+                        outcome,
+                        precision: Precision::Mixed,
+                        fallbacks: 0,
+                    });
+                }
+                self.ensure_recovery(a, an, f, true)?;
+                let rec = exec::lock_ignore_poison(&f.recovery);
+                let rfac = rec.as_ref().expect("recovery factors present");
+                let mut total = iters;
+                for &q in &bad {
+                    // scalar f64 re-solve of the stalled column, same
+                    // path as the scalar fallback (keeps batched and
+                    // scalar mixed solves column-for-column identical)
+                    self.substitute_into(an, rfac, &bs[q], &mut scratch.y, &mut xs[q]);
+                    let (r2, it2, o2) =
+                        self.refine_in_place(a, an, rfac, &bs[q], &mut xs[q], scratch, rp, false);
+                    res[q] = r2;
+                    total += it2;
+                    outcomes[q] = o2;
+                }
+                let worst = res.iter().fold(0.0f64, |m, &v| m.max(v));
+                let outcome = outcomes
+                    .iter()
+                    .fold(RefineOutcome::Converged, |w, &o| w.worst(o));
+                return Ok(SolveStats {
+                    t_solve: t0.elapsed().as_secs_f64(),
+                    residual: worst,
+                    refine_iters: total,
+                    threads,
+                    nrhs: k,
+                    outcome,
+                    precision: Precision::F64,
+                    fallbacks: 1,
+                });
+            }
+            self.ensure_recovery(a, an, f, false)?;
+            let rec = exec::lock_ignore_poison(&f.recovery);
+            let rfac = rec.as_ref().expect("recovery factors present");
+            let (res, iters, outcomes) =
+                self.solve_many_pass(a, an, rfac, bs, xs, scratch, rp, false);
+            let worst = res.iter().fold(0.0f64, |m, &v| m.max(v));
+            let outcome = outcomes
+                .iter()
+                .fold(RefineOutcome::Converged, |w, &o| w.worst(o));
+            return Ok(SolveStats {
+                t_solve: t0.elapsed().as_secs_f64(),
+                residual: worst,
+                refine_iters: iters,
+                threads,
+                nrhs: k,
+                outcome,
+                precision: Precision::F64,
+                fallbacks: 0,
+            });
+        }
+
+        let (res, iters, outcomes) =
+            self.solve_many_pass(a, an, &f.fac, bs, xs, scratch, rp, false);
+        let worst = res.iter().fold(0.0f64, |m, &v| m.max(v));
+        let outcome = outcomes
+            .iter()
+            .fold(RefineOutcome::Converged, |w, &o| w.worst(o));
+        Ok(SolveStats {
+            t_solve: t0.elapsed().as_secs_f64(),
+            residual: worst,
+            refine_iters: iters,
+            threads,
+            nrhs: k,
+            outcome,
+            precision: Precision::F64,
+            fallbacks: 0,
+        })
+    }
+
+    /// One batched substitution + batched refinement pass against `fac`:
+    /// the single-factor body of [`Solver::solve_many_into_core`].
+    /// Returns per-column residuals, the total refinement iteration
+    /// count, and per-column refinement outcomes.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_many_pass<T: Scalar>(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        fac: &LuFactors<T>,
+        bs: &[Vec<f64>],
+        xs: &mut [Vec<f64>],
+        scratch: &mut SolveScratch,
+        rp: &RefineParams,
+        mixed: bool,
+    ) -> (Vec<f64>, usize, Vec<RefineOutcome>) {
+        let n = a.n;
+        let k = bs.len();
+        let counters = self.engine.counters();
         exec::ensure_len(&mut scratch.yk, n * k, counters);
         let yk = &mut scratch.yk[..n * k];
         // pack: yk[i, q] = dr[row] * bs[q][row], row as in the scalar path
         for i in 0..n {
-            let pre = f.fac.pivot_perm[i] as usize;
+            let pre = fac.pivot_perm[i] as usize;
             let orig = an.row_perm.map[pre];
             let s = an.dr[orig];
             let row = i * k;
@@ -663,10 +1003,10 @@ impl Solver {
         }
         let pool = self.engine.pool();
         if pool.nthreads() > 1 && n > self.cfg.parallel_solve_min_n {
-            solve_block_parallel_pooled(&an.sym, &f.fac, yk, k, pool, &an.plan);
+            solve_block_parallel_pooled(&an.sym, fac, yk, k, pool, &an.plan);
         } else {
-            forward_block(&an.sym, &f.fac, yk, k);
-            backward_block(&an.sym, &f.fac, yk, k);
+            forward_block(&an.sym, fac, yk, k);
+            backward_block(&an.sym, fac, yk, k);
         }
         // unpack: x_q[orig col] = dc[orig col] * yk[new col, q]
         for j in 0..n {
@@ -680,14 +1020,7 @@ impl Solver {
         // batched refinement: residual matvec + correction substitution
         // run as a block over the active lanes, with per-column
         // accept/stop decisions identical to the scalar path
-        let (worst, total_iters) = self.refine_many_in_place(a, an, f, bs, xs, scratch, rp);
-        Ok(SolveStats {
-            t_solve: t0.elapsed().as_secs_f64(),
-            residual: worst,
-            refine_iters: total_iters,
-            threads,
-            nrhs: k,
-        })
+        self.refine_many_in_place(a, an, fac, bs, xs, scratch, rp, mixed)
     }
 
     /// Grow the engine's pipeline done-flag arena to this analysis' node
@@ -699,12 +1032,58 @@ impl Solver {
         }
     }
 
-    /// One triangular solve round into reusable buffers: scale/permute b
-    /// into `y`, forward, backward, unpermute/unscale into `x`.
-    fn substitute_into(
+    /// Build (once) the `f64` recovery factors for a mixed
+    /// factorization: a fresh pivot-searching `f64` factorization of the
+    /// analysis' current values — bit-identical to what a
+    /// [`Precision::F64`] factor call on the same matrix produces.
+    /// `count_event` latches the stall fallback and bumps the event
+    /// counter; forced-`f64` solves pass `false` (building recovery on
+    /// demand is not a stall).
+    fn ensure_recovery(
         &self,
+        a: &Csr,
         an: &Analysis,
         f: &Factorization,
+        count_event: bool,
+    ) -> Result<()> {
+        {
+            let mut rec = exec::lock_ignore_poison(&f.recovery);
+            if rec.is_none() {
+                let mut scratch = self.engine.factor_scratch();
+                an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
+                self.ensure_done_flags(&mut scratch, an);
+                let pa = &scratch.pa[0].1;
+                let mut rfac: LuFactors = LuFactors::alloc(&an.sym);
+                factor_parallel_pooled(
+                    pa,
+                    &an.sym,
+                    an.mode,
+                    &self.cfg.pivot,
+                    &mut rfac,
+                    false,
+                    self.gemm.as_ref(),
+                    self.engine.pool(),
+                    &an.plan,
+                    &scratch.done,
+                );
+                *rec = Some(rfac);
+            }
+        }
+        if count_event {
+            f.fell_back.store(true, Ordering::Relaxed);
+            f.fallback_events.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// One triangular solve round into reusable buffers: scale/permute b
+    /// into `y`, forward, backward, unpermute/unscale into `x`. Generic
+    /// over the factor precision: the RHS and solution stay `f64`, the
+    /// substitution kernels widen every factor entry on read.
+    fn substitute_into<T: Scalar>(
+        &self,
+        an: &Analysis,
+        fac: &LuFactors<T>,
         b: &[f64],
         y: &mut Vec<f64>,
         x: &mut Vec<f64>,
@@ -719,17 +1098,17 @@ impl Solver {
         let y = &mut y[..n];
         // y[i] = dr[row] * b[row], row = row_perm(map ∘ pivot)
         for i in 0..n {
-            let pre = f.fac.pivot_perm[i] as usize; // analyzed-row
+            let pre = fac.pivot_perm[i] as usize; // analyzed-row
             let orig = an.row_perm.map[pre];
             y[i] = an.dr[orig] * b[orig];
         }
         let pool = self.engine.pool();
         if pool.nthreads() > 1 && n > self.cfg.parallel_solve_min_n {
-            forward_parallel_pooled(&an.sym, &f.fac, y, pool, &an.plan);
-            backward_parallel_pooled(&an.sym, &f.fac, y, pool, &an.plan);
+            forward_parallel_pooled(&an.sym, fac, y, pool, &an.plan);
+            backward_parallel_pooled(&an.sym, fac, y, pool, &an.plan);
         } else {
-            forward(&an.sym, &f.fac, y);
-            backward(&an.sym, &f.fac, y);
+            forward(&an.sym, fac, y);
+            backward(&an.sym, fac, y);
         }
         // x[orig col] = dc[orig col] * y[new col]
         for j in 0..n {
@@ -739,30 +1118,52 @@ impl Solver {
     }
 
     /// Iterative refinement on `x` (paper: automatic after pivot
-    /// perturbation) using the engine scratch arenas. Returns the final
-    /// residual and the refinement iteration count.
-    fn refine_in_place(
+    /// perturbation) using the engine scratch arenas. The residual
+    /// matvec and the accept/stop arithmetic always run in `f64`; only
+    /// the correction substitution goes through `fac`'s precision. With
+    /// `mixed` set, the iteration budget is widened by
+    /// [`MIXED_EXTRA_ITERS`] and a ratio-based stall detector fires when
+    /// [`MIXED_STALL_ROUNDS`] consecutive accepted steps each shrink the
+    /// residual by less than [`MIXED_STALL_RATIO`]. Returns the final
+    /// residual, the iteration count, and how the loop ended.
+    #[allow(clippy::too_many_arguments)]
+    fn refine_in_place<T: Scalar>(
         &self,
         a: &Csr,
         an: &Analysis,
-        f: &Factorization,
+        fac: &LuFactors<T>,
         b: &[f64],
         x: &mut Vec<f64>,
         scratch: &mut SolveScratch,
         rp: &RefineParams,
-    ) -> (f64, usize) {
+        mixed: bool,
+    ) -> (f64, usize, RefineOutcome) {
         let n = a.n;
         let counters = self.engine.counters();
         let mut residual = residual_norm(a, &x[..n], b, &mut scratch.r, counters);
         let mut iters = 0usize;
-        if f.fac.perturbed > 0 || residual > rp.tol {
-            while iters < rp.max_iter && residual > rp.target {
+        let mut outcome = RefineOutcome::Converged;
+        let max_iter = if mixed {
+            rp.max_iter + MIXED_EXTRA_ITERS
+        } else {
+            rp.max_iter
+        };
+        if fac.perturbed > 0 || residual > rp.tol {
+            let mut slow = 0u32;
+            loop {
+                if residual <= rp.target {
+                    break; // converged
+                }
+                if iters >= max_iter {
+                    outcome = RefineOutcome::BudgetExhausted;
+                    break;
+                }
                 // scratch.r holds A·x from the residual computation:
                 // rewrite it into the correction RHS b − A·x
                 for (ri, bi) in scratch.r[..n].iter_mut().zip(b) {
                     *ri = bi - *ri;
                 }
-                self.substitute_into(an, f, &scratch.r[..n], &mut scratch.y, &mut scratch.d);
+                self.substitute_into(an, fac, &scratch.r[..n], &mut scratch.y, &mut scratch.d);
                 if scratch.x2.capacity() < n {
                     counters.note_alloc();
                 }
@@ -773,14 +1174,25 @@ impl Solver {
                 let res2 = residual_norm(a, &scratch.x2[..n], b, &mut scratch.r, counters);
                 iters += 1;
                 if res2 < residual {
+                    let slow_step = mixed && res2 > residual * MIXED_STALL_RATIO;
                     std::mem::swap(x, &mut scratch.x2);
                     residual = res2;
+                    if slow_step {
+                        slow += 1;
+                        if slow >= MIXED_STALL_ROUNDS {
+                            outcome = RefineOutcome::Stalled;
+                            break;
+                        }
+                    } else {
+                        slow = 0;
+                    }
                 } else {
+                    outcome = RefineOutcome::Stalled;
                     break;
                 }
             }
         }
-        (residual, iters)
+        (residual, iters, outcome)
     }
 
     /// Batched iterative refinement over `k` solutions: the residual
@@ -791,17 +1203,20 @@ impl Solver {
     /// values — the block substitution kernels are column-for-column
     /// identical to the scalar ones — so accept/stop decisions and
     /// results are bit-identical to `k` independent scalar refinements.
-    /// Returns `(worst residual, total iterations)`.
-    fn refine_many_in_place(
+    /// Returns per-column residuals, the total iteration count, and
+    /// per-column outcomes.
+    #[allow(clippy::too_many_arguments)]
+    fn refine_many_in_place<T: Scalar>(
         &self,
         a: &Csr,
         an: &Analysis,
-        f: &Factorization,
+        fac: &LuFactors<T>,
         bs: &[Vec<f64>],
         xs: &mut [Vec<f64>],
         scratch: &mut SolveScratch,
         rp: &RefineParams,
-    ) -> (f64, usize) {
+        mixed: bool,
+    ) -> (Vec<f64>, usize, Vec<RefineOutcome>) {
         let n = a.n;
         let k = bs.len();
         let counters = self.engine.counters();
@@ -833,13 +1248,23 @@ impl Solver {
             let den: f64 = b.iter().map(|v| v.abs()).sum();
             res[q] = num / den.max(1e-300);
         }
-        let max_iter = rp.max_iter;
+        let max_iter = if mixed {
+            rp.max_iter + MIXED_EXTRA_ITERS
+        } else {
+            rp.max_iter
+        };
         let mut iters = vec![0usize; k];
+        let mut outcomes = vec![RefineOutcome::Converged; k];
+        let mut slow = vec![0u32; k];
         // columns entering refinement: same gate as the scalar path's
-        // outer `if` plus its first `while` check
+        // outer `if` plus its first loop check
         let mut active: Vec<usize> = (0..k)
             .filter(|&q| {
-                (f.fac.perturbed > 0 || res[q] > rp.tol) && max_iter > 0 && res[q] > rp.target
+                let gated = (fac.perturbed > 0 || res[q] > rp.tol) && res[q] > rp.target;
+                if gated && max_iter == 0 {
+                    outcomes[q] = RefineOutcome::BudgetExhausted;
+                }
+                gated && max_iter > 0
             })
             .collect();
         while !active.is_empty() {
@@ -847,7 +1272,7 @@ impl Solver {
             // correction RHS, packed and scaled directly into the block:
             // scalar path computes r = b − A·x then y[i] = dr·r[orig]
             for i in 0..n {
-                let pre = f.fac.pivot_perm[i] as usize;
+                let pre = fac.pivot_perm[i] as usize;
                 let orig = an.row_perm.map[pre];
                 let s = an.dr[orig];
                 let row = i * ka;
@@ -858,10 +1283,10 @@ impl Solver {
             let ykb = &mut yk[..n * ka];
             let pool = self.engine.pool();
             if pool.nthreads() > 1 && n > self.cfg.parallel_solve_min_n {
-                solve_block_parallel_pooled(&an.sym, &f.fac, ykb, ka, pool, &an.plan);
+                solve_block_parallel_pooled(&an.sym, fac, ykb, ka, pool, &an.plan);
             } else {
-                forward_block(&an.sym, &f.fac, ykb, ka);
-                backward_block(&an.sym, &f.fac, ykb, ka);
+                forward_block(&an.sym, fac, ykb, ka);
+                backward_block(&an.sym, fac, ykb, ka);
             }
             exec::ensure_len(x2k, n * k, counters);
             // candidate block: x2_q = x_q + dc·y (scalar: d[orig] = dc·y[j],
@@ -898,19 +1323,36 @@ impl Solver {
                 let res2 = num / den.max(1e-300);
                 iters[q] += 1;
                 if res2 < res[q] {
+                    let slow_step = mixed && res2 > res[q] * MIXED_STALL_RATIO;
                     res[q] = res2;
                     let x = &mut xs[q];
                     for (i, xi) in x.iter_mut().enumerate() {
                         *xi = x2k[i * k + q];
                     }
-                    iters[q] < max_iter && res[q] > rp.target
+                    if slow_step {
+                        slow[q] += 1;
+                        if slow[q] >= MIXED_STALL_ROUNDS {
+                            outcomes[q] = RefineOutcome::Stalled;
+                            return false;
+                        }
+                    } else {
+                        slow[q] = 0;
+                    }
+                    if res[q] <= rp.target {
+                        false // converged
+                    } else if iters[q] >= max_iter {
+                        outcomes[q] = RefineOutcome::BudgetExhausted;
+                        false
+                    } else {
+                        true
+                    }
                 } else {
+                    outcomes[q] = RefineOutcome::Stalled;
                     false
                 }
             });
         }
-        let worst = res.iter().fold(0.0f64, |m, &v| m.max(v));
-        (worst, iters.iter().sum())
+        (res, iters.iter().sum(), outcomes)
     }
 }
 

@@ -1,6 +1,56 @@
 //! Per-phase statistics — what the paper's Figs. 4–11 plot.
 
+use crate::coordinator::config::Precision;
 use crate::numeric::select::KernelMode;
+
+/// How an iterative-refinement loop ended. Reported through
+/// [`SolveStats::outcome`] for every solve (pure-`f64` refinement
+/// included); the mixed-precision path additionally uses
+/// `Stalled`/`BudgetExhausted` (with the residual still above tolerance)
+/// as the trigger for the `f64` refactorization fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefineOutcome {
+    /// The residual met the acceptance target (or never needed
+    /// refinement: no perturbed pivots and already below tolerance).
+    Converged,
+    /// A refinement step failed to improve the residual (or, in mixed
+    /// precision, the improvement ratio stagnated across consecutive
+    /// accepted steps).
+    Stalled,
+    /// The iteration budget ran out with the residual still above the
+    /// target.
+    BudgetExhausted,
+}
+
+impl RefineOutcome {
+    /// Severity rank for aggregating batched solves: worst wins.
+    pub(crate) fn rank(self) -> u8 {
+        match self {
+            RefineOutcome::Converged => 0,
+            RefineOutcome::BudgetExhausted => 1,
+            RefineOutcome::Stalled => 2,
+        }
+    }
+
+    /// The worse of two outcomes (batched solves report the worst column).
+    pub fn worst(self, other: RefineOutcome) -> RefineOutcome {
+        if other.rank() > self.rank() {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+impl std::fmt::Display for RefineOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RefineOutcome::Converged => "converged",
+            RefineOutcome::Stalled => "stalled",
+            RefineOutcome::BudgetExhausted => "budget-exhausted",
+        })
+    }
+}
 
 /// Preprocessing-phase statistics ([`crate::coordinator::Solver::analyze`]).
 #[derive(Clone, Copy, Debug)]
@@ -56,6 +106,8 @@ pub struct FactorStats {
     pub threads: usize,
     /// Whether this was the refactorization fast path.
     pub refactor: bool,
+    /// Precision the factors were computed in (`Mixed` = `f32` core).
+    pub precision: Precision,
 }
 
 /// Solve-phase statistics.
@@ -72,4 +124,16 @@ pub struct SolveStats {
     pub threads: usize,
     /// Right-hand sides solved in this call (1 for the scalar path).
     pub nrhs: usize,
+    /// How the refinement loop ended (worst across RHS for batched
+    /// solves; `Converged` when refinement never ran because the initial
+    /// residual was already acceptable).
+    pub outcome: RefineOutcome,
+    /// Precision of the factors that produced the reported solution: a
+    /// mixed solve that fell back reports `F64`.
+    pub precision: Precision,
+    /// Precision-fallback events triggered by THIS call (0 or 1 for the
+    /// scalar path; up to `nrhs` stalled columns re-solved against the
+    /// `f64` recovery factors count once — the refactorization happens at
+    /// most once per call).
+    pub fallbacks: u64,
 }

@@ -89,12 +89,16 @@ pub fn ensure_len(v: &mut Vec<f64>, n: usize, counters: &PoolCounters) {
     }
 }
 
-/// Per-worker state handed to every job: a persistent numeric workspace
-/// plus the shared counters for allocation accounting.
+/// Per-worker state handed to every job: persistent numeric workspaces
+/// (one arena per factor precision — the [`ExecPlan`] high-water bounds
+/// are element counts, so each arena sizes itself independently and only
+/// the precisions actually used ever allocate) plus the shared counters
+/// for allocation accounting.
 pub struct WorkerCtx {
     /// Worker index in `[0, nthreads)`; worker 0 is the dispatching thread.
     pub id: usize,
     ws: Workspace,
+    ws32: Workspace<f32>,
     counters: Arc<PoolCounters>,
 }
 
@@ -103,13 +107,14 @@ impl WorkerCtx {
         WorkerCtx {
             id,
             ws: Workspace::empty(),
+            ws32: Workspace::empty(),
             counters,
         }
     }
 
-    /// The worker's workspace, grown for dimension `n` and with kernel
-    /// scratch reserved to the given high-water capacities. Growth is
-    /// counted as a scratch allocation; after warm-up this is a no-op.
+    /// The worker's `f64` workspace, grown for dimension `n` and with
+    /// kernel scratch reserved to the given high-water capacities. Growth
+    /// is counted as a scratch allocation; after warm-up this is a no-op.
     pub fn workspace(
         &mut self,
         n: usize,
@@ -125,6 +130,33 @@ impl WorkerCtx {
             self.counters.note_alloc();
         }
         &mut self.ws
+    }
+
+    /// The worker's `f32` workspace (mixed-precision factorization), with
+    /// the same grow-once accounting as [`WorkerCtx::workspace`]. A
+    /// worker that never factors in `f32` never allocates this arena.
+    pub fn workspace_f32(
+        &mut self,
+        n: usize,
+        cbuf: usize,
+        tbuf: usize,
+        map_idx: usize,
+        pbuf: usize,
+        abuf: usize,
+    ) -> &mut Workspace<f32> {
+        let mut grew = self.ws32.ensure(n);
+        grew |= self.ws32.reserve_kernel(cbuf, tbuf, map_idx, pbuf, abuf);
+        if grew {
+            self.counters.note_alloc();
+        }
+        &mut self.ws32
+    }
+
+    /// Scrub every precision's arena after a job panic (scatter state in
+    /// `x`/`colmap` may be mid-flight; see [`crate::numeric::Workspace`]).
+    fn scrub_all(&mut self) {
+        self.ws.scrub();
+        self.ws32.scrub();
     }
 }
 
@@ -286,7 +318,7 @@ impl WorkerPool {
         if self.nthreads == 1 {
             let r = catch_unwind(AssertUnwindSafe(|| job(0, &mut ctx0)));
             if let Err(p) = r {
-                ctx0.ws.scrub();
+                ctx0.scrub_all();
                 resume_unwind(p);
             }
             return;
@@ -319,7 +351,7 @@ impl WorkerPool {
             st.panicked
         };
         if let Err(p) = caller_result {
-            ctx0.ws.scrub();
+            ctx0.scrub_all();
             resume_unwind(p);
         }
         if worker_panicked {
@@ -394,7 +426,7 @@ fn worker_loop(shared: Arc<Shared>, id: usize, counters: Arc<PoolCounters>) {
             f(id, &mut ctx);
         }));
         if r.is_err() {
-            ctx.ws.scrub();
+            ctx.scrub_all();
         }
         let mut st = lock_ignore_poison(&shared.state);
         if r.is_err() {

@@ -94,6 +94,9 @@ impl ExecPlan {
         // Kernel scratch high-water marks: sized so no worker workspace
         // ever reallocates mid-factorization regardless of which worker
         // claims which node (pipeline-mode assignment is nondeterministic).
+        // The bounds are ELEMENT counts, not bytes: each per-precision
+        // worker arena (`Workspace<f64>` / `Workspace<f32>`) reserves the
+        // same element capacity, so one plan serves both precisions.
         let mut max_cbuf = 0usize;
         let mut max_tbuf = 0usize;
         let mut max_map = 0usize;

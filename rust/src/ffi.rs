@@ -213,6 +213,9 @@ pub unsafe extern "C" fn hylu_create(threads: i64, repeated: i32, out: *mut *mut
         } else {
             builder.one_shot()
         };
+        // the ABI contract pins FFI handles to f64: HYLU_PRECISION must
+        // not flip a C caller onto the mixed-precision path
+        builder = builder.configure(|cfg| cfg.pin_precision = true);
         match builder.build() {
             Ok(solver) => {
                 let h = Box::new(HyluHandle {
@@ -536,6 +539,8 @@ pub unsafe extern "C" fn hylu_service_create(
         let solver = match SolverBuilder::new()
             .repeated()
             .threads(threads as usize)
+            // same f64 pin as hylu_create: the service ABI is double too
+            .configure(|cfg| cfg.pin_precision = true)
             .build()
         {
             Ok(s) => s,

@@ -60,7 +60,9 @@ pub mod testutil;
 /// [`crate::coordinator::Solver`] (deprecated).
 pub mod prelude {
     pub use crate::api::{Analyzed, Factored, LinearSystem, SolveOpts, Solver, SolverBuilder};
-    pub use crate::coordinator::{FactorStats, SolveStats, SolverConfig, SymbolicStats};
+    pub use crate::coordinator::{
+        FactorStats, Precision, RefineOutcome, SolveStats, SolverConfig, SymbolicStats,
+    };
     pub use crate::numeric::kernels::{KernelPlan, KernelTier, Tuning};
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;

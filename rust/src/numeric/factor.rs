@@ -17,7 +17,7 @@
 use crate::numeric::kernels;
 use crate::numeric::kernels::KernelPlan;
 use crate::numeric::select::KernelMode;
-use crate::numeric::{LuFactors, PivotConfig, SharedFactors, Workspace};
+use crate::numeric::{LuFactors, PivotConfig, Scalar, SharedFactors, Workspace};
 use crate::sparse::csr::Csr;
 use crate::symbolic::Symbolic;
 
@@ -63,13 +63,17 @@ impl GemmBackend for NativeGemm {
 }
 
 /// Factor (or refactor) `a` (already permuted + scaled) into `fac`.
-/// Returns the number of perturbed pivots.
-pub fn factor(
+/// Returns the number of perturbed pivots. Generic over the factor
+/// element type: `T = f64` is the bit-exact legacy path, `T = f32` is
+/// the mixed-precision numeric core (A values are rounded on scatter;
+/// pivot search, perturbation, and all updates then run entirely in
+/// `f32`).
+pub fn factor<T: Scalar>(
     a: &Csr,
     sym: &Symbolic,
     mode: KernelMode,
     cfg: &PivotConfig,
-    fac: &mut LuFactors,
+    fac: &mut LuFactors<T>,
     refactor: bool,
     gemm: &dyn GemmBackend,
 ) -> usize {
@@ -104,12 +108,12 @@ pub fn factor(
 /// Factor one node. Safety: caller guarantees all source nodes (this node's
 /// groups) are complete and no other thread touches this node's storage.
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn factor_node(
+pub(crate) unsafe fn factor_node<T: Scalar>(
     id: usize,
     a: &Csr,
     sym: &Symbolic,
-    sf: &SharedFactors,
-    ws: &mut Workspace,
+    sf: &SharedFactors<T>,
+    ws: &mut Workspace<T>,
     mode: KernelMode,
     cfg: &PivotConfig,
     eps_abs: f64,
@@ -125,12 +129,15 @@ pub(crate) unsafe fn factor_node(
     }
 }
 
-/// Perturb a tiny pivot; returns (pivot, perturbed?).
+/// Perturb a tiny pivot; returns (pivot, perturbed?). The threshold
+/// compare and replacement magnitude are computed in `f64` (bit-identical
+/// to the historical scalar code when `T = f64`; a single rounding on the
+/// replacement value when `T = f32`).
 #[inline]
-fn perturb_pivot(p: f64, eps_abs: f64) -> (f64, bool) {
-    if eps_abs > 0.0 && p.abs() < eps_abs {
-        let s = if p < 0.0 { -1.0 } else { 1.0 };
-        (s * eps_abs, true)
+fn perturb_pivot<T: Scalar>(p: T, eps_abs: f64) -> (T, bool) {
+    if eps_abs > 0.0 && p.to_f64().abs() < eps_abs {
+        let s = if p < T::ZERO { -1.0 } else { 1.0 };
+        (T::from_f64(s * eps_abs), true)
     } else {
         (p, false)
     }
@@ -138,12 +145,12 @@ fn perturb_pivot(p: f64, eps_abs: f64) -> (f64, bool) {
 
 /// The sup-sup kernel: whole-panel target.
 #[allow(clippy::too_many_arguments)]
-unsafe fn factor_panel(
+unsafe fn factor_panel<T: Scalar>(
     id: usize,
     a: &Csr,
     sym: &Symbolic,
-    sf: &SharedFactors,
-    ws: &mut Workspace,
+    sf: &SharedFactors<T>,
+    ws: &mut Workspace<T>,
     cfg: &PivotConfig,
     eps_abs: f64,
     refactor: bool,
@@ -160,7 +167,7 @@ unsafe fn factor_panel(
     let lcols = &sym.lcols[nd.l_start..nd.l_end];
     let ucols = &sym.ucols[nd.u_start..nd.u_end];
     let panel = sf.panel_mut(id);
-    panel.fill(0.0);
+    panel.fill(T::ZERO);
 
     // column map
     for (c, &j) in lcols.iter().enumerate() {
@@ -184,7 +191,7 @@ unsafe fn factor_panel(
         for (k, &j) in a.row_indices(src_row).iter().enumerate() {
             let pc = ws.colmap[j];
             debug_assert!(pc >= 0, "A entry ({src_row},{j}) outside pattern");
-            panel[base + pc as usize] = a.row_vals(src_row)[k];
+            panel[base + pc as usize] = T::from_f64(a.row_vals(src_row)[k]);
         }
     }
 
@@ -275,13 +282,16 @@ unsafe fn factor_panel(
                     continue;
                 }
                 ws.cbuf.clear();
-                ws.cbuf.resize(w * s_nu, 0.0);
+                ws.cbuf.resize(w * s_nu, T::ZERO);
                 // X lives in panel cols [goff, goff+len) (strided), or
-                // contiguous in abuf when the plan packs A
+                // contiguous in abuf when the plan packs A. The pluggable
+                // backend is f64-only; `T::backend_gemm` routes f64 through
+                // it and reports "not handled" for f32 (in-crate tiers).
                 let did = if pack {
-                    gemm.gemm_sub(&mut ws.cbuf, &ws.abuf, a_lda, &ws.pbuf, s_nu, w, len, s_nu)
+                    T::backend_gemm(gemm, &mut ws.cbuf, &ws.abuf, a_lda, &ws.pbuf, s_nu, w, len, s_nu)
                 } else {
-                    gemm.gemm_sub(
+                    T::backend_gemm(
+                        gemm,
                         &mut ws.cbuf,
                         &panel[goff..],
                         a_lda,
@@ -327,7 +337,7 @@ unsafe fn factor_panel(
                             panel[base + pc as usize] += crow[idx];
                         } else {
                             debug_assert!(
-                                crow[idx].abs() < 1e-30,
+                                crow[idx].to_f64().abs() < 1e-30,
                                 "nonzero update outside pattern"
                             );
                         }
@@ -346,7 +356,7 @@ unsafe fn factor_panel(
                 let base = r * stride;
                 let m = panel[base + goff] / d;
                 panel[base + goff] = m;
-                if m != 0.0 {
+                if m != T::ZERO {
                     for (idx, &j) in sucols.iter().enumerate() {
                         let pc = ws.colmap[j as usize];
                         debug_assert!(pc >= 0);
@@ -385,14 +395,14 @@ unsafe fn factor_panel(
         let (piv, pert) = perturb_pivot(panel[c * stride + pcol], eps_abs);
         panel[c * stride + pcol] = piv;
         perturbed += pert as usize;
-        let inv = 1.0 / piv;
+        let inv = T::ONE / piv;
         let (head, tail) = panel.split_at_mut((c + 1) * stride);
         let crow = &head[c * stride + pcol + 1..c * stride + stride];
         for r in c + 1..w {
             let base = (r - c - 1) * stride;
             let f = tail[base + pcol] * inv;
             tail[base + pcol] = f;
-            if f != 0.0 {
+            if f != T::ZERO {
                 kernels::axpy_sub(tier, &mut tail[base + pcol + 1..base + stride], crow, f);
             }
         }
@@ -416,12 +426,12 @@ unsafe fn factor_panel(
 /// The row-row / sup-row kernels: row-at-a-time target with a dense
 /// accumulator. Handles standalone rows (sparse storage) and supernode
 /// panels filled row-wise (sup-row mode).
-unsafe fn factor_rows(
+unsafe fn factor_rows<T: Scalar>(
     id: usize,
     a: &Csr,
     sym: &Symbolic,
-    sf: &SharedFactors,
-    ws: &mut Workspace,
+    sf: &SharedFactors<T>,
+    ws: &mut Workspace<T>,
     eps_abs: f64,
 ) {
     let nd = &sym.nodes[id];
@@ -433,7 +443,7 @@ unsafe fn factor_rows(
     let lcols = &sym.lcols[nd.l_start..nd.l_end];
     let ucols = &sym.ucols[nd.u_start..nd.u_end];
     if nd.is_super {
-        sf.panel_mut(id).fill(0.0);
+        sf.panel_mut(id).fill(T::ZERO);
     }
     let x = &mut ws.x;
     let mut perturbed = 0usize;
@@ -442,7 +452,7 @@ unsafe fn factor_rows(
         let i = first + r;
         // scatter
         for (k, &j) in a.row_indices(i).iter().enumerate() {
-            x[j] = a.row_vals(i)[k];
+            x[j] = T::from_f64(a.row_vals(i)[k]);
         }
         // updates from earlier nodes (ascending column order)
         for g in &sym.groups[nd.g_start..nd.g_end] {
@@ -462,7 +472,7 @@ unsafe fn factor_rows(
                     let srow = &spanel[klocal * sstride..(klocal + 1) * sstride];
                     let m = x[k] / srow[s_nl + klocal];
                     x[k] = m;
-                    if m != 0.0 {
+                    if m != T::ZERO {
                         // sup-row: dense panel row drives the update
                         for jj in klocal + 1..s_w {
                             x[s_first + jj] -= m * srow[s_nl + jj];
@@ -478,7 +488,7 @@ unsafe fn factor_rows(
                 let k = lcols[goff] as usize;
                 let m = x[k] / *sf.diag.add(k);
                 x[k] = m;
-                if m != 0.0 {
+                if m != T::ZERO {
                     let sucols = &sym.ucols[src.u_start..src.u_end];
                     let suvals = std::slice::from_raw_parts(
                         sf.uvals.add(src.u_start),
@@ -499,7 +509,7 @@ unsafe fn factor_rows(
                 let krow = &p[kk * stride..(kk + 1) * stride];
                 let m = x[k] / krow[nl + kk];
                 x[k] = m;
-                if m != 0.0 {
+                if m != T::ZERO {
                     for jj in kk + 1..w {
                         x[first + jj] -= m * krow[nl + jj];
                     }
@@ -520,30 +530,30 @@ unsafe fn factor_rows(
             let base = r * stride;
             for (c, &j) in lcols.iter().enumerate() {
                 p[base + c] = x[j as usize];
-                x[j as usize] = 0.0;
+                x[j as usize] = T::ZERO;
             }
             for kk in 0..w {
                 p[base + nl + kk] = x[first + kk];
-                x[first + kk] = 0.0;
+                x[first + kk] = T::ZERO;
             }
             p[base + nl + r] = piv;
             for (c, &j) in ucols.iter().enumerate() {
                 p[base + nl + w + c] = x[j as usize];
-                x[j as usize] = 0.0;
+                x[j as usize] = T::ZERO;
             }
             *sf.diag.add(i) = piv;
         } else {
             let lv = std::slice::from_raw_parts_mut(sf.lvals.add(nd.l_start), nl);
             for (c, &j) in lcols.iter().enumerate() {
                 lv[c] = x[j as usize];
-                x[j as usize] = 0.0;
+                x[j as usize] = T::ZERO;
             }
             *sf.diag.add(i) = piv;
-            x[i] = 0.0;
+            x[i] = T::ZERO;
             let uv = std::slice::from_raw_parts_mut(sf.uvals.add(nd.u_start), nu);
             for (c, &j) in ucols.iter().enumerate() {
                 uv[c] = x[j as usize];
-                x[j as usize] = 0.0;
+                x[j as usize] = T::ZERO;
             }
         }
     }
@@ -674,7 +684,7 @@ mod tests {
             ),
         ] {
             let sym = analyze_pattern(a, policy, 4);
-            let mut fac = LuFactors::alloc(&sym);
+            let mut fac: LuFactors = LuFactors::alloc(&sym);
             factor(a, &sym, mode, &cfg, &mut fac, false, &NativeGemm);
             check_reconstruction(a, &sym, &fac, tol);
         }
@@ -738,7 +748,7 @@ mod tests {
         let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 8 }, 4);
         assert!(sym.nodes[0].is_super);
         let cfg = PivotConfig::default();
-        let mut fac = LuFactors::alloc(&sym);
+        let mut fac: LuFactors = LuFactors::alloc(&sym);
         let perturbed = factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
         assert_eq!(perturbed, 0, "pivoting should avoid perturbation");
         // pivot moved a big row first
@@ -762,7 +772,7 @@ mod tests {
             perturb: true,
             perturb_eps: 1e-8,
         };
-        let mut fac = LuFactors::alloc(&sym);
+        let mut fac: LuFactors = LuFactors::alloc(&sym);
         let perturbed = factor(&a, &sym, KernelMode::RowRow, &cfg, &mut fac, false, &NativeGemm);
         assert!(perturbed >= 1);
         assert!(fac.diag[0].abs() > 0.0);
@@ -773,7 +783,7 @@ mod tests {
         let a = gen::grid2d(6, 6);
         let cfg = PivotConfig::default();
         let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
-        let mut fac = LuFactors::alloc(&sym);
+        let mut fac: LuFactors = LuFactors::alloc(&sym);
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
         let panels1 = fac.panels.clone();
         let lv1 = fac.lvals.clone();
@@ -791,7 +801,7 @@ mod tests {
         let a = gen::power_network(60, 4);
         let cfg = PivotConfig::default();
         let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
-        let mut fac = LuFactors::alloc(&sym);
+        let mut fac: LuFactors = LuFactors::alloc(&sym);
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
         // new values, same pattern
         let mut b = a.clone();
@@ -800,6 +810,33 @@ mod tests {
         }
         factor(&b, &sym, KernelMode::SupSup, &cfg, &mut fac, true, &NativeGemm);
         check_reconstruction(&b, &sym, &fac, 1e-8);
+    }
+
+    #[test]
+    fn f32_factor_tracks_f64_factor() {
+        let a = gen::grid2d(6, 7);
+        let cfg = PivotConfig::default();
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let mut hi: LuFactors = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut hi, false, &NativeGemm);
+        let mut lo: LuFactors<f32> = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut lo, false, &NativeGemm);
+        // same pivot order (grid2d has no near-ties), values within f32
+        // rounding of the f64 factors
+        assert_eq!(lo.pivot_perm, hi.pivot_perm);
+        assert_eq!(lo.perturbed, hi.perturbed);
+        for (l, h) in lo.diag.iter().zip(&hi.diag) {
+            assert!((l.to_f64() - h).abs() <= 1e-4 * h.abs().max(1.0));
+        }
+        for (l, h) in lo.panels.iter().zip(&hi.panels) {
+            assert!((l.to_f64() - h).abs() <= 1e-3 * h.abs().max(1.0));
+        }
+        // f32 refactor replays the recorded pivots bit-identically
+        let p1 = lo.panels.clone();
+        let d1 = lo.diag.clone();
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut lo, true, &NativeGemm);
+        assert!(lo.panels.iter().zip(&p1).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(lo.diag.iter().zip(&d1).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -23,8 +23,14 @@
 //! lane kernels perform exactly one multiply+subtract (or divide) per lane,
 //! bit-identical to every other tier, preserving the batched-solve
 //! contract.
+//!
+//! The GEMM/dot/axpy kernels are generic over the factor element type
+//! ([`Scalar`]); the lane kernels stay `f64` because substitution right-
+//! hand sides are always held in `f64` regardless of factor precision.
 
 #![allow(clippy::needless_range_loop)]
+
+use crate::numeric::Scalar;
 
 /// Raw 8x16-blocked core of `gemm_sub`: `C[m×n] -= A[m×k] · B[k×n]`,
 /// row-major with leading dimensions. Row remainders run as 1x16 strips;
@@ -35,12 +41,12 @@
 /// `cp/ap/bp` must be valid for the strided `m×n`, `m×k`, `k×n` accesses,
 /// and the C range must not overlap A or B element-wise.
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn gemm_sub_raw(
-    cp: *mut f64,
+pub unsafe fn gemm_sub_raw<T: Scalar>(
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -50,7 +56,7 @@ pub unsafe fn gemm_sub_raw(
     while j + 16 <= n {
         let mut i = 0;
         while i + 8 <= m {
-            let mut t = [[0.0f64; 16]; 8];
+            let mut t = [[T::ZERO; 16]; 8];
             for r in 0..8 {
                 let crow = cp.add((i + r) * ldc + j);
                 for q in 0..16 {
@@ -59,7 +65,7 @@ pub unsafe fn gemm_sub_raw(
             }
             for p in 0..k {
                 let brow = bp.add(p * ldb + j);
-                let mut bv = [0.0f64; 16];
+                let mut bv = [T::ZERO; 16];
                 for q in 0..16 {
                     bv[q] = *brow.add(q);
                 }
@@ -80,7 +86,7 @@ pub unsafe fn gemm_sub_raw(
         }
         // row remainder (m % 8): 1x16 strips
         while i < m {
-            let mut t = [0.0f64; 16];
+            let mut t = [T::ZERO; 16];
             let crow = cp.add(i * ldc + j);
             for q in 0..16 {
                 t[q] = *crow.add(q);
@@ -109,9 +115,9 @@ pub unsafe fn gemm_sub_raw(
 /// 8-lane blocked dot product (one accumulator per lane, pairwise
 /// horizontal sum at the end).
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
     let n = a.len().min(b.len());
-    let mut lanes = [0.0f64; 8];
+    let mut lanes = [T::ZERO; 8];
     let mut i = 0;
     while i + 8 <= n {
         for q in 0..8 {
@@ -130,7 +136,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 
 /// `y[0..n] -= f * x[0..n]` in 8-wide chunks.
 #[inline]
-pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+pub fn axpy_sub<T: Scalar>(y: &mut [T], x: &[T], f: T) {
     let n = y.len().min(x.len());
     let split = n - n % 8;
     let (yc, yr) = y[..n].split_at_mut(split);
@@ -141,7 +147,7 @@ pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
         }
     }
     for (yy, xx) in yr.iter_mut().zip(xr) {
-        *yy -= f * xx;
+        *yy -= f * *xx;
     }
 }
 

@@ -53,6 +53,8 @@ pub mod x86;
 
 pub use tuner::{GemmVariant, KernelPlan, Tuning};
 
+use crate::numeric::Scalar;
+
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Mutex;
 
@@ -238,14 +240,16 @@ pub const BLOCK_PANEL_MIN_W: usize = 8;
 
 /// `C[m×n] -= A[m×k] · B[k×n]`, row-major with leading dimensions
 /// `lda/ldb/ldc`, on the given tier. The sup-sup update's level-3 core.
+/// Generic over the factor element type; the native (`std::arch`) tier
+/// exists only for `f64` and other precisions fall through to portable.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_sub(
+pub fn gemm_sub<T: Scalar>(
     tier: KernelTier,
-    c: &mut [f64],
+    c: &mut [T],
     ldc: usize,
-    a: &[f64],
+    a: &[T],
     lda: usize,
-    b: &[f64],
+    b: &[T],
     ldb: usize,
     m: usize,
     k: usize,
@@ -270,13 +274,13 @@ pub fn gemm_sub(
 /// `cp/ap/bp` must be valid for the strided `m x n`, `m x k`, `k x n`
 /// accesses, and the C range must not overlap A or B element-wise.
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn gemm_sub_raw(
+pub unsafe fn gemm_sub_raw<T: Scalar>(
     tier: KernelTier,
-    cp: *mut f64,
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -287,9 +291,12 @@ pub unsafe fn gemm_sub_raw(
     }
     match tier {
         KernelTier::Scalar => scalar::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        #[cfg(target_arch = "x86_64")]
         KernelTier::Native if native_supported() => {
-            x86::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n)
+            // precisions without a native microkernel fall through to the
+            // portable tier (the Scalar hook reports "not handled")
+            if !T::native_gemm_sub(cp, ldc, ap, lda, bp, ldb, m, k, n) {
+                portable::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n)
+            }
         }
         // safe blocked shapes — correct on any machine, zmm-fast only on
         // the builds/CPUs `best_available` actually selects it for
@@ -301,14 +308,14 @@ pub unsafe fn gemm_sub_raw(
 /// [`gemm_sub`] with an analysis' tuned [`KernelPlan`] applied: a tuned
 /// tile variant replaces the tier microkernel when the plan carries one.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_sub_planned(
+pub fn gemm_sub_planned<T: Scalar>(
     tier: KernelTier,
     plan: &KernelPlan,
-    c: &mut [f64],
+    c: &mut [T],
     ldc: usize,
-    a: &[f64],
+    a: &[T],
     lda: usize,
-    b: &[f64],
+    b: &[T],
     ldb: usize,
     m: usize,
     k: usize,
@@ -344,14 +351,14 @@ pub fn gemm_sub_planned(
 /// # Safety
 /// Same contract as [`gemm_sub_raw`].
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn gemm_sub_raw_planned(
+pub unsafe fn gemm_sub_raw_planned<T: Scalar>(
     tier: KernelTier,
     plan: &KernelPlan,
-    cp: *mut f64,
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -372,7 +379,7 @@ pub unsafe fn gemm_sub_raw_planned(
 /// linearly instead of striding by the source panel width per element;
 /// `dst` is a reusable arena sized by `ExecPlan::max_pbuf` so the warm
 /// path never allocates.
-pub fn pack_rows(dst: &mut Vec<f64>, src: &[f64], ld: usize, rows: usize, cols: usize) {
+pub fn pack_rows<T: Scalar>(dst: &mut Vec<T>, src: &[T], ld: usize, rows: usize, cols: usize) {
     dst.clear();
     // extend (not resize-then-copy): each element is written exactly once
     for r in 0..rows {
@@ -399,18 +406,18 @@ pub fn pack_rows(dst: &mut Vec<f64>, src: &[f64], ld: usize, rows: usize, cols: 
 /// historical `len >= 48 && m >= 8`; the autotuner varies it per pattern
 /// through [`trsm_right_upper_with`].
 #[allow(clippy::too_many_arguments)]
-pub fn trsm_right_upper(
+pub fn trsm_right_upper<T: Scalar>(
     tier: KernelTier,
-    x: &mut [f64],
+    x: &mut [T],
     ldx: usize,
     x_off: usize,
     m: usize,
-    u: &[f64],
+    u: &[T],
     ldu: usize,
     u_row0: usize,
     u_col0: usize,
     len: usize,
-    scratch: &mut Vec<f64>,
+    scratch: &mut Vec<T>,
 ) {
     trsm_right_upper_with(tier, x, ldx, x_off, m, u, ldu, u_row0, u_col0, len, scratch, 48, 8)
 }
@@ -419,18 +426,18 @@ pub fn trsm_right_upper(
 /// min_m)` — the [`KernelPlan`]'s tuned thresholds; `(usize::MAX,
 /// usize::MAX)` disables the gather path entirely.
 #[allow(clippy::too_many_arguments)]
-pub fn trsm_right_upper_with(
+pub fn trsm_right_upper_with<T: Scalar>(
     tier: KernelTier,
-    x: &mut [f64],
+    x: &mut [T],
     ldx: usize,
     x_off: usize,
     m: usize,
-    u: &[f64],
+    u: &[T],
     ldu: usize,
     u_row0: usize,
     u_col0: usize,
     len: usize,
-    scratch: &mut Vec<f64>,
+    scratch: &mut Vec<T>,
     min_len: usize,
     min_m: usize,
 ) {
@@ -439,7 +446,7 @@ pub fn trsm_right_upper_with(
         // scratch so the dot reductions stream linearly. (Small triangles
         // stay in L1 either way and the gather costs more than it saves.)
         scratch.clear();
-        scratch.resize(len * len, 0.0);
+        scratch.resize(len * len, T::ZERO);
         for cc in 0..len {
             for pp in 0..=cc {
                 scratch[cc * len + pp] = u[(u_row0 + pp) * ldu + u_col0 + cc];
@@ -447,7 +454,7 @@ pub fn trsm_right_upper_with(
         }
         for cc in 0..len {
             let col = &scratch[cc * len..cc * len + cc];
-            let inv = 1.0 / scratch[cc * len + cc];
+            let inv = T::ONE / scratch[cc * len + cc];
             for r in 0..m {
                 let row = &mut x[r * ldx + x_off..r * ldx + x_off + len];
                 let s = row[cc] - dot(tier, &row[..cc], col);
@@ -458,7 +465,7 @@ pub fn trsm_right_upper_with(
     }
     for cc in 0..len {
         let ucc = u[(u_row0 + cc) * ldu + u_col0 + cc];
-        let inv = 1.0 / ucc;
+        let inv = T::ONE / ucc;
         // X[:, cc] = (B[:, cc] - X[:, 0..cc] * U[0..cc, cc]) / U[cc, cc]
         for r in 0..m {
             let row = &mut x[r * ldx + x_off..r * ldx + x_off + len];
@@ -477,15 +484,14 @@ pub fn trsm_right_upper_with(
 
 /// `y[0..n] -= f * x[0..n]` (axpy with negative sign) on the given tier.
 #[inline]
-pub fn axpy_sub(tier: KernelTier, y: &mut [f64], x: &[f64], f: f64) {
+pub fn axpy_sub<T: Scalar>(tier: KernelTier, y: &mut [T], x: &[T], f: T) {
     debug_assert!(y.len() >= x.len());
     match tier {
         KernelTier::Scalar => scalar::axpy_sub(y, x, f),
-        #[cfg(target_arch = "x86_64")]
         KernelTier::Native if native_supported() => {
-            let n = y.len().min(x.len());
-            // Safety: bounds by `n`; panel tail and pivot row never alias.
-            unsafe { x86::axpy_sub(y.as_mut_ptr(), x.as_ptr(), n, f) }
+            if !T::native_axpy_sub(y, x, f) {
+                portable::axpy_sub(y, x, f)
+            }
         }
         KernelTier::Avx512 => avx512::axpy_sub(y, x, f),
         _ => portable::axpy_sub(y, x, f),
@@ -494,14 +500,11 @@ pub fn axpy_sub(tier: KernelTier, y: &mut [f64], x: &[f64], f: f64) {
 
 /// Dot product on the given tier (reduction order differs per tier).
 #[inline]
-pub fn dot(tier: KernelTier, a: &[f64], b: &[f64]) -> f64 {
+pub fn dot<T: Scalar>(tier: KernelTier, a: &[T], b: &[T]) -> T {
     match tier {
         KernelTier::Scalar => scalar::dot(a, b),
-        #[cfg(target_arch = "x86_64")]
         KernelTier::Native if native_supported() => {
-            let n = a.len().min(b.len());
-            // Safety: bounds by `n`.
-            unsafe { x86::dot(a.as_ptr(), b.as_ptr(), n) }
+            T::native_dot(a, b).unwrap_or_else(|| portable::dot(a, b))
         }
         KernelTier::Avx512 => avx512::dot(a, b),
         _ => portable::dot(a, b),
@@ -563,15 +566,20 @@ pub fn lanes_div(tier: KernelTier, dst: &mut [f64], piv: f64) {
 ///
 /// `y` is the full block; the node's rows are `first..first+w` and every
 /// `lcols` entry is `< first`.
+///
+/// Generic over the factor element type: the RHS lanes are always `f64`;
+/// each panel multiplier is widened once (`to_f64`, the identity for
+/// `f64`) before the bit-specified lane update — the f64-refinement half
+/// of the mixed-precision contract.
 #[allow(clippy::too_many_arguments)]
-pub fn forward_panel_block(
+pub fn forward_panel_block<T: Scalar>(
     tier: KernelTier,
     y: &mut [f64],
     k: usize,
     first: usize,
     w: usize,
     stride: usize,
-    panel: &[f64],
+    panel: &[T],
     lcols: &[u32],
 ) {
     if k == 0 || w == 0 {
@@ -585,7 +593,7 @@ pub fn forward_panel_block(
         let s0 = j as usize * k;
         let s = &src[s0..s0 + k];
         for (r, row) in dst.chunks_exact_mut(k).enumerate() {
-            lanes_axpy_sub(tier, row, s, panel[r * stride + c]);
+            lanes_axpy_sub(tier, row, s, panel[r * stride + c].to_f64());
         }
     }
     // "TRSM": unit-lower solve of the diagonal block across the lanes.
@@ -593,7 +601,12 @@ pub fn forward_panel_block(
         let (done, tail) = dst.split_at_mut(r * k);
         let row = &mut tail[..k];
         for kk in 0..r {
-            lanes_axpy_sub(tier, row, &done[kk * k..(kk + 1) * k], panel[r * stride + nl + kk]);
+            lanes_axpy_sub(
+                tier,
+                row,
+                &done[kk * k..(kk + 1) * k],
+                panel[r * stride + nl + kk].to_f64(),
+            );
         }
     }
 }
@@ -605,8 +618,11 @@ pub fn forward_panel_block(
 /// path per lane, on every tier (see [`forward_panel_block`]).
 ///
 /// Every `ucols` entry is `>= first + w`.
+///
+/// Generic over the factor element type on the same terms as
+/// [`forward_panel_block`].
 #[allow(clippy::too_many_arguments)]
-pub fn backward_panel_block(
+pub fn backward_panel_block<T: Scalar>(
     tier: KernelTier,
     y: &mut [f64],
     k: usize,
@@ -614,7 +630,7 @@ pub fn backward_panel_block(
     w: usize,
     nl: usize,
     stride: usize,
-    panel: &[f64],
+    panel: &[T],
     ucols: &[u32],
 ) {
     if k == 0 || w == 0 {
@@ -627,7 +643,7 @@ pub fn backward_panel_block(
         let s0 = (j as usize - first - w) * k;
         let s = &usrc[s0..s0 + k];
         for (r, row) in dst.chunks_exact_mut(k).enumerate() {
-            lanes_axpy_sub(tier, row, s, panel[r * stride + nl + w + c]);
+            lanes_axpy_sub(tier, row, s, panel[r * stride + nl + w + c].to_f64());
         }
     }
     // "TRSM": upper solve of the diagonal block, rows descending.
@@ -639,10 +655,10 @@ pub fn backward_panel_block(
                 tier,
                 row,
                 &tail[(kk - r - 1) * k..(kk - r) * k],
-                panel[r * stride + nl + kk],
+                panel[r * stride + nl + kk].to_f64(),
             );
         }
-        lanes_div(tier, row, panel[r * stride + nl + r]);
+        lanes_div(tier, row, panel[r * stride + nl + r].to_f64());
     }
 }
 
@@ -965,10 +981,63 @@ mod tests {
         let a = [1.0, 2.0, 3.0, 4.0, 5.0];
         let b = [2.0, 2.0, 2.0, 2.0, 2.0];
         for tier in available_tiers() {
-            assert_eq!(dot(tier, &a, &b), 30.0, "{tier}");
+            assert_eq!(dot(tier, &a[..], &b[..]), 30.0, "{tier}");
             let mut y = [10.0, 10.0, 10.0];
-            axpy_sub(tier, &mut y, &[1.0, 2.0, 3.0], 2.0);
+            axpy_sub(tier, &mut y[..], &[1.0, 2.0, 3.0][..], 2.0);
             assert_eq!(y, [8.0, 6.0, 4.0], "{tier}");
+        }
+    }
+
+    #[test]
+    fn f32_gemm_is_bit_identical_to_f32_scalar_on_every_tier() {
+        // the generic tiers must keep the scalar op order at every
+        // precision; the native tier has no f32 microkernel and must fall
+        // through to portable (handled inside the dispatch)
+        let mut rng = Prng::new(21);
+        for (m, k, n) in [(1, 1, 1), (7, 5, 9), (8, 8, 16), (9, 17, 33), (20, 9, 18)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let mut want = c0.clone();
+            gemm_sub(KernelTier::Scalar, &mut want, n, &a, k, &b, n, m, k, n);
+            for tier in [KernelTier::Portable, KernelTier::Avx512] {
+                let mut c = c0.clone();
+                gemm_sub(tier, &mut c, n, &a, k, &b, n, m, k, n);
+                assert_eq!(c, want, "{tier} f32 gemm must keep the scalar op order");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_trsm_and_level1_run_on_every_tier() {
+        let mut rng = Prng::new(22);
+        let (len, m) = (12usize, 5usize);
+        let ldu = len + 2;
+        let mut u = vec![0.0f32; (len + 1) * ldu];
+        for r in 0..len {
+            for c in r..len {
+                u[(1 + r) * ldu + c] =
+                    if r == c { 2.0 + rng.uniform() as f32 } else { rng.normal() as f32 * 0.2 };
+            }
+        }
+        let b0: Vec<f32> = (0..m * len).map(|_| rng.normal() as f32).collect();
+        for tier in available_tiers() {
+            let mut x = b0.clone();
+            trsm_right_upper(tier, &mut x, len, 0, m, &u, ldu, 1, 0, len, &mut Vec::new());
+            // verify against the triangular system: X · U = B
+            for r in 0..m {
+                for c in 0..len {
+                    let mut s = 0.0f32;
+                    for p in 0..=c {
+                        s += x[r * len + p] * u[(1 + p) * ldu + c];
+                    }
+                    assert!((s - b0[r * len + c]).abs() < 1e-3, "{tier} ({r},{c})");
+                }
+            }
+            assert_eq!(dot(tier, &b0[..4], &b0[..4]), dot(KernelTier::Scalar, &b0[..4], &b0[..4]));
+            let mut y = b0.clone();
+            axpy_sub(tier, &mut y, &b0.clone(), 0.5f32);
+            assert_eq!(y[0], b0[0] - 0.5 * b0[0], "{tier}");
         }
     }
 

@@ -3,7 +3,10 @@
 //! on targets without the AVX2+FMA native tier, and what `HYLU_KERNEL=
 //! portable` selects for A/B runs. LLVM vectorizes the fixed-trip inner
 //! loops with whatever the target baseline offers (SSE2 on stock x86_64,
-//! NEON on aarch64).
+//! NEON on aarch64). Generic over the factor element type ([`Scalar`]):
+//! the same 4x16 shapes lower to twice the lane count for `f32`.
+
+use crate::numeric::Scalar;
 
 /// Raw core of the portable `gemm_sub`: register-tiled 4x16 microkernel.
 /// A 4-row x 16-col C tile lives in registers across the whole k loop;
@@ -14,12 +17,12 @@
 /// `cp/ap/bp` must be valid for the strided `m x n`, `m x k`, `k x n`
 /// accesses, and the C range must not overlap A or B element-wise.
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn gemm_sub_raw(
-    cp: *mut f64,
+pub unsafe fn gemm_sub_raw<T: Scalar>(
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -39,10 +42,10 @@ pub unsafe fn gemm_sub_raw(
             let c1 = cp.add((i + 1) * ldc + j);
             let c2 = cp.add((i + 2) * ldc + j);
             let c3 = cp.add((i + 3) * ldc + j);
-            let mut t0 = [0.0f64; 16];
-            let mut t1 = [0.0f64; 16];
-            let mut t2 = [0.0f64; 16];
-            let mut t3 = [0.0f64; 16];
+            let mut t0 = [T::ZERO; 16];
+            let mut t1 = [T::ZERO; 16];
+            let mut t2 = [T::ZERO; 16];
+            let mut t3 = [T::ZERO; 16];
             for q in 0..16 {
                 t0[q] = *c0.add(q);
                 t1[q] = *c1.add(q);
@@ -75,7 +78,7 @@ pub unsafe fn gemm_sub_raw(
         while i < m {
             let arow = ap.add(i * lda);
             let crow = cp.add(i * ldc + j);
-            let mut t = [0.0f64; 16];
+            let mut t = [T::ZERO; 16];
             for q in 0..16 {
                 t[q] = *crow.add(q);
             }
@@ -115,11 +118,11 @@ pub unsafe fn gemm_sub_raw(
 /// Dot product with 4 parallel accumulators (vectorization-friendly
 /// reduction shape).
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    let mut s0 = 0.0;
-    let mut s1 = 0.0;
-    let mut s2 = 0.0;
-    let mut s3 = 0.0;
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut s0 = T::ZERO;
+    let mut s1 = T::ZERO;
+    let mut s2 = T::ZERO;
+    let mut s3 = T::ZERO;
     let mut i = 0;
     let n = a.len().min(b.len());
     while i + 4 <= n {
@@ -139,8 +142,8 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// `y[0..n] -= f * x[0..n]` (contiguous axpy; the compiler vectorizes the
 /// simple zip loop at the target baseline width).
 #[inline]
-pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+pub fn axpy_sub<T: Scalar>(y: &mut [T], x: &[T], f: T) {
     for (yy, xx) in y.iter_mut().zip(x) {
-        *yy -= f * xx;
+        *yy -= f * *xx;
     }
 }

@@ -1,7 +1,11 @@
 //! Scalar reference tier: straight-line loops with no register blocking
 //! and no explicit vector widths. This is the baseline the dispatch layer
 //! A/Bs against (`HYLU_KERNEL=scalar`) and the semantics reference the
-//! property tests compare the other tiers to.
+//! property tests compare the other tiers to. Generic over the factor
+//! element type ([`Scalar`]); the loop structure is identical for `f64`
+//! and `f32`.
+
+use crate::numeric::Scalar;
 
 /// Raw scalar core of `gemm_sub`: `C[m×n] -= A[m×k] · B[k×n]`, row-major
 /// with leading dimensions.
@@ -10,12 +14,12 @@
 /// `cp/ap/bp` must be valid for the strided `m×n`, `m×k`, `k×n` accesses,
 /// and the C range must not overlap A or B element-wise.
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn gemm_sub_raw(
-    cp: *mut f64,
+pub unsafe fn gemm_sub_raw<T: Scalar>(
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -36,18 +40,18 @@ pub unsafe fn gemm_sub_raw(
 
 /// Scalar dot product (strict left-to-right accumulation).
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    let mut s = 0.0;
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut s = T::ZERO;
     for (x, y) in a.iter().zip(b) {
-        s += x * y;
+        s += *x * *y;
     }
     s
 }
 
 /// `y[0..n] -= f * x[0..n]`.
 #[inline]
-pub fn axpy_sub(y: &mut [f64], x: &[f64], f: f64) {
+pub fn axpy_sub<T: Scalar>(y: &mut [T], x: &[T], f: T) {
     for (yy, xx) in y.iter_mut().zip(x) {
-        *yy -= f * xx;
+        *yy -= f * *xx;
     }
 }

@@ -36,6 +36,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use super::{gemm_sub, pack_rows, trsm_right_upper_with, KernelTier};
+use crate::numeric::Scalar;
 use crate::symbolic::Symbolic;
 
 /// How much search effort `analyze` spends tuning kernels per pattern.
@@ -185,12 +186,12 @@ pub const TILE_VARIANTS: [(u8, u8, u8); 10] = [
 /// `cp/ap/bp` must be valid for the strided `m×n`, `m×k`, `k×n` accesses,
 /// and the C range must not overlap A or B element-wise.
 #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
-unsafe fn gemm_sub_tile<const MR: usize, const NR: usize, const KU: usize>(
-    cp: *mut f64,
+unsafe fn gemm_sub_tile<T: Scalar, const MR: usize, const NR: usize, const KU: usize>(
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -200,7 +201,7 @@ unsafe fn gemm_sub_tile<const MR: usize, const NR: usize, const KU: usize>(
     while j + NR <= n {
         let mut i = 0;
         while i + MR <= m {
-            let mut t = [[0.0f64; NR]; MR];
+            let mut t = [[T::ZERO; NR]; MR];
             for r in 0..MR {
                 let crow = cp.add((i + r) * ldc + j);
                 for q in 0..NR {
@@ -241,7 +242,7 @@ unsafe fn gemm_sub_tile<const MR: usize, const NR: usize, const KU: usize>(
         }
         // row remainder (m % MR): 1×NR strips
         while i < m {
-            let mut t = [0.0f64; NR];
+            let mut t = [T::ZERO; NR];
             let crow = cp.add(i * ldc + j);
             for q in 0..NR {
                 t[q] = *crow.add(q);
@@ -275,15 +276,15 @@ unsafe fn gemm_sub_tile<const MR: usize, const NR: usize, const KU: usize>(
 /// # Safety
 /// Same contract as [`gemm_sub_tile`].
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn gemm_sub_tiled(
+pub unsafe fn gemm_sub_tiled<T: Scalar>(
     mr: u8,
     nr: u8,
     ku: u8,
-    cp: *mut f64,
+    cp: *mut T,
     ldc: usize,
-    ap: *const f64,
+    ap: *const T,
     lda: usize,
-    bp: *const f64,
+    bp: *const T,
     ldb: usize,
     m: usize,
     k: usize,
@@ -293,16 +294,16 @@ pub unsafe fn gemm_sub_tiled(
         return;
     }
     match (mr, nr, ku) {
-        (4, 8, 1) => gemm_sub_tile::<4, 8, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (4, 8, 4) => gemm_sub_tile::<4, 8, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (8, 8, 1) => gemm_sub_tile::<8, 8, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (8, 8, 4) => gemm_sub_tile::<8, 8, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (4, 16, 1) => gemm_sub_tile::<4, 16, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (4, 16, 4) => gemm_sub_tile::<4, 16, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (8, 16, 1) => gemm_sub_tile::<8, 16, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (8, 16, 4) => gemm_sub_tile::<8, 16, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (2, 24, 1) => gemm_sub_tile::<2, 24, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
-        (2, 24, 4) => gemm_sub_tile::<2, 24, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 8, 1) => gemm_sub_tile::<T, 4, 8, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 8, 4) => gemm_sub_tile::<T, 4, 8, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 8, 1) => gemm_sub_tile::<T, 8, 8, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 8, 4) => gemm_sub_tile::<T, 8, 8, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 16, 1) => gemm_sub_tile::<T, 4, 16, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (4, 16, 4) => gemm_sub_tile::<T, 4, 16, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 16, 1) => gemm_sub_tile::<T, 8, 16, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (8, 16, 4) => gemm_sub_tile::<T, 8, 16, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (2, 24, 1) => gemm_sub_tile::<T, 2, 24, 1>(cp, ldc, ap, lda, bp, ldb, m, k, n),
+        (2, 24, 4) => gemm_sub_tile::<T, 2, 24, 4>(cp, ldc, ap, lda, bp, ldb, m, k, n),
         _ => super::scalar::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n),
     }
 }

@@ -3,11 +3,19 @@
 //! and dual-mode parallel drivers, and the refactorization fast path. The
 //! dense inner loops live in [`kernels`] — tiled microkernels behind a
 //! runtime dispatch layer (scalar / portable / AVX2+FMA native).
+//!
+//! The whole numeric path is generic over the element type via
+//! [`Scalar`], defaulting to `f64` everywhere; the `f32` instantiation is
+//! the mixed-precision factor core (`Precision::Mixed` in
+//! [`crate::coordinator`]).
 
 pub mod factor;
 pub mod kernels;
 pub mod parallel;
+pub mod scalar;
 pub mod select;
+
+pub use scalar::Scalar;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -41,18 +49,21 @@ impl Default for PivotConfig {
 /// `sym.lcols`/`sym.ucols` plus `diag`; supernodes store a dense row-major
 /// panel `[L-part | diagonal block | U-tail]` per node (L unit diagonal
 /// implicit, multipliers in the strictly-lower block triangle).
+///
+/// Generic over the stored element type (`f64` by default; `f32` for the
+/// mixed-precision factor core).
 #[derive(Clone, Debug)]
-pub struct LuFactors {
+pub struct LuFactors<T = f64> {
     /// Dimension.
     pub n: usize,
     /// Row-node L values (aligned with `sym.lcols`; unused for supernodes).
-    pub lvals: Vec<f64>,
+    pub lvals: Vec<T>,
     /// Row-node U values (aligned with `sym.ucols`; unused for supernodes).
-    pub uvals: Vec<f64>,
+    pub uvals: Vec<T>,
     /// Row-node pivots, indexed by row.
-    pub diag: Vec<f64>,
+    pub diag: Vec<T>,
     /// Concatenated supernode panels.
-    pub panels: Vec<f64>,
+    pub panels: Vec<T>,
     /// Panel offset per node (row nodes get a zero-length slot).
     pub panel_ptr: Vec<usize>,
     /// Factor-row -> analyzed-row mapping from supernode diagonal pivoting
@@ -63,7 +74,7 @@ pub struct LuFactors {
     pub perturbed: usize,
 }
 
-impl LuFactors {
+impl<T: Scalar> LuFactors<T> {
     /// Allocate zeroed factors shaped for `sym`.
     pub fn alloc(sym: &Symbolic) -> Self {
         let mut panel_ptr = Vec::with_capacity(sym.nodes.len() + 1);
@@ -77,18 +88,34 @@ impl LuFactors {
         panel_ptr.push(off);
         LuFactors {
             n: sym.n,
-            lvals: vec![0.0; sym.lcols.len()],
-            uvals: vec![0.0; sym.ucols.len()],
-            diag: vec![0.0; sym.n],
-            panels: vec![0.0; off],
+            lvals: vec![T::ZERO; sym.lcols.len()],
+            uvals: vec![T::ZERO; sym.ucols.len()],
+            diag: vec![T::ZERO; sym.n],
+            panels: vec![T::ZERO; off],
             panel_ptr,
             pivot_perm: (0..sym.n as u32).collect(),
             perturbed: 0,
         }
     }
 
+    /// Zero-storage placeholder of dimension `n` with an identity pivot
+    /// permutation — the shape the `f64` slot of a mixed-precision
+    /// factorization holds while the `f32` factors are the active ones.
+    pub fn placeholder(n: usize) -> Self {
+        LuFactors {
+            n,
+            lvals: Vec::new(),
+            uvals: Vec::new(),
+            diag: Vec::new(),
+            panels: Vec::new(),
+            panel_ptr: vec![0],
+            pivot_perm: (0..n as u32).collect(),
+            perturbed: 0,
+        }
+    }
+
     /// Panel slice of node `id`.
-    pub fn panel(&self, id: usize) -> &[f64] {
+    pub fn panel(&self, id: usize) -> &[T] {
         &self.panels[self.panel_ptr[id]..self.panel_ptr[id + 1]]
     }
 
@@ -98,31 +125,33 @@ impl LuFactors {
     }
 }
 
-/// Per-thread scratch for numeric factorization.
-pub struct Workspace {
+/// Per-thread scratch for numeric factorization, type-tagged by the
+/// factor element type (each persistent worker carries one arena per
+/// precision; see [`crate::exec::WorkerCtx`]).
+pub struct Workspace<T = f64> {
     /// Dense accumulator (row kernels), maintained all-zero between rows.
-    pub x: Vec<f64>,
+    pub x: Vec<T>,
     /// Global column -> panel column map (panel kernel), -1 default.
     pub colmap: Vec<i32>,
     /// GEMM output scratch.
-    pub cbuf: Vec<f64>,
+    pub cbuf: Vec<T>,
     /// TRSM triangle scratch (column-major gather).
-    pub tbuf: Vec<f64>,
+    pub tbuf: Vec<T>,
     /// Scatter map scratch (per-group U-tail -> panel column).
     pub map_idx: Vec<i32>,
     /// GEMM B-operand packing scratch (source-panel U-tail sliver,
     /// gathered contiguous once per target panel).
-    pub pbuf: Vec<f64>,
+    pub pbuf: Vec<T>,
     /// GEMM A-operand packing scratch (target-panel L-part columns,
     /// gathered contiguous when the tuned `KernelPlan` enables A packing).
-    pub abuf: Vec<f64>,
+    pub abuf: Vec<T>,
 }
 
-impl Workspace {
+impl<T: Scalar> Workspace<T> {
     /// Fresh workspace for dimension `n`.
     pub fn new(n: usize) -> Self {
         Workspace {
-            x: vec![0.0; n],
+            x: vec![T::ZERO; n],
             colmap: vec![-1; n],
             cbuf: Vec::new(),
             tbuf: Vec::new(),
@@ -146,7 +175,7 @@ impl Workspace {
         if self.x.len() >= n {
             return false;
         }
-        self.x.resize(n, 0.0);
+        self.x.resize(n, T::ZERO);
         self.colmap.resize(n, -1);
         true
     }
@@ -189,7 +218,7 @@ impl Workspace {
     /// Restore the between-use invariants unconditionally (used after a
     /// caught panic may have left a kernel half-way through a node).
     pub fn scrub(&mut self) {
-        self.x.fill(0.0);
+        self.x.fill(T::ZERO);
         self.colmap.fill(-1);
     }
 }
@@ -200,21 +229,21 @@ impl Workspace {
 /// diag / pivot_perm rows) is written by exactly one thread, and reads of a
 /// *source* node's storage happen only after its done-flag is observed with
 /// Acquire ordering (or, in the sequential driver, after program order).
-pub(crate) struct SharedFactors {
-    pub lvals: *mut f64,
-    pub uvals: *mut f64,
-    pub diag: *mut f64,
-    pub panels: *mut f64,
+pub(crate) struct SharedFactors<T = f64> {
+    pub lvals: *mut T,
+    pub uvals: *mut T,
+    pub diag: *mut T,
+    pub panels: *mut T,
     pub pivot_perm: *mut u32,
     pub perturbed: AtomicUsize,
     pub panel_ptr: *const usize,
 }
 
-unsafe impl Send for SharedFactors {}
-unsafe impl Sync for SharedFactors {}
+unsafe impl<T: Scalar> Send for SharedFactors<T> {}
+unsafe impl<T: Scalar> Sync for SharedFactors<T> {}
 
-impl SharedFactors {
-    pub fn new(fac: &mut LuFactors) -> Self {
+impl<T: Scalar> SharedFactors<T> {
+    pub fn new(fac: &mut LuFactors<T>) -> Self {
         SharedFactors {
             lvals: fac.lvals.as_mut_ptr(),
             uvals: fac.uvals.as_mut_ptr(),
@@ -228,14 +257,14 @@ impl SharedFactors {
 
     /// Mutable panel slice for node `id` (must be the owning thread).
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn panel_mut(&self, id: usize) -> &mut [f64] {
+    pub unsafe fn panel_mut(&self, id: usize) -> &mut [T] {
         let s = *self.panel_ptr.add(id);
         let e = *self.panel_ptr.add(id + 1);
         std::slice::from_raw_parts_mut(self.panels.add(s), e - s)
     }
 
     /// Read-only panel slice for a completed source node.
-    pub unsafe fn panel_ref(&self, id: usize) -> &[f64] {
+    pub unsafe fn panel_ref(&self, id: usize) -> &[T] {
         let s = *self.panel_ptr.add(id);
         let e = *self.panel_ptr.add(id + 1);
         std::slice::from_raw_parts(self.panels.add(s), e - s)

@@ -23,7 +23,7 @@ use std::sync::Barrier;
 use crate::exec::{ExecPlan, WorkerPool};
 use crate::numeric::factor::{factor_node, GemmBackend};
 use crate::numeric::select::KernelMode;
-use crate::numeric::{LuFactors, PivotConfig, SharedFactors};
+use crate::numeric::{LuFactors, PivotConfig, Scalar, SharedFactors};
 use crate::par::DoneFlags;
 use crate::sparse::csr::Csr;
 use crate::symbolic::Symbolic;
@@ -42,12 +42,12 @@ use crate::symbolic::Symbolic;
 /// It lives with the caller — not in the shared plan — so one `Analysis`
 /// used by two solvers concurrently cannot race on it.
 #[allow(clippy::too_many_arguments)]
-pub fn factor_parallel_pooled(
+pub fn factor_parallel_pooled<T: Scalar>(
     a: &Csr,
     sym: &Symbolic,
     mode: KernelMode,
     cfg: &PivotConfig,
-    fac: &mut LuFactors,
+    fac: &mut LuFactors<T>,
     refactor: bool,
     gemm: &(dyn GemmBackend + Sync),
     pool: &WorkerPool,
@@ -83,7 +83,10 @@ pub fn factor_parallel_pooled(
     pool.run(
         || done.reset(),
         |t, ctx| {
-            let ws = ctx.workspace(
+            // T::workspace routes to the worker's per-precision arena
+            // (`ws` for f64, `ws32` for f32) so one pool serves both.
+            let ws = T::workspace(
+                ctx,
                 sym.n,
                 plan.max_cbuf,
                 plan.max_tbuf,
@@ -166,12 +169,12 @@ pub fn factor_parallel_pooled(
 /// [`crate::coordinator::Solver`], which owns a persistent pool and a
 /// cached plan instead.
 #[allow(clippy::too_many_arguments)]
-pub fn factor_parallel(
+pub fn factor_parallel<T: Scalar>(
     a: &Csr,
     sym: &Symbolic,
     mode: KernelMode,
     cfg: &PivotConfig,
-    fac: &mut LuFactors,
+    fac: &mut LuFactors<T>,
     refactor: bool,
     gemm: &(dyn GemmBackend + Sync),
     nthreads: usize,
@@ -201,10 +204,10 @@ mod tests {
         };
         let sym = analyze_pattern(a, policy, 4);
         let cfg = PivotConfig::default();
-        let mut f1 = LuFactors::alloc(&sym);
+        let mut f1: LuFactors = LuFactors::alloc(&sym);
         factor(a, &sym, mode, &cfg, &mut f1, false, &NativeGemm);
         for threads in [2usize, 4] {
-            let mut f2 = LuFactors::alloc(&sym);
+            let mut f2: LuFactors = LuFactors::alloc(&sym);
             factor_parallel(a, &sym, mode, &cfg, &mut f2, false, &NativeGemm, threads);
             assert_eq!(f1.pivot_perm, f2.pivot_perm, "pivot mismatch t={threads}");
             assert_eq!(f1.panels, f2.panels, "panel mismatch t={threads}");
@@ -217,7 +220,7 @@ mod tests {
         let pool = WorkerPool::new(3);
         let plan = ExecPlan::build(&sym, 3);
         let done = DoneFlags::new(sym.nodes.len());
-        let mut f3 = LuFactors::alloc(&sym);
+        let mut f3: LuFactors = LuFactors::alloc(&sym);
         for round in 0..3 {
             let refactor = round > 0;
             factor_parallel_pooled(
@@ -257,7 +260,7 @@ mod tests {
         let a = gen::grid2d(10, 10);
         let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
         let cfg = PivotConfig::default();
-        let mut f1 = LuFactors::alloc(&sym);
+        let mut f1: LuFactors = LuFactors::alloc(&sym);
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, false, &NativeGemm);
         let mut f2 = f1.clone();
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, true, &NativeGemm);
@@ -276,16 +279,43 @@ mod tests {
     }
 
     #[test]
+    fn parallel_f32_matches_sequential_f32_bitwise() {
+        // the parallel-vs-sequential bit-identity contract holds for the
+        // f32 numeric core too (same per-node operations, same order)
+        let a = gen::grid2d(10, 11);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let cfg = PivotConfig::default();
+        let mut f1: LuFactors<f32> = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, false, &NativeGemm);
+        for threads in [2usize, 3] {
+            let mut f2: LuFactors<f32> = LuFactors::alloc(&sym);
+            factor_parallel(
+                &a,
+                &sym,
+                KernelMode::SupSup,
+                &cfg,
+                &mut f2,
+                false,
+                &NativeGemm,
+                threads,
+            );
+            assert_eq!(f1.pivot_perm, f2.pivot_perm, "f32 pivot, t={threads}");
+            assert_eq!(f1.panels, f2.panels, "f32 panels, t={threads}");
+            assert_eq!(f1.diag, f2.diag, "f32 diag, t={threads}");
+        }
+    }
+
+    #[test]
     fn single_worker_pool_matches_sequential_driver() {
         let a = gen::grid2d(9, 9);
         let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
         let cfg = PivotConfig::default();
-        let mut f1 = LuFactors::alloc(&sym);
+        let mut f1: LuFactors = LuFactors::alloc(&sym);
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut f1, false, &NativeGemm);
         let pool = WorkerPool::new(1);
         let plan = ExecPlan::build(&sym, 1);
         let done = DoneFlags::new(sym.nodes.len());
-        let mut f2 = LuFactors::alloc(&sym);
+        let mut f2: LuFactors = LuFactors::alloc(&sym);
         factor_parallel_pooled(
             &a,
             &sym,

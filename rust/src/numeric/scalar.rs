@@ -1,0 +1,348 @@
+//! Scalar abstraction over the numeric core's element type.
+//!
+//! Every layer of the numeric path — the factor drivers, the kernel
+//! tiers, the substitution kernels, and the workspace arenas — is generic
+//! over [`Scalar`], instantiated at `f64` (the default everywhere, via
+//! default type parameters) and `f32` (the mixed-precision factor core;
+//! see the `Precision` policy in [`crate::coordinator`]). The trait is
+//! deliberately small: plain IEEE arithmetic plus explicit `f64`
+//! conversions, and three capability hooks that let the generic code
+//! reach precision-specific machinery without `cfg` soup at every call
+//! site:
+//!
+//! - [`Scalar::workspace`] selects the per-worker arena of this
+//!   precision out of a [`crate::exec::WorkerCtx`] (each worker carries
+//!   one type-tagged [`Workspace`] per precision, both bounded by the
+//!   same element-count `ExecPlan` high-water marks).
+//! - [`Scalar::backend_gemm`] routes through the pluggable
+//!   [`GemmBackend`] (the XLA/PJRT ablation path), which is `f64`-only —
+//!   `f32` returns `false` and the caller takes the in-process kernels.
+//! - The `native_*` hooks expose the AVX2+FMA `std::arch` microkernels,
+//!   which exist only for `f64`; `f32` reports "not handled" and the
+//!   dispatch layer falls through to the portable tier (whose blocked
+//!   shapes the autovectorizer lowers at twice the lane width for `f32`
+//!   anyway).
+//!
+//! Determinism: `to_f64`/`from_f64` are the identity for `f64`, so
+//! instantiating the generic code at `f64` reproduces the pre-generic
+//! operation sequence bit-for-bit — all existing bit-identity oracles
+//! (refactor replay, parallel-vs-sequential, batched-vs-single solves)
+//! hold unchanged.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use crate::exec::WorkerCtx;
+use crate::numeric::factor::GemmBackend;
+use crate::numeric::Workspace;
+
+/// Element type of the numeric factorization core (`f64` or `f32`).
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + 'static
+    + Default
+    + Debug
+    + Display
+    + PartialEq
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Type name for diagnostics (`"f64"` / `"f32"`).
+    const NAME: &'static str;
+
+    /// Round an `f64` into this precision (identity for `f64`).
+    fn from_f64(v: f64) -> Self;
+    /// Widen to `f64` (identity for `f64`).
+    fn to_f64(self) -> f64;
+    /// Absolute value.
+    fn abs(self) -> Self;
+
+    /// The per-worker factor arena of this precision. Each
+    /// [`WorkerCtx`] holds one lazily-grown [`Workspace`] per supported
+    /// precision; this hook is what lets the generic parallel driver pick
+    /// the right one without knowing the concrete type.
+    #[allow(clippy::too_many_arguments)]
+    fn workspace(
+        ctx: &mut WorkerCtx,
+        n: usize,
+        cbuf: usize,
+        tbuf: usize,
+        map_idx: usize,
+        pbuf: usize,
+        abuf: usize,
+    ) -> &mut Workspace<Self>;
+
+    /// Route a GEMM through the pluggable backend. Returns `false` when
+    /// the backend does not handle this precision (always, for `f32`:
+    /// the XLA/PJRT artifacts are compiled for `f64`) or declines the
+    /// shape — the caller then uses the in-process kernels.
+    #[allow(clippy::too_many_arguments)]
+    fn backend_gemm(
+        gemm: &dyn GemmBackend,
+        c: &mut [Self],
+        a: &[Self],
+        lda: usize,
+        b: &[Self],
+        ldb: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> bool;
+
+    /// Native-tier (AVX2+FMA intrinsics) GEMM. Returns `false` when this
+    /// precision has no native microkernel; the dispatch layer then runs
+    /// the portable tier.
+    ///
+    /// # Safety
+    /// Caller guarantees pointer validity for the strided `m×n`, `m×k`,
+    /// `k×n` accesses, no C/A/B element overlap, and (when it returns
+    /// `true` on x86_64) runtime AVX2+FMA support.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn native_gemm_sub(
+        cp: *mut Self,
+        ldc: usize,
+        ap: *const Self,
+        lda: usize,
+        bp: *const Self,
+        ldb: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> bool;
+
+    /// Native-tier dot product; `None` when this precision has no native
+    /// kernel. Caller guarantees runtime AVX2+FMA support before calling.
+    fn native_dot(a: &[Self], b: &[Self]) -> Option<Self>;
+
+    /// Native-tier axpy (`y -= f * x`); returns `false` when this
+    /// precision has no native kernel. Caller guarantees runtime AVX2+FMA
+    /// support before calling.
+    fn native_axpy_sub(y: &mut [Self], x: &[Self], f: Self) -> bool;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const NAME: &'static str = "f64";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+
+    #[inline]
+    fn workspace(
+        ctx: &mut WorkerCtx,
+        n: usize,
+        cbuf: usize,
+        tbuf: usize,
+        map_idx: usize,
+        pbuf: usize,
+        abuf: usize,
+    ) -> &mut Workspace<f64> {
+        ctx.workspace(n, cbuf, tbuf, map_idx, pbuf, abuf)
+    }
+
+    #[inline]
+    fn backend_gemm(
+        gemm: &dyn GemmBackend,
+        c: &mut [f64],
+        a: &[f64],
+        lda: usize,
+        b: &[f64],
+        ldb: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> bool {
+        gemm.gemm_sub(c, a, lda, b, ldb, m, k, n)
+    }
+
+    #[inline]
+    unsafe fn native_gemm_sub(
+        cp: *mut f64,
+        ldc: usize,
+        ap: *const f64,
+        lda: usize,
+        bp: *const f64,
+        ldb: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            crate::numeric::kernels::x86::gemm_sub_raw(cp, ldc, ap, lda, bp, ldb, m, k, n);
+            true
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (cp, ldc, ap, lda, bp, ldb, m, k, n);
+            false
+        }
+    }
+
+    #[inline]
+    fn native_dot(a: &[f64], b: &[f64]) -> Option<f64> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let n = a.len().min(b.len());
+            // Safety: bounds by `n`; caller checked runtime support.
+            Some(unsafe { crate::numeric::kernels::x86::dot(a.as_ptr(), b.as_ptr(), n) })
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (a, b);
+            None
+        }
+    }
+
+    #[inline]
+    fn native_axpy_sub(y: &mut [f64], x: &[f64], f: f64) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let n = y.len().min(x.len());
+            // Safety: bounds by `n`; caller checked runtime support.
+            unsafe { crate::numeric::kernels::x86::axpy_sub(y.as_mut_ptr(), x.as_ptr(), n, f) }
+            true
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (y, x, f);
+            false
+        }
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const NAME: &'static str = "f32";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+
+    #[inline]
+    fn workspace(
+        ctx: &mut WorkerCtx,
+        n: usize,
+        cbuf: usize,
+        tbuf: usize,
+        map_idx: usize,
+        pbuf: usize,
+        abuf: usize,
+    ) -> &mut Workspace<f32> {
+        ctx.workspace_f32(n, cbuf, tbuf, map_idx, pbuf, abuf)
+    }
+
+    #[inline]
+    fn backend_gemm(
+        _gemm: &dyn GemmBackend,
+        _c: &mut [f32],
+        _a: &[f32],
+        _lda: usize,
+        _b: &[f32],
+        _ldb: usize,
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> bool {
+        // the XLA/PJRT AOT artifacts are f64-only; in-process kernels run
+        false
+    }
+
+    #[inline]
+    unsafe fn native_gemm_sub(
+        _cp: *mut f32,
+        _ldc: usize,
+        _ap: *const f32,
+        _lda: usize,
+        _bp: *const f32,
+        _ldb: usize,
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> bool {
+        false
+    }
+
+    #[inline]
+    fn native_dot(_a: &[f32], _b: &[f32]) -> Option<f32> {
+        None
+    }
+
+    #[inline]
+    fn native_axpy_sub(_y: &mut [f32], _x: &[f32], _f: f32) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Scalar>(v: f64) -> f64 {
+        T::from_f64(v).to_f64()
+    }
+
+    #[test]
+    fn conversions_are_identity_for_f64() {
+        for v in [0.0, -0.0, 1.5, -3.25e-200, f64::INFINITY] {
+            assert_eq!(roundtrip::<f64>(v).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_rounds() {
+        assert_eq!(roundtrip::<f32>(1.5), 1.5);
+        // 1 + 2^-30 is not representable in f32
+        let v = 1.0 + 2f64.powi(-30);
+        assert_eq!(roundtrip::<f32>(v), 1.0);
+    }
+
+    #[test]
+    fn constants_and_abs() {
+        assert_eq!(<f32 as Scalar>::ZERO, 0.0f32);
+        assert_eq!(<f64 as Scalar>::ONE, 1.0);
+        assert_eq!(Scalar::abs(-2.5f32), 2.5f32);
+        assert_eq!(Scalar::abs(-2.5f64), 2.5f64);
+        assert_eq!(<f32 as Scalar>::NAME, "f32");
+        assert_eq!(<f64 as Scalar>::NAME, "f64");
+    }
+}

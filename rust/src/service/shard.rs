@@ -106,6 +106,8 @@ pub(crate) struct ShardQueue {
     rhs_solved: AtomicU64,
     refactors: AtomicU64,
     forwarded: AtomicU64,
+    refine_iters: AtomicU64,
+    precision_fallbacks: AtomicU64,
     max_batch: AtomicUsize,
     max_tick_ns: AtomicU64,
 }
@@ -127,6 +129,8 @@ impl ShardQueue {
             rhs_solved: AtomicU64::new(0),
             refactors: AtomicU64::new(0),
             forwarded: AtomicU64::new(0),
+            refine_iters: AtomicU64::new(0),
+            precision_fallbacks: AtomicU64::new(0),
             max_batch: AtomicUsize::new(0),
             max_tick_ns: AtomicU64::new(0),
         }
@@ -204,6 +208,8 @@ impl ShardQueue {
         out.rhs_solved += self.rhs_solved.load(Ordering::Relaxed);
         out.refactors += self.refactors.load(Ordering::Relaxed);
         out.forwarded += self.forwarded.load(Ordering::Relaxed);
+        out.refine_iters += self.refine_iters.load(Ordering::Relaxed);
+        out.precision_fallbacks += self.precision_fallbacks.load(Ordering::Relaxed);
         out.max_batch = out.max_batch.max(self.max_batch.load(Ordering::Relaxed));
         let tick = Duration::from_nanos(self.max_tick_ns.load(Ordering::Relaxed));
         out.max_tick = out.max_tick.max(tick);
@@ -226,6 +232,11 @@ pub struct ServiceStats {
     /// Requests re-routed between shards (routing-epoch staleness during
     /// a move; each costs one queue hop).
     pub forwarded: u64,
+    /// Iterative-refinement rounds executed across all dispatches.
+    pub refine_iters: u64,
+    /// Mixed-precision stall fallbacks (f64 recovery refactorizations)
+    /// triggered across all dispatches.
+    pub precision_fallbacks: u64,
     /// Systems registered over the service lifetime (construction-time
     /// systems included).
     pub registers: u64,
@@ -554,10 +565,16 @@ impl ShardWorker {
                 s.sys.solve_many_into(&bs, xs)
             };
             match res {
-                Ok(_) => {
+                Ok(st) => {
                     let k = bs.len() as u64;
                     self.queue.dispatches.fetch_add(1, Ordering::Relaxed);
                     self.queue.rhs_solved.fetch_add(k, Ordering::Relaxed);
+                    self.queue
+                        .refine_iters
+                        .fetch_add(st.refine_iters as u64, Ordering::Relaxed);
+                    self.queue
+                        .precision_fallbacks
+                        .fetch_add(st.fallbacks, Ordering::Relaxed);
                     self.queue.max_batch.fetch_max(bs.len(), Ordering::Relaxed);
                     *self.batch_counts.entry(id).or_insert(0) += k;
                     if let Some(s) = self.systems.get(&id) {

@@ -29,12 +29,15 @@ use std::sync::Barrier;
 
 use crate::exec::{ExecPlan, WorkerPool};
 use crate::numeric::kernels::{self, KernelTier};
-use crate::numeric::LuFactors;
+use crate::numeric::{LuFactors, Scalar};
 use crate::symbolic::{NodeSym, Symbolic};
 
-/// Forward solve `y <- L^{-1} y` for one node.
+/// Forward solve `y <- L^{-1} y` for one node. Generic over the factor
+/// element type: the right-hand side stays `f64`; each factor entry is
+/// widened once (`to_f64`, exact) and the multiply/subtract runs in
+/// `f64` — for `T = f64` this is bit-identical to the historical code.
 #[inline]
-fn forward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &mut [f64]) {
+fn forward_node<T: Scalar>(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors<T>, id: usize, y: &mut [f64]) {
     let first = nd.first as usize;
     let w = nd.width as usize;
     let nl = nd.nl();
@@ -46,25 +49,26 @@ fn forward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &mu
             let base = r * stride;
             let mut s = y[first + r];
             for (c, &j) in lcols.iter().enumerate() {
-                s -= p[base + c] * y[j as usize];
+                s -= p[base + c].to_f64() * y[j as usize];
             }
             for kk in 0..r {
-                s -= p[base + nl + kk] * y[first + kk];
+                s -= p[base + nl + kk].to_f64() * y[first + kk];
             }
             y[first + r] = s;
         }
     } else {
         let mut s = y[first];
         for (c, &j) in lcols.iter().enumerate() {
-            s -= fac.lvals[nd.l_start + c] * y[j as usize];
+            s -= fac.lvals[nd.l_start + c].to_f64() * y[j as usize];
         }
         y[first] = s;
     }
 }
 
-/// Backward solve `y <- U^{-1} y` for one node.
+/// Backward solve `y <- U^{-1} y` for one node (see [`forward_node`] for
+/// the mixed-precision widening convention).
 #[inline]
-fn backward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &mut [f64]) {
+fn backward_node<T: Scalar>(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors<T>, id: usize, y: &mut [f64]) {
     let first = nd.first as usize;
     let w = nd.width as usize;
     let nl = nd.nl();
@@ -77,19 +81,19 @@ fn backward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &m
             let mut s = y[first + r];
             let utail = &p[base + nl + w..base + stride];
             for (c, &j) in ucols.iter().enumerate() {
-                s -= utail[c] * y[j as usize];
+                s -= utail[c].to_f64() * y[j as usize];
             }
             for kk in r + 1..w {
-                s -= p[base + nl + kk] * y[first + kk];
+                s -= p[base + nl + kk].to_f64() * y[first + kk];
             }
-            y[first + r] = s / p[base + nl + r];
+            y[first + r] = s / p[base + nl + r].to_f64();
         }
     } else {
         let mut s = y[first];
         for (c, &j) in ucols.iter().enumerate() {
-            s -= fac.uvals[nd.u_start + c] * y[j as usize];
+            s -= fac.uvals[nd.u_start + c].to_f64() * y[j as usize];
         }
-        y[first] = s / fac.diag[first];
+        y[first] = s / fac.diag[first].to_f64();
     }
 }
 
@@ -101,10 +105,10 @@ fn backward_node(nd: &NodeSym, sym: &Symbolic, fac: &LuFactors, id: usize, y: &m
 /// at least [`kernels::BLOCK_PANEL_MIN_W`] wide route through the panel
 /// TRSM+GEMM kernel, which preserves the same per-lane order.
 #[inline]
-fn forward_node_block(
+fn forward_node_block<T: Scalar>(
     nd: &NodeSym,
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     id: usize,
     y: &mut [f64],
     k: usize,
@@ -129,11 +133,11 @@ fn forward_node_block(
             let row = &mut rest[..k];
             for (c, &j) in lcols.iter().enumerate() {
                 let src = j as usize * k;
-                kernels::lanes_axpy_sub(tier, row, &done[src..src + k], p[base + c]);
+                kernels::lanes_axpy_sub(tier, row, &done[src..src + k], p[base + c].to_f64());
             }
             for kk in 0..r {
                 let src = (first + kk) * k;
-                kernels::lanes_axpy_sub(tier, row, &done[src..src + k], p[base + nl + kk]);
+                kernels::lanes_axpy_sub(tier, row, &done[src..src + k], p[base + nl + kk].to_f64());
             }
         }
     } else {
@@ -141,7 +145,12 @@ fn forward_node_block(
         let row = &mut rest[..k];
         for (c, &j) in lcols.iter().enumerate() {
             let src = j as usize * k;
-            kernels::lanes_axpy_sub(tier, row, &done[src..src + k], fac.lvals[nd.l_start + c]);
+            kernels::lanes_axpy_sub(
+                tier,
+                row,
+                &done[src..src + k],
+                fac.lvals[nd.l_start + c].to_f64(),
+            );
         }
     }
 }
@@ -151,10 +160,10 @@ fn forward_node_block(
 /// [`backward_node`] on every dispatch tier; wide supernodes route
 /// through the panel TRSM+GEMM kernel (see [`forward_node_block`]).
 #[inline]
-fn backward_node_block(
+fn backward_node_block<T: Scalar>(
     nd: &NodeSym,
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     id: usize,
     y: &mut [f64],
     k: usize,
@@ -180,34 +189,39 @@ fn backward_node_block(
             let row = &mut head[(first + r) * k..];
             for (c, &j) in ucols.iter().enumerate() {
                 let src = (j as usize - first - r - 1) * k;
-                kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], utail[c]);
+                kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], utail[c].to_f64());
             }
             for kk in r + 1..w {
                 let src = (kk - r - 1) * k;
-                kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], p[base + nl + kk]);
+                kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], p[base + nl + kk].to_f64());
             }
-            kernels::lanes_div(tier, row, p[base + nl + r]);
+            kernels::lanes_div(tier, row, p[base + nl + r].to_f64());
         }
     } else {
         let (head, rest) = y.split_at_mut((first + 1) * k);
         let row = &mut head[first * k..];
         for (c, &j) in ucols.iter().enumerate() {
             let src = (j as usize - first - 1) * k;
-            kernels::lanes_axpy_sub(tier, row, &rest[src..src + k], fac.uvals[nd.u_start + c]);
+            kernels::lanes_axpy_sub(
+                tier,
+                row,
+                &rest[src..src + k],
+                fac.uvals[nd.u_start + c].to_f64(),
+            );
         }
-        kernels::lanes_div(tier, row, fac.diag[first]);
+        kernels::lanes_div(tier, row, fac.diag[first].to_f64());
     }
 }
 
 /// Sequential forward substitution: `y <- L^{-1} y`.
-pub fn forward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
+pub fn forward<T: Scalar>(sym: &Symbolic, fac: &LuFactors<T>, y: &mut [f64]) {
     for (id, nd) in sym.nodes.iter().enumerate() {
         forward_node(nd, sym, fac, id, y);
     }
 }
 
 /// Sequential backward substitution: `y <- U^{-1} y`.
-pub fn backward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
+pub fn backward<T: Scalar>(sym: &Symbolic, fac: &LuFactors<T>, y: &mut [f64]) {
     for (id, nd) in sym.nodes.iter().enumerate().rev() {
         backward_node(nd, sym, fac, id, y);
     }
@@ -215,22 +229,22 @@ pub fn backward(sym: &Symbolic, fac: &LuFactors, y: &mut [f64]) {
 
 /// Sequential block forward substitution over a row-major `n×k` block
 /// (active dispatch tier).
-pub fn forward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+pub fn forward_block<T: Scalar>(sym: &Symbolic, fac: &LuFactors<T>, y: &mut [f64], k: usize) {
     forward_block_with(kernels::active_tier(), sym, fac, y, k);
 }
 
 /// Sequential block backward substitution over a row-major `n×k` block
 /// (active dispatch tier).
-pub fn backward_block(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], k: usize) {
+pub fn backward_block<T: Scalar>(sym: &Symbolic, fac: &LuFactors<T>, y: &mut [f64], k: usize) {
     backward_block_with(kernels::active_tier(), sym, fac, y, k);
 }
 
 /// [`forward_block`] on an explicit dispatch tier (A/B benching; every
 /// tier produces bit-identical blocks).
-pub fn forward_block_with(
+pub fn forward_block_with<T: Scalar>(
     tier: KernelTier,
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     y: &mut [f64],
     k: usize,
 ) {
@@ -243,10 +257,10 @@ pub fn forward_block_with(
 }
 
 /// [`backward_block`] on an explicit dispatch tier.
-pub fn backward_block_with(
+pub fn backward_block_with<T: Scalar>(
     tier: KernelTier,
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     y: &mut [f64],
     k: usize,
 ) {
@@ -267,9 +281,9 @@ unsafe impl Sync for YPtr {}
 
 /// Parallel forward substitution (bulk-sequential dual mode) as a job on a
 /// persistent pool, with level chunks from the plan.
-pub fn forward_parallel_pooled(
+pub fn forward_parallel_pooled<T: Scalar>(
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     y: &mut [f64],
     pool: &WorkerPool,
     plan: &ExecPlan,
@@ -311,9 +325,9 @@ pub fn forward_parallel_pooled(
 
 /// Parallel backward substitution (bulk-sequential dual mode on the
 /// reverse levelization) as a job on a persistent pool.
-pub fn backward_parallel_pooled(
+pub fn backward_parallel_pooled<T: Scalar>(
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     y: &mut [f64],
     pool: &WorkerPool,
     plan: &ExecPlan,
@@ -357,9 +371,9 @@ pub fn backward_parallel_pooled(
 /// block in **one** pool dispatch: bulk levels run chunked across workers
 /// with barriers, the dependent tails run on worker 0, and a barrier
 /// separates the forward sweep from the backward sweep.
-pub fn solve_block_parallel_pooled(
+pub fn solve_block_parallel_pooled<T: Scalar>(
     sym: &Symbolic,
-    fac: &LuFactors,
+    fac: &LuFactors<T>,
     y: &mut [f64],
     k: usize,
     pool: &WorkerPool,
@@ -444,7 +458,7 @@ pub fn solve_block_parallel_pooled(
 /// Parallel forward substitution with a temporary pool (legacy signature;
 /// repeated-solve callers use [`forward_parallel_pooled`] via the
 /// coordinator's persistent engine).
-pub fn forward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads: usize) {
+pub fn forward_parallel<T: Scalar>(sym: &Symbolic, fac: &LuFactors<T>, y: &mut [f64], nthreads: usize) {
     let sched = &sym.schedule;
     if nthreads <= 1 || sched.bulk_levels == 0 {
         return forward(sym, fac, y);
@@ -456,7 +470,7 @@ pub fn forward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads
 
 /// Parallel backward substitution with a temporary pool (legacy
 /// signature).
-pub fn backward_parallel(sym: &Symbolic, fac: &LuFactors, y: &mut [f64], nthreads: usize) {
+pub fn backward_parallel<T: Scalar>(sym: &Symbolic, fac: &LuFactors<T>, y: &mut [f64], nthreads: usize) {
     let sched = &sym.schedule;
     if nthreads <= 1 || sched.rbulk_levels == 0 {
         return backward(sym, fac, y);
@@ -485,7 +499,7 @@ mod tests {
         };
         let sym = analyze_pattern(a, policy, 4);
         let cfg = PivotConfig::default();
-        let mut fac = LuFactors::alloc(&sym);
+        let mut fac: LuFactors = LuFactors::alloc(&sym);
         factor(a, &sym, mode, &cfg, &mut fac, false, &NativeGemm);
         // true solution of A x = b with x* = ramp
         let xt: Vec<f64> = (0..a.n).map(|i| (i % 7) as f64 - 3.0).collect();
@@ -565,11 +579,45 @@ mod tests {
     }
 
     #[test]
+    fn f32_factors_solve_and_keep_block_bit_identity() {
+        let a = gen::grid2d(8, 8);
+        let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
+        let cfg = PivotConfig::default();
+        let mut fac: LuFactors<f32> = LuFactors::alloc(&sym);
+        factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
+        let xt: Vec<f64> = (0..a.n).map(|i| (i % 5) as f64 - 2.0).collect();
+        let mut b = vec![0.0; a.n];
+        a.matvec(&xt, &mut b);
+        let mut y: Vec<f64> = (0..a.n).map(|i| b[fac.pivot_perm[i] as usize]).collect();
+        forward(&sym, &fac, &mut y);
+        backward(&sym, &fac, &mut y);
+        // f32 factors solve to roughly single precision
+        assert!(max_abs_diff(&y, &xt) < 1e-3, "err {}", max_abs_diff(&y, &xt));
+        // batched-vs-scalar bit identity holds with f32 factors too: the
+        // lane kernels consume the same widened multipliers in the same
+        // order as the scalar path
+        let k = 3usize;
+        let mut yb = vec![0.0; a.n * k];
+        for i in 0..a.n {
+            for q in 0..k {
+                yb[i * k + q] = b[fac.pivot_perm[i] as usize];
+            }
+        }
+        forward_block(&sym, &fac, &mut yb, k);
+        backward_block(&sym, &fac, &mut yb, k);
+        for q in 0..k {
+            for i in 0..a.n {
+                assert_eq!(yb[i * k + q], y[i], "f32 block mismatch col {q} row {i}");
+            }
+        }
+    }
+
+    #[test]
     fn block_with_distinct_columns_matches_independent_solves() {
         let a = gen::grid2d(10, 10);
         let sym = analyze_pattern(&a, MergePolicy::Exact { max_width: 16 }, 4);
         let cfg = PivotConfig::default();
-        let mut fac = LuFactors::alloc(&sym);
+        let mut fac: LuFactors = LuFactors::alloc(&sym);
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut fac, false, &NativeGemm);
         let k = 4usize;
         let n = a.n;

@@ -1,0 +1,246 @@
+//! Mixed-precision policy acceptance tests.
+//!
+//! The contract under test (DESIGN.md "Precision policy"):
+//!
+//! - `Precision::Mixed` factors in `f32` and recovers double accuracy
+//!   through `f64` iterative refinement — on well-conditioned systems the
+//!   final residual must land within 10x of the pure-`f64` solve (or at
+//!   the configured refinement target, whichever is looser).
+//! - When refinement against the `f32` factors stalls above tolerance,
+//!   the solve escalates deterministically: a full `f64` recovery
+//!   factorization is built once, the fallback is latched and counted,
+//!   and the fallback solve is **bitwise identical** to what a pure-`f64`
+//!   solver produces (the recovery factors run the same fresh pivot
+//!   search over the same remapped values).
+//! - Repeated Mixed refactor+solve cycles over the same values are
+//!   bitwise deterministic.
+//! - `SolveOpts::precision(Precision::F64)` forces one solve onto the
+//!   `f64` recovery factors without latching the handle-wide fallback.
+//! - `RefineOutcome` telemetry is reported in pure-`f64` mode too.
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+
+fn mixed_solver(threads: usize) -> Solver {
+    SolverBuilder::new()
+        .threads(threads)
+        .precision(Precision::Mixed)
+        .build()
+        .unwrap()
+}
+
+fn f64_solver(threads: usize) -> Solver {
+    SolverBuilder::new().threads(threads).build().unwrap()
+}
+
+#[test]
+fn mixed_recovers_double_accuracy_on_well_conditioned_suite() {
+    for a in [gen::grid2d(20, 20), gen::grid3d(7, 7, 7)] {
+        let b = gen::rhs_for_ones(&a);
+
+        let sys64 = f64_solver(2).analyze(&a).unwrap().factor().unwrap();
+        let (x64, st64) = sys64.solve_with_stats(&b).unwrap();
+
+        let sys = mixed_solver(2).analyze(&a).unwrap().factor().unwrap();
+        assert_eq!(sys.precision(), Precision::Mixed);
+        assert_eq!(sys.factor_stats().precision, Precision::Mixed);
+        let (x, st) = sys.solve_with_stats(&b).unwrap();
+
+        // no stall on a well-conditioned system: refinement recovers
+        // double accuracy without ever touching the f64 recovery path
+        assert_eq!(st.fallbacks, 0, "unexpected fallback (n={})", a.n);
+        assert_eq!(sys.fallback_events(), 0);
+        assert_eq!(st.precision, Precision::Mixed);
+        assert_eq!(st.outcome, RefineOutcome::Converged);
+        assert!(st.refine_iters >= 1, "f32 factors must need refinement");
+
+        // the 10x acceptance window, floored at the refinement target
+        // (a converged mixed solve can't be asked to beat the target the
+        // f64 path undershoots for free)
+        let floor = st64.residual.max(1e-14);
+        assert!(
+            st.residual <= 10.0 * floor,
+            "mixed residual {:.3e} vs f64 {:.3e} (n={})",
+            st.residual,
+            st64.residual,
+            a.n
+        );
+        let err = |xs: &[f64]| xs.iter().map(|v| (v - 1.0).abs()).fold(0.0f64, f64::max);
+        assert!(err(&x) <= 1e3 * err(&x64).max(1e-12));
+    }
+}
+
+#[test]
+fn mixed_falls_back_deterministically_on_ill_conditioned_fixture() {
+    // cond ~1e14: refinement against f32 factors cannot contract the
+    // residual (cond * eps_f32 >> 1), so the stall detector must fire
+    let a = gen::ill_conditioned(300, 7);
+    let b = gen::rhs_for_ones(&a);
+
+    let sys64 = f64_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let (x64, st64) = sys64.solve_with_stats(&b).unwrap();
+
+    let sys = mixed_solver(2).analyze(&a).unwrap().factor().unwrap();
+    assert_eq!(sys.precision(), Precision::Mixed);
+    let (x, st) = sys.solve_with_stats(&b).unwrap();
+
+    // the stall escalated: event counted, handle latched onto f64
+    assert_eq!(st.fallbacks, 1, "expected exactly one fallback event");
+    assert_eq!(st.precision, Precision::F64);
+    assert_eq!(sys.fallback_events(), 1);
+    assert_eq!(sys.precision(), Precision::F64, "fallback must latch");
+
+    // the recovery factors re-run the pure-f64 factorization (fresh
+    // pivot search, same remapped values), so the fallback solve is
+    // bitwise the pure-f64 solve — final-residual parity is exact
+    assert_eq!(x, x64, "fallback solve must be bitwise the f64 solve");
+    assert_eq!(st.residual.to_bits(), st64.residual.to_bits());
+
+    // latched: the next solve skips the doomed mixed attempt, reuses the
+    // recovery factors, counts nothing new, and stays bitwise stable
+    let (x2, st2) = sys.solve_with_stats(&b).unwrap();
+    assert_eq!(x2, x);
+    assert_eq!(st2.fallbacks, 0);
+    assert_eq!(st2.precision, Precision::F64);
+    assert_eq!(sys.fallback_events(), 1);
+}
+
+#[test]
+fn fallback_latch_promotes_the_next_refactor_to_f64() {
+    let a = gen::ill_conditioned(300, 7);
+    let b = gen::rhs_for_ones(&a);
+    let mut sys = mixed_solver(1).analyze(&a).unwrap().factor().unwrap();
+    sys.solve(&b).unwrap(); // stalls, latches
+    assert_eq!(sys.precision(), Precision::F64);
+
+    sys.refactor(&a.vals.clone()).unwrap();
+    // the handle has permanently promoted: f32 factors are gone
+    assert_eq!(sys.precision(), Precision::F64);
+    assert_eq!(sys.factor_stats().precision, Precision::F64);
+
+    // and the promoted handle now IS a pure-f64 solver, bitwise
+    let sys64 = f64_solver(1).analyze(&a).unwrap().factor().unwrap();
+    assert_eq!(sys.solve(&b).unwrap(), sys64.solve(&b).unwrap());
+}
+
+#[test]
+fn mixed_refactor_solve_cycles_are_bitwise_deterministic() {
+    let a = gen::grid2d(16, 16);
+    let b = gen::rhs_for_ones(&a);
+    let vals = a.vals.clone();
+    let mut sys = mixed_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let x0 = sys.solve(&b).unwrap();
+    for cycle in 0..3 {
+        sys.refactor(&vals).unwrap();
+        assert_eq!(sys.precision(), Precision::Mixed, "cycle {cycle}");
+        let x = sys.solve(&b).unwrap();
+        assert_eq!(x, x0, "cycle {cycle} diverged bitwise");
+    }
+    assert_eq!(sys.fallback_events(), 0);
+}
+
+#[test]
+fn solve_opts_force_f64_without_latching_the_handle() {
+    let a = gen::grid2d(20, 20);
+    let b = gen::rhs_for_ones(&a);
+    let sys64 = f64_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let (x64, _) = sys64.solve_with_stats(&b).unwrap();
+
+    let sys = mixed_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let opts = SolveOpts::new().precision(Precision::F64);
+    let (x, st) = sys.solve_with_opts(&b, &opts).unwrap();
+    assert_eq!(st.precision, Precision::F64);
+    assert_eq!(st.fallbacks, 0, "a forced f64 solve is not a fallback");
+    assert_eq!(x, x64, "forced-f64 solve must be bitwise the f64 solve");
+
+    // the handle itself stays mixed: no latch, no counted event
+    assert_eq!(sys.precision(), Precision::Mixed);
+    assert_eq!(sys.fallback_events(), 0);
+    let (_, st2) = sys.solve_with_stats(&b).unwrap();
+    assert_eq!(st2.precision, Precision::Mixed);
+
+    // and Mixed as a per-call override is a no-op on a pure-f64 handle
+    let opts = SolveOpts::new().precision(Precision::Mixed);
+    let (_, st3) = sys64.solve_with_opts(&b, &opts).unwrap();
+    assert_eq!(st3.precision, Precision::F64);
+    assert_eq!(st3.fallbacks, 0);
+}
+
+#[test]
+fn batched_mixed_solves_escalate_only_once() {
+    let a = gen::ill_conditioned(300, 7);
+    let b = gen::rhs_for_ones(&a);
+    let bs: Vec<Vec<f64>> = (1..=3)
+        .map(|q| b.iter().map(|v| v * q as f64).collect())
+        .collect();
+
+    let sys64 = f64_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let (xs64, _) = sys64.solve_many_with_stats(&bs).unwrap();
+
+    let sys = mixed_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let (xs, st) = sys.solve_many_with_stats(&bs).unwrap();
+    assert_eq!(st.fallbacks, 1, "one escalation covers the whole batch");
+    assert_eq!(st.precision, Precision::F64);
+    assert_eq!(sys.fallback_events(), 1);
+    // every column stalled, so every column was re-solved against the
+    // recovery factors — bitwise the pure-f64 batch
+    assert_eq!(xs, xs64);
+}
+
+#[test]
+fn batched_mixed_solves_stay_mixed_when_converged() {
+    let a = gen::grid2d(20, 20);
+    let b = gen::rhs_for_ones(&a);
+    let bs: Vec<Vec<f64>> = (1..=4)
+        .map(|q| b.iter().map(|v| v * q as f64).collect())
+        .collect();
+    let sys = mixed_solver(2).analyze(&a).unwrap().factor().unwrap();
+    let (xs, st) = sys.solve_many_with_stats(&bs).unwrap();
+    assert_eq!(st.fallbacks, 0);
+    assert_eq!(st.precision, Precision::Mixed);
+    assert_eq!(st.outcome, RefineOutcome::Converged);
+    assert_eq!(sys.fallback_events(), 0);
+    for (q, x) in xs.iter().enumerate() {
+        let want = (q + 1) as f64;
+        for v in x {
+            assert!((v - want).abs() < 1e-6, "rhs {q}");
+        }
+    }
+}
+
+#[test]
+fn refine_outcome_telemetry_reports_in_pure_f64_mode() {
+    // a clean solve converges (possibly with zero iterations)
+    let a = gen::grid2d(20, 20);
+    let b = gen::rhs_for_ones(&a);
+    let sys = f64_solver(1).analyze(&a).unwrap().factor().unwrap();
+    let (_, st) = sys.solve_with_stats(&b).unwrap();
+    assert_eq!(st.outcome, RefineOutcome::Converged);
+    assert_eq!(st.precision, Precision::F64);
+    assert_eq!(st.fallbacks, 0);
+
+    // KKT saddle points perturb pivots, which forces refinement on; with
+    // a zero iteration budget the loop must report the budget ran out
+    // (unless raw substitution already met the target)
+    let a = gen::kkt(150, 50, 3);
+    let b = gen::rhs_for_ones(&a);
+    let sys = f64_solver(1).analyze(&a).unwrap().factor().unwrap();
+    assert!(sys.factor_stats().perturbed > 0, "fixture must perturb");
+    let opts = SolveOpts::new().refine_max_iter(0);
+    let (_, st) = sys.solve_with_opts(&b, &opts).unwrap();
+    assert_eq!(st.refine_iters, 0);
+    if st.residual > 1e-14 {
+        assert_eq!(st.outcome, RefineOutcome::BudgetExhausted);
+    } else {
+        assert_eq!(st.outcome, RefineOutcome::Converged);
+    }
+}
+
+#[test]
+fn refine_outcome_worst_orders_severity() {
+    use RefineOutcome::*;
+    assert_eq!(Converged.worst(BudgetExhausted), BudgetExhausted);
+    assert_eq!(BudgetExhausted.worst(Stalled), Stalled);
+    assert_eq!(Stalled.worst(Converged), Stalled);
+    assert_eq!(Converged.worst(Converged), Converged);
+}

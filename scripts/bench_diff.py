@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Compare a gauntlet BENCH artifact against the committed kernel A/B baseline.
+
+Usage:
+    bench_diff.py BASELINE.json NEW.json [--tolerance 0.15]
+    bench_diff.py --update BASELINE.json NEW.json    # rewrite baseline from NEW
+
+`hylu gauntlet` writes a `kernel_ab` array of {name, t_default,
+t_variant, ratio} rows, where ratio = t_default / t_variant is the
+acceptance ratio of an enumerated kernel variant over the tier-default
+kernel (>1 means the variant wins and the autotuner would accept it).
+This script fails loudly (exit 1) when any variant's ratio regresses by
+more than --tolerance (default 15%) against the committed baseline, so a
+kernel-dispatch or packing regression can't slip through a green build.
+
+Row names embed the dispatch tier the run happened to select ("gemm
+8x16k4 vs native"); tiers differ across runners, so names are normalized
+("vs <tier>", "(<tier>)") before matching. Rows present in only one file
+are reported but never fail the diff — a new variant space needs a
+deliberate --update, not a broken gate.
+
+Stdlib only: CI runners need nothing beyond python3.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+TIER = re.compile(r"\b(scalar|portable|native|avx512)\b")
+
+
+def norm(name):
+    """Tier-agnostic row key: the tier is a runner property, not a baseline."""
+    return TIER.sub("<tier>", name)
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc.get("kernel_ab", []):
+        rows[norm(row["name"])] = float(row["ratio"])
+    return doc, rows
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("baseline", help="committed baseline (ci/bench_baseline.json)")
+    ap.add_argument("new", help="freshly generated BENCH_<date>.json artifact")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.15,
+        help="allowed fractional ratio regression before failing (default 0.15)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite BASELINE from NEW instead of diffing",
+    )
+    args = ap.parse_args()
+
+    new_doc, new_rows = load(args.new)
+    if not new_rows:
+        print(f"FAIL: {args.new} has no kernel_ab rows", file=sys.stderr)
+        return 1
+
+    if args.update:
+        slim = {
+            "schema": "hylu-bench-baseline-v1",
+            "source_schema": new_doc.get("schema", "?"),
+            "tolerance": args.tolerance,
+            "kernel_ab": [
+                {"name": k, "ratio": round(v, 4)} for k, v in sorted(new_rows.items())
+            ],
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(slim, f, indent=2)
+            f.write("\n")
+        print(f"rewrote {args.baseline} from {args.new} ({len(new_rows)} kernel A/B rows)")
+        return 0
+
+    _, base_rows = load(args.baseline)
+    if not base_rows:
+        print(f"FAIL: {args.baseline} has no kernel_ab rows", file=sys.stderr)
+        return 1
+
+    failures = []
+    checked = 0
+    for name in sorted(base_rows):
+        if name not in new_rows:
+            print(f"MISSING   {name}: in baseline but not in new run")
+            continue
+        base, new = base_rows[name], new_rows[name]
+        checked += 1
+        floor = base * (1.0 - args.tolerance)
+        if new < floor:
+            failures.append((name, base, new))
+            verdict = "REGRESSED"
+        else:
+            verdict = "ok"
+        print(f"{verdict:9s} {name}: baseline {base:.3f} -> new {new:.3f} (floor {floor:.3f})")
+    for name in sorted(set(new_rows) - set(base_rows)):
+        print(f"NEW       {name}: ratio {new_rows[name]:.3f} (no baseline; --update to adopt)")
+
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} of {checked} kernel A/B acceptance ratios "
+            f"regressed by more than {args.tolerance:.0%}:",
+            file=sys.stderr,
+        )
+        for name, base, new in failures:
+            print(
+                f"  {name}: {base:.3f} -> {new:.3f} ({new / base - 1.0:+.1%})",
+                file=sys.stderr,
+            )
+        return 1
+    print(f"\nOK: {checked} kernel A/B ratios within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
