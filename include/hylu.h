@@ -59,6 +59,13 @@
  *   HYLU_PROBE=off
  *       Disable the kernel-selection throughput calibration probe
  *       (pins the selection crossovers to their reference tuning).
+ *   HYLU_FAULT=SEED:PERIOD:KINDS[:LIMIT]
+ *       Deterministic fault injection for resilience testing: every
+ *       PERIOD-th factorization/solve entering a solver created while
+ *       the variable is set draws a fault (panic-factor, panic-solve,
+ *       zero-pivot, slow=MICROS; comma-separated KINDS) from a seeded
+ *       stream. Unset in production: the check is a single branch on
+ *       an always-None option, and malformed specs are ignored.
  *
  * Precision: the C ABI is pinned to f64. Every handle created by
  * hylu_create factors and solves in double precision regardless of the
@@ -89,6 +96,12 @@ typedef struct hylu_handle_s *hylu_handle;
 #define HYLU_ERR_SINGULAR 4   /* structurally singular matrix */
 #define HYLU_ERR_ZERO_PIVOT 5 /* unperturbable zero pivot */
 #define HYLU_ERR_RUNTIME 6    /* runtime/backend failure */
+#define HYLU_ERR_SHARD_PANICKED 7   /* service shard caught a panic on
+                                     * this request; the shard lives on */
+#define HYLU_ERR_DEADLINE_EXPIRED 8 /* deadline passed before dispatch */
+#define HYLU_ERR_QUARANTINED 9      /* system quarantined after a numeric
+                                     * or panic failure; recovery is
+                                     * retried on later traffic */
 
 /* Create a solver handle. threads = 0 uses all cores; repeated != 0
  * selects the repeated-solve preset (relaxed supernodes, fast
@@ -167,6 +180,16 @@ int32_t hylu_service_solve(hylu_service s, uint64_t id, const double *b,
 /* Move hot systems onto quiet shards by observed load; writes the
  * number of systems moved to *moved (may be NULL). */
 int32_t hylu_service_rebalance(hylu_service s, int64_t *moved);
+
+/* Health of a registered system. Quarantined systems fail solves fast
+ * with HYLU_ERR_QUARANTINED until a supervised full refactorization
+ * (automatic, on later refactorize/solve traffic) restores them. */
+#define HYLU_HEALTH_OK 0           /* healthy, serving */
+#define HYLU_HEALTH_ZERO_PIVOT 1   /* quarantined: unperturbable zero pivot */
+#define HYLU_HEALTH_SINGULAR 2     /* quarantined: structurally singular */
+#define HYLU_HEALTH_PIVOT_GROWTH 3 /* quarantined: pivot growth over limit */
+#define HYLU_HEALTH_PANIC 4        /* quarantined: panic during factorization */
+int32_t hylu_service_health(hylu_service s, uint64_t id); /* -1: unknown id */
 
 /* Message of the last error on this service handle (empty when none);
  * valid until the next failing call or hylu_service_free. */

@@ -1,7 +1,9 @@
 //! Chained solver configuration ([`SolverBuilder`]) and per-solve
 //! refinement overrides ([`SolveOpts`]).
 
-use crate::coordinator::{Precision, RefineParams, SolverConfig};
+use std::sync::Arc;
+
+use crate::coordinator::{FaultPlan, Precision, RefineParams, SolverConfig};
 use crate::numeric::kernels::Tuning;
 use crate::numeric::select::KernelMode;
 use crate::ordering::OrderingChoice;
@@ -133,6 +135,26 @@ impl SolverBuilder {
     /// process-wide via the `HYLU_PRECISION` env var (`f64`/`mixed`).
     pub fn precision(mut self, p: Precision) -> SolverBuilder {
         self.cfg.precision = p;
+        self
+    }
+
+    /// Deterministic fault-injection plan for chaos testing (see
+    /// [`FaultPlan`]): panics, forced zero pivots, and kernel stalls
+    /// fire on a seeded step grid at the factor/solve entry points.
+    /// Share one `Arc` across solvers to draw from a single schedule.
+    /// Without an explicit plan the `HYLU_FAULT` env var can supply one
+    /// at `build` (unless [`SolverBuilder::pin_fault`]).
+    pub fn fault(mut self, plan: Arc<FaultPlan>) -> SolverBuilder {
+        self.cfg.fault = Some(plan);
+        self
+    }
+
+    /// Ignore the `HYLU_FAULT` env override: this solver injects no
+    /// faults unless [`SolverBuilder::fault`] set a plan explicitly.
+    /// Test oracles use this to stay fault-free under a chaos
+    /// environment.
+    pub fn pin_fault(mut self) -> SolverBuilder {
+        self.cfg.pin_fault = true;
         self
     }
 

@@ -1,5 +1,8 @@
 //! Solver configuration.
 
+use std::sync::Arc;
+
+use crate::coordinator::fault::FaultPlan;
 use crate::numeric::kernels::Tuning;
 use crate::numeric::select::KernelMode;
 use crate::numeric::PivotConfig;
@@ -130,6 +133,17 @@ pub struct SolverConfig {
     pub refine_target: f64,
     /// Skip parallel substitution below this dimension.
     pub parallel_solve_min_n: usize,
+    /// Deterministic fault-injection plan for chaos testing (default:
+    /// none — a single `Option` check on the factor/solve entry paths).
+    /// When `None` and [`SolverConfig::pin_fault`] is unset, the
+    /// `HYLU_FAULT` env var (`SEED:PERIOD:KINDS[:LIMIT]`) can supply one
+    /// at `Solver` construction. Shared via `Arc` so cloned configs (and
+    /// every system of a service) draw from one step-indexed schedule.
+    pub fault: Option<Arc<FaultPlan>>,
+    /// Ignore the `HYLU_FAULT` env override and use [`SolverConfig::fault`]
+    /// as configured (the chaos soak's oracle solvers set this: oracles
+    /// must stay fault-free even when the environment injects faults).
+    pub pin_fault: bool,
     /// Route large sup-sup GEMMs through the XLA/PJRT AOT artifacts
     /// (Pallas kernels). Ablation path; the native microkernel is default.
     pub use_xla: bool,
@@ -162,6 +176,8 @@ impl Default for SolverConfig {
             refine_tol: 1e-10,
             refine_target: 1e-14,
             parallel_solve_min_n: 2048,
+            fault: None,
+            pin_fault: false,
             use_xla: false,
             xla_min_dim: 16,
             artifacts_dir: "artifacts".into(),
@@ -183,6 +199,8 @@ mod tests {
         assert!(!c.use_xla);
         assert!(c.max_supernode <= 256);
         assert_eq!(c.precision, Precision::F64);
+        assert!(c.fault.is_none());
+        assert!(!c.pin_fault);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Deterministic fault injection for the chaos harness.
+//!
+//! A [`FaultPlan`] is a seeded, step-indexed schedule of failures that the
+//! coordinator consults at well-defined points: once per factorization /
+//! refactorization entry (the *factor stream*) and once per solve entry
+//! (the *solve stream*). Each stream keeps its own atomic step counter;
+//! whether step `k` fires — and which [`Fault`] it draws — is a pure
+//! function of `(seed, stream, k)`, so a plan replays identically given
+//! the same per-stream call counts regardless of thread scheduling. The
+//! harness asserts *invariants* (no lost tickets, every quarantine
+//! recovers), not exact event orders, so cross-stream interleaving is
+//! free to vary.
+//!
+//! Injection points sit **before** any worker-pool dispatch: a panic
+//! raised inside a bulk-mode barrier job would strand the other workers,
+//! so the plan only ever panics on the calling (dispatcher) thread where
+//! `service::shard` supervision — or the FFI `catch_unwind` guards — can
+//! contain it.
+//!
+//! Plans are injected via `SolverBuilder::fault`, `ServiceConfig::fault`,
+//! or the `HYLU_FAULT` environment variable
+//! (`SEED:PERIOD:KINDS[:LIMIT]`, e.g. `7:11:panic-factor,zero-pivot:32`);
+//! the absent case is a single `Option` check — zero cost on the hot
+//! path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::{Error, Result};
+
+/// One injectable failure kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic on the dispatcher thread at factor/refactor entry.
+    PanicInFactor,
+    /// Panic on the dispatcher thread at solve entry.
+    PanicInSolve,
+    /// Make the factor/refactor return [`Error::ZeroPivot`].
+    ForceZeroPivot,
+    /// Sleep this many microseconds (models a stalled kernel; fires on
+    /// both streams).
+    SlowKernel(u64),
+}
+
+/// A seeded, step-indexed fault schedule. See the module docs.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Every `period`-th step of a stream fires (0 disables the plan).
+    period: u64,
+    /// Kinds eligible on the factor stream (panic-factor / zero-pivot /
+    /// slow).
+    factor_kinds: Vec<Fault>,
+    /// Kinds eligible on the solve stream (panic-solve / slow).
+    solve_kinds: Vec<Fault>,
+    /// Total faults this plan may ever fire (`u64::MAX` = unlimited).
+    limit: u64,
+    factor_steps: AtomicU64,
+    solve_steps: AtomicU64,
+    injected: AtomicU64,
+}
+
+/// splitmix64 finalizer: the draw hash.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Plan firing one fault from `kinds` every `period`-th step of each
+    /// stream, forever.
+    pub fn new(seed: u64, period: u64, kinds: Vec<Fault>) -> FaultPlan {
+        FaultPlan::with_limit(seed, period, kinds, u64::MAX)
+    }
+
+    /// Like [`FaultPlan::new`] with a cap on the total faults ever fired
+    /// (used by tests that need exactly-one failure, e.g. the FFI
+    /// poisoned-handle contract).
+    pub fn with_limit(seed: u64, period: u64, kinds: Vec<Fault>, limit: u64) -> FaultPlan {
+        let factor_kinds = kinds
+            .iter()
+            .copied()
+            .filter(|k| !matches!(k, Fault::PanicInSolve))
+            .collect();
+        let solve_kinds = kinds
+            .iter()
+            .copied()
+            .filter(|k| matches!(k, Fault::PanicInSolve | Fault::SlowKernel(_)))
+            .collect();
+        FaultPlan {
+            seed,
+            period,
+            factor_kinds,
+            solve_kinds,
+            limit,
+            factor_steps: AtomicU64::new(0),
+            solve_steps: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse the `HYLU_FAULT` syntax: `SEED:PERIOD:KINDS[:LIMIT]` where
+    /// `KINDS` is a comma list of `panic-factor` | `panic-solve` |
+    /// `zero-pivot` | `slow=MICROS`.
+    pub fn parse(s: &str) -> Option<FaultPlan> {
+        let mut it = s.split(':');
+        let seed = it.next()?.trim().parse().ok()?;
+        let period = it.next()?.trim().parse().ok()?;
+        let mut kinds = Vec::new();
+        for k in it.next()?.split(',') {
+            kinds.push(match k.trim() {
+                "panic-factor" => Fault::PanicInFactor,
+                "panic-solve" => Fault::PanicInSolve,
+                "zero-pivot" => Fault::ForceZeroPivot,
+                other => Fault::SlowKernel(other.strip_prefix("slow=")?.parse().ok()?),
+            });
+        }
+        let limit = match it.next() {
+            Some(v) => v.trim().parse().ok()?,
+            None => u64::MAX,
+        };
+        if it.next().is_some() || kinds.is_empty() {
+            return None;
+        }
+        Some(FaultPlan::with_limit(seed, period, kinds, limit))
+    }
+
+    /// The plan requested by the `HYLU_FAULT` environment variable, if
+    /// set and parseable (mirrors `Precision::effective`: a malformed
+    /// value falls back to "no plan" rather than failing construction).
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let v = std::env::var("HYLU_FAULT").ok()?;
+        FaultPlan::parse(v.trim()).map(Arc::new)
+    }
+
+    /// Total faults fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic draw for step `step` of a stream: `None` off the
+    /// period grid, otherwise a seed/stream/step-hashed pick.
+    fn draw(&self, step: u64, kinds: &[Fault], stream: u64) -> Option<Fault> {
+        if self.period == 0 || kinds.is_empty() || (step + 1) % self.period != 0 {
+            return None;
+        }
+        let h = mix(self.seed ^ stream.wrapping_mul(0xA5A5_A5A5_A5A5_A5A5) ^ step);
+        Some(kinds[(h % kinds.len() as u64) as usize])
+    }
+
+    /// Claim one unit of the fault budget; `false` once `limit` is spent.
+    fn claim(&self) -> bool {
+        let mut cur = self.injected.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return false;
+            }
+            match self.injected.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Factor-stream injection point (factorize *and* refactorize entry,
+    /// before any pool dispatch). May panic, sleep, or return the forced
+    /// zero-pivot error.
+    pub fn at_factor(&self) -> Result<()> {
+        let step = self.factor_steps.fetch_add(1, Ordering::Relaxed);
+        match self.draw(step, &self.factor_kinds, 0) {
+            Some(f) if self.claim() => match f {
+                Fault::PanicInFactor => panic!("injected fault: panic in factor (step {step})"),
+                Fault::ForceZeroPivot => Err(Error::ZeroPivot { row: 0 }),
+                Fault::SlowKernel(us) => {
+                    std::thread::sleep(Duration::from_micros(us));
+                    Ok(())
+                }
+                Fault::PanicInSolve => Ok(()), // filtered out of this stream
+            },
+            _ => Ok(()),
+        }
+    }
+
+    /// Solve-stream injection point (solve entry, before scratch checkout
+    /// or pool dispatch). May panic or sleep; never returns an error.
+    pub fn at_solve(&self) {
+        let step = self.solve_steps.fetch_add(1, Ordering::Relaxed);
+        if let Some(f) = self.draw(step, &self.solve_kinds, 1) {
+            if self.claim() {
+                match f {
+                    Fault::PanicInSolve => panic!("injected fault: panic in solve (step {step})"),
+                    Fault::SlowKernel(us) => std::thread::sleep(Duration::from_micros(us)),
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_syntax() {
+        let p = FaultPlan::parse("7:11:panic-factor,panic-solve,zero-pivot,slow=50:32").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.period, 11);
+        assert_eq!(p.limit, 32);
+        assert_eq!(
+            p.factor_kinds,
+            vec![Fault::PanicInFactor, Fault::ForceZeroPivot, Fault::SlowKernel(50)]
+        );
+        assert_eq!(p.solve_kinds, vec![Fault::PanicInSolve, Fault::SlowKernel(50)]);
+        // limit defaults to unlimited
+        assert_eq!(FaultPlan::parse("1:5:zero-pivot").unwrap().limit, u64::MAX);
+        for bad in ["", "1:5", "1:5:", "1:5:nope", "x:5:zero-pivot", "1:5:slow=abc", "1:5:zero-pivot:2:9"] {
+            assert!(FaultPlan::parse(bad).is_none(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn streams_fire_on_the_period_grid_deterministically() {
+        let p = FaultPlan::new(42, 3, vec![Fault::ForceZeroPivot]);
+        let mut errs = Vec::new();
+        for step in 0..9 {
+            errs.push((step, p.at_factor().is_err()));
+        }
+        assert_eq!(
+            errs.iter().filter(|(_, e)| *e).map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![2, 5, 8]
+        );
+        assert_eq!(p.injected(), 3);
+        // a second identical plan replays the identical schedule
+        let q = FaultPlan::new(42, 3, vec![Fault::ForceZeroPivot]);
+        let replay: Vec<bool> = (0..9).map(|_| q.at_factor().is_err()).collect();
+        assert_eq!(replay, errs.iter().map(|(_, e)| *e).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn limit_caps_total_injections() {
+        let p = FaultPlan::with_limit(1, 1, vec![Fault::ForceZeroPivot], 2);
+        let fired: usize = (0..10).map(|_| p.at_factor().is_err() as usize).sum();
+        assert_eq!(fired, 2);
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn solve_stream_only_sees_solve_kinds() {
+        // a zero-pivot-only plan never disturbs the solve stream, and a
+        // slow-only plan disturbs neither stream's control flow
+        let p = FaultPlan::new(3, 1, vec![Fault::ForceZeroPivot]);
+        for _ in 0..5 {
+            p.at_solve(); // must not panic
+        }
+        assert_eq!(p.injected(), 0);
+        let s = FaultPlan::new(3, 1, vec![Fault::SlowKernel(1)]);
+        assert!(s.at_factor().is_ok());
+        s.at_solve();
+        assert_eq!(s.injected(), 2);
+    }
+
+    #[test]
+    fn panics_carry_the_injected_marker() {
+        let p = FaultPlan::new(9, 1, vec![Fault::PanicInFactor]);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = p.at_factor();
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected fault"), "{msg}");
+    }
+}

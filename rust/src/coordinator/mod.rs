@@ -20,9 +20,11 @@
 //! (asserted in `rust/tests/api_handles.rs`).
 
 pub mod config;
+pub mod fault;
 pub mod stats;
 
 pub use config::{Precision, SolverConfig};
+pub use fault::{Fault, FaultPlan};
 pub use stats::{FactorStats, RefineOutcome, SolveStats, SymbolicStats};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -284,7 +286,12 @@ impl Solver {
     /// Fallible constructor. Creates the engine; worker threads spawn
     /// lazily on the first numeric dispatch, so analyze-only use never
     /// spawns any.
-    pub fn try_new(cfg: SolverConfig) -> Result<Self> {
+    pub fn try_new(mut cfg: SolverConfig) -> Result<Self> {
+        // env-driven chaos: HYLU_FAULT supplies a fault plan unless the
+        // config already carries one or pins faults off (oracle solvers)
+        if cfg.fault.is_none() && !cfg.pin_fault {
+            cfg.fault = FaultPlan::from_env();
+        }
         let gemm: Box<dyn GemmBackend + Sync + Send> = if cfg.use_xla {
             Box::new(crate::runtime::XlaGemm::load(
                 std::path::Path::new(&cfg.artifacts_dir),
@@ -456,6 +463,11 @@ impl Solver {
     }
 
     pub(crate) fn factor_core(&self, a: &Csr, an: &Analysis) -> Result<Factorization> {
+        // fault injection fires here, before any pool dispatch: a panic
+        // inside a bulk-mode barrier job would strand the other workers
+        if let Some(fp) = self.cfg.fault.as_deref() {
+            fp.at_factor()?;
+        }
         let precision = if self.cfg.pin_precision {
             self.cfg.precision
         } else {
@@ -504,10 +516,12 @@ impl Solver {
                 let mut fac: LuFactors = LuFactors::placeholder(an.sym.n);
                 fac.pivot_perm.copy_from_slice(&fac32.pivot_perm);
                 fac.perturbed = fac32.perturbed;
+                fac.growth = fac32.growth;
                 (fac, Some(fac32), perturbed)
             }
         };
         let t = t0.elapsed().as_secs_f64();
+        let fac_growth = fac.growth;
         Ok(Factorization {
             fac,
             fac32,
@@ -517,6 +531,7 @@ impl Solver {
             stats: FactorStats {
                 t_factor: t,
                 perturbed,
+                pivot_growth: fac_growth,
                 gflops: an.sym.flops / t.max(1e-12) / 1e9,
                 mode: an.mode,
                 threads,
@@ -544,6 +559,10 @@ impl Solver {
         an: &Analysis,
         f: &mut Factorization,
     ) -> Result<()> {
+        // same pre-dispatch injection point as `factor_core`
+        if let Some(fp) = self.cfg.fault.as_deref() {
+            fp.at_factor()?;
+        }
         let t0 = Instant::now();
         let mut scratch = self.engine.factor_scratch();
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
@@ -608,6 +627,7 @@ impl Solver {
             // them so the next stall rebuilds from the current matrix
             *exec::lock_ignore_poison(&f.recovery) = None;
             f.fac.perturbed = fac32.perturbed;
+            f.fac.growth = fac32.growth;
             (p, Precision::Mixed)
         } else {
             let p = factor_parallel_pooled(
@@ -628,6 +648,7 @@ impl Solver {
         f.stats = FactorStats {
             t_factor: t,
             perturbed,
+            pivot_growth: f.fac.growth,
             gflops: an.sym.flops / t.max(1e-12) / 1e9,
             mode: an.mode,
             threads,
@@ -699,6 +720,9 @@ impl Solver {
     ) -> Result<SolveStats> {
         if b.len() != a.n {
             return Err(Error::Invalid("rhs length mismatch".into()));
+        }
+        if let Some(fp) = self.cfg.fault.as_deref() {
+            fp.at_solve();
         }
         let t0 = Instant::now();
         let threads = self.engine.pool().nthreads();
@@ -846,6 +870,9 @@ impl Solver {
             if b.len() != n {
                 return Err(Error::Invalid("rhs length mismatch".into()));
             }
+        }
+        if let Some(fp) = self.cfg.fault.as_deref() {
+            fp.at_solve();
         }
         let t0 = Instant::now();
         let threads = self.engine.pool().nthreads();

@@ -98,6 +98,11 @@ pub struct FactorStats {
     pub t_factor: f64,
     /// Perturbed pivots.
     pub perturbed: usize,
+    /// Pivot-growth estimate `max|U_ij| / max|A_ij|` from this
+    /// factorization (0.0 when unavailable; non-finite when the factors
+    /// contain Inf/NaN). The service quarantines a system whose growth
+    /// exceeds `ServiceConfig::pivot_growth_limit`.
+    pub pivot_growth: f64,
     /// Achieved GFLOP/s against the symbolic flop estimate.
     pub gflops: f64,
     /// Kernel used.

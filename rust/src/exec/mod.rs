@@ -72,6 +72,10 @@ pub struct PoolCounters {
     /// park on the condvar (dispatch inter-arrival grew past the spin
     /// window). Lets tests observe the decay directly.
     pub spin_decays: AtomicU64,
+    /// Workspace scrubs performed because a job panicked (each caught
+    /// panic scrubs the affected worker contexts before the engine is
+    /// reused). Fault-tolerance telemetry for the service layer.
+    pub panic_scrubs: AtomicU64,
 }
 
 impl PoolCounters {
@@ -157,6 +161,7 @@ impl WorkerCtx {
     fn scrub_all(&mut self) {
         self.ws.scrub();
         self.ws32.scrub();
+        self.counters.panic_scrubs.fetch_add(1, Ordering::Relaxed);
     }
 }
 

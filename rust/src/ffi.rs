@@ -61,6 +61,16 @@ pub const HYLU_ERR_SINGULAR: i32 = 4;
 pub const HYLU_ERR_ZERO_PIVOT: i32 = 5;
 /// Runtime/backend failure ([`Error::Runtime`]).
 pub const HYLU_ERR_RUNTIME: i32 = 6;
+/// A service shard caught a panic while working on the request
+/// ([`Error::ShardPanicked`]); the shard keeps serving.
+pub const HYLU_ERR_SHARD_PANICKED: i32 = 7;
+/// The request's deadline passed before dispatch
+/// ([`Error::DeadlineExpired`]).
+pub const HYLU_ERR_DEADLINE_EXPIRED: i32 = 8;
+/// The target system is quarantined after a numeric or panic failure
+/// ([`Error::Quarantined`]); the service retries recovery on later
+/// refactorize/solve traffic.
+pub const HYLU_ERR_QUARANTINED: i32 = 9;
 
 enum SystemState {
     Empty,
@@ -688,6 +698,28 @@ pub unsafe extern "C" fn hylu_service_rebalance(s: *mut HyluService, moved: *mut
     })
 }
 
+/// Health of a registered system: `0` = healthy, `1` = quarantined
+/// after an unperturbable zero pivot, `2` = structurally singular
+/// update, `3` = pivot growth over the configured limit, `4` = a caught
+/// panic during factorization; `-1` = unknown id (never registered or
+/// retired). Quarantined systems fail solves fast with
+/// [`HYLU_ERR_QUARANTINED`] until a supervised full refactorization
+/// restores them.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`] (or null,
+/// which returns `-1`).
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_health(s: *const HyluService, id: u64) -> i32 {
+    if s.is_null() {
+        return -1;
+    }
+    match (*s).service.health(SystemId(id)) {
+        Some(h) => h.encode() as i32,
+        None => -1,
+    }
+}
+
 /// Message of the last error recorded on this service handle (empty
 /// string when none). The pointer is valid until the next failing call
 /// on the same handle or [`hylu_service_free`].
@@ -728,5 +760,66 @@ fn guarded_service(s: &mut HyluService, f: impl FnOnce(&mut HyluService) -> i32)
                 .unwrap_or_default();
             HYLU_ERR_PANIC
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every `Error` variant must have a matching `HYLU_ERR_*` constant
+    /// with the same value, and the reserved codes (`0` success, `1`
+    /// panic) must never collide with a variant. The in-crate match has
+    /// no wildcard arm, so adding an `Error` variant without extending
+    /// the ABI constants fails to compile here before it can ship a
+    /// code C callers can't name.
+    #[test]
+    fn ffi_error_consts_cover_every_error_variant() {
+        let samples = [
+            Error::Invalid(String::new()),
+            Error::Io(String::new()),
+            Error::StructurallySingular { matched: 0, n: 1 },
+            Error::ZeroPivot { row: 0 },
+            Error::Runtime(String::new()),
+            Error::ShardPanicked { shard: 0 },
+            Error::DeadlineExpired,
+            Error::Quarantined(String::new()),
+        ];
+        for e in &samples {
+            let expected = match e {
+                Error::Invalid(_) => HYLU_ERR_INVALID,
+                Error::Io(_) => HYLU_ERR_IO,
+                Error::StructurallySingular { .. } => HYLU_ERR_SINGULAR,
+                Error::ZeroPivot { .. } => HYLU_ERR_ZERO_PIVOT,
+                Error::Runtime(_) => HYLU_ERR_RUNTIME,
+                Error::ShardPanicked { .. } => HYLU_ERR_SHARD_PANICKED,
+                Error::DeadlineExpired => HYLU_ERR_DEADLINE_EXPIRED,
+                Error::Quarantined(_) => HYLU_ERR_QUARANTINED,
+            };
+            assert_eq!(e.code(), expected, "const mismatch for {e:?}");
+            assert_ne!(e.code(), HYLU_OK, "code 0 is reserved for success");
+            assert_ne!(
+                e.code(),
+                HYLU_ERR_PANIC,
+                "code 1 is reserved for a caught panic at the ABI boundary"
+            );
+        }
+        // pin the ABI values themselves: these are published in hylu.h
+        // and must never be renumbered
+        assert_eq!(
+            [
+                HYLU_OK,
+                HYLU_ERR_PANIC,
+                HYLU_ERR_INVALID,
+                HYLU_ERR_IO,
+                HYLU_ERR_SINGULAR,
+                HYLU_ERR_ZERO_PIVOT,
+                HYLU_ERR_RUNTIME,
+                HYLU_ERR_SHARD_PANICKED,
+                HYLU_ERR_DEADLINE_EXPIRED,
+                HYLU_ERR_QUARANTINED,
+            ],
+            [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]
+        );
     }
 }

@@ -61,13 +61,15 @@ pub mod testutil;
 pub mod prelude {
     pub use crate::api::{Analyzed, Factored, LinearSystem, SolveOpts, Solver, SolverBuilder};
     pub use crate::coordinator::{
-        FactorStats, Precision, RefineOutcome, SolveStats, SolverConfig, SymbolicStats,
+        FactorStats, Fault, FaultPlan, Precision, RefineOutcome, SolveStats, SolverConfig,
+        SymbolicStats,
     };
     pub use crate::numeric::kernels::{KernelPlan, KernelTier, Tuning};
     pub use crate::numeric::select::KernelMode;
     pub use crate::ordering::OrderingChoice;
     pub use crate::service::{
-        Priority, ServiceConfig, ServiceStats, SolverService, SystemId, SystemLoad,
+        Health, Priority, QuarantineReason, ServiceConfig, ServiceStats, SolverService, SystemId,
+        SystemLoad,
     };
     pub use crate::sparse::csr::Csr;
     pub use crate::sparse::input::{CscInput, MatrixInput};
@@ -93,6 +95,18 @@ pub enum Error {
     Io(String),
     /// XLA/PJRT runtime failure.
     Runtime(String),
+    /// A shard dispatcher caught a panic while this request was in
+    /// flight. The shard survived (scrubbed + restarted its drain loop);
+    /// the request did not. Resubmitting is safe.
+    ShardPanicked { shard: usize },
+    /// A deadline-lane request's deadline passed before dispatch (the
+    /// service was configured to expire stale deadline work).
+    DeadlineExpired,
+    /// The target system is quarantined after a numeric failure (zero
+    /// pivot, singular refactor, excessive pivot growth, or a caught
+    /// panic mid-refactor); the message names the reason. The service
+    /// auto-escalates to a full re-pivot factorization — retry later.
+    Quarantined(String),
 }
 
 impl Error {
@@ -107,6 +121,9 @@ impl Error {
     /// | 4    | structurally singular                |
     /// | 5    | zero pivot (perturbation disabled)   |
     /// | 6    | runtime/backend failure              |
+    /// | 7    | shard caught a panic in flight       |
+    /// | 8    | deadline expired before dispatch     |
+    /// | 9    | system quarantined                   |
     ///
     /// Codes are append-only: existing assignments never change, new
     /// variants get new codes. Code 1 is reserved (generic failure in
@@ -118,6 +135,9 @@ impl Error {
             Error::StructurallySingular { .. } => 4,
             Error::ZeroPivot { .. } => 5,
             Error::Runtime(_) => 6,
+            Error::ShardPanicked { .. } => 7,
+            Error::DeadlineExpired => 8,
+            Error::Quarantined(_) => 9,
         }
     }
 }
@@ -133,6 +153,11 @@ impl std::fmt::Display for Error {
             Error::Invalid(m) => write!(f, "invalid input: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::ShardPanicked { shard } => {
+                write!(f, "shard {shard} caught a panic while the request was in flight")
+            }
+            Error::DeadlineExpired => write!(f, "deadline passed before the request was dispatched"),
+            Error::Quarantined(m) => write!(f, "system quarantined: {m}"),
         }
     }
 }
@@ -147,3 +172,46 @@ impl From<std::io::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::Error;
+
+    /// Every variant must have a stable, distinct `code()`. The `match`
+    /// below is exhaustive *inside* the crate (no wildcard), so adding a
+    /// variant without deciding its ABI code fails this test's build —
+    /// the FFI-side mirror (`ffi::tests`) then pins the `HYLU_ERR_*`
+    /// constants to the same values.
+    #[test]
+    fn error_codes_are_stable_and_exhaustive() {
+        let samples = [
+            Error::Invalid(String::new()),
+            Error::Io(String::new()),
+            Error::StructurallySingular { matched: 0, n: 1 },
+            Error::ZeroPivot { row: 0 },
+            Error::Runtime(String::new()),
+            Error::ShardPanicked { shard: 0 },
+            Error::DeadlineExpired,
+            Error::Quarantined(String::new()),
+        ];
+        for e in &samples {
+            let expect = match e {
+                Error::Invalid(_) => 2,
+                Error::Io(_) => 3,
+                Error::StructurallySingular { .. } => 4,
+                Error::ZeroPivot { .. } => 5,
+                Error::Runtime(_) => 6,
+                Error::ShardPanicked { .. } => 7,
+                Error::DeadlineExpired => 8,
+                Error::Quarantined(_) => 9,
+            };
+            assert_eq!(e.code(), expect, "code drifted for {e}");
+        }
+        // distinct and never colliding with 0 (success) / 1 (FFI panic)
+        let mut codes: Vec<i32> = samples.iter().map(Error::code).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), samples.len(), "duplicate error codes");
+        assert!(codes.iter().all(|&c| c >= 2), "codes 0/1 are reserved");
+    }
+}

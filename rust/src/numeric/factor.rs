@@ -83,8 +83,9 @@ pub fn factor<T: Scalar>(
             *p = i as u32;
         }
     }
+    let amax = a.max_abs();
     let eps_abs = if cfg.perturb {
-        cfg.perturb_eps * a.max_abs().max(1e-300)
+        cfg.perturb_eps * amax.max(1e-300)
     } else {
         0.0
     };
@@ -102,7 +103,34 @@ pub fn factor<T: Scalar>(
     }
     let perturbed = sf.perturbed.load(std::sync::atomic::Ordering::Relaxed);
     fac.perturbed = perturbed;
+    fac.growth = pivot_growth(sf.umax_value(), amax);
     perturbed
+}
+
+/// Element-growth ratio `max|U_ij| / max|A_ij|` from the tracked maxima.
+/// A non-finite `max|U|` (overflow / NaN factors) is passed through
+/// untouched so the quarantine monitor sees it; an all-zero matrix
+/// reports zero growth.
+pub(crate) fn pivot_growth(umax: f64, amax: f64) -> f64 {
+    if !umax.is_finite() {
+        umax
+    } else if amax > 0.0 {
+        umax / amax
+    } else {
+        0.0
+    }
+}
+
+/// Fold one `|U_ij|` sample into a thread-local growth maximum. NaN wins
+/// and then sticks (mirroring [`SharedFactors::update_umax`]) so bad
+/// arithmetic is never masked by a later finite entry.
+#[inline]
+fn fold_max(cur: f64, v: f64) -> f64 {
+    if cur.is_nan() || v <= cur {
+        cur
+    } else {
+        v
+    }
 }
 
 /// Factor one node. Safety: caller guarantees all source nodes (this node's
@@ -369,6 +397,7 @@ unsafe fn factor_panel<T: Scalar>(
 
     // internal factorization of the diagonal block + trailing U tail
     let mut perturbed = 0usize;
+    let mut umax = 0.0f64;
     for c in 0..w {
         let pcol = nl + c;
         if !refactor && cfg.supernode_pivoting {
@@ -398,6 +427,12 @@ unsafe fn factor_panel<T: Scalar>(
         let inv = T::ONE / piv;
         let (head, tail) = panel.split_at_mut((c + 1) * stride);
         let crow = &head[c * stride + pcol + 1..c * stride + stride];
+        // row c of U (pivot + everything right of it) is final here —
+        // fold it into the pivot-growth monitor while it is cache-hot
+        umax = fold_max(umax, piv.to_f64().abs());
+        for &v in crow {
+            umax = fold_max(umax, v.to_f64().abs());
+        }
         for r in c + 1..w {
             let base = (r - c - 1) * stride;
             let f = tail[base + pcol] * inv;
@@ -410,6 +445,7 @@ unsafe fn factor_panel<T: Scalar>(
         *sf.diag.add(first + c) = piv;
     }
     sf.add_perturbed(perturbed);
+    sf.update_umax(umax);
 
     // reset colmap
     for &j in lcols {
@@ -447,6 +483,7 @@ unsafe fn factor_rows<T: Scalar>(
     }
     let x = &mut ws.x;
     let mut perturbed = 0usize;
+    let mut umax = 0.0f64;
 
     for r in 0..w {
         let i = first + r;
@@ -521,9 +558,11 @@ unsafe fn factor_rows<T: Scalar>(
             }
         }
 
-        // pivot + gather + reset
+        // pivot + gather + reset (the gather doubles as the U sweep for
+        // the pivot-growth monitor: every finalized U entry passes here)
         let (piv, pert) = perturb_pivot(x[i], eps_abs);
         perturbed += pert as usize;
+        umax = fold_max(umax, piv.to_f64().abs());
         if nd.is_super {
             // write the whole row into the panel
             let p = sf.panel_mut(id); // re-borrow (same thread)
@@ -533,13 +572,19 @@ unsafe fn factor_rows<T: Scalar>(
                 x[j as usize] = T::ZERO;
             }
             for kk in 0..w {
-                p[base + nl + kk] = x[first + kk];
+                let v = x[first + kk];
+                p[base + nl + kk] = v;
                 x[first + kk] = T::ZERO;
+                if kk > r {
+                    umax = fold_max(umax, v.to_f64().abs());
+                }
             }
             p[base + nl + r] = piv;
             for (c, &j) in ucols.iter().enumerate() {
-                p[base + nl + w + c] = x[j as usize];
+                let v = x[j as usize];
+                p[base + nl + w + c] = v;
                 x[j as usize] = T::ZERO;
+                umax = fold_max(umax, v.to_f64().abs());
             }
             *sf.diag.add(i) = piv;
         } else {
@@ -552,12 +597,15 @@ unsafe fn factor_rows<T: Scalar>(
             x[i] = T::ZERO;
             let uv = std::slice::from_raw_parts_mut(sf.uvals.add(nd.u_start), nu);
             for (c, &j) in ucols.iter().enumerate() {
-                uv[c] = x[j as usize];
+                let v = x[j as usize];
+                uv[c] = v;
                 x[j as usize] = T::ZERO;
+                umax = fold_max(umax, v.to_f64().abs());
             }
         }
     }
     sf.add_perturbed(perturbed);
+    sf.update_umax(umax);
 }
 
 /// Reconstruct the dense `L·U` product for tests (small n).
@@ -837,6 +885,30 @@ mod tests {
         factor(&a, &sym, KernelMode::SupSup, &cfg, &mut lo, true, &NativeGemm);
         assert!(lo.panels.iter().zip(&p1).all(|(a, b)| a.to_bits() == b.to_bits()));
         assert!(lo.diag.iter().zip(&d1).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn pivot_growth_is_tracked_across_modes_and_refactor() {
+        let a = diag_dominant(&gen::circuit(80, 3), 8.0);
+        let cfg = PivotConfig::default();
+        for (mode, policy) in [
+            (KernelMode::RowRow, MergePolicy::None),
+            (KernelMode::SupRow, MergePolicy::Exact { max_width: 16 }),
+            (KernelMode::SupSup, MergePolicy::Exact { max_width: 16 }),
+        ] {
+            let sym = analyze_pattern(&a, policy, 4);
+            let mut fac: LuFactors = LuFactors::alloc(&sym);
+            factor(&a, &sym, mode, &cfg, &mut fac, false, &NativeGemm);
+            // |U| always contains the largest pivot, and every pivot of a
+            // diagonally-dominant matrix is bounded by ~max|A| growth
+            assert!(fac.growth.is_finite() && fac.growth > 0.0, "{mode:?}: {}", fac.growth);
+            assert!(fac.growth < 1e3, "{mode:?}: implausible growth {}", fac.growth);
+            let g1 = fac.growth;
+            // a same-values refactor replays the same arithmetic: the
+            // monitor must reproduce the identical estimate
+            factor(&a, &sym, mode, &cfg, &mut fac, true, &NativeGemm);
+            assert_eq!(fac.growth.to_bits(), g1.to_bits(), "{mode:?}");
+        }
     }
 
     #[test]

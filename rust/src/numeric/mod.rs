@@ -17,7 +17,7 @@ pub mod select;
 
 pub use scalar::Scalar;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::symbolic::Symbolic;
 
@@ -72,6 +72,11 @@ pub struct LuFactors<T = f64> {
     pub pivot_perm: Vec<u32>,
     /// Number of perturbed pivots in the last factorization.
     pub perturbed: usize,
+    /// Pivot-growth estimate from the last factorization:
+    /// `max|U_ij| / max|A_ij|` (the `‖U‖∞/‖A‖∞`-style stability monitor,
+    /// tracked during the factor sweep). `0.0` before the first
+    /// factorization; non-finite when the factors went numerically bad.
+    pub growth: f64,
 }
 
 impl<T: Scalar> LuFactors<T> {
@@ -95,6 +100,7 @@ impl<T: Scalar> LuFactors<T> {
             panel_ptr,
             pivot_perm: (0..sym.n as u32).collect(),
             perturbed: 0,
+            growth: 0.0,
         }
     }
 
@@ -111,6 +117,7 @@ impl<T: Scalar> LuFactors<T> {
             panel_ptr: vec![0],
             pivot_perm: (0..n as u32).collect(),
             perturbed: 0,
+            growth: 0.0,
         }
     }
 
@@ -236,6 +243,10 @@ pub(crate) struct SharedFactors<T = f64> {
     pub panels: *mut T,
     pub pivot_perm: *mut u32,
     pub perturbed: AtomicUsize,
+    /// Running `max|U_ij|` over finalized factor rows, stored as `f64`
+    /// bits (monotone CAS max; non-negative, so the float compare below
+    /// is total except for NaN, which is handled explicitly).
+    pub umax: AtomicU64,
     pub panel_ptr: *const usize,
 }
 
@@ -251,6 +262,7 @@ impl<T: Scalar> SharedFactors<T> {
             panels: fac.panels.as_mut_ptr(),
             pivot_perm: fac.pivot_perm.as_mut_ptr(),
             perturbed: AtomicUsize::new(0),
+            umax: AtomicU64::new(0),
             panel_ptr: fac.panel_ptr.as_ptr(),
         }
     }
@@ -274,5 +286,33 @@ impl<T: Scalar> SharedFactors<T> {
         if k > 0 {
             self.perturbed.fetch_add(k, Ordering::Relaxed);
         }
+    }
+
+    /// Fold a node-local `max|U_ij|` into the shared running maximum.
+    /// A NaN sample wins over any finite value (and then sticks), so a
+    /// factorization that went numerically bad surfaces as non-finite
+    /// growth instead of being masked by a later finite node.
+    pub fn update_umax(&self, v: f64) {
+        let mut cur = self.umax.load(Ordering::Relaxed);
+        loop {
+            let c = f64::from_bits(cur);
+            if c.is_nan() || v <= c {
+                return;
+            }
+            match self.umax.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// The accumulated `max|U_ij|` of this factorization.
+    pub fn umax_value(&self) -> f64 {
+        f64::from_bits(self.umax.load(Ordering::Relaxed))
     }
 }

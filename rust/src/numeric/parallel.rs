@@ -65,8 +65,9 @@ pub fn factor_parallel_pooled<T: Scalar>(
             *p = i as u32;
         }
     }
+    let amax = a.max_abs();
     let eps_abs = if cfg.perturb {
-        cfg.perturb_eps * a.max_abs().max(1e-300)
+        cfg.perturb_eps * amax.max(1e-300)
     } else {
         0.0
     };
@@ -158,6 +159,9 @@ pub fn factor_parallel_pooled<T: Scalar>(
 
     let perturbed = sf.perturbed.load(Ordering::Relaxed);
     fac.perturbed = perturbed;
+    // the atomic max is schedule-independent, so parallel growth is
+    // bit-identical to the sequential driver's
+    fac.growth = crate::numeric::factor::pivot_growth(sf.umax_value(), amax);
     perturbed
 }
 

@@ -42,8 +42,24 @@
 //!   cannot jump), so a caller never observes values newer than its
 //!   submission point.
 //!
-//! [`ServiceStats`] exposes the coalescing and elasticity behavior
-//! (requests, dispatches, mean/max batch, forwards, moves) for benches
+//! - **Fault tolerance.** Each dispatch runs under `catch_unwind`
+//!   supervision: a panic fails that block's tickets with a typed
+//!   [`crate::Error::ShardPanicked`] and the shard keeps serving — a
+//!   shard is never permanently dead. A refactor that fails numerically
+//!   (zero pivot / singular), panics, or blows past
+//!   [`ServiceConfig::pivot_growth_limit`] moves its system to
+//!   [`Health::Quarantined`]; queued solves fail fast with
+//!   [`crate::Error::Quarantined`] until an EMA-gated **escalation** — a
+//!   full re-pivot factorization — restores [`Health::Healthy`]
+//!   ([`SolverService::health`]). Stale deadline work can be expired
+//!   ([`ServiceConfig::expire_deadlines`]) and bulk load shed at
+//!   admission ([`ServiceConfig::shed_depth`]). The whole model is
+//!   driven deterministically by [`crate::coordinator::FaultPlan`] in
+//!   the chaos soak (`rust/tests/service_soak.rs`).
+//!
+//! [`ServiceStats`] exposes the coalescing, elasticity, and fault
+//! behavior (requests, dispatches, mean/max batch, forwards, moves,
+//! panics caught, quarantines/recoveries, expired, shed) for benches
 //! and tests.
 
 pub mod queue;
@@ -51,7 +67,7 @@ mod route;
 mod shard;
 
 pub use queue::Priority;
-pub use route::{SystemId, SystemLoad, SystemStats};
+pub use route::{Health, QuarantineReason, SystemId, SystemLoad, SystemStats};
 pub use shard::ServiceStats;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,14 +77,14 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::api::{Factored, LinearSystem, Solver};
-use crate::coordinator::SolverConfig;
+use crate::coordinator::{FaultPlan, SolverConfig};
 use crate::exec::lock_ignore_poison;
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
 use queue::AdaptiveTick;
 use route::{RouteCell, RouteEntry};
-use shard::{Control, ShardQueue, ShardSystem, ShardWorker, SolveJob};
+use shard::{Control, RecoveryGate, ShardPolicy, ShardQueue, ShardSystem, ShardWorker, SolveJob};
 
 /// Configuration for [`SolverService`].
 #[derive(Clone, Debug)]
@@ -102,6 +118,34 @@ pub struct ServiceConfig {
     /// requests are dispatched between consecutive bulk-lane requests
     /// (clamped to `>= 1`). See [`queue::LaneQueue`].
     pub starvation_bound: usize,
+    /// Load shedding: reject bulk-lane submissions with a "shedding
+    /// bulk load" `Runtime` error while the target shard's queue depth
+    /// is at or above this. 0 (default) disables shedding. Deadline-lane
+    /// submissions are never shed — they ride backpressure instead.
+    pub shed_depth: usize,
+    /// Fail deadline-lane requests whose deadline passed before
+    /// dispatch with [`Error::DeadlineExpired`] instead of solving them
+    /// (default off: a deadline is a scheduling hint, not a contract,
+    /// unless the operator opts in).
+    pub expire_deadlines: bool,
+    /// Quarantine a system whose refactor pivot-growth estimate
+    /// (`FactorStats::pivot_growth`) exceeds this. Non-finite growth
+    /// always quarantines; the default `f64::INFINITY` keeps finite
+    /// growth unlimited.
+    pub pivot_growth_limit: f64,
+    /// EMA smoothing for the per-system quarantine-recovery retry
+    /// controller (see `DESIGN.md` §"Fault model & recovery").
+    pub recover_alpha: f64,
+    /// Failure-EMA threshold below which a recovery escalation is
+    /// attempted at a dispatch opportunity. The first attempt after a
+    /// quarantine is always immediate (the EMA starts at zero).
+    pub recover_gate: f64,
+    /// Deterministic fault-injection plan for chaos testing, shared by
+    /// every system the service *builds* ([`SolverService::new`]);
+    /// systems admitted via [`SolverService::register`] carry their own
+    /// solver's plan. `None` (default) injects nothing (modulo the
+    /// `HYLU_FAULT` env override at solver construction).
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServiceConfig {
@@ -114,6 +158,12 @@ impl Default for ServiceConfig {
             tick: Duration::ZERO,
             tick_max: Duration::ZERO,
             starvation_bound: 8,
+            shed_depth: 0,
+            expire_deadlines: false,
+            pivot_growth_limit: f64::INFINITY,
+            recover_alpha: 0.5,
+            recover_gate: 0.5,
+            fault: None,
         }
     }
 }
@@ -166,6 +216,8 @@ pub struct SolverService {
     /// takes this lock.
     topology: Mutex<u64>,
     threads: Vec<Option<JoinHandle<()>>>,
+    /// Bulk-lane shedding threshold (`ServiceConfig::shed_depth`).
+    shed_depth: usize,
 }
 
 impl SolverService {
@@ -185,6 +237,12 @@ impl SolverService {
             retires: AtomicU64::new(0),
             moves: AtomicU64::new(0),
         });
+        let policy = ShardPolicy {
+            expire_deadlines: cfg.expire_deadlines,
+            pivot_growth_limit: cfg.pivot_growth_limit,
+            recover_alpha: cfg.recover_alpha.clamp(0.0, 1.0),
+            recover_gate: cfg.recover_gate,
+        };
         let mut threads = Vec::with_capacity(nshards);
         for s in 0..nshards {
             let worker = ShardWorker::new(
@@ -194,6 +252,7 @@ impl SolverService {
                 AdaptiveTick::new(cfg.tick, cfg.tick_max),
                 cfg.max_batch.max(1),
                 cfg.starvation_bound,
+                policy,
             );
             let spawned = std::thread::Builder::new()
                 .name(format!("hylu-serve-{s}"))
@@ -216,6 +275,7 @@ impl SolverService {
             shared,
             topology: Mutex::new(0),
             threads,
+            shed_depth: cfg.shed_depth,
         })
     }
 
@@ -233,7 +293,12 @@ impl SolverService {
                     .into(),
             ));
         }
-        let solver_cfg = cfg.solver.clone();
+        let mut solver_cfg = cfg.solver.clone();
+        // the service-level chaos plan reaches systems the service
+        // itself builds; an explicit solver-level plan wins
+        if solver_cfg.fault.is_none() {
+            solver_cfg.fault = cfg.fault.clone();
+        }
         let svc = SolverService::with_shards(cfg)?;
         let nshards = svc.shard_count();
         // one handle-producing solver (engine) per shard actually used;
@@ -276,6 +341,7 @@ impl SolverService {
         let system = Box::new(ShardSystem {
             sys,
             stats: stats.clone(),
+            gate: RecoveryGate::default(),
         });
         // install BEFORE publishing the route: any request admitted
         // after the publication lands behind the install in the same
@@ -496,6 +562,19 @@ impl SolverService {
         if b.len() != n {
             return Err(Error::Invalid("rhs length mismatch".into()));
         }
+        // load shedding: bulk traffic is rejected fast while the target
+        // shard is saturated, so deadline work keeps its queue headroom;
+        // deadline submissions are never shed (they ride backpressure)
+        if self.shed_depth > 0
+            && matches!(prio, Priority::Bulk)
+            && self.shared.queues[shard].depth() >= self.shed_depth
+        {
+            self.shared.queues[shard].shed.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Runtime(format!(
+                "shedding bulk load: shard {shard} queue depth >= {}",
+                self.shed_depth
+            )));
+        }
         let (tx, rx) = mpsc::channel();
         let seq = self.shared.next_seq();
         match self.shared.queues[shard].push_solve(SolveJob { id: id.0, b, tx }, prio, seq, false) {
@@ -587,6 +666,18 @@ impl SolverService {
     /// Dimension of system `id`, if registered.
     pub fn system_dim(&self, id: SystemId) -> Option<usize> {
         self.shared.routes.load().map.get(&id.0).map(|e| e.n)
+    }
+
+    /// Serving health of system `id`, if registered: `Healthy`, or
+    /// `Quarantined(reason)` while it fails fast awaiting the escalated
+    /// recovery factorization. Lock-free (one routing-table read).
+    pub fn health(&self, id: SystemId) -> Option<Health> {
+        self.shared
+            .routes
+            .load()
+            .map
+            .get(&id.0)
+            .map(|e| e.stats.health())
     }
 
     /// Placement and load snapshot for one system, if registered.

@@ -141,6 +141,39 @@ impl<T> LaneQueue<T> {
         }
         out
     }
+
+    /// [`LaneQueue::drain_ordered`] with deadline expiry: deadline-lane
+    /// items whose deadline is at or before `now` are split out of the
+    /// dispatch order into the second vector (sorted `(deadline, seq)`
+    /// like the lane itself) so the shard can fail them with
+    /// [`crate::Error::DeadlineExpired`] instead of spending factor
+    /// bandwidth on work nobody is waiting for. Bulk items never expire.
+    pub fn drain_ordered_expiring(
+        &mut self,
+        now: Instant,
+        starvation_bound: usize,
+    ) -> (Vec<Drained<T>>, Vec<Drained<T>>) {
+        let mut expired = Vec::new();
+        let mut keep = Vec::new();
+        for (at, seq, item) in self.deadline.drain(..) {
+            if at <= now {
+                expired.push((at, seq, item));
+            } else {
+                keep.push((at, seq, item));
+            }
+        }
+        self.deadline = keep;
+        expired.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let expired = expired
+            .into_iter()
+            .map(|(at, seq, item)| Drained {
+                seq,
+                deadline: Some(at),
+                item,
+            })
+            .collect();
+        (self.drain_ordered(starvation_bound), expired)
+    }
 }
 
 /// Floor for the adaptive window's first stretch when the configured
@@ -299,6 +332,31 @@ mod tests {
         q.push(1, Priority::Deadline(t0), 1);
         q.push(2, Priority::Bulk, 100);
         assert_eq!(drain_ids(&mut q, 0), vec![0, 100, 1]);
+    }
+
+    #[test]
+    fn expiring_drain_splits_stale_deadlines() {
+        let t0 = Instant::now();
+        let mut q = LaneQueue::new();
+        // two already-expired (one "now" exactly), two live, one bulk
+        q.push(0, Priority::Deadline(t0 - Duration::from_millis(1)), 0u32);
+        q.push(1, Priority::Deadline(t0), 1);
+        q.push(2, Priority::Deadline(t0 + Duration::from_secs(60)), 2);
+        q.push(3, Priority::Deadline(t0 + Duration::from_secs(30)), 3);
+        q.push(4, Priority::Bulk, 100);
+        let (dispatch, expired) = q.drain_ordered_expiring(t0, 8);
+        assert_eq!(
+            expired.iter().map(|d| d.item).collect::<Vec<_>>(),
+            vec![0, 1],
+            "at-or-before now expires, sorted by deadline"
+        );
+        assert!(expired.iter().all(|d| d.deadline.is_some()));
+        assert_eq!(
+            dispatch.iter().map(|d| d.item).collect::<Vec<_>>(),
+            vec![3, 2, 100],
+            "live items keep EDF order; bulk never expires"
+        );
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -52,6 +52,72 @@ impl std::fmt::Display for SystemId {
     }
 }
 
+/// Why a system was quarantined (see [`Health`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuarantineReason {
+    /// A refactorization hit an exactly-zero pivot that perturbation
+    /// could not rescue.
+    ZeroPivot,
+    /// A refactorization found the matrix numerically singular.
+    Singular,
+    /// The pivot-growth estimate crossed
+    /// `ServiceConfig::pivot_growth_limit` (or went non-finite): the
+    /// stored pivot order has gone numerically rotten for the current
+    /// values.
+    PivotGrowth,
+    /// A panic was caught while the system's factors were being written;
+    /// they may be half-updated and must not serve solves.
+    Panic,
+}
+
+impl std::fmt::Display for QuarantineReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QuarantineReason::ZeroPivot => "zero pivot",
+            QuarantineReason::Singular => "singular",
+            QuarantineReason::PivotGrowth => "pivot growth",
+            QuarantineReason::Panic => "panic during factorization",
+        })
+    }
+}
+
+/// Serving health of one registered system. A quarantined system fails
+/// queued solves fast (with [`crate::Error::Quarantined`]) until the
+/// owning shard's escalation — a full re-pivot factorization — restores
+/// it to `Healthy`; see `DESIGN.md` §"Fault model & recovery".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally.
+    Healthy,
+    /// Failing fast; recovery attempts are gated by the shard's EMA
+    /// controller.
+    Quarantined(QuarantineReason),
+}
+
+impl Health {
+    /// Stable numeric encoding for the atomic health word and the C ABI
+    /// (`hylu_service_health`): 0 healthy, 1..=4 a quarantine reason.
+    pub(crate) fn encode(self) -> u64 {
+        match self {
+            Health::Healthy => 0,
+            Health::Quarantined(QuarantineReason::ZeroPivot) => 1,
+            Health::Quarantined(QuarantineReason::Singular) => 2,
+            Health::Quarantined(QuarantineReason::PivotGrowth) => 3,
+            Health::Quarantined(QuarantineReason::Panic) => 4,
+        }
+    }
+
+    pub(crate) fn decode(w: u64) -> Health {
+        match w {
+            1 => Health::Quarantined(QuarantineReason::ZeroPivot),
+            2 => Health::Quarantined(QuarantineReason::Singular),
+            3 => Health::Quarantined(QuarantineReason::PivotGrowth),
+            4 => Health::Quarantined(QuarantineReason::Panic),
+            _ => Health::Healthy,
+        }
+    }
+}
+
 /// EWMA smoothing factor for per-system load: ~4-drain memory, enough
 /// to rank hot vs cold systems without chasing single bursts.
 const EWMA_ALPHA: f64 = 0.25;
@@ -64,6 +130,16 @@ pub struct SystemStats {
     rhs_solved: AtomicU64,
     /// EWMA of right-hand sides dispatched per drain cycle, as f64 bits.
     ewma_bits: AtomicU64,
+    /// Current [`Health`], encoded (0 healthy, 1..=4 quarantine reason).
+    /// Written by the owning shard dispatcher, read lock-free through
+    /// the routing table by `SolverService::health`.
+    health_word: AtomicU64,
+    /// Times this system entered quarantine.
+    quarantines: AtomicU64,
+    /// Escalated (full re-pivot) recovery factorizations attempted.
+    recovery_attempts: AtomicU64,
+    /// Recovery attempts that restored `Healthy`.
+    recoveries: AtomicU64,
 }
 
 impl SystemStats {
@@ -97,6 +173,46 @@ impl SystemStats {
     /// [`super::SolverService::rebalance`] ranks systems by.
     pub fn ewma_load(&self) -> f64 {
         f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+
+    /// Transition health, bumping the quarantine counter on each
+    /// Healthy → Quarantined edge (reason changes inside quarantine do
+    /// not double-count). Returns whether this call was such an edge, so
+    /// the shard can mirror the count into its aggregate stats.
+    pub(crate) fn set_health(&self, h: Health) -> bool {
+        let prev = Health::decode(self.health_word.swap(h.encode(), Ordering::Relaxed));
+        let edge = prev == Health::Healthy && h != Health::Healthy;
+        if edge {
+            self.quarantines.fetch_add(1, Ordering::Relaxed);
+        }
+        edge
+    }
+
+    pub(crate) fn note_recovery_attempt(&self, succeeded: bool) {
+        self.recovery_attempts.fetch_add(1, Ordering::Relaxed);
+        if succeeded {
+            self.recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current serving health.
+    pub fn health(&self) -> Health {
+        Health::decode(self.health_word.load(Ordering::Relaxed))
+    }
+
+    /// Times this system entered quarantine.
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Escalated recovery factorizations attempted.
+    pub fn recovery_attempts(&self) -> u64 {
+        self.recovery_attempts.load(Ordering::Relaxed)
+    }
+
+    /// Recovery attempts that restored [`Health::Healthy`].
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.load(Ordering::Relaxed)
     }
 }
 
@@ -340,6 +456,31 @@ mod tests {
                 }
             });
         });
+    }
+
+    #[test]
+    fn health_encoding_round_trips_and_counts_edges() {
+        for h in [
+            Health::Healthy,
+            Health::Quarantined(QuarantineReason::ZeroPivot),
+            Health::Quarantined(QuarantineReason::Singular),
+            Health::Quarantined(QuarantineReason::PivotGrowth),
+            Health::Quarantined(QuarantineReason::Panic),
+        ] {
+            assert_eq!(Health::decode(h.encode()), h);
+        }
+        let s = SystemStats::default();
+        assert_eq!(s.health(), Health::Healthy);
+        s.set_health(Health::Quarantined(QuarantineReason::Panic));
+        // a reason change inside quarantine is not a second quarantine
+        s.set_health(Health::Quarantined(QuarantineReason::ZeroPivot));
+        assert_eq!(s.quarantines(), 1);
+        s.set_health(Health::Healthy);
+        s.set_health(Health::Quarantined(QuarantineReason::PivotGrowth));
+        assert_eq!(s.quarantines(), 2);
+        s.note_recovery_attempt(false);
+        s.note_recovery_attempt(true);
+        assert_eq!((s.recovery_attempts(), s.recoveries()), (2, 1));
     }
 
     #[test]

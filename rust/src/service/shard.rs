@@ -26,10 +26,11 @@
 //!   speculative waiting.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::{Factored, LinearSystem};
 use crate::exec::{lock_ignore_poison, wait_ignore_poison};
@@ -37,7 +38,7 @@ use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
 use super::queue::{AdaptiveTick, Drained, LaneQueue, Priority};
-use super::route::SystemStats;
+use super::route::{Health, QuarantineReason, SystemStats};
 use super::ServiceShared;
 
 /// Per-request reply channel (refactor acks send an empty vector,
@@ -45,10 +46,70 @@ use super::ServiceShared;
 pub(crate) type Reply = Sender<Result<Vec<f64>>>;
 
 /// One system living on a shard: the owning typestate handle plus the
-/// stats block that travels with it across moves.
+/// stats block and recovery controller that travel with it across moves.
 pub(crate) struct ShardSystem {
     pub sys: LinearSystem<Factored>,
     pub stats: Arc<SystemStats>,
+    pub gate: RecoveryGate,
+}
+
+/// EMA-gated auto-retry controller for quarantine recovery (one per
+/// resident system; travels with Extract/Install moves). Each failed
+/// escalation pushes the failure EMA up past the gate; each gated-off
+/// opportunity decays it back, so retries back off geometrically under
+/// repeated failure instead of re-factorizing on every queued solve,
+/// while the first attempt after a quarantine is always immediate
+/// (EMA starts at zero).
+#[derive(Debug, Default)]
+pub(crate) struct RecoveryGate {
+    /// EMA of recent escalation failures in `[0, 1)`.
+    ema: f64,
+}
+
+impl RecoveryGate {
+    /// Whether to attempt recovery at this dispatch opportunity. A
+    /// skipped opportunity decays the EMA so a later one passes.
+    fn should_attempt(&mut self, alpha: f64, gate: f64) -> bool {
+        if self.ema < gate {
+            true
+        } else {
+            self.ema *= 1.0 - alpha;
+            false
+        }
+    }
+
+    fn on_failure(&mut self, alpha: f64) {
+        self.ema = alpha + (1.0 - alpha) * self.ema;
+    }
+
+    fn on_success(&mut self) {
+        self.ema = 0.0;
+    }
+}
+
+/// Fault-tolerance knobs handed to each shard dispatcher (the copyable
+/// slice of `ServiceConfig` the supervision paths read per dispatch).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ShardPolicy {
+    /// Fail deadline-lane items whose deadline passed before dispatch
+    /// with [`Error::DeadlineExpired`] instead of solving them.
+    pub expire_deadlines: bool,
+    /// Quarantine a system whose refactor pivot-growth estimate exceeds
+    /// this (non-finite growth always quarantines).
+    pub pivot_growth_limit: f64,
+    /// EMA smoothing for the per-system [`RecoveryGate`].
+    pub recover_alpha: f64,
+    /// Failure-EMA threshold below which a recovery attempt is allowed.
+    pub recover_gate: f64,
+}
+
+/// The quarantine class of a numeric-failure error, if it has one.
+fn quarantine_reason(e: &Error) -> Option<QuarantineReason> {
+    match e {
+        Error::ZeroPivot { .. } => Some(QuarantineReason::ZeroPivot),
+        Error::StructurallySingular { .. } => Some(QuarantineReason::Singular),
+        _ => None,
+    }
 }
 
 /// One queued solve request.
@@ -110,6 +171,12 @@ pub(crate) struct ShardQueue {
     precision_fallbacks: AtomicU64,
     max_batch: AtomicUsize,
     max_tick_ns: AtomicU64,
+    panics_caught: AtomicU64,
+    quarantines: AtomicU64,
+    recovery_attempts: AtomicU64,
+    recoveries: AtomicU64,
+    expired: AtomicU64,
+    pub(crate) shed: AtomicU64,
 }
 
 impl ShardQueue {
@@ -133,6 +200,12 @@ impl ShardQueue {
             precision_fallbacks: AtomicU64::new(0),
             max_batch: AtomicUsize::new(0),
             max_tick_ns: AtomicU64::new(0),
+            panics_caught: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
+            recovery_attempts: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         }
     }
 
@@ -194,6 +267,12 @@ impl ShardQueue {
         Ok(())
     }
 
+    /// Currently queued jobs (solves + controls). Approximate by the
+    /// time the caller acts on it; good enough for load shedding.
+    pub fn depth(&self) -> usize {
+        lock_ignore_poison(&self.q).len()
+    }
+
     pub fn shutdown(&self) {
         let mut st = lock_ignore_poison(&self.q);
         st.shutdown = true;
@@ -210,6 +289,12 @@ impl ShardQueue {
         out.forwarded += self.forwarded.load(Ordering::Relaxed);
         out.refine_iters += self.refine_iters.load(Ordering::Relaxed);
         out.precision_fallbacks += self.precision_fallbacks.load(Ordering::Relaxed);
+        out.panics_caught += self.panics_caught.load(Ordering::Relaxed);
+        out.quarantines += self.quarantines.load(Ordering::Relaxed);
+        out.recovery_attempts += self.recovery_attempts.load(Ordering::Relaxed);
+        out.recoveries += self.recoveries.load(Ordering::Relaxed);
+        out.expired += self.expired.load(Ordering::Relaxed);
+        out.shed += self.shed.load(Ordering::Relaxed);
         out.max_batch = out.max_batch.max(self.max_batch.load(Ordering::Relaxed));
         let tick = Duration::from_nanos(self.max_tick_ns.load(Ordering::Relaxed));
         out.max_tick = out.max_tick.max(tick);
@@ -249,6 +334,23 @@ pub struct ServiceStats {
     /// Widest adaptive coalescing window any shard actually slept
     /// (zero with a static zero tick).
     pub max_tick: Duration,
+    /// Panics caught by shard supervision (the shard scrubbed, failed
+    /// the in-flight tickets with [`Error::ShardPanicked`], and kept
+    /// serving).
+    pub panics_caught: u64,
+    /// Healthy → quarantined transitions across all systems.
+    pub quarantines: u64,
+    /// Escalated (full re-pivot) recovery factorizations attempted.
+    pub recovery_attempts: u64,
+    /// Recovery attempts that restored a system to healthy.
+    pub recoveries: u64,
+    /// Deadline-lane requests failed with [`Error::DeadlineExpired`]
+    /// because their deadline passed before dispatch
+    /// (`ServiceConfig::expire_deadlines`).
+    pub expired: u64,
+    /// Bulk requests rejected at admission by load shedding
+    /// (`ServiceConfig::shed_depth`).
+    pub shed: u64,
 }
 
 impl ServiceStats {
@@ -290,6 +392,7 @@ pub(crate) struct ShardWorker {
     tick: AdaptiveTick,
     max_batch: usize,
     starvation_bound: usize,
+    policy: ShardPolicy,
     parked: Vec<ParkedJob>,
     /// Per-drain-cycle dispatch counts, folded into each system's EWMA.
     batch_counts: HashMap<u64, u64>,
@@ -303,6 +406,7 @@ impl ShardWorker {
         tick: AdaptiveTick,
         max_batch: usize,
         starvation_bound: usize,
+        policy: ShardPolicy,
     ) -> ShardWorker {
         ShardWorker {
             shard,
@@ -312,6 +416,7 @@ impl ShardWorker {
             tick,
             max_batch,
             starvation_bound,
+            policy,
             parked: Vec::new(),
             batch_counts: HashMap::new(),
         }
@@ -352,13 +457,18 @@ impl ShardWorker {
                         std::thread::sleep(window);
                         st = lock_ignore_poison(&self.queue.q);
                     }
-                    let solves = st.solves.drain_ordered(self.starvation_bound);
+                    let (solves, expired) = if self.policy.expire_deadlines {
+                        st.solves
+                            .drain_ordered_expiring(Instant::now(), self.starvation_bound)
+                    } else {
+                        (st.solves.drain_ordered(self.starvation_bound), Vec::new())
+                    };
                     let controls: Vec<(u64, Control)> = st.controls.drain(..).collect();
                     self.queue.space.notify_all();
-                    Some((solves, controls))
+                    Some((solves, expired, controls))
                 }
             };
-            let Some((solves, controls)) = drained else {
+            let Some((solves, expired, controls)) = drained else {
                 // Shutdown: anything still parked can never be satisfied
                 // (no more installs are coming) — fail it loudly rather
                 // than dropping the reply channel.
@@ -375,6 +485,16 @@ impl ShardWorker {
                 }
                 return;
             };
+            if !expired.is_empty() {
+                // stale deadline work: nobody benefits from solving it —
+                // fail the tickets without spending factor bandwidth
+                self.queue
+                    .expired
+                    .fetch_add(expired.len() as u64, Ordering::Relaxed);
+                for d in expired {
+                    let _ = d.item.tx.send(Err(Error::DeadlineExpired));
+                }
+            }
             let nsolves = solves.len();
             self.process(solves, controls, &mut xs);
             self.tick.on_drain(nsolves, self.max_batch);
@@ -434,13 +554,63 @@ impl ShardWorker {
         }
     }
 
-    /// Apply a refactor locally, or park/forward/fail it by the current
-    /// routing epoch when the system is not resident here.
+    /// Apply a refactor locally under shard supervision, or
+    /// park/forward/fail it by the current routing epoch when the system
+    /// is not resident here.
+    ///
+    /// Failure handling (the quarantine half of the fault model):
+    /// a numeric failure (`ZeroPivot` / `StructurallySingular`) leaves
+    /// the system on its previous values (the handle only commits the
+    /// new matrix on success) and quarantines it; a caught panic
+    /// quarantines it as `Panic` — the factors may be half-written; a
+    /// refactor that *succeeds* but whose pivot-growth estimate crosses
+    /// the policy limit commits the new values, acks the caller, and
+    /// quarantines as `PivotGrowth` (the stored pivot order has gone
+    /// rotten — queued solves must not trust it). Recovery is the gated
+    /// full re-pivot escalation in [`ShardWorker::check_health`].
     fn apply_refactor(&mut self, seq: u64, id: u64, a: Csr, tx: Reply) {
-        if let Some(s) = self.systems.get_mut(&id) {
-            let r = s.sys.refactor_matrix(a);
+        if self.systems.contains_key(&id) {
+            // a quarantined system recovers (or fails fast) before new
+            // values are replayed on its stored pivot order
+            if let Some(reason) = self.check_health(id) {
+                let _ = tx.send(Err(Error::Quarantined(reason.to_string())));
+                return;
+            }
+            let Some(s) = self.systems.get_mut(&id) else {
+                let _ = tx.send(Err(Error::Invalid(format!(
+                    "system sys#{id} is not registered (retired?)"
+                ))));
+                return;
+            };
             self.queue.refactors.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(r.map(|_| Vec::new()));
+            match catch_unwind(AssertUnwindSafe(|| s.sys.refactor_matrix(a))) {
+                Ok(Ok(())) => {
+                    let g = s.sys.factor_stats().pivot_growth;
+                    if !g.is_finite() || g > self.policy.pivot_growth_limit {
+                        if s.stats
+                            .set_health(Health::Quarantined(QuarantineReason::PivotGrowth))
+                        {
+                            self.queue.quarantines.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let _ = tx.send(Ok(Vec::new()));
+                }
+                Ok(Err(e)) => {
+                    if let Some(reason) = quarantine_reason(&e) {
+                        if s.stats.set_health(Health::Quarantined(reason)) {
+                            self.queue.quarantines.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let _ = tx.send(Err(e));
+                }
+                Err(_) => {
+                    self.queue.panics_caught.fetch_add(1, Ordering::Relaxed);
+                    if s.stats.set_health(Health::Quarantined(QuarantineReason::Panic)) {
+                        self.queue.quarantines.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = tx.send(Err(Error::ShardPanicked { shard: self.shard }));
+                }
+            }
             return;
         }
         let target = {
@@ -507,7 +677,12 @@ impl ShardWorker {
             }
         }
         for id in order {
-            let group = groups.remove(&id).expect("grouped above");
+            // a racing Extract between grouping and dispatch must not
+            // panic the dispatcher — an absent group simply has nothing
+            // left to do
+            let Some(group) = groups.remove(&id) else {
+                continue;
+            };
             self.dispatch_group(id, group, xs);
         }
     }
@@ -543,15 +718,87 @@ impl ShardWorker {
         }
     }
 
+    /// The dispatch-time health gate: `None` when the system may serve
+    /// (healthy, or just recovered), `Some(reason)` when it must fail
+    /// fast. A quarantined system attempts the **escalated recovery** —
+    /// a full re-pivot [`LinearSystem::factorize`] of its current
+    /// values, itself supervised — when the EMA gate allows; success
+    /// restores `Healthy` with factors bit-identical to a clean
+    /// full-pivot factorization of those values. Recovery runs here, at
+    /// dispatch time, rather than at admission: rejecting at admission
+    /// would starve the system of the very opportunities recovery needs.
+    fn check_health(&mut self, id: u64) -> Option<QuarantineReason> {
+        let ShardPolicy {
+            pivot_growth_limit,
+            recover_alpha,
+            recover_gate,
+            ..
+        } = self.policy;
+        let s = self.systems.get_mut(&id)?;
+        let Health::Quarantined(mut reason) = s.stats.health() else {
+            return None;
+        };
+        if !s.gate.should_attempt(recover_alpha, recover_gate) {
+            return Some(reason);
+        }
+        self.queue.recovery_attempts.fetch_add(1, Ordering::Relaxed);
+        let ok = match catch_unwind(AssertUnwindSafe(|| s.sys.factorize())) {
+            Ok(Ok(())) => {
+                let g = s.sys.factor_stats().pivot_growth;
+                if !g.is_finite() || g > pivot_growth_limit {
+                    reason = QuarantineReason::PivotGrowth;
+                    false
+                } else {
+                    true
+                }
+            }
+            Ok(Err(e)) => {
+                if let Some(r) = quarantine_reason(&e) {
+                    reason = r;
+                }
+                false
+            }
+            Err(_) => {
+                self.queue.panics_caught.fetch_add(1, Ordering::Relaxed);
+                reason = QuarantineReason::Panic;
+                false
+            }
+        };
+        s.stats.note_recovery_attempt(ok);
+        if ok {
+            self.queue.recoveries.fetch_add(1, Ordering::Relaxed);
+            s.stats.set_health(Health::Healthy);
+            s.gate.on_success();
+            None
+        } else {
+            s.stats.set_health(Health::Quarantined(reason));
+            s.gate.on_failure(recover_alpha);
+            Some(reason)
+        }
+    }
+
     /// Solve one system's queued group as block dispatches of at most
     /// `max_batch` columns, replying through the per-request channels.
     /// Disconnected receivers (abandoned tickets) are ignored.
+    ///
+    /// Every block runs under `catch_unwind` supervision: a panic fails
+    /// that block's tickets with [`Error::ShardPanicked`] (the engine
+    /// scrubbed its worker scratch on the unwind path) and the
+    /// dispatcher keeps serving — the system stays healthy, since solves
+    /// never mutate the factors.
     fn dispatch_group(
         &mut self,
         id: u64,
         mut group: Vec<(Vec<f64>, Reply)>,
         xs: &mut Vec<Vec<f64>>,
     ) {
+        if let Some(reason) = self.check_health(id) {
+            let msg = reason.to_string();
+            for (_, tx) in group {
+                let _ = tx.send(Err(Error::Quarantined(msg.clone())));
+            }
+            return;
+        }
         while !group.is_empty() {
             let take = group.len().min(self.max_batch);
             let mut bs = Vec::with_capacity(take);
@@ -560,12 +807,17 @@ impl ShardWorker {
                 bs.push(b);
                 txs.push(tx);
             }
-            let res = {
-                let s = self.systems.get(&id).expect("dispatch_group on resident system");
-                s.sys.solve_many_into(&bs, xs)
+            let Some(s) = self.systems.get(&id) else {
+                // a retire raced the drain: fail the tickets the way a
+                // route miss would, instead of panicking the dispatcher
+                let e = Error::Invalid(format!("system sys#{id} is not registered (retired?)"));
+                for tx in txs.into_iter().chain(group.drain(..).map(|(_, tx)| tx)) {
+                    let _ = tx.send(Err(e.clone()));
+                }
+                return;
             };
-            match res {
-                Ok(st) => {
+            match catch_unwind(AssertUnwindSafe(|| s.sys.solve_many_into(&bs, xs))) {
+                Ok(Ok(st)) => {
                     let k = bs.len() as u64;
                     self.queue.dispatches.fetch_add(1, Ordering::Relaxed);
                     self.queue.rhs_solved.fetch_add(k, Ordering::Relaxed);
@@ -584,9 +836,15 @@ impl ShardWorker {
                         let _ = tx.send(Ok(std::mem::take(&mut xs[q])));
                     }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     for tx in txs {
                         let _ = tx.send(Err(e.clone()));
+                    }
+                }
+                Err(_) => {
+                    self.queue.panics_caught.fetch_add(1, Ordering::Relaxed);
+                    for tx in txs {
+                        let _ = tx.send(Err(Error::ShardPanicked { shard: self.shard }));
                     }
                 }
             }

@@ -1,0 +1,110 @@
+//! Poisoned-handle recovery through the C ABI: a panic injected inside
+//! `hylu_factorize` (via `HYLU_FAULT`) is caught at the boundary with
+//! `HYLU_ERR_PANIC`, poisons the handle so every later call fails
+//! loudly with `HYLU_ERR_INVALID`, and a fresh `hylu_analyze` fully
+//! resets it. A panic injected in `hylu_solve` does NOT poison: the
+//! factors are untouched, so the very next solve succeeds.
+//!
+//! `HYLU_FAULT` is process-global, so this scenario owns its test
+//! binary (same isolation rationale as `probe_retier`); both phases run
+//! inside one `#[test]` because the default parallel test runner would
+//! otherwise race the variable. The variable is set only across the
+//! `hylu_create` call that should absorb it (fault plans are sampled
+//! once at solver construction) and removed immediately after.
+//!
+//! Built only with `--features ffi` (see `[[test]]` in Cargo.toml).
+
+use std::ffi::CStr;
+
+use hylu::ffi::{
+    hylu_analyze, hylu_create, hylu_factorize, hylu_free, hylu_last_error, hylu_n, hylu_nnz,
+    hylu_refactorize, hylu_solve, HyluHandle, HYLU_ERR_INVALID, HYLU_ERR_PANIC, HYLU_OK,
+};
+use hylu::prelude::*;
+use hylu::sparse::gen;
+
+/// A matrix in the raw arrays a C caller would hold.
+struct RawCsr {
+    n: i64,
+    ap: Vec<i64>,
+    ai: Vec<i64>,
+    ax: Vec<f64>,
+}
+
+fn raw(a: &Csr) -> RawCsr {
+    RawCsr {
+        n: a.n as i64,
+        ap: a.indptr.iter().map(|&p| p as i64).collect(),
+        ai: a.indices.iter().map(|&j| j as i64).collect(),
+        ax: a.vals.clone(),
+    }
+}
+
+unsafe fn last_msg(h: *mut HyluHandle) -> String {
+    CStr::from_ptr(hylu_last_error(h)).to_str().unwrap().to_string()
+}
+
+#[test]
+fn injected_panics_poison_factor_but_not_solve_and_analyze_resets() {
+    let a = gen::grid2d(10, 10);
+    let b = gen::rhs_for_ones(&a);
+    let m = raw(&a);
+
+    unsafe {
+        // ---- phase 1: panic during factorization poisons the handle ----
+        // One injected factor panic (limit 1), then the plan is spent.
+        std::env::set_var("HYLU_FAULT", "1:1:panic-factor:1");
+        let mut h: *mut HyluHandle = std::ptr::null_mut();
+        assert_eq!(hylu_create(1, 1, &mut h), HYLU_OK);
+        std::env::remove_var("HYLU_FAULT");
+
+        assert_eq!(
+            hylu_analyze(h, m.n, m.ap.as_ptr(), m.ai.as_ptr(), m.ax.as_ptr()),
+            HYLU_OK
+        );
+        assert_eq!(hylu_factorize(h), HYLU_ERR_PANIC);
+        let msg = last_msg(h);
+        assert!(msg.contains("poisoned"), "unhelpful message: {msg}");
+
+        // everything fails loudly — but safely — until a reset
+        assert_eq!(hylu_factorize(h), HYLU_ERR_INVALID);
+        assert_eq!(hylu_refactorize(h, m.ax.as_ptr()), HYLU_ERR_INVALID);
+        let mut x = vec![0.0f64; a.n];
+        assert_eq!(hylu_solve(h, b.as_ptr(), x.as_mut_ptr()), HYLU_ERR_INVALID);
+        let msg = last_msg(h);
+        assert!(msg.contains("hylu_analyze"), "message must name the reset path: {msg}");
+        assert_eq!(hylu_n(h), 0);
+        assert_eq!(hylu_nnz(h), 0);
+
+        // a fresh analyze rebuilds the state; the spent plan never fires
+        // again, so the full lifecycle completes and solves correctly
+        assert_eq!(
+            hylu_analyze(h, m.n, m.ap.as_ptr(), m.ai.as_ptr(), m.ax.as_ptr()),
+            HYLU_OK
+        );
+        assert_eq!(hylu_factorize(h), HYLU_OK);
+        assert_eq!(hylu_solve(h, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+        assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-7));
+        hylu_free(h);
+
+        // ---- phase 2: panic during solve leaves the handle serving ----
+        std::env::set_var("HYLU_FAULT", "1:1:panic-solve:1");
+        let mut h2: *mut HyluHandle = std::ptr::null_mut();
+        assert_eq!(hylu_create(1, 1, &mut h2), HYLU_OK);
+        std::env::remove_var("HYLU_FAULT");
+
+        assert_eq!(
+            hylu_analyze(h2, m.n, m.ap.as_ptr(), m.ai.as_ptr(), m.ax.as_ptr()),
+            HYLU_OK
+        );
+        assert_eq!(hylu_factorize(h2), HYLU_OK);
+        let mut x = vec![0.0f64; a.n];
+        assert_eq!(hylu_solve(h2, b.as_ptr(), x.as_mut_ptr()), HYLU_ERR_PANIC);
+        let msg = CStr::from_ptr(hylu_last_error(h2)).to_str().unwrap();
+        assert!(msg.contains("factors unchanged"), "unhelpful message: {msg}");
+        // factors untouched: the next solve (plan spent) succeeds
+        assert_eq!(hylu_solve(h2, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
+        assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-7));
+        hylu_free(h2);
+    }
+}

@@ -9,9 +9,10 @@ use std::ffi::CStr;
 
 use hylu::ffi::{
     hylu_analyze, hylu_create, hylu_factorize, hylu_free, hylu_last_error, hylu_n, hylu_nnz,
-    hylu_refactorize, hylu_service_create, hylu_service_free, hylu_service_last_error,
-    hylu_service_rebalance, hylu_service_register, hylu_service_retire, hylu_service_solve,
-    hylu_solve, hylu_solve_many, HyluHandle, HyluService, HYLU_ERR_INVALID, HYLU_OK,
+    hylu_refactorize, hylu_service_create, hylu_service_free, hylu_service_health,
+    hylu_service_last_error, hylu_service_rebalance, hylu_service_register, hylu_service_retire,
+    hylu_service_solve, hylu_solve, hylu_solve_many, HyluHandle, HyluService, HYLU_ERR_INVALID,
+    HYLU_OK,
 };
 use hylu::prelude::*;
 use hylu::sparse::gen;
@@ -191,6 +192,11 @@ fn ffi_service_register_retire_roundtrip() {
         assert_eq!(hylu_service_rebalance(s, &mut moved), HYLU_OK);
         assert!(moved >= 0);
 
+        // both systems report healthy (HYLU_HEALTH_OK == 0)
+        assert_eq!(hylu_service_health(s, id0), 0);
+        assert_eq!(hylu_service_health(s, id1), 0);
+        assert_eq!(hylu_service_health(std::ptr::null(), id0), -1);
+
         // retire: the id is gone for good, with a readable message
         assert_eq!(hylu_service_retire(s, id0), HYLU_OK);
         assert_eq!(
@@ -200,6 +206,7 @@ fn ffi_service_register_retire_roundtrip() {
         let msg = CStr::from_ptr(hylu_service_last_error(s)).to_str().unwrap();
         assert!(msg.contains("unknown system"), "unhelpful message: {msg}");
         assert_eq!(hylu_service_retire(s, id0), HYLU_ERR_INVALID);
+        assert_eq!(hylu_service_health(s, id0), -1);
         // the surviving system still serves
         assert_eq!(hylu_service_solve(s, id1, b.as_ptr(), x.as_mut_ptr()), HYLU_OK);
 

@@ -26,13 +26,28 @@
 //!
 //! The shard count comes from `HYLU_TEST_SHARDS` when set (the CI
 //! matrix runs {1, 4}); otherwise both are exercised in-process.
+//!
+//! The **chaos leg** re-runs the soak shape under a deterministic
+//! [`FaultPlan`] (the `HYLU_FAULT` env plan when set — the CI chaos
+//! job — otherwise a built-in panic/zero-pivot mix): dispatchers absorb
+//! injected panics, failed refactors quarantine their system, owners
+//! retry until the escalated full-pivot recovery restores it, and every
+//! served solution is asserted bitwise against a *multi-candidate*
+//! oracle — the pure refactor chain plus every chain restarted by a
+//! full re-pivot recovery at some earlier version (recovery refactors
+//! the current values from a fresh pivot search, so later refactors
+//! continue from that pivot order). The clean soak's oracle and system
+//! solvers are `pin_fault()`-ed so both legs run under a chaos
+//! environment.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hylu::prelude::*;
 use hylu::sparse::gen;
 use hylu::testutil::Prng;
+use hylu::Error;
 
 const STABLE_SYSTEMS: usize = 4;
 const VERSIONS: usize = 4; // value versions per stable system
@@ -60,7 +75,8 @@ fn build_oracle(base: &Csr) -> Oracle {
     let rhs: Vec<Vec<f64>> = (0..STABLE_SYSTEMS)
         .map(|_| (0..base.n).map(|_| rng.normal()).collect())
         .collect();
-    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    // pinned: the oracle must stay fault-free under a chaos environment
+    let solver = SolverBuilder::new().threads(1).pin_fault().build().unwrap();
     let mut expected = Vec::with_capacity(STABLE_SYSTEMS);
     for s in 0..STABLE_SYSTEMS {
         let mut a = base.clone();
@@ -116,7 +132,9 @@ fn soak_once(base: &Csr, oracle: &Oracle, shards: usize) {
     // dispatch is deterministic), ids recorded per slot
     let mut ids = Vec::with_capacity(STABLE_SYSTEMS);
     for s in 0..STABLE_SYSTEMS {
-        let solver = SolverBuilder::new().threads(1).build().unwrap();
+        // pinned: the clean soak asserts exact bits, so an HYLU_FAULT
+        // env plan (the CI chaos job) must not reach these systems
+        let solver = SolverBuilder::new().threads(1).pin_fault().build().unwrap();
         let mut a = base.clone();
         a.vals = version_vals(base, s, 0);
         let sys = solver.analyze(&a).unwrap().factor().unwrap();
@@ -166,7 +184,7 @@ fn soak_once(base: &Csr, oracle: &Oracle, shards: usize) {
         {
             let (service, ids) = (&service, &ids);
             sc.spawn(move || {
-                let chaos_solver = SolverBuilder::new().threads(1).build().unwrap();
+                let chaos_solver = SolverBuilder::new().threads(1).pin_fault().build().unwrap();
                 let b = gen::rhs_for_ones(base);
                 for cycle in 0..CHAOS_CYCLES {
                     // register a transient system, prove it serves
@@ -232,4 +250,297 @@ fn soak_once(base: &Csr, oracle: &Oracle, shards: usize) {
         let x = t.wait().unwrap();
         assert_eq!(x, oracle.expected[0][VERSIONS - 1], "drained after drop");
     }
+}
+
+// ---------------------------------------------------------------------
+// Chaos leg: the same soak shape under deterministic fault injection.
+// ---------------------------------------------------------------------
+
+/// All bitwise-legal solutions per `(system, version)` under fault
+/// recovery. `candidates[s][v]` holds the pure refactor-chain solution
+/// plus the solution of every chain restarted by a recovery — a full
+/// re-pivot factorization of the version-`p` values for some `p <= v`,
+/// after which later refactors continue from that fresh pivot order.
+/// Both the initial `factor()` and the recovery `factorize()` are full
+/// pivot-searching factorizations of (analysis, current values), so the
+/// state after any *sequence* of recoveries collapses to the chain
+/// restarted at the last one — the candidate set is complete.
+struct ChaosOracle {
+    candidates: Vec<Vec<Vec<Vec<f64>>>>,
+    rhs: Vec<Vec<f64>>,
+}
+
+fn push_unique(set: &mut Vec<Vec<f64>>, x: Vec<f64>) {
+    if !set.iter().any(|e| e == &x) {
+        set.push(x);
+    }
+}
+
+fn build_chaos_oracle(base: &Csr) -> ChaosOracle {
+    let mut rng = Prng::new(0xC4);
+    let rhs: Vec<Vec<f64>> = (0..STABLE_SYSTEMS)
+        .map(|_| (0..base.n).map(|_| rng.normal()).collect())
+        .collect();
+    // pinned: the oracle must stay fault-free under a chaos environment
+    let solver = SolverBuilder::new().threads(1).pin_fault().build().unwrap();
+    let mut candidates = vec![vec![Vec::new(); VERSIONS]; STABLE_SYSTEMS];
+    for s in 0..STABLE_SYSTEMS {
+        let mut a0 = base.clone();
+        a0.vals = version_vals(base, s, 0);
+        // the pure refactor chain (no recovery ever fired)
+        let mut sys = solver.analyze(&a0).unwrap().factor().unwrap();
+        push_unique(&mut candidates[s][0], sys.solve(&rhs[s]).unwrap());
+        for v in 1..VERSIONS {
+            sys.refactor(&version_vals(base, s, v)).unwrap();
+            push_unique(&mut candidates[s][v], sys.solve(&rhs[s]).unwrap());
+        }
+        // chains restarted by a recovery escalation at version p
+        for p in 0..VERSIONS {
+            let mut sys = solver.analyze(&a0).unwrap().factor().unwrap();
+            for v in 1..=p {
+                sys.refactor(&version_vals(base, s, v)).unwrap();
+            }
+            sys.factorize().unwrap();
+            push_unique(&mut candidates[s][p], sys.solve(&rhs[s]).unwrap());
+            for v in (p + 1)..VERSIONS {
+                sys.refactor(&version_vals(base, s, v)).unwrap();
+                push_unique(&mut candidates[s][v], sys.solve(&rhs[s]).unwrap());
+            }
+        }
+    }
+    ChaosOracle { candidates, rhs }
+}
+
+#[test]
+fn chaos_soak_supervision_quarantine_recovery() {
+    let base = gen::power_network(220, 5);
+    let oracle = build_chaos_oracle(&base);
+    // The HYLU_FAULT plan (the CI chaos matrix) wins; otherwise a
+    // built-in panic/zero-pivot mix. Period 5 clears the 4 registration
+    // factorizations, which run on the test thread outside shard
+    // supervision (and registration retries through faults regardless).
+    let plan = FaultPlan::from_env().unwrap_or_else(|| {
+        Arc::new(FaultPlan::new(
+            42,
+            5,
+            vec![Fault::PanicInFactor, Fault::PanicInSolve, Fault::ForceZeroPivot],
+        ))
+    });
+    for shards in shard_counts() {
+        chaos_once(&base, &oracle, shards, &plan);
+    }
+}
+
+fn chaos_once(base: &Csr, oracle: &ChaosOracle, shards: usize, plan: &Arc<FaultPlan>) {
+    let mut cfg = soak_cfg(shards);
+    cfg.expire_deadlines = true;
+    let service = SolverService::with_shards(cfg).unwrap();
+    let mut ids = Vec::with_capacity(STABLE_SYSTEMS);
+    for s in 0..STABLE_SYSTEMS {
+        let solver = SolverBuilder::new()
+            .threads(1)
+            .fault(plan.clone())
+            .build()
+            .unwrap();
+        let mut a = base.clone();
+        a.vals = version_vals(base, s, 0);
+        // registration factors run here, outside shard supervision:
+        // contain and retry whatever the plan fires at these steps
+        let mut tries = 0;
+        let sys = loop {
+            let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                solver.analyze(&a).and_then(|sys| sys.factor())
+            }));
+            match attempt {
+                Ok(Ok(sys)) => break sys,
+                _ => {
+                    tries += 1;
+                    assert!(tries < 200, "registration never cleared the fault plan");
+                }
+            }
+        };
+        ids.push(service.register(sys).unwrap());
+    }
+
+    let submitted = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+
+    std::thread::scope(|sc| {
+        for s in 0..STABLE_SYSTEMS {
+            let (service, oracle, ids) = (&service, oracle, &ids);
+            let (submitted, completed, failed) = (&submitted, &completed, &failed);
+            sc.spawn(move || {
+                let id = ids[s];
+                let mut version = 0usize;
+                for round in 0..ROUNDS {
+                    if round > 0 && round % (ROUNDS / VERSIONS) == 0 && version + 1 < VERSIONS {
+                        // the version advances ONLY on refactor Ok: a
+                        // failed attempt (injected zero pivot / panic,
+                        // or fail-fast while quarantined) leaves the
+                        // previous values resident
+                        let mut tries = 0;
+                        loop {
+                            let mut a = base.clone();
+                            a.vals = version_vals(base, s, version + 1);
+                            if service.refactor(id, a).is_ok() {
+                                break;
+                            }
+                            tries += 1;
+                            assert!(tries < 500, "system {s} refactor never recovered");
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        version += 1;
+                    }
+                    let prio = if round % 3 == 0 {
+                        Priority::Deadline(Instant::now() + Duration::from_millis(50))
+                    } else {
+                        Priority::Bulk
+                    };
+                    // ride through injected failures: every ticket still
+                    // resolves exactly once (counted), and retries keep
+                    // soliciting the shard until supervision + escalated
+                    // recovery let the solve through again
+                    let mut tries = 0;
+                    let x = loop {
+                        submitted.fetch_add(1, Ordering::Relaxed);
+                        match service.solve_with(id, oracle.rhs[s].clone(), prio) {
+                            Ok(x) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                                break x;
+                            }
+                            Err(_) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                                failed.fetch_add(1, Ordering::Relaxed);
+                                tries += 1;
+                                assert!(tries < 500, "system {s} solve never recovered");
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                    };
+                    assert!(
+                        oracle.candidates[s][version].iter().any(|e| e == &x),
+                        "system {s} round {round} version {version}: served bits match \
+                         neither the refactor chain nor any recovery chain (shards {shards})"
+                    );
+                }
+            });
+        }
+    });
+
+    // a deadline already past at submission must expire at dispatch,
+    // not solve (expire_deadlines is on for the chaos leg)
+    submitted.fetch_add(1, Ordering::Relaxed);
+    let probe = service
+        .submit_with(
+            ids[0],
+            oracle.rhs[0].clone(),
+            Priority::Deadline(Instant::now() - Duration::from_millis(2)),
+        )
+        .unwrap();
+    match probe.wait() {
+        Err(Error::DeadlineExpired) => {
+            completed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => panic!("expired probe resolved with the wrong error: {e}"),
+        Ok(_) => panic!("expired probe solved instead of expiring"),
+    }
+
+    // every quarantined system must serve again, and the post-recovery
+    // solve must be bit-identical to a clean full-pivot chain (a
+    // candidate at the final version)
+    for (s, id) in ids.iter().enumerate() {
+        let mut tries = 0;
+        let x = loop {
+            submitted.fetch_add(1, Ordering::Relaxed);
+            match service.solve(*id, oracle.rhs[s].clone()) {
+                Ok(x) => {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    break x;
+                }
+                Err(_) => {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    tries += 1;
+                    assert!(tries < 500, "system {s} never recovered");
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        };
+        assert!(
+            oracle.candidates[s][VERSIONS - 1].iter().any(|e| e == &x),
+            "post-recovery solve, system {s} (shards {shards})"
+        );
+        assert!(
+            matches!(service.health(*id), Some(Health::Healthy)),
+            "system {s} healthy at exit (shards {shards})"
+        );
+    }
+
+    // zero lost or double-completed tickets, even through panics
+    assert_eq!(
+        submitted.load(Ordering::Relaxed),
+        completed.load(Ordering::Relaxed),
+        "every accepted ticket resolves exactly once (shards {shards})"
+    );
+    let st = service.stats();
+    assert!(plan.injected() >= 1, "the fault plan actually fired");
+    assert!(
+        st.panics_caught >= 1,
+        "shard supervision caught at least one injected panic (shards {shards})"
+    );
+    assert!(
+        st.quarantines >= 1,
+        "at least one system was quarantined (shards {shards})"
+    );
+    assert!(
+        st.recoveries >= 1,
+        "at least one quarantine recovered via escalation (shards {shards})"
+    );
+    assert!(st.expired >= 1, "the stale deadline probe expired");
+    drop(service);
+}
+
+#[test]
+fn shedding_rejects_saturated_bulk_admissions() {
+    // a slow-kernel plan stalls the dispatcher mid-solve, so queue
+    // depth builds deterministically behind it
+    let plan = Arc::new(FaultPlan::new(1, 1, vec![Fault::SlowKernel(20_000)]));
+    let mut cfg = soak_cfg(1);
+    cfg.shed_depth = 2;
+    let service = SolverService::with_shards(cfg).unwrap();
+    let base = gen::power_network(120, 3);
+    let solver = SolverBuilder::new().threads(1).fault(plan).build().unwrap();
+    let sys = solver.analyze(&base).unwrap().factor().unwrap();
+    let id = service.register(sys).unwrap();
+    let b = gen::rhs_for_ones(&base);
+
+    // the first submission is drained immediately; the dispatcher then
+    // sleeps ~20ms inside the injected slow kernel while the following
+    // submissions pile up behind it
+    let mut kept = vec![service.submit(id, b.clone()).unwrap()];
+    std::thread::sleep(Duration::from_millis(5));
+    let mut shed = 0usize;
+    for _ in 0..8 {
+        match service.submit(id, b.clone()) {
+            Ok(t) => kept.push(t),
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("shedding bulk load"),
+                    "unexpected admission error: {e}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed >= 1, "bulk admissions shed at depth >= shed_depth");
+    // deadline-lane admissions are never shed — they ride backpressure
+    kept.push(
+        service
+            .submit_with(id, b.clone(), Priority::Deadline(Instant::now()))
+            .unwrap(),
+    );
+    for t in kept {
+        t.wait().unwrap();
+    }
+    assert!(service.stats().shed >= 1, "the shed counter recorded it");
 }
