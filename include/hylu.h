@@ -122,6 +122,18 @@ int32_t hylu_factorize(hylu_handle h);
  * search — the repeated-solve fast path). */
 int32_t hylu_refactorize(hylu_handle h, const double *ax);
 
+/* Re-analyze with a matrix whose PATTERN may differ (dynamic-topology
+ * step: circuit element stamped in or out). The incremental path reuses
+ * the handle's engine, arenas, and ordering seeds; an unchanged pattern
+ * reuses the symbolic factorization and tuned kernel plan outright, and
+ * a local pattern edit patches the symbolic DAG incrementally —
+ * bit-identical to a cold hylu_analyze either way. The system is
+ * refactorized before returning, so the handle stays solvable; on
+ * failure the previous matrix and factors are kept. Same CSR array
+ * contract as hylu_analyze; requires a factorized handle. */
+int32_t hylu_reanalyze(hylu_handle h, int64_t n, const int64_t *ap,
+                       const int64_t *ai, const double *ax);
+
 /* Solve A x = b (length-n arrays; iterative refinement is automatic). */
 int32_t hylu_solve(hylu_handle h, const double *b, double *x);
 

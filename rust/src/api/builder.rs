@@ -158,6 +158,36 @@ impl SolverBuilder {
         self
     }
 
+    /// Delta-patch budget for `reanalyze`: patch the symbolic DAG
+    /// incrementally when at most this fraction of permuted rows changed
+    /// structure; re-analyze in full beyond it (bit-identical either
+    /// way). 0 disables patching.
+    pub fn reanalyze_delta_frac(mut self, frac: f64) -> SolverBuilder {
+        self.cfg.reanalyze_delta_frac = frac.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Enable the pivot-stability escalation controller on the
+    /// repeated-refactor path: cheap replay while pivot growth is
+    /// stable, a secondary within-supernode-block reordering pass when
+    /// the growth EMA trends up, and a full re-pivoting factorization
+    /// past the hard threshold. Overridable process-wide via the
+    /// `HYLU_ADAPTIVE` env var (`0`/`1`).
+    pub fn adaptive_refactor(mut self, on: bool) -> SolverBuilder {
+        self.cfg.adaptive_refactor = on;
+        self
+    }
+
+    /// Escalation thresholds for the adaptive refactor path: fast-EMA
+    /// pivot growth at which a replay promotes to the secondary reorder
+    /// pass, and the hard growth level that forces a full re-pivoting
+    /// factorization.
+    pub fn escalation_thresholds(mut self, reorder: f64, repivot: f64) -> SolverBuilder {
+        self.cfg.escalate_reorder_growth = reorder;
+        self.cfg.escalate_repivot_growth = repivot;
+        self
+    }
+
     /// Route large sup-sup GEMMs through the XLA/PJRT AOT artifacts in
     /// `artifacts_dir` (ablation path; the native microkernel is
     /// default).

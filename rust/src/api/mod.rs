@@ -43,8 +43,8 @@ use std::marker::PhantomData;
 use std::sync::Arc;
 
 use crate::coordinator::{
-    Analysis, Factorization, FactorStats, Precision, RefineParams, Solver as Core, SolveStats,
-    SolverConfig, SymbolicStats,
+    Analysis, EscalationController, Factorization, FactorStats, Precision, ReanalyzeKind,
+    RefactorTier, RefineParams, Solver as Core, SolveStats, SolverConfig, SymbolicStats,
 };
 use crate::exec::Engine;
 use crate::sparse::csr::Csr;
@@ -132,6 +132,7 @@ impl Solver {
             a,
             an,
             f: None,
+            esc: None,
             _state: PhantomData,
         })
     }
@@ -159,6 +160,9 @@ pub struct LinearSystem<S: State> {
     a: Csr,
     an: Analysis,
     f: Option<Factorization>,
+    /// Pivot-stability escalation state for the adaptive refactor path
+    /// (`None` unless [`SolverConfig::adaptive_refactor`] is on).
+    esc: Option<EscalationController>,
     _state: PhantomData<S>,
 }
 
@@ -199,6 +203,13 @@ impl<S: State> LinearSystem<S> {
     pub fn symbolic_stats(&self) -> &SymbolicStats {
         &self.an.stats
     }
+
+    /// How the owned analysis was produced: `None` for a cold
+    /// [`Solver::analyze`], `Some(kind)` after a `reanalyze` (warm reuse,
+    /// delta patch, or full fallback).
+    pub fn reanalysis_kind(&self) -> Option<ReanalyzeKind> {
+        self.an.stats.reanalysis
+    }
 }
 
 impl LinearSystem<Analyzed> {
@@ -206,11 +217,21 @@ impl LinearSystem<Analyzed> {
     /// the analyzed handle into a solvable one.
     pub fn factor(self) -> Result<LinearSystem<Factored>> {
         let f = self.core.factor_core(&self.a, &self.an)?;
+        let cfg = &self.core.cfg;
+        let esc = if cfg.adaptive_effective() {
+            Some(EscalationController::new(
+                cfg.escalate_reorder_growth,
+                cfg.escalate_repivot_growth,
+            ))
+        } else {
+            None
+        };
         Ok(LinearSystem {
             core: self.core,
             a: self.a,
             an: self.an,
             f: Some(f),
+            esc,
             _state: PhantomData,
         })
     }
@@ -272,8 +293,8 @@ impl LinearSystem<Factored> {
             )));
         }
         self.a.vals.copy_from_slice(new_vals);
-        self.core
-            .refactor_core(&self.a, &self.an, self.f.as_mut().expect("factored"))
+        let tier = self.next_tier();
+        self.refactor_at_tier(tier)
     }
 
     /// [`LinearSystem::refactor`] from a whole same-pattern matrix (any
@@ -282,9 +303,125 @@ impl LinearSystem<Factored> {
     /// one.
     pub fn refactor_matrix<M: MatrixInput>(&mut self, m: M) -> Result<()> {
         let a = m.into_csr()?;
-        self.core
-            .refactor_core(&a, &self.an, self.f.as_mut().expect("factored"))?;
+        let tier = self.next_tier();
+        match tier {
+            RefactorTier::Repivot => {
+                let f = self.core.factor_core(&a, &self.an)?;
+                self.f = Some(f);
+                if let Some(esc) = self.esc.as_mut() {
+                    esc.reset();
+                }
+            }
+            _ => {
+                self.core.refactor_core_tiered(
+                    &a,
+                    &self.an,
+                    self.f.as_mut().expect("factored"),
+                    tier == RefactorTier::Reorder,
+                )?;
+            }
+        }
         self.a = a;
+        Ok(())
+    }
+
+    /// Pick the tier for the refactorization about to run: always
+    /// [`RefactorTier::Replay`] without the escalation controller;
+    /// otherwise the controller decides from the last factorization's
+    /// pivot growth.
+    fn next_tier(&mut self) -> RefactorTier {
+        let growth = self.fac().stats.pivot_growth;
+        match self.esc.as_mut() {
+            Some(esc) => esc.decide(growth),
+            None => RefactorTier::Replay,
+        }
+    }
+
+    fn refactor_at_tier(&mut self, tier: RefactorTier) -> Result<()> {
+        match tier {
+            RefactorTier::Replay => {
+                self.core
+                    .refactor_core(&self.a, &self.an, self.f.as_mut().expect("factored"))
+            }
+            RefactorTier::Reorder => self.core.refactor_core_tiered(
+                &self.a,
+                &self.an,
+                self.f.as_mut().expect("factored"),
+                true,
+            ),
+            RefactorTier::Repivot => {
+                self.f = Some(self.core.factor_core(&self.a, &self.an)?);
+                if let Some(esc) = self.esc.as_mut() {
+                    esc.reset();
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The escalation controller driving the adaptive refactor path
+    /// (`None` unless [`SolverConfig::adaptive_refactor`] is enabled on
+    /// this handle's solver). Exposes the EMA state and the
+    /// replay/reorder/repivot decision counters.
+    pub fn escalation(&self) -> Option<&EscalationController> {
+        self.esc.as_ref()
+    }
+
+    /// Incremental re-analysis: consume this factored handle and return
+    /// an analyzed one for (possibly pattern-changed) `m`, reusing the
+    /// engine, worker pool, scratch arenas, and — depending on how far
+    /// the pattern moved — the cached permutations, symbolic
+    /// factorization, execution plan, and tuned kernel plan. See
+    /// [`ReanalyzeKind`] for the tiers; the produced analysis is
+    /// bit-identical to what a cold analysis pipeline run under the same
+    /// cached permutations would produce.
+    ///
+    /// The factors are dropped (the pattern may have changed under
+    /// them). On error the handle is lost too — callers that need the
+    /// old system to survive a failed update should use
+    /// [`LinearSystem::reanalyze_matrix`] instead.
+    ///
+    /// ```
+    /// use hylu::prelude::*;
+    /// let a = hylu::sparse::gen::grid2d(6, 6);
+    /// let solver = SolverBuilder::new().repeated().threads(1).build().unwrap();
+    /// let system = solver.analyze(&a).unwrap().factor().unwrap();
+    /// // same pattern → warm re-analysis, everything symbolic reused
+    /// let system = system.reanalyze(&a).unwrap().factor().unwrap();
+    /// let b = hylu::sparse::gen::rhs_for_ones(&a);
+    /// let x = system.solve(&b).unwrap();
+    /// assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-8));
+    /// ```
+    pub fn reanalyze<M: MatrixInput>(self, m: M) -> Result<LinearSystem<Analyzed>> {
+        let a = m.into_csr()?;
+        let an = self.core.reanalyze_core(&a, &self.an)?;
+        Ok(LinearSystem {
+            core: self.core,
+            a,
+            an,
+            f: None,
+            esc: None,
+            _state: PhantomData,
+        })
+    }
+
+    /// In-place incremental re-analysis + factorization: ingest `m`,
+    /// re-analyze against the cached analysis (warm / delta-patched /
+    /// full, as [`LinearSystem::reanalyze`]), factor the result, and
+    /// commit — all behind `&mut self`, so the handle stays `Factored`
+    /// throughout. **Commit-on-success**: any failure leaves the old
+    /// matrix, analysis, and factors fully usable. This is the primitive
+    /// the service's live-reanalyze control rides on.
+    pub fn reanalyze_matrix<M: MatrixInput>(&mut self, m: M) -> Result<()> {
+        let a = m.into_csr()?;
+        let an = self.core.reanalyze_core(&a, &self.an)?;
+        let f = self.core.factor_core(&a, &an)?;
+        self.a = a;
+        self.an = an;
+        self.f = Some(f);
+        if let Some(esc) = self.esc.as_mut() {
+            esc.reset();
+        }
         Ok(())
     }
 

@@ -7,7 +7,7 @@
 //! hylu gen    --gen CLASS:N --out FILE.mtx
 //! hylu bench  [--suite small|full] [--threads T]
 //!             [--kernel scalar|portable|native|avx512|auto]
-//!             [--tuning off|quick|full] [--precision f64|mixed]
+//!             [--tuning off|quick|full] [--precision f64|mixed] [--dynamic]
 //! hylu tune   --matrix FILE.mtx | --gen CLASS:N [--tuning quick|full]
 //!             [--threads T]
 //! hylu gauntlet [--suite small|full] [--threads T] [--reps R]
@@ -25,9 +25,12 @@
 //! added, fallback count per matrix), plus the kernel-variant A/B micro
 //! rows, a fault-tolerance chaos drill (injected panics / forced zero
 //! pivots against a small sharded service, reporting the recovery
-//! counters), and writes the whole trajectory to a single
-//! `BENCH_<date>.json` artifact (schema `hylu-bench-v3`, documented in
-//! DESIGN.md §5).
+//! counters), a dynamic-topology section (cold vs warm vs delta
+//! re-analysis trajectories on perturbed-pattern sequences plus the
+//! pivot-stability escalation counts), and writes the whole trajectory
+//! to a single `BENCH_<date>.json` artifact (schema `hylu-bench-v4`,
+//! documented in DESIGN.md §5). `bench --dynamic` runs the
+//! dynamic-topology smoke alone.
 //!
 //! `--rhs K` batches K right-hand sides through the engine's multi-RHS
 //! path ([`LinearSystem::solve_many`]) — the traffic-serving scenario.
@@ -239,7 +242,7 @@ pub fn run(argv: &[String]) -> i32 {
                  [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
                  [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
                  [--tick-max-us U] [--elastic] [--chaos] [--tuning off|quick|full] [--reps R] \
-                 [--precision f64|mixed] \
+                 [--precision f64|mixed] [--dynamic] \
                  (bench: --kernel scalar|portable|native|avx512|auto pins the dispatch tier)"
             );
             // usage errors share Error::Invalid's stable code
@@ -390,6 +393,39 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(p) = precision {
         println!("precision    : {p} (hylu side; baseline stays f64)");
     }
+    if args.has("dynamic") {
+        // dynamic-topology smoke: perturbed-pattern sequences, cold
+        // analyze+factor vs warm / delta incremental re-analysis
+        let mut table = Table::new(
+            "dynamic re-analysis: cold analyze+factor vs warm / delta (mean per step)",
+            &["matrix", "class", "n", "cold", "warm", "delta", "cold/delta"],
+        );
+        for bm in &suite {
+            let a = (bm.build)();
+            let mut hb = SolverBuilder::new().repeated().threads(threads);
+            if let Some(t) = tuning {
+                hb = hb.tuning(t);
+            }
+            let solver = hb.build()?;
+            let (t_cold, t_warm, t_delta, _) = dynamic_cycle(&solver, &a, 3)?;
+            let (mc, mw, md) = (mean(&t_cold), mean(&t_warm), mean(&t_delta));
+            let ratio = mc / md.max(1e-12);
+            table.row(
+                vec![
+                    bm.name.into(),
+                    bm.class.into(),
+                    a.n.to_string(),
+                    fmt_time(mc),
+                    fmt_time(mw),
+                    fmt_time(md),
+                    format!("{ratio:.2}x"),
+                ],
+                ratio,
+            );
+        }
+        table.print();
+        return Ok(());
+    }
     let mut table = Table::new(
         "one-time solve: HYLU vs PARDISO-like baseline",
         &["matrix", "class", "n", "hylu", "baseline", "speedup"],
@@ -520,6 +556,138 @@ fn precision_cycle(
         best = best.min(t.elapsed().as_secs_f64());
     }
     Ok((best, iters, sys.fallback_events()))
+}
+
+/// Insert one absent off-diagonal entry into row `i` of the pattern
+/// (small value, so the numerics stay benign); returns the edited
+/// matrix. Used by the dynamic-topology drills to grow a
+/// perturbed-pattern sequence one local edit at a time.
+fn add_pattern_entry(a: &Csr, i: usize, seed: usize) -> Csr {
+    let n = a.n;
+    let cols = a.row_indices(i);
+    let mut j = (i + 1 + seed) % n;
+    let mut tries = 0usize;
+    while (j == i || cols.contains(&j)) && tries < n {
+        j = (j + 1) % n;
+        tries += 1;
+    }
+    if tries >= n {
+        return a.clone(); // row already dense: nothing to add
+    }
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(a.nnz() + 1);
+    let mut vals = Vec::with_capacity(a.nnz() + 1);
+    indptr.push(0usize);
+    for r in 0..n {
+        let rc = a.row_indices(r);
+        let rv = a.row_vals(r);
+        if r == i {
+            let mut done = false;
+            for (c, v) in rc.iter().zip(rv) {
+                if !done && *c > j {
+                    indices.push(j);
+                    vals.push(1e-3);
+                    done = true;
+                }
+                indices.push(*c);
+                vals.push(*v);
+            }
+            if !done {
+                indices.push(j);
+                vals.push(1e-3);
+            }
+        } else {
+            indices.extend_from_slice(rc);
+            vals.extend_from_slice(rv);
+        }
+        indptr.push(indices.len());
+    }
+    Csr { n, indptr, indices, vals }
+}
+
+/// Dynamic-topology figure of merit: a perturbed-pattern sequence over
+/// one matrix. Each step grows the pattern by one entry in a late row;
+/// the handle re-analyzes incrementally (delta patch) while a fresh cold
+/// analyze+factor of the same pattern is timed for comparison, and a
+/// warm unchanged-pattern re-analysis rides along. Returns the per-step
+/// `(cold, warm, delta)` timing trajectories plus how many steps
+/// actually took the delta path (the rest fell back to a full
+/// re-analysis — still bit-identical, just not incremental).
+fn dynamic_cycle(
+    solver: &Solver,
+    a: &Csr,
+    steps: usize,
+) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, usize)> {
+    use crate::coordinator::ReanalyzeKind;
+    let mut sys = solver.analyze(a)?.factor()?;
+    let b = gen::rhs_for_ones(a);
+    let mut x = Vec::new();
+    sys.solve_into(&b, &mut x)?; // warm-up: grow every arena once
+    let (mut t_cold, mut t_warm, mut t_delta) = (Vec::new(), Vec::new(), Vec::new());
+    let mut deltas = 0usize;
+    let mut cur = a.clone();
+    for k in 0..steps {
+        let row = cur.n - 1 - (k % (cur.n / 2).max(1));
+        let next = add_pattern_entry(&cur, row, 3 * k + 1);
+        // warm: pattern unchanged — symbolic, plan, arenas reused wholesale
+        let t = std::time::Instant::now();
+        sys.reanalyze_matrix(cur.clone())?;
+        t_warm.push(t.elapsed().as_secs_f64());
+        // delta: one-entry pattern edit — the symbolic DAG is patched
+        // from the first changed permuted row
+        let t = std::time::Instant::now();
+        sys.reanalyze_matrix(next.clone())?;
+        t_delta.push(t.elapsed().as_secs_f64());
+        if sys.reanalysis_kind() == Some(ReanalyzeKind::Delta) {
+            deltas += 1;
+        }
+        // cold oracle: fresh analyze+factor of the same pattern
+        let t = std::time::Instant::now();
+        let _ = solver.analyze(&next)?.factor()?;
+        t_cold.push(t.elapsed().as_secs_f64());
+        cur = next;
+    }
+    Ok((t_cold, t_warm, t_delta, deltas))
+}
+
+/// Escalation drill for the dynamic section: a same-pattern value
+/// sequence (gentle drift) replayed through the adaptive pivot-stability
+/// controller. Returns the `(replays, reorders, repivots)` the
+/// controller decided; the always-full-pivot policy it replaces would
+/// perform `steps` full re-pivots on the same sequence by construction.
+fn escalation_drill(a: &Csr, threads: usize, steps: usize) -> Result<(u64, u64, u64)> {
+    let solver = SolverBuilder::new()
+        .repeated()
+        .threads(threads)
+        .adaptive_refactor(true)
+        .build()?;
+    let mut sys = solver.analyze(a)?.factor()?;
+    let mut vals = a.vals.clone();
+    for k in 0..steps {
+        let f = 1.0 + 0.01 * (k + 1) as f64;
+        for (v, v0) in vals.iter_mut().zip(&a.vals) {
+            *v = v0 * f;
+        }
+        sys.refactor(&vals)?;
+    }
+    Ok(sys.escalation().map(|e| e.counts()).unwrap_or_default())
+}
+
+/// Mean of a timing trajectory (0 when empty).
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Render a timing trajectory as a JSON array body.
+fn json_traj(v: &[f64]) -> String {
+    v.iter()
+        .map(|t| format!("{t:e}"))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 /// Deterministic fill for kernel A/B operands (no RNG dependency).
@@ -653,9 +821,11 @@ fn chaos_drill() -> Result<(u64, ServiceStats, bool)> {
 /// The perf-trajectory gauntlet: tuned-vs-untuned repeated refactor+solve
 /// over the bench suite, a mixed-vs-f64 precision section (cycle speedup,
 /// refinement iterations added, fallback count per matrix), the
-/// kernel-variant A/B micro rows, plus the [`chaos_drill`] fault
-/// counters, written to one `BENCH_<date>.json` artifact (schema
-/// `hylu-bench-v3`, documented in DESIGN.md §5).
+/// kernel-variant A/B micro rows, the dynamic-topology section
+/// ([`dynamic_cycle`] trajectories + [`escalation_drill`] counts), plus
+/// the [`chaos_drill`] fault counters, written to one
+/// `BENCH_<date>.json` artifact (schema `hylu-bench-v4`, documented in
+/// DESIGN.md §5).
 fn cmd_gauntlet(args: &Args) -> Result<()> {
     let tuning = tuning_from(args, Tuning::Quick)?.unwrap_or(Tuning::Quick);
     if tuning == Tuning::Off {
@@ -796,6 +966,58 @@ fn cmd_gauntlet(args: &Args) -> Result<()> {
     }
     ab_table.print();
 
+    // dynamic-topology section: perturbed-pattern sequences per matrix
+    // (cold analyze+factor vs warm / delta re-analysis trajectories) and
+    // the pivot-stability escalation counts vs the always-full-pivot
+    // baseline (which re-pivots on every step by construction)
+    let dyn_steps = 4usize;
+    let mut dyn_table = Table::new(
+        "dynamic: cold analyze+factor vs warm / delta re-analysis (mean per step)",
+        &["matrix", "class", "n", "cold", "warm", "delta", "cold/delta", "delta/steps", "repivots"],
+    );
+    let mut dyn_json = Vec::new();
+    for bm in &suite {
+        let a = (bm.build)();
+        let solver = SolverBuilder::new().repeated().threads(threads).build()?;
+        let (t_cold, t_warm, t_delta, deltas) = dynamic_cycle(&solver, &a, dyn_steps)?;
+        let (replays, reorders, repivots) = escalation_drill(&a, threads, dyn_steps)?;
+        let (mc, mw, md) = (mean(&t_cold), mean(&t_warm), mean(&t_delta));
+        let ratio = mc / md.max(1e-12);
+        dyn_table.row(
+            vec![
+                bm.name.into(),
+                bm.class.into(),
+                a.n.to_string(),
+                fmt_time(mc),
+                fmt_time(mw),
+                fmt_time(md),
+                format!("{ratio:.2}x"),
+                format!("{deltas}/{dyn_steps}"),
+                format!("{repivots} vs {dyn_steps}"),
+            ],
+            ratio,
+        );
+        dyn_json.push(format!(
+            "    {{\"name\": \"{}\", \"class\": \"{}\", \"n\": {}, \"steps\": {}, \
+             \"t_cold\": [{}], \"t_warm\": [{}], \"t_delta\": [{}], \"delta_steps\": {}, \
+             \"escalation\": {{\"replays\": {}, \"reorders\": {}, \"repivots\": {}, \
+             \"baseline_repivots\": {}}}}}",
+            json_escape(bm.name),
+            json_escape(bm.class),
+            a.n,
+            dyn_steps,
+            json_traj(&t_cold),
+            json_traj(&t_warm),
+            json_traj(&t_delta),
+            deltas,
+            replays,
+            reorders,
+            repivots,
+            dyn_steps,
+        ));
+    }
+    dyn_table.print();
+
     let (injected, chaos_stats, chaos_clean) = chaos_drill()?;
     println!(
         "\nchaos drill  : {} injected; {} panics caught, {} quarantines, \
@@ -830,16 +1052,18 @@ fn cmd_gauntlet(args: &Args) -> Result<()> {
     };
     let gm = table.geomean_speedup();
     let json = format!(
-        "{{\n  \"schema\": \"hylu-bench-v3\",\n  \"date\": \"{date}\",\n  \
+        "{{\n  \"schema\": \"hylu-bench-v4\",\n  \"date\": \"{date}\",\n  \
          \"suite\": \"{suite_name}\",\n  \"threads\": {threads},\n  \
          \"reps\": {reps},\n  \"tier\": \"{tier}\",\n  \"tuning\": \"{tuning}\",\n  \
          \"environment\": \"{}\",\n  \"matrices\": [\n{}\n  ],\n  \
          \"geomean_speedup\": {gm:.4},\n  \"precision\": [\n{}\n  ],\n  \
-         \"kernel_ab\": [\n{}\n  ],\n  \"faults\": {faults_json}\n}}\n",
+         \"kernel_ab\": [\n{}\n  ],\n  \"dynamic\": [\n{}\n  ],\n  \
+         \"faults\": {faults_json}\n}}\n",
         json_escape(&env),
         mats.join(",\n"),
         prec_json.join(",\n"),
         ab_json.join(",\n"),
+        dyn_json.join(",\n"),
     );
     std::fs::write(&path, json)?;
     println!(
@@ -1329,16 +1553,35 @@ mod tests {
         ]));
         assert_eq!(code, 0);
         let s = std::fs::read_to_string(&out).unwrap();
-        assert!(s.contains("\"schema\": \"hylu-bench-v3\""));
+        assert!(s.contains("\"schema\": \"hylu-bench-v4\""));
         assert!(s.contains("\"geomean_speedup\""));
         assert!(s.contains("\"kernel_ab\""));
         assert!(s.contains("\"matrices\""));
         assert!(s.contains("\"precision\""));
         assert!(s.contains("\"refine_iters_mixed\""));
+        assert!(s.contains("\"dynamic\""));
+        assert!(s.contains("\"t_delta\""));
+        assert!(s.contains("\"baseline_repivots\""));
         assert!(s.contains("\"faults\""));
         assert!(s.contains("\"panics_caught\""));
         assert!(s.contains("\"clean\": true"));
         let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn pattern_entry_insertion_keeps_csr_valid() {
+        let a = gen::grid2d(8, 8);
+        let row = a.n - 3;
+        let edited = add_pattern_entry(&a, row, 5);
+        edited.validate().unwrap();
+        assert_eq!(edited.nnz(), a.nnz() + 1);
+        // only the targeted row changed structure
+        for r in 0..a.n {
+            if r != row {
+                assert_eq!(edited.row_indices(r), a.row_indices(r));
+            }
+        }
+        assert_eq!(edited.row_indices(row).len(), a.row_indices(row).len() + 1);
     }
 
     #[test]

@@ -144,6 +144,26 @@ pub struct SolverConfig {
     /// as configured (the chaos soak's oracle solvers set this: oracles
     /// must stay fault-free even when the environment injects faults).
     pub pin_fault: bool,
+    /// Delta-patch budget for [`crate::api::LinearSystem::reanalyze`]:
+    /// the symbolic DAG is patched incrementally (instead of re-analyzed
+    /// cold) when at most this fraction of permuted rows changed
+    /// structure. 0 disables patching (every pattern change re-analyzes
+    /// in full); the patched result is bit-identical either way, so the
+    /// knob trades nothing but time.
+    pub reanalyze_delta_frac: f64,
+    /// Enable the pivot-stability escalation controller on the
+    /// repeated-refactor path: replay while pivot growth is stable,
+    /// secondary within-block reorder when the growth EMA trends up,
+    /// full re-pivoting factorization past the hard threshold. The
+    /// `HYLU_ADAPTIVE` env var (`0`/`1`) overrides when set. Off by
+    /// default — `refactor` stays a pure replay.
+    pub adaptive_refactor: bool,
+    /// Fast-EMA pivot-growth level that promotes a replay refactor to a
+    /// secondary within-supernode-block reordering pass.
+    pub escalate_reorder_growth: f64,
+    /// Pivot growth past which the controller escalates straight to a
+    /// full re-pivoting `factorize()`.
+    pub escalate_repivot_growth: f64,
     /// Route large sup-sup GEMMs through the XLA/PJRT AOT artifacts
     /// (Pallas kernels). Ablation path; the native microkernel is default.
     pub use_xla: bool,
@@ -151,6 +171,23 @@ pub struct SolverConfig {
     pub xla_min_dim: usize,
     /// Artifact directory for `use_xla`.
     pub artifacts_dir: String,
+}
+
+impl SolverConfig {
+    /// Whether the adaptive refactor path is on for this config: the
+    /// `HYLU_ADAPTIVE` env var (`1`/`true`/`on` vs `0`/`false`/`off`)
+    /// overrides [`SolverConfig::adaptive_refactor`] when set and
+    /// parseable, mirroring `HYLU_PRECISION` / `HYLU_TUNING`.
+    pub fn adaptive_effective(&self) -> bool {
+        match std::env::var("HYLU_ADAPTIVE") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "on" => true,
+                "0" | "false" | "off" => false,
+                _ => self.adaptive_refactor,
+            },
+            Err(_) => self.adaptive_refactor,
+        }
+    }
 }
 
 impl Default for SolverConfig {
@@ -178,6 +215,10 @@ impl Default for SolverConfig {
             parallel_solve_min_n: 2048,
             fault: None,
             pin_fault: false,
+            reanalyze_delta_frac: 0.25,
+            adaptive_refactor: false,
+            escalate_reorder_growth: 1e4,
+            escalate_repivot_growth: 1e8,
             use_xla: false,
             xla_min_dim: 16,
             artifacts_dir: "artifacts".into(),
@@ -201,6 +242,9 @@ mod tests {
         assert_eq!(c.precision, Precision::F64);
         assert!(c.fault.is_none());
         assert!(!c.pin_fault);
+        assert!(!c.adaptive_refactor);
+        assert!(c.reanalyze_delta_frac > 0.0 && c.reanalyze_delta_frac <= 1.0);
+        assert!(c.escalate_reorder_growth <= c.escalate_repivot_growth);
     }
 
     #[test]

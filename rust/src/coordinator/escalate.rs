@@ -1,0 +1,187 @@
+//! Pivot-stability escalation controller for the adaptive refactor path.
+//!
+//! PR 8's serving layer treats pivot growth as a binary quarantine
+//! signal. This controller turns it into a graduated policy on the
+//! repeated-refactor path: while growth is stable, keep the cheap
+//! pattern-reusing replay; when growth *trends* up, promote to a
+//! secondary within-supernode-block reordering pass (CKTSO-style) before
+//! the replay; and only past a hard threshold escalate to a full
+//! re-pivoting `factorize()`. The trend detector is the fast/slow
+//! exponential-moving-average pair idiom from SAT restart scheduling
+//! (splr): the fast EMA chases recent growth, the slow EMA is the
+//! long-run baseline, and escalation triggers on the fast EMA — which,
+//! for a worsening sequence, always sits at or above the slow one.
+//!
+//! The controller is pure bookkeeping (no clocks, no I/O) so its policy
+//! is property-testable: a stable trace never escalates, and along a
+//! non-decreasing growth trace the chosen tier is monotone until a
+//! repivot resets the state.
+
+/// Smoothing factor of the fast (recent-window) EMA.
+const ALPHA_FAST: f64 = 0.5;
+/// Smoothing factor of the slow (baseline) EMA.
+const ALPHA_SLOW: f64 = 0.1;
+
+/// What the adaptive refactor path should do for the next factorization,
+/// cheapest first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RefactorTier {
+    /// Pattern- and pivot-reusing replay refactorization.
+    Replay,
+    /// Secondary within-block reordering, then replay.
+    Reorder,
+    /// Full re-pivoting factorization.
+    Repivot,
+}
+
+/// EMA-driven escalation state. One controller lives per factored
+/// handle; [`EscalationController::decide`] is fed the pivot growth of
+/// the most recent factorization before each refactor.
+#[derive(Clone, Debug)]
+pub struct EscalationController {
+    fast: f64,
+    slow: f64,
+    primed: bool,
+    reorder_growth: f64,
+    repivot_growth: f64,
+    replays: u64,
+    reorders: u64,
+    repivots: u64,
+}
+
+impl EscalationController {
+    /// Build a controller with the given escalation thresholds
+    /// (`reorder_growth <= repivot_growth` is enforced by clamping).
+    pub fn new(reorder_growth: f64, repivot_growth: f64) -> Self {
+        EscalationController {
+            fast: 0.0,
+            slow: 0.0,
+            primed: false,
+            reorder_growth: reorder_growth.max(1.0),
+            repivot_growth: repivot_growth.max(reorder_growth.max(1.0)),
+            replays: 0,
+            reorders: 0,
+            repivots: 0,
+        }
+    }
+
+    /// Fold the latest observed pivot growth into the EMAs and pick the
+    /// tier for the refactorization about to run. Non-finite growth
+    /// (overflowed factors) escalates straight to [`RefactorTier::Repivot`].
+    pub fn decide(&mut self, growth: f64) -> RefactorTier {
+        let g = if growth.is_finite() { growth.max(0.0) } else { f64::INFINITY };
+        if !self.primed {
+            self.primed = true;
+            self.fast = g;
+            self.slow = g;
+        } else {
+            self.fast = ALPHA_FAST * g + (1.0 - ALPHA_FAST) * self.fast;
+            self.slow = ALPHA_SLOW * g + (1.0 - ALPHA_SLOW) * self.slow;
+        }
+        let tier = if !g.is_finite() || g >= self.repivot_growth || self.fast >= self.repivot_growth
+        {
+            RefactorTier::Repivot
+        } else if self.fast >= self.reorder_growth && self.fast >= self.slow {
+            RefactorTier::Reorder
+        } else {
+            RefactorTier::Replay
+        };
+        match tier {
+            RefactorTier::Replay => self.replays += 1,
+            RefactorTier::Reorder => self.reorders += 1,
+            RefactorTier::Repivot => self.repivots += 1,
+        }
+        tier
+    }
+
+    /// Reset the EMAs after a full re-pivoting factorization: the pivot
+    /// set is fresh, so the old trend no longer describes it. Counters
+    /// are preserved.
+    pub fn reset(&mut self) {
+        self.primed = false;
+        self.fast = 0.0;
+        self.slow = 0.0;
+    }
+
+    /// `(replays, reorders, repivots)` decided so far.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.replays, self.reorders, self.repivots)
+    }
+
+    /// Current fast (recent) EMA of pivot growth.
+    pub fn fast_ema(&self) -> f64 {
+        self.fast
+    }
+
+    /// Current slow (baseline) EMA of pivot growth.
+    pub fn slow_ema(&self) -> f64 {
+        self.slow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_traces_never_escalate() {
+        let mut c = EscalationController::new(100.0, 1e6);
+        for i in 0..1000 {
+            // bounded wobble well under the reorder threshold
+            let g = 2.0 + (i % 7) as f64;
+            assert_eq!(c.decide(g), RefactorTier::Replay);
+        }
+        let (replays, reorders, repivots) = c.counts();
+        assert_eq!((replays, reorders, repivots), (1000, 0, 0));
+    }
+
+    #[test]
+    fn monotone_growth_escalates_monotonically() {
+        let mut c = EscalationController::new(50.0, 5000.0);
+        let mut last = RefactorTier::Replay;
+        let mut seen_reorder = false;
+        let mut seen_repivot = false;
+        for step in 0..200 {
+            let g = 1.0 + step as f64 * 40.0; // non-decreasing ramp
+            let t = c.decide(g);
+            assert!(t >= last, "tier regressed from {last:?} to {t:?} at step {step}");
+            seen_reorder |= t == RefactorTier::Reorder;
+            seen_repivot |= t == RefactorTier::Repivot;
+            if t == RefactorTier::Repivot {
+                break;
+            }
+            last = t;
+        }
+        assert!(seen_reorder, "ramp never promoted to Reorder");
+        assert!(seen_repivot, "ramp never reached Repivot");
+    }
+
+    #[test]
+    fn non_finite_growth_forces_immediate_repivot() {
+        let mut c = EscalationController::new(100.0, 1e6);
+        assert_eq!(c.decide(2.0), RefactorTier::Replay);
+        assert_eq!(c.decide(f64::INFINITY), RefactorTier::Repivot);
+        assert_eq!(c.decide(f64::NAN), RefactorTier::Repivot);
+    }
+
+    #[test]
+    fn reset_after_repivot_returns_to_replay() {
+        let mut c = EscalationController::new(10.0, 100.0);
+        for _ in 0..8 {
+            c.decide(500.0);
+        }
+        assert_eq!(c.decide(500.0), RefactorTier::Repivot);
+        c.reset();
+        assert_eq!(c.decide(1.5), RefactorTier::Replay);
+        let (_, _, repivots) = c.counts();
+        assert!(repivots >= 1);
+    }
+
+    #[test]
+    fn hard_threshold_skips_the_reorder_tier() {
+        // a single catastrophic sample must not wait for the EMA to warm
+        let mut c = EscalationController::new(10.0, 100.0);
+        assert_eq!(c.decide(1.0), RefactorTier::Replay);
+        assert_eq!(c.decide(1e9), RefactorTier::Repivot);
+    }
+}

@@ -20,12 +20,14 @@
 //! (asserted in `rust/tests/api_handles.rs`).
 
 pub mod config;
+pub mod escalate;
 pub mod fault;
 pub mod stats;
 
 pub use config::{Precision, SolverConfig};
+pub use escalate::{EscalationController, RefactorTier};
 pub use fault::{Fault, FaultPlan};
-pub use stats::{FactorStats, RefineOutcome, SolveStats, SymbolicStats};
+pub use stats::{FactorStats, ReanalyzeKind, RefineOutcome, SolveStats, SymbolicStats};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -45,7 +47,7 @@ use crate::solve::{
 };
 use crate::sparse::csr::Csr;
 use crate::sparse::perm::Perm;
-use crate::symbolic::{analyze_pattern, MergePolicy, Symbolic};
+use crate::symbolic::{analyze_pattern, incremental, MergePolicy, Symbolic};
 use crate::{Error, Result};
 
 /// The product of [`Solver::analyze`]: permutations, scalings, the symbolic
@@ -81,6 +83,10 @@ pub struct Analysis {
     /// Cached schedule state (bulk chunks, scratch bounds) for the owning
     /// solver's pool width.
     pub plan: ExecPlan,
+    /// The merge policy that produced `sym` (the kernel-selection loop
+    /// may override the configured one). The delta patcher must replay
+    /// under exactly this policy to stay bit-identical.
+    pub(crate) policy: MergePolicy,
     /// Phase statistics.
     pub stats: SymbolicStats,
 }
@@ -360,28 +366,26 @@ impl Solver {
         let (pa, src_idx, scale) = build_permuted(a, &row_perm, &col_perm, &dr, &dc);
 
         // --- symbolic + kernel selection ---
-        let policy = self.one_time_policy();
+        let mut policy = self.one_time_policy();
         let mut sym = analyze_pattern(&pa, policy, self.cfg.bulk_threshold);
         let mut mode = self.cfg.kernel.unwrap_or_else(|| select_kernel(&sym));
         if self.cfg.kernel.is_none() || self.cfg.merge_policy.is_none() {
             // re-analyze when the selected kernel wants different supernodes
             if mode == KernelMode::RowRow && policy != MergePolicy::None {
-                sym = analyze_pattern(&pa, MergePolicy::None, self.cfg.bulk_threshold);
+                policy = MergePolicy::None;
+                sym = analyze_pattern(&pa, policy, self.cfg.bulk_threshold);
             } else if self.cfg.repeated
                 && mode != KernelMode::RowRow
                 && self.cfg.merge_policy.is_none()
             {
                 // repeated-solve mode: pay for relaxed supernodes once,
                 // refactor faster forever (paper §3.2)
-                sym = analyze_pattern(
-                    &pa,
-                    MergePolicy::Relaxed {
-                        max_width: self.cfg.max_supernode,
-                        budget_frac: self.cfg.relax_frac,
-                        budget_abs: self.cfg.relax_abs,
-                    },
-                    self.cfg.bulk_threshold,
-                );
+                policy = MergePolicy::Relaxed {
+                    max_width: self.cfg.max_supernode,
+                    budget_frac: self.cfg.relax_frac,
+                    budget_abs: self.cfg.relax_abs,
+                };
+                sym = analyze_pattern(&pa, policy, self.cfg.bulk_threshold);
                 mode = self.cfg.kernel.unwrap_or_else(|| select_kernel(&sym));
             }
         }
@@ -421,6 +425,8 @@ impl Solver {
             levels: sym.schedule.nlevels(),
             bulk_levels: sym.schedule.bulk_levels,
             mode,
+            reanalysis: None,
+            replayed_rows: 0,
         };
         Ok(Analysis {
             sym,
@@ -435,6 +441,140 @@ impl Solver {
             pattern_hash: phash,
             uid: ANALYSIS_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             plan,
+            policy,
+            stats,
+        })
+    }
+
+    /// Incremental re-analysis: rebuild an [`Analysis`] for `a` reusing as
+    /// much of `prev` as its pattern allows.
+    ///
+    /// - **Unchanged pattern hash** — the permutations, scalings, symbolic
+    ///   factorization, execution plan, and tuned kernel plan are all
+    ///   reused; only the permuted values and remap tables are rebuilt.
+    /// - **Same dimension, changed pattern** — the cached matching,
+    ///   scalings, and fill ordering still apply (the "ordering seeds");
+    ///   the symbolic DAG is delta-patched when at most
+    ///   [`SolverConfig::reanalyze_delta_frac`] of the permuted rows
+    ///   changed structure, otherwise re-analyzed in full under the same
+    ///   merge policy. Either way the result is bit-identical to the
+    ///   other path on the same inputs.
+    /// - **Changed dimension** — full cold analysis (only the engine and
+    ///   its arenas are warm).
+    ///
+    /// The returned analysis always carries a fresh [`Analysis::uid`], so
+    /// the engine's permuted-value MRU can never serve a stale pattern.
+    pub(crate) fn reanalyze_core(&self, a: &Csr, prev: &Analysis) -> Result<Analysis> {
+        if a.n == 0 {
+            return Err(Error::Invalid("empty matrix".into()));
+        }
+        a.validate()?;
+        if a.n != prev.pa.n {
+            let mut an = self.analyze_core(a)?;
+            an.stats.reanalysis = Some(ReanalyzeKind::Full);
+            return Ok(an);
+        }
+        let t0 = Instant::now();
+        let phash = pattern_hash(a);
+        let (pa, src_idx, scale) =
+            build_permuted(a, &prev.row_perm, &prev.col_perm, &prev.dr, &prev.dc);
+
+        if phash == prev.pattern_hash {
+            // warm tier: identical structure, everything symbolic reused
+            let mut stats = prev.stats;
+            stats.t_match = 0.0;
+            stats.t_order = 0.0;
+            stats.t_symbolic = 0.0;
+            stats.t_total = t0.elapsed().as_secs_f64();
+            stats.reanalysis = Some(ReanalyzeKind::Warm);
+            stats.replayed_rows = 0;
+            return Ok(Analysis {
+                sym: prev.sym.clone(),
+                row_perm: prev.row_perm.clone(),
+                col_perm: prev.col_perm.clone(),
+                dr: prev.dr.clone(),
+                dc: prev.dc.clone(),
+                mode: prev.mode,
+                pa,
+                src_idx,
+                scale,
+                pattern_hash: phash,
+                uid: ANALYSIS_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+                plan: prev.plan.clone(),
+                policy: prev.policy,
+                stats,
+            });
+        }
+
+        // structural change at fixed dimension: diff the permuted
+        // patterns and patch or fall back (bit-identical either way)
+        let t2 = Instant::now();
+        let delta = incremental::diff_patterns(&prev.pa, &pa);
+        let budget = self.cfg.reanalyze_delta_frac * a.n as f64;
+        let (sym, kind, replayed) = match delta.first_changed {
+            Some(r0) if (delta.changed_rows as f64) <= budget => {
+                let out = incremental::patch_pattern(
+                    &prev.sym,
+                    &pa,
+                    prev.policy,
+                    self.cfg.bulk_threshold,
+                    r0,
+                );
+                (out.sym, ReanalyzeKind::Delta, out.replayed_rows)
+            }
+            _ => (
+                analyze_pattern(&pa, prev.policy, self.cfg.bulk_threshold),
+                ReanalyzeKind::Full,
+                0,
+            ),
+        };
+        let t_symbolic = t2.elapsed().as_secs_f64();
+
+        // kernel seed: keep the previously selected kernel (the pattern
+        // moved locally; a re-selection would force a fresh policy loop)
+        let mode = prev.mode;
+        let mut plan = ExecPlan::build(&sym, self.engine.pool().nthreads());
+        let tuning = tuner::effective(self.cfg.tuning);
+        if tuning != Tuning::Off {
+            // keyed by the NEW pattern hash: the memo misses and retunes
+            plan.kernel = tuner::tune_cached(&sym, kernels::active_tier(), tuning, phash);
+        }
+
+        let sel = selection_stats(&sym);
+        let stats = SymbolicStats {
+            n: a.n,
+            nnz: a.nnz(),
+            t_match: 0.0,
+            t_order: 0.0,
+            t_symbolic,
+            t_total: t0.elapsed().as_secs_f64(),
+            lu_entries: sym.lu_entries,
+            fill_ratio: sym.lu_entries as f64 / a.nnz().max(1) as f64,
+            flops: sym.flops,
+            supernode_coverage: sel.coverage,
+            avg_super_width: sel.avg_super_width,
+            avg_panel_width: sel.avg_panel_width,
+            nodes: sym.nodes.len(),
+            levels: sym.schedule.nlevels(),
+            bulk_levels: sym.schedule.bulk_levels,
+            mode,
+            reanalysis: Some(kind),
+            replayed_rows: replayed,
+        };
+        Ok(Analysis {
+            sym,
+            row_perm: prev.row_perm.clone(),
+            col_perm: prev.col_perm.clone(),
+            dr: prev.dr.clone(),
+            dc: prev.dc.clone(),
+            mode,
+            pa,
+            src_idx,
+            scale,
+            pattern_hash: phash,
+            uid: ANALYSIS_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            plan,
+            policy: prev.policy,
             stats,
         })
     }
@@ -559,6 +699,22 @@ impl Solver {
         an: &Analysis,
         f: &mut Factorization,
     ) -> Result<()> {
+        self.refactor_core_tiered(a, an, f, false)
+    }
+
+    /// [`Solver::refactor_core`] with an optional secondary within-block
+    /// reordering pass (the escalation controller's middle tier): before
+    /// the replay, `pivot_perm` is refreshed per supernode diagonal block
+    /// from the incoming values. Pattern-preserving, so the replay stays
+    /// valid. Skipped for mixed-precision handles (the `f32` core keeps
+    /// its own pivot order) — the call degenerates to a plain replay.
+    pub(crate) fn refactor_core_tiered(
+        &self,
+        a: &Csr,
+        an: &Analysis,
+        f: &mut Factorization,
+        reorder: bool,
+    ) -> Result<()> {
         // same pre-dispatch injection point as `factor_core`
         if let Some(fp) = self.cfg.fault.as_deref() {
             fp.at_factor()?;
@@ -568,6 +724,9 @@ impl Solver {
         an.remap_values_into(a, &mut scratch.pa, self.engine.counters())?;
         self.ensure_done_flags(&mut scratch, an);
         let pa = &scratch.pa[0].1;
+        if reorder && f.fac32.is_none() {
+            crate::numeric::factor::secondary_block_reorder(pa, &an.sym, &mut f.fac.pivot_perm);
+        }
         let threads = self.engine.pool().nthreads();
         let (perturbed, precision) = if f.fac32.is_some() && f.fell_back.load(Ordering::Relaxed) {
             // A mixed handle whose refinement stalled: promote to pure

@@ -52,6 +52,32 @@ impl std::fmt::Display for RefineOutcome {
     }
 }
 
+/// How an analysis was produced — cold, or one of the incremental
+/// re-analysis tiers (see `symbolic/incremental.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReanalyzeKind {
+    /// Pattern hash unchanged: permutations, symbolic, exec plan, and the
+    /// tuned kernel plan all reused; only the permuted values rebuilt.
+    Warm,
+    /// Same dimension, local pattern change: the symbolic DAG was
+    /// delta-patched (prefix splice + suffix replay).
+    Delta,
+    /// Pattern change too wide (or dimension changed): full re-analysis.
+    /// Same-dimension fallbacks still reuse the cached permutations and
+    /// scalings, so the result matches a delta patch bit for bit.
+    Full,
+}
+
+impl std::fmt::Display for ReanalyzeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ReanalyzeKind::Warm => "warm",
+            ReanalyzeKind::Delta => "delta",
+            ReanalyzeKind::Full => "full",
+        })
+    }
+}
+
 /// Preprocessing-phase statistics ([`crate::coordinator::Solver::analyze`]).
 #[derive(Clone, Copy, Debug)]
 pub struct SymbolicStats {
@@ -89,6 +115,12 @@ pub struct SymbolicStats {
     pub bulk_levels: usize,
     /// Selected kernel.
     pub mode: KernelMode,
+    /// `Some(kind)` when this analysis came from a `reanalyze` call;
+    /// `None` for a cold `analyze`.
+    pub reanalysis: Option<ReanalyzeKind>,
+    /// Rows replayed by the delta patcher (0 unless
+    /// `reanalysis == Some(ReanalyzeKind::Delta)`).
+    pub replayed_rows: usize,
 }
 
 /// Numeric-factorization statistics.

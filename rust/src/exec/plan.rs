@@ -15,7 +15,9 @@ use crate::symbolic::Symbolic;
 
 /// Immutable execution plan for one symbolic analysis on one pool width.
 /// Shared freely by reference across factor/refactor/solve calls (and
-/// across solvers).
+/// across solvers). `Clone` so a warm re-analysis of an unchanged
+/// pattern can reuse the plan (tuned kernel included) wholesale.
+#[derive(Clone)]
 pub struct ExecPlan {
     /// Pool width the chunks were balanced for.
     pub nthreads: usize,

@@ -353,6 +353,50 @@ pub unsafe extern "C" fn hylu_refactorize(h: *mut HyluHandle, ax: *const f64) ->
     })
 }
 
+/// Re-analyze with a matrix whose **pattern** may differ (dynamic-
+/// topology step: circuit element stamped in or out). The warm
+/// incremental path reuses the handle's engine, arenas, and ordering
+/// seeds; an unchanged pattern also reuses the symbolic factorization
+/// and tuned kernel plan outright, and a local pattern edit patches the
+/// symbolic DAG incrementally (bit-identical to a cold analysis either
+/// way). The system is refactorized on the new matrix before returning,
+/// so the handle stays solvable; on failure the previous matrix and
+/// factors are kept. Same CSR array contract as [`hylu_analyze`].
+///
+/// # Safety
+/// `h` must be a live, factorized handle; `ap` must point to `n + 1`
+/// readable `int64_t`s and `ai`/`ax` to `ap[n]` readable elements each.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_reanalyze(
+    h: *mut HyluHandle,
+    n: i64,
+    ap: *const i64,
+    ai: *const i64,
+    ax: *const f64,
+) -> i32 {
+    if h.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let h = &mut *h;
+    guarded_mut(h, |h| {
+        let a = match csr_from_raw(n, ap, ai, ax) {
+            Ok(a) => a,
+            Err(e) => return h.fail(&e),
+        };
+        let res = match &mut h.state {
+            SystemState::Factored(sys) => sys.reanalyze_matrix(a),
+            SystemState::Poisoned => {
+                return h.invalid("handle poisoned by a caught panic; call hylu_analyze to reset")
+            }
+            _ => return h.invalid("hylu_reanalyze before hylu_factorize"),
+        };
+        match res {
+            Ok(()) => HYLU_OK,
+            Err(e) => h.fail(&e),
+        }
+    })
+}
+
 /// Solve `A x = b` (iterative refinement runs automatically when pivots
 /// were perturbed). `b` and `x` are length-`n` arrays; they may not
 /// alias.

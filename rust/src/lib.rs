@@ -61,8 +61,8 @@ pub mod testutil;
 pub mod prelude {
     pub use crate::api::{Analyzed, Factored, LinearSystem, SolveOpts, Solver, SolverBuilder};
     pub use crate::coordinator::{
-        FactorStats, Fault, FaultPlan, Precision, RefineOutcome, SolveStats, SolverConfig,
-        SymbolicStats,
+        EscalationController, FactorStats, Fault, FaultPlan, Precision, ReanalyzeKind,
+        RefactorTier, RefineOutcome, SolveStats, SolverConfig, SymbolicStats,
     };
     pub use crate::numeric::kernels::{KernelPlan, KernelTier, Tuning};
     pub use crate::numeric::select::KernelMode;

@@ -608,6 +608,71 @@ unsafe fn factor_rows<T: Scalar>(
     sf.update_umax(umax);
 }
 
+/// Secondary within-block reordering for the adaptive refactor path
+/// (CKTSO-style): refresh `pivot_perm` inside each supernode diagonal
+/// block by greedily assigning to each block column the unused block row
+/// with the largest current magnitude in `a` (the permuted matrix about
+/// to be refactored). Pattern-preserving by construction — the swap set
+/// is exactly the one in-kernel supernode pivoting may explore, so a
+/// replay refactorization after this pass stays valid. Standalone rows
+/// are untouched (`factor_rows` never consults `pivot_perm`).
+///
+/// Returns the number of blocks whose permutation changed. Deterministic:
+/// ties pick the lowest remaining row.
+pub fn secondary_block_reorder(a: &Csr, sym: &Symbolic, pivot_perm: &mut [u32]) -> usize {
+    assert_eq!(a.n, sym.n);
+    assert_eq!(pivot_perm.len(), sym.n);
+    let mut changed_blocks = 0usize;
+    let mut block: Vec<f64> = Vec::new();
+    let mut taken: Vec<bool> = Vec::new();
+    let mut pick: Vec<u32> = Vec::new();
+    for nd in &sym.nodes {
+        if !nd.is_super {
+            continue;
+        }
+        let first = nd.first as usize;
+        let w = nd.width as usize;
+        // dense |A| block: block[r*w + c] = |a[perm_row(r), first + c]|,
+        // gathered through the *current* pivot_perm so repeated reorders
+        // rank the same physical rows they will scatter.
+        block.clear();
+        block.resize(w * w, 0.0);
+        for r in 0..w {
+            let src = pivot_perm[first + r] as usize;
+            let (cols, vals) = (a.row_indices(src), a.row_vals(src));
+            let lo = cols.partition_point(|&j| j < first);
+            for k in lo..cols.len() {
+                let j = cols[k];
+                if j >= first + w {
+                    break;
+                }
+                block[r * w + (j - first)] = vals[k].abs();
+            }
+        }
+        taken.clear();
+        taken.resize(w, false);
+        pick.clear();
+        for c in 0..w {
+            let mut best = usize::MAX;
+            let mut best_v = f64::NEG_INFINITY;
+            for (r, &t) in taken.iter().enumerate() {
+                if !t && block[r * w + c] > best_v {
+                    best_v = block[r * w + c];
+                    best = r;
+                }
+            }
+            taken[best] = true;
+            pick.push(pivot_perm[first + best]);
+        }
+        let dst = &mut pivot_perm[first..first + w];
+        if dst != pick.as_slice() {
+            changed_blocks += 1;
+            dst.copy_from_slice(&pick);
+        }
+    }
+    changed_blocks
+}
+
 /// Reconstruct the dense `L·U` product for tests (small n).
 pub fn reconstruct_dense(sym: &Symbolic, fac: &LuFactors) -> crate::testutil::Dense {
     let n = sym.n;

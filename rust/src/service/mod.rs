@@ -634,6 +634,43 @@ impl SolverService {
         }
     }
 
+    /// Replace system `id`'s matrix with a same-dimension matrix whose
+    /// **pattern** may differ, re-analyzing through the warm incremental
+    /// path (engine, arenas, ordering seeds, and — when the pattern is
+    /// unchanged — the tuned kernel plan are all reused) and
+    /// refactorizing on its shard, live, without retiring the system.
+    /// The same barrier contract as [`SolverService::refactor`] applies:
+    /// solves admitted before the re-analysis are flushed against the
+    /// old factors, solves submitted after it returns observe the new
+    /// matrix. The dimension must match the registered one — routing
+    /// carries `n` per system, so a size change requires
+    /// retire + register.
+    pub fn reanalyze(&self, id: SystemId, a: Csr) -> Result<()> {
+        let (shard, n) = {
+            let t = self.shared.routes.load();
+            let e = t
+                .map
+                .get(&id.0)
+                .ok_or_else(|| Error::Invalid(format!("unknown system id {id}")))?;
+            (e.shard, e.n)
+        };
+        if a.n != n {
+            return Err(Error::Invalid("reanalyze dimension mismatch".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        let seq = self.shared.next_seq();
+        if self.shared.queues[shard]
+            .push_control(Control::Reanalyze { id: id.0, a, tx }, seq, false)
+            .is_err()
+        {
+            return Err(Error::Runtime("service is shutting down".into()));
+        }
+        match rx.recv() {
+            Ok(r) => r.map(|_| ()),
+            Err(_) => Err(Error::Runtime("service dropped the reanalyze".into())),
+        }
+    }
+
     /// Number of shards running.
     pub fn shard_count(&self) -> usize {
         self.shared.queues.len()

@@ -123,6 +123,10 @@ pub(crate) struct SolveJob {
 pub(crate) enum Control {
     /// Same-pattern value update; flushes earlier solves first.
     Refactor { id: u64, a: Csr, tx: Reply },
+    /// Same-dimension pattern update: warm re-analysis + refactorization
+    /// on the owning shard, with the same barrier contract as
+    /// [`Control::Refactor`].
+    Reanalyze { id: u64, a: Csr, tx: Reply },
     /// A system value arriving on this shard (register / migrate).
     Install { id: u64, system: Box<ShardSystem> },
     /// Remove and return a system value (retire / migrate); earlier
@@ -166,6 +170,7 @@ pub(crate) struct ShardQueue {
     dispatches: AtomicU64,
     rhs_solved: AtomicU64,
     refactors: AtomicU64,
+    reanalyzes: AtomicU64,
     forwarded: AtomicU64,
     refine_iters: AtomicU64,
     precision_fallbacks: AtomicU64,
@@ -195,6 +200,7 @@ impl ShardQueue {
             dispatches: AtomicU64::new(0),
             rhs_solved: AtomicU64::new(0),
             refactors: AtomicU64::new(0),
+            reanalyzes: AtomicU64::new(0),
             forwarded: AtomicU64::new(0),
             refine_iters: AtomicU64::new(0),
             precision_fallbacks: AtomicU64::new(0),
@@ -286,6 +292,7 @@ impl ShardQueue {
         out.dispatches += self.dispatches.load(Ordering::Relaxed);
         out.rhs_solved += self.rhs_solved.load(Ordering::Relaxed);
         out.refactors += self.refactors.load(Ordering::Relaxed);
+        out.reanalyzes += self.reanalyzes.load(Ordering::Relaxed);
         out.forwarded += self.forwarded.load(Ordering::Relaxed);
         out.refine_iters += self.refine_iters.load(Ordering::Relaxed);
         out.precision_fallbacks += self.precision_fallbacks.load(Ordering::Relaxed);
@@ -314,6 +321,9 @@ pub struct ServiceStats {
     pub rhs_solved: u64,
     /// Refactorizations applied.
     pub refactors: u64,
+    /// Live re-analyses applied (same-dimension pattern updates shipped
+    /// through [`super::SolverService::reanalyze`]).
+    pub reanalyzes: u64,
     /// Requests re-routed between shards (routing-epoch staleness during
     /// a move; each costs one queue hop).
     pub forwarded: u64,
@@ -369,6 +379,7 @@ impl ServiceStats {
 enum ParkedJob {
     Solve(Drained<SolveJob>),
     Refactor { seq: u64, id: u64, a: Csr, tx: Reply },
+    Reanalyze { seq: u64, id: u64, a: Csr, tx: Reply },
 }
 
 impl ParkedJob {
@@ -376,6 +387,7 @@ impl ParkedJob {
         match self {
             ParkedJob::Solve(d) => d.seq,
             ParkedJob::Refactor { seq, .. } => *seq,
+            ParkedJob::Reanalyze { seq, .. } => *seq,
         }
     }
 }
@@ -478,7 +490,7 @@ impl ShardWorker {
                         ParkedJob::Solve(d) => {
                             let _ = d.item.tx.send(Err(shutting()));
                         }
-                        ParkedJob::Refactor { tx, .. } => {
+                        ParkedJob::Refactor { tx, .. } | ParkedJob::Reanalyze { tx, .. } => {
                             let _ = tx.send(Err(shutting()));
                         }
                     }
@@ -543,7 +555,8 @@ impl ShardWorker {
 
     fn apply_control(&mut self, seq: u64, ctrl: Control) {
         match ctrl {
-            Control::Refactor { id, a, tx } => self.apply_refactor(seq, id, a, tx),
+            Control::Refactor { id, a, tx } => self.apply_update(seq, id, a, tx, false),
+            Control::Reanalyze { id, a, tx } => self.apply_update(seq, id, a, tx, true),
             Control::Install { id, system } => {
                 self.systems.insert(id, *system);
             }
@@ -554,21 +567,22 @@ impl ShardWorker {
         }
     }
 
-    /// Apply a refactor locally under shard supervision, or
-    /// park/forward/fail it by the current routing epoch when the system
-    /// is not resident here.
+    /// Apply a refactor (or, with `reanalyze`, a same-dimension pattern
+    /// update through the warm re-analysis path) locally under shard
+    /// supervision, or park/forward/fail it by the current routing epoch
+    /// when the system is not resident here.
     ///
     /// Failure handling (the quarantine half of the fault model):
     /// a numeric failure (`ZeroPivot` / `StructurallySingular`) leaves
     /// the system on its previous values (the handle only commits the
     /// new matrix on success) and quarantines it; a caught panic
-    /// quarantines it as `Panic` — the factors may be half-written; a
-    /// refactor that *succeeds* but whose pivot-growth estimate crosses
+    /// quarantines it as `Panic` — the factors may be half-written; an
+    /// update that *succeeds* but whose pivot-growth estimate crosses
     /// the policy limit commits the new values, acks the caller, and
     /// quarantines as `PivotGrowth` (the stored pivot order has gone
     /// rotten — queued solves must not trust it). Recovery is the gated
     /// full re-pivot escalation in [`ShardWorker::check_health`].
-    fn apply_refactor(&mut self, seq: u64, id: u64, a: Csr, tx: Reply) {
+    fn apply_update(&mut self, seq: u64, id: u64, a: Csr, tx: Reply, reanalyze: bool) {
         if self.systems.contains_key(&id) {
             // a quarantined system recovers (or fails fast) before new
             // values are replayed on its stored pivot order
@@ -582,8 +596,19 @@ impl ShardWorker {
                 ))));
                 return;
             };
-            self.queue.refactors.fetch_add(1, Ordering::Relaxed);
-            match catch_unwind(AssertUnwindSafe(|| s.sys.refactor_matrix(a))) {
+            if reanalyze {
+                self.queue.reanalyzes.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.queue.refactors.fetch_add(1, Ordering::Relaxed);
+            }
+            let apply = |s: &mut ShardSystem, a: Csr| {
+                if reanalyze {
+                    s.sys.reanalyze_matrix(a)
+                } else {
+                    s.sys.refactor_matrix(a)
+                }
+            };
+            match catch_unwind(AssertUnwindSafe(|| apply(s, a))) {
                 Ok(Ok(())) => {
                     let g = s.sys.factor_stats().pivot_growth;
                     if !g.is_finite() || g > self.policy.pivot_growth_limit {
@@ -619,14 +644,25 @@ impl ShardWorker {
         };
         match target {
             Some(s) if s == self.shard => {
-                self.parked.push(ParkedJob::Refactor { seq, id, a, tx });
+                let parked = if reanalyze {
+                    ParkedJob::Reanalyze { seq, id, a, tx }
+                } else {
+                    ParkedJob::Refactor { seq, id, a, tx }
+                };
+                self.parked.push(parked);
             }
             Some(s) => {
                 // forwarded with its ORIGINAL admission seq, so it keeps
                 // its barrier order at the destination
                 self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
-                if let Err(Control::Refactor { tx, .. }) =
-                    self.shared.queues[s].push_control(Control::Refactor { id, a, tx }, seq, true)
+                let ctrl = if reanalyze {
+                    Control::Reanalyze { id, a, tx }
+                } else {
+                    Control::Refactor { id, a, tx }
+                };
+                if let Err(
+                    Control::Refactor { tx, .. } | Control::Reanalyze { tx, .. },
+                ) = self.shared.queues[s].push_control(ctrl, seq, true)
                 {
                     let _ = tx.send(Err(Error::Runtime("service is shutting down".into())));
                 }
@@ -654,7 +690,12 @@ impl ShardWorker {
                         self.reroute_solve(d);
                     }
                 }
-                ParkedJob::Refactor { seq, id, a, tx } => self.apply_refactor(seq, id, a, tx),
+                ParkedJob::Refactor { seq, id, a, tx } => {
+                    self.apply_update(seq, id, a, tx, false)
+                }
+                ParkedJob::Reanalyze { seq, id, a, tx } => {
+                    self.apply_update(seq, id, a, tx, true)
+                }
             }
         }
     }

@@ -55,19 +55,34 @@ struct Current {
     shared_u: Vec<u32>,
 }
 
-/// Builder that owns the finalized state.
-struct Builder {
-    nodes: Vec<NodeSym>,
-    row_node: Vec<u32>,
-    lcols: Vec<u32>,
-    ucols: Vec<u32>,
-    groups: Vec<Group>,
-    lu_entries: usize,
-    flops: f64,
-    rows_in_supers: usize,
+/// Builder that owns the finalized state. `pub(crate)` so the
+/// incremental patcher (`symbolic/incremental.rs`) can resume the exact
+/// same row loop from a truncated prefix of a previous analysis.
+pub(crate) struct Builder {
+    pub(crate) nodes: Vec<NodeSym>,
+    pub(crate) row_node: Vec<u32>,
+    pub(crate) lcols: Vec<u32>,
+    pub(crate) ucols: Vec<u32>,
+    pub(crate) groups: Vec<Group>,
+    pub(crate) lu_entries: usize,
+    pub(crate) flops: f64,
+    pub(crate) rows_in_supers: usize,
 }
 
 impl Builder {
+    pub(crate) fn new(n: usize) -> Builder {
+        Builder {
+            nodes: Vec::new(),
+            row_node: vec![u32::MAX; n],
+            lcols: Vec::new(),
+            ucols: Vec::new(),
+            groups: Vec::new(),
+            lu_entries: 0,
+            flops: 0.0,
+            rows_in_supers: 0,
+        }
+    }
+
     /// U-structure of a *finalized* row `k`, for reach queries and flop
     /// counts: implicit in-block columns then the shared tail.
     fn row_u_len(&self, k: usize) -> usize {
@@ -216,17 +231,25 @@ fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
 /// `bulk_threshold` controls the dual-mode schedule split (nodes per level
 /// required to stay in bulk mode).
 pub fn analyze_pattern(a: &Csr, policy: MergePolicy, bulk_threshold: usize) -> Symbolic {
+    let mut b = Builder::new(a.n);
+    run_rows(&mut b, a, policy, 0);
+    finish(b, a.n, bulk_threshold)
+}
+
+/// Run the up-looking row loop for rows `start..n` on top of whatever
+/// finalized state `b` already holds for rows `< start`. Row `i`'s reach
+/// depends only on the finalized nodes covering rows `< i`, so resuming
+/// from a truncated prefix of an earlier analysis reproduces the cold
+/// result bit for bit — the invariant the delta patcher relies on.
+/// Requires that `b`'s nodes partition exactly the rows `0..start` (the
+/// in-progress supernode, if any, must have been finalized).
+pub(crate) fn run_rows(b: &mut Builder, a: &Csr, policy: MergePolicy, start: usize) {
     let n = a.n;
-    let mut b = Builder {
-        nodes: Vec::new(),
-        row_node: vec![u32::MAX; n],
-        lcols: Vec::new(),
-        ucols: Vec::new(),
-        groups: Vec::new(),
-        lu_entries: 0,
-        flops: 0.0,
-        rows_in_supers: 0,
-    };
+    debug_assert_eq!(
+        b.nodes.last().map_or(0, |nd| nd.first as usize + nd.width as usize),
+        start,
+        "builder prefix does not end at the resume row"
+    );
 
     // DFS scratch
     let mut mark = vec![u32::MAX; n];
@@ -235,7 +258,7 @@ pub fn analyze_pattern(a: &Csr, policy: MergePolicy, bulk_threshold: usize) -> S
 
     let mut cur: Option<Current> = None;
 
-    for i in 0..n {
+    for i in start..n {
         // ---- reach of row i ----
         let stamp = i as u32;
         reach.clear();
@@ -369,7 +392,11 @@ pub fn analyze_pattern(a: &Csr, policy: MergePolicy, bulk_threshold: usize) -> S
     if let Some(c) = cur.take() {
         b.finalize(c);
     }
+}
 
+/// Assemble the finished [`Symbolic`] (schedule included) from a builder
+/// whose row loop has run to completion.
+pub(crate) fn finish(b: Builder, n: usize, bulk_threshold: usize) -> Symbolic {
     let schedule = dag::build_schedule(&b.nodes, &b.groups, &b.ucols, &b.row_node, bulk_threshold);
     Symbolic {
         n,

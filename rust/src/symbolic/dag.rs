@@ -12,7 +12,7 @@
 use crate::symbolic::{Group, NodeSym};
 
 /// Levelized dual-mode schedule.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Schedule {
     /// Level of each node (0 = no dependencies).
     pub level: Vec<u32>,

@@ -1,0 +1,274 @@
+//! Pattern-delta symbolic patching for incremental re-analysis.
+//!
+//! The up-looking row loop in [`analyze`](super::analyze) is strictly
+//! sequential: row `i`'s reach is a function of row `i`'s own pattern and
+//! the *finalized* nodes covering rows `< i` only. So when a re-analyzed
+//! matrix differs from the cached pattern only in rows `>= r0`, every
+//! node that ends before the node containing `r0` is byte-for-byte
+//! identical in the cold analysis of the new pattern. The patcher
+//! exploits that: it truncates the previous [`Symbolic`] at the node
+//! containing the first changed permuted row, reconstructs the builder
+//! state for the retained prefix, and replays the identical row loop for
+//! the suffix. The result is **bit-identical** to a cold
+//! [`analyze_pattern`](super::analyze_pattern) of the new pattern under
+//! the same [`MergePolicy`] — not approximately equal: the same `Vec`
+//! contents, the same flop accumulation order, the same schedule.
+//!
+//! The caller (coordinator) decides *whether* to patch: when the edit
+//! touches too many rows the replay saves nothing, and the coordinator
+//! falls back to a full `analyze_pattern` (same inputs, so the fallback
+//! is trivially identical too).
+
+use crate::sparse::csr::Csr;
+use crate::symbolic::analyze::{self, Builder};
+use crate::symbolic::{MergePolicy, Symbolic};
+
+/// Structural diff of two same-dimension permuted patterns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatternDelta {
+    /// First (permuted) row whose column set differs; `None` when the
+    /// structures are identical.
+    pub first_changed: Option<usize>,
+    /// Number of rows whose column sets differ — the "locality" measure
+    /// the coordinator's delta-fraction knob is applied to.
+    pub changed_rows: usize,
+}
+
+/// Compare the structure (indices only, values ignored) of two permuted
+/// patterns row by row. Panics if dimensions differ — the coordinator
+/// routes dimension changes to a full cold analysis before diffing.
+pub fn diff_patterns(old: &Csr, new: &Csr) -> PatternDelta {
+    assert_eq!(old.n, new.n, "diff_patterns requires equal dimensions");
+    let mut first_changed = None;
+    let mut changed_rows = 0usize;
+    for i in 0..old.n {
+        if old.row_indices(i) != new.row_indices(i) {
+            changed_rows += 1;
+            if first_changed.is_none() {
+                first_changed = Some(i);
+            }
+        }
+    }
+    PatternDelta {
+        first_changed,
+        changed_rows,
+    }
+}
+
+/// Result of a successful delta patch, with the replay extent for stats
+/// and gauntlet reporting.
+#[derive(Clone, Debug)]
+pub struct PatchOutcome {
+    /// The patched symbolic analysis (bit-identical to cold).
+    pub sym: Symbolic,
+    /// First row the patcher re-ran the row loop from (the first row of
+    /// the node containing the first changed row).
+    pub replay_start: usize,
+    /// Rows replayed (`n - replay_start`).
+    pub replayed_rows: usize,
+}
+
+/// Patch `prev` for the new permuted pattern `pa`, replaying the row
+/// loop from the node containing `first_changed`.
+///
+/// `policy` and `bulk_threshold` must be the values that produced
+/// `prev` — the coordinator caches them per analysis. The retained
+/// prefix is spliced verbatim; counters (`flops`, `lu_entries`,
+/// `rows_in_supers`) are re-accumulated over the retained nodes in their
+/// original order so even the floating-point flop total matches the cold
+/// run's sequential accumulation exactly.
+pub fn patch_pattern(
+    prev: &Symbolic,
+    pa: &Csr,
+    policy: MergePolicy,
+    bulk_threshold: usize,
+    first_changed: usize,
+) -> PatchOutcome {
+    let n = pa.n;
+    assert_eq!(prev.n, n, "patch_pattern requires equal dimensions");
+    assert!(first_changed < n, "first_changed out of range");
+
+    // The node containing the first changed row is the first node whose
+    // output could differ; everything before it is untouched prefix.
+    let cut = prev.row_node[first_changed] as usize;
+    let cut_node = &prev.nodes[cut];
+    let replay_start = cut_node.first as usize;
+
+    let mut b = if cut == 0 {
+        Builder::new(n)
+    } else {
+        // Allocation in the builder is monotone, so the discarded node's
+        // start offsets are exactly the retained prefix's lengths.
+        let mut row_node = prev.row_node.clone();
+        for r in &mut row_node[replay_start..] {
+            *r = u32::MAX;
+        }
+        let nodes = prev.nodes[..cut].to_vec();
+        let (mut lu_entries, mut flops, mut rows_in_supers) = (0usize, 0.0f64, 0usize);
+        for nd in &nodes {
+            let (w, nl, nu) = (nd.width as usize, nd.nl(), nd.nu());
+            lu_entries += if nd.is_super { w * (nl + w + nu) } else { nl + 1 + nu };
+            flops += nd.flops;
+            if nd.is_super {
+                rows_in_supers += w;
+            }
+        }
+        Builder {
+            nodes,
+            row_node,
+            lcols: prev.lcols[..cut_node.l_start].to_vec(),
+            ucols: prev.ucols[..cut_node.u_start].to_vec(),
+            groups: prev.groups[..cut_node.g_start].to_vec(),
+            lu_entries,
+            flops,
+            rows_in_supers,
+        }
+    };
+
+    analyze::run_rows(&mut b, pa, policy, replay_start);
+    PatchOutcome {
+        sym: analyze::finish(b, n, bulk_threshold),
+        replay_start,
+        replayed_rows: n - replay_start,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen;
+    use crate::symbolic::analyze_pattern;
+    use crate::testutil::for_each_seed;
+
+    /// Rebuild `a` with the entry `(i, j)` added (or removed when
+    /// `remove` is set). Keeps every value at 1.0 — the diff and the
+    /// patch only look at structure.
+    fn edit(a: &Csr, i: usize, j: usize, remove: bool) -> Csr {
+        let mut c = Coo::new(a.n);
+        for r in 0..a.n {
+            for &col in a.row_indices(r) {
+                if remove && r == i && col == j {
+                    continue;
+                }
+                c.push(r, col, 1.0);
+            }
+        }
+        if !remove {
+            c.push(i, j, 1.0);
+        }
+        c.to_csr()
+    }
+
+    fn with_diag(a: &Csr) -> Csr {
+        let mut c = Coo::new(a.n);
+        for r in 0..a.n {
+            for &col in a.row_indices(r) {
+                c.push(r, col, 1.0);
+            }
+            c.push(r, r, 1.0);
+        }
+        c.to_csr()
+    }
+
+    fn check_patch(a0: &Csr, a1: &Csr, policy: MergePolicy) {
+        let prev = analyze_pattern(a0, policy, 4);
+        let delta = diff_patterns(a0, a1);
+        let Some(r0) = delta.first_changed else {
+            assert_eq!(a0.indices, a1.indices);
+            return;
+        };
+        let patched = patch_pattern(&prev, a1, policy, 4, r0);
+        let cold = analyze_pattern(a1, policy, 4);
+        assert_eq!(patched.sym, cold, "patched symbolic differs from cold");
+        assert!(patched.replay_start <= r0);
+        assert_eq!(patched.replayed_rows, a1.n - patched.replay_start);
+    }
+
+    #[test]
+    fn identical_patterns_diff_to_empty_delta() {
+        let a = with_diag(&gen::grid2d(6, 6));
+        let d = diff_patterns(&a, &a);
+        assert_eq!(d.first_changed, None);
+        assert_eq!(d.changed_rows, 0);
+    }
+
+    #[test]
+    fn single_added_entry_patches_bit_identical() {
+        let a0 = with_diag(&gen::grid2d(8, 8));
+        let a1 = edit(&a0, 40, 3, false);
+        for policy in [
+            MergePolicy::None,
+            MergePolicy::Exact { max_width: 16 },
+            MergePolicy::Relaxed {
+                max_width: 16,
+                budget_frac: 0.25,
+                budget_abs: 8,
+            },
+        ] {
+            check_patch(&a0, &a1, policy);
+        }
+    }
+
+    #[test]
+    fn removed_entry_patches_bit_identical() {
+        let a0 = with_diag(&gen::circuit(80, 4));
+        // remove the last off-diagonal entry of a late row
+        let mut target = None;
+        for r in (0..a0.n).rev() {
+            if let Some(&c) = a0.row_indices(r).iter().find(|&&c| c != r) {
+                target = Some((r, c));
+                break;
+            }
+        }
+        let (r, c) = target.expect("pattern has an off-diagonal entry");
+        let a1 = edit(&a0, r, c, true);
+        check_patch(&a0, &a1, MergePolicy::Exact { max_width: 16 });
+    }
+
+    #[test]
+    fn edit_in_row_zero_degenerates_to_full_replay() {
+        let a0 = with_diag(&gen::grid2d(5, 5));
+        let a1 = edit(&a0, 0, a0.n - 1, false);
+        let prev = analyze_pattern(&a0, MergePolicy::Exact { max_width: 8 }, 4);
+        let patched = patch_pattern(&prev, &a1, MergePolicy::Exact { max_width: 8 }, 4, 0);
+        assert_eq!(patched.replay_start, 0);
+        assert_eq!(patched.sym, analyze_pattern(&a1, MergePolicy::Exact { max_width: 8 }, 4));
+    }
+
+    #[test]
+    fn property_random_edits_patch_bit_identical() {
+        for_each_seed(10, |rng| {
+            let n = rng.range(15, 50);
+            let mut c = Coo::new(n);
+            for i in 0..n {
+                c.push(i, i, 4.0);
+                for _ in 0..rng.range(1, 4) {
+                    c.push(i, rng.below(n), 1.0);
+                }
+            }
+            let a0 = c.to_csr();
+            // a batch of random structural edits clustered in the tail
+            let mut a1 = a0.clone();
+            for _ in 0..rng.range(1, 5) {
+                let i = rng.range(n / 2, n);
+                let j = rng.below(n);
+                if i == j {
+                    continue; // keep the structural diagonal
+                }
+                let has = a1.row_indices(i).contains(&j);
+                a1 = edit(&a1, i, j, has);
+            }
+            for policy in [
+                MergePolicy::None,
+                MergePolicy::Exact { max_width: 16 },
+                MergePolicy::Forced {
+                    min_width: 4,
+                    max_width: 16,
+                },
+            ] {
+                check_patch(&a0, &a1, policy);
+            }
+        });
+    }
+}

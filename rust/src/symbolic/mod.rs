@@ -11,15 +11,17 @@
 
 pub mod analyze;
 pub mod dag;
+pub mod incremental;
 
 pub use analyze::{analyze_pattern, MergePolicy};
 pub use dag::Schedule;
+pub use incremental::{diff_patterns, patch_pattern, PatchOutcome, PatternDelta};
 
 /// One node of the factorization: a standalone row (`width == 1` and not
 /// `is_super`) or a supernode panel (consecutive rows with identical —
 /// possibly relaxation-padded — U structure and identical off-block L
 /// structure).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct NodeSym {
     /// First (permuted) row of the node.
     pub first: u32,
@@ -69,7 +71,7 @@ impl NodeSym {
 /// `lcols[l_start + offset .. offset + len]` are a *tail segment* of the
 /// source node's rows (guaranteed by reach semantics; asserted in debug
 /// builds).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Group {
     /// Source node id.
     pub src: u32,
@@ -80,7 +82,7 @@ pub struct Group {
 }
 
 /// Output of symbolic analysis on the permuted pattern.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Symbolic {
     /// Dimension.
     pub n: usize,

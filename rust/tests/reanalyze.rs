@@ -1,0 +1,443 @@
+//! Incremental re-analysis integration tests: the warm / delta-patched /
+//! full tiers of `LinearSystem::reanalyze{,_matrix}` must produce
+//! analyses (and factors, and solves) bit-identical to the full
+//! re-analysis path on the same cached ordering seeds; a warm re-analysis
+//! cycle must spawn zero OS threads and grow no engine arena; the
+//! per-analysis uid must keep the engine's permuted-matrix MRU from ever
+//! serving a stale pattern; the tuner memo must stay keyed by the *new*
+//! pattern hash across a re-analysis; the pivot-stability escalation
+//! controller must ride the adaptive refactor path without disturbing
+//! results; and the service-level live `reanalyze` must match a
+//! sequential `LinearSystem` oracle bit-for-bit across the barrier.
+
+use std::time::Duration;
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::testutil::{for_each_seed, max_abs_diff, Prng};
+
+/// `a` plus one structural entry at `(i, j)` (which must be absent).
+fn with_entry(a: &Csr, i: usize, j: usize, v: f64) -> Csr {
+    debug_assert!(!a.indices[a.indptr[i]..a.indptr[i + 1]].contains(&j));
+    let mut c = Coo::new(a.n);
+    for r in 0..a.n {
+        for k in a.indptr[r]..a.indptr[r + 1] {
+            c.push(r, a.indices[k], a.vals[k]);
+        }
+    }
+    c.push(i, j, v);
+    c.to_csr()
+}
+
+/// A column absent from row `i` (never the diagonal).
+fn absent_col(a: &Csr, i: usize, rng: &mut Prng) -> usize {
+    loop {
+        let j = rng.below(a.n);
+        if j != i && !a.indices[a.indptr[i]..a.indptr[i + 1]].contains(&j) {
+            return j;
+        }
+    }
+}
+
+/// Random local edit: `edits` extra entries scattered over distinct rows.
+fn random_edits(a: &Csr, edits: usize, rng: &mut Prng) -> Csr {
+    let mut cur = a.clone();
+    for _ in 0..edits {
+        let i = rng.below(cur.n);
+        if cur.indptr[i + 1] - cur.indptr[i] >= cur.n - 1 {
+            continue; // row structurally full (modulo the diagonal)
+        }
+        let j = absent_col(&cur, i, rng);
+        cur = with_entry(&cur, i, j, 1e-3);
+    }
+    cur
+}
+
+fn solve_exact(a: &Csr, sys: &LinearSystem<Factored>) -> (Vec<f64>, Vec<f64>) {
+    let xt: Vec<f64> = (0..a.n).map(|i| (i % 5) as f64 - 2.0).collect();
+    let mut b = vec![0.0; a.n];
+    a.matvec(&xt, &mut b);
+    (sys.solve(&b).unwrap(), xt)
+}
+
+#[test]
+fn warm_reanalyze_reuses_the_symbolic_factorization() {
+    let a = gen::grid2d(14, 14);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let sym_before = sys.analysis().sym.clone();
+    let b = gen::rhs_for_ones(&a);
+    let x_before = sys.solve(&b).unwrap();
+
+    // same pattern, perturbed values: the warm tier must reuse the
+    // symbolic factorization outright (structural equality) and solve
+    // the new values correctly
+    let mut a2 = a.clone();
+    for v in &mut a2.vals {
+        *v *= 1.25;
+    }
+    let sys = sys.reanalyze(&a2).unwrap();
+    assert_eq!(sys.reanalysis_kind(), Some(ReanalyzeKind::Warm));
+    assert_eq!(sys.symbolic_stats().replayed_rows, 0);
+    assert_eq!(sys.analysis().sym, sym_before, "warm tier must clone the symbolic");
+    let sys = sys.factor().unwrap();
+    let x_after = sys.solve(&b).unwrap();
+    // A scaled by 1.25 ⇒ x scaled by 1/1.25
+    for (x2, x1) in x_after.iter().zip(&x_before) {
+        assert!((x2 * 1.25 - x1).abs() < 1e-8, "{x2} vs {x1}");
+    }
+}
+
+#[test]
+fn delta_patch_is_bit_identical_to_full_reanalysis() {
+    // the delta patcher and the full symbolic fallback run from the same
+    // cached ordering seeds, so on the same inputs their analyses — and
+    // everything downstream — must be *bit*-identical. Two identically
+    // configured solvers differing only in the delta budget provide the
+    // oracle: frac 0 forces the full path on the very same edit.
+    for a in [gen::grid2d(12, 12), gen::circuit(320, 2), gen::banded(220, 6, 3)] {
+        for_each_seed(4, |rng| {
+            let edited = random_edits(&a, 1 + rng.below(3), rng);
+            let build = |frac: f64| {
+                SolverBuilder::new()
+                    .threads(1)
+                    .reanalyze_delta_frac(frac)
+                    .build()
+                    .unwrap()
+            };
+            let mut via_delta = build(0.25).analyze(&a).unwrap().factor().unwrap();
+            let mut via_full = build(0.0).analyze(&a).unwrap().factor().unwrap();
+            via_delta.reanalyze_matrix(&edited).unwrap();
+            via_full.reanalyze_matrix(&edited).unwrap();
+            assert_eq!(via_delta.reanalysis_kind(), Some(ReanalyzeKind::Delta));
+            assert_eq!(via_full.reanalysis_kind(), Some(ReanalyzeKind::Full));
+            assert!(via_delta.symbolic_stats().replayed_rows > 0);
+            assert_eq!(
+                via_delta.analysis().sym,
+                via_full.analysis().sym,
+                "patched symbolic diverged from the full re-analysis (n={})",
+                a.n
+            );
+            let (xd, xt) = solve_exact(&edited, &via_delta);
+            let (xf, _) = solve_exact(&edited, &via_full);
+            assert_eq!(xd, xf, "delta-patched solve must be bit-identical");
+            assert!(max_abs_diff(&xd, &xt) < 1e-7, "err {}", max_abs_diff(&xd, &xt));
+        });
+    }
+}
+
+#[test]
+fn edits_wider_than_the_budget_fall_back_to_full() {
+    let a = gen::grid2d(10, 10);
+    let mut rng = Prng::new(9);
+    // touch every even row: half the rows change structure, well over
+    // the default 25% delta budget
+    let mut edited = a.clone();
+    for i in (0..a.n).step_by(2) {
+        let j = absent_col(&edited, i, &mut rng);
+        edited = with_entry(&edited, i, j, 1e-3);
+    }
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    sys.reanalyze_matrix(&edited).unwrap();
+    assert_eq!(sys.reanalysis_kind(), Some(ReanalyzeKind::Full));
+    let (x, xt) = solve_exact(&edited, &sys);
+    assert!(max_abs_diff(&x, &xt) < 1e-7);
+}
+
+#[test]
+fn dimension_change_takes_the_cold_path() {
+    let a = gen::grid2d(8, 8);
+    let bigger = gen::grid2d(9, 9);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    sys.reanalyze_matrix(&bigger).unwrap();
+    assert_eq!(sys.reanalysis_kind(), Some(ReanalyzeKind::Full));
+    assert_eq!(sys.n(), bigger.n);
+    let (x, xt) = solve_exact(&bigger, &sys);
+    assert!(max_abs_diff(&x, &xt) < 1e-7);
+}
+
+#[test]
+fn failed_reanalyze_matrix_leaves_the_system_usable() {
+    let a = gen::grid2d(8, 8);
+    let solver = SolverBuilder::new().threads(1).build().unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let x0 = sys.solve(&b).unwrap();
+    // structurally broken input: indptr not monotone
+    let bad = Csr {
+        n: 2,
+        indptr: vec![0, 2, 1],
+        indices: vec![0, 1, 1],
+        vals: vec![1.0, 2.0, 3.0],
+    };
+    assert!(sys.reanalyze_matrix(bad).is_err());
+    // commit-on-success: the old matrix, analysis, and factors survive
+    assert_eq!(sys.reanalysis_kind(), None);
+    assert_eq!(sys.solve(&b).unwrap(), x0);
+}
+
+#[test]
+fn warm_reanalyze_cycle_spawns_nothing_and_keeps_arenas_warm() {
+    let a = gen::grid2d(20, 20);
+    let solver = SolverBuilder::new()
+        .repeated()
+        .threads(3)
+        .configure(|cfg| cfg.parallel_solve_min_n = 0)
+        .build()
+        .unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let b = gen::rhs_for_ones(&a);
+    let mut x = Vec::new();
+
+    // warm-up: one full reanalyze + factor + solve cycle grows every
+    // arena to its high-water mark
+    sys.reanalyze_matrix(&a).unwrap();
+    sys.solve_into(&b, &mut x).unwrap();
+    let spawned = solver.engine().threads_spawned();
+    let allocs = solver.engine().scratch_alloc_events();
+    assert_eq!(spawned, 2, "pool of 3 spawns exactly 2 OS threads");
+
+    let cycles = 3u64;
+    for _ in 0..cycles {
+        sys.reanalyze_matrix(&a).unwrap();
+        assert_eq!(sys.reanalysis_kind(), Some(ReanalyzeKind::Warm));
+        let st = sys.solve_into(&b, &mut x).unwrap();
+        assert!(st.residual < 1e-10, "residual {}", st.residual);
+    }
+    assert_eq!(
+        solver.engine().threads_spawned(),
+        spawned,
+        "warm re-analysis must spawn no OS threads"
+    );
+    // every cycle pays exactly one accounted event: the permuted-matrix
+    // MRU insert under the analysis' fresh uid (the stale-cache defense
+    // working as designed). The worker arenas themselves must not grow.
+    assert_eq!(
+        solver.engine().scratch_alloc_events(),
+        allocs + cycles,
+        "warm re-analysis cycles must not grow any scratch arena"
+    );
+}
+
+#[test]
+fn reanalyzed_system_never_reuses_a_stale_permuted_cache_entry() {
+    // two handles on one engine, one of them re-analyzed to a different
+    // pattern: the per-analysis uid keys the engine's permuted-matrix
+    // MRU, so interleaved refactor/solve traffic must never observe the
+    // other (or the pre-reanalysis) pattern's cached values
+    let a = gen::grid2d(12, 12);
+    let mut rng = Prng::new(17);
+    let edited = random_edits(&a, 2, &mut rng);
+    let solver = SolverBuilder::new()
+        .threads(2)
+        .configure(|cfg| cfg.parallel_solve_min_n = 0)
+        .build()
+        .unwrap();
+    let mut moving = solver.analyze(&a).unwrap().factor().unwrap();
+    let mut pinned = solver.analyze(&a).unwrap().factor().unwrap();
+    moving.reanalyze_matrix(&edited).unwrap();
+    assert_eq!(moving.reanalysis_kind(), Some(ReanalyzeKind::Delta));
+    for _ in 0..4 {
+        moving.refactor(&edited.vals).unwrap();
+        let (xm, xmt) = solve_exact(&edited, &moving);
+        assert!(
+            max_abs_diff(&xm, &xmt) < 1e-7,
+            "stale permuted cache on the re-analyzed handle: err {}",
+            max_abs_diff(&xm, &xmt)
+        );
+        pinned.refactor(&a.vals).unwrap();
+        let (xp, xpt) = solve_exact(&a, &pinned);
+        assert!(
+            max_abs_diff(&xp, &xpt) < 1e-7,
+            "stale permuted cache on the pinned handle: err {}",
+            max_abs_diff(&xp, &xpt)
+        );
+    }
+}
+
+#[test]
+fn tuner_memo_is_keyed_by_the_new_pattern_hash_across_reanalysis() {
+    // re-analysis to a changed pattern re-tunes under the NEW pattern
+    // hash. The memo then serves that exact plan to any later analysis of
+    // the same pattern — and the original pattern's entry must survive
+    // untouched (a collision between the two hashes would cross the plans)
+    let a = gen::grid2d(10, 10);
+    let mut rng = Prng::new(23);
+    let edited = random_edits(&a, 1, &mut rng);
+    let build = || {
+        SolverBuilder::new()
+            .threads(1)
+            .tuning(Tuning::Quick)
+            .build()
+            .unwrap()
+    };
+    let solver = build();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let plan_a = sys.analysis().plan.kernel;
+    sys.reanalyze_matrix(&edited).unwrap();
+    let plan_edited = sys.analysis().plan.kernel;
+    // memo hit: a later analysis of the edited pattern gets the plan the
+    // re-analysis tuned and memoized (timing noise cannot diverge them)
+    let cold_edited = build().analyze(&edited).unwrap();
+    assert_eq!(cold_edited.analysis().plan.kernel, plan_edited);
+    // ...and the original pattern's memo entry was not clobbered
+    let cold_a = build().analyze(&a).unwrap();
+    assert_eq!(cold_a.analysis().plan.kernel, plan_a);
+}
+
+#[test]
+fn adaptive_handles_expose_the_controller_and_default_ones_do_not() {
+    let a = gen::grid2d(8, 8);
+    let plain = SolverBuilder::new().threads(1).build().unwrap();
+    let sys = plain.analyze(&a).unwrap().factor().unwrap();
+    assert!(sys.escalation().is_none(), "adaptive path is opt-in");
+
+    let adaptive = SolverBuilder::new()
+        .threads(1)
+        .adaptive_refactor(true)
+        .build()
+        .unwrap();
+    let sys = adaptive.analyze(&a).unwrap().factor().unwrap();
+    assert!(sys.escalation().is_some());
+}
+
+#[test]
+fn stable_refactor_traces_stay_on_the_replay_tier() {
+    let a = gen::grid2d(12, 12);
+    let solver = SolverBuilder::new()
+        .threads(1)
+        .adaptive_refactor(true)
+        .build()
+        .unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    let steps = 6u64;
+    for k in 0..steps {
+        // gentle value drift: pivot growth stays in its stable band
+        let vals: Vec<f64> = a.vals.iter().map(|v| v * (1.0 + 0.01 * k as f64)).collect();
+        sys.refactor(&vals).unwrap();
+    }
+    let esc = sys.escalation().unwrap();
+    assert_eq!(
+        esc.counts(),
+        (steps, 0, 0),
+        "a stable trace must never leave the replay tier"
+    );
+    assert!(esc.fast_ema().is_finite() && esc.slow_ema().is_finite());
+}
+
+#[test]
+fn forced_reorder_tier_keeps_solves_accurate() {
+    // reorder_growth clamped to 1.0 promotes every refactor to the
+    // secondary within-block reordering tier — results must stay correct
+    // (the reorder is pattern-preserving; the KKT saddle point's
+    // perturbed pivots keep growth strictly above 1, so the clamped
+    // threshold always fires)
+    let a = gen::kkt(120, 40, 7);
+    let solver = SolverBuilder::new()
+        .threads(1)
+        .adaptive_refactor(true)
+        .escalation_thresholds(0.0, 1e30)
+        .build()
+        .unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    for _ in 0..3 {
+        sys.refactor(&a.vals).unwrap();
+        let (x, xt) = solve_exact(&a, &sys);
+        assert!(max_abs_diff(&x, &xt) < 1e-6, "err {}", max_abs_diff(&x, &xt));
+    }
+    let (_, reorders, _) = sys.escalation().unwrap().counts();
+    assert!(reorders > 0, "clamped threshold must engage the reorder tier");
+}
+
+#[test]
+fn tiny_repivot_threshold_forces_full_repivots() {
+    // both thresholds clamp to 1.0: every refactor escalates straight to
+    // a full re-pivoting factorization (KKT pivot growth sits strictly
+    // above 1), the controller resets after each, and results stay correct
+    let a = gen::kkt(120, 40, 3);
+    let solver = SolverBuilder::new()
+        .threads(1)
+        .adaptive_refactor(true)
+        .escalation_thresholds(0.0, 0.0)
+        .build()
+        .unwrap();
+    let mut sys = solver.analyze(&a).unwrap().factor().unwrap();
+    for _ in 0..3 {
+        sys.refactor(&a.vals).unwrap();
+        let (x, xt) = solve_exact(&a, &sys);
+        assert!(max_abs_diff(&x, &xt) < 1e-6);
+    }
+    let (replays, _, repivots) = sys.escalation().unwrap().counts();
+    assert_eq!(replays, 0);
+    assert_eq!(repivots, 3);
+}
+
+/// Shard count from `HYLU_TEST_SHARDS` when set (the CI dynamic job's
+/// 1-vs-4 matrix), both regimes otherwise.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("HYLU_TEST_SHARDS") {
+        Ok(v) => vec![v.parse().expect("HYLU_TEST_SHARDS must be a number")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+#[test]
+fn service_live_reanalyze_matches_a_sequential_oracle() {
+    for shards in shard_counts() {
+        service_reanalyze_once(shards);
+    }
+}
+
+fn service_reanalyze_once(shards: usize) {
+    let a = gen::grid2d(16, 16);
+    let cfg = ServiceConfig {
+        shards,
+        solver: SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        },
+        tick: Duration::ZERO,
+        ..ServiceConfig::default()
+    };
+    let service = SolverService::new(cfg, vec![a.clone()]).unwrap();
+    // identically configured sequential oracle: the deterministic
+    // pipeline makes results bit-comparable
+    let mut oracle = SolverBuilder::new()
+        .threads(1)
+        .build()
+        .unwrap()
+        .analyze(&a)
+        .unwrap()
+        .factor()
+        .unwrap();
+    let b = gen::rhs_for_ones(&a);
+    assert_eq!(service.solve(SystemId(0), b.clone()).unwrap(), oracle.solve(&b).unwrap());
+
+    let mut rng = Prng::new(31 + shards as u64);
+    let edited = random_edits(&a, 2, &mut rng);
+    // barrier contract: tickets admitted before the re-analysis flush
+    // against the old factors, later ones observe the new matrix
+    let before: Vec<_> = (0..4)
+        .map(|_| service.submit(SystemId(0), b.clone()).unwrap())
+        .collect();
+    service.reanalyze(SystemId(0), edited.clone()).unwrap();
+    let after: Vec<_> = (0..4)
+        .map(|_| service.submit(SystemId(0), b.clone()).unwrap())
+        .collect();
+
+    let x_old = oracle.solve(&b).unwrap();
+    oracle.reanalyze_matrix(&edited).unwrap();
+    let x_new = oracle.solve(&b).unwrap();
+    for t in before {
+        assert_eq!(t.wait().unwrap(), x_old, "pre-barrier ticket saw the new matrix");
+    }
+    for t in after {
+        assert_eq!(t.wait().unwrap(), x_new, "post-barrier ticket saw the old matrix");
+    }
+    assert_eq!(service.stats().reanalyzes, 1);
+
+    // routing carries n per system: a size change is rejected up front
+    assert!(service.reanalyze(SystemId(0), gen::grid2d(3, 3)).is_err());
+}

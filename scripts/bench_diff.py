@@ -13,10 +13,19 @@ This script fails loudly (exit 1) when any variant's ratio regresses by
 more than --tolerance (default 15%) against the committed baseline, so a
 kernel-dispatch or packing regression can't slip through a green build.
 
+Schema v4 artifacts additionally carry a `dynamic` array of per-matrix
+timing trajectories over perturbed-pattern sequences: {name, class, n,
+steps, t_cold, t_warm, t_delta (per-step arrays), delta_steps,
+escalation}. The diff reports each matrix's cold/delta mean speedup and
+its per-step delta trajectory against the baseline, failing when the
+speedup regresses by more than --dynamic-tolerance (default 50%; pattern
+re-analysis timings are far noisier than the kernel microbenchmarks).
+
 Row names embed the dispatch tier the run happened to select ("gemm
 8x16k4 vs native"); tiers differ across runners, so names are normalized
 ("vs <tier>", "(<tier>)") before matching. Rows present in only one file
-are reported but never fail the diff — a new variant space needs a
+— including every dynamic row when the baseline predates schema v4 —
+are reported but never fail the diff: a new variant or section needs a
 deliberate --update, not a broken gate.
 
 Stdlib only: CI runners need nothing beyond python3.
@@ -35,13 +44,30 @@ def norm(name):
     return TIER.sub("<tier>", name)
 
 
+def mean(xs):
+    return sum(xs) / len(xs) if xs else 0.0
+
+
 def load(path):
     with open(path) as f:
         doc = json.load(f)
     rows = {}
     for row in doc.get("kernel_ab", []):
         rows[norm(row["name"])] = float(row["ratio"])
-    return doc, rows
+    dyn = {}
+    for row in doc.get("dynamic", []):
+        t_cold = [float(t) for t in row.get("t_cold", [])]
+        t_delta = [float(t) for t in row.get("t_delta", [])]
+        # pre-summarized baseline rows (slim --update output) carry the
+        # speedup directly instead of raw trajectories
+        if "speedup" in row:
+            speedup = float(row["speedup"])
+        elif t_delta and mean(t_delta) > 0.0:
+            speedup = mean(t_cold) / mean(t_delta)
+        else:
+            speedup = 0.0
+        dyn[row["name"]] = {"speedup": speedup, "t_delta": t_delta}
+    return doc, rows, dyn
 
 
 def main():
@@ -57,13 +83,20 @@ def main():
         help="allowed fractional ratio regression before failing (default 0.15)",
     )
     ap.add_argument(
+        "--dynamic-tolerance",
+        type=float,
+        default=0.5,
+        help="allowed fractional cold/delta speedup regression per matrix "
+        "(default 0.5; re-analysis timings are noisy)",
+    )
+    ap.add_argument(
         "--update",
         action="store_true",
         help="rewrite BASELINE from NEW instead of diffing",
     )
     args = ap.parse_args()
 
-    new_doc, new_rows = load(args.new)
+    new_doc, new_rows, new_dyn = load(args.new)
     if not new_rows:
         print(f"FAIL: {args.new} has no kernel_ab rows", file=sys.stderr)
         return 1
@@ -77,13 +110,21 @@ def main():
                 {"name": k, "ratio": round(v, 4)} for k, v in sorted(new_rows.items())
             ],
         }
+        if new_dyn:
+            slim["dynamic"] = [
+                {"name": k, "speedup": round(v["speedup"], 4)}
+                for k, v in sorted(new_dyn.items())
+            ]
         with open(args.baseline, "w") as f:
             json.dump(slim, f, indent=2)
             f.write("\n")
-        print(f"rewrote {args.baseline} from {args.new} ({len(new_rows)} kernel A/B rows)")
+        print(
+            f"rewrote {args.baseline} from {args.new} "
+            f"({len(new_rows)} kernel A/B rows, {len(new_dyn)} dynamic rows)"
+        )
         return 0
 
-    _, base_rows = load(args.baseline)
+    _, base_rows, base_dyn = load(args.baseline)
     if not base_rows:
         print(f"FAIL: {args.baseline} has no kernel_ab rows", file=sys.stderr)
         return 1
@@ -106,19 +147,65 @@ def main():
     for name in sorted(set(new_rows) - set(base_rows)):
         print(f"NEW       {name}: ratio {new_rows[name]:.3f} (no baseline; --update to adopt)")
 
-    if failures:
+    # dynamic per-matrix trajectories (schema v4): shared rows gate on the
+    # cold/delta speedup; rows in only one file never fail (a v3-era
+    # baseline has none, and stays green until a deliberate --update)
+    dyn_failures = []
+    dyn_checked = 0
+    for name in sorted(base_dyn):
+        if name not in new_dyn:
+            print(f"MISSING   dynamic {name}: in baseline but not in new run")
+            continue
+        base, new = base_dyn[name]["speedup"], new_dyn[name]["speedup"]
+        dyn_checked += 1
+        floor = base * (1.0 - args.dynamic_tolerance)
+        if new < floor:
+            dyn_failures.append((name, base, new))
+            verdict = "REGRESSED"
+        else:
+            verdict = "ok"
+        traj = new_dyn[name]["t_delta"]
+        traj_s = ", ".join(f"{t:.2e}" for t in traj) if traj else "summary only"
         print(
-            f"\nFAIL: {len(failures)} of {checked} kernel A/B acceptance ratios "
-            f"regressed by more than {args.tolerance:.0%}:",
-            file=sys.stderr,
+            f"{verdict:9s} dynamic {name}: cold/delta {base:.3f} -> {new:.3f} "
+            f"(floor {floor:.3f}; delta trajectory [{traj_s}])"
         )
-        for name, base, new in failures:
+    for name in sorted(set(new_dyn) - set(base_dyn)):
+        print(
+            f"NEW       dynamic {name}: cold/delta {new_dyn[name]['speedup']:.3f} "
+            f"(no baseline; --update to adopt)"
+        )
+
+    if failures or dyn_failures:
+        if failures:
             print(
-                f"  {name}: {base:.3f} -> {new:.3f} ({new / base - 1.0:+.1%})",
+                f"\nFAIL: {len(failures)} of {checked} kernel A/B acceptance ratios "
+                f"regressed by more than {args.tolerance:.0%}:",
                 file=sys.stderr,
             )
+            for name, base, new in failures:
+                print(
+                    f"  {name}: {base:.3f} -> {new:.3f} ({new / base - 1.0:+.1%})",
+                    file=sys.stderr,
+                )
+        if dyn_failures:
+            print(
+                f"\nFAIL: {len(dyn_failures)} of {dyn_checked} dynamic cold/delta "
+                f"speedups regressed by more than {args.dynamic_tolerance:.0%}:",
+                file=sys.stderr,
+            )
+            for name, base, new in dyn_failures:
+                print(
+                    f"  {name}: {base:.3f} -> {new:.3f} ({new / base - 1.0:+.1%})",
+                    file=sys.stderr,
+                )
         return 1
-    print(f"\nOK: {checked} kernel A/B ratios within {args.tolerance:.0%} of baseline")
+    summary = f"\nOK: {checked} kernel A/B ratios within {args.tolerance:.0%} of baseline"
+    if dyn_checked:
+        summary += (
+            f"; {dyn_checked} dynamic speedups within {args.dynamic_tolerance:.0%}"
+        )
+    print(summary)
     return 0
 
 
