@@ -167,6 +167,16 @@ impl SolverBuilder {
         self
     }
 
+    /// Cold-restart threshold for `reanalyze`: when more than this
+    /// fraction of rows changed structure, re-analysis discards the
+    /// cached matching/scaling/ordering seeds and restarts cold (fresh
+    /// MC64 + fill ordering), keeping only the warm engine. Defaults to
+    /// 0.5; set to 1.0 to always reuse the cached seeds.
+    pub fn reanalyze_cold_frac(mut self, frac: f64) -> SolverBuilder {
+        self.cfg.reanalyze_cold_frac = frac.clamp(0.0, 1.0);
+        self
+    }
+
     /// Enable the pivot-stability escalation controller on the
     /// repeated-refactor path: cheap replay while pivot growth is
     /// stable, a secondary within-supernode-block reordering pass when

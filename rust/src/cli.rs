@@ -629,14 +629,18 @@ fn dynamic_cycle(
     for k in 0..steps {
         let row = cur.n - 1 - (k % (cur.n / 2).max(1));
         let next = add_pattern_entry(&cur, row, 3 * k + 1);
-        // warm: pattern unchanged — symbolic, plan, arenas reused wholesale
+        // warm: pattern unchanged — symbolic, plan, arenas reused
+        // wholesale. The O(nnz) clones happen outside the Instant
+        // windows so the trajectories measure re-analysis cost only.
+        let m = cur.clone();
         let t = std::time::Instant::now();
-        sys.reanalyze_matrix(cur.clone())?;
+        sys.reanalyze_matrix(m)?;
         t_warm.push(t.elapsed().as_secs_f64());
         // delta: one-entry pattern edit — the symbolic DAG is patched
         // from the first changed permuted row
+        let m = next.clone();
         let t = std::time::Instant::now();
-        sys.reanalyze_matrix(next.clone())?;
+        sys.reanalyze_matrix(m)?;
         t_delta.push(t.elapsed().as_secs_f64());
         if sys.reanalysis_kind() == Some(ReanalyzeKind::Delta) {
             deltas += 1;

@@ -151,6 +151,16 @@ pub struct SolverConfig {
     /// in full); the patched result is bit-identical either way, so the
     /// knob trades nothing but time.
     pub reanalyze_delta_frac: f64,
+    /// Cold-restart threshold for `reanalyze`: when more than this
+    /// fraction of rows changed structure, the cached ordering seeds
+    /// (MC64 matching, scalings, fill ordering) are presumed stale and
+    /// the re-analysis routes to a full cold `analyze` — fresh matching
+    /// and ordering — instead of re-running the symbolic phase under the
+    /// old permutations (which could leave structural zeros on the
+    /// permuted diagonal and badly degraded fill). Must be ≥
+    /// [`SolverConfig::reanalyze_delta_frac`] so the delta tier and its
+    /// seed-reusing full fallback stay bit-comparable below the budget.
+    pub reanalyze_cold_frac: f64,
     /// Enable the pivot-stability escalation controller on the
     /// repeated-refactor path: replay while pivot growth is stable,
     /// secondary within-block reorder when the growth EMA trends up,
@@ -216,6 +226,7 @@ impl Default for SolverConfig {
             fault: None,
             pin_fault: false,
             reanalyze_delta_frac: 0.25,
+            reanalyze_cold_frac: 0.5,
             adaptive_refactor: false,
             escalate_reorder_growth: 1e4,
             escalate_repivot_growth: 1e8,
@@ -244,6 +255,8 @@ mod tests {
         assert!(!c.pin_fault);
         assert!(!c.adaptive_refactor);
         assert!(c.reanalyze_delta_frac > 0.0 && c.reanalyze_delta_frac <= 1.0);
+        assert!(c.reanalyze_cold_frac >= c.reanalyze_delta_frac);
+        assert!(c.reanalyze_cold_frac <= 1.0);
         assert!(c.escalate_reorder_growth <= c.escalate_repivot_growth);
     }
 

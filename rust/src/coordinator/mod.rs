@@ -459,8 +459,12 @@ impl Solver {
     ///   changed structure, otherwise re-analyzed in full under the same
     ///   merge policy. Either way the result is bit-identical to the
     ///   other path on the same inputs.
-    /// - **Changed dimension** — full cold analysis (only the engine and
-    ///   its arenas are warm).
+    /// - **Changed dimension, or more than
+    ///   [`SolverConfig::reanalyze_cold_frac`] of rows changed** — full
+    ///   cold analysis with fresh matching and ordering (only the engine
+    ///   and its arenas are warm): far-moved patterns would leave the
+    ///   cached seeds with structural zeros on the permuted diagonal
+    ///   and degraded fill.
     ///
     /// The returned analysis always carries a fresh [`Analysis::uid`], so
     /// the engine's permuted-value MRU can never serve a stale pattern.
@@ -510,6 +514,15 @@ impl Solver {
         // patterns and patch or fall back (bit-identical either way)
         let t2 = Instant::now();
         let delta = incremental::diff_patterns(&prev.pa, &pa);
+        if delta.changed_rows as f64 > self.cfg.reanalyze_cold_frac * a.n as f64 {
+            // the pattern moved too far for the cached matching/ordering
+            // to stay meaningful (stale seeds risk structural zeros on
+            // the permuted diagonal and degraded fill) — restart cold,
+            // keeping only the warm engine and its arenas
+            let mut an = self.analyze_core(a)?;
+            an.stats.reanalysis = Some(ReanalyzeKind::Full);
+            return Ok(an);
+        }
         let budget = self.cfg.reanalyze_delta_frac * a.n as f64;
         let (sym, kind, replayed) = match delta.first_changed {
             Some(r0) if (delta.changed_rows as f64) <= budget => {

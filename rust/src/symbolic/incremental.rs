@@ -7,7 +7,9 @@
 //! node that ends before the node containing `r0` is byte-for-byte
 //! identical in the cold analysis of the new pattern. The patcher
 //! exploits that: it truncates the previous [`Symbolic`] at the node
-//! containing the first changed permuted row, reconstructs the builder
+//! containing the first changed permuted row (one node earlier when the
+//! changed row starts its node — the cold run still has the preceding
+//! node open as a merge candidate there), reconstructs the builder
 //! state for the retained prefix, and replays the identical row loop for
 //! the suffix. The result is **bit-identical** to a cold
 //! [`analyze_pattern`](super::analyze_pattern) of the new pattern under
@@ -61,8 +63,9 @@ pub fn diff_patterns(old: &Csr, new: &Csr) -> PatternDelta {
 pub struct PatchOutcome {
     /// The patched symbolic analysis (bit-identical to cold).
     pub sym: Symbolic,
-    /// First row the patcher re-ran the row loop from (the first row of
-    /// the node containing the first changed row).
+    /// First row the patcher re-ran the row loop from: the first row of
+    /// the node containing the first changed row, or of that node's
+    /// predecessor when the changed row starts its node.
     pub replay_start: usize,
     /// Rows replayed (`n - replay_start`).
     pub replayed_rows: usize,
@@ -89,8 +92,19 @@ pub fn patch_pattern(
     assert!(first_changed < n, "first_changed out of range");
 
     // The node containing the first changed row is the first node whose
-    // output could differ; everything before it is untouched prefix.
-    let cut = prev.row_node[first_changed] as usize;
+    // output could differ; everything before it is untouched prefix —
+    // with one wrinkle. When the changed row IS its node's first row,
+    // the cold analysis of the new pattern still has the *preceding*
+    // node open as the merge candidate at that row, and the row's new
+    // structure may now pass the merge test the old structure failed.
+    // Back up one node so the replay rebuilds that candidate as the
+    // in-progress supernode. One node suffices: the preceding node's
+    // own start decision was made against unchanged earlier rows, so
+    // the cold run reproduces it verbatim.
+    let mut cut = prev.row_node[first_changed] as usize;
+    if cut > 0 && prev.nodes[cut].first as usize == first_changed {
+        cut -= 1;
+    }
     let cut_node = &prev.nodes[cut];
     let replay_start = cut_node.first as usize;
 
@@ -234,6 +248,45 @@ mod tests {
         let patched = patch_pattern(&prev, &a1, MergePolicy::Exact { max_width: 8 }, 4, 0);
         assert_eq!(patched.replay_start, 0);
         assert_eq!(patched.sym, analyze_pattern(&a1, MergePolicy::Exact { max_width: 8 }, 4));
+    }
+
+    #[test]
+    fn edit_matching_open_predecessor_merges_across_the_cut() {
+        // Regression: when the first changed row is the FIRST row of its
+        // node, the cold analysis of the edited pattern still has the
+        // preceding node open as the merge candidate at that row. Here
+        // row 2's edit makes it exactly match row 1's U structure under
+        // Exact merging, so cold analysis fuses rows 1..=2 — a patch
+        // that replays from row 2 against a finalized prefix can never
+        // reproduce that merge.
+        let mut c = Coo::new(5);
+        c.push(0, 0, 1.0);
+        c.push(0, 3, 1.0);
+        c.push(1, 1, 1.0);
+        c.push(1, 2, 1.0);
+        c.push(1, 4, 1.0);
+        c.push(2, 2, 1.0);
+        c.push(2, 3, 1.0);
+        c.push(3, 3, 1.0);
+        c.push(4, 4, 1.0);
+        let a0 = c.to_csr();
+        // row 2: {2,3} -> {2,4}, identical to row 1's tail at row 2
+        let a1 = edit(&edit(&a0, 2, 3, true), 2, 4, false);
+        let policy = MergePolicy::Exact { max_width: 8 };
+
+        let prev = analyze_pattern(&a0, policy, 4);
+        let nd = &prev.nodes[prev.row_node[2] as usize];
+        assert_eq!(nd.first, 2, "setup: row 2 must start its node in prev");
+        let cold = analyze_pattern(&a1, policy, 4);
+        assert_eq!(
+            cold.row_node[1], cold.row_node[2],
+            "setup: cold analysis must merge rows 1 and 2"
+        );
+
+        let patched = patch_pattern(&prev, &a1, policy, 4, 2);
+        assert_eq!(patched.replay_start, 1, "replay must back up one node");
+        assert_eq!(patched.sym, cold, "patched symbolic differs from cold");
+        check_patch(&a0, &a1, policy);
     }
 
     #[test]

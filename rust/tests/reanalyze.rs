@@ -146,6 +146,38 @@ fn edits_wider_than_the_budget_fall_back_to_full() {
 }
 
 #[test]
+fn massive_pattern_changes_restart_with_fresh_ordering() {
+    // beyond `reanalyze_cold_frac` of changed rows the cached matching/
+    // scaling/ordering seeds are dropped: the re-analysis must be a true
+    // cold restart, bit-identical to `Solver::analyze` of the new matrix
+    // (same fresh ordering), not a symbolic re-run under stale seeds
+    let a = gen::grid2d(10, 10);
+    let mut rng = Prng::new(41);
+    let mut edited = a.clone();
+    for i in 0..a.n {
+        if edited.indptr[i + 1] - edited.indptr[i] >= edited.n - 1 {
+            continue;
+        }
+        let j = absent_col(&edited, i, &mut rng);
+        edited = with_entry(&edited, i, j, 1e-3);
+    }
+    let build = || SolverBuilder::new().threads(1).build().unwrap();
+    let mut sys = build().analyze(&a).unwrap().factor().unwrap();
+    sys.reanalyze_matrix(&edited).unwrap();
+    assert_eq!(sys.reanalysis_kind(), Some(ReanalyzeKind::Full));
+    let cold = build().analyze(&edited).unwrap().factor().unwrap();
+    assert_eq!(
+        sys.analysis().sym,
+        cold.analysis().sym,
+        "cold restart must match Solver::analyze bit for bit"
+    );
+    let (x, xt) = solve_exact(&edited, &sys);
+    let (xc, _) = solve_exact(&edited, &cold);
+    assert_eq!(x, xc);
+    assert!(max_abs_diff(&x, &xt) < 1e-7);
+}
+
+#[test]
 fn dimension_change_takes_the_cold_path() {
     let a = gen::grid2d(8, 8);
     let bigger = gen::grid2d(9, 9);
