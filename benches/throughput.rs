@@ -16,6 +16,13 @@
 //! adaptive tick must reach a mean batch width >= the static tick's at
 //! equal or lower p50 latency (5% tolerance).
 //!
+//! A second experiment measures shard-set elasticity overhead: the same
+//! workload against a static 2-shard set vs. one that breathes 2 <-> 4
+//! (live `grow`/`rebalance`/`shrink`) for the whole run. The gap is the
+//! price of topology churn; `max tick` reports the longest window a
+//! dispatcher actually slept (not the requested window), so an
+//! uninterruptible-sleep regression shows up here directly.
+//!
 //! ```bash
 //! cargo bench --bench throughput
 //! ```
@@ -101,6 +108,89 @@ fn run_service(
         mean_batch: st.mean_batch(),
         max_batch: st.max_batch,
     }
+}
+
+/// One elastic-overhead measurement: `nsys` systems over `shards`
+/// shards, callers hammering `solve` while (optionally) a breather
+/// thread grows the set to `grow_to` and drains it back, repeatedly.
+fn run_elastic(
+    cfg: &SolverConfig,
+    a: &hylu::sparse::csr::Csr,
+    callers: usize,
+    requests: usize,
+    shards: usize,
+    grow_to: usize,
+) -> (ServiceRun, u64, u64) {
+    let nsys = 4usize;
+    let systems: Vec<_> = (0..nsys)
+        .map(|s| {
+            let mut m = a.clone();
+            let f = 1.0 + 0.1 * s as f64;
+            for v in &mut m.vals {
+                *v *= f;
+            }
+            m
+        })
+        .collect();
+    let bs: Vec<Vec<f64>> = systems.iter().map(gen::rhs_for_ones).collect();
+    let service = SolverService::new(
+        ServiceConfig {
+            shards,
+            solver: cfg.clone(),
+            max_batch: 64,
+            tick: Duration::from_micros(50),
+            tick_max: Duration::from_millis(2),
+            ..ServiceConfig::default()
+        },
+        systems,
+    )
+    .expect("service");
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let (t, mut lat) = std::thread::scope(|sc| {
+        let breather = (grow_to > shards).then(|| {
+            let (service, stop) = (&service, &stop);
+            sc.spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    while service.shard_count() < grow_to {
+                        service.grow(1).expect("grow");
+                        service.rebalance().expect("rebalance");
+                        std::thread::sleep(Duration::from_micros(500));
+                    }
+                    while service.shard_count() > shards {
+                        service.shrink(1).expect("shrink");
+                        std::thread::sleep(Duration::from_micros(500));
+                    }
+                }
+            })
+        });
+        let out = drive(callers, requests, || {
+            let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % nsys;
+            let x = service.solve(SystemId(k as u64), bs[k].to_vec()).expect("service solve");
+            assert!(x.iter().all(|v| (v - 1.0).abs() < 1e-6));
+        });
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = breather {
+            h.join().expect("breather");
+        }
+        out
+    });
+    // settle so the drained shards' stats fold into the totals
+    while service.shard_count() > shards {
+        service.shrink(1).expect("settle shrink");
+    }
+    let st = service.stats();
+    drop(service);
+    (
+        ServiceRun {
+            rate: requests as f64 / t,
+            p50_us: p50(&mut lat) * 1e6,
+            mean_batch: st.mean_batch(),
+            max_batch: st.max_batch,
+        },
+        st.max_tick.as_micros() as u64,
+        st.moves,
+    )
 }
 
 fn main() {
@@ -219,4 +309,40 @@ fn main() {
             if lat_ok { "ok" } else { "MISS" },
         );
     }
+
+    // elasticity overhead: static 2-shard set vs. one breathing 2 <-> 4
+    // under the same load. `max tick` is the longest window a dispatcher
+    // actually slept — the SLO-aware wait keeps it preemptible even
+    // while the topology churns.
+    let callers = 8usize;
+    let mut elastic_table = Table::new(
+        "shard-set elasticity, 8 callers over 4 systems: static vs breathing 2 <-> 4",
+        &["mode", "sol/s", "p50 us", "mean batch", "max tick us", "moves"],
+    );
+    let (stat, stat_tick, stat_moves) = run_elastic(&cfg, &a, callers, requests, 2, 2);
+    elastic_table.row(
+        vec![
+            "static 2".into(),
+            format!("{:.0}", stat.rate),
+            format!("{:.0}", stat.p50_us),
+            format!("{:.2}", stat.mean_batch),
+            stat_tick.to_string(),
+            stat_moves.to_string(),
+        ],
+        1.0,
+    );
+    let (ela, ela_tick, ela_moves) = run_elastic(&cfg, &a, callers, requests, 2, 4);
+    elastic_table.row(
+        vec![
+            "breathe 2<->4".into(),
+            format!("{:.0}", ela.rate),
+            format!("{:.0}", ela.p50_us),
+            format!("{:.2}", ela.mean_batch),
+            ela_tick.to_string(),
+            ela_moves.to_string(),
+        ],
+        ela.rate / stat.rate.max(1e-12),
+    );
+    println!();
+    elastic_table.print();
 }

@@ -156,12 +156,14 @@ void hylu_free(hylu_handle h);
 /* ---- Elastic solve service ------------------------------------------
  *
  * Mirrors the Rust SolverService: a sharded, request-coalescing front
- * door whose systems come and go on a live service. Matrices enter
- * with hylu_service_register (same CSR contract as hylu_analyze, plus
- * an internal factorization); requests are routed by the returned id;
- * hylu_service_retire drains in-flight work for the system before
- * dropping its factors; hylu_service_rebalance moves hot systems onto
- * quiet shards by observed load. Ids are never reused.
+ * door whose systems — and whose *shard set* — come and go on a live
+ * service. Matrices enter with hylu_service_register (same CSR contract
+ * as hylu_analyze, plus an internal factorization); requests are routed
+ * by the returned id; hylu_service_retire drains in-flight work for the
+ * system before dropping its factors; hylu_service_rebalance moves hot
+ * systems onto quiet shards by observed load; hylu_service_grow /
+ * hylu_service_shrink add and drain dispatcher threads under traffic.
+ * Ids are never reused.
  *
  * Like hylu_handle, a hylu_service handle is not thread-safe at the
  * ABI: serialize calls per handle (concurrent submission is a Rust-API
@@ -184,14 +186,92 @@ int32_t hylu_service_register(hylu_service s, int64_t n, const int64_t *ap,
  * drop. Later calls with the id fail with HYLU_ERR_INVALID. */
 int32_t hylu_service_retire(hylu_service s, uint64_t id);
 
-/* Solve A x = b on system `id` through the coalescing queue (blocking;
- * b and x are length-n arrays for that system). */
+/* Solve A x = b on system `id` through the coalescing queue (blocking,
+ * bulk lane; b and x are length-n arrays for that system). */
 int32_t hylu_service_solve(hylu_service s, uint64_t id, const double *b,
                            double *x);
+
+/* hylu_service_solve on the deadline lane: dispatches ahead of bulk
+ * traffic, earliest deadline first. deadline_us is relative to now in
+ * microseconds. When the service expires deadlines, a request whose
+ * deadline passes before dispatch fails with HYLU_ERR_DEADLINE_EXPIRED
+ * — and the dispatcher's coalescing sleep is clamped by the earliest
+ * queued deadline minus a dispatch margin, so an admitted-live request
+ * is never expired by the shard's own sleep. */
+int32_t hylu_service_solve_deadline(hylu_service s, uint64_t id,
+                                    const double *b, double *x,
+                                    uint64_t deadline_us);
+
+/* Per-call refinement overrides for hylu_service_solve_opts. Negative
+ * numeric knobs (and precision 0) fall back to the service solver's
+ * configured defaults. Requests carrying different overrides are never
+ * coalesced into one block dispatch. */
+typedef struct hylu_solve_opts_s {
+    int64_t refine_max_iter; /* < 0 default; 0 disables refinement */
+    double refine_tol;       /* < 0 default */
+    double refine_target;    /* < 0 default */
+    int32_t precision;       /* 0 default, 1 force f64, 2 mixed */
+} hylu_solve_opts;
+
+/* hylu_service_solve with per-call overrides (opts may be NULL for
+ * all-default, which is bit-identical to hylu_service_solve). */
+int32_t hylu_service_solve_opts(hylu_service s, uint64_t id, const double *b,
+                                double *x, const hylu_solve_opts *opts);
+
+/* Batched service solve: nrhs right-hand sides packed column-after-
+ * column (b + q*n) are all submitted before any is waited on, so they
+ * coalesce into wide block dispatches. Column q is bit-identical to a
+ * scalar hylu_service_solve of that column. On failure the first error
+ * in submission order is returned; columns whose requests succeeded are
+ * still written. */
+int32_t hylu_service_solve_many(hylu_service s, uint64_t id, int64_t nrhs,
+                                const double *b, double *x);
 
 /* Move hot systems onto quiet shards by observed load; writes the
  * number of systems moved to *moved (may be NULL). */
 int32_t hylu_service_rebalance(hylu_service s, int64_t *moved);
+
+/* Grow the shard set by k dispatcher threads on the live service;
+ * writes the new shard count to *out_shards (may be NULL). New shards
+ * start empty — follow with hylu_service_rebalance to move load. */
+int32_t hylu_service_grow(hylu_service s, int64_t k, int64_t *out_shards);
+
+/* Shrink the shard set by k dispatcher threads (at least one must
+ * remain): resident systems migrate off the draining shards, queued
+ * work drains, the threads join; no accepted request is lost. Writes
+ * the new shard count to *out_shards (may be NULL). */
+int32_t hylu_service_shrink(hylu_service s, int64_t k, int64_t *out_shards);
+
+/* Number of shard dispatcher threads currently running (0 for NULL). */
+int64_t hylu_service_shards(hylu_service s);
+
+/* Aggregate service counters (append-only struct; includes shards
+ * already drained by hylu_service_shrink). */
+typedef struct hylu_service_stats_s {
+    uint64_t requests;          /* solve requests accepted */
+    uint64_t deadline_requests; /* subset on the deadline lane */
+    uint64_t dispatches;        /* batched block dispatches issued */
+    uint64_t rhs_solved;        /* right-hand sides solved */
+    uint64_t refactors;         /* refactorizations applied */
+    uint64_t reanalyzes;        /* live re-analyses applied */
+    uint64_t forwarded;         /* requests re-routed between shards */
+    uint64_t refine_iters;      /* refinement rounds executed */
+    uint64_t registers;         /* systems registered (lifetime) */
+    uint64_t retires;           /* systems retired */
+    uint64_t moves;             /* systems moved between shards */
+    uint64_t panics_caught;     /* panics caught by shard supervision */
+    uint64_t quarantines;       /* healthy -> quarantined transitions */
+    uint64_t recoveries;        /* successful quarantine recoveries */
+    uint64_t expired;           /* deadline requests expired pre-dispatch */
+    uint64_t shed;              /* bulk requests shed at admission */
+    uint64_t max_batch;         /* widest single batch dispatched */
+    double mean_batch;          /* mean RHS per block dispatch */
+    uint64_t max_tick_us;       /* widest coalescing wait actually slept
+                                 * (measured after preemption), in us */
+} hylu_service_stats_t;
+
+/* Snapshot the service's aggregate counters into *out. */
+int32_t hylu_service_stats(hylu_service s, hylu_service_stats_t *out);
 
 /* Health of a registered system. Quarantined systems fail solves fast
  * with HYLU_ERR_QUARANTINED until a supervised full refactorization

@@ -1,0 +1,383 @@
+"""ctypes bindings over the hylu C ABI (the `libhylu` cdylib built with
+`cargo build --release --features ffi`).
+
+Two front doors, mirroring `include/hylu.h`:
+
+- `Handle`: the one-system Analyze/Factorize/ReFactorize/Solve lifecycle.
+- `Service`: the sharded, coalescing, *elastic* solve service — register
+  CSR systems on a live service, solve on the bulk or deadline lane with
+  optional per-call refinement overrides, batch-submit many right-hand
+  sides, grow/shrink the shard set under traffic, and read the aggregate
+  serving counters.
+
+The bindings are dependency-free (pure ctypes; plain Python sequences in
+and lists out). The shared library is located from, in order: an
+explicit `path=` argument, the `HYLU_LIB` environment variable, the
+crate's own `target/release/` next to this file, and the system loader.
+
+    import hylu
+    svc = hylu.Service(shards=2, threads=1)
+    sid = svc.register(n, ap, ai, ax)              # 0-based CSR
+    x = svc.solve(sid, b)                          # bulk lane
+    x = svc.solve_deadline(sid, b, deadline_us=5000)
+    xs = svc.solve_many(sid, [b0, b1, b2])         # one coalesced batch
+    svc.grow(2); svc.rebalance(); svc.shrink(1)    # elastic shard set
+    print(svc.stats()["requests"], svc.stats()["max_tick_us"])
+    svc.close()
+"""
+
+import ctypes
+import ctypes.util
+import os
+
+HYLU_OK = 0
+HYLU_ERR_PANIC = 1
+HYLU_ERR_INVALID = 2
+HYLU_ERR_IO = 3
+HYLU_ERR_SINGULAR = 4
+HYLU_ERR_ZERO_PIVOT = 5
+HYLU_ERR_RUNTIME = 6
+HYLU_ERR_SHARD_PANICKED = 7
+HYLU_ERR_DEADLINE_EXPIRED = 8
+HYLU_ERR_QUARANTINED = 9
+
+HEALTH_OK = 0
+HEALTH_ZERO_PIVOT = 1
+HEALTH_SINGULAR = 2
+HEALTH_PIVOT_GROWTH = 3
+HEALTH_PANIC = 4
+
+PRECISION_DEFAULT = 0
+PRECISION_F64 = 1
+PRECISION_MIXED = 2
+
+
+class HyluError(RuntimeError):
+    """A non-zero status from the C ABI, carrying the stable code and the
+    handle's last-error message."""
+
+    def __init__(self, code, message=""):
+        self.code = code
+        super().__init__(f"hylu error {code}: {message}" if message else f"hylu error {code}")
+
+
+class SolveOpts(ctypes.Structure):
+    """Per-call refinement overrides (`hylu_solve_opts` in hylu.h).
+    Negative numeric knobs and precision 0 mean "use the configured
+    default"."""
+
+    _fields_ = [
+        ("refine_max_iter", ctypes.c_int64),
+        ("refine_tol", ctypes.c_double),
+        ("refine_target", ctypes.c_double),
+        ("precision", ctypes.c_int32),
+    ]
+
+    def __init__(self, refine_max_iter=-1, refine_tol=-1.0, refine_target=-1.0,
+                 precision=PRECISION_DEFAULT):
+        super().__init__(refine_max_iter, refine_tol, refine_target, precision)
+
+
+class ServiceStats(ctypes.Structure):
+    """Aggregate serving counters (`hylu_service_stats_t` in hylu.h)."""
+
+    _fields_ = [
+        ("requests", ctypes.c_uint64),
+        ("deadline_requests", ctypes.c_uint64),
+        ("dispatches", ctypes.c_uint64),
+        ("rhs_solved", ctypes.c_uint64),
+        ("refactors", ctypes.c_uint64),
+        ("reanalyzes", ctypes.c_uint64),
+        ("forwarded", ctypes.c_uint64),
+        ("refine_iters", ctypes.c_uint64),
+        ("registers", ctypes.c_uint64),
+        ("retires", ctypes.c_uint64),
+        ("moves", ctypes.c_uint64),
+        ("panics_caught", ctypes.c_uint64),
+        ("quarantines", ctypes.c_uint64),
+        ("recoveries", ctypes.c_uint64),
+        ("expired", ctypes.c_uint64),
+        ("shed", ctypes.c_uint64),
+        ("max_batch", ctypes.c_uint64),
+        ("mean_batch", ctypes.c_double),
+        ("max_tick_us", ctypes.c_uint64),
+    ]
+
+    def as_dict(self):
+        return {name: getattr(self, name) for name, _ in self._fields_}
+
+
+def find_library():
+    """Locate the hylu cdylib without loading it; None when absent."""
+    env = os.environ.get("HYLU_LIB")
+    if env:
+        return env if os.path.exists(env) else None
+    here = os.path.dirname(os.path.abspath(__file__))
+    for ext in (".so", ".dylib"):
+        cand = os.path.join(here, os.pardir, "target", "release", "libhylu" + ext)
+        if os.path.exists(cand):
+            return os.path.normpath(cand)
+    return ctypes.util.find_library("hylu")
+
+
+_I64P = ctypes.POINTER(ctypes.c_int64)
+_F64P = ctypes.POINTER(ctypes.c_double)
+
+
+def _declare(lib):
+    """Pin argtypes/restypes for every entry point this module calls."""
+    h, s = ctypes.c_void_p, ctypes.c_void_p
+    decls = {
+        "hylu_create": ([ctypes.c_int64, ctypes.c_int32, ctypes.POINTER(h)], ctypes.c_int32),
+        "hylu_analyze": ([h, ctypes.c_int64, _I64P, _I64P, _F64P], ctypes.c_int32),
+        "hylu_factorize": ([h], ctypes.c_int32),
+        "hylu_refactorize": ([h, _F64P], ctypes.c_int32),
+        "hylu_reanalyze": ([h, ctypes.c_int64, _I64P, _I64P, _F64P], ctypes.c_int32),
+        "hylu_solve": ([h, _F64P, _F64P], ctypes.c_int32),
+        "hylu_solve_many": ([h, ctypes.c_int64, _F64P, _F64P], ctypes.c_int32),
+        "hylu_n": ([h], ctypes.c_int64),
+        "hylu_nnz": ([h], ctypes.c_int64),
+        "hylu_last_error": ([h], ctypes.c_char_p),
+        "hylu_free": ([h], None),
+        "hylu_service_create": ([ctypes.c_int64, ctypes.c_int64, ctypes.POINTER(s)], ctypes.c_int32),
+        "hylu_service_register": ([s, ctypes.c_int64, _I64P, _I64P, _F64P,
+                                   ctypes.POINTER(ctypes.c_uint64)], ctypes.c_int32),
+        "hylu_service_retire": ([s, ctypes.c_uint64], ctypes.c_int32),
+        "hylu_service_solve": ([s, ctypes.c_uint64, _F64P, _F64P], ctypes.c_int32),
+        "hylu_service_solve_deadline": ([s, ctypes.c_uint64, _F64P, _F64P, ctypes.c_uint64],
+                                        ctypes.c_int32),
+        "hylu_service_solve_opts": ([s, ctypes.c_uint64, _F64P, _F64P,
+                                     ctypes.POINTER(SolveOpts)], ctypes.c_int32),
+        "hylu_service_solve_many": ([s, ctypes.c_uint64, ctypes.c_int64, _F64P, _F64P],
+                                    ctypes.c_int32),
+        "hylu_service_rebalance": ([s, _I64P], ctypes.c_int32),
+        "hylu_service_grow": ([s, ctypes.c_int64, _I64P], ctypes.c_int32),
+        "hylu_service_shrink": ([s, ctypes.c_int64, _I64P], ctypes.c_int32),
+        "hylu_service_shards": ([s], ctypes.c_int64),
+        "hylu_service_stats": ([s, ctypes.POINTER(ServiceStats)], ctypes.c_int32),
+        "hylu_service_health": ([s, ctypes.c_uint64], ctypes.c_int32),
+        "hylu_service_last_error": ([s], ctypes.c_char_p),
+        "hylu_service_free": ([s], None),
+    }
+    for name, (argtypes, restype) in decls.items():
+        fn = getattr(lib, name)
+        fn.argtypes = argtypes
+        fn.restype = restype
+    return lib
+
+
+_LIB = None
+
+
+def load(path=None):
+    """Load (and memoize) the hylu cdylib."""
+    global _LIB
+    if path is None and _LIB is not None:
+        return _LIB
+    libpath = path or find_library()
+    if not libpath:
+        raise OSError(
+            "libhylu not found: build with `cargo build --release --features ffi` "
+            "or point HYLU_LIB at the cdylib"
+        )
+    lib = _declare(ctypes.CDLL(libpath))
+    if path is None:
+        _LIB = lib
+    return lib
+
+
+def _f64_array(values):
+    return (ctypes.c_double * len(values))(*values)
+
+
+def _i64_array(values):
+    return (ctypes.c_int64 * len(values))(*values)
+
+
+class _Csr:
+    """Validated-enough CSR triple marshalled to ctypes arrays (the Rust
+    side re-validates thoroughly)."""
+
+    def __init__(self, n, ap, ai, ax):
+        if len(ap) != n + 1:
+            raise ValueError(f"ap must have n+1 = {n + 1} entries, got {len(ap)}")
+        if len(ai) != ap[n] or len(ax) != ap[n]:
+            raise ValueError(f"ai/ax must have ap[n] = {ap[n]} entries")
+        self.n = n
+        self.ap = _i64_array(ap)
+        self.ai = _i64_array(ai)
+        self.ax = _f64_array(ax)
+
+
+class Handle:
+    """The one-system lifecycle handle (`hylu_handle`)."""
+
+    def __init__(self, threads=0, repeated=True, lib=None, path=None):
+        self._lib = lib or load(path)
+        self._h = ctypes.c_void_p()
+        code = self._lib.hylu_create(threads, 1 if repeated else 0, ctypes.byref(self._h))
+        if code != HYLU_OK:
+            raise HyluError(code)
+
+    def _check(self, code):
+        if code != HYLU_OK:
+            raise HyluError(code, self._lib.hylu_last_error(self._h).decode())
+
+    def analyze(self, n, ap, ai, ax):
+        a = _Csr(n, ap, ai, ax)
+        self._check(self._lib.hylu_analyze(self._h, a.n, a.ap, a.ai, a.ax))
+
+    def factorize(self):
+        self._check(self._lib.hylu_factorize(self._h))
+
+    def refactorize(self, ax):
+        self._check(self._lib.hylu_refactorize(self._h, _f64_array(ax)))
+
+    def reanalyze(self, n, ap, ai, ax):
+        a = _Csr(n, ap, ai, ax)
+        self._check(self._lib.hylu_reanalyze(self._h, a.n, a.ap, a.ai, a.ax))
+
+    def solve(self, b):
+        n = self._lib.hylu_n(self._h)
+        x = (ctypes.c_double * n)()
+        self._check(self._lib.hylu_solve(self._h, _f64_array(b), x))
+        return list(x)
+
+    @property
+    def n(self):
+        return self._lib.hylu_n(self._h)
+
+    @property
+    def nnz(self):
+        return self._lib.hylu_nnz(self._h)
+
+    def close(self):
+        if self._h:
+            self._lib.hylu_free(self._h)
+            self._h = ctypes.c_void_p()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class Service:
+    """The elastic solve-service handle (`hylu_service`).
+
+    Not thread-safe (the ABI contract): serialize calls per instance.
+    The *service behind it* is concurrent — batched submission through
+    `solve_many` still coalesces across its requests.
+    """
+
+    def __init__(self, shards=1, threads=0, lib=None, path=None):
+        self._lib = lib or load(path)
+        self._s = ctypes.c_void_p()
+        self._dims = {}
+        code = self._lib.hylu_service_create(shards, threads, ctypes.byref(self._s))
+        if code != HYLU_OK:
+            raise HyluError(code)
+
+    def _check(self, code):
+        if code != HYLU_OK:
+            raise HyluError(code, self._lib.hylu_service_last_error(self._s).decode())
+
+    def register(self, n, ap, ai, ax):
+        """Analyze + factorize a 0-based CSR matrix and admit it on the
+        live service; returns the routing id."""
+        a = _Csr(n, ap, ai, ax)
+        out = ctypes.c_uint64()
+        self._check(self._lib.hylu_service_register(
+            self._s, a.n, a.ap, a.ai, a.ax, ctypes.byref(out)))
+        self._dims[out.value] = n
+        return out.value
+
+    def retire(self, sid):
+        self._check(self._lib.hylu_service_retire(self._s, sid))
+        self._dims.pop(sid, None)
+
+    def _dim(self, sid):
+        try:
+            return self._dims[sid]
+        except KeyError:
+            raise HyluError(HYLU_ERR_INVALID, f"unknown system id {sid}") from None
+
+    def solve(self, sid, b):
+        """Blocking solve on the bulk lane; returns the solution list."""
+        x = (ctypes.c_double * self._dim(sid))()
+        self._check(self._lib.hylu_service_solve(self._s, sid, _f64_array(b), x))
+        return list(x)
+
+    def solve_deadline(self, sid, b, deadline_us):
+        """Blocking solve on the deadline lane; `deadline_us` is relative
+        to now. May raise `HyluError` with `HYLU_ERR_DEADLINE_EXPIRED`
+        when the service expires deadlines."""
+        x = (ctypes.c_double * self._dim(sid))()
+        self._check(self._lib.hylu_service_solve_deadline(
+            self._s, sid, _f64_array(b), x, deadline_us))
+        return list(x)
+
+    def solve_opts(self, sid, b, opts):
+        """Blocking solve with per-call `SolveOpts` overrides."""
+        x = (ctypes.c_double * self._dim(sid))()
+        self._check(self._lib.hylu_service_solve_opts(
+            self._s, sid, _f64_array(b), x, ctypes.byref(opts)))
+        return list(x)
+
+    def solve_many(self, sid, bs):
+        """Submit every right-hand side before waiting on any, so the
+        batch coalesces into wide block dispatches; returns one solution
+        list per input."""
+        n = self._dim(sid)
+        k = len(bs)
+        flat = (ctypes.c_double * (n * k))()
+        for q, b in enumerate(bs):
+            flat[q * n:(q + 1) * n] = list(b)
+        x = (ctypes.c_double * (n * k))()
+        self._check(self._lib.hylu_service_solve_many(self._s, sid, k, flat, x))
+        return [list(x[q * n:(q + 1) * n]) for q in range(k)]
+
+    def rebalance(self):
+        moved = ctypes.c_int64()
+        self._check(self._lib.hylu_service_rebalance(self._s, ctypes.byref(moved)))
+        return moved.value
+
+    def grow(self, k):
+        """Add `k` dispatcher shards on the live service; returns the new
+        shard count."""
+        out = ctypes.c_int64()
+        self._check(self._lib.hylu_service_grow(self._s, k, ctypes.byref(out)))
+        return out.value
+
+    def shrink(self, k):
+        """Drain and remove `k` dispatcher shards (at least one must
+        remain); returns the new shard count."""
+        out = ctypes.c_int64()
+        self._check(self._lib.hylu_service_shrink(self._s, k, ctypes.byref(out)))
+        return out.value
+
+    def shards(self):
+        return self._lib.hylu_service_shards(self._s)
+
+    def health(self, sid):
+        """HEALTH_* code for a registered system, or None for unknown."""
+        h = self._lib.hylu_service_health(self._s, sid)
+        return None if h < 0 else h
+
+    def stats(self):
+        """Aggregate serving counters as a dict (see `ServiceStats`)."""
+        st = ServiceStats()
+        self._check(self._lib.hylu_service_stats(self._s, ctypes.byref(st)))
+        return st.as_dict()
+
+    def close(self):
+        if self._s:
+            self._lib.hylu_service_free(self._s)
+            self._s = ctypes.c_void_p()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make the python/ tree importable (`import hylu`, `import compile.*`)
+# no matter which directory pytest is invoked from
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

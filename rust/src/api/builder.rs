@@ -240,7 +240,7 @@ impl SolverBuilder {
 /// use hylu::prelude::*;
 /// let opts = SolveOpts::new().refine_max_iter(5).refine_target(1e-13);
 /// ```
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SolveOpts {
     refine_max_iter: Option<usize>,
     refine_tol: Option<f64>,

@@ -14,7 +14,7 @@
 //!             [--tuning quick|full] [--out FILE.json]
 //! hylu serve  --matrix FILE.mtx | --gen CLASS:N [--systems M] [--shards S]
 //!             [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U]
-//!             [--tick-max-us U] [--elastic] [--chaos]
+//!             [--tick-max-us U] [--elastic] [--grow-to G] [--chaos]
 //! ```
 //!
 //! `tune` runs the per-pattern kernel autotuner on one matrix and prints
@@ -42,7 +42,11 @@
 //! sustained arrivals, collapses to zero when a shard idles);
 //! `--elastic` additionally runs a churn thread that registers, solves,
 //! retires, and rebalances systems *while* the callers hammer the
-//! stable ones — the live-topology scenario. `--chaos` arms a
+//! stable ones — the live-topology scenario. `--grow-to G` exercises
+//! shard-set elasticity: a grower thread stretches the shard set from
+//! `--shards` up to `G` one shard at a time (rebalancing load onto each
+//! new shard) and drains it back down, repeatedly, under the same
+//! traffic. `--chaos` arms a
 //! deterministic [`FaultPlan`] (the `HYLU_FAULT` spec when set, a
 //! built-in plan otherwise): dispatchers absorb injected panics and
 //! forced zero pivots, quarantined systems recover by escalated full
@@ -241,7 +245,8 @@ pub fn run(argv: &[String]) -> i32 {
                  [--threads T] [--kernel auto|row-row|sup-row|sup-sup] [--repeated] [--xla] \
                  [--rhs K] [--suite small|full] [--out F] [--systems M] [--shards S] \
                  [--rhs-workers C] [--requests R] [--max-batch B] [--tick-us U] \
-                 [--tick-max-us U] [--elastic] [--chaos] [--tuning off|quick|full] [--reps R] \
+                 [--tick-max-us U] [--elastic] [--grow-to G] [--chaos] \
+                 [--tuning off|quick|full] [--reps R] \
                  [--precision f64|mixed] [--dynamic] \
                  (bench: --kernel scalar|portable|native|avx512|auto pins the dispatch tier)"
             );
@@ -1141,7 +1146,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tick_us = flag_usize(args, "tick-us", 200)? as u64;
     let tick_max_us = flag_usize(args, "tick-max-us", 0)? as u64;
     let elastic = args.has("elastic");
+    let grow_to = flag_usize(args, "grow-to", 0)?;
     let chaos = args.has("chaos");
+    if grow_to > 0 && grow_to < shards {
+        return Err(Error::Invalid(format!(
+            "--grow-to {grow_to} is below --shards {shards}"
+        )));
+    }
 
     // --chaos arms a deterministic fault plan: the HYLU_FAULT spec when
     // set, otherwise a built-in mix whose period clears the `nsys`
@@ -1200,6 +1211,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if tick_max_us > 0 { " [adaptive tick]" } else { "" },
         if elastic { " [elastic churn]" } else { "" },
     );
+    if grow_to > shards {
+        println!("elastic      : shard set will breathe {shards} <-> {grow_to} under load");
+    }
     if chaos {
         println!("chaos        : fault plan armed, dispatchers supervised");
     }
@@ -1215,10 +1229,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let stop = std::sync::atomic::AtomicBool::new(false);
     let churn_cycles = std::sync::atomic::AtomicUsize::new(0);
+    let breath_cycles = std::sync::atomic::AtomicUsize::new(0);
     let retries = std::sync::atomic::AtomicUsize::new(0);
     let refactor_errors = std::sync::atomic::AtomicUsize::new(0);
     let t0 = std::time::Instant::now();
-    let (worst, churn_result) = std::thread::scope(|sc| -> Result<(f64, Result<()>)> {
+    type ServeOutcome = (f64, Result<()>, Result<()>);
+    let (worst, churn_result, grow_result) = std::thread::scope(|sc| -> Result<ServeOutcome> {
+        let grower = if grow_to > shards {
+            let (service, stop, breath_cycles) = (&service, &stop, &breath_cycles);
+            Some(sc.spawn(move || -> Result<()> {
+                // shard-set breathing: stretch the set one shard at a
+                // time up to --grow-to (rebalancing load onto each new
+                // shard), then drain back down to --shards, under the
+                // same traffic the callers are generating. Tickets must
+                // never be lost across either transition.
+                let pause = std::time::Duration::from_micros(500);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    while service.shard_count() < grow_to
+                        && !stop.load(std::sync::atomic::Ordering::Relaxed)
+                    {
+                        service.grow(1)?;
+                        service.rebalance()?;
+                        std::thread::sleep(pause);
+                    }
+                    while service.shard_count() > shards
+                        && !stop.load(std::sync::atomic::Ordering::Relaxed)
+                    {
+                        service.shrink(1)?;
+                        std::thread::sleep(pause);
+                    }
+                    breath_cycles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Ok(())
+            }))
+        } else {
+            None
+        };
         let churn = if elastic {
             let (service, a, stop, churn_cycles) = (&service, &a, &stop, &churn_cycles);
             Some(sc.spawn(move || -> Result<()> {
@@ -1302,10 +1348,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }),
             None => Ok(()),
         };
-        Ok((worst?, churn_result))
+        let grow_result = match grower {
+            Some(h) => h.join().unwrap_or_else(|_| {
+                Err(Error::Runtime("shard grower thread panicked".into()))
+            }),
+            None => Ok(()),
+        };
+        Ok((worst?, churn_result, grow_result))
     })?;
     churn_result?;
+    grow_result?;
     let t_service = t0.elapsed().as_secs_f64();
+    if grow_to > shards {
+        // settle back to the configured width so the report reflects a
+        // fully drained set; every system must have survived the drains
+        while service.shard_count() > shards {
+            service.shrink(1)?;
+        }
+    }
     let mut expired_seen = 0u64;
     for t in expiry_probes {
         if matches!(t.wait(), Err(Error::DeadlineExpired)) {
@@ -1342,6 +1402,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             st.moves,
             st.forwarded,
             service.route_epoch()
+        );
+    }
+    if grow_to > shards {
+        println!(
+            "shard set    : {} breath cycles {shards} <-> {grow_to}, settled at {} shards \
+             (shard epoch {}, {} moves, {} forwarded)",
+            breath_cycles.load(std::sync::atomic::Ordering::Relaxed),
+            service.shard_count(),
+            service.shard_epoch(),
+            st.moves,
+            st.forwarded,
         );
     }
     if let Some(p) = &plan {
@@ -1689,5 +1760,40 @@ mod tests {
             "500",
         ]));
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn serve_grow_to_end_to_end() {
+        // shard-set breathing: the grower thread stretches 2 -> 4 and
+        // drains back while callers hammer the service; every request
+        // must still resolve bit-exact and the command exits 0
+        let code = run(&sv(&[
+            "serve",
+            "--gen",
+            "mesh2d:225",
+            "--systems",
+            "3",
+            "--shards",
+            "2",
+            "--rhs-workers",
+            "3",
+            "--requests",
+            "48",
+            "--threads",
+            "1",
+            "--grow-to",
+            "4",
+            "--tick-max-us",
+            "500",
+        ]));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn serve_rejects_grow_to_below_shards() {
+        let code = run(&sv(&[
+            "serve", "--gen", "mesh2d:100", "--shards", "4", "--grow-to", "2",
+        ]));
+        assert_eq!(code, Error::Invalid(String::new()).code());
     }
 }

@@ -37,7 +37,7 @@ pub use scratch::{ScratchGuard, ScratchPool, MAX_SCRATCH_SLOTS};
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
 use std::thread::JoinHandle;
 
 /// Lock ignoring poison: the pool propagates job panics *by design* (the
@@ -52,6 +52,18 @@ pub(crate) fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// Unwrap a condvar-wait result the same way.
 pub(crate) fn wait_ignore_poison<T>(r: LockResult<MutexGuard<'_, T>>) -> MutexGuard<'_, T> {
     r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Unwrap a condvar-wait-timeout result the same way. The timed-out
+/// flag is dropped: callers re-check their predicate against the clock,
+/// which subsumes it.
+pub(crate) fn wait_timeout_ignore_poison<'a, T>(
+    r: LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)>,
+) -> MutexGuard<'a, T> {
+    match r {
+        Ok((g, _)) => g,
+        Err(p) => p.into_inner().0,
+    }
 }
 
 use crate::numeric::Workspace;

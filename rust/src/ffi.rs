@@ -41,9 +41,11 @@
 use std::ffi::CString;
 use std::os::raw::c_char;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
 
-use crate::api::{Analyzed, Factored, LinearSystem, Solver, SolverBuilder};
-use crate::service::{ServiceConfig, SolverService, SystemId};
+use crate::api::{Analyzed, Factored, LinearSystem, SolveOpts, Solver, SolverBuilder};
+use crate::coordinator::Precision;
+use crate::service::{Priority, ServiceConfig, SolverService, SystemId};
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
@@ -677,8 +679,91 @@ pub unsafe extern "C" fn hylu_service_retire(s: *mut HyluService, id: u64) -> i3
     })
 }
 
+/// Per-call refinement overrides for `hylu_service_solve_opts`. Each
+/// knob has an "unset" sentinel that falls back to the service solver's
+/// configured default: negative for the numeric knobs, `0` for
+/// `precision`.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct HyluSolveOpts {
+    /// Refinement iteration cap; `< 0` = configured default, `0`
+    /// disables refinement for this solve.
+    pub refine_max_iter: i64,
+    /// Residual above which refinement starts; `< 0` = default.
+    pub refine_tol: f64,
+    /// Residual target at which refinement stops; `< 0` = default.
+    pub refine_target: f64,
+    /// `0` = configured default, `1` = force `f64`, `2` = mixed
+    /// (`f32` factors + `f64` refinement recovery).
+    pub precision: i32,
+}
+
+impl HyluSolveOpts {
+    fn to_opts(self) -> Result<SolveOpts> {
+        let mut o = SolveOpts::new();
+        if self.refine_max_iter >= 0 {
+            o = o.refine_max_iter(self.refine_max_iter as usize);
+        }
+        if self.refine_tol >= 0.0 {
+            o = o.refine_tol(self.refine_tol);
+        }
+        if self.refine_target >= 0.0 {
+            o = o.refine_target(self.refine_target);
+        }
+        match self.precision {
+            0 => {}
+            1 => o = o.precision(Precision::F64),
+            2 => o = o.precision(Precision::Mixed),
+            p => {
+                return Err(Error::Invalid(format!(
+                    "unknown precision code {p} (0 = default, 1 = f64, 2 = mixed)"
+                )))
+            }
+        }
+        Ok(o)
+    }
+}
+
+/// The shared single-RHS service solve: copy in, ride the queue on the
+/// given lane with the given overrides, copy out.
+///
+/// # Safety
+/// `b` must point to `n` readable doubles and `x` to `n` writable
+/// doubles for system `id`'s dimension `n`.
+unsafe fn service_solve_one(
+    s: &mut HyluService,
+    id: u64,
+    b: *const f64,
+    x: *mut f64,
+    prio: Priority,
+    opts: SolveOpts,
+) -> i32 {
+    if b.is_null() || x.is_null() {
+        return s.fail(&Error::Invalid("b/x must be non-null".into()));
+    }
+    // the routing table owns the authoritative dimension
+    let n = match s.service.system_dim(SystemId(id)) {
+        Some(n) => n,
+        None => return s.fail(&Error::Invalid(format!("unknown system id {id}"))),
+    };
+    let bin = std::slice::from_raw_parts(b, n);
+    s.x1.clear();
+    s.x1.extend_from_slice(bin);
+    let rhs = std::mem::take(&mut s.x1);
+    match s.service.solve_with_opts(SystemId(id), rhs, prio, opts) {
+        Ok(sol) => {
+            let out = std::slice::from_raw_parts_mut(x, n);
+            out.copy_from_slice(&sol);
+            s.x1 = sol; // keep the allocation warm
+            HYLU_OK
+        }
+        Err(e) => s.fail(&e),
+    }
+}
+
 /// Solve `A x = b` on system `id` through the coalescing queue
-/// (blocking). `b` and `x` are length-`n` arrays for that system's `n`.
+/// (blocking, bulk lane). `b` and `x` are length-`n` arrays for that
+/// system's `n`.
 ///
 /// # Safety
 /// `s` must be a live handle from [`hylu_service_create`]; `b` must
@@ -695,27 +780,130 @@ pub unsafe extern "C" fn hylu_service_solve(
     }
     let s = &mut *s;
     guarded_service(s, |s| {
+        service_solve_one(s, id, b, x, Priority::Bulk, SolveOpts::default())
+    })
+}
+
+/// [`hylu_service_solve`] on the deadline lane: the request dispatches
+/// ahead of bulk traffic, earliest deadline first, where
+/// `deadline_us` is the deadline relative to now in microseconds. When
+/// the service expires deadlines, a request whose deadline passes
+/// before dispatch fails with [`HYLU_ERR_DEADLINE_EXPIRED`] — and the
+/// dispatcher's coalescing wait is clamped so an admitted-live request
+/// is never expired by the shard's own sleep.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `b` must
+/// point to `n` readable doubles and `x` to `n` writable doubles.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_solve_deadline(
+    s: *mut HyluService,
+    id: u64,
+    b: *const f64,
+    x: *mut f64,
+    deadline_us: u64,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        let at = Instant::now() + Duration::from_micros(deadline_us);
+        service_solve_one(s, id, b, x, Priority::Deadline(at), SolveOpts::default())
+    })
+}
+
+/// [`hylu_service_solve`] with per-call refinement overrides
+/// ([`HyluSolveOpts`]); `opts` may be null for all-default. Requests
+/// carrying different overrides are never coalesced into one block, so
+/// an override cannot bleed into a neighboring caller's solve.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `b` must
+/// point to `n` readable doubles, `x` to `n` writable doubles, and
+/// `opts` must be null or point to a readable [`HyluSolveOpts`].
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_solve_opts(
+    s: *mut HyluService,
+    id: u64,
+    b: *const f64,
+    x: *mut f64,
+    opts: *const HyluSolveOpts,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        let o = if opts.is_null() {
+            SolveOpts::default()
+        } else {
+            match (*opts).to_opts() {
+                Ok(o) => o,
+                Err(e) => return s.fail(&e),
+            }
+        };
+        service_solve_one(s, id, b, x, Priority::Bulk, o)
+    })
+}
+
+/// Batched service solve: submit `nrhs` right-hand sides (packed
+/// column-after-column in `b`, `b + q*n`) for system `id` in one call,
+/// then block until all resolve, writing solutions the same way into
+/// `x`. All requests are admitted before any is waited on, so they
+/// coalesce into wide block dispatches. Column `q` is bit-identical to
+/// a scalar [`hylu_service_solve`] of that column. On failure the first
+/// error in submission order is returned; `x` columns whose requests
+/// succeeded are still written.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `b` must
+/// point to `nrhs * n` readable doubles and `x` to `nrhs * n` writable
+/// doubles.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_solve_many(
+    s: *mut HyluService,
+    id: u64,
+    nrhs: i64,
+    b: *const f64,
+    x: *mut f64,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        if nrhs <= 0 {
+            return s.fail(&Error::Invalid("nrhs must be positive".into()));
+        }
         if b.is_null() || x.is_null() {
             return s.fail(&Error::Invalid("b/x must be non-null".into()));
         }
-        // the routing table owns the authoritative dimension
+        let k = nrhs as usize;
         let n = match s.service.system_dim(SystemId(id)) {
             Some(n) => n,
             None => return s.fail(&Error::Invalid(format!("unknown system id {id}"))),
         };
-        let bin = std::slice::from_raw_parts(b, n);
-        s.x1.clear();
-        s.x1.extend_from_slice(bin);
-        let rhs = std::mem::take(&mut s.x1);
-        match s.service.solve(SystemId(id), rhs) {
-            Ok(sol) => {
-                let out = std::slice::from_raw_parts_mut(x, n);
-                out.copy_from_slice(&sol);
-                s.x1 = sol; // keep the allocation warm
-                HYLU_OK
-            }
-            Err(e) => s.fail(&e),
+        let bin = std::slice::from_raw_parts(b, n * k);
+        let out = std::slice::from_raw_parts_mut(x, n * k);
+        // submit everything first: the whole batch is in the queue
+        // before the first wait, so one tick can drain it as one block
+        let mut tickets = Vec::with_capacity(k);
+        for q in 0..k {
+            tickets.push(s.service.submit(SystemId(id), bin[q * n..(q + 1) * n].to_vec()));
         }
+        let mut code = HYLU_OK;
+        for (q, t) in tickets.into_iter().enumerate() {
+            match t.and_then(|t| t.wait()) {
+                Ok(sol) => out[q * n..(q + 1) * n].copy_from_slice(&sol),
+                Err(e) => {
+                    if code == HYLU_OK {
+                        code = s.fail(&e);
+                    }
+                }
+            }
+        }
+        code
     })
 }
 
@@ -762,6 +950,179 @@ pub unsafe extern "C" fn hylu_service_health(s: *const HyluService, id: u64) -> 
         Some(h) => h.encode() as i32,
         None => -1,
     }
+}
+
+/// Aggregate service counters for `hylu_service_stats` (a flat `repr(C)`
+/// projection of the Rust `ServiceStats`, including shards already
+/// drained by [`hylu_service_shrink`]).
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct HyluServiceStats {
+    /// Solve requests accepted.
+    pub requests: u64,
+    /// Subset of `requests` submitted on the deadline lane.
+    pub deadline_requests: u64,
+    /// Batched block dispatches issued.
+    pub dispatches: u64,
+    /// Right-hand sides solved across all dispatches.
+    pub rhs_solved: u64,
+    /// Refactorizations applied.
+    pub refactors: u64,
+    /// Live re-analyses applied.
+    pub reanalyzes: u64,
+    /// Requests re-routed between shards (routing-epoch staleness).
+    pub forwarded: u64,
+    /// Iterative-refinement rounds executed.
+    pub refine_iters: u64,
+    /// Systems registered over the service lifetime.
+    pub registers: u64,
+    /// Systems retired.
+    pub retires: u64,
+    /// Systems moved between shards (migrate / rebalance / shrink).
+    pub moves: u64,
+    /// Panics caught by shard supervision.
+    pub panics_caught: u64,
+    /// Healthy → quarantined transitions.
+    pub quarantines: u64,
+    /// Recovery attempts that restored a system to healthy.
+    pub recoveries: u64,
+    /// Deadline-lane requests expired before dispatch.
+    pub expired: u64,
+    /// Bulk requests rejected at admission by load shedding.
+    pub shed: u64,
+    /// Widest single batch dispatched.
+    pub max_batch: u64,
+    /// Mean right-hand sides per block dispatch (coalescing factor).
+    pub mean_batch: f64,
+    /// Widest coalescing wait any shard actually slept, in microseconds
+    /// (the measured elapsed wait after preemption, not the requested
+    /// window).
+    pub max_tick_us: u64,
+}
+
+/// Snapshot the service's aggregate counters into `*out`.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `out` must
+/// point to a writable [`HyluServiceStats`].
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_stats(
+    s: *mut HyluService,
+    out: *mut HyluServiceStats,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        if out.is_null() {
+            return s.fail(&Error::Invalid("out must be non-null".into()));
+        }
+        let st = s.service.stats();
+        *out = HyluServiceStats {
+            requests: st.requests,
+            deadline_requests: st.deadline_requests,
+            dispatches: st.dispatches,
+            rhs_solved: st.rhs_solved,
+            refactors: st.refactors,
+            reanalyzes: st.reanalyzes,
+            forwarded: st.forwarded,
+            refine_iters: st.refine_iters,
+            registers: st.registers,
+            retires: st.retires,
+            moves: st.moves,
+            panics_caught: st.panics_caught,
+            quarantines: st.quarantines,
+            recoveries: st.recoveries,
+            expired: st.expired,
+            shed: st.shed,
+            max_batch: st.max_batch as u64,
+            mean_batch: st.mean_batch(),
+            max_tick_us: st.max_tick.as_micros() as u64,
+        };
+        HYLU_OK
+    })
+}
+
+/// Grow the shard set by `k` dispatcher threads on the live service;
+/// writes the new shard count to `*out_shards` (may be null). New
+/// shards start empty — follow with [`hylu_service_rebalance`] to move
+/// load onto them.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `out_shards`
+/// must be null or point to a writable `int64_t`.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_grow(
+    s: *mut HyluService,
+    k: i64,
+    out_shards: *mut i64,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        if k < 0 {
+            return s.fail(&Error::Invalid("k must be non-negative".into()));
+        }
+        match s.service.grow(k as usize) {
+            Ok(n) => {
+                if !out_shards.is_null() {
+                    *out_shards = n as i64;
+                }
+                HYLU_OK
+            }
+            Err(e) => s.fail(&e),
+        }
+    })
+}
+
+/// Shrink the shard set by `k` dispatcher threads on the live service
+/// (at least one must remain): resident systems migrate off the
+/// draining shards, queued work drains, the threads join. Writes the
+/// new shard count to `*out_shards` (may be null). No accepted request
+/// is lost.
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`]; `out_shards`
+/// must be null or point to a writable `int64_t`.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_shrink(
+    s: *mut HyluService,
+    k: i64,
+    out_shards: *mut i64,
+) -> i32 {
+    if s.is_null() {
+        return HYLU_ERR_INVALID;
+    }
+    let s = &mut *s;
+    guarded_service(s, |s| {
+        if k < 0 {
+            return s.fail(&Error::Invalid("k must be non-negative".into()));
+        }
+        match s.service.shrink(k as usize) {
+            Ok(n) => {
+                if !out_shards.is_null() {
+                    *out_shards = n as i64;
+                }
+                HYLU_OK
+            }
+            Err(e) => s.fail(&e),
+        }
+    })
+}
+
+/// Number of shard dispatcher threads currently running (0 for null).
+///
+/// # Safety
+/// `s` must be a live handle from [`hylu_service_create`] or null.
+#[no_mangle]
+pub unsafe extern "C" fn hylu_service_shards(s: *const HyluService) -> i64 {
+    if s.is_null() {
+        return 0;
+    }
+    (*s).service.shard_count() as i64
 }
 
 /// Message of the last error recorded on this service handle (empty

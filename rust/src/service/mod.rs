@@ -76,14 +76,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{Factored, LinearSystem, Solver};
+use crate::api::{Factored, LinearSystem, SolveOpts, Solver};
 use crate::coordinator::{FaultPlan, SolverConfig};
 use crate::exec::lock_ignore_poison;
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
 use queue::AdaptiveTick;
-use route::{RouteCell, RouteEntry};
+use route::{EpochCell, RouteCell, RouteEntry};
 use shard::{Control, RecoveryGate, ShardPolicy, ShardQueue, ShardSystem, ShardWorker, SolveJob};
 
 /// Configuration for [`SolverService`].
@@ -128,6 +128,12 @@ pub struct ServiceConfig {
     /// (default off: a deadline is a scheduling hint, not a contract,
     /// unless the operator opts in).
     pub expire_deadlines: bool,
+    /// SLO headroom for the deadline lane: with `expire_deadlines` on,
+    /// a shard's coalescing wait is clamped to end this long before the
+    /// earliest queued deadline, so a request admitted alive is
+    /// dispatched with margin to spare instead of expiring during the
+    /// shard's own sleep. Default 100µs.
+    pub dispatch_margin: Duration,
     /// Quarantine a system whose refactor pivot-growth estimate
     /// (`FactorStats::pivot_growth`) exceeds this. Non-finite growth
     /// always quarantines; the default `f64::INFINITY` keeps finite
@@ -160,6 +166,7 @@ impl Default for ServiceConfig {
             starvation_bound: 8,
             shed_depth: 0,
             expire_deadlines: false,
+            dispatch_margin: Duration::from_micros(100),
             pivot_growth_limit: f64::INFINITY,
             recover_alpha: 0.5,
             recover_gate: 0.5,
@@ -186,12 +193,44 @@ impl Ticket {
     }
 }
 
+/// One immutable epoch of the elastic shard set: the queue of every
+/// live shard, indexed by shard id. Shard ids are dense and stable —
+/// [`SolverService::grow`] appends, [`SolverService::shrink`] truncates
+/// from the tail — so a surviving shard keeps its index across every
+/// topology change and forwarding-by-index stays valid.
+#[derive(Default)]
+pub(crate) struct ShardSet {
+    pub(crate) queues: Vec<Arc<ShardQueue>>,
+}
+
+impl ShardSet {
+    /// Copy-on-write append (grow).
+    fn extended(&self, q: Arc<ShardQueue>) -> ShardSet {
+        let mut queues = self.queues.clone();
+        queues.push(q);
+        ShardSet { queues }
+    }
+
+    /// Copy-on-write tail truncation (shrink).
+    fn truncated(&self, keep: usize) -> ShardSet {
+        ShardSet {
+            queues: self.queues[..keep].to_vec(),
+        }
+    }
+}
+
 /// State shared between the service value and every shard dispatcher:
-/// the routing publication cell, all shard queues (for forwarding), and
-/// the elasticity counters.
+/// the routing publication cell, the epoch-published shard set (for
+/// forwarding), and the elasticity counters.
 pub(crate) struct ServiceShared {
     pub(crate) routes: RouteCell,
-    pub(crate) queues: Vec<Arc<ShardQueue>>,
+    /// The live shard set, published exactly like the routing table so
+    /// dispatchers forward against a coherent (possibly one-epoch
+    /// stale) view. Invariant kept by `grow`/`shrink`: a route entry
+    /// never points at a shard outside the *current* set — routes move
+    /// off a draining shard before the set truncates, and a grown
+    /// shard's queue is published before any route targets it.
+    pub(crate) shards: EpochCell<ShardSet>,
     /// Service-wide admission counter: every solve and control job is
     /// stamped from it at submission, and forwarding preserves the
     /// stamp — so barrier ordering (refactor/retire/migrate vs solves)
@@ -206,18 +245,50 @@ impl ServiceShared {
     fn next_seq(&self) -> u64 {
         self.seq.fetch_add(1, Ordering::Relaxed)
     }
+
+    /// The queue of shard `s` in the current shard-set epoch, if it is
+    /// still (or already) live.
+    pub(crate) fn queue(&self, s: usize) -> Option<Arc<ShardQueue>> {
+        self.shards.load().queues.get(s).cloned()
+    }
+
+    /// Shards in the current epoch.
+    fn shard_count(&self) -> usize {
+        self.shards.load().queues.len()
+    }
+}
+
+/// The copyable slice of [`ServiceConfig`] needed to spin up one more
+/// dispatcher after construction ([`SolverService::grow`]).
+#[derive(Clone, Copy)]
+struct WorkerSpec {
+    tick: Duration,
+    tick_max: Duration,
+    max_batch: usize,
+    queue_cap: usize,
+    starvation_bound: usize,
+    policy: ShardPolicy,
 }
 
 /// The sharded, coalescing, elastic solve service. See the module docs.
 pub struct SolverService {
     shared: Arc<ServiceShared>,
     /// Serializes topology operations (register / retire / migrate /
-    /// rebalance) and owns the next system id. Request routing never
-    /// takes this lock.
+    /// rebalance / grow / shrink) and owns the next system id. Request
+    /// routing never takes this lock.
     topology: Mutex<u64>,
-    threads: Vec<Option<JoinHandle<()>>>,
+    /// Dispatcher join handles, indexed by shard id; `shrink` joins and
+    /// truncates the tail, `grow` appends. Behind a mutex so the elastic
+    /// entry points work on `&self` like every other topology operation.
+    threads: Mutex<Vec<Option<JoinHandle<()>>>>,
+    /// Final counters of queues retired by `shrink`, folded into
+    /// [`SolverService::stats`] so a shard's history survives its
+    /// teardown.
+    retired_stats: Mutex<ServiceStats>,
     /// Bulk-lane shedding threshold (`ServiceConfig::shed_depth`).
     shed_depth: usize,
+    /// Everything needed to spin up dispatchers for grown shards.
+    worker: WorkerSpec,
 }
 
 impl SolverService {
@@ -231,52 +302,73 @@ impl SolverService {
             .collect();
         let shared = Arc::new(ServiceShared {
             routes: RouteCell::new(),
-            queues,
+            shards: EpochCell::with_value(ShardSet {
+                queues: queues.clone(),
+            }),
             seq: AtomicU64::new(0),
             registers: AtomicU64::new(0),
             retires: AtomicU64::new(0),
             moves: AtomicU64::new(0),
         });
-        let policy = ShardPolicy {
-            expire_deadlines: cfg.expire_deadlines,
-            pivot_growth_limit: cfg.pivot_growth_limit,
-            recover_alpha: cfg.recover_alpha.clamp(0.0, 1.0),
-            recover_gate: cfg.recover_gate,
+        let worker = WorkerSpec {
+            tick: cfg.tick,
+            tick_max: cfg.tick_max,
+            max_batch: cfg.max_batch.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            starvation_bound: cfg.starvation_bound,
+            policy: ShardPolicy {
+                expire_deadlines: cfg.expire_deadlines,
+                dispatch_margin: cfg.dispatch_margin,
+                pivot_growth_limit: cfg.pivot_growth_limit,
+                recover_alpha: cfg.recover_alpha.clamp(0.0, 1.0),
+                recover_gate: cfg.recover_gate,
+            },
         };
         let mut threads = Vec::with_capacity(nshards);
-        for s in 0..nshards {
-            let worker = ShardWorker::new(
-                s,
-                shared.queues[s].clone(),
-                shared.clone(),
-                AdaptiveTick::new(cfg.tick, cfg.tick_max),
-                cfg.max_batch.max(1),
-                cfg.starvation_bound,
-                policy,
-            );
-            let spawned = std::thread::Builder::new()
-                .name(format!("hylu-serve-{s}"))
-                .spawn(move || worker.run());
-            match spawned {
+        for (s, q) in queues.iter().enumerate() {
+            match Self::spawn_dispatcher(&shared, s, q.clone(), worker) {
                 Ok(h) => threads.push(Some(h)),
                 Err(e) => {
                     // unwind cleanly: stop the dispatchers spawned so far
-                    for q in &shared.queues {
+                    for q in &queues {
                         q.shutdown();
                     }
                     for h in threads.iter_mut().filter_map(Option::take) {
                         let _ = h.join();
                     }
-                    return Err(Error::Runtime(format!("spawn shard dispatcher: {e}")));
+                    return Err(e);
                 }
             }
         }
         Ok(SolverService {
             shared,
             topology: Mutex::new(0),
-            threads,
+            threads: Mutex::new(threads),
+            retired_stats: Mutex::new(ServiceStats::default()),
             shed_depth: cfg.shed_depth,
+            worker,
         })
+    }
+
+    fn spawn_dispatcher(
+        shared: &Arc<ServiceShared>,
+        s: usize,
+        queue: Arc<ShardQueue>,
+        spec: WorkerSpec,
+    ) -> Result<JoinHandle<()>> {
+        let worker = ShardWorker::new(
+            s,
+            queue,
+            shared.clone(),
+            AdaptiveTick::new(spec.tick, spec.tick_max),
+            spec.max_batch,
+            spec.starvation_bound,
+            spec.policy,
+        );
+        std::thread::Builder::new()
+            .name(format!("hylu-serve-{s}"))
+            .spawn(move || worker.run())
+            .map_err(|e| Error::Runtime(format!("spawn shard dispatcher: {e}")))
     }
 
     /// Build the service pre-loaded with `systems`: analyze + factor
@@ -328,13 +420,15 @@ impl SolverService {
 
     /// [`SolverService::register`] onto an explicit shard.
     pub fn register_on(&self, sys: LinearSystem<Factored>, shard: usize) -> Result<SystemId> {
-        if shard >= self.shared.queues.len() {
+        // range-check under the topology lock: grow/shrink serialize on
+        // it, so the target shard cannot disappear before the install
+        let mut next_id = lock_ignore_poison(&self.topology);
+        let Some(queue) = self.shared.queue(shard) else {
             return Err(Error::Invalid(format!(
                 "shard {shard} out of range ({} shards)",
-                self.shared.queues.len()
+                self.shared.shard_count()
             )));
-        }
-        let mut next_id = lock_ignore_poison(&self.topology);
+        };
         let id = *next_id;
         let n = sys.n();
         let stats = Arc::new(SystemStats::default());
@@ -350,7 +444,7 @@ impl SolverService {
         // Drop's `&mut self` — unreachable while this `&self` exists, so
         // the handle inside the Install cannot actually be lost here.)
         let seq = self.shared.next_seq();
-        if self.shared.queues[shard]
+        if queue
             .push_control(Control::Install { id, system }, seq, true)
             .is_err()
         {
@@ -382,7 +476,11 @@ impl SolverService {
         self.shared.routes.publish(|t| t.without(id.0));
         let (tx, rx) = mpsc::channel();
         let seq = self.shared.next_seq();
-        if self.shared.queues[shard]
+        let queue = self
+            .shared
+            .queue(shard)
+            .ok_or_else(|| Error::Runtime(format!("system {id} routed to a retired shard")))?;
+        if queue
             .push_control(Control::Extract { id: id.0, tx }, seq, true)
             .is_err()
         {
@@ -411,12 +509,12 @@ impl SolverService {
     }
 
     fn migrate_locked(&self, id: SystemId, to: usize) -> Result<()> {
-        if to >= self.shared.queues.len() {
+        let Some(dest_queue) = self.shared.queue(to) else {
             return Err(Error::Invalid(format!(
                 "shard {to} out of range ({} shards)",
-                self.shared.queues.len()
+                self.shared.shard_count()
             )));
-        }
+        };
         let entry = {
             let t = self.shared.routes.load();
             t.map.get(&id.0).cloned()
@@ -439,7 +537,11 @@ impl SolverService {
         //    this point drain there first (barrier)
         let (tx, rx) = mpsc::channel();
         let seq = self.shared.next_seq();
-        if self.shared.queues[entry.shard]
+        let src_queue = self
+            .shared
+            .queue(entry.shard)
+            .ok_or_else(|| Error::Runtime(format!("system {id} routed to a retired shard")))?;
+        if src_queue
             .push_control(Control::Extract { id: id.0, tx }, seq, true)
             .is_err()
         {
@@ -454,9 +556,11 @@ impl SolverService {
         // 3. install on the destination: its parked requests flush in
         //    admission order right after. (As in register_on, this push
         //    cannot fail while `&self` exists — shutdown requires Drop's
-        //    `&mut self` — so the extracted handle cannot be lost here.)
+        //    `&mut self`, and a shrink of the destination requires the
+        //    topology lock this move holds — so the extracted handle
+        //    cannot be lost here.)
         let seq = self.shared.next_seq();
-        if self.shared.queues[to]
+        if dest_queue
             .push_control(Control::Install { id: id.0, system }, seq, true)
             .is_err()
         {
@@ -472,7 +576,7 @@ impl SolverService {
     /// the number of systems moved. Safe to call under traffic.
     pub fn rebalance(&self) -> Result<usize> {
         let _topology = lock_ignore_poison(&self.topology);
-        let nshards = self.shared.queues.len();
+        let nshards = self.shared.shard_count();
         let mut moved = 0usize;
         if nshards < 2 {
             return Ok(0);
@@ -524,7 +628,7 @@ impl SolverService {
 
     /// Least-loaded shard by (EWMA load sum, resident count, index).
     fn least_loaded_shard(&self) -> usize {
-        let nshards = self.shared.queues.len();
+        let nshards = self.shared.shard_count();
         let mut load = vec![(0.0f64, 0usize); nshards];
         {
             let t = self.shared.routes.load();
@@ -551,7 +655,23 @@ impl SolverService {
 
     /// [`SolverService::submit`] with an explicit [`Priority`] lane.
     pub fn submit_with(&self, id: SystemId, b: Vec<f64>, prio: Priority) -> Result<Ticket> {
-        let (shard, n, stats) = {
+        self.submit_with_opts(id, b, prio, SolveOpts::default())
+    }
+
+    /// [`SolverService::submit_with`] plus per-call refinement overrides
+    /// ([`SolveOpts`]). The dispatcher coalesces only requests carrying
+    /// *equal* opts into one block dispatch, so an override never bleeds
+    /// into a neighboring caller's solve; default opts resolve to the
+    /// solver's configured refinement policy, bit-identical to the
+    /// plain [`SolverService::submit`] path.
+    pub fn submit_with_opts(
+        &self,
+        id: SystemId,
+        b: Vec<f64>,
+        prio: Priority,
+        opts: SolveOpts,
+    ) -> Result<Ticket> {
+        let (mut shard, n, stats) = {
             let t = self.shared.routes.load();
             let e = t
                 .map
@@ -562,28 +682,66 @@ impl SolverService {
         if b.len() != n {
             return Err(Error::Invalid("rhs length mismatch".into()));
         }
-        // load shedding: bulk traffic is rejected fast while the target
-        // shard is saturated, so deadline work keeps its queue headroom;
-        // deadline submissions are never shed (they ride backpressure)
-        if self.shed_depth > 0
-            && matches!(prio, Priority::Bulk)
-            && self.shared.queues[shard].depth() >= self.shed_depth
-        {
-            self.shared.queues[shard].shed.fetch_add(1, Ordering::Relaxed);
-            return Err(Error::Runtime(format!(
-                "shedding bulk load: shard {shard} queue depth >= {}",
-                self.shed_depth
-            )));
-        }
         let (tx, rx) = mpsc::channel();
         let seq = self.shared.next_seq();
-        match self.shared.queues[shard].push_solve(SolveJob { id: id.0, b, tx }, prio, seq, false) {
-            Ok(()) => {
-                stats.note_request();
-                Ok(Ticket { rx })
+        let mut job = SolveJob {
+            id: id.0,
+            b,
+            opts,
+            tx,
+        };
+        loop {
+            let Some(queue) = self.shared.queue(shard) else {
+                // routed to a shard the current epoch no longer has: a
+                // shrink truncated it between our route read and now.
+                // Routes move off a draining shard *before* the set
+                // truncates, so a fresh route read lands on the new home.
+                shard = self.resolve_shard(id)?;
+                continue;
+            };
+            // load shedding: bulk traffic is rejected fast while the
+            // target shard is saturated, so deadline work keeps its queue
+            // headroom; deadline submissions are never shed (they ride
+            // backpressure)
+            if self.shed_depth > 0
+                && matches!(prio, Priority::Bulk)
+                && queue.depth() >= self.shed_depth
+            {
+                queue.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Runtime(format!(
+                    "shedding bulk load: shard {shard} queue depth >= {}",
+                    self.shed_depth
+                )));
             }
-            Err(_) => Err(Error::Runtime("service is shutting down".into())),
+            match queue.push_solve(job, prio, seq, false) {
+                Ok(()) => {
+                    stats.note_request();
+                    return Ok(Ticket { rx });
+                }
+                Err(j) => {
+                    // the queue shut down under us: either a shrink
+                    // drained this shard (the placement moved — chase it)
+                    // or the whole service is going down (it didn't)
+                    let now = self.resolve_shard(id)?;
+                    if now == shard {
+                        return Err(Error::Runtime("service is shutting down".into()));
+                    }
+                    shard = now;
+                    job = j;
+                }
+            }
         }
+    }
+
+    /// Current placement of `id` from a fresh routing-table read.
+    fn resolve_shard(&self, id: SystemId) -> Result<usize> {
+        self.shared
+            .routes
+            .load()
+            .map
+            .get(&id.0)
+            .map(|e| e.shard)
+            .ok_or_else(|| Error::Invalid(format!("unknown system id {id}")))
     }
 
     /// Submit and wait: the blocking convenience wrapper (bulk lane).
@@ -594,6 +752,17 @@ impl SolverService {
     /// Submit on an explicit lane and wait.
     pub fn solve_with(&self, id: SystemId, b: Vec<f64>, prio: Priority) -> Result<Vec<f64>> {
         self.submit_with(id, b, prio)?.wait()
+    }
+
+    /// Submit with per-call refinement overrides and wait.
+    pub fn solve_with_opts(
+        &self,
+        id: SystemId,
+        b: Vec<f64>,
+        prio: Priority,
+        opts: SolveOpts,
+    ) -> Result<Vec<f64>> {
+        self.submit_with_opts(id, b, prio, opts)?.wait()
     }
 
     /// Replace system `id`'s values with a same-pattern matrix and
@@ -622,15 +791,41 @@ impl SolverService {
         }
         let (tx, rx) = mpsc::channel();
         let seq = self.shared.next_seq();
-        if self.shared.queues[shard]
-            .push_control(Control::Refactor { id: id.0, a, tx }, seq, false)
-            .is_err()
-        {
-            return Err(Error::Runtime("service is shutting down".into()));
-        }
+        self.push_control_routed(id, shard, Control::Refactor { id: id.0, a, tx }, seq)?;
         match rx.recv() {
             Ok(r) => r.map(|_| ()),
             Err(_) => Err(Error::Runtime("service dropped the refactor".into())),
+        }
+    }
+
+    /// Push a control job at `id`'s shard, chasing the placement across
+    /// a concurrent shrink exactly like [`SolverService::submit_with_opts`]
+    /// does for solves. (The dispatcher forwards controls that arrive on
+    /// a stale shard; this loop only handles the push itself racing a
+    /// queue teardown.)
+    fn push_control_routed(
+        &self,
+        id: SystemId,
+        mut shard: usize,
+        mut ctrl: Control,
+        seq: u64,
+    ) -> Result<()> {
+        loop {
+            let Some(queue) = self.shared.queue(shard) else {
+                shard = self.resolve_shard(id)?;
+                continue;
+            };
+            match queue.push_control(ctrl, seq, false) {
+                Ok(()) => return Ok(()),
+                Err(c) => {
+                    let now = self.resolve_shard(id)?;
+                    if now == shard {
+                        return Err(Error::Runtime("service is shutting down".into()));
+                    }
+                    shard = now;
+                    ctrl = c;
+                }
+            }
         }
     }
 
@@ -659,21 +854,120 @@ impl SolverService {
         }
         let (tx, rx) = mpsc::channel();
         let seq = self.shared.next_seq();
-        if self.shared.queues[shard]
-            .push_control(Control::Reanalyze { id: id.0, a, tx }, seq, false)
-            .is_err()
-        {
-            return Err(Error::Runtime("service is shutting down".into()));
-        }
+        self.push_control_routed(id, shard, Control::Reanalyze { id: id.0, a, tx }, seq)?;
         match rx.recv() {
             Ok(r) => r.map(|_| ()),
             Err(_) => Err(Error::Runtime("service dropped the reanalyze".into())),
         }
     }
 
+    /// Grow the shard set by `k` dispatcher threads on the live service.
+    /// New shards start empty; follow with [`SolverService::rebalance`]
+    /// (or a targeted [`SolverService::migrate`]) to move load onto
+    /// them. Returns the new shard count.
+    ///
+    /// Ordering: each dispatcher thread is spawned *before* its queue is
+    /// published into the shard set, so a route can never target a shard
+    /// without a running dispatcher — a failed spawn leaves the set
+    /// exactly as large as the shards actually running.
+    pub fn grow(&self, k: usize) -> Result<usize> {
+        let _topology = lock_ignore_poison(&self.topology);
+        let mut threads = lock_ignore_poison(&self.threads);
+        for _ in 0..k {
+            let s = self.shared.shard_count();
+            let queue = Arc::new(ShardQueue::new(self.worker.queue_cap));
+            let handle = Self::spawn_dispatcher(&self.shared, s, queue.clone(), self.worker)?;
+            threads.push(Some(handle));
+            self.shared.shards.publish(|set| set.extended(queue.clone()));
+        }
+        Ok(self.shared.shard_count())
+    }
+
+    /// Shrink the shard set by `k` dispatcher threads, draining from the
+    /// tail, on the live service. Systems resident on the draining
+    /// shards are first migrated onto the least-loaded surviving shards
+    /// (EWMA-guided, heaviest first), then the truncated set is
+    /// published, the drained queues are shut down — each dispatcher
+    /// finishes its whole backlog, forwarding anything the current epoch
+    /// routes elsewhere — and the dispatcher threads are joined. No
+    /// accepted ticket is lost or resolved twice. The drained shards'
+    /// counters are folded into [`SolverService::stats`]. Returns the
+    /// new shard count; fails if `k` would leave no shard.
+    pub fn shrink(&self, k: usize) -> Result<usize> {
+        let _topology = lock_ignore_poison(&self.topology);
+        let n = self.shared.shard_count();
+        if k == 0 {
+            return Ok(n);
+        }
+        if k >= n {
+            return Err(Error::Invalid(format!(
+                "cannot shrink {k} of {n} shards: at least one must remain"
+            )));
+        }
+        let keep = n - k;
+        // 1. move every resident system off the draining tail while the
+        //    whole set is still published (forwarding stays valid)
+        self.drain_systems_off(keep)?;
+        // 2. publish the truncated set: new submits can no longer target
+        //    the tail. A submit that raced here against an old epoch
+        //    either lands before the shutdown below (drained normally) or
+        //    fails its push and re-resolves against the new epoch.
+        let drained: Vec<Arc<ShardQueue>> = self.shared.shards.load().queues[keep..].to_vec();
+        self.shared.shards.publish(|set| set.truncated(keep));
+        // 3. drain and join: the dispatchers resolve or forward
+        //    everything still queued, then exit
+        for q in &drained {
+            q.shutdown();
+        }
+        let mut threads = lock_ignore_poison(&self.threads);
+        let tail: Vec<Option<JoinHandle<()>>> = threads.drain(keep..).collect();
+        drop(threads);
+        for h in tail.into_iter().flatten() {
+            let _ = h.join();
+        }
+        let mut retired = lock_ignore_poison(&self.retired_stats);
+        for q in &drained {
+            q.add_stats_into(&mut retired);
+        }
+        Ok(keep)
+    }
+
+    /// Migrate every system resident on shards `keep..` onto the
+    /// least-loaded surviving shards — heaviest EWMA load placed first,
+    /// with a running per-shard tally so one hot draining shard doesn't
+    /// dump its whole population onto a single survivor.
+    fn drain_systems_off(&self, keep: usize) -> Result<()> {
+        let mut evacuees: Vec<(u64, f64)> = Vec::new();
+        let mut load = vec![(0.0f64, 0usize); keep];
+        {
+            let t = self.shared.routes.load();
+            for (id, e) in t.map.iter() {
+                if e.shard >= keep {
+                    evacuees.push((*id, e.stats.ewma_load()));
+                } else {
+                    load[e.shard].0 += e.stats.ewma_load();
+                    load[e.shard].1 += 1;
+                }
+            }
+        }
+        evacuees.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (id, l) in evacuees {
+            let mut best = 0usize;
+            for s in 1..keep {
+                if (load[s].0, load[s].1) < (load[best].0, load[best].1) {
+                    best = s;
+                }
+            }
+            self.migrate_locked(SystemId(id), best)?;
+            load[best].0 += l;
+            load[best].1 += 1;
+        }
+        Ok(())
+    }
+
     /// Number of shards running.
     pub fn shard_count(&self) -> usize {
-        self.shared.queues.len()
+        self.shared.shard_count()
     }
 
     /// Number of currently registered systems.
@@ -734,10 +1028,18 @@ impl SolverService {
         self.shared.routes.epoch()
     }
 
-    /// Aggregate serving statistics across shards.
+    /// Shard-set epochs published so far (1 = the initial set): `grow`
+    /// publishes one per shard added, `shrink` one per call.
+    /// Observability for the elasticity protocol.
+    pub fn shard_epoch(&self) -> usize {
+        self.shared.shards.epoch()
+    }
+
+    /// Aggregate serving statistics across shards, including the final
+    /// counters of shards already drained by [`SolverService::shrink`].
     pub fn stats(&self) -> ServiceStats {
-        let mut total = ServiceStats::default();
-        for q in &self.shared.queues {
+        let mut total = *lock_ignore_poison(&self.retired_stats);
+        for q in &self.shared.shards.load().queues {
             q.add_stats_into(&mut total);
         }
         total.registers = self.shared.registers.load(Ordering::Relaxed);
@@ -751,10 +1053,11 @@ impl Drop for SolverService {
     /// Graceful shutdown: dispatchers drain everything already queued
     /// (resolving those tickets), then exit and are joined.
     fn drop(&mut self) {
-        for q in &self.shared.queues {
+        for q in &self.shared.shards.load().queues {
             q.shutdown();
         }
-        for t in &mut self.threads {
+        let mut threads = lock_ignore_poison(&self.threads);
+        for t in threads.iter_mut() {
             if let Some(h) = t.take() {
                 let _ = h.join();
             }

@@ -90,6 +90,14 @@ impl<T> LaneQueue<T> {
         self.deadline.len()
     }
 
+    /// The earliest deadline currently queued, if any — what the shard
+    /// dispatcher clamps its coalescing sleep by, so a request admitted
+    /// alive is dispatched a margin before it would expire instead of
+    /// being slept past (the SLO-aware window).
+    pub fn earliest_deadline(&self) -> Option<Instant> {
+        self.deadline.iter().map(|(at, _, _)| *at).min()
+    }
+
     /// Enqueue one item with its admission sequence number.
     pub fn push(&mut self, seq: u64, prio: Priority, item: T) {
         match prio {
@@ -332,6 +340,21 @@ mod tests {
         q.push(1, Priority::Deadline(t0), 1);
         q.push(2, Priority::Bulk, 100);
         assert_eq!(drain_ids(&mut q, 0), vec![0, 100, 1]);
+    }
+
+    #[test]
+    fn earliest_deadline_tracks_the_lane() {
+        let t0 = Instant::now();
+        let mut q = LaneQueue::new();
+        assert_eq!(q.earliest_deadline(), None);
+        q.push(0, Priority::Bulk, 0u32);
+        assert_eq!(q.earliest_deadline(), None, "bulk items carry no deadline");
+        q.push(1, Priority::Deadline(t0 + Duration::from_millis(5)), 1);
+        q.push(2, Priority::Deadline(t0 + Duration::from_millis(2)), 2);
+        q.push(3, Priority::Deadline(t0 + Duration::from_millis(9)), 3);
+        assert_eq!(q.earliest_deadline(), Some(t0 + Duration::from_millis(2)));
+        let _ = q.drain_ordered(8);
+        assert_eq!(q.earliest_deadline(), None, "drained lanes clear the bound");
     }
 
     #[test]

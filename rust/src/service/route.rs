@@ -266,57 +266,72 @@ impl RouteTable {
 const EPOCH_PRUNE_THRESHOLD: usize = 16;
 
 /// The arc-swap-style publication cell described in the [module
-/// docs](self): lock-free pinned reads of the current [`RouteTable`]
-/// epoch, mutex-serialized copy-on-write publication, superseded epochs
-/// parked until a quiescent reclamation (or drop).
-pub(crate) struct RouteCell {
+/// docs](self), generic over the published snapshot: lock-free pinned
+/// reads of the current epoch, mutex-serialized copy-on-write
+/// publication, superseded epochs parked until a quiescent reclamation
+/// (or drop). The service publishes two snapshot kinds through it: the
+/// routing table ([`RouteCell`]) and — since the shard set became
+/// elastic — the shard-queue set itself (`service::ShardSet`), which
+/// rides the identical protocol so grow/shrink gets the same
+/// staleness-costs-one-hop guarantee as system moves.
+pub(crate) struct EpochCell<T> {
     /// The current epoch. Always points into a `Box` owned by `epochs`.
-    current: AtomicPtr<RouteTable>,
-    /// Readers currently holding a [`RouteRef`]. Writers free parked
+    current: AtomicPtr<T>,
+    /// Readers currently holding an [`EpochRef`]. Writers free parked
     /// epochs only at an observed-zero moment (see `publish`).
     pins: AtomicU64,
     /// Published epochs, oldest first; the last entry is always the
     /// current one. Pruned down to the current epoch when the threshold
     /// is exceeded and no reader is pinned; fully dropped in `Drop`.
-    epochs: Mutex<Vec<Box<RouteTable>>>,
-    /// Monotone count of publications (1 = the initial empty table);
+    epochs: Mutex<Vec<Box<T>>>,
+    /// Monotone count of publications (1 = the initial value);
     /// independent of pruning.
     published: AtomicU64,
 }
 
-impl Default for RouteCell {
+/// The routing-table publication cell (see [`EpochCell`]).
+pub(crate) type RouteCell = EpochCell<RouteTable>;
+
+impl<T: Default> Default for EpochCell<T> {
     fn default() -> Self {
-        RouteCell::new()
+        EpochCell::new()
     }
 }
 
-/// A pinned borrow of the current routing epoch; unpins on drop. Keep
-/// it short-lived — a held guard defers (never blocks) epoch pruning.
-pub(crate) struct RouteRef<'a> {
-    cell: &'a RouteCell,
-    table: *const RouteTable,
+/// A pinned borrow of the current epoch; unpins on drop. Keep it
+/// short-lived — a held guard defers (never blocks) epoch pruning.
+pub(crate) struct EpochRef<'a, T> {
+    cell: &'a EpochCell<T>,
+    table: *const T,
 }
 
-impl std::ops::Deref for RouteRef<'_> {
-    type Target = RouteTable;
-    fn deref(&self) -> &RouteTable {
+impl<T> std::ops::Deref for EpochRef<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
         // Safety: the pin taken before the pointer load keeps writers
         // from freeing this epoch while the guard lives (see `load`).
         unsafe { &*self.table }
     }
 }
 
-impl Drop for RouteRef<'_> {
+impl<T> Drop for EpochRef<'_, T> {
     fn drop(&mut self) {
         self.cell.pins.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-impl RouteCell {
-    pub fn new() -> RouteCell {
-        let first = Box::new(RouteTable::default());
-        let ptr = &*first as *const RouteTable as *mut RouteTable;
-        RouteCell {
+impl<T: Default> EpochCell<T> {
+    pub fn new() -> EpochCell<T> {
+        EpochCell::with_value(T::default())
+    }
+}
+
+impl<T> EpochCell<T> {
+    /// A cell whose first epoch is `value`.
+    pub fn with_value(value: T) -> EpochCell<T> {
+        let first = Box::new(value);
+        let ptr = &*first as *const T as *mut T;
+        EpochCell {
             current: AtomicPtr::new(ptr),
             pins: AtomicU64::new(0),
             epochs: Mutex::new(vec![first]),
@@ -334,10 +349,10 @@ impl RouteCell {
     /// writer's zero-pins check — the writer either sees the pin (and
     /// skips freeing) or the reader has already unpinned (and is done
     /// with the epoch).
-    pub fn load(&self) -> RouteRef<'_> {
+    pub fn load(&self) -> EpochRef<'_, T> {
         self.pins.fetch_add(1, Ordering::SeqCst);
         let table = self.current.load(Ordering::SeqCst);
-        RouteRef { cell: self, table }
+        EpochRef { cell: self, table }
     }
 
     /// Publish a new epoch derived from the current one. Writers
@@ -345,13 +360,13 @@ impl RouteCell {
     /// When the parked list outgrows its threshold, epochs older than
     /// the new current are freed at an observed-zero-pins moment
     /// (skipped — not waited for — if readers are active).
-    pub fn publish(&self, f: impl FnOnce(&RouteTable) -> RouteTable) {
+    pub fn publish(&self, f: impl FnOnce(&T) -> T) {
         let mut epochs = lock_ignore_poison(&self.epochs);
         // Safe to re-read under the writer lock: publications are
         // serialized here, so `current` cannot move beneath us.
         let cur = unsafe { &*self.current.load(Ordering::SeqCst) };
         let next = Box::new(f(cur));
-        let ptr = &*next as *const RouteTable as *mut RouteTable;
+        let ptr = &*next as *const T as *mut T;
         epochs.push(next);
         self.current.store(ptr, Ordering::SeqCst);
         self.published.fetch_add(1, Ordering::Relaxed);
@@ -364,7 +379,7 @@ impl RouteCell {
         }
     }
 
-    /// Number of epochs published so far (1 = the initial empty table);
+    /// Number of epochs published so far (1 = the initial value);
     /// monotone, unaffected by reclamation.
     pub fn epoch(&self) -> usize {
         self.published.load(Ordering::Relaxed) as usize
@@ -456,6 +471,21 @@ mod tests {
                 }
             });
         });
+    }
+
+    #[test]
+    fn epoch_cell_is_generic_over_the_snapshot() {
+        // the same cell publishes the shard set in `service::mod` — pin
+        // the genericity here with a plain value type
+        let cell: EpochCell<Vec<usize>> = EpochCell::with_value(vec![0]);
+        assert_eq!(cell.epoch(), 1);
+        cell.publish(|v| {
+            let mut next = v.clone();
+            next.push(next.len());
+            next
+        });
+        assert_eq!(cell.load().as_slice(), &[0, 1]);
+        assert_eq!(cell.epoch(), 2);
     }
 
     #[test]

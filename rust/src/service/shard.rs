@@ -32,8 +32,8 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::api::{Factored, LinearSystem};
-use crate::exec::{lock_ignore_poison, wait_ignore_poison};
+use crate::api::{Factored, LinearSystem, SolveOpts};
+use crate::exec::{lock_ignore_poison, wait_ignore_poison, wait_timeout_ignore_poison};
 use crate::sparse::csr::Csr;
 use crate::{Error, Result};
 
@@ -94,6 +94,10 @@ pub(crate) struct ShardPolicy {
     /// Fail deadline-lane items whose deadline passed before dispatch
     /// with [`Error::DeadlineExpired`] instead of solving them.
     pub expire_deadlines: bool,
+    /// SLO headroom: with `expire_deadlines` on, the coalescing wait is
+    /// clamped to end this long *before* the earliest queued deadline,
+    /// so the dispatch itself has time to land inside the deadline.
+    pub dispatch_margin: Duration,
     /// Quarantine a system whose refactor pivot-growth estimate exceeds
     /// this (non-finite growth always quarantines).
     pub pivot_growth_limit: f64,
@@ -112,10 +116,14 @@ fn quarantine_reason(e: &Error) -> Option<QuarantineReason> {
     }
 }
 
-/// One queued solve request.
+/// One queued solve request. `opts` carries the per-call refinement
+/// overrides; the dispatcher only batches requests with *equal* opts
+/// into one block, so overrides never leak across a batch boundary and
+/// default-opts requests keep their bit-identity with scalar solves.
 pub(crate) struct SolveJob {
     pub id: u64,
     pub b: Vec<f64>,
+    pub opts: SolveOpts,
     pub tx: Reply,
 }
 
@@ -341,8 +349,10 @@ pub struct ServiceStats {
     pub moves: u64,
     /// Widest single batch dispatched.
     pub max_batch: usize,
-    /// Widest adaptive coalescing window any shard actually slept
-    /// (zero with a static zero tick).
+    /// Widest coalescing wait any shard *actually* slept — the measured
+    /// elapsed wait, not the requested window, so preemption (a control
+    /// arrival, a filling batch, a deadline clamp) shows up as a shorter
+    /// tick instead of over-reporting. Zero with a static zero tick.
     pub max_tick: Duration,
     /// Panics caught by shard supervision (the shard scrubbed, failed
     /// the in-flight tickets with [`Error::ShardPanicked`], and kept
@@ -455,19 +465,59 @@ impl ShardWorker {
                     // already full (sleeping could not widen it), when a
                     // control job is waiting (refactor/retire/migrate
                     // callers block on it; sleeping cannot widen a
-                    // barrier), or when shutdown has begun
+                    // barrier), or when shutdown has begun.
+                    //
+                    // The wait is an *SLO-aware* condvar park, never a
+                    // bare sleep: every push notifies `nonempty`, so a
+                    // control-job arrival, a batch reaching `max_batch`,
+                    // shutdown, or a deadline-lane admission re-evaluates
+                    // the wait immediately instead of sleeping it out.
+                    // With deadline expiry on, the wake time is further
+                    // clamped to (earliest queued deadline − dispatch
+                    // margin): a request admitted alive is dispatched
+                    // with margin to spare rather than expired by the
+                    // shard's own coalescing.
                     let window = self.tick.window();
                     if !window.is_zero()
                         && !st.shutdown
                         && st.controls.is_empty()
                         && st.solves.len() < self.max_batch
                     {
-                        drop(st);
+                        let start = Instant::now();
+                        let until = start + window;
+                        loop {
+                            if st.shutdown
+                                || !st.controls.is_empty()
+                                || st.solves.len() >= self.max_batch
+                            {
+                                break;
+                            }
+                            let mut wake = until;
+                            if self.policy.expire_deadlines {
+                                if let Some(at) = st.solves.earliest_deadline() {
+                                    // an Instant cannot underflow: a
+                                    // margin reaching past the epoch
+                                    // clamps to "wake now"
+                                    let slo = at
+                                        .checked_sub(self.policy.dispatch_margin)
+                                        .unwrap_or(start);
+                                    wake = wake.min(slo);
+                                }
+                            }
+                            let left = wake.saturating_duration_since(Instant::now());
+                            if left.is_zero() {
+                                break;
+                            }
+                            st = wait_timeout_ignore_poison(
+                                self.queue.nonempty.wait_timeout(st, left),
+                            );
+                        }
+                        // telemetry records the wait actually slept, not
+                        // the window requested — preemption makes the
+                        // two diverge
                         self.queue
                             .max_tick_ns
-                            .fetch_max(window.as_nanos() as u64, Ordering::Relaxed);
-                        std::thread::sleep(window);
-                        st = lock_ignore_poison(&self.queue.q);
+                            .fetch_max(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }
                     let (solves, expired) = if self.policy.expire_deadlines {
                         st.solves
@@ -582,7 +632,7 @@ impl ShardWorker {
     /// quarantines as `PivotGrowth` (the stored pivot order has gone
     /// rotten — queued solves must not trust it). Recovery is the gated
     /// full re-pivot escalation in [`ShardWorker::check_health`].
-    fn apply_update(&mut self, seq: u64, id: u64, a: Csr, tx: Reply, reanalyze: bool) {
+    fn apply_update(&mut self, seq: u64, id: u64, mut a: Csr, mut tx: Reply, reanalyze: bool) {
         if self.systems.contains_key(&id) {
             // a quarantined system recovers (or fails fast) before new
             // values are replayed on its stored pivot order
@@ -638,39 +688,67 @@ impl ShardWorker {
             }
             return;
         }
-        let target = {
-            let t = self.shared.routes.load();
-            t.map.get(&id).map(|e| e.shard)
-        };
-        match target {
-            Some(s) if s == self.shard => {
-                let parked = if reanalyze {
-                    ParkedJob::Reanalyze { seq, id, a, tx }
-                } else {
-                    ParkedJob::Refactor { seq, id, a, tx }
-                };
-                self.parked.push(parked);
-            }
-            Some(s) => {
-                // forwarded with its ORIGINAL admission seq, so it keeps
-                // its barrier order at the destination
-                self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
-                let ctrl = if reanalyze {
-                    Control::Reanalyze { id, a, tx }
-                } else {
-                    Control::Refactor { id, a, tx }
-                };
-                if let Err(
-                    Control::Refactor { tx, .. } | Control::Reanalyze { tx, .. },
-                ) = self.shared.queues[s].push_control(ctrl, seq, true)
-                {
-                    let _ = tx.send(Err(Error::Runtime("service is shutting down".into())));
+        // Forwarding re-resolves route + shard set in a loop, exactly as
+        // `reroute_solve` does: a shrink can retire the target shard
+        // between the route read and the push, and the publication order
+        // (routes first, set truncation second) makes one re-read land
+        // on a live placement.
+        loop {
+            let target = {
+                let t = self.shared.routes.load();
+                t.map.get(&id).map(|e| e.shard)
+            };
+            match target {
+                Some(s) if s == self.shard => {
+                    let parked = if reanalyze {
+                        ParkedJob::Reanalyze { seq, id, a, tx }
+                    } else {
+                        ParkedJob::Refactor { seq, id, a, tx }
+                    };
+                    self.parked.push(parked);
+                    return;
                 }
-            }
-            None => {
-                let _ = tx.send(Err(Error::Invalid(format!(
-                    "system sys#{id} is not registered (retired?)"
-                ))));
+                Some(s) => {
+                    let Some(q) = self.shared.queue(s) else {
+                        continue; // stale route raced a shrink; re-read
+                    };
+                    // forwarded with its ORIGINAL admission seq, so it
+                    // keeps its barrier order at the destination
+                    let ctrl = if reanalyze {
+                        Control::Reanalyze { id, a, tx }
+                    } else {
+                        Control::Refactor { id, a, tx }
+                    };
+                    match q.push_control(ctrl, seq, true) {
+                        Ok(()) => {
+                            self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                        Err(
+                            Control::Refactor { a: ra, tx: rtx, .. }
+                            | Control::Reanalyze { a: ra, tx: rtx, .. },
+                        ) => {
+                            let again = {
+                                let t = self.shared.routes.load();
+                                t.map.get(&id).map(|e| e.shard)
+                            };
+                            if again == Some(s) {
+                                let _ = rtx
+                                    .send(Err(Error::Runtime("service is shutting down".into())));
+                                return;
+                            }
+                            a = ra;
+                            tx = rtx;
+                        }
+                        Err(_) => unreachable!("push_control returns the pushed control"),
+                    }
+                }
+                None => {
+                    let _ = tx.send(Err(Error::Invalid(format!(
+                        "system sys#{id} is not registered (retired?)"
+                    ))));
+                    return;
+                }
             }
         }
     }
@@ -685,7 +763,7 @@ impl ShardWorker {
                 ParkedJob::Solve(d) => {
                     if self.systems.contains_key(&d.item.id) {
                         let id = d.item.id;
-                        self.dispatch_group(id, vec![(d.item.b, d.item.tx)], xs);
+                        self.dispatch_group(id, vec![(d.item.b, d.item.opts, d.item.tx)], xs);
                     } else {
                         self.reroute_solve(d);
                     }
@@ -705,14 +783,14 @@ impl ShardWorker {
     /// re-route (park / forward / fail).
     fn flush_solves(&mut self, jobs: Vec<Drained<SolveJob>>, xs: &mut Vec<Vec<f64>>) {
         let mut order: Vec<u64> = Vec::new();
-        let mut groups: HashMap<u64, Vec<(Vec<f64>, Reply)>> = HashMap::new();
+        let mut groups: HashMap<u64, Vec<(Vec<f64>, SolveOpts, Reply)>> = HashMap::new();
         for d in jobs {
             if self.systems.contains_key(&d.item.id) {
                 let group = groups.entry(d.item.id).or_default();
                 if group.is_empty() {
                     order.push(d.item.id);
                 }
-                group.push((d.item.b, d.item.tx));
+                group.push((d.item.b, d.item.opts, d.item.tx));
             } else {
                 self.reroute_solve(d);
             }
@@ -729,32 +807,76 @@ impl ShardWorker {
     }
 
     /// Re-route one solve that is not resident here (see module docs).
-    fn reroute_solve(&mut self, d: Drained<SolveJob>) {
-        let target = {
-            let t = self.shared.routes.load();
-            t.map.get(&d.item.id).map(|e| e.shard)
-        };
-        match target {
-            Some(s) if s == self.shard => self.parked.push(ParkedJob::Solve(d)),
-            Some(s) => {
-                // forwarded with its ORIGINAL admission seq and lane, so
-                // it keeps its barrier order at the destination
-                self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
-                let prio = match d.deadline {
-                    Some(at) => Priority::Deadline(at),
-                    None => Priority::Bulk,
-                };
-                if let Err(job) = self.shared.queues[s].push_solve(d.item, prio, d.seq, true) {
-                    let _ = job
-                        .tx
-                        .send(Err(Error::Runtime("service is shutting down".into())));
+    ///
+    /// Forwarding re-resolves against the *current* routing epoch and
+    /// the *current* shard set in a loop: a shrink can retire the target
+    /// shard between the route read and the queue push, but the protocol
+    /// (routes move off a draining shard before the set truncates, both
+    /// SeqCst publications) guarantees a re-read after observing either
+    /// staleness lands on a live placement. The loop only continues
+    /// while the placement actually changed, so it cannot spin.
+    fn reroute_solve(&mut self, mut d: Drained<SolveJob>) {
+        loop {
+            let target = {
+                let t = self.shared.routes.load();
+                t.map.get(&d.item.id).map(|e| e.shard)
+            };
+            match target {
+                Some(s) if s == self.shard => {
+                    self.parked.push(ParkedJob::Solve(d));
+                    return;
                 }
-            }
-            None => {
-                let _ = d.item.tx.send(Err(Error::Invalid(format!(
-                    "system sys#{} is not registered (retired?)",
-                    d.item.id
-                ))));
+                Some(s) => {
+                    let Some(q) = self.shared.queue(s) else {
+                        // route read raced a shrink: the shard is gone
+                        // from the current set, so the next route read is
+                        // guaranteed to see the migrated placement
+                        continue;
+                    };
+                    // forwarded with its ORIGINAL admission seq and
+                    // lane, so it keeps its barrier order at the
+                    // destination
+                    let prio = match d.deadline {
+                        Some(at) => Priority::Deadline(at),
+                        None => Priority::Bulk,
+                    };
+                    let (seq, deadline) = (d.seq, d.deadline);
+                    match q.push_solve(d.item, prio, seq, true) {
+                        Ok(()) => {
+                            self.queue.forwarded.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                        Err(job) => {
+                            // the target shut down mid-forward: if the
+                            // route moved on (a shrink drained it),
+                            // chase the new placement; if it still
+                            // points there, the whole service is going
+                            // down and the ticket fails cleanly
+                            let again = {
+                                let t = self.shared.routes.load();
+                                t.map.get(&job.id).map(|e| e.shard)
+                            };
+                            if again == Some(s) {
+                                let _ = job
+                                    .tx
+                                    .send(Err(Error::Runtime("service is shutting down".into())));
+                                return;
+                            }
+                            d = Drained {
+                                seq,
+                                deadline,
+                                item: job,
+                            };
+                        }
+                    }
+                }
+                None => {
+                    let _ = d.item.tx.send(Err(Error::Invalid(format!(
+                        "system sys#{} is not registered (retired?)",
+                        d.item.id
+                    ))));
+                    return;
+                }
             }
         }
     }
@@ -830,21 +952,29 @@ impl ShardWorker {
     fn dispatch_group(
         &mut self,
         id: u64,
-        mut group: Vec<(Vec<f64>, Reply)>,
+        mut group: Vec<(Vec<f64>, SolveOpts, Reply)>,
         xs: &mut Vec<Vec<f64>>,
     ) {
         if let Some(reason) = self.check_health(id) {
             let msg = reason.to_string();
-            for (_, tx) in group {
+            for (_, _, tx) in group {
                 let _ = tx.send(Err(Error::Quarantined(msg.clone())));
             }
             return;
         }
         while !group.is_empty() {
-            let take = group.len().min(self.max_batch);
+            // a block shares one set of refinement overrides: batch the
+            // longest prefix with equal opts (in practice one run — the
+            // default — so coalescing width is unaffected)
+            let opts = group[0].1;
+            let take = group
+                .iter()
+                .take(self.max_batch)
+                .take_while(|(_, o, _)| *o == opts)
+                .count();
             let mut bs = Vec::with_capacity(take);
             let mut txs = Vec::with_capacity(take);
-            for (b, tx) in group.drain(..take) {
+            for (b, _, tx) in group.drain(..take) {
                 bs.push(b);
                 txs.push(tx);
             }
@@ -852,12 +982,12 @@ impl ShardWorker {
                 // a retire raced the drain: fail the tickets the way a
                 // route miss would, instead of panicking the dispatcher
                 let e = Error::Invalid(format!("system sys#{id} is not registered (retired?)"));
-                for tx in txs.into_iter().chain(group.drain(..).map(|(_, tx)| tx)) {
+                for tx in txs.into_iter().chain(group.drain(..).map(|(_, _, tx)| tx)) {
                     let _ = tx.send(Err(e.clone()));
                 }
                 return;
             };
-            match catch_unwind(AssertUnwindSafe(|| s.sys.solve_many_into(&bs, xs))) {
+            match catch_unwind(AssertUnwindSafe(|| s.sys.solve_many_into_with_opts(&bs, xs, &opts))) {
                 Ok(Ok(st)) => {
                     let k = bs.len() as u64;
                     self.queue.dispatches.fetch_add(1, Ordering::Relaxed);

@@ -12,7 +12,11 @@
 //!   arbitrary drain/idle traces, collapses on idle, and a static
 //!   configuration never moves;
 //! - end-to-end: batches never exceed `max_batch`, and every ticket of
-//!   an arbitrary arrival trace resolves bit-identically to the oracle.
+//!   an arbitrary arrival trace resolves bit-identically to the oracle;
+//! - elasticity: arbitrary interleavings of grow / shrink / migrate /
+//!   rebalance with in-flight submissions keep every ticket
+//!   bit-identical, lose nothing, keep the shard count an exact fold of
+//!   the operations applied, and advance the shard epoch monotonically.
 
 use std::time::{Duration, Instant};
 
@@ -196,5 +200,93 @@ fn property_service_batches_capped_and_bit_identical() {
             "batch {} exceeded cap {max_batch}",
             st.max_batch
         );
+    });
+}
+
+#[test]
+fn property_elastic_topology_preserves_bits_and_tickets() {
+    // arbitrary grow/shrink/migrate/rebalance traces with tickets in
+    // flight across every transition: the shard count is an exact fold
+    // of the applied operations, the shard epoch only moves forward,
+    // and every ticket resolves with the oracle's bits
+    let a = gen::grid2d(14, 14);
+    let reference = SolverBuilder::new()
+        .threads(1)
+        .build()
+        .unwrap()
+        .analyze(&a)
+        .unwrap()
+        .factor()
+        .unwrap();
+    let mut seed_rng = Prng::new(0xE1A5);
+    let bs: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..a.n).map(|_| seed_rng.normal()).collect())
+        .collect();
+    let expect: Vec<Vec<f64>> = bs.iter().map(|b| reference.solve(b).unwrap()).collect();
+    for_each_seed(6, |rng| {
+        let nsys = rng.range(1, 4);
+        let cfg = ServiceConfig {
+            shards: rng.range(1, 4),
+            solver: SolverConfig {
+                threads: 1,
+                ..SolverConfig::default()
+            },
+            max_batch: 8,
+            tick: Duration::from_micros(50),
+            tick_max: Duration::from_micros(500),
+            ..ServiceConfig::default()
+        };
+        let service = SolverService::new(cfg, vec![a.clone(); nsys]).unwrap();
+        let ids = service.system_ids();
+        let mut shards = service.shard_count();
+        let mut epoch = service.shard_epoch();
+        let mut in_flight: Vec<(usize, hylu::service::Ticket)> = Vec::new();
+        let mut total = 0usize;
+        for _ in 0..rng.range(10, 40) {
+            match rng.below(5) {
+                0 => {
+                    service.grow(1).unwrap();
+                    shards += 1;
+                }
+                1 => {
+                    if shards > 1 {
+                        service.shrink(1).unwrap();
+                        shards -= 1;
+                    } else {
+                        // the last shard must be defended
+                        assert!(service.shrink(1).is_err(), "shrank the last shard");
+                    }
+                }
+                2 => {
+                    let id = ids[rng.below(nsys)];
+                    service.migrate(id, rng.below(shards)).unwrap();
+                }
+                3 => {
+                    service.rebalance().unwrap();
+                }
+                _ => {
+                    // a burst of tickets left in flight across whatever
+                    // topology ops come next
+                    for _ in 0..rng.range(1, 5) {
+                        let q = rng.below(bs.len());
+                        let id = ids[rng.below(nsys)];
+                        in_flight.push((q, service.submit(id, bs[q].clone()).unwrap()));
+                        total += 1;
+                    }
+                }
+            }
+            assert_eq!(service.shard_count(), shards, "count folds the ops");
+            let e = service.shard_epoch();
+            assert!(e >= epoch, "shard epoch moved backwards");
+            epoch = e;
+        }
+        let n_flight = in_flight.len();
+        for (q, t) in in_flight {
+            assert_eq!(t.wait().unwrap(), expect[q], "rhs {q}");
+        }
+        assert_eq!(n_flight, total, "no ticket lost before wait");
+        let st = service.stats();
+        assert_eq!(st.requests as usize, total, "drained shards' stats folded");
+        assert_eq!(st.rhs_solved as usize, total);
     });
 }

@@ -1,0 +1,285 @@
+//! SLO regression tests for the dispatcher's coalescing window and the
+//! elastic shard set.
+//!
+//! The coalescing window used to be a bare `thread::sleep`: once a
+//! dispatcher entered it, nothing — not a control job, not a full
+//! batch, not a deadline admitted with time to spare — could wake the
+//! shard until the whole window elapsed. These tests pin the fixed
+//! behavior with windows large enough (hundreds of milliseconds) that a
+//! regression to uninterruptible sleeping fails by an order of
+//! magnitude, not by a scheduler-jitter margin:
+//!
+//! - a control job (refactor) submitted mid-window completes well under
+//!   one window;
+//! - with `expire_deadlines` on, a request admitted with its deadline
+//!   still live is *dispatched* (wake clamped to deadline − margin),
+//!   never expired by the shard's own sleep;
+//! - `ServiceStats::max_tick` records the wait actually slept, not the
+//!   window requested, so preemption is visible in telemetry;
+//! - `grow`/`shrink` move a live service between shard-set sizes with
+//!   bit-identical answers, folded stats, and a monotonic shard epoch;
+//! - per-call [`SolveOpts`] never bleed across a batch: default-opts
+//!   traffic interleaved with override traffic stays bit-identical to
+//!   the plain front door.
+
+use std::time::{Duration, Instant};
+
+use hylu::prelude::*;
+use hylu::sparse::gen;
+use hylu::testutil::Prng;
+use hylu::Error;
+
+fn slo_cfg(shards: usize, tick: Duration) -> ServiceConfig {
+    ServiceConfig {
+        shards,
+        solver: SolverConfig {
+            threads: 1,
+            ..SolverConfig::default()
+        },
+        max_batch: 16,
+        queue_cap: 1024,
+        tick,
+        tick_max: Duration::ZERO, // static window: the worst case
+        ..ServiceConfig::default()
+    }
+}
+
+/// A standalone handle configured identically to the service's solver,
+/// so its bits are the oracle for served solutions.
+fn oracle(a: &Csr) -> LinearSystem<Factored> {
+    let solver = SolverBuilder::new().threads(1).pin_fault().build().unwrap();
+    solver.analyze(a).unwrap().factor().unwrap()
+}
+
+#[test]
+fn control_job_preempts_the_coalescing_window() {
+    // One lone bulk solve opens a 400ms window; the refactor submitted
+    // right behind it must break that window, not sleep it out.
+    let a = gen::power_network(150, 4);
+    let window = Duration::from_millis(400);
+    let service = SolverService::new(slo_cfg(1, window), vec![a.clone()]).unwrap();
+    let id = service.system_ids()[0];
+    let b = gen::rhs_for_ones(&a);
+
+    let expect_v0 = oracle(&a).solve(&b).unwrap();
+    let mut a2 = a.clone();
+    for v in &mut a2.vals {
+        *v *= 1.5;
+    }
+    let mut ora2 = oracle(&a);
+    ora2.refactor(&a2.vals).unwrap();
+    let expect_v1 = ora2.solve(&b).unwrap();
+
+    // the solve is admitted first (seq order), so it observes v0; the
+    // refactor is a barrier behind it
+    let t = service.submit(id, b.clone()).unwrap();
+    let t0 = Instant::now();
+    service.refactor(id, a2).unwrap();
+    let waited = t0.elapsed();
+    assert!(
+        waited < window / 2,
+        "refactor blocked {waited:?}: the control job slept through the \
+         {window:?} coalescing window instead of preempting it"
+    );
+    assert_eq!(t.wait().unwrap(), expect_v0, "pre-barrier solve sees v0");
+    assert_eq!(service.solve(id, b).unwrap(), expect_v1, "post-barrier solve sees v1");
+}
+
+#[test]
+fn live_deadline_is_dispatched_not_slept_past() {
+    // expire_deadlines on, 400ms static window, 60ms deadlines: every
+    // request is admitted alive with slack well inside the window, so
+    // under the old bare sleep each one would expire at dispatch. The
+    // SLO-aware wait clamps the wake to (deadline − margin) instead.
+    let a = gen::power_network(150, 4);
+    let mut cfg = slo_cfg(1, Duration::from_millis(400));
+    cfg.expire_deadlines = true;
+    cfg.dispatch_margin = Duration::from_millis(15);
+    let service = SolverService::new(cfg, vec![a.clone()]).unwrap();
+    let id = service.system_ids()[0];
+    let b = gen::rhs_for_ones(&a);
+    let expect = oracle(&a).solve(&b).unwrap();
+
+    for round in 0..6 {
+        // alternate arrival orders: the deadline either opens the window
+        // itself or lands mid-window behind a bulk request — the clamp
+        // must hold in both
+        let bulk = (round % 2 == 0)
+            .then(|| service.submit(id, b.clone()).unwrap());
+        let x = service
+            .solve_with(
+                id,
+                b.clone(),
+                Priority::Deadline(Instant::now() + Duration::from_millis(60)),
+            )
+            .unwrap_or_else(|e| {
+                panic!(
+                    "round {round}: live-admitted deadline failed with {e}: \
+                     the shard slept past its own deadline"
+                )
+            });
+        assert_eq!(x, expect, "round {round}");
+        if let Some(t) = bulk {
+            assert_eq!(t.wait().unwrap(), expect, "round {round} bulk");
+        }
+    }
+    let st = service.stats();
+    assert_eq!(st.expired, 0, "no admitted-live request expired");
+    assert_eq!(st.deadline_requests, 6);
+}
+
+#[test]
+fn max_tick_records_slept_not_requested() {
+    // max_batch 2 and paired submissions: the second push of each pair
+    // fills the batch and breaks the window, so no wait ever approaches
+    // the requested 300ms. The old telemetry recorded the *requested*
+    // window and would report ~300ms here.
+    let a = gen::power_network(150, 4);
+    let window = Duration::from_millis(300);
+    let mut cfg = slo_cfg(1, window);
+    cfg.max_batch = 2;
+    let service = SolverService::new(cfg, vec![a.clone()]).unwrap();
+    let id = service.system_ids()[0];
+    let b = gen::rhs_for_ones(&a);
+    let expect = oracle(&a).solve(&b).unwrap();
+
+    for _ in 0..4 {
+        let t1 = service.submit(id, b.clone()).unwrap();
+        let t2 = service.submit(id, b.clone()).unwrap();
+        assert_eq!(t1.wait().unwrap(), expect);
+        assert_eq!(t2.wait().unwrap(), expect);
+    }
+    let st = service.stats();
+    assert!(
+        st.max_tick < window / 2,
+        "max_tick {:?} reports the requested window, not the {:?}-scale \
+         wait actually slept",
+        st.max_tick,
+        window
+    );
+}
+
+#[test]
+fn grow_and_shrink_preserve_answers_and_fold_stats() {
+    let base = gen::power_network(180, 4);
+    let nsys = 4usize;
+    let systems: Vec<Csr> = (0..nsys)
+        .map(|s| {
+            let mut m = base.clone();
+            let f = 1.0 + 0.3 * s as f64;
+            for v in &mut m.vals {
+                *v *= f;
+            }
+            m
+        })
+        .collect();
+    let mut rng = Prng::new(0x51);
+    let bs: Vec<Vec<f64>> = (0..nsys)
+        .map(|_| (0..base.n).map(|_| rng.normal()).collect())
+        .collect();
+    let expect: Vec<Vec<f64>> = systems
+        .iter()
+        .zip(&bs)
+        .map(|(m, b)| oracle(m).solve(b).unwrap())
+        .collect();
+
+    let service = SolverService::new(
+        slo_cfg(2, Duration::from_micros(50)),
+        systems.clone(),
+    )
+    .unwrap();
+    let ids = service.system_ids();
+    assert_eq!(service.shard_count(), 2);
+    let epoch0 = service.shard_epoch();
+
+    // grow: new dispatchers join the set, rebalance spreads load onto
+    // them, and every answer stays bit-identical
+    assert_eq!(service.grow(2).unwrap(), 4);
+    assert_eq!(service.shard_count(), 4);
+    assert!(service.shard_epoch() > epoch0, "grow published a new epoch");
+    service.rebalance().unwrap();
+    for (s, id) in ids.iter().enumerate() {
+        assert_eq!(service.solve(*id, bs[s].clone()).unwrap(), expect[s], "after grow");
+    }
+
+    // shrink to one shard: every system is drained onto the survivor,
+    // stays healthy, and still answers bit-identically
+    let epoch_grown = service.shard_epoch();
+    assert_eq!(service.shrink(3).unwrap(), 1);
+    assert_eq!(service.shard_count(), 1);
+    assert!(service.shard_epoch() > epoch_grown, "shrink published a new epoch");
+    for (s, id) in ids.iter().enumerate() {
+        assert!(
+            matches!(service.health(*id), Some(Health::Healthy)),
+            "system {s} healthy after drain"
+        );
+        assert_eq!(service.solve(*id, bs[s].clone()).unwrap(), expect[s], "after shrink");
+    }
+
+    // counters from the drained shards folded into the totals
+    let st = service.stats();
+    assert_eq!(st.registers as usize, nsys);
+    assert_eq!(st.requests as usize, 2 * nsys);
+    assert_eq!(st.rhs_solved as usize, 2 * nsys);
+
+    // the last shard must remain
+    let err = service.shrink(1).unwrap_err();
+    assert!(
+        matches!(err, Error::Invalid(_)),
+        "shrinking the last shard must be rejected, got {err}"
+    );
+    // no-op edges
+    assert_eq!(service.grow(0).unwrap(), 1);
+    assert_eq!(service.shrink(0).unwrap(), 1);
+}
+
+#[test]
+fn solve_opts_never_bleed_across_a_batch() {
+    // one shard, a wide window, and interleaved submissions: default
+    // opts and per-call overrides coalesce only with their own kind, so
+    // the default tickets stay bit-identical to the plain front door
+    let a = gen::power_network(150, 4);
+    let service = SolverService::new(
+        slo_cfg(1, Duration::from_micros(500)),
+        vec![a.clone()],
+    )
+    .unwrap();
+    let id = service.system_ids()[0];
+    let ora = oracle(&a);
+    let mut rng = Prng::new(0x0975);
+    for round in 0..8 {
+        let b: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+        let expect = ora.solve(&b).unwrap();
+        let raw = SolveOpts::new().refine_max_iter(0);
+        let tickets = vec![
+            service.submit_with_opts(id, b.clone(), Priority::Bulk, SolveOpts::new()).unwrap(),
+            service.submit_with_opts(id, b.clone(), Priority::Bulk, raw).unwrap(),
+            service.submit(id, b.clone()).unwrap(),
+        ];
+        let [x_default, x_raw, x_plain]: [Vec<f64>; 3] = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap())
+            .collect::<Vec<_>>()
+            .try_into()
+            .unwrap();
+        assert_eq!(x_default, expect, "round {round}: default opts == plain solve");
+        assert_eq!(x_plain, expect, "round {round}: plain submit unaffected");
+        // refinement off still lands close on this well-conditioned
+        // system — it just may not share the refined bits
+        let resid = x_raw
+            .iter()
+            .zip(&expect)
+            .map(|(u, v)| (u - v).abs())
+            .fold(0.0f64, f64::max);
+        assert!(resid < 1e-6, "round {round}: raw substitution drifted {resid:.3e}");
+    }
+    // blocking front door with overrides agrees with itself
+    let b = gen::rhs_for_ones(&a);
+    let x1 = service
+        .solve_with_opts(id, b.clone(), Priority::Bulk, SolveOpts::new().refine_target(1e-14))
+        .unwrap();
+    let x2 = service
+        .solve_with_opts(id, b, Priority::Bulk, SolveOpts::new().refine_target(1e-14))
+        .unwrap();
+    assert_eq!(x1, x2, "same opts, same bits");
+}

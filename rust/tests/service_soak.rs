@@ -253,6 +253,151 @@ fn soak_once(base: &Csr, oracle: &Oracle, shards: usize) {
 }
 
 // ---------------------------------------------------------------------
+// Elastic leg: the same soak shape while the shard SET itself breathes.
+// ---------------------------------------------------------------------
+
+/// Live grow/shrink under traffic: owner threads hammer their systems
+/// (bit-identity against the sequential oracle, exact ticket accounting)
+/// while a breather thread repeatedly stretches the shard set from the
+/// base width to `base + 3` — rebalancing load onto each new shard — and
+/// drains it back down. Every transition must preserve:
+///
+/// - bit-identity: served solutions equal the oracle's at every version;
+/// - ticket accounting: zero lost or double-completed tickets, through
+///   queue drains, forwards, and dispatcher joins;
+/// - routing-epoch monotonicity: each topology publication advances the
+///   shard epoch, and a settled service answers from the base width.
+#[test]
+fn soak_live_grow_shrink_under_traffic() {
+    let base = gen::power_network(220, 5);
+    let oracle = build_oracle(&base);
+    for shards in shard_counts() {
+        elastic_once(&base, &oracle, shards);
+    }
+}
+
+fn elastic_once(base: &Csr, oracle: &Oracle, shards: usize) {
+    let service = SolverService::with_shards(soak_cfg(shards)).unwrap();
+    let mut ids = Vec::with_capacity(STABLE_SYSTEMS);
+    for s in 0..STABLE_SYSTEMS {
+        let solver = SolverBuilder::new().threads(1).pin_fault().build().unwrap();
+        let mut a = base.clone();
+        a.vals = version_vals(base, s, 0);
+        let sys = solver.analyze(&a).unwrap().factor().unwrap();
+        ids.push(service.register(sys).unwrap());
+    }
+    let submitted = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let grow_to = shards + 3;
+    let epoch0 = service.shard_epoch();
+
+    std::thread::scope(|sc| {
+        // owner threads: identical to the clean soak — refactor barriers
+        // and solves whose expected bits are known exactly per version
+        for s in 0..STABLE_SYSTEMS {
+            let (service, oracle, ids) = (&service, oracle, &ids);
+            let (submitted, completed) = (&submitted, &completed);
+            sc.spawn(move || {
+                let id = ids[s];
+                let mut version = 0usize;
+                for round in 0..ROUNDS {
+                    if round > 0 && round % (ROUNDS / VERSIONS) == 0 && version + 1 < VERSIONS {
+                        version += 1;
+                        let mut a = base.clone();
+                        a.vals = version_vals(base, s, version);
+                        service.refactor(id, a).unwrap();
+                    }
+                    let prio = if round % 3 == 0 {
+                        Priority::Deadline(Instant::now() + Duration::from_micros(200))
+                    } else {
+                        Priority::Bulk
+                    };
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    let x = service
+                        .solve_with(id, oracle.rhs[s].clone(), prio)
+                        .unwrap();
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    assert_eq!(
+                        x, oracle.expected[s][version],
+                        "system {s} round {round} version {version} \
+                         (base {shards} shards, breathing to {grow_to})"
+                    );
+                }
+            });
+        }
+
+        // breather thread: stretch the shard set one dispatcher at a
+        // time up to `grow_to`, rebalancing load onto each new shard,
+        // then drain back to the base — repeatedly, mid-traffic
+        {
+            let (service, stop) = (&service, &stop);
+            sc.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    while service.shard_count() < grow_to && !stop.load(Ordering::Relaxed) {
+                        service.grow(1).unwrap();
+                        service.rebalance().unwrap();
+                        std::thread::sleep(Duration::from_micros(300));
+                    }
+                    while service.shard_count() > shards && !stop.load(Ordering::Relaxed) {
+                        service.shrink(1).unwrap();
+                        std::thread::sleep(Duration::from_micros(300));
+                    }
+                }
+                // settle: the service must end at the base width with
+                // every system drained onto a surviving shard
+                while service.shard_count() > shards {
+                    service.shrink(1).unwrap();
+                }
+            });
+            // owners finishing flips the stop flag for the breather
+        }
+        sc.spawn(|| {
+            // watchdog: wait for the owners by ticket count, then stop
+            // the breather (scope joins everything)
+            while completed.load(Ordering::Relaxed) < (STABLE_SYSTEMS * ROUNDS) as u64 {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+    });
+
+    // zero lost or double-completed tickets through every transition
+    assert_eq!(
+        submitted.load(Ordering::Relaxed),
+        completed.load(Ordering::Relaxed),
+        "every accepted ticket resolves exactly once (base {shards})"
+    );
+    assert_eq!(
+        submitted.load(Ordering::Relaxed),
+        (STABLE_SYSTEMS * ROUNDS) as u64
+    );
+    assert_eq!(service.shard_count(), shards, "settled at the base width");
+    assert!(
+        service.shard_epoch() > epoch0,
+        "topology churn advanced the shard epoch"
+    );
+    for (s, id) in ids.iter().enumerate() {
+        assert!(
+            matches!(service.health(*id), Some(Health::Healthy)),
+            "system {s} healthy after the drains"
+        );
+        assert_eq!(
+            service.solve(*id, oracle.rhs[s].clone()).unwrap(),
+            oracle.expected[s][VERSIONS - 1],
+            "system {s} answers from the settled set"
+        );
+    }
+    let st = service.stats();
+    assert!(
+        st.rhs_solved >= (STABLE_SYSTEMS * ROUNDS) as u64,
+        "all owner traffic dispatched, including across drains"
+    );
+    assert_eq!(st.registers as usize, STABLE_SYSTEMS);
+    drop(service);
+}
+
+// ---------------------------------------------------------------------
 // Chaos leg: the same soak shape under deterministic fault injection.
 // ---------------------------------------------------------------------
 
